@@ -1,0 +1,23 @@
+//! Bench: regenerate Fig 1 (formulation x precision distribution).
+//! `cargo bench --bench fig1_formulation` prints the report + timing.
+//! Env: COBI_BENCH_FULL=1 for the paper-sized sweep.
+
+use cobi_es::config::Settings;
+use cobi_es::experiments::{run, Scale};
+use cobi_es::util::bench::Bencher;
+
+fn scale() -> Scale {
+    if std::env::var("COBI_BENCH_FULL").is_ok() { Scale::Full } else { Scale::Quick }
+}
+
+fn main() {
+    let settings = Settings::default();
+    let mut b = Bencher::new();
+    let mut reports = Vec::new();
+    b.bench_once("experiment/fig1", || {
+        reports = run("fig1", scale(), &settings).unwrap();
+    });
+    for r in &reports {
+        println!("\n{}", r.to_markdown());
+    }
+}

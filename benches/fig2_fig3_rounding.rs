@@ -1,0 +1,23 @@
+//! Bench: regenerate Figs 2-3 (rounding schemes vs iterations).
+
+use cobi_es::config::Settings;
+use cobi_es::experiments::{run, Scale};
+use cobi_es::util::bench::Bencher;
+
+fn scale() -> Scale {
+    if std::env::var("COBI_BENCH_FULL").is_ok() { Scale::Full } else { Scale::Quick }
+}
+
+fn main() {
+    let settings = Settings::default();
+    let mut b = Bencher::new();
+    for (id, label) in [("fig2", "experiment/fig2 (20-sent)"), ("fig3", "experiment/fig3 (10-sent)")] {
+        let mut reports = Vec::new();
+        b.bench_once(label, || {
+            reports = run(id, scale(), &settings).unwrap();
+        });
+        for r in &reports {
+            println!("\n{}", r.to_markdown());
+        }
+    }
+}

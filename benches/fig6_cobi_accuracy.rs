@@ -1,0 +1,21 @@
+//! Bench: regenerate Fig 6 (COBI vs Tabu vs random accuracy + ablation).
+
+use cobi_es::config::Settings;
+use cobi_es::experiments::{run, Scale};
+use cobi_es::util::bench::Bencher;
+
+fn scale() -> Scale {
+    if std::env::var("COBI_BENCH_FULL").is_ok() { Scale::Full } else { Scale::Quick }
+}
+
+fn main() {
+    let settings = Settings::default();
+    let mut b = Bencher::new();
+    let mut reports = Vec::new();
+    b.bench_once("experiment/fig6", || {
+        reports = run("fig6", scale(), &settings).unwrap();
+    });
+    for r in &reports {
+        println!("\n{}", r.to_markdown());
+    }
+}

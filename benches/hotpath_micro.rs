@@ -1,0 +1,90 @@
+//! Microbenchmarks of the L3 hot paths — the measurement side of the
+//! EXPERIMENTS.md §Perf loop. Each case is one logical operation on
+//! paper-sized inputs (n = 20 problems, 64-spin padded device instances).
+
+use cobi_es::cobi::CobiDevice;
+use cobi_es::config::CobiConfig;
+use cobi_es::ising::{formulate, EsProblem, Formulation, Ising};
+use cobi_es::quant::{quantize, Precision, Rounding};
+use cobi_es::solvers::oscillator::{anneal, OscillatorConfig, OscillatorSolver};
+use cobi_es::solvers::tabu::TabuSolver;
+use cobi_es::solvers::{brute, exact, IsingSolver};
+use cobi_es::util::bench::{black_box, Bencher};
+use cobi_es::util::rng::Pcg32;
+
+fn random_es(seed: u64, n: usize, m: usize) -> EsProblem {
+    let mut rng = Pcg32::seeded(seed);
+    let mu: Vec<f32> = (0..n).map(|_| rng.range_f32(0.3, 0.95)).collect();
+    let mut beta = vec![0.0f32; n * n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let b = rng.range_f32(0.2, 0.9);
+            beta[i * n + j] = b;
+            beta[j * n + i] = b;
+        }
+    }
+    EsProblem { mu, beta, lambda: 0.6, m }
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    let p20 = random_es(1, 20, 6);
+    let p100 = random_es(2, 100, 6);
+    let es = formulate(&p20, Formulation::Improved);
+    let mut rng = Pcg32::seeded(3);
+    let quantized = quantize(&es.ising, Precision::CobiInt, Rounding::Stochastic, &mut rng);
+    let padded: Ising = quantized.padded(64);
+
+    // formulation + quantization (per refinement iteration)
+    b.bench("formulate/improved n=20", || {
+        black_box(formulate(&p20, Formulation::Improved));
+    });
+    let mut qrng = Pcg32::seeded(4);
+    b.bench("quantize/stochastic int14 n=20", || {
+        black_box(quantize(&es.ising, Precision::CobiInt, Rounding::Stochastic, &mut qrng));
+    });
+
+    // objective evaluation (the 18.9 µs/iteration term of Eq. 15)
+    let sel = [0usize, 3, 7, 11, 15, 19];
+    b.bench("objective/eval n=20 M=6", || {
+        black_box(p20.objective(&sel));
+    });
+
+    // solvers
+    let mut tabu = TabuSolver::seeded(5);
+    b.bench("tabu/solve n=20 int14", || {
+        black_box(tabu.solve(&quantized));
+    });
+    let mut osc = OscillatorSolver::seeded(6);
+    b.bench("oscillator/solve n=20 (unpadded)", || {
+        black_box(osc.solve(&quantized));
+    });
+    let cfg = OscillatorConfig::default();
+    let mut dev_rng = Pcg32::seeded(7);
+    let mut phase0 = vec![0.0f32; 64];
+    for p in phase0.iter_mut() {
+        *p = dev_rng.range_f32(-3.14, 3.14);
+    }
+    let mut noise = vec![0.0f32; cfg.steps * 64];
+    dev_rng.fill_normal(&mut noise, 0.1);
+    b.bench("oscillator/anneal 64-spin padded (256 steps)", || {
+        black_box(anneal(&padded, &cfg, &phase0, &noise));
+    });
+    let mut device = CobiDevice::native(CobiConfig::default(), 8);
+    b.bench("cobi-device/program_and_solve n=20", || {
+        black_box(device.program_and_solve(&quantized).unwrap());
+    });
+
+    // exact ground truth (Eq. 13 bounds)
+    b.bench("exact/bnb-max n=20 M=6", || {
+        black_box(exact::solve_max(&p20));
+    });
+    b.bench("exact/bnb-max n=100 M=6", || {
+        black_box(exact::solve_max(&p100));
+    });
+    b.bench("brute/enumerate n=20 M=6 (38760 subsets)", || {
+        black_box(brute::solve(&p20));
+    });
+
+    println!("\n{} cases measured", b.results.len());
+}

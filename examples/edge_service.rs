@@ -1,0 +1,74 @@
+//! Edge service demo: run the thread-based summarization service under a
+//! bursty request load, reporting latency percentiles, throughput and
+//! backpressure behaviour — the deployment scenario of the paper's
+//! conclusion ("real-time, low-energy text summarization on edge
+//! devices").
+//!
+//!     cargo run --release --example edge_service
+
+use std::time::Instant;
+
+use cobi_es::config::Settings;
+use cobi_es::corpus::benchmark_set;
+use cobi_es::service::Service;
+
+fn main() -> anyhow::Result<()> {
+    let mut settings = Settings::default();
+    settings.service.workers = 3;
+    settings.service.queue_depth = 16;
+    settings.pipeline.solver = "cobi".into();
+    settings.pipeline.iterations = 4;
+
+    println!(
+        "edge service: {} workers, queue depth {}, COBI-simulated solver",
+        settings.service.workers, settings.service.queue_depth
+    );
+    let svc = Service::start(&settings)?;
+    let set = benchmark_set("cnn_dm_20")?;
+
+    // burst 1: sustainable load
+    let t0 = Instant::now();
+    let tickets: Vec<_> = (0..12)
+        .filter_map(|i| svc.submit(set.documents[i % 20].clone()).ok())
+        .collect();
+    let accepted1 = tickets.len();
+    let mut ok = 0;
+    for t in tickets {
+        ok += t.wait().is_ok() as usize;
+    }
+    let wall1 = t0.elapsed().as_secs_f64();
+    println!(
+        "\nburst 1: {accepted1} accepted, {ok} completed in {wall1:.2}s \
+         ({:.1} docs/s)",
+        ok as f64 / wall1
+    );
+
+    // burst 2: overload — expect backpressure rejections, not collapse
+    let t0 = Instant::now();
+    let mut accepted2 = 0;
+    let mut rejected = 0;
+    let mut tickets = Vec::new();
+    for i in 0..200 {
+        match svc.submit(set.documents[i % 20].clone()) {
+            Ok(t) => {
+                accepted2 += 1;
+                tickets.push(t);
+            }
+            Err(_) => rejected += 1,
+        }
+    }
+    let mut ok2 = 0;
+    for t in tickets {
+        ok2 += t.wait().is_ok() as usize;
+    }
+    let wall2 = t0.elapsed().as_secs_f64();
+    println!(
+        "burst 2 (overload): {accepted2} accepted, {rejected} rejected \
+         (backpressure), {ok2} completed in {wall2:.2}s"
+    );
+
+    println!("\nservice metrics: {}", svc.metrics().report());
+    svc.shutdown();
+    println!("shut down cleanly");
+    Ok(())
+}

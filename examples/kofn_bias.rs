@@ -1,0 +1,66 @@
+//! k-of-n generality demo: the paper's bias-shift (Eq. 10-12) applied
+//! beyond summarization — facility dispersion (vehicle-routing flavoured
+//! [14]) and influence-style seed selection [15].
+//!
+//!     cargo run --release --example kofn_bias
+//!
+//! For each workload: formulate original vs improved, quantize to the
+//! COBI int14 grid, solve on the simulated device, report normalized
+//! objective — the §III-B robustness story on non-ES problems.
+
+use cobi_es::cobi::CobiDevice;
+use cobi_es::config::CobiConfig;
+use cobi_es::ising::kofn::{facility_dispersion, influence_seeds, KofnProblem};
+use cobi_es::ising::{exact_bounds, selected_indices};
+use cobi_es::quant::{quantize, Precision, Rounding};
+use cobi_es::refine::repair_selection;
+use cobi_es::solvers::IsingSolver;
+use cobi_es::util::rng::Pcg32;
+use cobi_es::util::stats::{mean, median_f32};
+
+fn evaluate(name: &str, problems: &[KofnProblem]) {
+    println!("\n== {name} ({} instances, k-of-n on COBI int14) ==", problems.len());
+    for improved in [false, true] {
+        let mut norms = Vec::new();
+        let mut imbalance = Vec::new();
+        for (idx, p) in problems.iter().enumerate() {
+            let es = p.as_es();
+            let bounds = exact_bounds(&es);
+            let ising = p.formulate(improved);
+            imbalance.push(
+                (median_f32(&ising.h) - median_f32(&ising.upper_couplings())).abs() as f64,
+            );
+            let mut best = f64::NEG_INFINITY;
+            let mut rng = Pcg32::seeded(900 + idx as u64);
+            let mut dev = CobiDevice::native(CobiConfig::default(), 40 + idx as u64);
+            for _ in 0..8 {
+                let inst = quantize(&ising, Precision::CobiInt, Rounding::Stochastic, &mut rng);
+                let solved = dev.solve(&inst);
+                let sel = repair_selection(&es, selected_indices(&solved.spins));
+                best = best.max(bounds.normalize(es.objective(&sel)));
+            }
+            norms.push(best);
+        }
+        println!(
+            "  {:<22} mean normalized objective {:.3} | median |h-J| imbalance {:.2}",
+            if improved { "improved (bias shift)" } else { "original" },
+            mean(&norms),
+            mean(&imbalance),
+        );
+    }
+}
+
+fn main() {
+    let mut rng = Pcg32::seeded(1);
+    let dispersion: Vec<KofnProblem> =
+        (0..6).map(|_| facility_dispersion(&mut rng, 18, 5)).collect();
+    evaluate("facility dispersion", &dispersion);
+
+    let mut rng = Pcg32::seeded(2);
+    let influence: Vec<KofnProblem> =
+        (0..6).map(|_| influence_seeds(&mut rng, 16, 4, 128)).collect();
+    evaluate("influence seed selection", &influence);
+
+    println!("\nthe bias shift collapses the h/J scale gap on any k-of-n \
+              selection QUBO, which is what survives 5-bit quantization.");
+}

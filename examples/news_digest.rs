@@ -1,0 +1,91 @@
+//! News digest: batch-summarize a stream of synthetic news articles and
+//! compare solver quality / modeled cost — the paper intro's motivating
+//! workload ("news digests ... real-time inference in resource-
+//! constrained environments").
+//!
+//!     cargo run --release --example news_digest
+
+use cobi_es::config::{CobiConfig, PipelineConfig, TimingConfig};
+use cobi_es::corpus::benchmark_set;
+use cobi_es::ising::exact_bounds;
+use cobi_es::metrics::rouge_all;
+use cobi_es::metrics::tts::TimingModel;
+use cobi_es::pipeline::EsPipeline;
+use cobi_es::util::stats::mean;
+
+fn main() -> anyhow::Result<()> {
+    let set = benchmark_set("cnn_dm_20")?;
+    let timing = TimingConfig::default();
+    let cobi_cfg = CobiConfig::default();
+
+    println!(
+        "digest over {} articles x {} sentences, M = {}\n",
+        set.documents.len(),
+        set.doc_len(),
+        set.summary_len
+    );
+    println!(
+        "{:<8} {:>10} {:>9} {:>9} {:>12} {:>12}",
+        "solver", "norm.obj", "ROUGE-1", "ROUGE-L", "model ms/doc", "model mJ/doc"
+    );
+
+    for solver in ["cobi", "tabu", "random"] {
+        let cfg = PipelineConfig {
+            solver: solver.into(),
+            iterations: 8,
+            ..Default::default()
+        };
+        let mut pipeline = EsPipeline::from_config(&cfg, &cobi_cfg, None)?;
+        let mut norms = Vec::new();
+        let mut r1 = Vec::new();
+        let mut rl = Vec::new();
+        let mut solves_total = 0usize;
+        for doc in &set.documents {
+            let summary = pipeline.summarize(doc)?;
+            let problem = pipeline.problem_for(doc)?;
+            let bounds = exact_bounds(&problem);
+            norms.push(bounds.normalize(summary.objective));
+            let reference: String = doc
+                .reference
+                .iter()
+                .map(|&k| doc.sentences[k].clone())
+                .collect::<Vec<_>>()
+                .join(" ");
+            let r = rouge_all(&summary.text(), &reference);
+            r1.push(r.rouge1);
+            rl.push(r.rouge_l);
+            solves_total += summary.total_solves;
+        }
+        // modeled per-document hardware cost (Eq. 16 components)
+        let solves_per_doc = solves_total as f64 / set.documents.len() as f64;
+        let model = match solver {
+            "cobi" => TimingModel::cobi(&timing, cobi_cfg.solve_time_s, cobi_cfg.power_w),
+            _ => TimingModel::software(&timing, timing.tabu_time_s),
+        };
+        let (ms, mj) = if solver == "random" {
+            (0.0, 0.0) // no Ising hardware in the loop
+        } else {
+            (
+                solves_per_doc * model.iter_time_s() * 1e3,
+                solves_per_doc * model.iter_energy_j() * 1e3,
+            )
+        };
+        println!(
+            "{:<8} {:>10.3} {:>9.3} {:>9.3} {:>12.2} {:>12.3}",
+            solver,
+            mean(&norms),
+            mean(&r1),
+            mean(&rl),
+            ms,
+            mj
+        );
+    }
+    println!(
+        "\n(model: COBI {} µs/solve @ {} mW; Tabu {} ms/solve @ {} W; Eq. 16)",
+        cobi_cfg.solve_time_s * 1e6,
+        cobi_cfg.power_w * 1e3,
+        timing.tabu_time_s * 1e3,
+        timing.cpu_power_w
+    );
+    Ok(())
+}

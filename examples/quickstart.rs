@@ -1,0 +1,55 @@
+//! Quickstart: summarize one document on the simulated COBI device.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Builds a 20-sentence synthetic news document, runs the full paper
+//! workflow (improved Ising formulation -> decomposition -> stochastic
+//! rounding -> COBI solves -> refinement) and prints the summary next to
+//! the exact optimum.
+
+use cobi_es::config::{CobiConfig, PipelineConfig};
+use cobi_es::corpus::Generator;
+use cobi_es::ising::exact_bounds;
+use cobi_es::pipeline::EsPipeline;
+
+fn main() -> anyhow::Result<()> {
+    // 1. a document (swap in Document::from_text for your own)
+    let mut generator = Generator::with_seed(2026);
+    let doc = generator.document("quickstart", 20);
+    println!("document ({} sentences):", doc.len());
+    for (i, s) in doc.sentences.iter().enumerate() {
+        println!("  {i:>2}. {s}");
+    }
+
+    // 2. the pipeline: COBI device simulation, paper defaults
+    //    (P=20, Q=10, M=6, int14, stochastic rounding, 10 iterations)
+    let cfg = PipelineConfig::default();
+    let mut pipeline = EsPipeline::from_config(&cfg, &CobiConfig::default(), None)?;
+
+    // 3. summarize
+    let t0 = std::time::Instant::now();
+    let summary = pipeline.summarize(&doc)?;
+    let wall = t0.elapsed();
+
+    println!("\nsummary (sentences {:?}):", summary.selected);
+    for s in &summary.sentences {
+        println!("  - {s}");
+    }
+
+    // 4. how good is it? normalize against the exact optimum (Eq. 13)
+    let problem = pipeline.problem_for(&doc)?;
+    let bounds = exact_bounds(&problem);
+    println!(
+        "\nobjective {:.4} -> normalized {:.3} (exact optimum {:.4})",
+        summary.objective,
+        bounds.normalize(summary.objective),
+        bounds.max
+    );
+    println!(
+        "{} decomposition stages, {} COBI solves, {:.1} ms wall",
+        summary.stages,
+        summary.total_solves,
+        wall.as_secs_f64() * 1e3
+    );
+    Ok(())
+}

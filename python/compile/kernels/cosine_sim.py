@@ -1,0 +1,105 @@
+"""Pallas kernel: tiled all-pairs cosine-similarity matrix.
+
+This is the L1 hot-spot of the *embedding* half of the pipeline: given a
+batch of sentence embeddings it produces the dense redundancy matrix
+beta_ij = cos(e_i, e_j) (paper Eq. 2) that every Ising formulation consumes.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the kernel normalizes rows
+once into VMEM scratch and then walks the (M, N) output grid in
+(block_m, block_n) tiles, each tile a (block_m, d) @ (d, block_n) MXU
+matmul. On GPU the paper's SBERT stack would have hit cuBLAS; here the
+BlockSpec expresses the HBM->VMEM schedule explicitly.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls, and correctness (vs ref.cosine_matrix_ref) is the build-time
+contract. Real-TPU perf is estimated analytically in EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref  # noqa: F401  (documentation cross-ref)
+
+__all__ = ["cosine_matrix", "normalize_rows"]
+
+
+def _normalize_kernel(emb_ref, out_ref):
+    """Row-normalize a (block_m, d) tile: u_i = e_i / max(||e_i||, eps)."""
+    block = emb_ref[...]
+    sq = jnp.sum(block * block, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(jnp.maximum(sq, 1e-24))
+    out_ref[...] = block * inv
+
+
+def normalize_rows(emb, *, block_m: int = 64, interpret: bool = True):
+    """L2-normalize each row of emb: f32[n, d] -> f32[n, d].
+
+    n must be a multiple of block_m (callers pad; padding rows are zero and
+    normalize to zero, matching the eps-guarded reference).
+    """
+    n, d = emb.shape
+    if n % block_m != 0:
+        raise ValueError(f"n={n} not a multiple of block_m={block_m}")
+    return pl.pallas_call(
+        _normalize_kernel,
+        grid=(n // block_m,),
+        in_specs=[pl.BlockSpec((block_m, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_m, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        interpret=interpret,
+    )(emb)
+
+
+def _gram_kernel(a_ref, b_ref, out_ref):
+    """One (block_m, block_n) output tile of U @ U^T.
+
+    a_ref: (block_m, d) row tile of the normalized embeddings.
+    b_ref: (block_n, d) column tile (same matrix, different rows).
+    """
+    a = a_ref[...]
+    b = b_ref[...]
+    out_ref[...] = jax.lax.dot_general(
+        a,
+        b,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def cosine_matrix(
+    emb,
+    *,
+    block_m: int = 64,
+    block_n: int = 64,
+    interpret: bool = True,
+):
+    """All-pairs cosine similarity: f32[n, d] -> f32[n, n].
+
+    Two-stage Pallas pipeline: row normalization (VPU) then a tiled Gram
+    matmul (MXU). Matches ref.cosine_matrix_ref to f32 tolerance.
+    """
+    n, d = emb.shape
+    if n % block_m != 0 or n % block_n != 0:
+        raise ValueError(f"n={n} must tile by ({block_m}, {block_n})")
+    unit = normalize_rows(emb, block_m=block_m, interpret=interpret)
+    grid = (n // block_m, n // block_n)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        interpret=interpret,
+    )(unit, unit)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def cosine_matrix_jit(emb, block_m: int = 64, block_n: int = 64):
+    """jit wrapper used by the AOT path and tests."""
+    return cosine_matrix(emb, block_m=block_m, block_n=block_n)

@@ -1,0 +1,66 @@
+"""Pallas kernel: coupled-oscillator (COBI) phase-update step.
+
+This is the L1 hot-spot of the *solver* half of the pipeline: one explicit
+Euler step of the generalized-Kuramoto + SHIL dynamics that model the COBI
+ring-oscillator array (see kernels/ref.py:oscillator_step_ref for the
+mathematical specification and DESIGN.md §Substitutions for why this is the
+right behavioural model of the chip).
+
+TPU mapping: the pairwise term sum_j J_ij sin(phi_i - phi_j) is rewritten
+as  s .* (J @ c) - c .* (J @ s)  with s = sin(phi), c = cos(phi), so the
+kernel is two dense mat-vecs plus elementwise VPU work. At the COBI problem
+size (n = 64 after padding) the whole J matrix is a single 16 KiB VMEM tile,
+so the kernel runs as one block and the *time* loop lives at L2 as a
+lax.scan over this kernel (python/compile/model.py:cobi_anneal). For larger
+n the grid tiles J by rows (block_n x n), accumulating partial mat-vecs.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["oscillator_step"]
+
+
+def _step_kernel(phase_ref, j_ref, h_ref, kparams_ref, noise_ref, out_ref):
+    """Single-block phase update for n <= MAX_SINGLE_BLOCK spins.
+
+    kparams packs (k_c, k_s, dt) as f32[3]; scalars travel as a tiny vector
+    so the HLO signature stays all-tensor (friendlier for the rust runtime).
+    """
+    phase = phase_ref[...]
+    j_mat = j_ref[...]
+    h_vec = h_ref[...]
+    kp = kparams_ref[...]
+    noise = noise_ref[...]
+    k_c, k_s, dt = kp[0], kp[1], kp[2]
+
+    s = jnp.sin(phase)
+    c = jnp.cos(phase)
+    # Two MXU mat-vecs: J @ cos(phi), J @ sin(phi).
+    jc = j_mat @ c
+    js = j_mat @ s
+    coupling = s * jc - c * js
+    local = h_vec * s
+    # +k_c: gradient *descent* on the phase Lyapunov function whose
+    # binarized fixed points carry the Ising energy (see ref.py).
+    dphi = k_c * (coupling + local) - k_s * jnp.sin(2.0 * phase) + noise
+    out = phase + dt * dphi
+    out_ref[...] = jnp.mod(out + jnp.pi, 2.0 * jnp.pi) - jnp.pi
+
+
+def oscillator_step(phase, j_mat, h_vec, kparams, noise, *, interpret=True):
+    """One dynamics step: (f32[n], f32[n,n], f32[n], f32[3], f32[n]) -> f32[n].
+
+    Matches ref.oscillator_step_ref(phase, J, h, kp[0], kp[1], kp[2], noise).
+    n = 64 is the COBI-padded problem size; the single-block layout keeps
+    J, phases and trig intermediates resident in VMEM for the whole step.
+    """
+    n = phase.shape[0]
+    if j_mat.shape != (n, n) or h_vec.shape != (n,) or noise.shape != (n,):
+        raise ValueError("inconsistent oscillator shapes")
+    return pl.pallas_call(
+        _step_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=interpret,
+    )(phase, j_mat, h_vec, kparams, noise)

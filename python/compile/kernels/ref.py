@@ -1,0 +1,119 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+must match its oracle to float32 tolerance under pytest (see
+python/tests/test_kernels.py). They are also small enough to read as the
+mathematical specification of each kernel.
+"""
+
+import jax.numpy as jnp
+
+__all__ = [
+    "cosine_matrix_ref",
+    "relevance_ref",
+    "oscillator_step_ref",
+    "energy_batch_ref",
+]
+
+
+def cosine_matrix_ref(emb):
+    """All-pairs cosine similarity of row vectors.
+
+    Args:
+      emb: f32[n, d] sentence embeddings (not necessarily normalized).
+
+    Returns:
+      f32[n, n] with C[i, j] = cos(e_i, e_j)  (paper Eq. 2).
+    """
+    norms = jnp.sqrt(jnp.sum(emb * emb, axis=-1, keepdims=True))
+    unit = emb / jnp.maximum(norms, 1e-12)
+    return unit @ unit.T
+
+
+def relevance_ref(emb, mask):
+    """Relevance scores mu_i = cos(e_i, mean(e_doc))  (paper Eq. 1).
+
+    Args:
+      emb:  f32[n, d] embeddings.
+      mask: f32[n] 1.0 for real sentences, 0.0 for padding; the document
+            mean embedding is taken over real sentences only.
+
+    Returns:
+      f32[n] relevance scores (padding rows get the cosine against the mean
+      too; the caller masks them out).
+    """
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    doc = jnp.sum(emb * mask[:, None], axis=0) / denom
+    doc_n = doc / jnp.maximum(jnp.linalg.norm(doc), 1e-12)
+    norms = jnp.sqrt(jnp.sum(emb * emb, axis=-1))
+    unit = emb / jnp.maximum(norms, 1e-12)[:, None]
+    return unit @ doc_n
+
+
+def oscillator_step_ref(phase, j_mat, h_vec, k_c, k_s, dt, noise):
+    """One explicit-Euler step of the coupled-oscillator (COBI) dynamics.
+
+    Generalized Kuramoto network with second-harmonic injection locking
+    (SHIL), the standard behavioural model for ring-oscillator Ising
+    machines [Lo et al., Nat. Electronics 2023]:
+
+        dphi_i/dt = +k_c * ( sum_j J_ij sin(phi_i - phi_j) + h_i sin(phi_i) )
+                    -k_s * sin(2 phi_i) + noise_i
+
+    This is gradient descent on the phase Lyapunov function
+        E(phi) = sum_{i<j} J_ij cos(phi_i - phi_j) + sum_i h_i cos(phi_i),
+    which at SHIL-binarized fixed points (phi in {0, pi}, s_i = cos phi_i)
+    equals the Ising Hamiltonian H(s) — so the network settles into low-H
+    configurations.
+
+    The pairwise sum uses sin(a-b) = sin a cos b - cos a sin b so the O(n^2)
+    interaction becomes two dense mat-vecs (J @ cos phi, J @ sin phi) — the
+    MXU-friendly form the Pallas kernel tiles.
+
+    The local field h couples each spin to a virtual reference oscillator
+    pinned at phase 0, the usual trick for mapping Ising h terms onto
+    phase hardware.
+
+    Args:
+      phase: f32[n] oscillator phases (radians).
+      j_mat: f32[n, n] symmetric coupling matrix, zero diagonal.
+      h_vec: f32[n] local fields.
+      k_c:   coupling strength (scalar).
+      k_s:   SHIL (binarization) strength (scalar, annealed 0 -> max).
+      dt:    Euler step.
+      noise: f32[n] additive phase noise for this step.
+
+    Returns:
+      f32[n] updated phases, wrapped to (-pi, pi].
+    """
+    s = jnp.sin(phase)
+    c = jnp.cos(phase)
+    # sum_j J_ij sin(phi_i - phi_j) = s_i * (J c)_i - c_i * (J s)_i
+    coupling = s * (j_mat @ c) - c * (j_mat @ s)
+    local = h_vec * s
+    dphi = k_c * (coupling + local) - k_s * jnp.sin(2.0 * phase) + noise
+    out = phase + dt * dphi
+    # wrap to (-pi, pi] to keep trig arguments well-conditioned over long runs
+    return jnp.mod(out + jnp.pi, 2.0 * jnp.pi) - jnp.pi
+
+
+def energy_batch_ref(j_mat, h_vec, spins):
+    """Ising energies for a batch of spin configurations (paper Eq. 4).
+
+        H(s) = sum_i h_i s_i + sum_{i != j} J_ij s_i s_j
+
+    J is symmetric with zero diagonal and stores each pair in both (i,j)
+    and (j,i), so the pair sum equals s^T J s.
+
+    Args:
+      j_mat: f32[n, n].
+      h_vec: f32[n].
+      spins: f32[b, n] entries in {-1, +1} (padding spins frozen at -1 with
+             zero couplings contribute a constant the caller ignores).
+
+    Returns:
+      f32[b] energies.
+    """
+    pair = jnp.einsum("bi,ij,bj->b", spins, j_mat, spins)
+    local = spins @ h_vec
+    return local + pair

@@ -1,0 +1,76 @@
+"""AOT path: lowering produces loadable HLO text + consistent manifest."""
+
+import os
+import struct
+
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def tmp_artifacts(tmp_path_factory):
+    d = tmp_path_factory.mktemp("artifacts")
+    aot.main(["--out-dir", str(d), "--graphs", "energy,anneal"])
+    return str(d)
+
+
+class TestLowering:
+    @pytest.mark.parametrize("name", list(model.GRAPHS))
+    def test_lowers_to_hlo_text(self, name):
+        text = aot.to_hlo_text(aot.lower_graph(name))
+        assert text.startswith("HloModule"), text[:80]
+        assert "ENTRY" in text
+        # 64-bit-id safety: parser-visible ids must be reassigned small ints;
+        # presence of ROOT marks a complete module.
+        assert "ROOT" in text
+
+    def test_manifest_round_trip(self, tmp_artifacts):
+        lines = [l for l in open(os.path.join(tmp_artifacts, "manifest.txt"))
+                 if not l.startswith("#")]
+        entries = [l.split() for l in lines if l.strip()]
+        names = {e[0] for e in entries}
+        assert names == {"energy", "anneal"}
+        en_in = [e for e in entries if e[0] == "energy" and e[2] == "in"]
+        assert [e[5] for e in en_in] == ["64x64", "64", "32x64"]
+
+    def test_artifact_files_exist(self, tmp_artifacts):
+        for n in ("energy", "anneal"):
+            p = os.path.join(tmp_artifacts, f"{n}.hlo.txt")
+            assert os.path.getsize(p) > 1000
+
+
+class TestTestVectors:
+    def _parse(self, path):
+        with open(path, "rb") as f:
+            raw = f.read()
+        off = 0
+        (n,) = struct.unpack_from("<I", raw, off); off += 4
+        arrays = []
+        for _ in range(n):
+            kind, dt, rank = struct.unpack_from("<III", raw, off); off += 12
+            dims = struct.unpack_from(f"<{rank}I", raw, off); off += 4 * rank
+            count = int(np.prod(dims)) if rank else 1
+            dtype = np.int32 if dt == 1 else np.float32
+            arr = np.frombuffer(raw, dtype, count, off).reshape(dims)
+            off += count * 4
+            arrays.append((kind, arr))
+        assert off == len(raw)
+        return arrays
+
+    def test_energy_testvec_consistent(self, tmp_artifacts):
+        arrays = self._parse(os.path.join(tmp_artifacts, "testvec_energy.bin"))
+        ins = [a for k, a in arrays if k == 0]
+        outs = [a for k, a in arrays if k == 1]
+        assert len(ins) == 3 and len(outs) == 1
+        j, h, s = ins
+        # recompute expected energies in numpy and compare to stored outputs
+        want = s @ h + np.einsum("bi,ij,bj->b", s, j, s)
+        np.testing.assert_allclose(outs[0], want, rtol=1e-3, atol=1e-2)
+
+    def test_anneal_testvec_output_binary(self, tmp_artifacts):
+        arrays = self._parse(os.path.join(tmp_artifacts, "testvec_anneal.bin"))
+        outs = [a for k, a in arrays if k == 1]
+        assert len(outs) == 1
+        assert set(np.unique(outs[0])).issubset({-1.0, 1.0})

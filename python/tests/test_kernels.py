@@ -1,0 +1,237 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes/values; fixed-seed cases pin the tolerances.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import cosine_sim, energy, oscillator, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+F32 = np.float32
+
+
+def rand_emb(rng, n, d, scale=1.0):
+    return (rng.standard_normal((n, d)) * scale).astype(F32)
+
+
+def rand_ising(rng, n):
+    j = rng.standard_normal((n, n)).astype(F32)
+    j = (j + j.T) / 2
+    np.fill_diagonal(j, 0.0)
+    h = rng.standard_normal(n).astype(F32)
+    return j, h
+
+
+# ---------------------------------------------------------------------------
+# cosine_sim
+# ---------------------------------------------------------------------------
+class TestCosine:
+    @pytest.mark.parametrize("n,d,bm,bn", [(128, 64, 64, 64), (64, 64, 32, 64),
+                                           (128, 32, 64, 32), (64, 16, 16, 16)])
+    def test_matches_ref(self, n, d, bm, bn):
+        rng = np.random.default_rng(n * 1000 + d)
+        emb = rand_emb(rng, n, d)
+        got = cosine_sim.cosine_matrix(jnp.asarray(emb), block_m=bm, block_n=bn)
+        want = ref.cosine_matrix_ref(jnp.asarray(emb))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_diagonal_is_one(self):
+        rng = np.random.default_rng(7)
+        emb = rand_emb(rng, 64, 64)
+        got = np.asarray(cosine_sim.cosine_matrix(jnp.asarray(emb)))
+        np.testing.assert_allclose(np.diag(got), np.ones(64), atol=1e-5)
+
+    def test_symmetric(self):
+        rng = np.random.default_rng(8)
+        emb = rand_emb(rng, 64, 32)
+        got = np.asarray(cosine_sim.cosine_matrix(jnp.asarray(emb), block_n=32,
+                                                  block_m=32))
+        np.testing.assert_allclose(got, got.T, atol=1e-5)
+
+    def test_range_bounded(self):
+        rng = np.random.default_rng(9)
+        emb = rand_emb(rng, 64, 64, scale=10.0)
+        got = np.asarray(cosine_sim.cosine_matrix(jnp.asarray(emb)))
+        assert np.all(got <= 1.0 + 1e-4) and np.all(got >= -1.0 - 1e-4)
+
+    def test_zero_rows_safe(self):
+        """Padding rows are zero vectors; kernel must not produce NaN."""
+        rng = np.random.default_rng(10)
+        emb = rand_emb(rng, 64, 64)
+        emb[40:] = 0.0
+        got = np.asarray(cosine_sim.cosine_matrix(jnp.asarray(emb)))
+        assert np.all(np.isfinite(got))
+        assert np.allclose(got[40:, :], 0.0, atol=1e-6)
+
+    def test_bad_tiling_raises(self):
+        emb = jnp.zeros((60, 64), jnp.float32)
+        with pytest.raises(ValueError):
+            cosine_sim.cosine_matrix(emb, block_m=64, block_n=64)
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           n=st.sampled_from([32, 64, 128]),
+           d=st.sampled_from([16, 32, 64]),
+           scale=st.floats(0.01, 100.0))
+    def test_property_matches_ref(self, seed, n, d, scale):
+        rng = np.random.default_rng(seed)
+        emb = rand_emb(rng, n, d, scale)
+        got = cosine_sim.cosine_matrix(jnp.asarray(emb), block_m=32, block_n=32)
+        want = ref.cosine_matrix_ref(jnp.asarray(emb))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# relevance (mu) reference invariants
+# ---------------------------------------------------------------------------
+class TestRelevance:
+    def test_masked_mean_excludes_padding(self):
+        rng = np.random.default_rng(3)
+        emb = rand_emb(rng, 16, 8)
+        mask = np.ones(16, F32)
+        mask[10:] = 0.0
+        got = np.asarray(ref.relevance_ref(jnp.asarray(emb), jnp.asarray(mask)))
+        doc = emb[:10].mean(axis=0)
+        doc /= np.linalg.norm(doc)
+        want = (emb / np.linalg.norm(emb, axis=1, keepdims=True)) @ doc
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_identical_sentences_mu_one(self):
+        v = np.ones((4, 8), F32)
+        mu = np.asarray(ref.relevance_ref(jnp.asarray(v), jnp.ones(4, F32)))
+        np.testing.assert_allclose(mu, 1.0, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# oscillator
+# ---------------------------------------------------------------------------
+class TestOscillator:
+    @pytest.mark.parametrize("n", [16, 64])
+    def test_matches_ref(self, n):
+        rng = np.random.default_rng(n)
+        j, h = rand_ising(rng, n)
+        ph = rng.uniform(-np.pi, np.pi, n).astype(F32)
+        noise = (rng.standard_normal(n) * 0.1).astype(F32)
+        kp = jnp.asarray([2.0, 1.0, 0.05], jnp.float32)
+        got = oscillator.oscillator_step(jnp.asarray(ph), jnp.asarray(j),
+                                         jnp.asarray(h), kp, jnp.asarray(noise))
+        want = ref.oscillator_step_ref(jnp.asarray(ph), jnp.asarray(j),
+                                       jnp.asarray(h), 2.0, 1.0, 0.05,
+                                       jnp.asarray(noise))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_output_wrapped(self):
+        rng = np.random.default_rng(5)
+        j, h = rand_ising(rng, 32)
+        ph = rng.uniform(-np.pi, np.pi, 32).astype(F32)
+        kp = jnp.asarray([5.0, 5.0, 1.0], jnp.float32)  # huge step
+        got = np.asarray(oscillator.oscillator_step(
+            jnp.asarray(ph), jnp.asarray(j), jnp.asarray(h), kp,
+            jnp.zeros(32, jnp.float32)))
+        assert np.all(got <= np.pi + 1e-6) and np.all(got > -np.pi - 1e-6)
+
+    def test_zero_dynamics_fixed_point(self):
+        """k_c = k_s = 0, no noise -> phases unchanged."""
+        rng = np.random.default_rng(6)
+        j, h = rand_ising(rng, 16)
+        ph = rng.uniform(-np.pi, np.pi, 16).astype(F32)
+        kp = jnp.asarray([0.0, 0.0, 0.05], jnp.float32)
+        got = np.asarray(oscillator.oscillator_step(
+            jnp.asarray(ph), jnp.asarray(j), jnp.asarray(h), kp,
+            jnp.zeros(16, jnp.float32)))
+        np.testing.assert_allclose(got, ph, atol=1e-6)
+
+    def test_binarized_state_is_shil_fixed_point(self):
+        """phi in {0, pi} is a fixed point of the SHIL term."""
+        ph = np.array([0.0, np.pi] * 8, F32)
+        j = np.zeros((16, 16), F32)
+        h = np.zeros(16, F32)
+        kp = jnp.asarray([0.0, 3.0, 0.05], jnp.float32)
+        got = np.asarray(oscillator.oscillator_step(
+            jnp.asarray(ph), jnp.asarray(j), jnp.asarray(h), kp,
+            jnp.zeros(16, jnp.float32)))
+        # sin(2*0) = sin(2*pi) = 0 -> no movement (up to wrap of pi itself)
+        np.testing.assert_allclose(np.cos(got), np.cos(ph), atol=1e-5)
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), n=st.sampled_from([8, 32, 64]),
+           k_c=st.floats(0.0, 5.0), k_s=st.floats(0.0, 5.0),
+           dt=st.floats(0.001, 0.2))
+    def test_property_matches_ref(self, seed, n, k_c, k_s, dt):
+        rng = np.random.default_rng(seed)
+        j, h = rand_ising(rng, n)
+        ph = rng.uniform(-np.pi, np.pi, n).astype(F32)
+        noise = (rng.standard_normal(n) * 0.05).astype(F32)
+        kp = jnp.asarray([k_c, k_s, dt], jnp.float32)
+        got = oscillator.oscillator_step(jnp.asarray(ph), jnp.asarray(j),
+                                         jnp.asarray(h), kp, jnp.asarray(noise))
+        want = ref.oscillator_step_ref(jnp.asarray(ph), jnp.asarray(j),
+                                       jnp.asarray(h), k_c, k_s, dt,
+                                       jnp.asarray(noise))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# energy
+# ---------------------------------------------------------------------------
+class TestEnergy:
+    @pytest.mark.parametrize("b,n,bb", [(32, 64, 32), (64, 64, 32), (32, 16, 16)])
+    def test_matches_ref(self, b, n, bb):
+        rng = np.random.default_rng(b + n)
+        j, h = rand_ising(rng, n)
+        s = np.where(rng.uniform(size=(b, n)) > 0.5, 1.0, -1.0).astype(F32)
+        got = energy.energy_batch(jnp.asarray(j), jnp.asarray(h),
+                                  jnp.asarray(s), block_b=bb)
+        want = ref.energy_batch_ref(jnp.asarray(j), jnp.asarray(h),
+                                    jnp.asarray(s))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-3)
+
+    def test_flip_symmetry_zero_field(self):
+        """H(s) == H(-s) when h = 0."""
+        rng = np.random.default_rng(11)
+        j, _ = rand_ising(rng, 32)
+        h = np.zeros(32, F32)
+        s = np.where(rng.uniform(size=(32, 32)) > 0.5, 1.0, -1.0).astype(F32)
+        e1 = np.asarray(energy.energy_batch(jnp.asarray(j), jnp.asarray(h),
+                                            jnp.asarray(s)))
+        e2 = np.asarray(energy.energy_batch(jnp.asarray(j), jnp.asarray(h),
+                                            jnp.asarray(-s)))
+        np.testing.assert_allclose(e1, e2, rtol=1e-4, atol=1e-3)
+
+    def test_single_spin_exact(self):
+        """n=2 analytic check: H = h0 s0 + h1 s1 + 2 J01 s0 s1."""
+        j = np.zeros((64, 64), F32)
+        j[0, 1] = j[1, 0] = 0.5
+        h = np.zeros(64, F32)
+        h[0], h[1] = 1.0, -2.0
+        s = -np.ones((32, 64), F32)
+        s[0, 0], s[0, 1] = 1.0, 1.0   # H = 1 - 2 + 1 = 0
+        s[1, 0], s[1, 1] = 1.0, -1.0  # H = 1 + 2 - 1 = 2
+        got = np.asarray(energy.energy_batch(jnp.asarray(j), jnp.asarray(h),
+                                             jnp.asarray(s)))
+        assert abs((got[0] - got[2]) - (0.0 - (-1 + 2 + 1))) < 1e-4
+        assert abs((got[1] - got[2]) - (2.0 - 2.0)) < 1e-4
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), n=st.sampled_from([16, 32, 64]))
+    def test_property_matches_ref(self, seed, n):
+        rng = np.random.default_rng(seed)
+        j, h = rand_ising(rng, n)
+        s = np.where(rng.uniform(size=(32, n)) > 0.5, 1.0, -1.0).astype(F32)
+        got = energy.energy_batch(jnp.asarray(j), jnp.asarray(h),
+                                  jnp.asarray(s), block_b=32)
+        want = ref.energy_batch_ref(jnp.asarray(j), jnp.asarray(h),
+                                    jnp.asarray(s))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-3)

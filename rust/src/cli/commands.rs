@@ -1,0 +1,293 @@
+//! Subcommand implementations for the cobi-es binary.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::Settings;
+use crate::corpus::{benchmark_set, Document};
+use crate::experiments::{self, Scale, ALL_EXPERIMENTS};
+use crate::ising::exact_bounds;
+use crate::pipeline::EsPipeline;
+use crate::runtime::ArtifactRuntime;
+use crate::service::Service;
+
+use super::Args;
+
+/// Load settings: --config file, else ./cobi-es.toml if present.
+pub fn load_settings(args: &Args) -> Result<Settings> {
+    if let Some(path) = args.get("config") {
+        return Settings::load(Path::new(path));
+    }
+    let default = Path::new("cobi-es.toml");
+    if default.exists() {
+        return Settings::load(default);
+    }
+    Ok(Settings::default())
+}
+
+fn apply_pipeline_flags(settings: &mut Settings, args: &Args) -> Result<()> {
+    if let Some(s) = args.get("solver") {
+        settings.pipeline.solver = s.to_string();
+    }
+    settings.pipeline.iterations =
+        args.get_usize("iterations", settings.pipeline.iterations)?;
+    settings.pipeline.summary_len =
+        args.get_usize("summary-len", settings.pipeline.summary_len)?;
+    if let Some(p) = args.get("precision") {
+        settings.pipeline.precision = p.parse().map_err(anyhow::Error::msg)?;
+    }
+    if let Some(r) = args.get("rounding") {
+        settings.pipeline.rounding = r.parse().map_err(anyhow::Error::msg)?;
+    }
+    if args.get_bool("hlo") {
+        settings.cobi.backend = "hlo".to_string();
+    }
+    Ok(())
+}
+
+fn pipeline_from(settings: &Settings) -> Result<(EsPipeline, Option<ArtifactRuntime>)> {
+    if settings.cobi.backend == "hlo" {
+        let rt = ArtifactRuntime::open_default().context(
+            "hlo backend needs artifacts/ (run `make artifacts`) or COBI_ES_ARTIFACTS",
+        )?;
+        let p = EsPipeline::from_config(&settings.pipeline, &settings.cobi, Some(&rt))?;
+        Ok((p, Some(rt)))
+    } else {
+        Ok((
+            EsPipeline::from_config(&settings.pipeline, &settings.cobi, None)?,
+            None,
+        ))
+    }
+}
+
+pub fn cmd_summarize(args: &Args) -> Result<()> {
+    let mut settings = load_settings(args)?;
+    apply_pipeline_flags(&mut settings, args)?;
+
+    let doc = if let Some(path) = args.get("input") {
+        let text = std::fs::read_to_string(path)?;
+        Document::from_text(path, &text)
+    } else {
+        let set = benchmark_set(args.get("benchmark").unwrap_or("cnn_dm_20"))?;
+        let idx = args.get_usize("doc", 0)?;
+        set.documents
+            .get(idx)
+            .context("--doc out of range")?
+            .clone()
+    };
+
+    let (mut pipeline, _rt) = pipeline_from(&settings)?;
+    let t0 = std::time::Instant::now();
+    let summary = pipeline.summarize(&doc)?;
+    let wall = t0.elapsed();
+
+    println!("document: {} ({} sentences)", doc.id, doc.len());
+    println!(
+        "solver: {} | iterations: {} | precision: {} | rounding: {}",
+        settings.pipeline.solver,
+        settings.pipeline.iterations,
+        settings.pipeline.precision,
+        settings.pipeline.rounding
+    );
+    println!("selected sentences: {:?}", summary.selected);
+    println!("objective: {:.4} | stages: {} | solves: {}",
+        summary.objective, summary.stages, summary.total_solves);
+    println!("wall time: {:.1} ms", wall.as_secs_f64() * 1e3);
+    println!("\n--- summary ---");
+    for (i, s) in summary.sentences.iter().enumerate() {
+        println!("{:>2}. {s}", summary.selected[i]);
+    }
+    Ok(())
+}
+
+pub fn cmd_experiment(args: &Args) -> Result<()> {
+    let settings = load_settings(args)?;
+    let scale = if args.get_bool("full") {
+        Scale::Full
+    } else {
+        Scale::Quick
+    };
+    let id = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .unwrap_or("all");
+    let ids: Vec<&str> = if id == "all" {
+        ALL_EXPERIMENTS.to_vec()
+    } else {
+        vec![id]
+    };
+
+    let mut out = String::new();
+    for id in ids {
+        eprintln!("running {id} ({scale:?})...");
+        let t0 = std::time::Instant::now();
+        let reports = experiments::run(id, scale, &settings)?;
+        eprintln!("  done in {:.1}s", t0.elapsed().as_secs_f64());
+        for r in &reports {
+            if args.get_bool("csv") {
+                out.push_str(&format!("# {}\n{}\n", r.title, r.to_csv()));
+            } else {
+                out.push_str(&r.to_markdown());
+                out.push('\n');
+            }
+        }
+    }
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, &out)?;
+            eprintln!("wrote {path}");
+        }
+        None => print!("{out}"),
+    }
+    Ok(())
+}
+
+pub fn cmd_gen_corpus(args: &Args) -> Result<()> {
+    let set_name = args.get("set").context("--set required")?;
+    let out_dir = Path::new(args.get("out").context("--out required")?);
+    std::fs::create_dir_all(out_dir)?;
+    let set = benchmark_set(set_name)?;
+    for doc in &set.documents {
+        let path = out_dir.join(format!("{}.txt", doc.id));
+        std::fs::write(&path, doc.text())?;
+    }
+    println!(
+        "wrote {} documents ({} sentences each) to {}",
+        set.documents.len(),
+        set.doc_len(),
+        out_dir.display()
+    );
+    Ok(())
+}
+
+pub fn cmd_solve(args: &Args) -> Result<()> {
+    let mut settings = load_settings(args)?;
+    apply_pipeline_flags(&mut settings, args)?;
+    let set = benchmark_set(args.get("benchmark").unwrap_or("cnn_dm_20"))?;
+    let idx = args.get_usize("doc", 0)?;
+    let doc = set.documents.get(idx).context("--doc out of range")?;
+
+    println!("document {} — normalized objective per solver:", doc.id);
+    let mut base = EsPipeline::from_config(&settings.pipeline, &settings.cobi, None)?;
+    let problem = base.problem_for(doc)?;
+    let bounds = exact_bounds(&problem);
+    for solver in ["cobi", "tabu", "sa", "brute", "exact", "random"] {
+        let mut cfg = settings.pipeline.clone();
+        cfg.solver = solver.to_string();
+        let mut p = EsPipeline::from_config(&cfg, &settings.cobi, None)?;
+        let t0 = std::time::Instant::now();
+        let s = p.summarize(doc)?;
+        println!(
+            "  {:<8} {:.4}  ({:.1} ms wall, {} solves)",
+            solver,
+            bounds.normalize(s.objective),
+            t0.elapsed().as_secs_f64() * 1e3,
+            s.total_solves
+        );
+    }
+    Ok(())
+}
+
+pub fn cmd_serve(args: &Args) -> Result<()> {
+    let mut settings = load_settings(args)?;
+    apply_pipeline_flags(&mut settings, args)?;
+    settings.service.workers = args.get_usize("workers", settings.service.workers)?;
+    let requests = args.get_usize("requests", 20)?;
+
+    // --port: run the TCP endpoint until killed
+    if let Some(port) = args.get("port") {
+        let port: u16 = port.parse().context("--port expects a u16")?;
+        let svc = std::sync::Arc::new(Service::start(&settings)?);
+        let server = crate::service::tcp::TcpServer::start(svc.clone(), port)?;
+        println!(
+            "listening on {} — send document text then a '{}' line",
+            server.addr,
+            crate::service::tcp::EOF_MARKER
+        );
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(5));
+            println!("{}", svc.metrics().report());
+        }
+    }
+
+    println!(
+        "starting service: {} workers, queue depth {}, solver {}",
+        settings.service.workers, settings.service.queue_depth, settings.pipeline.solver
+    );
+    let svc = Service::start(&settings)?;
+    let set = benchmark_set("cnn_dm_20")?;
+    let t0 = std::time::Instant::now();
+    let mut tickets = Vec::new();
+    for i in 0..requests {
+        let doc = set.documents[i % set.documents.len()].clone();
+        match svc.submit(doc) {
+            Ok(t) => tickets.push(t),
+            Err(e) => println!("request {i} rejected: {e}"),
+        }
+    }
+    let mut ok = 0usize;
+    for t in tickets {
+        if t.wait().is_ok() {
+            ok += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!("completed {ok}/{requests} in {wall:.2}s ({:.1} docs/s)", ok as f64 / wall);
+    println!("{}", svc.metrics().report());
+    svc.shutdown();
+    Ok(())
+}
+
+pub fn cmd_doctor(args: &Args) -> Result<()> {
+    let settings = load_settings(args)?;
+    println!("cobi-es doctor");
+    println!("  config: cobi max_spins={} range=±{} backend={}",
+        settings.cobi.max_spins, settings.cobi.weight_range, settings.cobi.backend);
+
+    match crate::runtime::smoke() {
+        Ok(p) => println!("  PJRT: ok (platform = {p})"),
+        Err(e) => println!("  PJRT: FAILED — {e}"),
+    }
+    match ArtifactRuntime::open_default() {
+        Ok(rt) => {
+            println!("  artifacts: {:?}", rt.graph_names());
+            for name in rt.graph_names() {
+                match rt.executable(&name) {
+                    Ok(_) => println!("    {name}: compiles"),
+                    Err(e) => println!("    {name}: FAILED — {e}"),
+                }
+            }
+        }
+        Err(e) => println!("  artifacts: not available ({e})"),
+    }
+    // device calibration probe: hit-rate sanity on a small instance
+    let mut dev = crate::cobi::CobiDevice::native(settings.cobi.clone(), 42);
+    let mut ising = crate::ising::Ising::new(8);
+    for i in 0..8 {
+        for j in (i + 1)..8 {
+            ising.set_pair(i, j, if (i + j) % 2 == 0 { 2.0 } else { -3.0 });
+        }
+    }
+    let r = dev.program_and_solve(&ising)?;
+    println!("  device probe: energy {:.1} (stats: {:?})", r.energy, dev.stats());
+    Ok(())
+}
+
+/// Dispatch table.
+pub fn dispatch(args: &Args) -> Result<()> {
+    match args.positional.first().map(String::as_str) {
+        Some("summarize") => cmd_summarize(args),
+        Some("experiment") => cmd_experiment(args),
+        Some("gen-corpus") => cmd_gen_corpus(args),
+        Some("solve") => cmd_solve(args),
+        Some("serve") => cmd_serve(args),
+        Some("doctor") => cmd_doctor(args),
+        Some("help") | None => {
+            print!("{}", super::USAGE);
+            Ok(())
+        }
+        Some(other) => bail!("unknown command '{other}'\n\n{}", super::USAGE),
+    }
+}

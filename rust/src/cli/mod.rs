@@ -1,0 +1,149 @@
+//! Command-line interface (clap substitute — see Cargo.toml note).
+//!
+//! Flag parser: positional arguments + `--key value` / `--flag` options,
+//! with typed accessors and an auto-generated usage block per subcommand.
+
+pub mod commands;
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed argument list.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+/// Flags that take no value.
+const BOOLEAN_FLAGS: &[&str] = &["full", "help", "verbose", "csv", "hlo"];
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare '--' not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if BOOLEAN_FLAGS.contains(&name) {
+                    out.flags.insert(name.to_string(), "true".to_string());
+                } else {
+                    match it.next() {
+                        Some(v) if !v.starts_with("--") => {
+                            out.flags.insert(name.to_string(), v);
+                        }
+                        _ => bail!("flag --{name} expects a value"),
+                    }
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects a number, got '{v}'")),
+        }
+    }
+}
+
+pub const USAGE: &str = "\
+cobi-es — extractive summarization on a (simulated) CMOS Ising machine
+
+USAGE:
+  cobi-es <command> [options]
+
+COMMANDS:
+  summarize    Summarize a text file or a benchmark document
+               --input <file> | --benchmark <set> [--doc N]
+               [--solver cobi|tabu|sa|brute|exact|random] [--iterations N]
+               [--summary-len M] [--precision fp|4bit..8bit|int14]
+               [--rounding deterministic|stoch5050|stochastic] [--hlo]
+  experiment   Regenerate a paper figure/table
+               <fig1|fig2|fig3|fig5|fig6|fig7|fig8|table1|supp-optima|all>
+               [--full] [--out <file.md>] [--csv]
+  gen-corpus   Write a benchmark set as text files
+               --set <name> --out <dir>
+  solve        Solve one benchmark document's Ising instance and print
+               the normalized objective per solver
+               [--benchmark <set>] [--doc N] [--iterations N]
+  serve        Start the edge summarization service
+               demo mode: [--requests N] [--workers N] [--solver ...]
+               network mode: --port <u16> (line protocol; text then
+               a '::EOF::' line -> 'OK <m>' + m summary lines)
+  doctor       Check artifacts, PJRT runtime and device calibration
+  help         Show this message
+
+CONFIG:
+  --config <file>   TOML config (default: cobi-es.toml if present)
+  Seeds, device constants and timing models live in the config; every
+  run is reproducible from (config, seed).
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = parse("experiment fig1 --full --out report.md");
+        assert_eq!(a.positional, vec!["experiment", "fig1"]);
+        assert!(a.get_bool("full"));
+        assert_eq!(a.get("out"), Some("report.md"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("summarize --iterations=25 --solver=cobi");
+        assert_eq!(a.get_usize("iterations", 1).unwrap(), 25);
+        assert_eq!(a.get("solver"), Some("cobi"));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(vec!["--solver".to_string()]).is_err());
+        assert!(
+            Args::parse(vec!["--solver".to_string(), "--iterations".to_string()]).is_err()
+        );
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = parse("x --n 5 --r 2.5");
+        assert_eq!(a.get_usize("n", 0).unwrap(), 5);
+        assert_eq!(a.get_f64("r", 0.0).unwrap(), 2.5);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        assert!(parse("x --n five").get_usize("n", 0).is_err());
+    }
+}

@@ -1,0 +1,370 @@
+//! The COBI device model (see module docs in cobi/mod.rs).
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::CobiConfig;
+use crate::ising::Ising;
+use crate::runtime::artifacts::{Arg, ArtifactRuntime, Executable};
+use crate::solvers::oscillator::{anneal, OscillatorConfig};
+use crate::solvers::{IsingSolver, SolveResult};
+use crate::util::rng::Pcg32;
+
+/// Padded problem size the anneal artifact was compiled for
+/// (python/compile/model.py: N_SPINS).
+pub const PADDED_SPINS: usize = 64;
+/// Anneal steps baked into the artifact (model.ANNEAL_STEPS).
+pub const ANNEAL_STEPS: usize = 256;
+/// Instances per batched dispatch (model.ANNEAL_BATCH).
+pub const ANNEAL_BATCH: usize = 8;
+
+/// Solve backend.
+pub enum CobiBackend {
+    /// Pure-Rust oscillator integrator.
+    Native,
+    /// PJRT execution of anneal.hlo.txt (+ anneal_batch.hlo.txt when
+    /// available, for amortized multi-instance dispatch).
+    Hlo {
+        single: Arc<Executable>,
+        batch: Option<Arc<Executable>>,
+    },
+}
+
+/// Accounting: modeled hardware cost of all solves so far.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CobiStats {
+    pub solves: u64,
+    /// Modeled device time (s): solves * solve_time_s.
+    pub device_time_s: f64,
+    /// Modeled device energy (J): device_time_s * power_w.
+    pub device_energy_j: f64,
+    /// Measured wall-clock spent in the simulator (s) — reported next to
+    /// the model for honesty (DESIGN.md decision #6).
+    pub wall_time_s: f64,
+}
+
+pub struct CobiDevice {
+    pub cfg: CobiConfig,
+    backend: CobiBackend,
+    rng: Pcg32,
+    stats: CobiStats,
+}
+
+impl CobiDevice {
+    /// Native-backend device.
+    pub fn native(cfg: CobiConfig, seed: u64) -> Self {
+        Self {
+            cfg,
+            backend: CobiBackend::Native,
+            rng: Pcg32::new(seed, 0xC0B1),
+            stats: CobiStats::default(),
+        }
+    }
+
+    /// HLO-backend device over an artifact runtime.
+    pub fn hlo(cfg: CobiConfig, seed: u64, rt: &ArtifactRuntime) -> Result<Self> {
+        let exe = rt.executable("anneal").context("loading anneal artifact")?;
+        // validate artifact shapes against this module's constants
+        let dims: Vec<Vec<usize>> = exe.spec.inputs.iter().map(|s| s.dims.clone()).collect();
+        anyhow::ensure!(
+            dims == vec![
+                vec![PADDED_SPINS, PADDED_SPINS],
+                vec![PADDED_SPINS],
+                vec![PADDED_SPINS],
+                vec![ANNEAL_STEPS, PADDED_SPINS],
+                vec![3],
+            ],
+            "anneal artifact shapes {dims:?} do not match device constants"
+        );
+        // batched dispatch is optional (older artifact sets lack it)
+        let batch = rt.executable("anneal_batch").ok();
+        Ok(Self {
+            cfg,
+            backend: CobiBackend::Hlo {
+                single: exe,
+                batch,
+            },
+            rng: Pcg32::new(seed, 0xC0B1),
+            stats: CobiStats::default(),
+        })
+    }
+
+    /// Build from config: backend selected by cfg.backend ("native"/"hlo").
+    pub fn from_config(cfg: &CobiConfig, seed: u64, rt: Option<&ArtifactRuntime>) -> Result<Self> {
+        match cfg.backend.as_str() {
+            "native" => Ok(Self::native(cfg.clone(), seed)),
+            "hlo" => {
+                let rt = rt.context("hlo backend requires an artifact runtime")?;
+                Self::hlo(cfg.clone(), seed, rt)
+            }
+            other => bail!("unknown cobi backend '{other}'"),
+        }
+    }
+
+    pub fn stats(&self) -> CobiStats {
+        self.stats
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.stats = CobiStats::default();
+    }
+
+    /// Validate that an instance is programmable on the chip: spin count
+    /// within the array, all coefficients integers in the DAC range.
+    pub fn validate(&self, ising: &Ising) -> Result<()> {
+        if ising.n > self.cfg.max_spins {
+            bail!(
+                "instance has {} spins; COBI array exposes {}",
+                ising.n,
+                self.cfg.max_spins
+            );
+        }
+        let r = self.cfg.weight_range as f32;
+        for (idx, &v) in ising.h.iter().chain(ising.j.iter()).enumerate() {
+            if v.fract() != 0.0 || v.abs() > r {
+                bail!(
+                    "coefficient {idx} = {v} not programmable \
+                     (integer range [-{r}, +{r}]); quantize first"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    fn oscillator_config(&self) -> OscillatorConfig {
+        OscillatorConfig {
+            steps: ANNEAL_STEPS,
+            k_coupling: self.cfg.k_coupling,
+            k_shil_max: self.cfg.k_shil_max,
+            dt: self.cfg.dt,
+            noise_amp: self.cfg.noise_amp,
+        }
+    }
+
+    /// Program the array and run one solve. Validates, pads to the
+    /// artifact size, draws phase0/noise, runs the backend, crops the
+    /// result and charges the timing model.
+    pub fn program_and_solve(&mut self, ising: &Ising) -> Result<SolveResult> {
+        self.validate(ising)?;
+        let t0 = std::time::Instant::now();
+
+        let spins: Vec<i8> = match &self.backend {
+            CobiBackend::Native => {
+                // §Perf: the native integrator runs UNPADDED — padding
+                // spins carry zero coupling and cannot influence the real
+                // ones, so simulating them is pure waste ((64/n)^2 extra
+                // mat-vec work). Only the HLO artifact needs the fixed
+                // 64-spin shape.
+                let n = ising.n;
+                let mut phase0 = vec![0.0f32; n];
+                for p in phase0.iter_mut() {
+                    *p = self
+                        .rng
+                        .range_f32(-std::f32::consts::PI, std::f32::consts::PI);
+                }
+                let mut noise = vec![0.0f32; ANNEAL_STEPS * n];
+                self.rng.fill_normal(&mut noise, self.cfg.noise_amp);
+                anneal(ising, &self.oscillator_config(), &phase0, &noise)
+            }
+            CobiBackend::Hlo { single, .. } => {
+                let padded = ising.padded(PADDED_SPINS);
+                let mut phase0 = vec![0.0f32; PADDED_SPINS];
+                for p in phase0.iter_mut() {
+                    *p = self
+                        .rng
+                        .range_f32(-std::f32::consts::PI, std::f32::consts::PI);
+                }
+                let mut noise = vec![0.0f32; ANNEAL_STEPS * PADDED_SPINS];
+                self.rng.fill_normal(&mut noise, self.cfg.noise_amp);
+                let kparams = [self.cfg.k_coupling, self.cfg.k_shil_max, self.cfg.dt];
+                let outs = single.run(&[
+                    Arg::F32(&padded.j),
+                    Arg::F32(&padded.h),
+                    Arg::F32(&phase0),
+                    Arg::F32(&noise),
+                    Arg::F32(&kparams),
+                ])?;
+                outs[0][..ising.n]
+                    .iter()
+                    .map(|&v| if v >= 0.0 { 1i8 } else { -1i8 })
+                    .collect()
+            }
+        };
+        let energy = ising.energy(&spins);
+
+        self.stats.solves += 1;
+        self.stats.device_time_s += self.cfg.solve_time_s;
+        self.stats.device_energy_j += self.cfg.solve_time_s * self.cfg.power_w;
+        self.stats.wall_time_s += t0.elapsed().as_secs_f64();
+        Ok(SolveResult { spins, energy })
+    }
+}
+
+impl CobiDevice {
+    /// Batched dispatch through the `anneal_batch` artifact: all instances
+    /// solved in ONE PJRT call (chunks of ANNEAL_BATCH; tail chunks padded
+    /// with instance copies and discarded). Falls back to sequential
+    /// solves on the native backend or when the artifact is absent.
+    pub fn program_and_solve_batch(&mut self, instances: &[&Ising]) -> Result<Vec<SolveResult>> {
+        let batch_exe = match &self.backend {
+            CobiBackend::Hlo {
+                batch: Some(exe), ..
+            } => exe.clone(),
+            _ => {
+                return instances
+                    .iter()
+                    .map(|i| self.program_and_solve(i))
+                    .collect();
+            }
+        };
+        for inst in instances {
+            self.validate(inst)?;
+        }
+        let kparams = [self.cfg.k_coupling, self.cfg.k_shil_max, self.cfg.dt];
+        let mut results = Vec::with_capacity(instances.len());
+        for chunk in instances.chunks(ANNEAL_BATCH) {
+            let t0 = std::time::Instant::now();
+            let nn = PADDED_SPINS * PADDED_SPINS;
+            let sn = ANNEAL_STEPS * PADDED_SPINS;
+            let mut j = vec![0.0f32; ANNEAL_BATCH * nn];
+            let mut h = vec![0.0f32; ANNEAL_BATCH * PADDED_SPINS];
+            let mut phase0 = vec![0.0f32; ANNEAL_BATCH * PADDED_SPINS];
+            let mut noise = vec![0.0f32; ANNEAL_BATCH * sn];
+            for slot in 0..ANNEAL_BATCH {
+                // tail slots replicate the last real instance (discarded)
+                let inst = chunk[slot.min(chunk.len() - 1)];
+                let padded = inst.padded(PADDED_SPINS);
+                j[slot * nn..(slot + 1) * nn].copy_from_slice(&padded.j);
+                h[slot * PADDED_SPINS..(slot + 1) * PADDED_SPINS].copy_from_slice(&padded.h);
+                for p in phase0[slot * PADDED_SPINS..(slot + 1) * PADDED_SPINS].iter_mut() {
+                    *p = self
+                        .rng
+                        .range_f32(-std::f32::consts::PI, std::f32::consts::PI);
+                }
+                self.rng
+                    .fill_normal(&mut noise[slot * sn..(slot + 1) * sn], self.cfg.noise_amp);
+            }
+            let outs = batch_exe.run(&[
+                Arg::F32(&j),
+                Arg::F32(&h),
+                Arg::F32(&phase0),
+                Arg::F32(&noise),
+                Arg::F32(&kparams),
+            ])?;
+            for (slot, inst) in chunk.iter().enumerate() {
+                let row = &outs[0][slot * PADDED_SPINS..slot * PADDED_SPINS + inst.n];
+                let spins: Vec<i8> = row
+                    .iter()
+                    .map(|&v| if v >= 0.0 { 1i8 } else { -1i8 })
+                    .collect();
+                let energy = inst.energy(&spins);
+                results.push(SolveResult { spins, energy });
+                self.stats.solves += 1;
+                self.stats.device_time_s += self.cfg.solve_time_s;
+                self.stats.device_energy_j += self.cfg.solve_time_s * self.cfg.power_w;
+            }
+            self.stats.wall_time_s += t0.elapsed().as_secs_f64();
+        }
+        Ok(results)
+    }
+}
+
+impl IsingSolver for CobiDevice {
+    fn name(&self) -> &'static str {
+        "cobi"
+    }
+
+    fn solve(&mut self, ising: &Ising) -> SolveResult {
+        self.program_and_solve(ising)
+            .expect("instance not programmable on COBI (validate/quantize first)")
+    }
+
+    fn solve_batch(&mut self, instances: &[&Ising]) -> Vec<SolveResult> {
+        self.program_and_solve_batch(instances)
+            .expect("batch not programmable on COBI (validate/quantize first)")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{quantize, Precision, Rounding};
+
+    fn quantized_glass(seed: u64, n: usize) -> Ising {
+        let mut rng = Pcg32::seeded(seed);
+        let mut ising = Ising::new(n);
+        for i in 0..n {
+            ising.h[i] = rng.range_f32(-3.0, 3.0);
+            for j in (i + 1)..n {
+                ising.set_pair(i, j, rng.range_f32(-1.0, 1.0));
+            }
+        }
+        quantize(&ising, Precision::CobiInt, Rounding::Deterministic, &mut rng)
+    }
+
+    #[test]
+    fn rejects_oversized_instances() {
+        let dev_cfg = CobiConfig::default();
+        let dev = CobiDevice::native(dev_cfg, 1);
+        let ising = Ising::new(60); // > 59 spins
+        assert!(dev.validate(&ising).is_err());
+    }
+
+    #[test]
+    fn rejects_unquantized_instances() {
+        let dev = CobiDevice::native(CobiConfig::default(), 1);
+        let mut ising = Ising::new(4);
+        ising.h[0] = 0.5; // fractional
+        assert!(dev.validate(&ising).is_err());
+        let mut ising2 = Ising::new(4);
+        ising2.h[0] = 15.0; // out of range
+        assert!(dev.validate(&ising2).is_err());
+    }
+
+    #[test]
+    fn solves_and_accounts() {
+        let ising = quantized_glass(3, 12);
+        let mut dev = CobiDevice::native(CobiConfig::default(), 7);
+        let r = dev.program_and_solve(&ising).unwrap();
+        assert_eq!(r.spins.len(), 12);
+        assert!((ising.energy(&r.spins) - r.energy).abs() < 1e-6);
+        let s = dev.stats();
+        assert_eq!(s.solves, 1);
+        assert!((s.device_time_s - 200e-6).abs() < 1e-12);
+        assert!((s.device_energy_j - 200e-6 * 25e-3).abs() < 1e-15);
+        assert!(s.wall_time_s > 0.0);
+    }
+
+    #[test]
+    fn run_to_run_variability() {
+        // consecutive solves on the same instance must explore different
+        // configurations (phase noise) at least occasionally
+        let ising = quantized_glass(5, 16);
+        let mut dev = CobiDevice::native(CobiConfig::default(), 11);
+        let mut distinct = std::collections::HashSet::new();
+        for _ in 0..8 {
+            let r = dev.program_and_solve(&ising).unwrap();
+            distinct.insert(r.spins);
+        }
+        assert!(distinct.len() > 1, "device behaved deterministically");
+    }
+
+    #[test]
+    fn finds_good_states_on_quantized_instances() {
+        // COBI is stochastic and not guaranteed optimal (that is the whole
+        // point of iterative refinement); but best-of-10 on a 14-spin
+        // integer glass must land within 10% of the ground-state energy
+        // and far below a random configuration.
+        use crate::solvers::exact::ising_ground_exhaustive;
+        let ising = quantized_glass(9, 14);
+        let (ge, _, _) = ising_ground_exhaustive(&ising);
+        let mut dev = CobiDevice::native(CobiConfig::default(), 13);
+        let best = (0..10)
+            .map(|_| dev.program_and_solve(&ising).unwrap().energy)
+            .fold(f64::INFINITY, f64::min);
+        let gap = (best - ge) / ge.abs();
+        assert!(gap < 0.10, "best over 10 solves {best} vs ground {ge} (gap {gap:.3})");
+        assert!(best < 0.0);
+    }
+}

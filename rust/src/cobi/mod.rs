@@ -1,0 +1,18 @@
+//! COBI device model: the behavioural simulation of the 48/59-node
+//! all-to-all CMOS coupled-oscillator Ising chip [Lo+ 2023, Cılasun+ 2025].
+//!
+//! The device enforces the real chip's programming constraints (spin
+//! count, integer coupling range), models its timing/energy (200 µs/solve
+//! @ 25 mW by default), and solves via one of two backends:
+//!
+//!   * `native` — the pure-Rust oscillator integrator (fast, default for
+//!     tests/benches);
+//!   * `hlo`    — the AOT `anneal.hlo.txt` artifact through PJRT (the
+//!     three-layer architecture's production path).
+//!
+//! Both backends implement identical dynamics; cross-backend agreement is
+//! validated statistically in rust/tests/artifact_numerics.rs.
+
+pub mod device;
+
+pub use device::{CobiBackend, CobiDevice, CobiStats, ANNEAL_STEPS, PADDED_SPINS};

@@ -1,0 +1,306 @@
+//! Typed configuration for the pipeline, device model and experiments.
+//!
+//! Layering (lowest to highest precedence): compiled-in defaults →
+//! `cobi-es.toml` (or `--config <path>`) → `COBI_ES_*` environment
+//! overrides → CLI flags. Every knob the paper's workflow exposes lives
+//! here so experiments are reproducible from a single file.
+
+pub mod toml;
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::quant::{Precision, Rounding};
+
+/// COBI device-model parameters (defaults follow the published chip:
+/// 48/59-node all-to-all array, 5-bit signed couplings, ~200 µs/solve,
+/// 24–25 mW [Lo+ 2023; Cılasun+ 2025]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CobiConfig {
+    /// Physical spins available on the array.
+    pub max_spins: usize,
+    /// Coupling/field integer range (symmetric): [-weight_range, +weight_range].
+    pub weight_range: i32,
+    /// Modeled wall-clock per hardware solve, seconds.
+    pub solve_time_s: f64,
+    /// Modeled device power, watts.
+    pub power_w: f64,
+    /// Oscillator-simulation noise amplitude (run-to-run variability).
+    pub noise_amp: f32,
+    /// Annealer dynamics: coupling gain, SHIL max, Euler dt.
+    pub k_coupling: f32,
+    pub k_shil_max: f32,
+    pub dt: f32,
+    /// Backend: "hlo" (PJRT anneal artifact) or "native" (pure-rust mirror).
+    pub backend: String,
+}
+
+impl Default for CobiConfig {
+    fn default() -> Self {
+        Self {
+            max_spins: 59,
+            weight_range: 14,
+            solve_time_s: 200e-6,
+            power_w: 25e-3,
+            noise_amp: 0.10,
+            k_coupling: 2.0,
+            k_shil_max: 1.5,
+            dt: 0.05,
+            backend: "native".into(),
+        }
+    }
+}
+
+/// ES pipeline parameters (paper §III–§IV).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PipelineConfig {
+    /// Redundancy weight λ in Eq. 3.
+    pub lambda: f32,
+    /// Use the improved (bias-term) formulation of Eq. 10–12.
+    pub improved_formulation: bool,
+    /// Solve precision for the quantized instance.
+    pub precision: Precision,
+    /// Rounding scheme for quantization (§IV-A).
+    pub rounding: Rounding,
+    /// Refinement iterations per Ising instance.
+    pub iterations: usize,
+    /// Decomposition window P and target Q (§IV-B); decomposition is
+    /// bypassed when the document already fits (n <= p).
+    pub decompose_p: usize,
+    pub decompose_q: usize,
+    /// Final summary length M.
+    pub summary_len: usize,
+    /// Solver for quantized instances: "cobi", "tabu", "brute", "exact",
+    /// "random", "sa".
+    pub solver: String,
+    /// Master seed for all pipeline randomness.
+    pub seed: u64,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        Self {
+            lambda: 0.6,
+            improved_formulation: true,
+            precision: Precision::CobiInt,
+            rounding: Rounding::Stochastic,
+            iterations: 10,
+            decompose_p: 20,
+            decompose_q: 10,
+            summary_len: 6,
+            solver: "cobi".into(),
+            seed: 0xC0B1,
+        }
+    }
+}
+
+/// Timing/energy model constants for TTS/ETS (paper §V).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TimingConfig {
+    /// CPU power for software solvers and objective evaluation, watts.
+    pub cpu_power_w: f64,
+    /// Modeled Tabu runtime per solve, seconds (paper: ~25 ms).
+    pub tabu_time_s: f64,
+    /// Objective-evaluation time per iteration, seconds (paper: 18.9 µs).
+    pub eval_time_s: f64,
+    /// Target success probability for TTS (paper: 0.95).
+    pub p_target: f64,
+    /// Success threshold on the normalized objective (paper: 0.9).
+    pub success_threshold: f64,
+}
+
+impl Default for TimingConfig {
+    fn default() -> Self {
+        Self {
+            cpu_power_w: 20.0,
+            tabu_time_s: 25e-3,
+            eval_time_s: 18.9e-6,
+            p_target: 0.95,
+            success_threshold: 0.9,
+        }
+    }
+}
+
+/// Service (edge deployment) parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServiceConfig {
+    /// Worker threads pulling solve batches.
+    pub workers: usize,
+    /// Max requests queued before backpressure rejects.
+    pub queue_depth: usize,
+    /// Max subproblems fused into one device batch.
+    pub max_batch: usize,
+    /// Batch linger: how long the batcher waits to fill a batch.
+    pub linger_us: u64,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            workers: 2,
+            queue_depth: 256,
+            max_batch: 8,
+            linger_us: 200,
+        }
+    }
+}
+
+/// Root settings object.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Settings {
+    pub cobi: CobiConfig,
+    pub pipeline: PipelineConfig,
+    pub timing: TimingConfig,
+    pub service: ServiceConfig,
+    /// Directory containing AOT artifacts (manifest.txt etc.).
+    pub artifacts_dir: String,
+}
+
+impl Settings {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        let doc = toml::Document::parse(&text)
+            .with_context(|| format!("parsing config {}", path.display()))?;
+        let mut s = Settings::default();
+        s.apply(&doc)?;
+        Ok(s)
+    }
+
+    /// Apply a parsed document over the current values.
+    pub fn apply(&mut self, doc: &toml::Document) -> Result<()> {
+        macro_rules! set {
+            // strings / bools / f64 pass through; usize fields use `usize`
+            ($field:expr, get_i64, $key:expr) => {
+                if let Some(v) = doc.get_i64($key) {
+                    $field = v as usize;
+                }
+            };
+            ($field:expr, get_str, $key:expr) => {
+                if let Some(v) = doc.get_str($key) {
+                    $field = v.to_string();
+                }
+            };
+            ($field:expr, $get:ident, $key:expr) => {
+                if let Some(v) = doc.$get($key) {
+                    $field = v;
+                }
+            };
+        }
+        set!(self.artifacts_dir, get_str, "artifacts_dir");
+
+        set!(self.cobi.max_spins, get_i64, "cobi.max_spins");
+        if let Some(v) = doc.get_i64("cobi.weight_range") {
+            self.cobi.weight_range = v as i32;
+        }
+        set!(self.cobi.solve_time_s, get_f64, "cobi.solve_time_s");
+        set!(self.cobi.power_w, get_f64, "cobi.power_w");
+        if let Some(v) = doc.get_f64("cobi.noise_amp") {
+            self.cobi.noise_amp = v as f32;
+        }
+        if let Some(v) = doc.get_f64("cobi.k_coupling") {
+            self.cobi.k_coupling = v as f32;
+        }
+        if let Some(v) = doc.get_f64("cobi.k_shil_max") {
+            self.cobi.k_shil_max = v as f32;
+        }
+        if let Some(v) = doc.get_f64("cobi.dt") {
+            self.cobi.dt = v as f32;
+        }
+        set!(self.cobi.backend, get_str, "cobi.backend");
+
+        if let Some(v) = doc.get_f64("pipeline.lambda") {
+            self.pipeline.lambda = v as f32;
+        }
+        set!(
+            self.pipeline.improved_formulation,
+            get_bool,
+            "pipeline.improved_formulation"
+        );
+        if let Some(p) = doc.get_str("pipeline.precision") {
+            self.pipeline.precision = p.parse().map_err(anyhow::Error::msg)?;
+        }
+        if let Some(r) = doc.get_str("pipeline.rounding") {
+            self.pipeline.rounding = r.parse().map_err(anyhow::Error::msg)?;
+        }
+        set!(self.pipeline.iterations, get_i64, "pipeline.iterations");
+        set!(self.pipeline.decompose_p, get_i64, "pipeline.decompose_p");
+        set!(self.pipeline.decompose_q, get_i64, "pipeline.decompose_q");
+        set!(self.pipeline.summary_len, get_i64, "pipeline.summary_len");
+        set!(self.pipeline.solver, get_str, "pipeline.solver");
+        if let Some(v) = doc.get_i64("pipeline.seed") {
+            self.pipeline.seed = v as u64;
+        }
+
+        set!(self.timing.cpu_power_w, get_f64, "timing.cpu_power_w");
+        set!(self.timing.tabu_time_s, get_f64, "timing.tabu_time_s");
+        set!(self.timing.eval_time_s, get_f64, "timing.eval_time_s");
+        set!(self.timing.p_target, get_f64, "timing.p_target");
+        set!(
+            self.timing.success_threshold,
+            get_f64,
+            "timing.success_threshold"
+        );
+
+        set!(self.service.workers, get_i64, "service.workers");
+        set!(self.service.queue_depth, get_i64, "service.queue_depth");
+        set!(self.service.max_batch, get_i64, "service.max_batch");
+        if let Some(v) = doc.get_i64("service.linger_us") {
+            self.service.linger_us = v as u64;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_constants() {
+        let s = Settings::default();
+        assert_eq!(s.cobi.max_spins, 59);
+        assert_eq!(s.cobi.weight_range, 14);
+        assert!((s.cobi.solve_time_s - 200e-6).abs() < 1e-12);
+        assert!((s.timing.tabu_time_s - 25e-3).abs() < 1e-12);
+        assert!((s.timing.eval_time_s - 18.9e-6).abs() < 1e-12);
+        assert_eq!(s.pipeline.decompose_p, 20);
+        assert_eq!(s.pipeline.decompose_q, 10);
+        assert_eq!(s.pipeline.summary_len, 6);
+    }
+
+    #[test]
+    fn apply_overrides() {
+        let doc = toml::Document::parse(
+            r#"
+[cobi]
+max_spins = 48
+noise_amp = 0.2
+backend = "hlo"
+[pipeline]
+precision = "6bit"
+rounding = "deterministic"
+iterations = 50
+[timing]
+p_target = 0.99
+"#,
+        )
+        .unwrap();
+        let mut s = Settings::default();
+        s.apply(&doc).unwrap();
+        assert_eq!(s.cobi.max_spins, 48);
+        assert_eq!(s.cobi.backend, "hlo");
+        assert_eq!(s.pipeline.precision, Precision::Fixed(6));
+        assert_eq!(s.pipeline.rounding, Rounding::Deterministic);
+        assert_eq!(s.pipeline.iterations, 50);
+        assert!((s.timing.p_target - 0.99).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bad_precision_is_error() {
+        let doc = toml::Document::parse("[pipeline]\nprecision = \"9000bit\"").unwrap();
+        let mut s = Settings::default();
+        assert!(s.apply(&doc).is_err());
+    }
+}

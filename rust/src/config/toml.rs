@@ -1,0 +1,327 @@
+//! Minimal TOML-subset parser (config substrate; no `toml`/`serde` crates
+//! in the offline vendor set — see Cargo.toml note).
+//!
+//! Supported: `[section]` / `[section.sub]` headers, `key = value` pairs
+//! with string / integer / float / boolean / homogeneous-array values,
+//! `#` comments, blank lines. This covers every config file the project
+//! ships; exotic TOML (dates, inline tables, multi-line strings) is
+//! rejected with a line-numbered error.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Str(s) => write!(f, "\"{s}\""),
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Float(x) => write!(f, "{x}"),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::Array(v) => {
+                write!(f, "[")?;
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{x}")?;
+                }
+                write!(f, "]")
+            }
+        }
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("toml parse error at line {line}: {msg}")]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+/// Parsed document: dotted-path key -> value ("section.key").
+#[derive(Debug, Default, Clone)]
+pub struct Document {
+    pub entries: BTreeMap<String, Value>,
+}
+
+impl Document {
+    pub fn parse(input: &str) -> Result<Self, ParseError> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (idx, raw) in input.lines().enumerate() {
+            let line_no = idx + 1;
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or_else(|| ParseError {
+                    line: line_no,
+                    msg: "unterminated section header".into(),
+                })?;
+                let name = name.trim();
+                if name.is_empty() || !name.chars().all(is_key_char_or_dot) {
+                    return Err(ParseError {
+                        line: line_no,
+                        msg: format!("bad section name '{name}'"),
+                    });
+                }
+                section = name.to_string();
+                continue;
+            }
+            let eq = line.find('=').ok_or_else(|| ParseError {
+                line: line_no,
+                msg: "expected 'key = value'".into(),
+            })?;
+            let key = line[..eq].trim();
+            if key.is_empty() || !key.chars().all(is_key_char) {
+                return Err(ParseError {
+                    line: line_no,
+                    msg: format!("bad key '{key}'"),
+                });
+            }
+            let value = parse_value(line[eq + 1..].trim(), line_no)?;
+            let path = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            entries.insert(path, value);
+        }
+        Ok(Self { entries })
+    }
+
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        self.entries.get(path)
+    }
+
+    pub fn get_str(&self, path: &str) -> Option<&str> {
+        self.get(path).and_then(Value::as_str)
+    }
+    pub fn get_i64(&self, path: &str) -> Option<i64> {
+        self.get(path).and_then(Value::as_i64)
+    }
+    pub fn get_f64(&self, path: &str) -> Option<f64> {
+        self.get(path).and_then(Value::as_f64)
+    }
+    pub fn get_bool(&self, path: &str) -> Option<bool> {
+        self.get(path).and_then(Value::as_bool)
+    }
+
+    /// Keys under a section prefix (e.g. "cobi").
+    pub fn section_keys<'a>(&'a self, prefix: &'a str) -> impl Iterator<Item = &'a str> {
+        let want = format!("{prefix}.");
+        self.entries
+            .keys()
+            .filter(move |k| k.starts_with(&want))
+            .map(|k| k.as_str())
+    }
+}
+
+fn is_key_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_' || c == '-'
+}
+
+fn is_key_char_or_dot(c: char) -> bool {
+    is_key_char(c) || c == '.'
+}
+
+/// Strip a `#` comment, respecting string literals.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, line: usize) -> Result<Value, ParseError> {
+    let err = |msg: String| ParseError { line, msg };
+    if s.is_empty() {
+        return Err(err("missing value".into()));
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| err("unterminated string".into()))?;
+        if inner.contains('"') {
+            return Err(err("embedded quote in string (escapes unsupported)".into()));
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| err("unterminated array".into()))?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(vec![]));
+        }
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            items.push(parse_value(part.trim(), line)?);
+        }
+        return Ok(Value::Array(items));
+    }
+    // numbers: int if no '.', 'e' or 'E'
+    let numeric = s.replace('_', "");
+    if numeric.contains('.') || numeric.contains('e') || numeric.contains('E') {
+        numeric
+            .parse::<f64>()
+            .map(Value::Float)
+            .map_err(|_| err(format!("bad float '{s}'")))
+    } else {
+        numeric
+            .parse::<i64>()
+            .map(Value::Int)
+            .map_err(|_| err(format!("bad value '{s}'")))
+    }
+}
+
+/// Split an array body on commas outside string literals.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let doc = Document::parse(
+            r#"
+# comment
+title = "cobi"
+[cobi]
+spins = 59            # trailing comment
+weight_min = -14
+power_mw = 25.0
+enabled = true
+[pipeline.decompose]
+p = 20
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("title"), Some("cobi"));
+        assert_eq!(doc.get_i64("cobi.spins"), Some(59));
+        assert_eq!(doc.get_i64("cobi.weight_min"), Some(-14));
+        assert_eq!(doc.get_f64("cobi.power_mw"), Some(25.0));
+        assert_eq!(doc.get_bool("cobi.enabled"), Some(true));
+        assert_eq!(doc.get_i64("pipeline.decompose.p"), Some(20));
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let doc = Document::parse("bits = [4, 5, 6]\nnames = [\"a\", \"b\"]").unwrap();
+        let bits: Vec<i64> = doc
+            .get("bits")
+            .unwrap()
+            .as_array()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_i64().unwrap())
+            .collect();
+        assert_eq!(bits, vec![4, 5, 6]);
+        assert_eq!(
+            doc.get("names").unwrap().as_array().unwrap()[1].as_str(),
+            Some("b")
+        );
+    }
+
+    #[test]
+    fn hash_inside_string_not_comment() {
+        let doc = Document::parse("s = \"a#b\"").unwrap();
+        assert_eq!(doc.get_str("s"), Some("a#b"));
+    }
+
+    #[test]
+    fn int_as_f64_coerces() {
+        let doc = Document::parse("x = 3").unwrap();
+        assert_eq!(doc.get_f64("x"), Some(3.0));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = Document::parse("ok = 1\nbroken").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = Document::parse("[unterminated").unwrap_err();
+        assert_eq!(e.line, 1);
+        let e = Document::parse("x = \"oops").unwrap_err();
+        assert_eq!(e.line, 1);
+    }
+
+    #[test]
+    fn section_keys_iterates() {
+        let doc = Document::parse("[a]\nx = 1\ny = 2\n[b]\nz = 3").unwrap();
+        let keys: Vec<&str> = doc.section_keys("a").collect();
+        assert_eq!(keys, vec!["a.x", "a.y"]);
+    }
+}

@@ -1,0 +1,48 @@
+//! Corpus substrate: document types + synthetic benchmark generation.
+//!
+//! The paper evaluates on CNN/DailyMail (20- and 50-sentence paragraphs)
+//! and XSum (100-sentence paragraphs). Those datasets are not available in
+//! this offline environment, so `synthetic` generates topic-structured
+//! news-style documents whose (mu, beta) geometry matches what the
+//! pipeline actually consumes (DESIGN.md §Substitutions), and `benchmark`
+//! pins the seeded benchmark sets used by every experiment.
+
+pub mod benchmark;
+pub mod synthetic;
+
+pub use benchmark::{benchmark_set, BenchmarkSet};
+pub use synthetic::{Generator, GeneratorConfig};
+
+/// A document: ordered sentences plus a construction-time reference
+/// summary (indices of the generator's designated key-fact sentences),
+/// used for ROUGE-style quality reporting.
+#[derive(Debug, Clone)]
+pub struct Document {
+    pub id: String,
+    pub sentences: Vec<String>,
+    /// Indices (into `sentences`) of the reference key-fact sentences.
+    pub reference: Vec<usize>,
+}
+
+impl Document {
+    pub fn text(&self) -> String {
+        self.sentences.join(" ")
+    }
+
+    pub fn len(&self) -> usize {
+        self.sentences.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sentences.is_empty()
+    }
+
+    /// Build a document directly from raw text (user-supplied input path).
+    pub fn from_text(id: &str, text: &str) -> Self {
+        Self {
+            id: id.to_string(),
+            sentences: crate::text::split_sentences(text),
+            reference: Vec::new(),
+        }
+    }
+}

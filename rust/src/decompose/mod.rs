@@ -1,0 +1,284 @@
+//! Decomposition workflow (paper §IV-B, Fig. 4).
+//!
+//! A document of N sentences is reduced in stages: while more than P
+//! sentences remain, select the next window of P consecutive sentences
+//! (resuming after the previous window, wrapping to the start), summarize
+//! it to Q sentences with the Ising solver, and REPLACE the window with
+//! its summary. When at most P sentences remain, a final solve selects the
+//! M-sentence output.
+//!
+//! The scheduler is generic over the subproblem solver (a closure from
+//! a window of original-sentence indices to the chosen subset), so Tabu,
+//! COBI, brute force and random all run through identical decomposition
+//! logic — exactly how the paper compares them.
+
+use anyhow::{ensure, Result};
+
+/// Decomposition parameters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DecomposeParams {
+    /// Window size P.
+    pub p: usize,
+    /// Intermediate summary length Q.
+    pub q: usize,
+    /// Final summary length M.
+    pub m: usize,
+}
+
+impl DecomposeParams {
+    pub fn paper_default() -> Self {
+        Self { p: 20, q: 10, m: 6 }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.q >= 1 && self.p >= 2 && self.m >= 1, "degenerate P/Q/M");
+        ensure!(
+            self.q < self.p,
+            "Q = {} must shrink the window P = {}",
+            self.q,
+            self.p
+        );
+        ensure!(self.m <= self.p, "final M = {} exceeds window P = {}", self.m, self.p);
+        Ok(())
+    }
+}
+
+/// One solved subproblem, for tracing/accounting.
+#[derive(Debug, Clone)]
+pub struct Stage {
+    /// Original-document indices offered to the solver.
+    pub window: Vec<usize>,
+    /// Subset chosen (original indices, subset of `window`).
+    pub chosen: Vec<usize>,
+    /// True for the final M-selection stage.
+    pub is_final: bool,
+}
+
+/// Full decomposition trace.
+#[derive(Debug, Clone)]
+pub struct DecompositionResult {
+    /// Final selected original-document indices, ascending.
+    pub selected: Vec<usize>,
+    pub stages: Vec<Stage>,
+}
+
+impl DecompositionResult {
+    /// Total Ising solves performed (= stages).
+    pub fn solves(&self) -> usize {
+        self.stages.len()
+    }
+}
+
+/// Number of Ising subproblems the workflow will solve for a document of
+/// `n` sentences. Per Fig. 4, the FIRST window solve is unconditional
+/// whenever n >= P (a 20-sentence document with P=20 still decomposes
+/// 20 -> 10 -> 6: "solving at least two Ising subproblems for 20-sentence
+/// benchmarks"); subsequent windows run while more than P sentences
+/// remain; one final M-selection always closes the workflow.
+pub fn stage_count(n: usize, params: &DecomposeParams) -> usize {
+    let mut len = n;
+    let mut stages = 0;
+    while (stages == 0 && len >= params.p) || len > params.p {
+        len = len - params.p + params.q;
+        stages += 1;
+    }
+    stages + 1
+}
+
+/// Run the decomposition. `solve_window(window_indices, target_len)` must
+/// return `target_len` distinct positions INTO the window slice.
+pub fn decompose<F>(n: usize, params: &DecomposeParams, mut solve_window: F) -> Result<DecompositionResult>
+where
+    F: FnMut(&[usize], usize) -> Result<Vec<usize>>,
+{
+    params.validate()?;
+    ensure!(n >= params.m, "document of {n} sentences cannot fill M={}", params.m);
+
+    // active list of original indices, in document order
+    let mut active: Vec<usize> = (0..n).collect();
+    let mut cursor = 0usize;
+    let mut stages: Vec<Stage> = Vec::new();
+
+    while (stages.is_empty() && active.len() >= params.p) || active.len() > params.p {
+        let len = active.len();
+        // window: P consecutive active positions starting at cursor (wrap)
+        let positions: Vec<usize> = (0..params.p).map(|k| (cursor + k) % len).collect();
+        let window: Vec<usize> = positions.iter().map(|&pos| active[pos]).collect();
+
+        let local = solve_window(&window, params.q)?;
+        validate_local(&local, window.len(), params.q)?;
+        let chosen: Vec<usize> = local.iter().map(|&l| window[l]).collect();
+
+        stages.push(Stage {
+            window: window.clone(),
+            chosen: chosen.clone(),
+            is_final: false,
+        });
+
+        // replace the window with its summary, preserving document order:
+        // rebuild `active` = survivors (not in window) + chosen, sorted by
+        // original index. The cursor resumes after the replaced region.
+        let window_set: std::collections::HashSet<usize> = window.iter().copied().collect();
+        let mut next: Vec<usize> = active
+            .iter()
+            .copied()
+            .filter(|i| !window_set.contains(i))
+            .chain(chosen.iter().copied())
+            .collect();
+        next.sort_unstable();
+
+        // cursor: position (in the new list) just after the last kept
+        // element of the window region
+        let resume_after = chosen.iter().copied().max().unwrap_or(0);
+        let pos = next
+            .iter()
+            .position(|&i| i > resume_after)
+            .unwrap_or(0); // wrapped past the end -> start over
+        cursor = pos;
+        active = next;
+    }
+
+    // final selection to M sentences
+    let local = solve_window(&active, params.m)?;
+    validate_local(&local, active.len(), params.m)?;
+    let mut selected: Vec<usize> = local.iter().map(|&l| active[l]).collect();
+    selected.sort_unstable();
+    stages.push(Stage {
+        window: active,
+        chosen: selected.clone(),
+        is_final: true,
+    });
+
+    Ok(DecompositionResult { selected, stages })
+}
+
+fn validate_local(local: &[usize], window_len: usize, want: usize) -> Result<()> {
+    ensure!(
+        local.len() == want,
+        "subproblem solver returned {} of {} requested",
+        local.len(),
+        want
+    );
+    let mut sorted = local.to_vec();
+    sorted.sort_unstable();
+    sorted.dedup();
+    ensure!(sorted.len() == want, "duplicate window positions");
+    ensure!(
+        sorted.iter().all(|&l| l < window_len),
+        "window position out of range"
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Toy solver: keep the `target` window positions with the largest
+    /// "score" (here: original index parity trick to make choices visible).
+    fn top_indices(window: &[usize], target: usize) -> Result<Vec<usize>> {
+        let mut pos: Vec<usize> = (0..window.len()).collect();
+        pos.sort_by_key(|&p| std::cmp::Reverse(window[p]));
+        pos.truncate(target);
+        Ok(pos)
+    }
+
+    #[test]
+    fn stage_counts_match_paper_examples() {
+        let params = DecomposeParams::paper_default();
+        // 20-sentence: 20 -> 10 (first window, unconditional) -> final:
+        // "at least two Ising subproblems for 20-sentence benchmarks"
+        assert_eq!(stage_count(20, &params), 2);
+        // 50-sentence: 50 -> 40 -> 30 -> 20, then final on 20
+        assert_eq!(stage_count(50, &params), 4);
+        // 100-sentence: eight shrink stages then final
+        assert_eq!(stage_count(100, &params), 9);
+        // 10-sentence (Fig. 3 set): below P, direct final solve
+        assert_eq!(stage_count(10, &params), 1);
+    }
+
+    #[test]
+    fn n_equals_p_runs_two_stages() {
+        let params = DecomposeParams { p: 20, q: 10, m: 6 };
+        let r = decompose(20, &params, top_indices).unwrap();
+        assert_eq!(r.solves(), 2);
+        assert!(!r.stages[0].is_final);
+        assert_eq!(r.stages[0].window.len(), 20);
+        assert_eq!(r.stages[0].chosen.len(), 10);
+        assert!(r.stages[1].is_final);
+        assert_eq!(r.stages[1].window.len(), 10);
+    }
+
+    #[test]
+    fn decompose_returns_m_sorted_unique() {
+        let params = DecomposeParams::paper_default();
+        for n in [20usize, 35, 50, 100] {
+            let r = decompose(n, &params, top_indices).unwrap();
+            assert_eq!(r.selected.len(), 6, "n={n}");
+            assert!(r.selected.windows(2).all(|w| w[0] < w[1]));
+            assert!(r.selected.iter().all(|&i| i < n));
+            assert_eq!(r.solves(), stage_count(n, &params), "n={n}");
+        }
+    }
+
+    #[test]
+    fn stages_shrink_monotonically() {
+        let params = DecomposeParams { p: 8, q: 4, m: 3 };
+        let mut seen_lens = Vec::new();
+        let r = decompose(30, &params, |w, t| {
+            seen_lens.push(w.len());
+            top_indices(w, t)
+        })
+        .unwrap();
+        // every non-final window has exactly P entries; final <= P
+        for (i, s) in r.stages.iter().enumerate() {
+            if !s.is_final {
+                assert_eq!(s.window.len(), 8, "stage {i}");
+                assert_eq!(s.chosen.len(), 4);
+            } else {
+                assert!(s.window.len() <= 8);
+                assert_eq!(s.chosen.len(), 3);
+            }
+        }
+    }
+
+    #[test]
+    fn windows_are_consecutive_with_wraparound() {
+        let params = DecomposeParams { p: 6, q: 3, m: 2 };
+        let mut windows: Vec<Vec<usize>> = Vec::new();
+        decompose(14, &params, |w, t| {
+            windows.push(w.to_vec());
+            top_indices(w, t)
+        })
+        .unwrap();
+        // first window must be the document head
+        assert_eq!(windows[0], vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn final_selection_subset_of_document() {
+        let params = DecomposeParams { p: 5, q: 2, m: 2 };
+        let r = decompose(12, &params, top_indices).unwrap();
+        // with the "keep largest index" toy solver, late sentences win
+        assert!(r.selected.iter().all(|&i| i < 12));
+        assert_eq!(r.selected.len(), 2);
+    }
+
+    #[test]
+    fn solver_violations_are_caught() {
+        let params = DecomposeParams { p: 5, q: 2, m: 2 };
+        // wrong count
+        assert!(decompose(12, &params, |_, _| Ok(vec![0])).is_err());
+        // duplicates
+        assert!(decompose(12, &params, |_, _| Ok(vec![1, 1])).is_err());
+        // out of range
+        assert!(decompose(12, &params, |w, _| Ok(vec![w.len(), 0])).is_err());
+    }
+
+    #[test]
+    fn invalid_params_rejected() {
+        assert!(DecomposeParams { p: 5, q: 5, m: 2 }.validate().is_err());
+        assert!(DecomposeParams { p: 5, q: 2, m: 6 }.validate().is_err());
+        assert!(decompose(4, &DecomposeParams { p: 5, q: 2, m: 6 }, top_indices).is_err());
+    }
+}

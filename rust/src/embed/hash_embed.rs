@@ -1,0 +1,201 @@
+//! Native hashed-random-projection embedder.
+//!
+//! A fast, dependency-free stand-in for the AOT encoder artifact: each
+//! hashed token id deterministically seeds a gaussian d-vector; a sentence
+//! embedding is the mean of its token vectors plus a small positive common
+//! component (mimicking the anisotropy of SBERT news embeddings, which
+//! keeps all-pairs cosine similarity positive — the property the dense
+//! Ising formulation relies on).
+//!
+//! Used by default in tests/benches (no PJRT startup cost); the pipeline
+//! swaps in `runtime::EncoderPipeline` for artifact-faithful embeddings.
+
+use crate::text::{Tokenizer, MAX_TOKENS};
+use crate::util::rng::SplitMix64;
+
+use super::similarity::{scores_from_embeddings, Scores};
+use super::Embedder;
+
+pub const EMBED_DIM: usize = 64;
+
+/// Shared positive component weight (anisotropy strength).
+const COMMON_WEIGHT: f32 = 0.6;
+
+pub struct HashEmbedder {
+    /// Common direction added to every sentence embedding.
+    common: Vec<f32>,
+    tokenizer: Tokenizer,
+}
+
+impl Default for HashEmbedder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl HashEmbedder {
+    pub fn new() -> Self {
+        let mut rng = SplitMix64::new(0xC0FF_EE00);
+        let common: Vec<f32> = (0..EMBED_DIM)
+            .map(|_| gaussian_from_bits(rng.next_u64()))
+            .collect();
+        Self {
+            common,
+            tokenizer: Tokenizer::new(),
+        }
+    }
+
+    /// Deterministic token vector: SplitMix64 stream keyed by token id.
+    fn token_vector(&self, token_id: i32) -> [f32; EMBED_DIM] {
+        let mut rng = SplitMix64::new(token_id as u64 ^ 0x7E11_BEEF);
+        let mut v = [0.0f32; EMBED_DIM];
+        for x in v.iter_mut() {
+            *x = gaussian_from_bits(rng.next_u64());
+        }
+        v
+    }
+
+    /// Embed one sentence: mean token vector + common component.
+    pub fn embed_sentence(&self, sentence: &str) -> Vec<f32> {
+        let row = self.tokenizer.encode_sentence(sentence);
+        let mut acc = vec![0.0f32; EMBED_DIM];
+        let mut count = 0usize;
+        for &tok in row.iter().take(MAX_TOKENS) {
+            if tok == 0 {
+                break;
+            }
+            let v = self.token_vector(tok);
+            for (a, x) in acc.iter_mut().zip(v.iter()) {
+                *a += x;
+            }
+            count += 1;
+        }
+        if count > 0 {
+            for a in acc.iter_mut() {
+                *a /= count as f32;
+            }
+        }
+        for (a, c) in acc.iter_mut().zip(self.common.iter()) {
+            *a += COMMON_WEIGHT * c / (EMBED_DIM as f32).sqrt();
+        }
+        acc
+    }
+}
+
+/// Crude-but-deterministic standard normal from 64 random bits
+/// (sum of 8 uniform bytes, CLT; adequate for embedding geometry).
+fn gaussian_from_bits(bits: u64) -> f32 {
+    let mut s = 0.0f32;
+    for k in 0..8 {
+        s += ((bits >> (8 * k)) & 0xFF) as f32 / 255.0;
+    }
+    // mean 4.0, var 8/12 -> standardize
+    (s - 4.0) / (8.0f32 / 12.0).sqrt()
+}
+
+impl Embedder for HashEmbedder {
+    fn name(&self) -> &'static str {
+        "hash"
+    }
+
+    fn scores(&mut self, sentences: &[String]) -> anyhow::Result<Scores> {
+        let n = sentences.len();
+        anyhow::ensure!(n > 0, "empty document");
+        let mut emb = vec![0.0f32; n * EMBED_DIM];
+        for (i, s) in sentences.iter().enumerate() {
+            let e = self.embed_sentence(s);
+            emb[i * EMBED_DIM..(i + 1) * EMBED_DIM].copy_from_slice(&e);
+        }
+        Ok(scores_from_embeddings(&emb, n, EMBED_DIM))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::Generator;
+
+    fn doc_scores(seed: u64, n: usize) -> Scores {
+        let mut g = Generator::with_seed(seed);
+        let d = g.document("t", n);
+        HashEmbedder::new().scores(&d.sentences).unwrap()
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = doc_scores(1, 12);
+        let b = doc_scores(1, 12);
+        assert_eq!(a.mu, b.mu);
+        assert_eq!(a.beta, b.beta);
+    }
+
+    #[test]
+    fn sbert_like_geometry() {
+        // dense positive similarity: the property the dense Ising
+        // formulation depends on (paper §III-A: "beta_ij != 0 forall i,j")
+        let s = doc_scores(2, 20);
+        let n = s.n();
+        let mut pos = 0usize;
+        let mut total = 0usize;
+        for i in 0..n {
+            assert!(s.mu[i] > 0.0, "mu[{i}] = {}", s.mu[i]);
+            for j in (i + 1)..n {
+                total += 1;
+                pos += (s.beta[i * n + j] > 0.0) as usize;
+                assert!(
+                    s.beta[i * n + j].abs() > 1e-6,
+                    "zero beta at ({i},{j}) — dense coupling violated"
+                );
+            }
+        }
+        assert!(pos as f64 / total as f64 > 0.9, "{pos}/{total} positive");
+    }
+
+    #[test]
+    fn same_topic_pairs_more_redundant() {
+        use crate::corpus::GeneratorConfig;
+        // single-topic doc vs mixed: mean beta should drop for mixed
+        let mut g1 = Generator::new(
+            3,
+            GeneratorConfig {
+                topics_per_doc: 1,
+                coherence: 1.0,
+                key_facts: 3,
+            },
+        );
+        let mut g8 = Generator::new(
+            4,
+            GeneratorConfig {
+                topics_per_doc: 6,
+                coherence: 0.0,
+                key_facts: 3,
+            },
+        );
+        let mut e = HashEmbedder::new();
+        let s1 = e.scores(&g1.document("a", 16).sentences).unwrap();
+        let s8 = e.scores(&g8.document("b", 16).sentences).unwrap();
+        let mean_off = |s: &Scores| {
+            let n = s.n();
+            let mut acc = 0.0f64;
+            let mut c = 0usize;
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    acc += s.beta[i * n + j] as f64;
+                    c += 1;
+                }
+            }
+            acc / c as f64
+        };
+        assert!(
+            mean_off(&s1) > mean_off(&s8) + 0.03,
+            "single-topic {:.3} vs mixed {:.3}",
+            mean_off(&s1),
+            mean_off(&s8)
+        );
+    }
+
+    #[test]
+    fn empty_document_is_error() {
+        assert!(HashEmbedder::new().scores(&[]).is_err());
+    }
+}

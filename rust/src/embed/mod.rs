@@ -1,0 +1,21 @@
+//! Embedding layer: sentences -> (mu, beta) scores (paper Eqs. 1–2).
+//!
+//! Two implementations:
+//!   * [`HashEmbedder`] — native hashed random projection, fast and
+//!     dependency-free (tests, benches, fallback);
+//!   * `runtime::EncoderPipeline` — the AOT path: the JAX transformer
+//!     encoder + Pallas cosine kernel executed through PJRT.
+//!
+//! Both satisfy [`Embedder`], so the pipeline is backend-agnostic.
+
+pub mod hash_embed;
+pub mod similarity;
+
+pub use hash_embed::HashEmbedder;
+pub use similarity::{scores_from_embeddings, Scores};
+
+/// Sentences -> relevance/redundancy scores.
+pub trait Embedder {
+    fn name(&self) -> &'static str;
+    fn scores(&mut self, sentences: &[String]) -> anyhow::Result<Scores>;
+}

@@ -1,0 +1,131 @@
+//! Relevance / redundancy scores from embeddings (paper Eqs. 1–2).
+//!
+//! Mirrors kernels/ref.py: mu_i = cos(e_i, mean(e_doc)), beta_ij =
+//! cos(e_i, e_j). Shared by the native hash embedder and the PJRT encoder
+//! path (which computes the same quantities inside the cosine artifact).
+
+/// Relevance + redundancy for one document.
+#[derive(Debug, Clone)]
+pub struct Scores {
+    /// mu_i, length n.
+    pub mu: Vec<f32>,
+    /// beta_ij, row-major n*n, symmetric, ZERO diagonal (self-similarity
+    /// excluded: Eq. 3 sums run over i != j).
+    pub beta: Vec<f32>,
+}
+
+impl Scores {
+    pub fn n(&self) -> usize {
+        self.mu.len()
+    }
+
+    /// Restrict to a subset of sentence indices (decomposition windows).
+    pub fn subset(&self, idx: &[usize]) -> Scores {
+        let n = self.n();
+        let m = idx.len();
+        let mut mu = Vec::with_capacity(m);
+        let mut beta = vec![0.0f32; m * m];
+        for (a, &i) in idx.iter().enumerate() {
+            assert!(i < n, "index {i} out of bounds {n}");
+            mu.push(self.mu[i]);
+            for (b, &j) in idx.iter().enumerate() {
+                if a != b {
+                    beta[a * m + b] = self.beta[i * n + j];
+                }
+            }
+        }
+        Scores { mu, beta }
+    }
+}
+
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+#[inline]
+fn norm(a: &[f32]) -> f32 {
+    dot(a, a).sqrt()
+}
+
+/// Compute Scores from row-major embeddings (n x d).
+pub fn scores_from_embeddings(emb: &[f32], n: usize, d: usize) -> Scores {
+    assert_eq!(emb.len(), n * d);
+    // unit rows
+    let mut unit = vec![0.0f32; n * d];
+    for i in 0..n {
+        let row = &emb[i * d..(i + 1) * d];
+        let nn = norm(row).max(1e-12);
+        for k in 0..d {
+            unit[i * d + k] = row[k] / nn;
+        }
+    }
+    // document mean (over raw embeddings, like ref.relevance_ref)
+    let mut doc = vec![0.0f32; d];
+    for i in 0..n {
+        for k in 0..d {
+            doc[k] += emb[i * d + k];
+        }
+    }
+    let dn = norm(&doc).max(1e-12);
+    for v in doc.iter_mut() {
+        *v /= dn;
+    }
+    let mu: Vec<f32> = (0..n)
+        .map(|i| dot(&unit[i * d..(i + 1) * d], &doc))
+        .collect();
+    let mut beta = vec![0.0f32; n * n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let b = dot(&unit[i * d..(i + 1) * d], &unit[j * d..(j + 1) * d]);
+            beta[i * n + j] = b;
+            beta[j * n + i] = b;
+        }
+    }
+    Scores { mu, beta }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_rows_give_unit_scores() {
+        let emb = vec![1.0, 2.0, 2.0, 1.0, 2.0, 2.0];
+        let s = scores_from_embeddings(&emb, 2, 3);
+        assert!((s.mu[0] - 1.0).abs() < 1e-6);
+        assert!((s.beta[1] - 1.0).abs() < 1e-6);
+        assert_eq!(s.beta[0], 0.0, "diagonal must stay zero");
+    }
+
+    #[test]
+    fn orthogonal_rows_give_zero_beta() {
+        let emb = vec![1.0, 0.0, 0.0, 1.0];
+        let s = scores_from_embeddings(&emb, 2, 2);
+        assert!(s.beta[1].abs() < 1e-6);
+    }
+
+    #[test]
+    fn scores_bounded_by_one() {
+        let emb: Vec<f32> = (0..5 * 8).map(|i| ((i * 37 % 11) as f32) - 5.0).collect();
+        let s = scores_from_embeddings(&emb, 5, 8);
+        for &m in &s.mu {
+            assert!(m.abs() <= 1.0 + 1e-5);
+        }
+        for &b in &s.beta {
+            assert!(b.abs() <= 1.0 + 1e-5);
+        }
+    }
+
+    #[test]
+    fn subset_preserves_pairs() {
+        let emb: Vec<f32> = (0..6 * 4).map(|i| (i as f32 * 0.7).sin()).collect();
+        let s = scores_from_embeddings(&emb, 6, 4);
+        let sub = s.subset(&[1, 3, 5]);
+        assert_eq!(sub.n(), 3);
+        assert_eq!(sub.mu[0], s.mu[1]);
+        assert_eq!(sub.beta[0 * 3 + 1], s.beta[1 * 6 + 3]);
+        assert_eq!(sub.beta[1 * 3 + 2], s.beta[3 * 6 + 5]);
+        assert_eq!(sub.beta[0], 0.0);
+    }
+}

@@ -1,0 +1,110 @@
+//! Shared machinery for the experiment drivers: benchmark problems with
+//! cached exact bounds, solver construction, success-iteration extraction.
+
+use anyhow::Result;
+
+use crate::config::Settings;
+use crate::corpus::{benchmark_set, BenchmarkSet};
+use crate::embed::{Embedder, HashEmbedder};
+use crate::ising::{exact_bounds, EsProblem, ObjectiveBounds};
+use crate::solvers::IsingSolver;
+use crate::util::rng::Pcg32;
+
+/// A benchmark document turned into an ES problem + exact bounds.
+pub struct BenchProblem {
+    pub doc_id: String,
+    pub problem: EsProblem,
+    pub bounds: ObjectiveBounds,
+}
+
+/// Load `docs` documents of a benchmark set as ES problems with exact
+/// Eq. 13 bounds (the expensive B&B runs once per document here).
+pub fn load_problems(set_name: &str, docs: usize, settings: &Settings) -> Result<Vec<BenchProblem>> {
+    let set: BenchmarkSet = benchmark_set(set_name)?;
+    let m = set.summary_len;
+    let mut embedder = HashEmbedder::new();
+    let mut out = Vec::new();
+    for doc in set.documents.iter().take(docs) {
+        let scores = embedder.scores(&doc.sentences)?;
+        let problem = EsProblem {
+            mu: scores.mu,
+            beta: scores.beta,
+            lambda: settings.pipeline.lambda,
+            m,
+        };
+        let bounds = exact_bounds(&problem);
+        out.push(BenchProblem {
+            doc_id: doc.id.clone(),
+            problem,
+            bounds,
+        });
+    }
+    Ok(out)
+}
+
+/// Fresh solver by name with a derived seed (experiments never share
+/// solver RNG state across runs, so every (run, benchmark) replays).
+pub fn make_solver(name: &str, seed: u64, settings: &Settings) -> Box<dyn IsingSolver> {
+    match name {
+        "tabu" => Box::new(crate::solvers::tabu::TabuSolver::seeded(seed)),
+        "sa" => Box::new(crate::solvers::sa::SaSolver::seeded(seed)),
+        "cobi" => Box::new(crate::cobi::CobiDevice::native(
+            settings.cobi.clone(),
+            seed,
+        )),
+        other => panic!("unknown ising solver '{other}'"),
+    }
+}
+
+/// First iteration index (1-based) whose best-so-far normalized objective
+/// reaches `threshold`; None if never.
+pub fn first_success(best_so_far_norm: &[f64], threshold: f64) -> Option<usize> {
+    best_so_far_norm
+        .iter()
+        .position(|&v| v >= threshold)
+        .map(|i| i + 1)
+}
+
+/// Deterministic per-(experiment, run, doc) RNG.
+pub fn exp_rng(exp: &str, run: usize, doc: usize) -> Pcg32 {
+    let h = crate::text::tokenize::fnv1a(exp.as_bytes());
+    Pcg32::new(
+        h ^ (run as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        (doc as u64) << 1 | 1,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_success_basics() {
+        assert_eq!(first_success(&[0.2, 0.5, 0.95, 0.95], 0.9), Some(3));
+        assert_eq!(first_success(&[0.95], 0.9), Some(1));
+        assert_eq!(first_success(&[0.1, 0.2], 0.9), None);
+    }
+
+    #[test]
+    fn load_problems_shapes_and_bounds() {
+        let s = Settings::default();
+        let ps = load_problems("bench_10", 3, &s).unwrap();
+        assert_eq!(ps.len(), 3);
+        for p in &ps {
+            assert_eq!(p.problem.n(), 10);
+            assert_eq!(p.problem.m, 3);
+            assert!(p.bounds.max > p.bounds.min);
+        }
+    }
+
+    #[test]
+    fn exp_rng_streams_differ() {
+        let a = exp_rng("fig1", 0, 0).next_u32();
+        let b = exp_rng("fig1", 0, 1).next_u32();
+        let c = exp_rng("fig1", 1, 0).next_u32();
+        let a2 = exp_rng("fig1", 0, 0).next_u32();
+        assert_eq!(a, a2);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+    }
+}

@@ -1,0 +1,143 @@
+//! Figs. 2–3 — normalized objective vs refinement iterations for the
+//! three rounding schemes + random baseline, across precisions.
+//! Fig 2: 20-sentence benchmarks (M=6); Fig 3: 10-sentence (M=3).
+//!
+//! Expected shape (paper): all schemes improve with iterations; stochastic
+//! rounding best overall; 50/50 collapses at 4-bit; deterministic
+//! saturates after a few iterations; at 6/7/8-bit all converge.
+
+use anyhow::Result;
+
+use crate::config::Settings;
+use crate::ising::Formulation;
+use crate::quant::{Precision, Rounding};
+use crate::refine::{refine, RefineConfig};
+use crate::solvers::random::RandomBaseline;
+use crate::util::stats::mean;
+
+use super::common::{exp_rng, load_problems, make_solver};
+use super::{Report, Scale};
+
+pub fn run(scale: Scale, settings: &Settings, set_name: &str) -> Result<Vec<Report>> {
+    let docs = scale.docs(20);
+    let runs = scale.runs(10);
+    let problems = load_problems(set_name, docs, settings)?;
+    let max_iter = *scale.iteration_grid().last().unwrap();
+    let grid = scale.iteration_grid();
+    let precisions = match scale {
+        Scale::Quick => vec![Precision::Fixed(4), Precision::CobiInt],
+        Scale::Full => vec![
+            Precision::Fixed(4),
+            Precision::Fixed(5),
+            Precision::Fixed(6),
+            Precision::CobiInt,
+        ],
+    };
+
+    let fig = if set_name == "bench_10" { "Fig 3" } else { "Fig 2" };
+    let mut reports = Vec::new();
+
+    for &precision in &precisions {
+        let mut report = Report::new(
+            format!("{fig} — normalized objective vs iterations ({set_name}, {precision})"),
+            &["scheme", "iterations", "mean normalized objective"],
+        );
+        report.note(format!("{docs} documents x {runs} runs, Tabu as solver"));
+
+        for rounding in [
+            Rounding::Deterministic,
+            Rounding::Stoch5050,
+            Rounding::Stochastic,
+        ] {
+            // collect best-so-far curves per (doc, run)
+            let mut curves: Vec<Vec<f64>> = Vec::new();
+            for (d, bp) in problems.iter().enumerate() {
+                for run_idx in 0..runs {
+                    let cfg = RefineConfig {
+                        formulation: Formulation::Improved,
+                        precision,
+                        rounding,
+                        iterations: max_iter,
+                    };
+                    let mut rng = exp_rng("fig23", run_idx, d);
+                    let mut solver = make_solver(
+                        "tabu",
+                        (run_idx * 1000 + d) as u64 ^ 0xF16,
+                        settings,
+                    );
+                    let trace = refine(&bp.problem, &cfg, solver.as_mut(), &mut rng)?;
+                    curves.push(
+                        trace
+                            .best_so_far
+                            .iter()
+                            .map(|&o| bp.bounds.normalize(o))
+                            .collect(),
+                    );
+                }
+            }
+            for &it in &grid {
+                let vals: Vec<f64> = curves.iter().map(|c| c[it - 1]).collect();
+                report.row(vec![
+                    rounding.to_string(),
+                    it.to_string(),
+                    format!("{:.4}", mean(&vals)),
+                ]);
+            }
+        }
+
+        // random baseline (no Ising, iteration = one random M-subset)
+        for &it in &grid {
+            let mut vals = Vec::new();
+            for (d, bp) in problems.iter().enumerate() {
+                for run_idx in 0..runs {
+                    let mut rb =
+                        RandomBaseline::seeded((run_idx * 7919 + d) as u64 ^ 0xBA5E);
+                    let best = rb.best_of(&bp.problem, it);
+                    vals.push(bp.bounds.normalize(best.objective));
+                }
+            }
+            report.row(vec![
+                "random".into(),
+                it.to_string(),
+                format!("{:.4}", mean(&vals)),
+            ]);
+        }
+        reports.push(report);
+    }
+    Ok(reports)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn col(report: &Report, scheme: &str, it: usize) -> f64 {
+        report
+            .rows
+            .iter()
+            .find(|r| r[0] == scheme && r[1] == it.to_string())
+            .unwrap()[2]
+            .parse()
+            .unwrap()
+    }
+
+    #[test]
+    fn quick_run_shows_iteration_gains_and_beats_random() {
+        let settings = Settings::default();
+        let reports = run(Scale::Quick, &settings, "bench_10").unwrap();
+        // int14 report (second entry)
+        let r = &reports[1];
+        let s2 = col(r, "stochastic", 2);
+        let s20 = col(r, "stochastic", 20);
+        assert!(s20 >= s2 - 1e-9, "iterations must not hurt: {s2} -> {s20}");
+        let rnd20 = col(r, "random", 20);
+        assert!(
+            s20 >= rnd20 - 0.05,
+            "stochastic {s20} should at least match random {rnd20}"
+        );
+        // deterministic saturates: its 2-iter and 20-iter means are close
+        let d2 = col(r, "deterministic", 2);
+        let d20 = col(r, "deterministic", 20);
+        assert!(d20 - d2 < 0.2, "deterministic should saturate: {d2} -> {d20}");
+    }
+}

@@ -1,0 +1,169 @@
+//! Fig. 5 — decomposition vs direct solve across precisions
+//! (20-sentence benchmarks, P=20, Q=10, M=6, Tabu-as-COBI, 100 reps).
+//!
+//! Expected shape (paper): decomposition's boxplot dominates the direct
+//! formulation at every precision; at int14 the median improves 0.75 →
+//! 0.83.
+
+use anyhow::Result;
+
+use crate::config::Settings;
+use crate::decompose::{decompose, DecomposeParams};
+use crate::ising::{EsProblem, Formulation};
+use crate::quant::Precision;
+use crate::refine::{refine, RefineConfig};
+use crate::util::stats::BoxStats;
+
+use super::common::{exp_rng, load_problems, make_solver};
+use super::{Report, Scale};
+
+pub fn run(scale: Scale, settings: &Settings) -> Result<Vec<Report>> {
+    let docs = scale.docs(20);
+    let reps = scale.runs(match scale {
+        Scale::Quick => 3,
+        Scale::Full => 100,
+    });
+    let problems = load_problems("cnn_dm_20", docs, settings)?;
+    let precisions = match scale {
+        Scale::Quick => vec![Precision::Fixed(4), Precision::CobiInt],
+        Scale::Full => vec![
+            Precision::Fixed(4),
+            Precision::Fixed(5),
+            Precision::Fixed(6),
+            Precision::Fixed(7),
+            Precision::Fixed(8),
+            Precision::CobiInt,
+        ],
+    };
+    let params = DecomposeParams::paper_default();
+
+    let mut report = Report::new(
+        "Fig 5 — decomposition vs direct across precisions (20-sent, P=20 Q=10 M=6)",
+        &["precision", "formulation", "workflow", "stats"],
+    );
+    report.note(format!(
+        "{docs} documents x {reps} repetitions; Tabu as COBI simulation; \
+         single-iteration refinement (stochastic rounding), per paper §IV-B"
+    ));
+    report.note(
+        "both formulations shown: with the bias term the direct solve is \
+         already robust (decomposition ties); the paper's decomposition \
+         advantage appears on the imbalanced ORIGINAL formulation",
+    );
+
+    for &precision in &precisions {
+        for formulation in [Formulation::Original, Formulation::Improved] {
+        for direct in [false, true] {
+            let mut values = Vec::new();
+            for (d, bp) in problems.iter().enumerate() {
+                for rep in 0..reps {
+                    let cfg = RefineConfig {
+                        formulation,
+                        precision,
+                        rounding: settings.pipeline.rounding,
+                        iterations: 1,
+                    };
+                    let mut rng = exp_rng("fig5", rep, d);
+                    let mut solver =
+                        make_solver("tabu", (rep * 100 + d) as u64 ^ 0xF15, settings);
+                    let selected = if direct {
+                        refine(&bp.problem, &cfg, solver.as_mut(), &mut rng)?
+                            .result
+                            .selected
+                    } else {
+                        let p = &bp.problem;
+                        decompose(p.n(), &params, |window, target| {
+                            let sub = sub_problem(p, window, target);
+                            Ok(refine(&sub, &cfg, solver.as_mut(), &mut rng)?
+                                .result
+                                .selected)
+                        })?
+                        .selected
+                    };
+                    values.push(bp.bounds.normalize(bp.problem.objective(&selected)));
+                }
+            }
+            report.row(vec![
+                precision.to_string(),
+                format!("{formulation:?}"),
+                if direct { "direct" } else { "decomposed" }.into(),
+                BoxStats::compute(&values).row(),
+            ]);
+        }
+        }
+    }
+    Ok(vec![report])
+}
+
+/// Restrict an EsProblem to a window of sentence indices.
+pub fn sub_problem(p: &EsProblem, window: &[usize], target: usize) -> EsProblem {
+    let n = p.n();
+    let k = window.len();
+    let mut mu = Vec::with_capacity(k);
+    let mut beta = vec![0.0f32; k * k];
+    for (a, &i) in window.iter().enumerate() {
+        mu.push(p.mu[i]);
+        for (b, &j) in window.iter().enumerate() {
+            if a != b {
+                beta[a * k + b] = p.beta[i * n + j];
+            }
+        }
+    }
+    EsProblem {
+        mu,
+        beta,
+        lambda: p.lambda,
+        m: target,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sub_problem_preserves_scores() {
+        let p = EsProblem {
+            mu: vec![0.1, 0.2, 0.3, 0.4],
+            beta: (0..16).map(|i| i as f32 * 0.01).collect(),
+            lambda: 0.5,
+            m: 2,
+        };
+        let s = sub_problem(&p, &[1, 3], 1);
+        assert_eq!(s.mu, vec![0.2, 0.4]);
+        assert_eq!(s.m, 1);
+        assert_eq!(s.beta[0 * 2 + 1], p.beta[1 * 4 + 3]);
+        assert_eq!(s.beta[0], 0.0);
+    }
+
+    #[test]
+    fn quick_run_decomposition_competitive() {
+        let settings = Settings::default();
+        let reports = run(Scale::Quick, &settings).unwrap();
+        let r = &reports[0];
+        assert_eq!(r.rows.len(), 8); // 2 precisions x 2 formulations x 2 workflows
+        let median_of = |row: &[String]| -> f64 {
+            row[3]
+                .split("med=")
+                .nth(1)
+                .unwrap()
+                .split_whitespace()
+                .next()
+                .unwrap()
+                .parse()
+                .unwrap()
+        };
+        let find = |prec: &str, form: &str, wf: &str| -> f64 {
+            median_of(
+                r.rows
+                    .iter()
+                    .find(|row| row[0] == prec && row[1] == form && row[2] == wf)
+                    .unwrap(),
+            )
+        };
+        // improved formulation at int14: decomposition competitive
+        let dec = find("int14", "Improved", "decomposed");
+        let dir = find("int14", "Improved", "direct");
+        assert!(dec >= dir - 0.1, "decomposed {dec} vs direct {dir}");
+    }
+}

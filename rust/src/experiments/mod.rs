@@ -1,0 +1,156 @@
+//! Experiment drivers: one per paper table/figure (DESIGN.md §4).
+//!
+//! Each driver regenerates the corresponding result on the synthetic
+//! benchmark sets and returns [`Report`]s rendered as markdown tables by
+//! the CLI (`cobi-es experiment <id>`) and the bench targets. `Scale`
+//! trades fidelity for wall-clock so the full suite stays usable on a
+//! single-core box; `--full` reproduces the paper-sized sweeps.
+
+pub mod common;
+pub mod fig1;
+pub mod fig23;
+pub mod fig5;
+pub mod fig6;
+pub mod fig78;
+pub mod supp;
+pub mod table1;
+
+use anyhow::{bail, Result};
+
+use crate::config::Settings;
+
+/// Tabular result with a title and free-form notes.
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    pub notes: Vec<String>,
+}
+
+impl Report {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
+        Self {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "ragged report row");
+        self.rows.push(cells);
+    }
+
+    pub fn note(&mut self, s: impl Into<String>) {
+        self.notes.push(s.into());
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut out = format!("### {}\n\n", self.title);
+        out.push_str(&format!("| {} |\n", self.headers.join(" | ")));
+        out.push_str(&format!(
+            "|{}\n",
+            self.headers.iter().map(|_| "---|").collect::<String>()
+        ));
+        for row in &self.rows {
+            out.push_str(&format!("| {} |\n", row.join(" | ")));
+        }
+        for n in &self.notes {
+            out.push_str(&format!("\n> {n}\n"));
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = self.headers.join(",") + "\n";
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Effort scaling for the drivers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    /// CI / bench: fewer docs, runs and iteration points.
+    Quick,
+    /// Paper-sized sweeps.
+    Full,
+}
+
+impl Scale {
+    pub fn docs(&self, full: usize) -> usize {
+        match self {
+            Scale::Quick => full.min(6),
+            Scale::Full => full,
+        }
+    }
+
+    pub fn runs(&self, full: usize) -> usize {
+        match self {
+            Scale::Quick => full.min(3),
+            Scale::Full => full,
+        }
+    }
+
+    pub fn iteration_grid(&self) -> Vec<usize> {
+        match self {
+            Scale::Quick => vec![2, 6, 10, 20],
+            Scale::Full => vec![2, 6, 10, 20, 50, 100],
+        }
+    }
+}
+
+/// All experiment ids, in paper order.
+pub const ALL_EXPERIMENTS: &[&str] = &[
+    "fig1", "fig2", "fig3", "fig5", "fig6", "fig7", "fig8", "table1", "supp-optima",
+];
+
+/// Run one experiment by id.
+pub fn run(id: &str, scale: Scale, settings: &Settings) -> Result<Vec<Report>> {
+    match id {
+        "fig1" => fig1::run(scale, settings),
+        "fig2" => fig23::run(scale, settings, "cnn_dm_20"),
+        "fig3" => fig23::run(scale, settings, "bench_10"),
+        "fig5" => fig5::run(scale, settings),
+        "fig6" => fig6::run(scale, settings),
+        "fig7" | "fig8" => fig78::run(scale, settings),
+        "table1" => table1::run(scale, settings),
+        "supp-optima" => supp::run(scale, settings),
+        other => bail!("unknown experiment '{other}' (try one of {ALL_EXPERIMENTS:?})"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_renders_markdown_and_csv() {
+        let mut r = Report::new("T", &["a", "b"]);
+        r.row(vec!["1".into(), "2".into()]);
+        r.note("note");
+        let md = r.to_markdown();
+        assert!(md.contains("### T"));
+        assert!(md.contains("| 1 | 2 |"));
+        assert!(md.contains("> note"));
+        let csv = r.to_csv();
+        assert!(csv.starts_with("a,b\n1,2\n"));
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn ragged_rows_panic() {
+        let mut r = Report::new("T", &["a", "b"]);
+        r.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn unknown_experiment_is_error() {
+        assert!(run("fig99", Scale::Quick, &Settings::default()).is_err());
+    }
+}

@@ -1,0 +1,80 @@
+//! Supplementary — multiplicity of optima under quantization.
+//!
+//! The paper motivates iterative refinement by observing that quantized
+//! formulations often admit MULTIPLE degenerate ground states, many far
+//! (in Hamming distance) from the FP optimum. This driver counts exact
+//! ground-state degeneracy across precisions via Gray-code enumeration.
+
+use anyhow::Result;
+
+use crate::config::Settings;
+use crate::ising::{formulate, Formulation};
+use crate::quant::{quantize, Precision, Rounding};
+use crate::solvers::exact::ising_ground_exhaustive;
+use crate::util::stats::mean;
+
+use super::common::{exp_rng, load_problems};
+use super::{Report, Scale};
+
+pub fn run(scale: Scale, settings: &Settings) -> Result<Vec<Report>> {
+    // exhaustive enumeration: 10-sentence set is cheap (2^10), 20-sentence
+    // (2^20) reserved for full scale
+    let (set_name, docs) = match scale {
+        Scale::Quick => ("bench_10", scale.docs(10)),
+        Scale::Full => ("cnn_dm_20", scale.docs(20)),
+    };
+    let problems = load_problems(set_name, docs, settings)?;
+    let precisions = [
+        Precision::Fixed(4),
+        Precision::Fixed(6),
+        Precision::Fixed(8),
+        Precision::CobiInt,
+    ];
+
+    let mut report = Report::new(
+        format!("Supp — ground-state degeneracy under quantization ({set_name})"),
+        &[
+            "precision",
+            "mean #optima",
+            "max #optima",
+            "instances with >1 optimum",
+        ],
+    );
+    report.note("deterministic rounding; exact enumeration of the quantized Ising");
+
+    for &precision in &precisions {
+        let mut counts = Vec::new();
+        for (d, bp) in problems.iter().enumerate() {
+            let es = formulate(&bp.problem, Formulation::Improved);
+            let mut rng = exp_rng("supp", 0, d);
+            let inst = quantize(&es.ising, precision, Rounding::Deterministic, &mut rng);
+            let (_, _, count) = ising_ground_exhaustive(&inst);
+            counts.push(count as f64);
+        }
+        let multi = counts.iter().filter(|&&c| c > 1.0).count();
+        report.row(vec![
+            precision.to_string(),
+            format!("{:.2}", mean(&counts)),
+            format!("{:.0}", counts.iter().cloned().fold(0.0, f64::max)),
+            format!("{multi}/{}", counts.len()),
+        ]);
+    }
+    Ok(vec![report])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_run_counts_are_sane() {
+        let settings = Settings::default();
+        let reports = run(Scale::Quick, &settings).unwrap();
+        let r = &reports[0];
+        assert_eq!(r.rows.len(), 4);
+        for row in &r.rows {
+            let mean_optima: f64 = row[1].parse().unwrap();
+            assert!(mean_optima >= 1.0, "{row:?}");
+        }
+    }
+}

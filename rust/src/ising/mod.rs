@@ -1,0 +1,10 @@
+//! Ising/QUBO core: model types, ES formulations, objective evaluation.
+
+pub mod formulation;
+pub mod model;
+pub mod kofn;
+pub mod objective;
+
+pub use formulation::{es_qubo, formulate, kofn_bias, EsIsing, EsProblem, Formulation};
+pub use model::{selected_indices, selection_to_spins, Ising, Qubo};
+pub use objective::{exact_bounds, normalized_objective, ObjectiveBounds};

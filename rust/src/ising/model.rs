@@ -1,0 +1,299 @@
+//! QUBO / Ising model types and the exact transformations between them.
+//!
+//! Conventions (used consistently across the whole repo and matching the
+//! L1/L2 kernels):
+//!
+//!   * Symmetric matrices are stored dense, row-major, with BOTH (i,j) and
+//!     (j,i) populated and zero diagonal.
+//!   * Pair sums run over ORDERED pairs i != j, i.e. each unordered pair
+//!     contributes twice:  H(s) = Σ_i h_i s_i + Σ_{i≠j} J_ij s_i s_j.
+//!   * Binary/spin change of variables: x_i = (1 + s_i) / 2, so s = +1
+//!     means "sentence selected".
+//!
+//! With these conventions the QUBO -> Ising map (paper Eq. 6, written for
+//! ordered sums) is
+//!     h_i  = Q_ii / 2 + (1/2) Σ_{j≠i} Q_ij ,
+//!     J_ij = Q_ij / 4 ,
+//! plus a constant offset tracked for exactness tests.
+
+/// Quadratic Unconstrained Binary Optimization instance (minimization).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Qubo {
+    pub n: usize,
+    /// Linear coefficients Q_ii.
+    pub linear: Vec<f32>,
+    /// Quadratic coefficients Q_ij, row-major n*n, symmetric, zero diag.
+    pub quad: Vec<f32>,
+}
+
+impl Qubo {
+    pub fn new(n: usize) -> Self {
+        Self {
+            n,
+            linear: vec![0.0; n],
+            quad: vec![0.0; n * n],
+        }
+    }
+
+    #[inline]
+    pub fn q(&self, i: usize, j: usize) -> f32 {
+        self.quad[i * self.n + j]
+    }
+
+    /// Set the symmetric pair (i,j) and (j,i).
+    pub fn set_pair(&mut self, i: usize, j: usize, v: f32) {
+        assert_ne!(i, j, "diagonal belongs to `linear`");
+        self.quad[i * self.n + j] = v;
+        self.quad[j * self.n + i] = v;
+    }
+
+    /// Energy of a binary assignment (ordered-pair convention).
+    pub fn energy(&self, x: &[u8]) -> f64 {
+        debug_assert_eq!(x.len(), self.n);
+        let mut e = 0.0f64;
+        for i in 0..self.n {
+            if x[i] == 0 {
+                continue;
+            }
+            e += self.linear[i] as f64;
+            let row = &self.quad[i * self.n..(i + 1) * self.n];
+            for j in 0..self.n {
+                if x[j] != 0 {
+                    e += row[j] as f64;
+                }
+            }
+        }
+        e
+    }
+
+    /// Exact QUBO -> Ising transformation; returns the Ising instance and
+    /// the constant offset c such that  H_qubo(x(s)) = H_ising(s) + c.
+    pub fn to_ising(&self) -> (Ising, f64) {
+        let n = self.n;
+        let mut ising = Ising::new(n);
+        let mut offset = 0.0f64;
+        for i in 0..n {
+            let mut row_sum = 0.0f64;
+            for j in 0..n {
+                if j != i {
+                    row_sum += self.q(i, j) as f64;
+                }
+            }
+            ising.h[i] = (self.linear[i] as f64 / 2.0 + row_sum / 2.0) as f32;
+            offset += self.linear[i] as f64 / 2.0 + row_sum / 4.0;
+            for j in 0..n {
+                if j != i {
+                    ising.j[i * n + j] = self.q(i, j) / 4.0;
+                }
+            }
+        }
+        (ising, offset)
+    }
+}
+
+/// Ising instance (minimization over s in {-1,+1}^n).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Ising {
+    pub n: usize,
+    /// Local fields h_i.
+    pub h: Vec<f32>,
+    /// Couplings J_ij, row-major n*n, symmetric, zero diag.
+    pub j: Vec<f32>,
+}
+
+impl Ising {
+    pub fn new(n: usize) -> Self {
+        Self {
+            n,
+            h: vec![0.0; n],
+            j: vec![0.0; n * n],
+        }
+    }
+
+    #[inline]
+    pub fn jij(&self, i: usize, j: usize) -> f32 {
+        self.j[i * self.n + j]
+    }
+
+    pub fn set_pair(&mut self, i: usize, j: usize, v: f32) {
+        assert_ne!(i, j);
+        self.j[i * self.n + j] = v;
+        self.j[j * self.n + i] = v;
+    }
+
+    /// Ising energy, ordered-pair convention (= s^T J s + h^T s).
+    pub fn energy(&self, s: &[i8]) -> f64 {
+        debug_assert_eq!(s.len(), self.n);
+        let mut e = 0.0f64;
+        for i in 0..self.n {
+            let si = s[i] as f64;
+            e += self.h[i] as f64 * si;
+            let row = &self.j[i * self.n..(i + 1) * self.n];
+            let mut acc = 0.0f64;
+            for j in 0..self.n {
+                acc += row[j] as f64 * s[j] as f64;
+            }
+            e += si * acc;
+        }
+        e
+    }
+
+    /// Local field seen by spin i: L_i = h_i + 2 Σ_j J_ij s_j.
+    /// Flipping spin i changes the energy by ΔE = -2 s_i L_i.
+    pub fn local_field(&self, s: &[i8], i: usize) -> f64 {
+        let row = &self.j[i * self.n..(i + 1) * self.n];
+        let mut acc = 0.0f64;
+        for j in 0..self.n {
+            acc += row[j] as f64 * s[j] as f64;
+        }
+        self.h[i] as f64 + 2.0 * acc
+    }
+
+    /// Off-diagonal coefficient list (upper triangle), used by median
+    /// statistics in the improved formulation.
+    pub fn upper_couplings(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.n * (self.n - 1) / 2);
+        for i in 0..self.n {
+            for j in (i + 1)..self.n {
+                out.push(self.jij(i, j));
+            }
+        }
+        out
+    }
+
+    /// Largest absolute coefficient (h and J jointly) — quantization scale.
+    pub fn max_abs(&self) -> f32 {
+        let hm = self.h.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+        let jm = self.j.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+        hm.max(jm)
+    }
+
+    /// Pad to `n_pad` spins (zero fields/couplings on the new spins) —
+    /// the COBI artifacts are compiled for a fixed 64-spin problem.
+    pub fn padded(&self, n_pad: usize) -> Ising {
+        assert!(n_pad >= self.n);
+        let mut out = Ising::new(n_pad);
+        out.h[..self.n].copy_from_slice(&self.h);
+        for i in 0..self.n {
+            out.j[i * n_pad..i * n_pad + self.n]
+                .copy_from_slice(&self.j[i * self.n..(i + 1) * self.n]);
+        }
+        out
+    }
+}
+
+/// Spin -> binary selection: indices with s_i = +1.
+pub fn selected_indices(s: &[i8]) -> Vec<usize> {
+    s.iter()
+        .enumerate()
+        .filter_map(|(i, &v)| (v > 0).then_some(i))
+        .collect()
+}
+
+/// Binary selection -> spins over n variables.
+pub fn selection_to_spins(n: usize, selected: &[usize]) -> Vec<i8> {
+    let mut s = vec![-1i8; n];
+    for &i in selected {
+        s[i] = 1;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn random_qubo(rng: &mut Pcg32, n: usize) -> Qubo {
+        let mut q = Qubo::new(n);
+        for i in 0..n {
+            q.linear[i] = rng.range_f32(-2.0, 2.0);
+            for j in (i + 1)..n {
+                q.set_pair(i, j, rng.range_f32(-1.0, 1.0));
+            }
+        }
+        q
+    }
+
+    #[test]
+    fn qubo_ising_equivalence_exhaustive() {
+        // H_qubo(x) == H_ising(s(x)) + offset for every assignment
+        let mut rng = Pcg32::seeded(1);
+        for _ in 0..20 {
+            let q = random_qubo(&mut rng, 6);
+            let (ising, offset) = q.to_ising();
+            for bits in 0..(1u32 << 6) {
+                let x: Vec<u8> = (0..6).map(|i| ((bits >> i) & 1) as u8).collect();
+                let s: Vec<i8> = x.iter().map(|&b| if b == 1 { 1 } else { -1 }).collect();
+                let eq = q.energy(&x);
+                let ei = ising.energy(&s) + offset;
+                assert!(
+                    (eq - ei).abs() < 1e-3,
+                    "qubo={eq} ising+c={ei} bits={bits:06b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn qubo_ising_argmin_preserved() {
+        let mut rng = Pcg32::seeded(2);
+        let q = random_qubo(&mut rng, 8);
+        let (ising, _) = q.to_ising();
+        let mut best_q = (f64::INFINITY, 0u32);
+        let mut best_i = (f64::INFINITY, 0u32);
+        for bits in 0..(1u32 << 8) {
+            let x: Vec<u8> = (0..8).map(|i| ((bits >> i) & 1) as u8).collect();
+            let s: Vec<i8> = x.iter().map(|&b| if b == 1 { 1 } else { -1 }).collect();
+            let eq = q.energy(&x);
+            if eq < best_q.0 {
+                best_q = (eq, bits);
+            }
+            let ei = ising.energy(&s);
+            if ei < best_i.0 {
+                best_i = (ei, bits);
+            }
+        }
+        assert_eq!(best_q.1, best_i.1);
+    }
+
+    #[test]
+    fn flip_delta_matches_local_field() {
+        let mut rng = Pcg32::seeded(3);
+        let q = random_qubo(&mut rng, 10);
+        let (ising, _) = q.to_ising();
+        let mut s: Vec<i8> = (0..10).map(|i| if i % 3 == 0 { 1 } else { -1 }).collect();
+        for i in 0..10 {
+            let e0 = ising.energy(&s);
+            let delta_pred = -2.0 * s[i] as f64 * ising.local_field(&s, i);
+            s[i] = -s[i];
+            let e1 = ising.energy(&s);
+            s[i] = -s[i];
+            assert!(
+                ((e1 - e0) - delta_pred).abs() < 1e-6,
+                "i={i} actual={} pred={delta_pred}",
+                e1 - e0
+            );
+        }
+    }
+
+    #[test]
+    fn padding_preserves_energy_of_real_spins() {
+        let mut rng = Pcg32::seeded(4);
+        let q = random_qubo(&mut rng, 12);
+        let (ising, _) = q.to_ising();
+        let padded = ising.padded(64);
+        let s: Vec<i8> = (0..12).map(|i| if i % 2 == 0 { 1 } else { -1 }).collect();
+        let mut sp = vec![-1i8; 64];
+        sp[..12].copy_from_slice(&s);
+        // padding spins have zero h and J -> identical energy
+        assert!((ising.energy(&s) - padded.energy(&sp)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn selection_round_trip() {
+        let sel = vec![0, 3, 7];
+        let s = selection_to_spins(10, &sel);
+        assert_eq!(selected_indices(&s), sel);
+    }
+}

@@ -1,0 +1,68 @@
+//! Normalized-objective evaluation (paper Eq. 13).
+//!
+//! Every accuracy number in the paper is
+//!     (obj − obj_min) / (obj_max − obj_min)
+//! where obj is the Eq. 3 value of the solver's selection evaluated in
+//! FLOATING POINT (quantization only ever affects the instance handed to
+//! the solver), and obj_min/obj_max are the exact bounds over all
+//! cardinality-M selections (the paper uses Gurobi; we use
+//! `solvers::exact` — same optimum, see DESIGN.md §Substitutions).
+
+use super::formulation::EsProblem;
+
+/// Exact bounds of the Eq. 3 objective over all M-subsets.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ObjectiveBounds {
+    pub min: f64,
+    pub max: f64,
+}
+
+impl ObjectiveBounds {
+    /// Normalize per Eq. 13, clamping tiny numeric overshoot.
+    pub fn normalize(&self, obj: f64) -> f64 {
+        let span = self.max - self.min;
+        if span <= 1e-12 {
+            // degenerate instance: every selection equivalent
+            return 1.0;
+        }
+        ((obj - self.min) / span).clamp(0.0, 1.0)
+    }
+}
+
+/// Compute exact bounds with the branch-and-bound exact solver.
+pub fn exact_bounds(p: &EsProblem) -> ObjectiveBounds {
+    let max = crate::solvers::exact::solve_max(p).objective;
+    let min = crate::solvers::exact::solve_min(p).objective;
+    ObjectiveBounds { min, max }
+}
+
+/// Normalized objective of a selection against precomputed bounds.
+pub fn normalized_objective(p: &EsProblem, bounds: &ObjectiveBounds, selected: &[usize]) -> f64 {
+    bounds.normalize(p.objective(selected))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalize_maps_bounds_to_unit_interval() {
+        let b = ObjectiveBounds { min: -2.0, max: 6.0 };
+        assert_eq!(b.normalize(-2.0), 0.0);
+        assert_eq!(b.normalize(6.0), 1.0);
+        assert_eq!(b.normalize(2.0), 0.5);
+    }
+
+    #[test]
+    fn normalize_clamps_overshoot() {
+        let b = ObjectiveBounds { min: 0.0, max: 1.0 };
+        assert_eq!(b.normalize(1.0 + 1e-9), 1.0);
+        assert_eq!(b.normalize(-1e-9), 0.0);
+    }
+
+    #[test]
+    fn degenerate_bounds_normalize_to_one() {
+        let b = ObjectiveBounds { min: 3.0, max: 3.0 };
+        assert_eq!(b.normalize(3.0), 1.0);
+    }
+}

@@ -1,0 +1,22 @@
+//! cobi-es: extractive summarization on a (simulated) CMOS coupled-
+//! oscillator Ising machine — a three-layer Rust + JAX + Pallas
+//! reproduction of Zeng et al., "Extractive summarization on a CMOS Ising
+//! machine" (2026). See DESIGN.md for the architecture and substitutions.
+
+pub mod cli;
+pub mod cobi;
+pub mod config;
+pub mod corpus;
+pub mod decompose;
+pub mod embed;
+pub mod experiments;
+pub mod ising;
+pub mod metrics;
+pub mod pipeline;
+pub mod quant;
+pub mod refine;
+pub mod runtime;
+pub mod service;
+pub mod solvers;
+pub mod text;
+pub mod util;

@@ -1,0 +1,22 @@
+//! cobi-es binary entry point. All logic lives in the library; see
+//! `cobi_es::cli` for the command surface.
+
+use cobi_es::cli::{commands, Args};
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if args.get_bool("help") {
+        print!("{}", cobi_es::cli::USAGE);
+        return;
+    }
+    if let Err(e) = commands::dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,7 @@
+//! Evaluation metrics: TTS/ETS models (Eqs. 14–16) and ROUGE quality.
+
+pub mod quality;
+pub mod tts;
+
+pub use quality::{rouge_all, rouge_l, rouge_n, Rouge};
+pub use tts::{iterations_to_target, success_probability, tts_ets, TimingModel, TtsEts};

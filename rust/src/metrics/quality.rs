@@ -1,0 +1,151 @@
+//! Summary-quality metrics: ROUGE-1/2/L against reference summaries.
+//!
+//! The paper's accuracy metric is the normalized Ising objective (Eq. 13,
+//! in `ising::objective`); ROUGE here is the complementary *extrinsic*
+//! check used by the examples and service to confirm that high normalized
+//! objectives correspond to summaries overlapping the generator's
+//! designated key-fact sentences.
+
+use std::collections::HashMap;
+
+use crate::text::tokenize;
+
+fn grams(tokens: &[String], n: usize) -> HashMap<Vec<&str>, usize> {
+    let mut map: HashMap<Vec<&str>, usize> = HashMap::new();
+    if tokens.len() < n {
+        return map;
+    }
+    for w in tokens.windows(n) {
+        let key: Vec<&str> = w.iter().map(|s| s.as_str()).collect();
+        *map.entry(key).or_insert(0) += 1;
+    }
+    map
+}
+
+fn lower_tokens(text: &str) -> Vec<String> {
+    tokenize(text)
+        .into_iter()
+        .map(|w| w.to_ascii_lowercase())
+        .collect()
+}
+
+/// ROUGE-N F1 between candidate and reference texts.
+pub fn rouge_n(candidate: &str, reference: &str, n: usize) -> f64 {
+    let ct = lower_tokens(candidate);
+    let rt = lower_tokens(reference);
+    let cg = grams(&ct, n);
+    let rg = grams(&rt, n);
+    let overlap: usize = rg
+        .iter()
+        .map(|(g, &rc)| rc.min(cg.get(g).copied().unwrap_or(0)))
+        .sum();
+    let c_total: usize = cg.values().sum();
+    let r_total: usize = rg.values().sum();
+    if c_total == 0 || r_total == 0 {
+        return 0.0;
+    }
+    let p = overlap as f64 / c_total as f64;
+    let r = overlap as f64 / r_total as f64;
+    if p + r == 0.0 {
+        0.0
+    } else {
+        2.0 * p * r / (p + r)
+    }
+}
+
+/// Longest common subsequence length (token level).
+fn lcs_len(a: &[String], b: &[String]) -> usize {
+    let (n, m) = (a.len(), b.len());
+    if n == 0 || m == 0 {
+        return 0;
+    }
+    let mut prev = vec![0usize; m + 1];
+    let mut cur = vec![0usize; m + 1];
+    for i in 1..=n {
+        for j in 1..=m {
+            cur[j] = if a[i - 1] == b[j - 1] {
+                prev[j - 1] + 1
+            } else {
+                prev[j].max(cur[j - 1])
+            };
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[m]
+}
+
+/// ROUGE-L F1 (LCS-based).
+pub fn rouge_l(candidate: &str, reference: &str) -> f64 {
+    let ct = lower_tokens(candidate);
+    let rt = lower_tokens(reference);
+    let l = lcs_len(&ct, &rt) as f64;
+    if ct.is_empty() || rt.is_empty() || l == 0.0 {
+        return 0.0;
+    }
+    let p = l / ct.len() as f64;
+    let r = l / rt.len() as f64;
+    2.0 * p * r / (p + r)
+}
+
+/// Bundle of the three scores.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Rouge {
+    pub rouge1: f64,
+    pub rouge2: f64,
+    pub rouge_l: f64,
+}
+
+pub fn rouge_all(candidate: &str, reference: &str) -> Rouge {
+    Rouge {
+        rouge1: rouge_n(candidate, reference, 1),
+        rouge2: rouge_n(candidate, reference, 2),
+        rouge_l: rouge_l(candidate, reference),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_texts_score_one() {
+        let t = "the quick brown fox jumps over the lazy dog";
+        assert!((rouge_n(t, t, 1) - 1.0).abs() < 1e-12);
+        assert!((rouge_n(t, t, 2) - 1.0).abs() < 1e-12);
+        assert!((rouge_l(t, t) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn disjoint_texts_score_zero() {
+        assert_eq!(rouge_n("alpha beta gamma", "delta epsilon zeta", 1), 0.0);
+        assert_eq!(rouge_l("alpha beta", "delta epsilon"), 0.0);
+    }
+
+    #[test]
+    fn rouge1_known_value() {
+        // cand: {the, cat}, ref: {the, dog}: overlap 1, P=R=1/2, F1=1/2
+        let f = rouge_n("the cat", "the dog", 1);
+        assert!((f - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rouge_l_respects_order() {
+        // same bag of words, different order: L < 1
+        let a = "one two three four";
+        let b = "four three two one";
+        assert!((rouge_n(a, b, 1) - 1.0).abs() < 1e-12);
+        assert!(rouge_l(a, b) < 0.5);
+    }
+
+    #[test]
+    fn case_insensitive() {
+        assert!((rouge_n("The CAT", "the cat", 1) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_inputs_are_zero() {
+        assert_eq!(rouge_n("", "the cat", 1), 0.0);
+        assert_eq!(rouge_n("the cat", "", 2), 0.0);
+        assert_eq!(rouge_l("", ""), 0.0);
+    }
+}

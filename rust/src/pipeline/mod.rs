@@ -1,0 +1,338 @@
+//! End-to-end ES pipeline: document -> sentences -> embeddings ->
+//! formulation -> decomposition -> quantize -> solve -> refine -> summary.
+//!
+//! This is the user-facing composition of every subsystem; the experiment
+//! drivers reuse the same pieces at lower level for per-figure sweeps.
+
+use anyhow::{ensure, Context, Result};
+
+use crate::config::{CobiConfig, PipelineConfig};
+use crate::corpus::Document;
+use crate::decompose::{decompose, stage_count, DecomposeParams};
+use crate::embed::{Embedder, HashEmbedder, Scores};
+use crate::ising::{EsProblem, Formulation};
+use crate::quant::Rounding;
+use crate::refine::{refine, RefineConfig};
+use crate::runtime::ArtifactRuntime;
+use crate::solvers::random::RandomBaseline;
+use crate::solvers::sa::SaSolver;
+use crate::solvers::tabu::TabuSolver;
+use crate::solvers::{brute, exact, IsingSolver};
+use crate::text::MAX_SENTENCES;
+use crate::util::rng::Pcg32;
+
+/// Which engine solves the (sub)problems.
+pub enum SolverBackend {
+    /// Quantize + iterate + Ising solve (COBI / Tabu / SA / oscillator).
+    Ising(Box<dyn IsingSolver + Send>),
+    /// Exhaustive enumeration of M-subsets under the FP objective.
+    Brute,
+    /// Branch-and-bound exact maximization (Gurobi substitute).
+    Exact,
+    /// Best-of-iterations random selection.
+    Random(RandomBaseline),
+}
+
+impl SolverBackend {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SolverBackend::Ising(s) => s.name(),
+            SolverBackend::Brute => "brute",
+            SolverBackend::Exact => "exact",
+            SolverBackend::Random(_) => "random",
+        }
+    }
+
+    /// Build from the config string. `cobi` requires a device config; the
+    /// HLO backend additionally needs the artifact runtime.
+    pub fn from_config(
+        cfg: &PipelineConfig,
+        cobi: &CobiConfig,
+        rt: Option<&ArtifactRuntime>,
+    ) -> Result<Self> {
+        Ok(match cfg.solver.as_str() {
+            "cobi" => SolverBackend::Ising(Box::new(crate::cobi::CobiDevice::from_config(
+                cobi,
+                cfg.seed ^ 0xDE71CE,
+                rt,
+            )?)),
+            "tabu" => SolverBackend::Ising(Box::new(TabuSolver::seeded(cfg.seed ^ 0x7AB))),
+            "sa" => SolverBackend::Ising(Box::new(SaSolver::seeded(cfg.seed ^ 0x5A))),
+            "brute" => SolverBackend::Brute,
+            "exact" => SolverBackend::Exact,
+            "random" => SolverBackend::Random(RandomBaseline::seeded(cfg.seed ^ 0xBA5E)),
+            other => anyhow::bail!("unknown solver '{other}'"),
+        })
+    }
+}
+
+/// A produced summary.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub doc_id: String,
+    /// Selected sentence indices (ascending, original document order).
+    pub selected: Vec<usize>,
+    /// The extracted sentences, in document order.
+    pub sentences: Vec<String>,
+    /// FP Eq. 3 objective of the selection on the FULL document problem.
+    pub objective: f64,
+    /// Ising subproblems solved (decomposition stages x iterations).
+    pub total_solves: usize,
+    /// Decomposition stages.
+    pub stages: usize,
+}
+
+impl Summary {
+    pub fn text(&self) -> String {
+        self.sentences.join(" ")
+    }
+}
+
+pub struct EsPipeline {
+    pub cfg: PipelineConfig,
+    embedder: Box<dyn Embedder + Send>,
+    backend: SolverBackend,
+    rng: Pcg32,
+}
+
+impl EsPipeline {
+    pub fn new(
+        cfg: PipelineConfig,
+        embedder: Box<dyn Embedder + Send>,
+        backend: SolverBackend,
+    ) -> Self {
+        let rng = Pcg32::new(cfg.seed, 0xE5);
+        Self {
+            cfg,
+            embedder,
+            backend,
+            rng,
+        }
+    }
+
+    /// Default setup: hash embedder + backend from config strings.
+    pub fn from_config(
+        cfg: &PipelineConfig,
+        cobi: &CobiConfig,
+        rt: Option<&ArtifactRuntime>,
+    ) -> Result<Self> {
+        let backend = SolverBackend::from_config(cfg, cobi, rt)?;
+        Ok(Self::new(cfg.clone(), Box::new(HashEmbedder::new()), backend))
+    }
+
+    fn refine_config(&self) -> RefineConfig {
+        RefineConfig {
+            formulation: if self.cfg.improved_formulation {
+                Formulation::Improved
+            } else {
+                Formulation::Original
+            },
+            precision: self.cfg.precision,
+            rounding: self.cfg.rounding,
+            iterations: self.cfg.iterations,
+        }
+    }
+
+    fn decompose_params(&self) -> DecomposeParams {
+        DecomposeParams {
+            p: self.cfg.decompose_p,
+            q: self.cfg.decompose_q,
+            m: self.cfg.summary_len,
+        }
+    }
+
+    /// Solve one window subproblem; returns positions into the window.
+    fn solve_window(
+        scores: &Scores,
+        window: &[usize],
+        target: usize,
+        lambda: f32,
+        refine_cfg: &RefineConfig,
+        backend: &mut SolverBackend,
+        rng: &mut Pcg32,
+    ) -> Result<Vec<usize>> {
+        let sub = scores.subset(window);
+        let p = EsProblem {
+            mu: sub.mu,
+            beta: sub.beta,
+            lambda,
+            m: target,
+        };
+        let selected = match backend {
+            SolverBackend::Ising(solver) => {
+                refine(&p, refine_cfg, solver.as_mut(), rng)?.result.selected
+            }
+            SolverBackend::Brute => brute::solve(&p).selected,
+            SolverBackend::Exact => exact::solve_max(&p).selected,
+            SolverBackend::Random(r) => r.best_of(&p, refine_cfg.iterations).selected,
+        };
+        Ok(selected)
+    }
+
+    /// Summarize a document to `cfg.summary_len` sentences.
+    pub fn summarize(&mut self, doc: &Document) -> Result<Summary> {
+        let n = doc.len().min(MAX_SENTENCES);
+        ensure!(n >= self.cfg.summary_len, "document too short");
+        let sentences = &doc.sentences[..n];
+        let scores = self
+            .embedder
+            .scores(sentences)
+            .context("embedding failed")?;
+
+        let params = self.decompose_params();
+        let refine_cfg = self.refine_config();
+        let lambda = self.cfg.lambda;
+        let backend = &mut self.backend;
+        let rng = &mut self.rng;
+
+        let result = decompose(n, &params, |window, target| {
+            Self::solve_window(&scores, window, target, lambda, &refine_cfg, backend, rng)
+        })?;
+
+        // score on the full-document problem
+        let full = EsProblem {
+            mu: scores.mu.clone(),
+            beta: scores.beta.clone(),
+            lambda,
+            m: self.cfg.summary_len,
+        };
+        let objective = full.objective(&result.selected);
+
+        let stages = result.solves();
+        Ok(Summary {
+            doc_id: doc.id.clone(),
+            sentences: result
+                .selected
+                .iter()
+                .map(|&i| sentences[i].clone())
+                .collect(),
+            selected: result.selected,
+            objective,
+            total_solves: stages * self.cfg.iterations.max(1),
+            stages,
+        })
+    }
+
+    /// Expected decomposition stages for a document of `n` sentences.
+    pub fn expected_stages(&self, n: usize) -> usize {
+        stage_count(n.min(MAX_SENTENCES), &self.decompose_params())
+    }
+
+    /// Full-document EsProblem (for normalization by experiments).
+    pub fn problem_for(&mut self, doc: &Document) -> Result<EsProblem> {
+        let n = doc.len().min(MAX_SENTENCES);
+        let scores = self.embedder.scores(&doc.sentences[..n])?;
+        Ok(EsProblem {
+            mu: scores.mu,
+            beta: scores.beta,
+            lambda: self.cfg.lambda,
+            m: self.cfg.summary_len,
+        })
+    }
+}
+
+/// Convenience used by the experiments: rounding sweep order of §IV-A.
+pub fn rounding_sweep() -> Vec<Rounding> {
+    vec![
+        Rounding::Deterministic,
+        Rounding::Stoch5050,
+        Rounding::Stochastic,
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::benchmark_set;
+    use crate::ising::exact_bounds;
+
+    fn pipeline(solver: &str, iterations: usize) -> EsPipeline {
+        let cfg = PipelineConfig {
+            solver: solver.into(),
+            iterations,
+            ..Default::default()
+        };
+        EsPipeline::from_config(&cfg, &CobiConfig::default(), None).unwrap()
+    }
+
+    #[test]
+    fn summarizes_20_sentence_benchmark_with_tabu() {
+        let set = benchmark_set("cnn_dm_20").unwrap();
+        let mut p = pipeline("tabu", 5);
+        let s = p.summarize(&set.documents[0]).unwrap();
+        assert_eq!(s.selected.len(), 6);
+        assert_eq!(s.sentences.len(), 6);
+        assert_eq!(s.stages, 2); // 20 -> 10 -> 6
+        assert!(s.selected.windows(2).all(|w| w[0] < w[1]));
+        assert!(s.objective.is_finite());
+    }
+
+    #[test]
+    fn cobi_pipeline_end_to_end_quality() {
+        // the headline integration check: COBI-simulated pipeline beats
+        // random and reaches a decent normalized objective on one doc
+        let set = benchmark_set("cnn_dm_20").unwrap();
+        let doc = &set.documents[1];
+        let mut cobi = pipeline("cobi", 10);
+        let mut rnd = pipeline("random", 10);
+        let summary = cobi.summarize(doc).unwrap();
+        let baseline = rnd.summarize(doc).unwrap();
+
+        let problem = cobi.problem_for(doc).unwrap();
+        let bounds = exact_bounds(&problem);
+        let norm_cobi = bounds.normalize(summary.objective);
+        let norm_rand = bounds.normalize(baseline.objective);
+        assert!(
+            norm_cobi > 0.55,
+            "cobi normalized objective {norm_cobi} too low"
+        );
+        assert!(
+            norm_cobi >= norm_rand - 0.15,
+            "cobi {norm_cobi} not competitive with random {norm_rand}"
+        );
+    }
+
+    #[test]
+    fn exact_backend_is_upper_bound() {
+        let set = benchmark_set("bench_10").unwrap();
+        let doc = &set.documents[0];
+        let mut ex = pipeline("exact", 1);
+        let mut tb = pipeline("tabu", 5);
+        // bench_10 docs have 10 sentences < P: single-stage, exact solves
+        // the full problem optimally
+        let se = ex.summarize(doc).unwrap();
+        let st = tb.summarize(doc).unwrap();
+        assert!(se.objective >= st.objective - 1e-9);
+        assert_eq!(se.stages, 1);
+    }
+
+    #[test]
+    fn summary_lengths_follow_config() {
+        let set = benchmark_set("bench_10").unwrap();
+        let cfg = PipelineConfig {
+            solver: "tabu".into(),
+            summary_len: 3,
+            iterations: 3,
+            ..Default::default()
+        };
+        let mut p = EsPipeline::from_config(&cfg, &CobiConfig::default(), None).unwrap();
+        let s = p.summarize(&set.documents[2]).unwrap();
+        assert_eq!(s.selected.len(), 3);
+    }
+
+    #[test]
+    fn too_short_document_is_error() {
+        let doc = Document::from_text("tiny", "One sentence only.");
+        let mut p = pipeline("tabu", 1);
+        assert!(p.summarize(&doc).is_err());
+    }
+
+    #[test]
+    fn fifty_sentence_document_uses_four_stages() {
+        let set = benchmark_set("cnn_dm_50").unwrap();
+        let mut p = pipeline("tabu", 2);
+        let s = p.summarize(&set.documents[0]).unwrap();
+        assert_eq!(s.stages, 4);
+        assert_eq!(s.selected.len(), 6);
+    }
+}

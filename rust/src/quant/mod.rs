@@ -1,0 +1,8 @@
+//! Quantization: precision grids + rounding schemes (paper §III-B, §IV-A).
+
+pub mod precision;
+pub mod preprocess;
+pub mod rounding;
+
+pub use precision::Precision;
+pub use rounding::{quantize, Rounding};

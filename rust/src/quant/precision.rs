@@ -1,0 +1,130 @@
+//! Precision models (paper §III-B / §IV): floating point, fixed-point
+//! b-bit, and the COBI-native integer range [-14, +14].
+//!
+//! A precision defines the integer grid the Ising coefficients are scaled
+//! onto before rounding. The scale is JOINT over h and J (one divisor for
+//! the whole instance): preserving the h/J magnitude ratio is precisely
+//! what makes low precision hard and the paper's bias term valuable —
+//! per-vector scales would silently fix the imbalance and erase the
+//! phenomenon under study.
+
+use std::fmt;
+use std::str::FromStr;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// Full floating point (no quantization).
+    Fp,
+    /// Signed fixed-point with `b` bits: grid [-(2^(b-1)-1), +(2^(b-1)-1)].
+    Fixed(u8),
+    /// COBI-native integer weights: [-14, +14] (5-bit DAC, paper §II-B).
+    CobiInt,
+}
+
+impl Precision {
+    /// Largest representable magnitude on the integer grid (None for FP).
+    pub fn grid_max(&self) -> Option<i32> {
+        match self {
+            Precision::Fp => None,
+            Precision::Fixed(b) => {
+                assert!((2..=16).contains(b), "unsupported bit width {b}");
+                Some((1i32 << (b - 1)) - 1)
+            }
+            Precision::CobiInt => Some(14),
+        }
+    }
+
+    /// Scale factor mapping coefficients with max-abs `max_abs` onto the
+    /// grid; values are then `round(v * scale)` in [-grid_max, grid_max].
+    pub fn scale_for(&self, max_abs: f32) -> Option<f32> {
+        self.grid_max().map(|g| {
+            if max_abs <= 0.0 {
+                1.0
+            } else {
+                g as f32 / max_abs
+            }
+        })
+    }
+
+    /// All precisions the paper sweeps, in presentation order.
+    pub fn paper_sweep() -> Vec<Precision> {
+        vec![
+            Precision::Fp,
+            Precision::Fixed(8),
+            Precision::Fixed(7),
+            Precision::Fixed(6),
+            Precision::Fixed(5),
+            Precision::Fixed(4),
+            Precision::CobiInt,
+        ]
+    }
+}
+
+impl fmt::Display for Precision {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Precision::Fp => write!(f, "fp"),
+            Precision::Fixed(b) => write!(f, "{b}bit"),
+            Precision::CobiInt => write!(f, "int14"),
+        }
+    }
+}
+
+impl FromStr for Precision {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let t = s.trim().to_ascii_lowercase();
+        match t.as_str() {
+            "fp" | "fp32" | "float" | "full" => Ok(Precision::Fp),
+            "cobi" | "int14" | "cobiint" => Ok(Precision::CobiInt),
+            _ => {
+                if let Some(b) = t.strip_suffix("bit") {
+                    let bits: u8 = b.parse().map_err(|_| format!("bad precision '{s}'"))?;
+                    if !(2..=16).contains(&bits) {
+                        return Err(format!("precision bits out of range: {s}"));
+                    }
+                    Ok(Precision::Fixed(bits))
+                } else {
+                    Err(format!(
+                        "bad precision '{s}' (expected fp, <b>bit, or int14)"
+                    ))
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_maxima() {
+        assert_eq!(Precision::Fp.grid_max(), None);
+        assert_eq!(Precision::Fixed(4).grid_max(), Some(7));
+        assert_eq!(Precision::Fixed(5).grid_max(), Some(15));
+        assert_eq!(Precision::Fixed(6).grid_max(), Some(31));
+        assert_eq!(Precision::Fixed(8).grid_max(), Some(127));
+        assert_eq!(Precision::CobiInt.grid_max(), Some(14));
+    }
+
+    #[test]
+    fn parse_round_trip() {
+        for p in Precision::paper_sweep() {
+            let s = p.to_string();
+            assert_eq!(s.parse::<Precision>().unwrap(), p, "{s}");
+        }
+        assert_eq!("FP".parse::<Precision>().unwrap(), Precision::Fp);
+        assert_eq!("cobi".parse::<Precision>().unwrap(), Precision::CobiInt);
+        assert!("17".parse::<Precision>().is_err());
+        assert!("99bit".parse::<Precision>().is_err());
+    }
+
+    #[test]
+    fn scale_maps_max_onto_grid_edge() {
+        let s = Precision::CobiInt.scale_for(7.0).unwrap();
+        assert!((7.0 * s - 14.0).abs() < 1e-6);
+        assert!(Precision::Fp.scale_for(7.0).is_none());
+    }
+}

@@ -1,0 +1,256 @@
+//! Hardware preprocessing from [Cılasun+ 2024] (paper §II-B): weight
+//! scaling, spin merging and spin pruning — the techniques the paper
+//! evaluates AGAINST its bias-term formulation (§III-A shows plain
+//! scaling/truncation fails for ES). Implemented so the comparison is
+//! reproducible and so oversized instances can still be squeezed onto
+//! the 59-spin array when decomposition is disabled.
+
+use crate::ising::Ising;
+
+/// Uniform scaling + truncation to an integer grid: the naive baseline
+/// §III-A argues against. `scale_to_j` scales so max|J| hits the grid
+/// edge (truncating h), otherwise scales so max|h| hits it (crushing J).
+pub fn scale_truncate(ising: &Ising, grid_max: i32, scale_to_j: bool) -> Ising {
+    let n = ising.n;
+    let jm = ising.j.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+    let hm = ising.h.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+    let basis = if scale_to_j { jm } else { hm };
+    let scale = if basis > 0.0 {
+        grid_max as f32 / basis
+    } else {
+        1.0
+    };
+    let g = grid_max as f32;
+    let mut out = Ising::new(n);
+    for i in 0..n {
+        out.h[i] = (ising.h[i] * scale).round().clamp(-g, g);
+        for j in 0..n {
+            out.j[i * n + j] = (ising.j[i * n + j] * scale).round().clamp(-g, g);
+        }
+    }
+    out
+}
+
+/// Result of a merge: the reduced instance plus the mapping back.
+#[derive(Debug, Clone)]
+pub struct MergedIsing {
+    pub ising: Ising,
+    /// group[k] = original spin indices merged into reduced spin k.
+    pub groups: Vec<Vec<usize>>,
+    /// sign[original] relative to its group representative (+1 aligned,
+    /// -1 anti-aligned).
+    pub signs: Vec<i8>,
+}
+
+impl MergedIsing {
+    /// Expand a reduced configuration back to the original spins.
+    pub fn expand(&self, reduced: &[i8]) -> Vec<i8> {
+        let n_orig = self.signs.len();
+        let mut out = vec![0i8; n_orig];
+        for (k, group) in self.groups.iter().enumerate() {
+            for &orig in group {
+                out[orig] = reduced[k] * self.signs[orig];
+            }
+        }
+        debug_assert!(out.iter().all(|&s| s != 0));
+        out
+    }
+}
+
+/// Spin merging: greedily contract the pair with the largest |J_ij|
+/// until at most `target_spins` remain. A merged pair is constrained to
+/// s_i = sign * s_j with sign = -sign(J_ij) (the coupling's preferred
+/// relative orientation — J < 0 favours alignment in our minimization
+/// convention); fields and couplings accumulate accordingly.
+pub fn merge_spins(ising: &Ising, target_spins: usize) -> MergedIsing {
+    let n = ising.n;
+    assert!(target_spins >= 1);
+    // current reduced instance state, dense over "alive" representatives
+    let mut h: Vec<f64> = ising.h.iter().map(|&x| x as f64).collect();
+    let mut j: Vec<f64> = ising.j.iter().map(|&x| x as f64).collect();
+    let mut alive: Vec<bool> = vec![true; n];
+    let mut groups: Vec<Vec<usize>> = (0..n).map(|i| vec![i]).collect();
+    let mut signs: Vec<i8> = vec![1; n];
+    let mut alive_count = n;
+
+    while alive_count > target_spins {
+        // find the largest |J| between alive representatives
+        let mut best: Option<(usize, usize, f64)> = None;
+        for a in 0..n {
+            if !alive[a] {
+                continue;
+            }
+            for b in (a + 1)..n {
+                if !alive[b] {
+                    continue;
+                }
+                let w = j[a * n + b].abs();
+                if best.map_or(true, |(_, _, bw)| w > bw) {
+                    best = Some((a, b, w));
+                }
+            }
+        }
+        let Some((a, b, _)) = best else { break };
+        // orientation: minimize J_ab s_a s_b -> s_b = -sign(J_ab) * s_a
+        let rel: i8 = if j[a * n + b] > 0.0 { -1 } else { 1 };
+        // fold b into a: h_a += rel * h_b; J_a,k += rel * J_b,k
+        h[a] += rel as f64 * h[b];
+        for k in 0..n {
+            if k == a || k == b || !alive[k] {
+                continue;
+            }
+            let add = rel as f64 * j[b * n + k];
+            j[a * n + k] += add;
+            j[k * n + a] += add;
+        }
+        // record membership with signs relative to a's representative
+        let moved = std::mem::take(&mut groups[b]);
+        for &orig in &moved {
+            signs[orig] *= rel;
+        }
+        groups[a].extend(moved);
+        alive[b] = false;
+        alive_count -= 1;
+    }
+
+    // compact to a dense reduced instance
+    let reps: Vec<usize> = (0..n).filter(|&i| alive[i]).collect();
+    let m = reps.len();
+    let mut out = Ising::new(m);
+    let mut out_groups = Vec::with_capacity(m);
+    for (k, &a) in reps.iter().enumerate() {
+        out.h[k] = h[a] as f32;
+        out_groups.push(groups[a].clone());
+        for (l, &b) in reps.iter().enumerate() {
+            if k != l {
+                out.j[k * m + l] = j[a * n + b] as f32;
+            }
+        }
+    }
+    MergedIsing {
+        ising: out,
+        groups: out_groups,
+        signs,
+    }
+}
+
+/// Spin pruning: zero out couplings with |J| below `threshold` (relative
+/// to max |J|), returning the sparsified instance and the fraction kept.
+pub fn prune_couplings(ising: &Ising, threshold_frac: f32) -> (Ising, f64) {
+    let n = ising.n;
+    let jmax = ising.j.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+    let cut = jmax * threshold_frac;
+    let mut out = ising.clone();
+    let mut kept = 0usize;
+    let mut total = 0usize;
+    for i in 0..n {
+        for k in (i + 1)..n {
+            total += 1;
+            if out.jij(i, k).abs() < cut {
+                out.j[i * n + k] = 0.0;
+                out.j[k * n + i] = 0.0;
+            } else {
+                kept += 1;
+            }
+        }
+    }
+    (out, if total == 0 { 1.0 } else { kept as f64 / total as f64 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::exact::ising_ground_exhaustive;
+    use crate::util::rng::Pcg32;
+
+    fn glass(seed: u64, n: usize) -> Ising {
+        let mut rng = Pcg32::seeded(seed);
+        let mut ising = Ising::new(n);
+        for i in 0..n {
+            ising.h[i] = rng.range_f32(-1.0, 1.0);
+            for j in (i + 1)..n {
+                ising.set_pair(i, j, rng.range_f32(-1.0, 1.0));
+            }
+        }
+        ising
+    }
+
+    #[test]
+    fn scale_truncate_respects_grid() {
+        let ising = glass(1, 10);
+        for to_j in [true, false] {
+            let q = scale_truncate(&ising, 14, to_j);
+            for &v in q.h.iter().chain(q.j.iter()) {
+                assert!(v.fract() == 0.0 && v.abs() <= 14.0);
+            }
+        }
+    }
+
+    #[test]
+    fn scale_to_h_crushes_j_variability() {
+        // reproduce §III-A's complaint quantitatively on an ES-like
+        // instance: h ~ 10x J in magnitude -> scaling h to the grid maps
+        // all J to at most a couple of distinct integers
+        let mut ising = Ising::new(8);
+        for i in 0..8 {
+            ising.h[i] = 3.5 + 0.1 * i as f32;
+            for j in (i + 1)..8 {
+                ising.set_pair(i, j, 0.5 + 0.01 * (i + j) as f32);
+            }
+        }
+        let q = scale_truncate(&ising, 14, false);
+        let distinct: std::collections::BTreeSet<i64> = q
+            .upper_couplings()
+            .iter()
+            .map(|&v| v as i64)
+            .collect();
+        assert!(distinct.len() <= 2, "J variability survived: {distinct:?}");
+    }
+
+    #[test]
+    fn merge_preserves_ground_state_energy_when_merging_strong_pairs() {
+        // add one dominant coupling; merging it must keep the ground state
+        let mut ising = glass(3, 10);
+        ising.set_pair(2, 7, -50.0); // strongly ferromagnetic pair
+        let (ge, gs, _) = ising_ground_exhaustive(&ising);
+        let merged = merge_spins(&ising, 9);
+        assert_eq!(merged.ising.n, 9);
+        let (re, rs, _) = ising_ground_exhaustive(&merged.ising);
+        let expanded = merged.expand(&rs);
+        // ground state of merged == ground state of original (the strong
+        // pair is aligned in the true optimum)
+        assert!(
+            (ising.energy(&expanded) - ge).abs() < 1e-6,
+            "expanded energy {} vs ground {ge} (merged reported {re})",
+            ising.energy(&expanded)
+        );
+        assert_eq!(gs[2] , gs[7], "dominant J<0 pair should align");
+    }
+
+    #[test]
+    fn merge_to_target_size() {
+        let ising = glass(5, 12);
+        let merged = merge_spins(&ising, 6);
+        assert_eq!(merged.ising.n, 6);
+        let total: usize = merged.groups.iter().map(Vec::len).sum();
+        assert_eq!(total, 12, "every original spin mapped");
+        // expansion covers all spins with ±1
+        let reduced = vec![1i8; 6];
+        let exp = merged.expand(&reduced);
+        assert_eq!(exp.len(), 12);
+        assert!(exp.iter().all(|&s| s == 1 || s == -1));
+    }
+
+    #[test]
+    fn prune_zeroes_weak_couplings_only() {
+        let mut ising = Ising::new(6);
+        ising.set_pair(0, 1, 1.0);
+        ising.set_pair(2, 3, 0.05);
+        let (p, kept) = prune_couplings(&ising, 0.1);
+        assert_eq!(p.jij(0, 1), 1.0);
+        assert_eq!(p.jij(2, 3), 0.0);
+        assert!(kept < 1.0);
+        // symmetry preserved
+        assert_eq!(p.jij(3, 2), 0.0);
+    }
+}

@@ -1,0 +1,248 @@
+//! Rounding schemes for coefficient quantization (paper §IV-A).
+//!
+//!   * Deterministic — nearest integer; the same quantized Hamiltonian
+//!     every iteration (explores only solver randomness).
+//!   * Stoch5050 — up or down with probability 1/2 regardless of the
+//!     fractional part; large perturbation, collapses at low precision.
+//!   * Stochastic — up with probability equal to the fractional part
+//!     (unbiased: E[q] = v); the paper's default.
+
+use std::fmt;
+use std::str::FromStr;
+
+use crate::ising::Ising;
+use crate::util::rng::Pcg32;
+
+use super::precision::Precision;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Rounding {
+    Deterministic,
+    Stoch5050,
+    Stochastic,
+}
+
+impl fmt::Display for Rounding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Rounding::Deterministic => write!(f, "deterministic"),
+            Rounding::Stoch5050 => write!(f, "stoch5050"),
+            Rounding::Stochastic => write!(f, "stochastic"),
+        }
+    }
+}
+
+impl FromStr for Rounding {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "deterministic" | "det" | "nearest" => Ok(Rounding::Deterministic),
+            "stoch5050" | "5050" | "half" => Ok(Rounding::Stoch5050),
+            "stochastic" | "stoch" | "sr" => Ok(Rounding::Stochastic),
+            other => Err(format!("bad rounding '{other}'")),
+        }
+    }
+}
+
+impl Rounding {
+    /// Round one already-scaled value to the integer grid.
+    #[inline]
+    pub fn round(&self, v: f32, rng: &mut Pcg32) -> f32 {
+        let floor = v.floor();
+        let frac = v - floor;
+        match self {
+            Rounding::Deterministic => {
+                // nearest, half away from zero (matches numpy for our use)
+                if frac >= 0.5 {
+                    floor + 1.0
+                } else {
+                    floor
+                }
+            }
+            Rounding::Stoch5050 => {
+                if frac == 0.0 {
+                    floor
+                } else if rng.bernoulli(0.5) {
+                    floor + 1.0
+                } else {
+                    floor
+                }
+            }
+            Rounding::Stochastic => {
+                if rng.f32() < frac {
+                    floor + 1.0
+                } else {
+                    floor
+                }
+            }
+        }
+    }
+}
+
+/// Quantize an Ising instance to `precision` with `rounding`.
+///
+/// Returns a NEW instance whose coefficients are integers (stored as f32)
+/// on the precision grid, in the ORIGINAL energy scale divided by `scale`
+/// — solvers only care about the argmin, which is scale-invariant; the
+/// evaluation of candidate solutions always uses the FP instance.
+///
+/// Symmetry: each unordered pair (i, j) is rounded ONCE and mirrored, so
+/// the quantized J stays symmetric (stochastically rounding both triangles
+/// independently would break J_ij = J_ji, which the hardware cannot even
+/// represent).
+pub fn quantize(ising: &Ising, precision: Precision, rounding: Rounding, rng: &mut Pcg32) -> Ising {
+    let Some(scale) = precision.scale_for(ising.max_abs()) else {
+        return ising.clone(); // FP: identity
+    };
+    let grid = precision.grid_max().unwrap() as f32;
+    let n = ising.n;
+    let mut out = Ising::new(n);
+    for i in 0..n {
+        out.h[i] = rounding.round(ising.h[i] * scale, rng).clamp(-grid, grid);
+    }
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let q = rounding
+                .round(ising.jij(i, j) * scale, rng)
+                .clamp(-grid, grid);
+            out.j[i * n + j] = q;
+            out.j[j * n + i] = q;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check_default;
+
+    #[test]
+    fn deterministic_rounds_to_nearest() {
+        let mut rng = Pcg32::seeded(1);
+        let r = Rounding::Deterministic;
+        assert_eq!(r.round(1.4, &mut rng), 1.0);
+        assert_eq!(r.round(1.5, &mut rng), 2.0);
+        assert_eq!(r.round(-1.4, &mut rng), -1.0);
+        assert_eq!(r.round(-1.6, &mut rng), -2.0);
+        assert_eq!(r.round(3.0, &mut rng), 3.0);
+    }
+
+    #[test]
+    fn stochastic_is_unbiased() {
+        let mut rng = Pcg32::seeded(2);
+        let v = 2.3f32;
+        let n = 50_000;
+        let mean: f64 = (0..n)
+            .map(|_| Rounding::Stochastic.round(v, &mut rng) as f64)
+            .sum::<f64>()
+            / n as f64;
+        assert!((mean - 2.3).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn stoch5050_is_biased_toward_half() {
+        let mut rng = Pcg32::seeded(3);
+        let v = 2.9f32; // nearest is 3; 50/50 averages 2.5
+        let n = 50_000;
+        let mean: f64 = (0..n)
+            .map(|_| Rounding::Stoch5050.round(v, &mut rng) as f64)
+            .sum::<f64>()
+            / n as f64;
+        assert!((mean - 2.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn integers_pass_through_unchanged() {
+        let mut rng = Pcg32::seeded(4);
+        for r in [
+            Rounding::Deterministic,
+            Rounding::Stoch5050,
+            Rounding::Stochastic,
+        ] {
+            for v in [-3.0f32, 0.0, 5.0] {
+                assert_eq!(r.round(v, &mut rng), v, "{r} {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_properties() {
+        check_default("quantize invariants", 99, |rng| {
+            let n = 4 + rng.below(12) as usize;
+            let mut ising = Ising::new(n);
+            for i in 0..n {
+                ising.h[i] = rng.range_f32(-8.0, 8.0);
+                for j in (i + 1)..n {
+                    let v = rng.range_f32(-2.0, 2.0);
+                    ising.set_pair(i, j, v);
+                }
+            }
+            let precision = match rng.below(3) {
+                0 => Precision::Fixed(4),
+                1 => Precision::Fixed(6),
+                _ => Precision::CobiInt,
+            };
+            let rounding = match rng.below(3) {
+                0 => Rounding::Deterministic,
+                1 => Rounding::Stoch5050,
+                _ => Rounding::Stochastic,
+            };
+            let q = quantize(&ising, precision, rounding, rng);
+            let grid = precision.grid_max().unwrap() as f32;
+            for (idx, &v) in q.h.iter().chain(q.j.iter()).enumerate() {
+                crate::prop_assert!(v.fract() == 0.0, "non-integer at {idx}: {v}");
+                crate::prop_assert!(v.abs() <= grid, "out of grid at {idx}: {v}");
+            }
+            // symmetry + zero diagonal preserved
+            for i in 0..n {
+                crate::prop_assert!(q.jij(i, i) == 0.0, "diag {i}");
+                for j in 0..n {
+                    crate::prop_assert!(
+                        q.jij(i, j) == q.jij(j, i),
+                        "asymmetric at ({i},{j})"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fp_quantize_is_identity() {
+        let mut rng = Pcg32::seeded(5);
+        let mut ising = Ising::new(6);
+        ising.h[0] = 1.234;
+        ising.set_pair(0, 1, -0.77);
+        let q = quantize(&ising, Precision::Fp, Rounding::Stochastic, &mut rng);
+        assert_eq!(q, ising);
+    }
+
+    #[test]
+    fn deterministic_quantize_reproducible() {
+        let mut rng1 = Pcg32::seeded(6);
+        let mut rng2 = Pcg32::seeded(7); // different RNG must not matter
+        let mut ising = Ising::new(8);
+        for i in 0..8 {
+            ising.h[i] = i as f32 * 0.37 - 1.0;
+            for j in (i + 1)..8 {
+                ising.set_pair(i, j, (i * j) as f32 * 0.11 - 0.3);
+            }
+        }
+        let a = quantize(&ising, Precision::Fixed(5), Rounding::Deterministic, &mut rng1);
+        let b = quantize(&ising, Precision::Fixed(5), Rounding::Deterministic, &mut rng2);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn max_coefficient_lands_on_grid_edge() {
+        let mut rng = Pcg32::seeded(8);
+        let mut ising = Ising::new(4);
+        ising.h[0] = 10.0; // max abs
+        ising.set_pair(1, 2, 5.0);
+        let q = quantize(&ising, Precision::CobiInt, Rounding::Deterministic, &mut rng);
+        assert_eq!(q.h[0], 14.0);
+        assert_eq!(q.jij(1, 2), 7.0);
+    }
+}

@@ -1,0 +1,260 @@
+//! Iterative refinement with (stochastic) rounding (paper §IV-A).
+//!
+//! Each iteration quantizes the FP Ising formulation with the configured
+//! rounding scheme, solves the quantized instance (COBI / Tabu / SA), maps
+//! the spins back to a selection, REPAIRS it to cardinality M, and scores
+//! it under the original floating-point Eq. 3 objective. After i
+//! iterations the best candidate wins.
+//!
+//! Deterministic rounding re-solves the SAME Hamiltonian every iteration
+//! (only solver randomness explores); stochastic rounding also re-samples
+//! the Hamiltonian — the diversity the paper exploits to compensate for
+//! precision loss.
+
+use anyhow::Result;
+
+use crate::ising::{formulate, selected_indices, EsProblem, Formulation};
+use crate::quant::{quantize, Precision, Rounding};
+use crate::solvers::{IsingSolver, SelectionResult};
+use crate::util::rng::Pcg32;
+
+/// Refinement configuration for one subproblem solve.
+#[derive(Debug, Clone)]
+pub struct RefineConfig {
+    pub formulation: Formulation,
+    pub precision: Precision,
+    pub rounding: Rounding,
+    /// Number of quantize→solve→evaluate iterations.
+    pub iterations: usize,
+}
+
+impl Default for RefineConfig {
+    fn default() -> Self {
+        Self {
+            formulation: Formulation::Improved,
+            precision: Precision::CobiInt,
+            rounding: Rounding::Stochastic,
+            iterations: 10,
+        }
+    }
+}
+
+/// Repair a selection to exactly M elements under the FP objective:
+/// greedily drop the element whose removal loses least / add the element
+/// whose addition gains most. Needed because (a) the improved formulation
+/// softens the cardinality constraint and (b) quantized instances may
+/// ground-state off-cardinality.
+pub fn repair_selection(p: &EsProblem, mut selected: Vec<usize>) -> Vec<usize> {
+    selected.sort_unstable();
+    selected.dedup();
+    while selected.len() > p.m {
+        // drop argmax of objective-after-removal
+        let mut best: Option<(usize, f64)> = None;
+        for k in 0..selected.len() {
+            let mut cand = selected.clone();
+            cand.remove(k);
+            let obj = p.objective(&cand);
+            if best.map_or(true, |(_, b)| obj > b) {
+                best = Some((k, obj));
+            }
+        }
+        selected.remove(best.unwrap().0);
+    }
+    while selected.len() < p.m {
+        let mut best: Option<(usize, f64)> = None;
+        for i in 0..p.n() {
+            if selected.binary_search(&i).is_ok() {
+                continue;
+            }
+            let mut cand = selected.clone();
+            cand.push(i);
+            let obj = p.objective(&cand);
+            if best.map_or(true, |(_, b)| obj > b) {
+                best = Some((i, obj));
+            }
+        }
+        selected.push(best.unwrap().0);
+        selected.sort_unstable();
+    }
+    selected
+}
+
+/// Trace of one refinement run (per-iteration objectives, for the Fig 2/3
+/// iteration curves).
+#[derive(Debug, Clone)]
+pub struct RefineTrace {
+    /// FP objective of the repaired candidate at each iteration.
+    pub objectives: Vec<f64>,
+    /// Best-so-far objective after each iteration (prefix max).
+    pub best_so_far: Vec<f64>,
+    pub result: SelectionResult,
+}
+
+/// Run iterative refinement of `p` with `solver` (which solves quantized
+/// Ising instances). `rng` drives the rounding draws only — solver
+/// randomness lives in the solver's own seeded RNG.
+pub fn refine(
+    p: &EsProblem,
+    cfg: &RefineConfig,
+    solver: &mut dyn IsingSolver,
+    rng: &mut Pcg32,
+) -> Result<RefineTrace> {
+    let es = formulate(p, cfg.formulation);
+    let iterations = cfg.iterations.max(1);
+    let mut objectives = Vec::with_capacity(iterations);
+    let mut best_so_far = Vec::with_capacity(iterations);
+    let mut best: Option<SelectionResult> = None;
+
+    // quantize all iterations up front (RNG draw order identical to the
+    // sequential loop), then solve through the batch path — devices with
+    // a batched artifact dispatch once per ANNEAL_BATCH instances.
+    let instances: Vec<_> = (0..iterations)
+        .map(|_| quantize(&es.ising, cfg.precision, cfg.rounding, rng))
+        .collect();
+    let refs: Vec<&crate::ising::Ising> = instances.iter().collect();
+    let solved_all = solver.solve_batch(&refs);
+
+    for solved in solved_all {
+        let raw = selected_indices(&solved.spins);
+        let selected = repair_selection(p, raw);
+        let objective = p.objective(&selected);
+        objectives.push(objective);
+        if best.as_ref().map_or(true, |b| objective > b.objective) {
+            best = Some(SelectionResult {
+                selected,
+                objective,
+            });
+        }
+        best_so_far.push(best.as_ref().unwrap().objective);
+    }
+    Ok(RefineTrace {
+        objectives,
+        best_so_far,
+        result: best.unwrap(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::tabu::TabuSolver;
+    use crate::util::proptest::check;
+
+    fn random_es(rng: &mut Pcg32, n: usize, m: usize) -> EsProblem {
+        let mu: Vec<f32> = (0..n).map(|_| rng.range_f32(0.3, 0.95)).collect();
+        let mut beta = vec![0.0f32; n * n];
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let b = rng.range_f32(0.2, 0.9);
+                beta[i * n + j] = b;
+                beta[j * n + i] = b;
+            }
+        }
+        EsProblem { mu, beta, lambda: 0.6, m }
+    }
+
+    #[test]
+    fn repair_properties() {
+        check("repair yields exactly M valid indices", 31, 64, |rng| {
+            let n = 6 + rng.below(14) as usize;
+            let m = 1 + rng.below(5.min(n as u32 - 1)) as usize;
+            let p = random_es(rng, n, m);
+            // random starting selection of random size
+            let k = rng.below(n as u32 + 1) as usize;
+            let start = rng.sample_indices(n, k);
+            let fixed = repair_selection(&p, start);
+            crate::prop_assert!(fixed.len() == m, "len {} != m {}", fixed.len(), m);
+            let mut d = fixed.clone();
+            d.dedup();
+            crate::prop_assert!(d.len() == m, "duplicates");
+            crate::prop_assert!(fixed.iter().all(|&i| i < n), "range");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn repair_keeps_feasible_selection_unchanged_count() {
+        let mut rng = Pcg32::seeded(1);
+        let p = random_es(&mut rng, 10, 4);
+        let sel = vec![1, 3, 5, 7];
+        assert_eq!(repair_selection(&p, sel.clone()), sel);
+    }
+
+    #[test]
+    fn best_so_far_is_monotone() {
+        let mut rng = Pcg32::seeded(2);
+        let p = random_es(&mut rng, 14, 5);
+        let mut solver = TabuSolver::seeded(3);
+        let cfg = RefineConfig {
+            iterations: 12,
+            ..Default::default()
+        };
+        let trace = refine(&p, &cfg, &mut solver, &mut rng).unwrap();
+        assert_eq!(trace.objectives.len(), 12);
+        for w in trace.best_so_far.windows(2) {
+            assert!(w[1] >= w[0] - 1e-12);
+        }
+        assert_eq!(
+            trace.result.objective,
+            *trace.best_so_far.last().unwrap()
+        );
+    }
+
+    #[test]
+    fn more_iterations_never_hurt() {
+        let mut rng1 = Pcg32::seeded(4);
+        let mut rng2 = Pcg32::seeded(4);
+        let p = {
+            let mut r = Pcg32::seeded(5);
+            random_es(&mut r, 12, 4)
+        };
+        let cfg1 = RefineConfig { iterations: 2, ..Default::default() };
+        let cfg20 = RefineConfig { iterations: 20, ..Default::default() };
+        let a = refine(&p, &cfg1, &mut TabuSolver::seeded(6), &mut rng1).unwrap();
+        let b = refine(&p, &cfg20, &mut TabuSolver::seeded(6), &mut rng2).unwrap();
+        assert!(b.result.objective >= a.result.objective - 1e-12);
+    }
+
+    #[test]
+    fn stochastic_refinement_recovers_fp_quality_on_quantized_instance() {
+        // end-to-end §IV-A claim in miniature: at int14, iterated
+        // stochastic rounding should reach the exact optimum on a small
+        // instance even though single deterministic solves may miss it
+        let mut rng = Pcg32::seeded(7);
+        let p = random_es(&mut rng, 12, 4);
+        let exact = crate::solvers::exact::solve_max(&p);
+        let cfg = RefineConfig {
+            formulation: Formulation::Improved,
+            precision: Precision::CobiInt,
+            rounding: Rounding::Stochastic,
+            iterations: 30,
+        };
+        let mut solver = TabuSolver::seeded(8);
+        let trace = refine(&p, &cfg, &mut solver, &mut rng).unwrap();
+        let gap = (exact.objective - trace.result.objective) / exact.objective.abs();
+        assert!(gap < 0.02, "gap {gap}: {} vs {}", trace.result.objective, exact.objective);
+    }
+
+    #[test]
+    fn deterministic_rounding_produces_single_hamiltonian() {
+        // with deterministic rounding + deterministic solver, every
+        // iteration yields the identical objective
+        let mut rng = Pcg32::seeded(9);
+        let p = random_es(&mut rng, 10, 3);
+        let cfg = RefineConfig {
+            rounding: Rounding::Deterministic,
+            iterations: 5,
+            ..Default::default()
+        };
+        // fresh tabu each call would reuse its seed; instead use one
+        // solver whose internal rng advances — objectives may differ only
+        // through solver randomness. Use exhaustive-quality tabu so each
+        // solve lands in the same ground state.
+        let mut solver = TabuSolver::seeded(10);
+        let trace = refine(&p, &cfg, &mut solver, &mut rng).unwrap();
+        let first = trace.objectives[0];
+        for &o in &trace.objectives {
+            assert!((o - first).abs() < 1e-9, "{:?}", trace.objectives);
+        }
+    }
+}

@@ -1,0 +1,292 @@
+//! Artifact registry: manifest-driven load/compile/execute of the AOT
+//! HLO-text modules emitted by `python -m compile.aot`.
+//!
+//! Compilation happens once per artifact (lazily, cached); execution takes
+//! and returns flat f32/i32 buffers so the rest of L3 never touches xla
+//! types. The manifest's static shapes are validated on every call —
+//! shape drift between the Python constants and the Rust callers is a
+//! build error, not a silent miscomputation.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+/// One input/output slot from the manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SlotSpec {
+    pub dtype: String,
+    pub dims: Vec<usize>,
+}
+
+impl SlotSpec {
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product::<usize>().max(1)
+    }
+}
+
+/// Manifest entry for one graph.
+#[derive(Debug, Clone, Default)]
+pub struct GraphSpec {
+    pub file: String,
+    pub inputs: Vec<SlotSpec>,
+    pub outputs: Vec<SlotSpec>,
+}
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub spec: GraphSpec,
+    pub name: String,
+}
+
+// SAFETY: execution goes through the TFRT CPU PJRT client, which is
+// internally thread-safe; the non-atomic Rc inside the xla wrapper is only
+// touched when an Executable is dropped, and Executables are always held
+// behind Arc with the owning ArtifactRuntime kept alive for the process
+// lifetime (see service::). The wrapper types merely lack derived markers.
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+/// Typed argument for execution.
+pub enum Arg<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+impl Executable {
+    /// Execute with flat buffers; returns one flat f32 vec per output.
+    ///
+    /// All current artifacts produce f32 outputs; extend on demand.
+    pub fn run(&self, args: &[Arg<'_>]) -> Result<Vec<Vec<f32>>> {
+        let spec = &self.spec;
+        if args.len() != spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                spec.inputs.len(),
+                args.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(args.len());
+        for (i, (arg, slot)) in args.iter().zip(&spec.inputs).enumerate() {
+            let lit = match (arg, slot.dtype.as_str()) {
+                (Arg::F32(buf), "float32") => {
+                    if buf.len() != slot.elements() {
+                        bail!(
+                            "{} input {i}: expected {} f32 elements, got {}",
+                            self.name,
+                            slot.elements(),
+                            buf.len()
+                        );
+                    }
+                    let dims: Vec<i64> = slot.dims.iter().map(|&d| d as i64).collect();
+                    xla::Literal::vec1(buf).reshape(&dims)?
+                }
+                (Arg::I32(buf), "int32") => {
+                    if buf.len() != slot.elements() {
+                        bail!(
+                            "{} input {i}: expected {} i32 elements, got {}",
+                            self.name,
+                            slot.elements(),
+                            buf.len()
+                        );
+                    }
+                    let dims: Vec<i64> = slot.dims.iter().map(|&d| d as i64).collect();
+                    xla::Literal::vec1(buf).reshape(&dims)?
+                }
+                (_, want) => bail!("{} input {i}: dtype mismatch (manifest: {want})", self.name),
+            };
+            literals.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        // jax lowered with return_tuple=True: single tuple output
+        let tuple = result[0][0]
+            .to_literal_sync()?
+            .to_tuple()
+            .context("expected tuple output")?;
+        if tuple.len() != spec.outputs.len() {
+            bail!(
+                "{}: manifest promises {} outputs, artifact returned {}",
+                self.name,
+                spec.outputs.len(),
+                tuple.len()
+            );
+        }
+        let mut out = Vec::with_capacity(tuple.len());
+        for (lit, slot) in tuple.iter().zip(&spec.outputs) {
+            let v: Vec<f32> = lit.to_vec()?;
+            if v.len() != slot.elements() {
+                bail!(
+                    "{}: output size {} != manifest {}",
+                    self.name,
+                    v.len(),
+                    slot.elements()
+                );
+            }
+            out.push(v);
+        }
+        Ok(out)
+    }
+}
+
+/// Manifest + lazily compiled executables over one PJRT CPU client.
+pub struct ArtifactRuntime {
+    dir: PathBuf,
+    client: xla::PjRtClient,
+    specs: HashMap<String, GraphSpec>,
+    compiled: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+// SAFETY: the PJRT CPU client and loaded executables are internally
+// thread-safe (TfrtCpuClient); the raw pointers in the xla wrapper types
+// lack auto-derived markers only.
+unsafe impl Send for ArtifactRuntime {}
+unsafe impl Sync for ArtifactRuntime {}
+
+impl ArtifactRuntime {
+    /// Open the artifact directory (must contain manifest.txt).
+    pub fn open(dir: &Path) -> Result<Self> {
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {}", manifest.display()))?;
+        let specs = parse_manifest(&text)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            client,
+            specs,
+            compiled: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Default location: $COBI_ES_ARTIFACTS or ./artifacts.
+    pub fn open_default() -> Result<Self> {
+        let dir = std::env::var("COBI_ES_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::open(Path::new(&dir))
+    }
+
+    pub fn graph_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.specs.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn spec(&self, name: &str) -> Option<&GraphSpec> {
+        self.specs.get(name)
+    }
+
+    /// Get (compiling on first use) the executable for `name`.
+    pub fn executable(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
+        if let Some(e) = self.compiled.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self
+            .specs
+            .get(name)
+            .with_context(|| format!("unknown artifact '{name}'"))?
+            .clone();
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        let executable = std::sync::Arc::new(Executable {
+            exe,
+            spec,
+            name: name.to_string(),
+        });
+        self.compiled
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), executable.clone());
+        Ok(executable)
+    }
+}
+
+fn parse_manifest(text: &str) -> Result<HashMap<String, GraphSpec>> {
+    let mut specs: HashMap<String, GraphSpec> = HashMap::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let parts: Vec<&str> = line.split_whitespace().collect();
+        if parts.len() != 6 {
+            bail!("manifest line {}: expected 6 fields: '{line}'", lineno + 1);
+        }
+        let (name, file, kind, idx, dtype, dims) =
+            (parts[0], parts[1], parts[2], parts[3], parts[4], parts[5]);
+        let idx: usize = idx.parse().context("bad slot index")?;
+        let dims: Vec<usize> = if dims == "scalar" {
+            vec![]
+        } else {
+            dims.split('x')
+                .map(|d| d.parse().context("bad dim"))
+                .collect::<Result<_>>()?
+        };
+        let entry = specs.entry(name.to_string()).or_default();
+        entry.file = file.to_string();
+        let slot = SlotSpec {
+            dtype: dtype.to_string(),
+            dims,
+        };
+        let list = match kind {
+            "in" => &mut entry.inputs,
+            "out" => &mut entry.outputs,
+            other => bail!("manifest line {}: bad kind '{other}'", lineno + 1),
+        };
+        if list.len() != idx {
+            bail!(
+                "manifest line {}: out-of-order slot {idx} (have {})",
+                lineno + 1,
+                list.len()
+            );
+        }
+        list.push(slot);
+    }
+    Ok(specs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parser_happy_path() {
+        let text = "\
+# comment
+energy energy.hlo.txt in 0 float32 64x64
+energy energy.hlo.txt in 1 float32 64
+energy energy.hlo.txt in 2 float32 32x64
+energy energy.hlo.txt out 0 float32 32
+";
+        let specs = parse_manifest(text).unwrap();
+        let e = &specs["energy"];
+        assert_eq!(e.file, "energy.hlo.txt");
+        assert_eq!(e.inputs.len(), 3);
+        assert_eq!(e.inputs[0].dims, vec![64, 64]);
+        assert_eq!(e.inputs[0].elements(), 4096);
+        assert_eq!(e.outputs[0].dims, vec![32]);
+    }
+
+    #[test]
+    fn manifest_rejects_malformed_lines() {
+        assert!(parse_manifest("too few fields").is_err());
+        assert!(parse_manifest("g f.hlo in 0 float32 8x8x").is_err());
+        assert!(parse_manifest("g f.hlo sideways 0 float32 8").is_err());
+        // out-of-order slots
+        assert!(parse_manifest("g f.hlo in 1 float32 8").is_err());
+    }
+
+    #[test]
+    fn scalar_dims_parse() {
+        let specs = parse_manifest("g f.hlo in 0 float32 scalar").unwrap();
+        assert_eq!(specs["g"].inputs[0].dims, Vec::<usize>::new());
+        assert_eq!(specs["g"].inputs[0].elements(), 1);
+    }
+}

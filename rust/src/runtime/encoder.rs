@@ -1,0 +1,98 @@
+//! Artifact-backed embedder: tokenizer -> encoder.hlo -> cosine.hlo.
+//!
+//! This is the L2 embedding path executed from Rust: hashed tokens go
+//! through the AOT transformer encoder, then the Pallas cosine artifact
+//! produces (mu, beta). Implements `embed::Embedder`, so the pipeline can
+//! swap it for the native hash embedder transparently.
+
+use std::sync::Arc;
+
+use anyhow::{ensure, Result};
+
+use crate::embed::{Embedder, Scores};
+use crate::text::{Tokenizer, MAX_SENTENCES, MAX_TOKENS};
+
+use super::artifacts::{Arg, ArtifactRuntime, Executable};
+
+pub struct EncoderPipeline {
+    encoder: Arc<Executable>,
+    cosine: Arc<Executable>,
+    tokenizer: Tokenizer,
+    embed_dim: usize,
+}
+
+impl EncoderPipeline {
+    pub fn new(rt: &ArtifactRuntime) -> Result<Self> {
+        let encoder = rt.executable("encoder")?;
+        let cosine = rt.executable("cosine")?;
+        let embed_dim = encoder.spec.outputs[0].dims[1];
+        ensure!(
+            encoder.spec.inputs[0].dims == vec![MAX_SENTENCES, MAX_TOKENS],
+            "encoder artifact shape {:?} does not match text constants",
+            encoder.spec.inputs[0].dims
+        );
+        Ok(Self {
+            encoder,
+            cosine,
+            tokenizer: Tokenizer::new(),
+            embed_dim,
+        })
+    }
+
+    /// Raw embeddings for up to MAX_SENTENCES sentences (padded rows
+    /// dropped from the result).
+    pub fn embed(&self, sentences: &[String]) -> Result<Vec<f32>> {
+        let n = sentences.len();
+        ensure!(n > 0, "empty document");
+        ensure!(
+            n <= MAX_SENTENCES,
+            "document has {n} sentences; encoder batch is {MAX_SENTENCES} \
+             (decompose first)"
+        );
+        let tokens = self.tokenizer.encode_batch(sentences, MAX_SENTENCES);
+        let outs = self.encoder.run(&[Arg::I32(&tokens)])?;
+        let full = &outs[0]; // MAX_SENTENCES x embed_dim
+        Ok(full[..n * self.embed_dim].to_vec())
+    }
+
+    /// Full scores via the cosine artifact (padding masked inside).
+    pub fn scores_via_artifact(&self, sentences: &[String]) -> Result<Scores> {
+        let n = sentences.len();
+        ensure!(n > 0 && n <= MAX_SENTENCES);
+        let tokens = self.tokenizer.encode_batch(sentences, MAX_SENTENCES);
+        let emb = self.encoder.run(&[Arg::I32(&tokens)])?.remove(0);
+        let mut mask = vec![0.0f32; MAX_SENTENCES];
+        for m in mask.iter_mut().take(n) {
+            *m = 1.0;
+        }
+        let outs = self.cosine.run(&[Arg::F32(&emb), Arg::F32(&mask)])?;
+        let (mu_full, beta_full) = (&outs[0], &outs[1]);
+        // crop to n x n, zero the diagonal (artifact returns cos(e_i,e_i)=1)
+        let mut mu = mu_full[..n].to_vec();
+        let mut beta = vec![0.0f32; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                if i != j {
+                    beta[i * n + j] = beta_full[i * MAX_SENTENCES + j];
+                }
+            }
+        }
+        // guard: degenerate all-pad rows could make mu NaN; clamp instead
+        for m in mu.iter_mut() {
+            if !m.is_finite() {
+                *m = 0.0;
+            }
+        }
+        Ok(Scores { mu, beta })
+    }
+}
+
+impl Embedder for EncoderPipeline {
+    fn name(&self) -> &'static str {
+        "aot-encoder"
+    }
+
+    fn scores(&mut self, sentences: &[String]) -> Result<Scores> {
+        self.scores_via_artifact(sentences)
+    }
+}

@@ -1,0 +1,20 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from
+//! the L3 hot path. Python never runs here — the artifacts under
+//! `artifacts/` are the only hand-off from the build-time JAX layer.
+//!
+//! The interchange format is HLO TEXT (not serialized protos): jax >= 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod artifacts;
+pub mod encoder;
+pub mod testvec;
+
+pub use artifacts::{ArtifactRuntime, Executable};
+pub use encoder::EncoderPipeline;
+
+/// Quick PJRT availability probe (used by `cobi-es doctor` and tests).
+pub fn smoke() -> anyhow::Result<String> {
+    let client = xla::PjRtClient::cpu()?;
+    Ok(client.platform_name())
+}

@@ -1,0 +1,153 @@
+//! Test-vector loader for the rust<->jax numerical cross-check.
+//!
+//! Format written by python/compile/aot.py:write_testvec (little-endian):
+//!   u32 n_arrays, then per array:
+//!   u32 kind (0=input, 1=output), u32 dtype (0=f32, 1=i32), u32 rank,
+//!   u32 dims[rank], payload (4 bytes/element).
+
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+#[derive(Debug, Clone)]
+pub enum TestArray {
+    F32 { dims: Vec<usize>, data: Vec<f32> },
+    I32 { dims: Vec<usize>, data: Vec<i32> },
+}
+
+impl TestArray {
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            TestArray::F32 { dims, .. } | TestArray::I32 { dims, .. } => dims,
+        }
+    }
+
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            TestArray::F32 { data, .. } => Some(data),
+            _ => None,
+        }
+    }
+
+    pub fn as_i32(&self) -> Option<&[i32]> {
+        match self {
+            TestArray::I32 { data, .. } => Some(data),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TestVector {
+    pub inputs: Vec<TestArray>,
+    pub outputs: Vec<TestArray>,
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn u32(&mut self) -> Result<u32> {
+        ensure!(self.off + 4 <= self.buf.len(), "truncated test vector");
+        let v = u32::from_le_bytes(self.buf[self.off..self.off + 4].try_into().unwrap());
+        self.off += 4;
+        Ok(v)
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(self.off + n <= self.buf.len(), "truncated payload");
+        let s = &self.buf[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+}
+
+pub fn load(path: &Path) -> Result<TestVector> {
+    let raw = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    let mut cur = Cursor { buf: &raw, off: 0 };
+    let n = cur.u32()? as usize;
+    let mut inputs = Vec::new();
+    let mut outputs = Vec::new();
+    for _ in 0..n {
+        let kind = cur.u32()?;
+        let dtype = cur.u32()?;
+        let rank = cur.u32()? as usize;
+        ensure!(rank <= 8, "absurd rank {rank}");
+        let mut dims = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            dims.push(cur.u32()? as usize);
+        }
+        let count: usize = dims.iter().product::<usize>().max(1);
+        let payload = cur.bytes(count * 4)?;
+        let arr = match dtype {
+            0 => TestArray::F32 {
+                dims,
+                data: payload
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            },
+            1 => TestArray::I32 {
+                dims,
+                data: payload
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            },
+            other => bail!("bad dtype tag {other}"),
+        };
+        match kind {
+            0 => inputs.push(arr),
+            1 => outputs.push(arr),
+            other => bail!("bad kind tag {other}"),
+        }
+    }
+    ensure!(cur.off == raw.len(), "trailing bytes in test vector");
+    Ok(TestVector { inputs, outputs })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn encode(arrays: &[(u32, u32, Vec<u32>, Vec<u8>)]) -> Vec<u8> {
+        let mut out = (arrays.len() as u32).to_le_bytes().to_vec();
+        for (kind, dt, dims, payload) in arrays {
+            out.extend(kind.to_le_bytes());
+            out.extend(dt.to_le_bytes());
+            out.extend((dims.len() as u32).to_le_bytes());
+            for d in dims {
+                out.extend(d.to_le_bytes());
+            }
+            out.extend(payload);
+        }
+        out
+    }
+
+    #[test]
+    fn round_trip() {
+        let f = [1.5f32, -2.0];
+        let payload: Vec<u8> = f.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let raw = encode(&[(0, 0, vec![2], payload)]);
+        let dir = std::env::temp_dir().join("cobi_es_testvec_rt");
+        std::fs::write(&dir, &raw).unwrap();
+        let tv = load(&dir).unwrap();
+        assert_eq!(tv.inputs.len(), 1);
+        assert_eq!(tv.inputs[0].as_f32().unwrap(), &f);
+        std::fs::remove_file(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_truncation_and_trailing() {
+        let f = [1.0f32];
+        let payload: Vec<u8> = f.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let mut raw = encode(&[(1, 0, vec![1], payload)]);
+        raw.pop();
+        let p = std::env::temp_dir().join("cobi_es_testvec_trunc");
+        std::fs::write(&p, &raw).unwrap();
+        assert!(load(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,121 @@
+//! Service metrics: counts + streaming latency summary.
+//!
+//! Latencies are kept in a bounded reservoir (uniform-ish by decimation)
+//! so percentile reporting stays O(1) memory under sustained load.
+
+use std::time::Duration;
+
+const RESERVOIR: usize = 4096;
+
+#[derive(Debug, Clone, Default)]
+pub struct ServiceMetrics {
+    pub submitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub rejected: u64,
+    /// Seconds spent queued (reservoir sample).
+    queue_waits: Vec<f64>,
+    /// Seconds spent solving (reservoir sample).
+    solve_times: Vec<f64>,
+}
+
+impl ServiceMetrics {
+    pub fn record_latency(&mut self, queue_wait: Duration, solve: Duration) {
+        push_reservoir(&mut self.queue_waits, queue_wait.as_secs_f64());
+        push_reservoir(&mut self.solve_times, solve.as_secs_f64());
+    }
+
+    pub fn latency_summary(&self) -> LatencySummary {
+        LatencySummary {
+            queue_p50: percentile(&self.queue_waits, 0.50),
+            queue_p99: percentile(&self.queue_waits, 0.99),
+            solve_p50: percentile(&self.solve_times, 0.50),
+            solve_p99: percentile(&self.solve_times, 0.99),
+        }
+    }
+
+    pub fn report(&self) -> String {
+        let l = self.latency_summary();
+        format!(
+            "submitted={} completed={} failed={} rejected={} | \
+             queue p50={:.2}ms p99={:.2}ms | solve p50={:.2}ms p99={:.2}ms",
+            self.submitted,
+            self.completed,
+            self.failed,
+            self.rejected,
+            l.queue_p50 * 1e3,
+            l.queue_p99 * 1e3,
+            l.solve_p50 * 1e3,
+            l.solve_p99 * 1e3,
+        )
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencySummary {
+    pub queue_p50: f64,
+    pub queue_p99: f64,
+    pub solve_p50: f64,
+    pub solve_p99: f64,
+}
+
+fn push_reservoir(v: &mut Vec<f64>, x: f64) {
+    if v.len() < RESERVOIR {
+        v.push(x);
+    } else {
+        // cheap decimation: overwrite a pseudo-random slot derived from
+        // the value count so long runs stay representative enough
+        let idx = (v.len() as u64)
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(x.to_bits()) as usize
+            % RESERVOIR;
+        v[idx] = x;
+    }
+}
+
+fn percentile(v: &[f64], q: f64) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
+    let mut s = v.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    crate::util::stats::quantile_sorted(&s, q)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_percentiles() {
+        let mut m = ServiceMetrics::default();
+        for i in 1..=100 {
+            m.record_latency(
+                Duration::from_millis(i),
+                Duration::from_millis(i * 2),
+            );
+        }
+        let l = m.latency_summary();
+        assert!((l.queue_p50 - 0.0505).abs() < 0.002, "{l:?}");
+        assert!(l.solve_p50 > l.queue_p50);
+        assert!(l.queue_p99 > l.queue_p50);
+    }
+
+    #[test]
+    fn reservoir_is_bounded() {
+        let mut m = ServiceMetrics::default();
+        for i in 0..10_000 {
+            m.record_latency(Duration::from_micros(i), Duration::from_micros(i));
+        }
+        assert!(m.queue_waits.len() <= RESERVOIR);
+        assert!(m.solve_times.len() <= RESERVOIR);
+    }
+
+    #[test]
+    fn empty_metrics_report_zeroes() {
+        let m = ServiceMetrics::default();
+        let l = m.latency_summary();
+        assert_eq!(l.queue_p50, 0.0);
+        assert!(m.report().contains("submitted=0"));
+    }
+}

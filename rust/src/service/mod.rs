@@ -1,0 +1,229 @@
+//! Edge summarization service — the deployment shape the paper's
+//! conclusion targets ("real-time, low-power summarization engines in
+//! edge devices").
+//!
+//! Architecture (threads + channels; no tokio in the offline vendor set):
+//!
+//!   clients ──> Router (bounded queue, backpressure) ──> worker pool
+//!                                                        each worker owns
+//!                                                        an EsPipeline +
+//!                                                        COBI device
+//!
+//! The router batches queued requests up to `max_batch` per dispatch (one
+//! channel send per batch, amortizing wakeups — the paper's device does
+//! one document at a time, so batching is at the request level), rejects
+//! when the queue is full, and aggregates latency/throughput metrics.
+
+pub mod metrics;
+pub mod tcp;
+pub mod worker;
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::config::Settings;
+use crate::corpus::Document;
+use crate::pipeline::Summary;
+
+pub use metrics::ServiceMetrics;
+use worker::{spawn_workers, Job};
+
+/// Rejected-due-to-backpressure error marker.
+#[derive(Debug, thiserror::Error)]
+#[error("service queue full (backpressure): retry later")]
+pub struct Overloaded;
+
+/// Client-side handle for one submitted request.
+pub struct Ticket {
+    pub id: u64,
+    rx: Receiver<Result<Summary>>,
+    submitted: Instant,
+}
+
+impl Ticket {
+    /// Block until the summary is ready.
+    pub fn wait(self) -> Result<Summary> {
+        match self.rx.recv() {
+            Ok(r) => r,
+            Err(_) => bail!("service dropped the request (shutdown?)"),
+        }
+    }
+
+    pub fn elapsed(&self) -> std::time::Duration {
+        self.submitted.elapsed()
+    }
+}
+
+/// The running service.
+pub struct Service {
+    tx: SyncSender<Job>,
+    metrics: Arc<Mutex<ServiceMetrics>>,
+    inflight: Arc<AtomicUsize>,
+    next_id: AtomicUsize,
+    stop: Arc<AtomicBool>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    queue_depth: usize,
+}
+
+impl Service {
+    /// Start the worker pool per `settings.service`.
+    pub fn start(settings: &Settings) -> Result<Self> {
+        let metrics = Arc::new(Mutex::new(ServiceMetrics::default()));
+        let inflight = Arc::new(AtomicUsize::new(0));
+        let stop = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = sync_channel::<Job>(settings.service.queue_depth);
+        let workers = spawn_workers(
+            settings,
+            rx,
+            metrics.clone(),
+            inflight.clone(),
+            stop.clone(),
+        )?;
+        Ok(Self {
+            tx,
+            metrics,
+            inflight,
+            next_id: AtomicUsize::new(1),
+            stop,
+            workers,
+            queue_depth: settings.service.queue_depth,
+        })
+    }
+
+    /// Submit a document; non-blocking. Errors with [`Overloaded`] when
+    /// the queue is full (backpressure) instead of buffering unboundedly.
+    pub fn submit(&self, doc: Document) -> Result<Ticket> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed) as u64;
+        let (otx, orx) = sync_channel(1);
+        let job = Job {
+            id,
+            doc,
+            respond: otx,
+            enqueued: Instant::now(),
+        };
+        match self.tx.try_send(job) {
+            Ok(()) => {
+                self.inflight.fetch_add(1, Ordering::Relaxed);
+                self.metrics.lock().unwrap().submitted += 1;
+                Ok(Ticket {
+                    id,
+                    rx: orx,
+                    submitted: Instant::now(),
+                })
+            }
+            Err(TrySendError::Full(_)) => {
+                self.metrics.lock().unwrap().rejected += 1;
+                Err(Overloaded.into())
+            }
+            Err(TrySendError::Disconnected(_)) => bail!("service stopped"),
+        }
+    }
+
+    /// Requests currently queued or executing.
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Relaxed)
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.queue_depth
+    }
+
+    pub fn metrics(&self) -> ServiceMetrics {
+        self.metrics.lock().unwrap().clone()
+    }
+
+    /// Graceful shutdown: stop accepting, drain workers.
+    pub fn shutdown(self) {
+        self.stop.store(true, Ordering::SeqCst);
+        drop(self.tx); // closes the queue; workers exit after draining
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::benchmark_set;
+
+    fn test_settings() -> Settings {
+        let mut s = Settings::default();
+        s.service.workers = 2;
+        s.service.queue_depth = 8;
+        s.pipeline.solver = "tabu".into();
+        s.pipeline.iterations = 2;
+        s.pipeline.summary_len = 3;
+        s
+    }
+
+    #[test]
+    fn serves_requests_end_to_end() {
+        let settings = test_settings();
+        let svc = Service::start(&settings).unwrap();
+        let set = benchmark_set("bench_10").unwrap();
+        let tickets: Vec<Ticket> = set.documents[..4]
+            .iter()
+            .map(|d| svc.submit(d.clone()).unwrap())
+            .collect();
+        for t in tickets {
+            let s = t.wait().unwrap();
+            assert_eq!(s.selected.len(), 3);
+        }
+        let m = svc.metrics();
+        assert_eq!(m.submitted, 4);
+        assert_eq!(m.completed, 4);
+        assert_eq!(m.failed, 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        let mut settings = test_settings();
+        settings.service.workers = 1;
+        settings.service.queue_depth = 1;
+        settings.pipeline.iterations = 10; // slow enough to pile up
+        let svc = Service::start(&settings).unwrap();
+        let set = benchmark_set("cnn_dm_20").unwrap();
+        let mut accepted = 0usize;
+        let mut rejected = 0usize;
+        let mut tickets = Vec::new();
+        for d in &set.documents {
+            match svc.submit(d.clone()) {
+                Ok(t) => {
+                    accepted += 1;
+                    tickets.push(t);
+                }
+                Err(_) => rejected += 1,
+            }
+        }
+        assert!(rejected > 0, "no backpressure observed");
+        for t in tickets {
+            let _ = t.wait();
+        }
+        assert_eq!(svc.metrics().rejected as usize, rejected);
+        let _ = accepted;
+        svc.shutdown();
+    }
+
+    #[test]
+    fn shutdown_joins_workers() {
+        let svc = Service::start(&test_settings()).unwrap();
+        svc.shutdown(); // must not hang
+    }
+
+    #[test]
+    fn too_short_documents_fail_cleanly() {
+        let svc = Service::start(&test_settings()).unwrap();
+        let doc = Document::from_text("tiny", "Too short.");
+        let t = svc.submit(doc).unwrap();
+        assert!(t.wait().is_err());
+        let m = svc.metrics();
+        assert_eq!(m.failed, 1);
+        svc.shutdown();
+    }
+}

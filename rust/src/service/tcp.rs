@@ -1,0 +1,199 @@
+//! TCP front-end: a line-oriented protocol over the summarization
+//! service, making `cobi-es serve --port N` a real network endpoint for
+//! edge deployments.
+//!
+//! Protocol (one request per connection, newline-framed):
+//!   client sends the document text terminated by a line containing
+//!   exactly `::EOF::`;
+//!   server replies `OK <m>` followed by the m summary sentences (one per
+//!   line) and closes, or `ERR <message>`.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::corpus::Document;
+
+use super::Service;
+
+pub const EOF_MARKER: &str = "::EOF::";
+
+/// A running TCP endpoint over a Service.
+pub struct TcpServer {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl TcpServer {
+    /// Bind and serve in background threads. Port 0 picks a free port.
+    pub fn start(service: Arc<Service>, port: u16) -> Result<Self> {
+        let listener =
+            TcpListener::bind(("127.0.0.1", port)).context("binding tcp listener")?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name("cobi-tcp-accept".into())
+            .spawn(move || {
+                let mut conn_id = 0u64;
+                while !stop2.load(Ordering::SeqCst) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            conn_id += 1;
+                            let svc = service.clone();
+                            let id = conn_id;
+                            // one thread per connection: edge workloads are
+                            // low-concurrency; the Service queue is the
+                            // real admission control
+                            let _ = std::thread::Builder::new()
+                                .name(format!("cobi-tcp-conn-{id}"))
+                                .spawn(move || {
+                                    let _ = handle_connection(&svc, stream, id);
+                                });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(Self {
+            addr,
+            stop,
+            accept_thread: Some(accept_thread),
+        })
+    }
+
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn handle_connection(service: &Service, stream: TcpStream, id: u64) -> Result<()> {
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(30)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut text = String::new();
+    let mut line = String::new();
+    loop {
+        line.clear();
+        let n = reader.read_line(&mut line)?;
+        if n == 0 || line.trim_end() == EOF_MARKER {
+            break;
+        }
+        text.push_str(&line);
+    }
+    let mut out = stream;
+    let doc = Document::from_text(&format!("tcp-{id}"), &text);
+    let reply = service
+        .submit(doc)
+        .and_then(|ticket| ticket.wait());
+    match reply {
+        Ok(summary) => {
+            writeln!(out, "OK {}", summary.sentences.len())?;
+            for s in &summary.sentences {
+                writeln!(out, "{s}")?;
+            }
+        }
+        Err(e) => {
+            writeln!(out, "ERR {e}")?;
+        }
+    }
+    Ok(())
+}
+
+/// Blocking client helper (used by tests, the serve demo and scripts).
+pub fn summarize_remote(addr: std::net::SocketAddr, text: &str) -> Result<Vec<String>> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.write_all(text.as_bytes())?;
+    stream.write_all(format!("\n{EOF_MARKER}\n").as_bytes())?;
+    let mut reader = BufReader::new(stream);
+    let mut header = String::new();
+    reader.read_line(&mut header)?;
+    let header = header.trim_end();
+    if let Some(rest) = header.strip_prefix("OK ") {
+        let m: usize = rest.parse().context("bad OK header")?;
+        let mut out = Vec::with_capacity(m);
+        for _ in 0..m {
+            let mut line = String::new();
+            reader.read_line(&mut line)?;
+            out.push(line.trim_end().to_string());
+        }
+        Ok(out)
+    } else {
+        anyhow::bail!("server error: {header}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Settings;
+    use crate::corpus::benchmark_set;
+
+    #[test]
+    fn tcp_round_trip() {
+        let mut settings = Settings::default();
+        settings.service.workers = 1;
+        settings.pipeline.solver = "tabu".into();
+        settings.pipeline.iterations = 2;
+        let svc = Arc::new(Service::start(&settings).unwrap());
+        let server = TcpServer::start(svc.clone(), 0).unwrap();
+
+        let set = benchmark_set("cnn_dm_20").unwrap();
+        let text = set.documents[0].text();
+        let summary = summarize_remote(server.addr, &text).unwrap();
+        assert_eq!(summary.len(), 6);
+        // summary sentences come from the document
+        for s in &summary {
+            assert!(
+                set.documents[0].sentences.iter().any(|d| d == s),
+                "sentence not from document: {s}"
+            );
+        }
+        server.stop();
+    }
+
+    #[test]
+    fn tcp_error_for_tiny_document() {
+        let mut settings = Settings::default();
+        settings.service.workers = 1;
+        settings.pipeline.solver = "tabu".into();
+        settings.pipeline.iterations = 1;
+        let svc = Arc::new(Service::start(&settings).unwrap());
+        let server = TcpServer::start(svc.clone(), 0).unwrap();
+        let err = summarize_remote(server.addr, "One sentence.").unwrap_err();
+        assert!(err.to_string().contains("server error"), "{err}");
+        server.stop();
+    }
+
+    #[test]
+    fn tcp_concurrent_clients() {
+        let mut settings = Settings::default();
+        settings.service.workers = 2;
+        settings.pipeline.solver = "tabu".into();
+        settings.pipeline.iterations = 1;
+        let svc = Arc::new(Service::start(&settings).unwrap());
+        let server = TcpServer::start(svc.clone(), 0).unwrap();
+        let set = benchmark_set("cnn_dm_20").unwrap();
+        let addr = server.addr;
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                let text = set.documents[i].text();
+                std::thread::spawn(move || summarize_remote(addr, &text).unwrap())
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap().len(), 6);
+        }
+        server.stop();
+    }
+}

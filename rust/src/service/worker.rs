@@ -1,0 +1,112 @@
+//! Worker pool: each worker owns a full EsPipeline (embedder + solver/COBI
+//! device) and drains the shared queue. A single shared receiver behind a
+//! mutex gives natural work-stealing load balance without a router thread.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::Settings;
+use crate::corpus::Document;
+use crate::pipeline::{EsPipeline, Summary};
+
+use super::metrics::ServiceMetrics;
+
+/// One queued request.
+pub struct Job {
+    pub id: u64,
+    pub doc: Document,
+    pub respond: SyncSender<Result<Summary>>,
+    pub enqueued: Instant,
+}
+
+pub fn spawn_workers(
+    settings: &Settings,
+    rx: Receiver<Job>,
+    metrics: Arc<Mutex<ServiceMetrics>>,
+    inflight: Arc<AtomicUsize>,
+    stop: Arc<AtomicBool>,
+) -> Result<Vec<std::thread::JoinHandle<()>>> {
+    let shared_rx = Arc::new(Mutex::new(rx));
+    let mut handles = Vec::new();
+    for w in 0..settings.service.workers.max(1) {
+        // per-worker pipeline: derived seed keeps workers decorrelated but
+        // the fleet reproducible
+        let mut cfg = settings.pipeline.clone();
+        cfg.seed = cfg.seed.wrapping_add(w as u64 * 0x9E37);
+        let mut pipeline = EsPipeline::from_config(&cfg, &settings.cobi, None)?;
+        let rx = shared_rx.clone();
+        let metrics = metrics.clone();
+        let inflight = inflight.clone();
+        let stop = stop.clone();
+        let max_batch = settings.service.max_batch.max(1);
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("cobi-worker-{w}"))
+                .spawn(move || {
+                    worker_loop(
+                        &mut pipeline,
+                        &rx,
+                        &metrics,
+                        &inflight,
+                        &stop,
+                        max_batch,
+                    )
+                })?,
+        );
+    }
+    Ok(handles)
+}
+
+fn worker_loop(
+    pipeline: &mut EsPipeline,
+    rx: &Arc<Mutex<Receiver<Job>>>,
+    metrics: &Arc<Mutex<ServiceMetrics>>,
+    inflight: &Arc<AtomicUsize>,
+    stop: &Arc<AtomicBool>,
+    max_batch: usize,
+) {
+    loop {
+        // pull a batch: one blocking recv, then drain up to max_batch-1
+        let mut batch = Vec::with_capacity(max_batch);
+        {
+            let guard = rx.lock().unwrap();
+            match guard.recv() {
+                Ok(job) => batch.push(job),
+                Err(_) => return, // queue closed: drain complete
+            }
+            while batch.len() < max_batch {
+                match guard.try_recv() {
+                    Ok(job) => batch.push(job),
+                    Err(_) => break,
+                }
+            }
+        } // release the lock before the (long) solves
+
+        for job in batch {
+            if stop.load(Ordering::SeqCst) {
+                // shutting down: fail fast instead of burning device time
+                let _ = job.respond.try_send(Err(anyhow::anyhow!("shutting down")));
+                inflight.fetch_sub(1, Ordering::Relaxed);
+                continue;
+            }
+            let queue_wait = job.enqueued.elapsed();
+            let t0 = Instant::now();
+            let result = pipeline.summarize(&job.doc);
+            let solve_time = t0.elapsed();
+            {
+                let mut m = metrics.lock().unwrap();
+                match &result {
+                    Ok(_) => m.completed += 1,
+                    Err(_) => m.failed += 1,
+                }
+                m.record_latency(queue_wait, solve_time);
+            }
+            inflight.fetch_sub(1, Ordering::Relaxed);
+            let _ = job.respond.try_send(result);
+        }
+    }
+}

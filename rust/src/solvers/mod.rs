@@ -1,0 +1,128 @@
+//! Solver suite: the COBI-simulating oscillator solver plus every baseline
+//! the paper evaluates against (Tabu, brute force, random, exact/Gurobi
+//! substitute) and one extension (simulated annealing).
+
+pub mod brute;
+pub mod exact;
+pub mod greedy;
+pub mod oscillator;
+pub mod random;
+pub mod sa;
+pub mod tabu;
+
+use crate::ising::Ising;
+
+/// Result of one unconstrained Ising solve.
+#[derive(Debug, Clone)]
+pub struct SolveResult {
+    /// Spin configuration in {-1, +1}.
+    pub spins: Vec<i8>,
+    /// Ising energy of `spins` under the SOLVED (possibly quantized)
+    /// instance. Callers re-score under the FP objective themselves.
+    pub energy: f64,
+}
+
+/// Result of one constrained (cardinality-M) selection solve.
+#[derive(Debug, Clone)]
+pub struct SelectionResult {
+    pub selected: Vec<usize>,
+    /// Eq. 3 objective (to maximize) of `selected`.
+    pub objective: f64,
+}
+
+/// An Ising minimizer. Implementations are deterministic given their
+/// construction seed, so experiments replay exactly.
+pub trait IsingSolver {
+    fn name(&self) -> &'static str;
+
+    /// Minimize H over spin configurations.
+    fn solve(&mut self, ising: &Ising) -> SolveResult;
+
+    /// Solve several independent instances. The default solves them
+    /// sequentially; devices with a batched dispatch path (the COBI HLO
+    /// backend's `anneal_batch` artifact) override it to amortize
+    /// per-call overhead — the refinement loop always goes through here.
+    fn solve_batch(&mut self, instances: &[&Ising]) -> Vec<SolveResult> {
+        instances.iter().map(|i| self.solve(i)).collect()
+    }
+}
+
+/// Helper shared by solvers: energy + local-field initialisation.
+pub(crate) fn init_local_fields(ising: &Ising, s: &[i8]) -> Vec<f64> {
+    let n = ising.n;
+    let mut l = vec![0.0f64; n];
+    for i in 0..n {
+        let row = &ising.j[i * n..(i + 1) * n];
+        let mut acc = 0.0f64;
+        for j in 0..n {
+            acc += row[j] as f64 * s[j] as f64;
+        }
+        l[i] = ising.h[i] as f64 + 2.0 * acc;
+    }
+    l
+}
+
+/// Apply a flip of spin `k` and update local fields incrementally:
+/// L_i += 4 J_ik s_k(new) for all i != k. O(n).
+#[inline]
+pub(crate) fn apply_flip(ising: &Ising, s: &mut [i8], l: &mut [f64], k: usize) {
+    s[k] = -s[k];
+    let new_sk = s[k] as f64;
+    let n = ising.n;
+    let row = &ising.j[k * n..(k + 1) * n];
+    for i in 0..n {
+        // row[k] == 0 (zero diagonal) so including i == k is harmless
+        l[i] += 4.0 * row[i] as f64 * new_sk;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn random_ising(rng: &mut Pcg32, n: usize) -> Ising {
+        let mut ising = Ising::new(n);
+        for i in 0..n {
+            ising.h[i] = rng.range_f32(-2.0, 2.0);
+            for j in (i + 1)..n {
+                ising.set_pair(i, j, rng.range_f32(-1.0, 1.0));
+            }
+        }
+        ising
+    }
+
+    #[test]
+    fn incremental_local_fields_track_exact() {
+        let mut rng = Pcg32::seeded(77);
+        let ising = random_ising(&mut rng, 16);
+        let mut s: Vec<i8> = (0..16).map(|_| if rng.bernoulli(0.5) { 1 } else { -1 }).collect();
+        let mut l = init_local_fields(&ising, &s);
+        for _ in 0..50 {
+            let k = rng.below(16) as usize;
+            apply_flip(&ising, &mut s, &mut l, k);
+            // recompute from scratch and compare
+            let fresh = init_local_fields(&ising, &s);
+            for i in 0..16 {
+                assert!((l[i] - fresh[i]).abs() < 1e-9, "i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn flip_energy_identity() {
+        // E(after flip k) - E(before) == -2 s_k L_k
+        let mut rng = Pcg32::seeded(78);
+        let ising = random_ising(&mut rng, 12);
+        let mut s: Vec<i8> = (0..12).map(|_| if rng.bernoulli(0.5) { 1 } else { -1 }).collect();
+        let mut l = init_local_fields(&ising, &s);
+        for _ in 0..20 {
+            let k = rng.below(12) as usize;
+            let e0 = ising.energy(&s);
+            let pred = -2.0 * s[k] as f64 * l[k];
+            apply_flip(&ising, &mut s, &mut l, k);
+            let e1 = ising.energy(&s);
+            assert!(((e1 - e0) - pred).abs() < 1e-9);
+        }
+    }
+}

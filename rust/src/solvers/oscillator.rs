@@ -1,0 +1,307 @@
+//! Native coupled-oscillator (COBI) dynamics — the pure-Rust mirror of the
+//! L1 Pallas kernel + L2 anneal graph (python/compile/kernels/oscillator.py,
+//! model.cobi_anneal).
+//!
+//! Semantics match the artifact exactly (same normalization, SHIL ramp,
+//! Euler update and readout, all in f32); floating-point trajectories may
+//! diverge from XLA over hundreds of chaotic steps, so cross-backend tests
+//! compare solution-quality statistics, not bits. This backend exists to
+//! (a) cross-validate the HLO artifact, (b) run COBI experiments cheaply
+//! inside `cargo test`/`cargo bench`, and (c) serve as the reference for
+//! the §Perf L3 optimization of the hot loop.
+
+use crate::ising::Ising;
+use crate::util::rng::Pcg32;
+
+use super::{IsingSolver, SolveResult};
+
+#[derive(Debug, Clone)]
+pub struct OscillatorConfig {
+    /// Euler steps per solve (matches model.ANNEAL_STEPS for the artifact).
+    pub steps: usize,
+    /// Coupling gain k_c.
+    pub k_coupling: f32,
+    /// SHIL strength ramps linearly 0 -> k_shil_max.
+    pub k_shil_max: f32,
+    /// Euler dt.
+    pub dt: f32,
+    /// Per-step phase-noise amplitude (the run-to-run variability knob).
+    pub noise_amp: f32,
+}
+
+impl Default for OscillatorConfig {
+    fn default() -> Self {
+        Self {
+            steps: 256,
+            k_coupling: 2.0,
+            k_shil_max: 1.5,
+            dt: 0.05,
+            noise_amp: 0.10,
+        }
+    }
+}
+
+/// One Euler step of the Kuramoto+SHIL dynamics, f32, mirroring the Pallas
+/// kernel: dphi = k_c (s.*(J c) - c.*(J s) + h.*s) - k_s sin(2 phi) + noise.
+/// `jc`/`js`/`sin_buf`/`cos_buf` are caller-provided scratch to keep the
+/// hot loop allocation-free.
+#[allow(clippy::too_many_arguments)]
+pub fn step(
+    phase: &mut [f32],
+    j: &[f32],
+    h: &[f32],
+    k_c: f32,
+    k_s: f32,
+    dt: f32,
+    noise: &[f32],
+    sin_buf: &mut [f32],
+    cos_buf: &mut [f32],
+    jc: &mut [f32],
+    js: &mut [f32],
+) {
+    let n = phase.len();
+    for i in 0..n {
+        let (s, c) = phase[i].sin_cos();
+        sin_buf[i] = s;
+        cos_buf[i] = c;
+    }
+    // two dense mat-vecs fused into one row traversal (§Perf: J is read
+    // once per step instead of twice). Four independent accumulator lanes
+    // per output let LLVM vectorize despite strict float semantics —
+    // summation order differs from the naive loop, which is fine: the
+    // native backend's contract with the HLO artifact is statistical, not
+    // bitwise (see module docs).
+    for i in 0..n {
+        let row = &j[i * n..(i + 1) * n];
+        let chunks = n / 4;
+        let (mut c0, mut c1, mut c2, mut c3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+        for k in 0..chunks {
+            let b = 4 * k;
+            c0 += row[b] * cos_buf[b];
+            c1 += row[b + 1] * cos_buf[b + 1];
+            c2 += row[b + 2] * cos_buf[b + 2];
+            c3 += row[b + 3] * cos_buf[b + 3];
+            s0 += row[b] * sin_buf[b];
+            s1 += row[b + 1] * sin_buf[b + 1];
+            s2 += row[b + 2] * sin_buf[b + 2];
+            s3 += row[b + 3] * sin_buf[b + 3];
+        }
+        let mut acc_c = (c0 + c1) + (c2 + c3);
+        let mut acc_s = (s0 + s1) + (s2 + s3);
+        for k in (4 * chunks)..n {
+            acc_c += row[k] * cos_buf[k];
+            acc_s += row[k] * sin_buf[k];
+        }
+        jc[i] = acc_c;
+        js[i] = acc_s;
+    }
+    for i in 0..n {
+        let (s, c) = (sin_buf[i], cos_buf[i]);
+        let coupling = s * jc[i] - c * js[i];
+        let local = h[i] * s;
+        // sin(2 phi) = 2 sin(phi) cos(phi): reuses the step's sin/cos
+        // instead of a third transcendental (§Perf)
+        let dphi = k_c * (coupling + local) - k_s * (2.0 * s * c) + noise[i];
+        let mut out = phase[i] + dt * dphi;
+        // wrap to (-pi, pi]: dphi*dt is small, so a conditional fixup is
+        // exact here and much cheaper than rem_euclid (§Perf). Matches
+        // jnp.mod(out + pi, 2 pi) - pi on the same branch outcomes.
+        if out > std::f32::consts::PI {
+            out -= 2.0 * std::f32::consts::PI;
+        } else if out <= -std::f32::consts::PI {
+            out += 2.0 * std::f32::consts::PI;
+        }
+        phase[i] = out;
+    }
+}
+
+/// Full anneal with externally supplied initial phases and per-step noise
+/// (the exact artifact interface): returns spins s_i = sign(cos phi_i).
+pub fn anneal(
+    ising: &Ising,
+    cfg: &OscillatorConfig,
+    phase0: &[f32],
+    noise: &[f32], // steps * n, row-major
+) -> Vec<i8> {
+    let n = ising.n;
+    assert_eq!(phase0.len(), n);
+    assert_eq!(noise.len(), cfg.steps * n);
+
+    // scale-normalize like the artifact (argmin-invariant)
+    let scale = ising.max_abs().max(1e-12);
+    let j: Vec<f32> = ising.j.iter().map(|v| v / scale).collect();
+    let h: Vec<f32> = ising.h.iter().map(|v| v / scale).collect();
+
+    let mut phase = phase0.to_vec();
+    let mut sin_buf = vec![0.0f32; n];
+    let mut cos_buf = vec![0.0f32; n];
+    let mut jc = vec![0.0f32; n];
+    let mut js = vec![0.0f32; n];
+    for t in 0..cfg.steps {
+        let k_s = (t as f32 / cfg.steps as f32) * cfg.k_shil_max;
+        step(
+            &mut phase,
+            &j,
+            &h,
+            cfg.k_coupling,
+            k_s,
+            cfg.dt,
+            &noise[t * n..(t + 1) * n],
+            &mut sin_buf,
+            &mut cos_buf,
+            &mut jc,
+            &mut js,
+        );
+    }
+    phase
+        .iter()
+        .map(|&p| if p.cos() >= 0.0 { 1i8 } else { -1i8 })
+        .collect()
+}
+
+/// Self-contained solver: draws phase0 ~ U(-pi, pi) and noise ~ N(0, amp)
+/// from its seeded RNG per solve.
+pub struct OscillatorSolver {
+    pub cfg: OscillatorConfig,
+    rng: Pcg32,
+}
+
+impl OscillatorSolver {
+    pub fn new(seed: u64, cfg: OscillatorConfig) -> Self {
+        Self {
+            cfg,
+            rng: Pcg32::new(seed, 0x05C1),
+        }
+    }
+
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, OscillatorConfig::default())
+    }
+
+    /// Draw the (phase0, noise) inputs for one run — exposed so the HLO
+    /// backend can feed identical inputs to the artifact.
+    pub fn draw_inputs(&mut self, n: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut phase0 = vec![0.0f32; n];
+        for p in phase0.iter_mut() {
+            *p = self.rng.range_f32(-std::f32::consts::PI, std::f32::consts::PI);
+        }
+        let mut noise = vec![0.0f32; self.cfg.steps * n];
+        self.rng.fill_normal(&mut noise, self.cfg.noise_amp);
+        (phase0, noise)
+    }
+}
+
+impl IsingSolver for OscillatorSolver {
+    fn name(&self) -> &'static str {
+        "oscillator"
+    }
+
+    fn solve(&mut self, ising: &Ising) -> SolveResult {
+        let (phase0, noise) = self.draw_inputs(ising.n);
+        let spins = anneal(ising, &self.cfg, &phase0, &noise);
+        let energy = ising.energy(&spins);
+        SolveResult { spins, energy }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::exact::ising_ground_exhaustive;
+
+    fn glass(seed: u64, n: usize) -> Ising {
+        let mut rng = Pcg32::seeded(seed);
+        let mut ising = Ising::new(n);
+        for i in 0..n {
+            ising.h[i] = rng.range_f32(-1.0, 1.0);
+            for j in (i + 1)..n {
+                ising.set_pair(i, j, rng.range_f32(-1.0, 1.0));
+            }
+        }
+        ising
+    }
+
+    #[test]
+    fn output_is_binary_and_energy_consistent() {
+        let ising = glass(1, 20);
+        let r = OscillatorSolver::seeded(2).solve(&ising);
+        assert!(r.spins.iter().all(|&s| s == 1 || s == -1));
+        assert!((ising.energy(&r.spins) - r.energy).abs() < 1e-6);
+    }
+
+    #[test]
+    fn retry_regime_hit_rate() {
+        // mirror of python test_ground_state_hit_rate_in_retry_regime:
+        // mean ground-state probability over 10-spin glasses in (0.25,0.98)
+        let mut hits = 0usize;
+        let mut runs = 0usize;
+        for inst in [1u64, 2, 3, 42] {
+            let ising = glass(inst, 10);
+            let (ge, _, _) = ising_ground_exhaustive(&ising);
+            let mut solver = OscillatorSolver::seeded(inst * 31);
+            for _ in 0..10 {
+                let r = solver.solve(&ising);
+                hits += ((r.energy - ge).abs() < 1e-3) as usize;
+                runs += 1;
+            }
+        }
+        let rate = hits as f64 / runs as f64;
+        assert!((0.25..=0.98).contains(&rate), "hit rate {rate}");
+    }
+
+    #[test]
+    fn ferromagnet_aligns() {
+        let n = 8;
+        let mut ising = Ising::new(n);
+        for i in 0..n {
+            for j in (i + 1)..n {
+                ising.set_pair(i, j, -2.0);
+            }
+        }
+        let mut solver = OscillatorSolver::seeded(7);
+        let mut aligned = 0;
+        for _ in 0..6 {
+            let r = solver.solve(&ising);
+            let sum: i32 = r.spins.iter().map(|&s| s as i32).sum();
+            aligned += (sum.unsigned_abs() as usize == n) as usize;
+        }
+        assert!(aligned >= 5, "aligned only {aligned}/6");
+    }
+
+    #[test]
+    fn field_polarizes() {
+        let mut ising = Ising::new(6);
+        ising.h = vec![-3.0, -3.0, -3.0, 3.0, 3.0, 3.0];
+        let r = OscillatorSolver::seeded(3).solve(&ising);
+        assert_eq!(&r.spins[..3], &[1, 1, 1]);
+        assert_eq!(&r.spins[3..], &[-1, -1, -1]);
+    }
+
+    #[test]
+    fn scale_invariance() {
+        // same noise stream + scaled instance -> identical spins
+        let ising = glass(5, 12);
+        let mut scaled = ising.clone();
+        for v in scaled.h.iter_mut() {
+            *v *= 37.0;
+        }
+        for v in scaled.j.iter_mut() {
+            *v *= 37.0;
+        }
+        let cfg = OscillatorConfig::default();
+        let (phase0, noise) = OscillatorSolver::seeded(9).draw_inputs(12);
+        let a = anneal(&ising, &cfg, &phase0, &noise);
+        let b = anneal(&scaled, &cfg, &phase0, &noise);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ising = glass(6, 16);
+        assert_eq!(
+            OscillatorSolver::seeded(11).solve(&ising).spins,
+            OscillatorSolver::seeded(11).solve(&ising).spins
+        );
+    }
+}

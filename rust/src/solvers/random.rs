@@ -1,0 +1,91 @@
+//! Random-selection baseline (paper §IV-A): pick M sentences uniformly at
+//! random per iteration, keep the best under the FP objective. The
+//! reference point that any Ising machinery must beat.
+
+use crate::ising::EsProblem;
+use crate::util::rng::Pcg32;
+
+use super::SelectionResult;
+
+pub struct RandomBaseline {
+    rng: Pcg32,
+}
+
+impl RandomBaseline {
+    pub fn seeded(seed: u64) -> Self {
+        Self {
+            rng: Pcg32::new(seed, 0xBA5E),
+        }
+    }
+
+    /// One random M-subset.
+    pub fn sample(&mut self, p: &EsProblem) -> SelectionResult {
+        let mut selected = self.rng.sample_indices(p.n(), p.m);
+        selected.sort_unstable();
+        SelectionResult {
+            objective: p.objective(&selected),
+            selected,
+        }
+    }
+
+    /// Best of `iterations` random selections (the paper's "Number of
+    /// iterations" axis for the baseline).
+    pub fn best_of(&mut self, p: &EsProblem, iterations: usize) -> SelectionResult {
+        let mut best = self.sample(p);
+        for _ in 1..iterations.max(1) {
+            let cand = self.sample(p);
+            if cand.objective > best.objective {
+                best = cand;
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn uniform_es(n: usize, m: usize) -> EsProblem {
+        // distinct mu so optima are unique
+        let mu: Vec<f32> = (0..n).map(|i| 0.3 + 0.01 * i as f32).collect();
+        EsProblem {
+            mu,
+            beta: vec![0.0; n * n],
+            lambda: 0.6,
+            m,
+        }
+    }
+
+    #[test]
+    fn sample_is_valid_subset() {
+        let p = uniform_es(20, 6);
+        let mut b = RandomBaseline::seeded(1);
+        for _ in 0..50 {
+            let r = b.sample(&p);
+            assert_eq!(r.selected.len(), 6);
+            let mut d = r.selected.clone();
+            d.dedup();
+            assert_eq!(d.len(), 6);
+            assert!(r.selected.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn best_of_is_monotone_in_iterations() {
+        let p = uniform_es(20, 6);
+        // same seed: the k-iteration best is a prefix-max of the sequence
+        let a = RandomBaseline::seeded(3).best_of(&p, 5).objective;
+        let b = RandomBaseline::seeded(3).best_of(&p, 50).objective;
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn many_iterations_approach_optimum_on_trivial_instance() {
+        let p = uniform_es(10, 2);
+        // optimum = two largest mu
+        let best = p.objective(&[8, 9]);
+        let got = RandomBaseline::seeded(9).best_of(&p, 500).objective;
+        assert!((got - best).abs() < 1e-9, "got {got} want {best}");
+    }
+}

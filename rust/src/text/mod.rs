@@ -1,0 +1,20 @@
+//! Text substrate: sentence splitting, tokenization, vocabulary hashing.
+//!
+//! The paper's pipeline consumes documents as sequences of sentences; the
+//! encoder artifact consumes fixed-shape hashed-token matrices. This module
+//! is the bridge. It is deliberately rule-based (no model downloads): an
+//! abbreviation-aware splitter and an FNV-1a hashing tokenizer matching the
+//! VOCAB/MAX_TOKENS constants baked into the AOT artifacts.
+
+pub mod sentence;
+pub mod tokenize;
+
+pub use sentence::split_sentences;
+pub use tokenize::{hash_token, tokenize, Tokenizer};
+
+/// Static dims shared with python/compile/model.py. Changing either side
+/// requires regenerating artifacts; runtime::artifacts cross-checks against
+/// the manifest at load time.
+pub const VOCAB: u32 = 4096;
+pub const MAX_TOKENS: usize = 32;
+pub const MAX_SENTENCES: usize = 128;

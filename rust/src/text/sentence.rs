@@ -1,0 +1,183 @@
+//! Abbreviation-aware sentence splitter.
+//!
+//! Splits on `.`, `!`, `?` followed by whitespace and an uppercase/digit
+//! start, with guards for common abbreviations, initials ("J. Smith"),
+//! decimal numbers ("3.14") and ellipses. Tuned for news-style prose (the
+//! CNN/DailyMail register the paper evaluates on).
+
+/// Abbreviations that never end a sentence, wherever they appear.
+const ABBREVIATIONS: &[&str] = &[
+    "mr", "mrs", "ms", "dr", "prof", "sr", "jr", "st", "vs", "etc", "inc",
+    "ltd", "co", "corp", "gov", "gen", "sen", "rep", "capt", "sgt", "col",
+    "lt", "maj", "dept", "univ", "assn", "approx", "u.s", "u.k", "e.g",
+    "i.e", "a.m", "p.m",
+];
+
+/// Calendar/reference abbreviations that only bind when followed by a
+/// digit ("Sat. 5th", "Fig. 3", "No. 7") — otherwise "The cat sat." would
+/// never split because "sat" is also Saturday.
+const ABBREVIATIONS_BEFORE_DIGIT: &[&str] = &[
+    "fig", "eq", "no", "vol", "jan", "feb", "mar", "apr", "jun", "jul",
+    "aug", "sep", "sept", "oct", "nov", "dec", "mon", "tue", "wed", "thu",
+    "fri", "sat", "sun",
+];
+
+fn is_abbreviation(word: &str, next_is_digit: bool) -> bool {
+    let w = word.trim_end_matches('.').to_ascii_lowercase();
+    // single letters are initials ("J.")
+    (w.len() == 1 && w.chars().all(|c| c.is_ascii_alphabetic()))
+        || ABBREVIATIONS.contains(&w.as_str())
+        || (next_is_digit && ABBREVIATIONS_BEFORE_DIGIT.contains(&w.as_str()))
+}
+
+/// Split text into trimmed, non-empty sentences.
+pub fn split_sentences(text: &str) -> Vec<String> {
+    let chars: Vec<char> = text.chars().collect();
+    let mut sentences = Vec::new();
+    let mut start = 0usize;
+    let mut i = 0usize;
+
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '!' || c == '?' {
+            // always terminal (news prose does not abbreviate with ! / ?)
+            let end = i + 1;
+            push_sentence(&chars[start..end], &mut sentences);
+            start = end;
+            i = end;
+            continue;
+        }
+        if c == '.' {
+            // ellipsis: consume the run of dots, treat as terminal
+            let mut j = i;
+            while j + 1 < chars.len() && chars[j + 1] == '.' {
+                j += 1;
+            }
+            let dot_run = j - i + 1;
+            let next_non_ws = chars[j + 1..]
+                .iter()
+                .position(|c| !c.is_whitespace())
+                .map(|k| j + 1 + k);
+            let followed_by_ws = j + 1 < chars.len() && chars[j + 1].is_whitespace();
+            let next_starts_sentence = next_non_ws
+                .map(|k| chars[k].is_uppercase() || chars[k].is_ascii_digit() || chars[k] == '"')
+                .unwrap_or(true);
+
+            // decimal number guard: digit.digit
+            let decimal = dot_run == 1
+                && i > 0
+                && chars[i - 1].is_ascii_digit()
+                && i + 1 < chars.len()
+                && chars[i + 1].is_ascii_digit();
+
+            // abbreviation guard: word before the dot
+            let word_before: String = {
+                let mut k = i;
+                while k > 0 && (chars[k - 1].is_alphanumeric() || chars[k - 1] == '.') {
+                    k -= 1;
+                }
+                chars[k..i].iter().collect()
+            };
+
+            let next_is_digit = next_non_ws
+                .map(|k| chars[k].is_ascii_digit())
+                .unwrap_or(false);
+            let terminal = dot_run > 1
+                || (!decimal
+                    && followed_by_ws
+                    && next_starts_sentence
+                    && !is_abbreviation(&word_before, next_is_digit));
+
+            if terminal {
+                let end = j + 1;
+                push_sentence(&chars[start..end], &mut sentences);
+                start = end;
+                i = end;
+                continue;
+            }
+            i = j + 1;
+            continue;
+        }
+        if c == '\n' && i + 1 < chars.len() && chars[i + 1] == '\n' {
+            // paragraph break is always a boundary
+            push_sentence(&chars[start..i], &mut sentences);
+            start = i;
+            i += 1;
+            continue;
+        }
+        i += 1;
+    }
+    push_sentence(&chars[start..], &mut sentences);
+    sentences
+}
+
+fn push_sentence(chars: &[char], out: &mut Vec<String>) {
+    let s: String = chars.iter().collect::<String>().trim().to_string();
+    // require some alphabetic content — drops stray punctuation fragments
+    if s.chars().any(|c| c.is_alphabetic()) {
+        out.push(s);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splits_simple_sentences() {
+        let s = split_sentences("The cat sat. The dog ran. Birds fly!");
+        assert_eq!(s.len(), 3);
+        assert_eq!(s[0], "The cat sat.");
+        assert_eq!(s[2], "Birds fly!");
+    }
+
+    #[test]
+    fn keeps_abbreviations_together() {
+        let s = split_sentences("Dr. Smith arrived at 3 p.m. yesterday. He left.");
+        assert_eq!(s.len(), 2, "{s:?}");
+        assert!(s[0].starts_with("Dr. Smith"));
+    }
+
+    #[test]
+    fn keeps_initials_together() {
+        let s = split_sentences("J. K. Rowling wrote it. Everyone read it.");
+        assert_eq!(s.len(), 2, "{s:?}");
+    }
+
+    #[test]
+    fn keeps_decimals_together() {
+        let s = split_sentences("Growth hit 3.14 percent. Markets rose.");
+        assert_eq!(s.len(), 2, "{s:?}");
+        assert!(s[0].contains("3.14"));
+    }
+
+    #[test]
+    fn question_and_exclamation() {
+        let s = split_sentences("Why did it happen? Nobody knows! The end.");
+        assert_eq!(s.len(), 3);
+    }
+
+    #[test]
+    fn paragraph_break_splits() {
+        let s = split_sentences("First paragraph ends here\n\nsecond one starts");
+        assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn empty_and_punct_only_dropped() {
+        assert!(split_sentences("").is_empty());
+        assert!(split_sentences("... !!! ???").is_empty());
+    }
+
+    #[test]
+    fn ellipsis_is_terminal() {
+        let s = split_sentences("It went on... Then it stopped.");
+        assert_eq!(s.len(), 2, "{s:?}");
+    }
+
+    #[test]
+    fn quote_start_after_period() {
+        let s = split_sentences("He said it plainly. \"We won,\" she replied.");
+        assert_eq!(s.len(), 2, "{s:?}");
+    }
+}

@@ -1,0 +1,135 @@
+//! Hashing tokenizer: words -> token ids in [1, VOCAB), 0 reserved for pad.
+//!
+//! Must agree with what the encoder artifact was compiled for: ids index a
+//! VOCAB x EMBED_DIM table, 0 is the padding id and masks the position.
+//! FNV-1a over lowercased word bytes, mod (VOCAB - 1) + 1 keeps ids dense
+//! and never emits the pad id for a real token.
+
+use super::{MAX_TOKENS, VOCAB};
+
+/// FNV-1a 64-bit hash.
+#[inline]
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Hash a word into a token id in [1, VOCAB).
+#[inline]
+pub fn hash_token(word: &str) -> i32 {
+    let lower = word.to_ascii_lowercase();
+    (fnv1a(lower.as_bytes()) % (VOCAB as u64 - 1)) as i32 + 1
+}
+
+/// Split a sentence into word tokens (alphanumeric runs; possessives and
+/// hyphenated compounds split apart, which is fine for hashing purposes).
+pub fn tokenize(sentence: &str) -> Vec<String> {
+    let mut words = Vec::new();
+    let mut cur = String::new();
+    for c in sentence.chars() {
+        if c.is_alphanumeric() {
+            cur.push(c);
+        } else if !cur.is_empty() {
+            words.push(std::mem::take(&mut cur));
+        }
+    }
+    if !cur.is_empty() {
+        words.push(cur);
+    }
+    words
+}
+
+/// Sentence -> fixed-width row of hashed token ids, zero-padded/truncated
+/// to MAX_TOKENS (the encoder artifact's static width).
+#[derive(Debug, Default, Clone)]
+pub struct Tokenizer;
+
+impl Tokenizer {
+    pub fn new() -> Self {
+        Self
+    }
+
+    pub fn encode_sentence(&self, sentence: &str) -> [i32; MAX_TOKENS] {
+        let mut row = [0i32; MAX_TOKENS];
+        for (i, w) in tokenize(sentence).iter().take(MAX_TOKENS).enumerate() {
+            row[i] = hash_token(w);
+        }
+        row
+    }
+
+    /// Encode up to `max_rows` sentences into a row-major (rows x
+    /// MAX_TOKENS) i32 buffer, zero rows for padding sentences.
+    pub fn encode_batch(&self, sentences: &[String], max_rows: usize) -> Vec<i32> {
+        assert!(
+            sentences.len() <= max_rows,
+            "{} sentences exceed batch {}",
+            sentences.len(),
+            max_rows
+        );
+        let mut out = vec![0i32; max_rows * MAX_TOKENS];
+        for (i, s) in sentences.iter().enumerate() {
+            out[i * MAX_TOKENS..(i + 1) * MAX_TOKENS].copy_from_slice(&self.encode_sentence(s));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_ids_in_range_never_pad() {
+        for w in ["the", "a", "Reactor", "šum", "12345", "x"] {
+            let id = hash_token(w);
+            assert!((1..VOCAB as i32).contains(&id), "{w} -> {id}");
+        }
+    }
+
+    #[test]
+    fn hashing_case_insensitive_and_deterministic() {
+        assert_eq!(hash_token("Energy"), hash_token("energy"));
+        assert_eq!(hash_token("energy"), hash_token("energy"));
+        assert_ne!(hash_token("energy"), hash_token("entropy"));
+    }
+
+    #[test]
+    fn tokenize_splits_on_punctuation() {
+        assert_eq!(
+            tokenize("The cat, the dog — and 3.14!"),
+            vec!["The", "cat", "the", "dog", "and", "3", "14"]
+        );
+    }
+
+    #[test]
+    fn encode_sentence_pads_and_truncates() {
+        let t = Tokenizer::new();
+        let row = t.encode_sentence("one two three");
+        assert!(row[0] > 0 && row[1] > 0 && row[2] > 0);
+        assert!(row[3..].iter().all(|&x| x == 0));
+
+        let long = vec!["word"; 50].join(" ");
+        let row = t.encode_sentence(&long);
+        assert!(row.iter().all(|&x| x > 0));
+    }
+
+    #[test]
+    fn encode_batch_layout() {
+        let t = Tokenizer::new();
+        let buf = t.encode_batch(&["alpha beta".into(), "gamma".into()], 4);
+        assert_eq!(buf.len(), 4 * MAX_TOKENS);
+        assert_eq!(buf[0], hash_token("alpha"));
+        assert_eq!(buf[MAX_TOKENS], hash_token("gamma"));
+        assert!(buf[2 * MAX_TOKENS..].iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    #[should_panic(expected = "exceed batch")]
+    fn encode_batch_overflow_panics() {
+        Tokenizer::new().encode_batch(&["a".into(), "b".into()], 1);
+    }
+}

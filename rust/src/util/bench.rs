@@ -1,0 +1,180 @@
+//! Mini benchmark harness (criterion substitute — see Cargo.toml note).
+//!
+//! Provides the measurement loop the `benches/*.rs` targets (harness =
+//! false) use: warm-up, adaptive iteration count, and a robust summary
+//! (median + MAD) printed in a criterion-like format. Good enough for the
+//! before/after deltas recorded in EXPERIMENTS.md §Perf; not a statistics
+//! engine.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub median: Duration,
+    pub mean: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} time: [{} {} {}]  ({} iters)",
+            self.name,
+            fmt_dur(self.min),
+            fmt_dur(self.median),
+            fmt_dur(self.max),
+            self.iters
+        )
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1_000.0 {
+        format!("{ns:.1} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.3} s", ns / 1_000_000_000.0)
+    }
+}
+
+/// Benchmark runner: call [`Bencher::bench`] per case; results accumulate
+/// and print immediately.
+pub struct Bencher {
+    /// Target measurement time per case.
+    pub measure_time: Duration,
+    /// Warm-up time per case.
+    pub warmup_time: Duration,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            // Keep defaults modest: the suite covers many paper figures and
+            // runs on a single-core CI box. Override via env if needed.
+            measure_time: env_duration("COBI_BENCH_MEASURE_MS", 700),
+            warmup_time: env_duration("COBI_BENCH_WARMUP_MS", 200),
+            results: Vec::new(),
+        }
+    }
+}
+
+fn env_duration(var: &str, default_ms: u64) -> Duration {
+    std::env::var(var)
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .map(Duration::from_millis)
+        .unwrap_or(Duration::from_millis(default_ms))
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Measure `f`, which should perform ONE logical operation per call.
+    /// Returns the result and prints a summary line.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warm-up and initial rate estimate.
+        let warm_start = Instant::now();
+        let mut warm_iters: u64 = 0;
+        while warm_start.elapsed() < self.warmup_time {
+            f();
+            warm_iters += 1;
+        }
+        let per_iter = warm_start.elapsed().as_secs_f64() / warm_iters.max(1) as f64;
+
+        // Sample in batches; record per-batch mean to reduce timer overhead.
+        let batch = ((0.01 / per_iter.max(1e-9)).ceil() as u64).clamp(1, 1 << 20);
+        let mut samples: Vec<f64> = Vec::new();
+        let mut total_iters = 0u64;
+        let run_start = Instant::now();
+        while run_start.elapsed() < self.measure_time || samples.len() < 5 {
+            let t = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            samples.push(t.elapsed().as_secs_f64() / batch as f64);
+            total_iters += batch;
+            if samples.len() > 10_000 {
+                break;
+            }
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = samples[samples.len() / 2];
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: total_iters,
+            median: Duration::from_secs_f64(med),
+            mean: Duration::from_secs_f64(mean),
+            min: Duration::from_secs_f64(samples[0]),
+            max: Duration::from_secs_f64(samples[samples.len() - 1]),
+        };
+        println!("{}", res.report());
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    /// Time a single execution of `f` (for long end-to-end cases where an
+    /// adaptive loop would blow the time budget); prints and records it.
+    pub fn bench_once<F: FnOnce()>(&mut self, name: &str, f: F) -> &BenchResult {
+        let t = Instant::now();
+        f();
+        let d = t.elapsed();
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: 1,
+            median: d,
+            mean: d,
+            min: d,
+            max: d,
+        };
+        println!("{}", res.report());
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+}
+
+/// Prevent the optimizer from eliding a computed value (std::hint::black_box
+/// wrapper kept behind one name so benches read uniformly).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bencher {
+            measure_time: Duration::from_millis(30),
+            warmup_time: Duration::from_millis(5),
+            results: Vec::new(),
+        };
+        let mut acc = 0u64;
+        b.bench("noop-ish", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert_eq!(b.results.len(), 1);
+        assert!(b.results[0].iters > 0);
+        assert!(b.results[0].median.as_nanos() < 1_000_000);
+    }
+
+    #[test]
+    fn fmt_dur_scales() {
+        assert!(fmt_dur(Duration::from_nanos(50)).contains("ns"));
+        assert!(fmt_dur(Duration::from_micros(50)).contains("µs"));
+        assert!(fmt_dur(Duration::from_millis(50)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).contains(" s"));
+    }
+}

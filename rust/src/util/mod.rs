@@ -1,0 +1,6 @@
+//! Shared substrates: PRNG, statistics, benchmarking, property testing.
+
+pub mod bench;
+pub mod proptest;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,86 @@
+//! Mini property-test driver (proptest substitute — see Cargo.toml note).
+//!
+//! Runs a property over `cases` randomized inputs drawn from a seeded
+//! [`Pcg32`]; on failure it reports the case index and seed so the exact
+//! input can be regenerated. Coordinator invariants (routing, batching,
+//! formulation, quantization) use this via `check(..)`.
+
+use super::rng::Pcg32;
+
+/// Default number of cases per property (kept moderate: the repo has many
+/// properties and CI is single-core).
+pub const DEFAULT_CASES: u32 = 128;
+
+/// Run `prop` over `cases` randomized cases. The property receives a fresh
+/// deterministic RNG per case (seed derives from `seed` + case index) and
+/// returns `Err(msg)` to signal failure.
+pub fn check<F>(name: &str, seed: u64, cases: u32, mut prop: F)
+where
+    F: FnMut(&mut Pcg32) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let case_seed = seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(case as u64);
+        let mut rng = Pcg32::new(case_seed, case as u64 + 1);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case}/{cases} \
+                 (case_seed={case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Shorthand with [`DEFAULT_CASES`].
+pub fn check_default<F>(name: &str, seed: u64, prop: F)
+where
+    F: FnMut(&mut Pcg32) -> Result<(), String>,
+{
+    check(name, seed, DEFAULT_CASES, prop)
+}
+
+/// Assert helper: turn a boolean + context into the property result type.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        check("tautology", 1, 64, |rng| {
+            let x = rng.f32();
+            prop_assert!((0.0..1.0).contains(&x), "x out of range: {x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-false' failed")]
+    fn failing_property_panics_with_context() {
+        check("always-false", 2, 8, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn cases_are_deterministic_across_runs() {
+        let mut first: Vec<u32> = Vec::new();
+        check("collect", 3, 16, |rng| {
+            first.push(rng.next_u32());
+            Ok(())
+        });
+        let mut second: Vec<u32> = Vec::new();
+        check("collect", 3, 16, |rng| {
+            second.push(rng.next_u32());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

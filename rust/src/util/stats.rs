@@ -1,0 +1,132 @@
+//! Small statistics toolkit: summaries used by every experiment driver.
+
+/// Five-number summary + mean, matching the paper's boxplot conventions
+/// (Fig 1/5/6: whiskers = min/max, box = quartiles, cross/line = mean).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BoxStats {
+    pub min: f64,
+    pub q25: f64,
+    pub median: f64,
+    pub q75: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub n: usize,
+}
+
+impl BoxStats {
+    pub fn compute(values: &[f64]) -> Self {
+        assert!(!values.is_empty(), "BoxStats of empty slice");
+        let mut v = values.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).expect("NaN in stats"));
+        Self {
+            min: v[0],
+            q25: quantile_sorted(&v, 0.25),
+            median: quantile_sorted(&v, 0.5),
+            q75: quantile_sorted(&v, 0.75),
+            max: v[v.len() - 1],
+            mean: mean(&v),
+            n: v.len(),
+        }
+    }
+
+    /// Render as the compact row format used in experiment reports.
+    pub fn row(&self) -> String {
+        format!(
+            "min={:.3} q25={:.3} med={:.3} q75={:.3} max={:.3} mean={:.3} (n={})",
+            self.min, self.q25, self.median, self.q75, self.max, self.mean, self.n
+        )
+    }
+}
+
+pub fn mean(values: &[f64]) -> f64 {
+    if values.is_empty() {
+        return f64::NAN;
+    }
+    values.iter().sum::<f64>() / values.len() as f64
+}
+
+pub fn variance(values: &[f64]) -> f64 {
+    if values.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(values);
+    values.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (values.len() - 1) as f64
+}
+
+pub fn stddev(values: &[f64]) -> f64 {
+    variance(values).sqrt()
+}
+
+/// Median of an unsorted slice (copies; callers on hot paths sort once and
+/// use `quantile_sorted` directly).
+pub fn median(values: &[f64]) -> f64 {
+    let mut v = values.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).expect("NaN in median"));
+    quantile_sorted(&v, 0.5)
+}
+
+/// Linear-interpolation quantile (type-7, numpy default) of a sorted slice.
+pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=1.0).contains(&q));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = pos - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+/// Median of f32 values (convenience for Ising coefficient vectors).
+pub fn median_f32(values: &[f32]) -> f32 {
+    let v: Vec<f64> = values.iter().map(|&x| x as f64).collect();
+    median(&v) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_match_numpy_type7() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert!((quantile_sorted(&v, 0.5) - 2.5).abs() < 1e-12);
+        assert!((quantile_sorted(&v, 0.25) - 1.75).abs() < 1e-12);
+        assert!((quantile_sorted(&v, 0.75) - 3.25).abs() < 1e-12);
+        assert!((quantile_sorted(&v, 0.0) - 1.0).abs() < 1e-12);
+        assert!((quantile_sorted(&v, 1.0) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn box_stats_basic() {
+        let b = BoxStats::compute(&[3.0, 1.0, 2.0, 5.0, 4.0]);
+        assert_eq!(b.min, 1.0);
+        assert_eq!(b.max, 5.0);
+        assert_eq!(b.median, 3.0);
+        assert_eq!(b.mean, 3.0);
+        assert_eq!(b.n, 5);
+    }
+
+    #[test]
+    fn median_even_odd() {
+        assert_eq!(median(&[1.0, 3.0, 2.0]), 2.0);
+        assert_eq!(median(&[1.0, 2.0, 3.0, 4.0]), 2.5);
+    }
+
+    #[test]
+    fn variance_of_constants_is_zero() {
+        assert_eq!(variance(&[2.0, 2.0, 2.0]), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_box_stats_panics() {
+        BoxStats::compute(&[]);
+    }
+}

@@ -1,0 +1,262 @@
+//! Rust <-> JAX numerical cross-checks through the PJRT runtime.
+//!
+//! Requires `artifacts/` (run `make artifacts` first); each test fails
+//! loudly if the artifacts are missing, because silent skips would let
+//! the three-layer contract rot.
+
+use std::path::Path;
+
+use cobi_es::cobi::{CobiDevice, PADDED_SPINS};
+use cobi_es::config::CobiConfig;
+use cobi_es::embed::{Embedder, HashEmbedder};
+use cobi_es::ising::Ising;
+use cobi_es::quant::{quantize, Precision, Rounding};
+use cobi_es::runtime::artifacts::{Arg, ArtifactRuntime};
+use cobi_es::runtime::{testvec, EncoderPipeline};
+use cobi_es::solvers::exact::ising_ground_exhaustive;
+use cobi_es::util::rng::Pcg32;
+
+fn runtime() -> ArtifactRuntime {
+    let dir = std::env::var("COBI_ES_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    ArtifactRuntime::open(Path::new(&dir)).expect(
+        "artifacts/ missing — run `make artifacts` before `cargo test` \
+         (the Makefile test target does this)",
+    )
+}
+
+fn assert_allclose(got: &[f32], want: &[f32], atol: f32, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    let mut worst = 0.0f32;
+    for (g, w) in got.iter().zip(want) {
+        worst = worst.max((g - w).abs());
+    }
+    assert!(worst <= atol, "{what}: max abs err {worst} > {atol}");
+}
+
+#[test]
+fn energy_artifact_matches_jax_testvector() {
+    let rt = runtime();
+    let exe = rt.executable("energy").unwrap();
+    let tv = testvec::load(Path::new(
+        &format!("{}/testvec_energy.bin", artifacts_dir()),
+    ))
+    .unwrap();
+    let j = tv.inputs[0].as_f32().unwrap();
+    let h = tv.inputs[1].as_f32().unwrap();
+    let s = tv.inputs[2].as_f32().unwrap();
+    let want = tv.outputs[0].as_f32().unwrap();
+    let outs = exe.run(&[Arg::F32(j), Arg::F32(h), Arg::F32(s)]).unwrap();
+    assert_allclose(&outs[0], want, 1e-2, "energy");
+}
+
+fn artifacts_dir() -> String {
+    std::env::var("COBI_ES_ARTIFACTS").unwrap_or_else(|_| "artifacts".into())
+}
+
+#[test]
+fn anneal_artifact_matches_jax_testvector() {
+    // identical inputs -> identical spins (XLA CPU is deterministic for a
+    // fixed artifact; this pins rust-side input marshalling)
+    let rt = runtime();
+    let exe = rt.executable("anneal").unwrap();
+    let tv = testvec::load(Path::new(
+        &format!("{}/testvec_anneal.bin", artifacts_dir()),
+    ))
+    .unwrap();
+    let args: Vec<Arg> = tv.inputs.iter().map(|a| Arg::F32(a.as_f32().unwrap())).collect();
+    let want = tv.outputs[0].as_f32().unwrap();
+    let outs = exe.run(&args).unwrap();
+    assert_allclose(&outs[0], want, 0.0, "anneal spins");
+}
+
+#[test]
+fn encoder_artifact_matches_jax_testvector() {
+    let rt = runtime();
+    let exe = rt.executable("encoder").unwrap();
+    let tv = testvec::load(Path::new(
+        &format!("{}/testvec_encoder.bin", artifacts_dir()),
+    ))
+    .unwrap();
+    let toks = tv.inputs[0].as_i32().unwrap();
+    let want = tv.outputs[0].as_f32().unwrap();
+    let outs = exe.run(&[Arg::I32(toks)]).unwrap();
+    assert_allclose(&outs[0], want, 2e-4, "encoder embeddings");
+}
+
+#[test]
+fn cosine_artifact_matches_jax_testvector() {
+    let rt = runtime();
+    let exe = rt.executable("cosine").unwrap();
+    let tv = testvec::load(Path::new(
+        &format!("{}/testvec_cosine.bin", artifacts_dir()),
+    ))
+    .unwrap();
+    let emb = tv.inputs[0].as_f32().unwrap();
+    let mask = tv.inputs[1].as_f32().unwrap();
+    let outs = exe.run(&[Arg::F32(emb), Arg::F32(mask)]).unwrap();
+    assert_allclose(&outs[0], tv.outputs[0].as_f32().unwrap(), 1e-4, "mu");
+    assert_allclose(&outs[1], tv.outputs[1].as_f32().unwrap(), 1e-4, "beta");
+}
+
+#[test]
+fn hlo_and_native_cobi_backends_agree_statistically() {
+    // chaotic dynamics diverge bitwise across math libraries; the CONTRACT
+    // is statistical: on a quantized instance, best-of-8 energies from the
+    // two backends must land within a small relative gap
+    let rt = runtime();
+    let mut rng = Pcg32::seeded(17);
+    let n = 16;
+    let mut ising = Ising::new(n);
+    for i in 0..n {
+        ising.h[i] = rng.range_f32(-3.0, 3.0);
+        for j in (i + 1)..n {
+            ising.set_pair(i, j, rng.range_f32(-1.0, 1.0));
+        }
+    }
+    let inst = quantize(&ising, Precision::CobiInt, Rounding::Deterministic, &mut rng);
+    let (ground, _, _) = ising_ground_exhaustive(&inst);
+
+    let cfg = CobiConfig::default();
+    let mut native = CobiDevice::native(cfg.clone(), 5);
+    let mut hlo = CobiDevice::hlo(cfg, 5, &rt).unwrap();
+    let best = |dev: &mut CobiDevice| -> f64 {
+        (0..8)
+            .map(|_| dev.program_and_solve(&inst).unwrap().energy)
+            .fold(f64::INFINITY, f64::min)
+    };
+    let bn = best(&mut native);
+    let bh = best(&mut hlo);
+    let span = ground.abs().max(1.0);
+    assert!(
+        (bn - bh).abs() / span < 0.15,
+        "native best {bn} vs hlo best {bh} (ground {ground})"
+    );
+    // both should be within 20% of ground on this small instance
+    assert!((bn - ground) / span < 0.2, "native {bn} vs ground {ground}");
+    assert!((bh - ground) / span < 0.2, "hlo {bh} vs ground {ground}");
+}
+
+#[test]
+fn encoder_pipeline_produces_dense_positive_scores() {
+    let rt = runtime();
+    let mut enc = EncoderPipeline::new(&rt).unwrap();
+    let set = cobi_es::corpus::benchmark_set("cnn_dm_20").unwrap();
+    let doc = &set.documents[0];
+    let s = enc.scores(&doc.sentences).unwrap();
+    assert_eq!(s.n(), 20);
+    // SBERT-like geometry through the AOT path too
+    let n = s.n();
+    for i in 0..n {
+        assert!(s.mu[i].is_finite());
+        assert!(s.mu[i].abs() <= 1.0 + 1e-4);
+        for j in 0..n {
+            if i != j {
+                assert!(
+                    s.beta[i * n + j].abs() > 1e-6,
+                    "zero beta at ({i},{j}): dense coupling violated"
+                );
+            } else {
+                assert_eq!(s.beta[i * n + j], 0.0);
+            }
+        }
+    }
+}
+
+#[test]
+fn aot_and_native_embedders_agree_on_redundancy_structure() {
+    // different embedding models, same *structure*: the most-redundant
+    // pairs under the AOT encoder should correlate with the hash
+    // embedder's (rank correlation over pairs > 0)
+    let rt = runtime();
+    let mut aot = EncoderPipeline::new(&rt).unwrap();
+    let mut native = HashEmbedder::new();
+    let set = cobi_es::corpus::benchmark_set("cnn_dm_20").unwrap();
+    let doc = &set.documents[1];
+    let a = aot.scores(&doc.sentences).unwrap();
+    let b = native.scores(&doc.sentences).unwrap();
+    let n = a.n();
+    let mut pairs: Vec<(f32, f32)> = Vec::new();
+    for i in 0..n {
+        for j in (i + 1)..n {
+            pairs.push((a.beta[i * n + j], b.beta[i * n + j]));
+        }
+    }
+    // Pearson over pairs
+    let (ma, mb) = (
+        pairs.iter().map(|p| p.0 as f64).sum::<f64>() / pairs.len() as f64,
+        pairs.iter().map(|p| p.1 as f64).sum::<f64>() / pairs.len() as f64,
+    );
+    let (mut num, mut da, mut db) = (0.0f64, 0.0f64, 0.0f64);
+    for (x, y) in &pairs {
+        let (x, y) = (*x as f64 - ma, *y as f64 - mb);
+        num += x * y;
+        da += x * x;
+        db += y * y;
+    }
+    let corr = num / (da.sqrt() * db.sqrt());
+    assert!(
+        corr > 0.2,
+        "AOT and native redundancy structure uncorrelated: r = {corr:.3}"
+    );
+}
+
+#[test]
+fn artifact_manifest_covers_all_graphs() {
+    let rt = runtime();
+    let names = rt.graph_names();
+    for want in ["anneal", "cosine", "encoder", "energy"] {
+        assert!(names.contains(&want.to_string()), "missing {want}");
+    }
+    // spot-check padded spin dimension agreement
+    let spec = rt.spec("anneal").unwrap();
+    assert_eq!(spec.inputs[0].dims, vec![PADDED_SPINS, PADDED_SPINS]);
+}
+
+#[test]
+fn anneal_batch_artifact_matches_jax_testvector() {
+    let rt = runtime();
+    let exe = rt.executable("anneal_batch").unwrap();
+    let tv = testvec::load(Path::new(&format!(
+        "{}/testvec_anneal_batch.bin",
+        artifacts_dir()
+    )))
+    .unwrap();
+    let args: Vec<Arg> = tv
+        .inputs
+        .iter()
+        .map(|a| Arg::F32(a.as_f32().unwrap()))
+        .collect();
+    let want = tv.outputs[0].as_f32().unwrap();
+    let outs = exe.run(&args).unwrap();
+    assert_allclose(&outs[0], want, 0.0, "anneal_batch spins");
+}
+
+#[test]
+fn batched_device_dispatch_matches_instance_count() {
+    // solve_batch over 11 instances: chunks of 8 through anneal_batch,
+    // results per instance, stats charged per solve
+    let rt = runtime();
+    let mut rng = Pcg32::seeded(33);
+    let mut instances = Vec::new();
+    for k in 0..11 {
+        let mut ising = Ising::new(12);
+        for i in 0..12 {
+            ising.h[i] = rng.range_f32(-3.0, 3.0);
+            for j in (i + 1)..12 {
+                ising.set_pair(i, j, rng.range_f32(-1.0, 1.0));
+            }
+        }
+        let q = quantize(&ising, Precision::CobiInt, Rounding::Deterministic, &mut rng);
+        instances.push(q);
+        let _ = k;
+    }
+    let refs: Vec<&Ising> = instances.iter().collect();
+    let mut dev = CobiDevice::hlo(CobiConfig::default(), 9, &rt).unwrap();
+    let results = dev.program_and_solve_batch(&refs).unwrap();
+    assert_eq!(results.len(), 11);
+    for (inst, r) in instances.iter().zip(&results) {
+        assert_eq!(r.spins.len(), 12);
+        assert!((inst.energy(&r.spins) - r.energy).abs() < 1e-6);
+    }
+    assert_eq!(dev.stats().solves, 11);
+}

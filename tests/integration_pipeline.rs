@@ -1,0 +1,157 @@
+//! Integration: full pipeline across solvers and benchmark sets, service
+//! behaviour under load, experiment drivers end-to-end.
+
+use cobi_es::config::{CobiConfig, PipelineConfig, Settings};
+use cobi_es::corpus::benchmark_set;
+use cobi_es::experiments::{self, Scale};
+use cobi_es::ising::exact_bounds;
+use cobi_es::metrics::rouge_all;
+use cobi_es::pipeline::EsPipeline;
+use cobi_es::service::Service;
+
+fn pipeline(solver: &str, iterations: usize, seed: u64) -> EsPipeline {
+    let cfg = PipelineConfig {
+        solver: solver.into(),
+        iterations,
+        seed,
+        ..Default::default()
+    };
+    EsPipeline::from_config(&cfg, &CobiConfig::default(), None).unwrap()
+}
+
+#[test]
+fn all_solvers_produce_valid_summaries() {
+    let set = benchmark_set("cnn_dm_20").unwrap();
+    let doc = &set.documents[0];
+    for solver in ["cobi", "tabu", "sa", "brute", "exact", "random"] {
+        let mut p = pipeline(solver, 3, 1);
+        let s = p.summarize(doc).unwrap();
+        assert_eq!(s.selected.len(), 6, "{solver}");
+        assert!(s.selected.iter().all(|&i| i < doc.len()), "{solver}");
+        assert!(s.objective.is_finite(), "{solver}");
+        assert_eq!(s.sentences.len(), 6, "{solver}");
+    }
+}
+
+#[test]
+fn solver_quality_ordering_holds_on_average() {
+    // exact >= tabu-refined >= random, averaged over documents
+    let set = benchmark_set("cnn_dm_20").unwrap();
+    let mut sums = [0.0f64; 3];
+    for (i, doc) in set.documents.iter().take(5).enumerate() {
+        let mut pe = pipeline("exact", 1, i as u64);
+        let problem = pe.problem_for(doc).unwrap();
+        let bounds = exact_bounds(&problem);
+        let solvers = ["exact", "tabu", "random"];
+        for (k, solver) in solvers.iter().enumerate() {
+            let mut p = pipeline(solver, 5, i as u64 + 100);
+            let s = p.summarize(doc).unwrap();
+            sums[k] += bounds.normalize(s.objective);
+        }
+    }
+    assert!(sums[0] >= sums[1] - 0.25, "exact {} vs tabu {}", sums[0], sums[1]);
+    assert!(sums[1] > sums[2], "tabu {} vs random {}", sums[1], sums[2]);
+}
+
+#[test]
+fn summaries_overlap_reference_key_facts() {
+    // extrinsic check: high normalized objective should mean real overlap
+    // with the generator's designated key-fact sentences
+    let set = benchmark_set("cnn_dm_20").unwrap();
+    let mut rouge1_sum = 0.0;
+    let mut n = 0;
+    for (i, doc) in set.documents.iter().take(5).enumerate() {
+        let mut p = pipeline("tabu", 5, i as u64);
+        let s = p.summarize(doc).unwrap();
+        let reference: String = doc
+            .reference
+            .iter()
+            .map(|&k| doc.sentences[k].clone())
+            .collect::<Vec<_>>()
+            .join(" ");
+        let r = rouge_all(&s.text(), &reference);
+        rouge1_sum += r.rouge1;
+        n += 1;
+    }
+    let mean = rouge1_sum / n as f64;
+    assert!(mean > 0.3, "mean ROUGE-1 vs key facts too low: {mean:.3}");
+}
+
+#[test]
+fn deterministic_given_seed_across_pipeline() {
+    let set = benchmark_set("cnn_dm_20").unwrap();
+    let doc = &set.documents[3];
+    let a = pipeline("cobi", 4, 42).summarize(doc).unwrap();
+    let b = pipeline("cobi", 4, 42).summarize(doc).unwrap();
+    assert_eq!(a.selected, b.selected);
+    let c = pipeline("cobi", 4, 43).summarize(doc).unwrap();
+    // different seed usually differs; don't assert inequality (may
+    // coincide), but objective must still be valid
+    assert!(c.objective.is_finite());
+}
+
+#[test]
+fn hundred_sentence_documents_decompose_and_solve() {
+    let set = benchmark_set("xsum_100").unwrap();
+    let doc = &set.documents[0];
+    assert_eq!(doc.len(), 100);
+    let mut p = pipeline("cobi", 2, 7);
+    let s = p.summarize(doc).unwrap();
+    assert_eq!(s.selected.len(), 6);
+    assert_eq!(s.stages, 9); // 100 -> ... -> 20 -> final
+}
+
+#[test]
+fn service_under_concurrent_load() {
+    let mut settings = Settings::default();
+    settings.service.workers = 3;
+    settings.service.queue_depth = 64;
+    settings.pipeline.solver = "tabu".into();
+    settings.pipeline.iterations = 2;
+    let svc = Service::start(&settings).unwrap();
+    let set = benchmark_set("cnn_dm_20").unwrap();
+    let tickets: Vec<_> = (0..12)
+        .map(|i| svc.submit(set.documents[i % 20].clone()).unwrap())
+        .collect();
+    for t in tickets {
+        let s = t.wait().unwrap();
+        assert_eq!(s.selected.len(), 6);
+    }
+    let m = svc.metrics();
+    assert_eq!(m.completed, 12);
+    assert_eq!(m.failed, 0);
+    let lat = m.latency_summary();
+    assert!(lat.solve_p50 > 0.0);
+    svc.shutdown();
+}
+
+#[test]
+fn experiments_registry_runs_every_id_quick() {
+    let settings = Settings::default();
+    for id in ["fig1", "fig3", "supp-optima"] {
+        let reports = experiments::run(id, Scale::Quick, &settings).unwrap();
+        assert!(!reports.is_empty(), "{id}");
+        for r in &reports {
+            assert!(!r.rows.is_empty(), "{id}: empty report");
+            let md = r.to_markdown();
+            assert!(md.contains("###"), "{id}");
+        }
+    }
+}
+
+#[test]
+fn config_round_trip_through_file() {
+    let dir = std::env::temp_dir().join("cobi_es_cfg_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("cobi-es.toml");
+    std::fs::write(
+        &path,
+        "[pipeline]\nsolver = \"sa\"\niterations = 9\n[cobi]\nnoise_amp = 0.07\n",
+    )
+    .unwrap();
+    let s = Settings::load(&path).unwrap();
+    assert_eq!(s.pipeline.solver, "sa");
+    assert_eq!(s.pipeline.iterations, 9);
+    assert!((s.cobi.noise_amp - 0.07).abs() < 1e-6);
+    std::fs::remove_file(&path).ok();
+}
