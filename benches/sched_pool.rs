@@ -1,0 +1,127 @@
+//! Bench: pooled-batched vs per-worker-sequential service throughput —
+//! the `sched` subsystem's reason to exist (ROADMAP: batching is the
+//! scaling story).
+//!
+//! Both paths run the SAME ≥20-document workload (`cnn_dm_20`, repeated
+//! `rounds` times with distinct ids) through the full `Service`:
+//!
+//!   * sequential: `[sched] enabled = false` — each worker owns a private
+//!     `EsPipeline` + solver and solves its document's subproblems inline,
+//!     one at a time (the pre-sched architecture);
+//!   * pooled: the shared `DevicePool` — workers run embed/quantize and
+//!     submit whole DAG levels, devices coalesce requests across all
+//!     in-flight documents into batched dispatches.
+//!
+//! Prints a human summary plus a JSON record; set COBI_BENCH_RECORD=1 to
+//! (over)write the committed baseline `BENCH_sched.json` with fresh
+//! numbers (see that file for the schema).
+
+use std::time::Instant;
+
+use cobi_es::config::Settings;
+use cobi_es::corpus::benchmark_set;
+use cobi_es::service::{Service, ServiceMetrics};
+
+const ROUNDS: usize = 3; // 3 x 20 = 60 documents per path
+const WORKERS: usize = 4;
+const DEVICES: usize = 4;
+const ITERATIONS: usize = 4;
+
+fn base_settings() -> Settings {
+    let mut s = Settings::default();
+    s.pipeline.solver = "cobi".into();
+    s.pipeline.iterations = ITERATIONS;
+    s.service.workers = WORKERS;
+    s.service.queue_depth = 256;
+    s
+}
+
+/// Run the whole workload through a Service; returns (wall_s, metrics).
+fn run_workload(settings: &Settings) -> (f64, ServiceMetrics) {
+    let svc = Service::start(settings).expect("service start");
+    let set = benchmark_set("cnn_dm_20").expect("benchmark set");
+    let t0 = Instant::now();
+    let mut tickets = Vec::with_capacity(ROUNDS * set.documents.len());
+    for r in 0..ROUNDS {
+        for doc in &set.documents {
+            let mut d = doc.clone();
+            d.id = format!("{}-r{r}", d.id);
+            tickets.push(svc.submit(d).expect("queue_depth covers the workload"));
+        }
+    }
+    for t in tickets {
+        t.wait().expect("summarize");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let m = svc.metrics();
+    svc.shutdown();
+    (wall, m)
+}
+
+fn main() {
+    let docs = ROUNDS * 20;
+
+    let mut seq = base_settings();
+    seq.sched.enabled = false;
+    let (seq_wall, seq_m) = run_workload(&seq);
+    let seq_rate = docs as f64 / seq_wall;
+    println!(
+        "sequential (per-worker): {docs} docs in {seq_wall:.2}s = {seq_rate:.1} docs/s"
+    );
+    println!("  {}", seq_m.report());
+
+    let mut pooled = base_settings();
+    pooled.sched.enabled = true;
+    pooled.sched.devices = DEVICES;
+    let (pool_wall, pool_m) = run_workload(&pooled);
+    let pool_rate = docs as f64 / pool_wall;
+    println!(
+        "pooled (shared devices): {docs} docs in {pool_wall:.2}s = {pool_rate:.1} docs/s"
+    );
+    println!("  {}", pool_m.report());
+
+    let speedup = seq_wall / pool_wall;
+    println!(
+        "speedup {speedup:.2}x | occupancy {:.2} | coalesce {:.2} | util {:.0}%",
+        pool_m.pool.batch_occupancy(),
+        pool_m.pool.coalescing(),
+        pool_m.pool.utilization() * 100.0
+    );
+    assert!(
+        pool_m.pool.batch_occupancy() > 1.0,
+        "pool ran but batch occupancy was {:.2} (no amortization)",
+        pool_m.pool.batch_occupancy()
+    );
+
+    let json = format!(
+        r#"{{
+  "bench": "sched_pool",
+  "status": "recorded",
+  "workload": {{
+    "set": "cnn_dm_20",
+    "documents": {docs},
+    "solver": "cobi-native",
+    "iterations": {ITERATIONS},
+    "workers": {WORKERS}
+  }},
+  "sequential": {{ "wall_s": {seq_wall:.4}, "docs_per_s": {seq_rate:.2} }},
+  "pooled": {{
+    "wall_s": {pool_wall:.4},
+    "docs_per_s": {pool_rate:.2},
+    "devices": {DEVICES},
+    "batch_occupancy": {occ:.3},
+    "coalescing": {coal:.3},
+    "utilization": {util:.3}
+  }},
+  "speedup": {speedup:.3}
+}}"#,
+        occ = pool_m.pool.batch_occupancy(),
+        coal = pool_m.pool.coalescing(),
+        util = pool_m.pool.utilization(),
+    );
+    println!("\n{json}");
+    if std::env::var("COBI_BENCH_RECORD").is_ok() {
+        std::fs::write("BENCH_sched.json", format!("{json}\n")).expect("write baseline");
+        println!("recorded baseline to BENCH_sched.json");
+    }
+}

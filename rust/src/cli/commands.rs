@@ -190,16 +190,68 @@ pub fn cmd_solve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Apply the `serve` pool flags onto `[sched]` (see USAGE).
+fn apply_pool_flags(settings: &mut Settings, args: &Args) -> Result<()> {
+    if args.get_bool("no-pool") {
+        settings.sched.enabled = false;
+    }
+    settings.sched.devices = args.get_usize("pool-devices", settings.sched.devices)?;
+    settings.sched.max_coalesce =
+        args.get_usize("pool-coalesce", settings.sched.max_coalesce)?;
+    settings.sched.linger_us =
+        args.get_usize("pool-linger-us", settings.sched.linger_us as usize)? as u64;
+    if let Some(b) = args.get("pool-backend") {
+        // reject typos loudly: an unknown backend would otherwise just
+        // silently route solves to worker-private solvers
+        if b != "auto" && !crate::sched::pool_supports(b) {
+            bail!("--pool-backend expects auto|cobi|tabu|sa, got '{b}'");
+        }
+        settings.sched.backend = b.to_string();
+    }
+    Ok(())
+}
+
 pub fn cmd_serve(args: &Args) -> Result<()> {
     let mut settings = load_settings(args)?;
     apply_pipeline_flags(&mut settings, args)?;
+    apply_pool_flags(&mut settings, args)?;
     settings.service.workers = args.get_usize("workers", settings.service.workers)?;
     let requests = args.get_usize("requests", 20)?;
+
+    // the HLO backend needs the artifact runtime threaded through to
+    // whichever route builds a COBI device — the shared pool (this is
+    // what unlocks cross-document ANNEAL_BATCH dispatch) or the
+    // worker-private pipelines. Opened only when a COBI device will
+    // actually be constructed, so e.g. `--pool-backend tabu` serves
+    // without artifacts even under `[cobi] backend = "hlo"`.
+    let pooled = crate::sched::service_pooled(&settings);
+    let needs_hlo = settings.cobi.backend == "hlo"
+        && ((pooled && crate::sched::resolved_backend(&settings) == "cobi")
+            || (!pooled && settings.pipeline.solver == "cobi"));
+    let rt = if needs_hlo {
+        Some(ArtifactRuntime::open_default().context(
+            "hlo backend needs artifacts/ (run `make artifacts`) or COBI_ES_ARTIFACTS",
+        )?)
+    } else {
+        None
+    };
+
+    if pooled {
+        println!(
+            "device pool: {} devices, coalesce {}, linger {}µs, backend {}",
+            settings.sched.devices.max(1),
+            settings.sched.max_coalesce,
+            settings.sched.linger_us,
+            crate::sched::resolved_backend(&settings),
+        );
+    } else {
+        println!("device pool: disabled (worker-private solvers)");
+    }
 
     // --port: run the TCP endpoint until killed
     if let Some(port) = args.get("port") {
         let port: u16 = port.parse().context("--port expects a u16")?;
-        let svc = std::sync::Arc::new(Service::start(&settings)?);
+        let svc = std::sync::Arc::new(Service::start_with(&settings, rt.as_ref())?);
         let server = crate::service::tcp::TcpServer::start(svc.clone(), port)?;
         println!(
             "listening on {} — send document text then a '{}' line",
@@ -216,7 +268,7 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         "starting service: {} workers, queue depth {}, solver {}",
         settings.service.workers, settings.service.queue_depth, settings.pipeline.solver
     );
-    let svc = Service::start(&settings)?;
+    let svc = Service::start_with(&settings, rt.as_ref())?;
     let set = benchmark_set("cnn_dm_20")?;
     let t0 = std::time::Instant::now();
     let mut tickets = Vec::new();

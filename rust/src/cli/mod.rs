@@ -17,7 +17,7 @@ pub struct Args {
 }
 
 /// Flags that take no value.
-const BOOLEAN_FLAGS: &[&str] = &["full", "help", "verbose", "csv", "hlo"];
+const BOOLEAN_FLAGS: &[&str] = &["full", "help", "verbose", "csv", "hlo", "no-pool"];
 
 impl Args {
     pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Self> {
@@ -97,7 +97,11 @@ COMMANDS:
   serve        Start the edge summarization service
                demo mode: [--requests N] [--workers N] [--solver ...]
                network mode: --port <u16> (line protocol; text then
-               a '::EOF::' line -> 'OK <m>' + m summary lines)
+               a '::EOF::' line -> 'OK <m>' + m summary lines;
+               a '::STATS::' line -> 'OK 1' + a metrics report line)
+               device pool: [--pool-devices N] [--pool-coalesce N]
+               [--pool-linger-us N] [--pool-backend auto|cobi|tabu|sa]
+               [--no-pool] (fall back to worker-private solvers)
   doctor       Check artifacts, PJRT runtime and device calibration
   help         Show this message
 
@@ -128,6 +132,15 @@ mod tests {
         let a = parse("summarize --iterations=25 --solver=cobi");
         assert_eq!(a.get_usize("iterations", 1).unwrap(), 25);
         assert_eq!(a.get("solver"), Some("cobi"));
+    }
+
+    #[test]
+    fn no_pool_is_a_bare_flag() {
+        let a = parse("serve --no-pool --workers 2");
+        assert!(a.get_bool("no-pool"));
+        assert_eq!(a.get_usize("workers", 0).unwrap(), 2);
+        // also valid as the last argument
+        assert!(parse("serve --no-pool").get_bool("no-pool"));
     }
 
     #[test]

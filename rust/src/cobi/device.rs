@@ -19,6 +19,10 @@ pub const ANNEAL_STEPS: usize = 256;
 /// Instances per batched dispatch (model.ANNEAL_BATCH).
 pub const ANNEAL_BATCH: usize = 8;
 
+/// RNG stream id for device phase/noise draws (shared by the device-owned
+/// rng and the per-request seeded paths so both derive identically).
+const DEVICE_STREAM: u64 = 0xC0B1;
+
 /// Solve backend.
 pub enum CobiBackend {
     /// Pure-Rust oscillator integrator.
@@ -44,6 +48,15 @@ pub struct CobiStats {
     pub wall_time_s: f64,
 }
 
+/// One scheduler request for the seeded dispatch path: independent
+/// instances whose randomness must derive ONLY from `seed`, so that
+/// co-batching with other requests cannot change the results
+/// (DESIGN.md decision #8).
+pub struct SeededGroup<'a> {
+    pub instances: &'a [Ising],
+    pub seed: u64,
+}
+
 pub struct CobiDevice {
     pub cfg: CobiConfig,
     backend: CobiBackend,
@@ -57,7 +70,7 @@ impl CobiDevice {
         Self {
             cfg,
             backend: CobiBackend::Native,
-            rng: Pcg32::new(seed, 0xC0B1),
+            rng: Pcg32::new(seed, DEVICE_STREAM),
             stats: CobiStats::default(),
         }
     }
@@ -85,7 +98,7 @@ impl CobiDevice {
                 single: exe,
                 batch,
             },
-            rng: Pcg32::new(seed, 0xC0B1),
+            rng: Pcg32::new(seed, DEVICE_STREAM),
             stats: CobiStats::default(),
         })
     }
@@ -108,6 +121,13 @@ impl CobiDevice {
 
     pub fn reset_stats(&mut self) {
         self.stats = CobiStats::default();
+    }
+
+    /// Re-seed the device RNG. The pool's seeded dispatch path derives all
+    /// randomness from per-request seeds instead; this exists for callers
+    /// that replay a device-global stream (tests, calibration).
+    pub fn reseed(&mut self, seed: u64) {
+        self.rng = Pcg32::new(seed, DEVICE_STREAM);
     }
 
     /// Validate that an instance is programmable on the chip: spin count
@@ -142,70 +162,99 @@ impl CobiDevice {
         }
     }
 
+    fn kparams(&self) -> [f32; 3] {
+        [self.cfg.k_coupling, self.cfg.k_shil_max, self.cfg.dt]
+    }
+
+    /// Charge the timing/energy model for `instances` hardware solves.
+    fn charge(&mut self, instances: u64, wall_s: f64) {
+        self.stats.solves += instances;
+        self.stats.device_time_s += self.cfg.solve_time_s * instances as f64;
+        self.stats.device_energy_j +=
+            self.cfg.solve_time_s * self.cfg.power_w * instances as f64;
+        self.stats.wall_time_s += wall_s;
+    }
+
+    /// One native (unpadded) anneal; draws phase0/noise from `rng`.
+    fn native_spins(
+        osc: &OscillatorConfig,
+        noise_amp: f32,
+        ising: &Ising,
+        rng: &mut Pcg32,
+    ) -> Vec<i8> {
+        // §Perf: the native integrator runs UNPADDED — padding spins carry
+        // zero coupling and cannot influence the real ones, so simulating
+        // them is pure waste ((64/n)^2 extra mat-vec work). Only the HLO
+        // artifact needs the fixed 64-spin shape.
+        let n = ising.n;
+        let mut phase0 = vec![0.0f32; n];
+        for p in phase0.iter_mut() {
+            *p = rng.range_f32(-std::f32::consts::PI, std::f32::consts::PI);
+        }
+        let mut noise = vec![0.0f32; ANNEAL_STEPS * n];
+        rng.fill_normal(&mut noise, noise_amp);
+        anneal(ising, osc, &phase0, &noise)
+    }
+
+    /// One padded HLO anneal through the single-instance artifact; draws
+    /// phase0/noise from `rng`.
+    fn hlo_single_spins(
+        exe: &Executable,
+        kparams: &[f32; 3],
+        noise_amp: f32,
+        ising: &Ising,
+        rng: &mut Pcg32,
+    ) -> Result<Vec<i8>> {
+        let padded = ising.padded(PADDED_SPINS);
+        let mut phase0 = vec![0.0f32; PADDED_SPINS];
+        for p in phase0.iter_mut() {
+            *p = rng.range_f32(-std::f32::consts::PI, std::f32::consts::PI);
+        }
+        let mut noise = vec![0.0f32; ANNEAL_STEPS * PADDED_SPINS];
+        rng.fill_normal(&mut noise, noise_amp);
+        let outs = exe.run(&[
+            Arg::F32(&padded.j),
+            Arg::F32(&padded.h),
+            Arg::F32(&phase0),
+            Arg::F32(&noise),
+            Arg::F32(kparams),
+        ])?;
+        Ok(outs[0][..ising.n]
+            .iter()
+            .map(|&v| if v >= 0.0 { 1i8 } else { -1i8 })
+            .collect())
+    }
+
     /// Program the array and run one solve. Validates, pads to the
     /// artifact size, draws phase0/noise, runs the backend, crops the
     /// result and charges the timing model.
     pub fn program_and_solve(&mut self, ising: &Ising) -> Result<SolveResult> {
         self.validate(ising)?;
         let t0 = std::time::Instant::now();
+        let osc = self.oscillator_config();
+        let kparams = self.kparams();
+        let noise_amp = self.cfg.noise_amp;
 
         let spins: Vec<i8> = match &self.backend {
-            CobiBackend::Native => {
-                // §Perf: the native integrator runs UNPADDED — padding
-                // spins carry zero coupling and cannot influence the real
-                // ones, so simulating them is pure waste ((64/n)^2 extra
-                // mat-vec work). Only the HLO artifact needs the fixed
-                // 64-spin shape.
-                let n = ising.n;
-                let mut phase0 = vec![0.0f32; n];
-                for p in phase0.iter_mut() {
-                    *p = self
-                        .rng
-                        .range_f32(-std::f32::consts::PI, std::f32::consts::PI);
-                }
-                let mut noise = vec![0.0f32; ANNEAL_STEPS * n];
-                self.rng.fill_normal(&mut noise, self.cfg.noise_amp);
-                anneal(ising, &self.oscillator_config(), &phase0, &noise)
-            }
+            CobiBackend::Native => Self::native_spins(&osc, noise_amp, ising, &mut self.rng),
             CobiBackend::Hlo { single, .. } => {
-                let padded = ising.padded(PADDED_SPINS);
-                let mut phase0 = vec![0.0f32; PADDED_SPINS];
-                for p in phase0.iter_mut() {
-                    *p = self
-                        .rng
-                        .range_f32(-std::f32::consts::PI, std::f32::consts::PI);
-                }
-                let mut noise = vec![0.0f32; ANNEAL_STEPS * PADDED_SPINS];
-                self.rng.fill_normal(&mut noise, self.cfg.noise_amp);
-                let kparams = [self.cfg.k_coupling, self.cfg.k_shil_max, self.cfg.dt];
-                let outs = single.run(&[
-                    Arg::F32(&padded.j),
-                    Arg::F32(&padded.h),
-                    Arg::F32(&phase0),
-                    Arg::F32(&noise),
-                    Arg::F32(&kparams),
-                ])?;
-                outs[0][..ising.n]
-                    .iter()
-                    .map(|&v| if v >= 0.0 { 1i8 } else { -1i8 })
-                    .collect()
+                let single = single.clone();
+                Self::hlo_single_spins(&single, &kparams, noise_amp, ising, &mut self.rng)?
             }
         };
         let energy = ising.energy(&spins);
-
-        self.stats.solves += 1;
-        self.stats.device_time_s += self.cfg.solve_time_s;
-        self.stats.device_energy_j += self.cfg.solve_time_s * self.cfg.power_w;
-        self.stats.wall_time_s += t0.elapsed().as_secs_f64();
+        self.charge(1, t0.elapsed().as_secs_f64());
         Ok(SolveResult { spins, energy })
     }
-}
 
-impl CobiDevice {
     /// Batched dispatch through the `anneal_batch` artifact: all instances
-    /// solved in ONE PJRT call (chunks of ANNEAL_BATCH; tail chunks padded
-    /// with instance copies and discarded). Falls back to sequential
-    /// solves on the native backend or when the artifact is absent.
+    /// solved in ONE PJRT call per chunk of ANNEAL_BATCH. Tail-chunk slots
+    /// beyond the real instances are left inert (zero couplings, zero
+    /// noise) and never drawn from the device RNG, so a batch returns
+    /// results identical to the same sequence of per-instance
+    /// [`CobiDevice::program_and_solve`] calls and padded slots never leak
+    /// into stats or energy accounting. Falls back to sequential solves on
+    /// the native backend or when the artifact is absent.
     pub fn program_and_solve_batch(&mut self, instances: &[&Ising]) -> Result<Vec<SolveResult>> {
         let batch_exe = match &self.backend {
             CobiBackend::Hlo {
@@ -221,30 +270,17 @@ impl CobiDevice {
         for inst in instances {
             self.validate(inst)?;
         }
-        let kparams = [self.cfg.k_coupling, self.cfg.k_shil_max, self.cfg.dt];
+        let kparams = self.kparams();
+        let noise_amp = self.cfg.noise_amp;
         let mut results = Vec::with_capacity(instances.len());
         for chunk in instances.chunks(ANNEAL_BATCH) {
             let t0 = std::time::Instant::now();
-            let nn = PADDED_SPINS * PADDED_SPINS;
-            let sn = ANNEAL_STEPS * PADDED_SPINS;
-            let mut j = vec![0.0f32; ANNEAL_BATCH * nn];
-            let mut h = vec![0.0f32; ANNEAL_BATCH * PADDED_SPINS];
-            let mut phase0 = vec![0.0f32; ANNEAL_BATCH * PADDED_SPINS];
-            let mut noise = vec![0.0f32; ANNEAL_BATCH * sn];
-            for slot in 0..ANNEAL_BATCH {
-                // tail slots replicate the last real instance (discarded)
-                let inst = chunk[slot.min(chunk.len() - 1)];
-                let padded = inst.padded(PADDED_SPINS);
-                j[slot * nn..(slot + 1) * nn].copy_from_slice(&padded.j);
-                h[slot * PADDED_SPINS..(slot + 1) * PADDED_SPINS].copy_from_slice(&padded.h);
-                for p in phase0[slot * PADDED_SPINS..(slot + 1) * PADDED_SPINS].iter_mut() {
-                    *p = self
-                        .rng
-                        .range_f32(-std::f32::consts::PI, std::f32::consts::PI);
-                }
-                self.rng
-                    .fill_normal(&mut noise[slot * sn..(slot + 1) * sn], self.cfg.noise_amp);
-            }
+            let prepared: Vec<Prepared> = chunk
+                .iter()
+                .enumerate()
+                .map(|(ii, inst)| Prepared::draw(0, ii, inst, noise_amp, &mut self.rng))
+                .collect();
+            let (j, h, phase0, noise) = pack_chunk(&prepared);
             let outs = batch_exe.run(&[
                 Arg::F32(&j),
                 Arg::F32(&h),
@@ -253,21 +289,183 @@ impl CobiDevice {
                 Arg::F32(&kparams),
             ])?;
             for (slot, inst) in chunk.iter().enumerate() {
-                let row = &outs[0][slot * PADDED_SPINS..slot * PADDED_SPINS + inst.n];
-                let spins: Vec<i8> = row
-                    .iter()
-                    .map(|&v| if v >= 0.0 { 1i8 } else { -1i8 })
-                    .collect();
-                let energy = inst.energy(&spins);
-                results.push(SolveResult { spins, energy });
-                self.stats.solves += 1;
-                self.stats.device_time_s += self.cfg.solve_time_s;
-                self.stats.device_energy_j += self.cfg.solve_time_s * self.cfg.power_w;
+                results.push(crop_slot(&outs[0], slot, inst));
             }
-            self.stats.wall_time_s += t0.elapsed().as_secs_f64();
+            self.charge(chunk.len() as u64, t0.elapsed().as_secs_f64());
         }
         Ok(results)
     }
+
+    /// Seeded multi-request dispatch for the device pool: each group's
+    /// phase/noise draws come from a fresh RNG keyed by the group seed, so
+    /// the result of a group is a pure function of (instances, seed,
+    /// device config) — independent of which other groups share the
+    /// dispatch, their order, or earlier device history. With the HLO
+    /// batch artifact, instances from ALL groups are packed into shared
+    /// ANNEAL_BATCH chunks (the cross-document amortization the pool
+    /// exists for); otherwise groups solve sequentially.
+    pub fn solve_groups_seeded(
+        &mut self,
+        groups: &[SeededGroup<'_>],
+    ) -> Result<Vec<Vec<SolveResult>>> {
+        for g in groups {
+            for inst in g.instances {
+                self.validate(inst)?;
+            }
+        }
+        let t0 = std::time::Instant::now();
+        let osc = self.oscillator_config();
+        let kparams = self.kparams();
+        let noise_amp = self.cfg.noise_amp;
+
+        enum Exec {
+            Native,
+            Single(Arc<Executable>),
+            Batch(Arc<Executable>),
+        }
+        let exec = match &self.backend {
+            CobiBackend::Native => Exec::Native,
+            CobiBackend::Hlo {
+                batch: Some(b), ..
+            } => Exec::Batch(b.clone()),
+            CobiBackend::Hlo { single, .. } => Exec::Single(single.clone()),
+        };
+
+        let mut out: Vec<Vec<SolveResult>> = groups
+            .iter()
+            .map(|g| Vec::with_capacity(g.instances.len()))
+            .collect();
+        // instances actually annealed — charged even when a later HLO
+        // dispatch errors, so modeled time/energy never undercount work
+        // the device really did
+        let mut done: u64 = 0;
+        let run = {
+            let out = &mut out;
+            let done = &mut done;
+            (|| -> Result<()> {
+                match exec {
+                    Exec::Native => {
+                        for (gi, g) in groups.iter().enumerate() {
+                            let mut rng = Pcg32::new(g.seed, DEVICE_STREAM);
+                            for inst in g.instances {
+                                let spins =
+                                    Self::native_spins(&osc, noise_amp, inst, &mut rng);
+                                let energy = inst.energy(&spins);
+                                out[gi].push(SolveResult { spins, energy });
+                                *done += 1;
+                            }
+                        }
+                    }
+                    Exec::Single(exe) => {
+                        for (gi, g) in groups.iter().enumerate() {
+                            let mut rng = Pcg32::new(g.seed, DEVICE_STREAM);
+                            for inst in g.instances {
+                                let spins = Self::hlo_single_spins(
+                                    &exe, &kparams, noise_amp, inst, &mut rng,
+                                )?;
+                                let energy = inst.energy(&spins);
+                                out[gi].push(SolveResult { spins, energy });
+                                *done += 1;
+                            }
+                        }
+                    }
+                    Exec::Batch(exe) => {
+                        // flatten all (group, instance) pairs in group
+                        // order — chunks may span group boundaries
+                        let mut prepared: Vec<Prepared> = Vec::new();
+                        for (gi, g) in groups.iter().enumerate() {
+                            let mut rng = Pcg32::new(g.seed, DEVICE_STREAM);
+                            for (ii, inst) in g.instances.iter().enumerate() {
+                                prepared.push(Prepared::draw(gi, ii, inst, noise_amp, &mut rng));
+                            }
+                        }
+                        for chunk in prepared.chunks(ANNEAL_BATCH) {
+                            let (j, h, phase0, noise) = pack_chunk(chunk);
+                            let outs = exe.run(&[
+                                Arg::F32(&j),
+                                Arg::F32(&h),
+                                Arg::F32(&phase0),
+                                Arg::F32(&noise),
+                                Arg::F32(&kparams),
+                            ])?;
+                            for (slot, p) in chunk.iter().enumerate() {
+                                let inst = &groups[p.gi].instances[p.ii];
+                                out[p.gi].push(crop_slot(&outs[0], slot, inst));
+                            }
+                            *done += chunk.len() as u64;
+                        }
+                    }
+                }
+                Ok(())
+            })()
+        };
+        self.charge(done, t0.elapsed().as_secs_f64());
+        run?;
+        Ok(out)
+    }
+}
+
+/// One instance prepared for a batched HLO dispatch.
+struct Prepared {
+    /// Group index (0 for the unseeded batch path).
+    gi: usize,
+    /// Instance index within the group.
+    ii: usize,
+    padded: Ising,
+    phase0: Vec<f32>,
+    noise: Vec<f32>,
+}
+
+impl Prepared {
+    fn draw(gi: usize, ii: usize, inst: &Ising, noise_amp: f32, rng: &mut Pcg32) -> Self {
+        let padded = inst.padded(PADDED_SPINS);
+        let mut phase0 = vec![0.0f32; PADDED_SPINS];
+        for p in phase0.iter_mut() {
+            *p = rng.range_f32(-std::f32::consts::PI, std::f32::consts::PI);
+        }
+        let mut noise = vec![0.0f32; ANNEAL_STEPS * PADDED_SPINS];
+        rng.fill_normal(&mut noise, noise_amp);
+        Self {
+            gi,
+            ii,
+            padded,
+            phase0,
+            noise,
+        }
+    }
+}
+
+/// Pack up to ANNEAL_BATCH prepared instances into the artifact's flat
+/// input buffers. Slots past `chunk.len()` stay all-zero: a zero-coupling,
+/// zero-field, zero-noise oscillator array is inert, cannot influence the
+/// real slots, consumes no RNG draws, and its output rows are discarded —
+/// the three properties the tail-padding unit tests pin down.
+fn pack_chunk(chunk: &[Prepared]) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    assert!(!chunk.is_empty() && chunk.len() <= ANNEAL_BATCH);
+    let nn = PADDED_SPINS * PADDED_SPINS;
+    let sn = ANNEAL_STEPS * PADDED_SPINS;
+    let mut j = vec![0.0f32; ANNEAL_BATCH * nn];
+    let mut h = vec![0.0f32; ANNEAL_BATCH * PADDED_SPINS];
+    let mut phase0 = vec![0.0f32; ANNEAL_BATCH * PADDED_SPINS];
+    let mut noise = vec![0.0f32; ANNEAL_BATCH * sn];
+    for (slot, p) in chunk.iter().enumerate() {
+        j[slot * nn..(slot + 1) * nn].copy_from_slice(&p.padded.j);
+        h[slot * PADDED_SPINS..(slot + 1) * PADDED_SPINS].copy_from_slice(&p.padded.h);
+        phase0[slot * PADDED_SPINS..(slot + 1) * PADDED_SPINS].copy_from_slice(&p.phase0);
+        noise[slot * sn..(slot + 1) * sn].copy_from_slice(&p.noise);
+    }
+    (j, h, phase0, noise)
+}
+
+/// Crop one output slot back to the instance's real spin count and score.
+fn crop_slot(flat: &[f32], slot: usize, inst: &Ising) -> SolveResult {
+    let row = &flat[slot * PADDED_SPINS..slot * PADDED_SPINS + inst.n];
+    let spins: Vec<i8> = row
+        .iter()
+        .map(|&v| if v >= 0.0 { 1i8 } else { -1i8 })
+        .collect();
+    let energy = inst.energy(&spins);
+    SolveResult { spins, energy }
 }
 
 impl IsingSolver for CobiDevice {
@@ -289,19 +487,7 @@ impl IsingSolver for CobiDevice {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::quant::{quantize, Precision, Rounding};
-
-    fn quantized_glass(seed: u64, n: usize) -> Ising {
-        let mut rng = Pcg32::seeded(seed);
-        let mut ising = Ising::new(n);
-        for i in 0..n {
-            ising.h[i] = rng.range_f32(-3.0, 3.0);
-            for j in (i + 1)..n {
-                ising.set_pair(i, j, rng.range_f32(-1.0, 1.0));
-            }
-        }
-        quantize(&ising, Precision::CobiInt, Rounding::Deterministic, &mut rng)
-    }
+    use crate::cobi::testutil::quantized_glass;
 
     #[test]
     fn rejects_oversized_instances() {
@@ -366,5 +552,119 @@ mod tests {
         let gap = (best - ge) / ge.abs();
         assert!(gap < 0.10, "best over 10 solves {best} vs ground {ge} (gap {gap:.3})");
         assert!(best < 0.0);
+    }
+
+    #[test]
+    fn reseed_replays_the_stream() {
+        let ising = quantized_glass(15, 12);
+        let mut dev = CobiDevice::native(CobiConfig::default(), 21);
+        let a = dev.program_and_solve(&ising).unwrap();
+        dev.reseed(21);
+        let b = dev.program_and_solve(&ising).unwrap();
+        assert_eq!(a.spins, b.spins);
+        assert_eq!(a.energy, b.energy);
+    }
+
+    #[test]
+    fn batch_tail_chunk_matches_per_instance_solves() {
+        // 11 instances (not divisible by ANNEAL_BATCH = 8): the batch path
+        // must return exactly what the same device produces solving them
+        // one at a time, and charge stats for 11 solves — padded tail
+        // slots must not leak into accounting.
+        let instances: Vec<Ising> = (0..11).map(|k| quantized_glass(100 + k, 13)).collect();
+        let refs: Vec<&Ising> = instances.iter().collect();
+
+        let mut batch_dev = CobiDevice::native(CobiConfig::default(), 33);
+        let batched = batch_dev.program_and_solve_batch(&refs).unwrap();
+
+        let mut seq_dev = CobiDevice::native(CobiConfig::default(), 33);
+        let sequential: Vec<SolveResult> = refs
+            .iter()
+            .map(|i| seq_dev.program_and_solve(i).unwrap())
+            .collect();
+
+        assert_eq!(batched.len(), 11);
+        for (b, s) in batched.iter().zip(&sequential) {
+            assert_eq!(b.spins, s.spins);
+            assert_eq!(b.energy, s.energy);
+        }
+        let bs = batch_dev.stats();
+        let ss = seq_dev.stats();
+        assert_eq!(bs.solves, 11, "padded slots leaked into solve count");
+        assert_eq!(ss.solves, 11);
+        assert!((bs.device_time_s - 11.0 * 200e-6).abs() < 1e-12);
+        assert!((bs.device_energy_j - ss.device_energy_j).abs() < 1e-15);
+    }
+
+    #[test]
+    fn pack_chunk_leaves_tail_slots_inert() {
+        // 3 real instances in an 8-slot chunk: slots 3..8 must be all-zero
+        // in every buffer (couplings, fields, phases, noise) so they
+        // cannot influence real slots and represent no RNG draws.
+        let mut rng = Pcg32::seeded(55);
+        let prepared: Vec<Prepared> = (0..3)
+            .map(|ii| Prepared::draw(0, ii, &quantized_glass(200 + ii as u64, 10), 0.1, &mut rng))
+            .collect();
+        let (j, h, phase0, noise) = pack_chunk(&prepared);
+        let nn = PADDED_SPINS * PADDED_SPINS;
+        let sn = ANNEAL_STEPS * PADDED_SPINS;
+        assert_eq!(j.len(), ANNEAL_BATCH * nn);
+        assert_eq!(h.len(), ANNEAL_BATCH * PADDED_SPINS);
+        assert_eq!(phase0.len(), ANNEAL_BATCH * PADDED_SPINS);
+        assert_eq!(noise.len(), ANNEAL_BATCH * sn);
+        // real slots made it in
+        assert_eq!(&j[..nn], &prepared[0].padded.j[..]);
+        assert_eq!(&phase0[PADDED_SPINS..2 * PADDED_SPINS], &prepared[1].phase0[..]);
+        // tail slots are identically zero
+        assert!(j[3 * nn..].iter().all(|&v| v == 0.0));
+        assert!(h[3 * PADDED_SPINS..].iter().all(|&v| v == 0.0));
+        assert!(phase0[3 * PADDED_SPINS..].iter().all(|&v| v == 0.0));
+        assert!(noise[3 * sn..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn seeded_groups_are_independent_of_cobatching() {
+        // a group's result must be a pure function of (instances, seed):
+        // solving it alone, co-batched with another group, or in the
+        // reverse order must all agree — the invariant that makes pool
+        // dispatch order irrelevant to summaries.
+        let a: Vec<Ising> = (0..3).map(|k| quantized_glass(300 + k, 12)).collect();
+        let b: Vec<Ising> = (0..5).map(|k| quantized_glass(400 + k, 14)).collect();
+        let mut dev = CobiDevice::native(CobiConfig::default(), 77);
+
+        let alone = dev
+            .solve_groups_seeded(&[SeededGroup { instances: &a, seed: 9001 }])
+            .unwrap();
+        let together = dev
+            .solve_groups_seeded(&[
+                SeededGroup { instances: &b, seed: 4242 },
+                SeededGroup { instances: &a, seed: 9001 },
+            ])
+            .unwrap();
+        assert_eq!(alone[0].len(), 3);
+        assert_eq!(together[1].len(), 3);
+        for (x, y) in alone[0].iter().zip(&together[1]) {
+            assert_eq!(x.spins, y.spins);
+            assert_eq!(x.energy, y.energy);
+        }
+        // accounting counts only real instances: 3 + (5 + 3) = 11
+        assert_eq!(dev.stats().solves, 11);
+    }
+
+    #[test]
+    fn seeded_groups_vary_with_seed() {
+        let a: Vec<Ising> = (0..2).map(|k| quantized_glass(500 + k, 16)).collect();
+        let mut dev = CobiDevice::native(CobiConfig::default(), 78);
+        let r1 = dev
+            .solve_groups_seeded(&[SeededGroup { instances: &a, seed: 1 }])
+            .unwrap();
+        let r2 = dev
+            .solve_groups_seeded(&[SeededGroup { instances: &a, seed: 2 }])
+            .unwrap();
+        let same = r1[0]
+            .iter()
+            .zip(&r2[0])
+            .all(|(x, y)| x.spins == y.spins);
+        assert!(!same, "different seeds produced identical spin sets");
     }
 }

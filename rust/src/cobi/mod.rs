@@ -15,4 +15,28 @@
 
 pub mod device;
 
-pub use device::{CobiBackend, CobiDevice, CobiStats, ANNEAL_STEPS, PADDED_SPINS};
+pub use device::{
+    CobiBackend, CobiDevice, CobiStats, SeededGroup, ANNEAL_BATCH, ANNEAL_STEPS, PADDED_SPINS,
+};
+
+/// Shared test fixtures (device + sched pool tests must agree on them).
+#[cfg(test)]
+pub(crate) mod testutil {
+    use crate::ising::Ising;
+    use crate::quant::{quantize, Precision, Rounding};
+    use crate::util::rng::Pcg32;
+
+    /// Seeded random spin glass, quantized into the COBI DAC range — the
+    /// canonical programmable instance for device/pool determinism tests.
+    pub(crate) fn quantized_glass(seed: u64, n: usize) -> Ising {
+        let mut rng = Pcg32::seeded(seed);
+        let mut ising = Ising::new(n);
+        for i in 0..n {
+            ising.h[i] = rng.range_f32(-3.0, 3.0);
+            for j in (i + 1)..n {
+                ising.set_pair(i, j, rng.range_f32(-1.0, 1.0));
+            }
+        }
+        quantize(&ising, Precision::CobiInt, Rounding::Deterministic, &mut rng)
+    }
+}

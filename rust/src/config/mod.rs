@@ -95,6 +95,32 @@ impl Default for PipelineConfig {
     }
 }
 
+impl PipelineConfig {
+    /// Refinement parameters implied by this config (shared by the inline
+    /// pipeline and the sched executor so the two paths cannot drift).
+    pub fn refine_config(&self) -> crate::refine::RefineConfig {
+        crate::refine::RefineConfig {
+            formulation: if self.improved_formulation {
+                crate::ising::Formulation::Improved
+            } else {
+                crate::ising::Formulation::Original
+            },
+            precision: self.precision,
+            rounding: self.rounding,
+            iterations: self.iterations,
+        }
+    }
+
+    /// Decomposition parameters implied by this config.
+    pub fn decompose_params(&self) -> crate::decompose::DecomposeParams {
+        crate::decompose::DecomposeParams {
+            p: self.decompose_p,
+            q: self.decompose_q,
+            m: self.summary_len,
+        }
+    }
+}
+
 /// Timing/energy model constants for TTS/ETS (paper §V).
 #[derive(Debug, Clone, PartialEq)]
 pub struct TimingConfig {
@@ -146,6 +172,40 @@ impl Default for ServiceConfig {
     }
 }
 
+/// Subproblem scheduler / device pool parameters (`sched::DevicePool`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SchedConfig {
+    /// Route service Ising solves through the shared device pool
+    /// (ignored — falls back to worker-private solvers — when the
+    /// pipeline solver is not pool-capable, e.g. brute/exact/random).
+    pub enabled: bool,
+    /// Solver instances owned by the pool.
+    pub devices: usize,
+    /// Max requests coalesced into one device dispatch.
+    pub max_coalesce: usize,
+    /// Flush timeout: how long a device lingers to fill a dispatch, µs.
+    /// 0 = dispatch immediately (lowest latency, least batching).
+    pub linger_us: u64,
+    /// Bound on queued solve requests (submitters block when full).
+    pub queue_depth: usize,
+    /// Pool solver backend: "auto" (= pipeline.solver), "cobi", "tabu",
+    /// "sa".
+    pub backend: String,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        Self {
+            enabled: true,
+            devices: 2,
+            max_coalesce: 8,
+            linger_us: 200,
+            queue_depth: 1024,
+            backend: "auto".into(),
+        }
+    }
+}
+
 /// Root settings object.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Settings {
@@ -153,6 +213,7 @@ pub struct Settings {
     pub pipeline: PipelineConfig,
     pub timing: TimingConfig,
     pub service: ServiceConfig,
+    pub sched: SchedConfig,
     /// Directory containing AOT artifacts (manifest.txt etc.).
     pub artifacts_dir: String,
 }
@@ -249,6 +310,15 @@ impl Settings {
         if let Some(v) = doc.get_i64("service.linger_us") {
             self.service.linger_us = v as u64;
         }
+
+        set!(self.sched.enabled, get_bool, "sched.enabled");
+        set!(self.sched.devices, get_i64, "sched.devices");
+        set!(self.sched.max_coalesce, get_i64, "sched.max_coalesce");
+        if let Some(v) = doc.get_i64("sched.linger_us") {
+            self.sched.linger_us = v as u64;
+        }
+        set!(self.sched.queue_depth, get_i64, "sched.queue_depth");
+        set!(self.sched.backend, get_str, "sched.backend");
         Ok(())
     }
 }
@@ -295,6 +365,36 @@ p_target = 0.99
         assert_eq!(s.pipeline.rounding, Rounding::Deterministic);
         assert_eq!(s.pipeline.iterations, 50);
         assert!((s.timing.p_target - 0.99).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sched_defaults_and_overrides() {
+        let s = Settings::default();
+        assert!(s.sched.enabled);
+        assert_eq!(s.sched.devices, 2);
+        assert_eq!(s.sched.max_coalesce, 8);
+        assert_eq!(s.sched.backend, "auto");
+
+        let doc = toml::Document::parse(
+            r#"
+[sched]
+enabled = false
+devices = 4
+max_coalesce = 16
+linger_us = 500
+queue_depth = 64
+backend = "tabu"
+"#,
+        )
+        .unwrap();
+        let mut s = Settings::default();
+        s.apply(&doc).unwrap();
+        assert!(!s.sched.enabled);
+        assert_eq!(s.sched.devices, 4);
+        assert_eq!(s.sched.max_coalesce, 16);
+        assert_eq!(s.sched.linger_us, 500);
+        assert_eq!(s.sched.queue_depth, 64);
+        assert_eq!(s.sched.backend, "tabu");
     }
 
     #[test]

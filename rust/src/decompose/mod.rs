@@ -152,7 +152,10 @@ where
     Ok(DecompositionResult { selected, stages })
 }
 
-fn validate_local(local: &[usize], window_len: usize, want: usize) -> Result<()> {
+/// Validate a solver's window-local answer: exactly `want` distinct
+/// positions, all inside the window. Shared with `sched::SubproblemGraph`,
+/// which replays the same contract per DAG unit.
+pub(crate) fn validate_local(local: &[usize], window_len: usize, want: usize) -> Result<()> {
     ensure!(
         local.len() == want,
         "subproblem solver returned {} of {} requested",
@@ -273,6 +276,71 @@ mod tests {
         assert!(decompose(12, &params, |_, _| Ok(vec![1, 1])).is_err());
         // out of range
         assert!(decompose(12, &params, |w, _| Ok(vec![w.len(), 0])).is_err());
+    }
+
+    #[test]
+    fn single_stage_document_below_p_is_one_final_solve() {
+        // N <= P: decomposition is bypassed — exactly one final stage over
+        // the whole document (the case the scheduler replays as a single
+        // final DAG unit)
+        let params = DecomposeParams::paper_default();
+        for n in [10usize, 19] {
+            let r = decompose(n, &params, top_indices).unwrap();
+            assert_eq!(r.solves(), 1, "n={n}");
+            assert!(r.stages[0].is_final);
+            assert_eq!(r.stages[0].window, (0..n).collect::<Vec<_>>());
+            assert_eq!(r.selected.len(), 6);
+        }
+    }
+
+    #[test]
+    fn window_wraps_around_at_document_end() {
+        // p=6, q=3, n=14 with the keep-largest toy solver: by the third
+        // stage the cursor sits near the end of an 8-sentence active list,
+        // so the window must wrap past the document end back to the head
+        let params = DecomposeParams { p: 6, q: 3, m: 2 };
+        let mut windows: Vec<Vec<usize>> = Vec::new();
+        let r = decompose(14, &params, |w, t| {
+            windows.push(w.to_vec());
+            top_indices(w, t)
+        })
+        .unwrap();
+        // stage 1: head window; stage 2: next 6 after the kept {3,4,5}
+        assert_eq!(windows[0], vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!(windows[1], vec![6, 7, 8, 9, 10, 11]);
+        // stage 3: active = [3,4,5,9,10,11,12,13], cursor past {9,10,11}
+        // -> positions 6,7 then WRAP to 0,1,2,3
+        assert_eq!(windows[2], vec![12, 13, 3, 4, 5, 9]);
+        // wrapped windows still satisfy the global invariants
+        assert_eq!(r.solves(), stage_count(14, &params));
+        assert_eq!(r.selected.len(), 2);
+        assert!(r.selected.windows(2).all(|w| w[0] < w[1]));
+        // every wrapped window holds distinct in-range indices
+        for w in &windows {
+            let mut s = w.clone();
+            s.sort_unstable();
+            s.dedup();
+            assert_eq!(s.len(), w.len());
+            assert!(s.iter().all(|&i| i < 14));
+        }
+    }
+
+    #[test]
+    fn q_equals_m_final_stage_still_selects_m() {
+        // Q == M: intermediate stages shrink to Q = M, and the final stage
+        // still runs an M-selection over the merged <= P sentences (it
+        // must not be skipped just because a window already has M picks)
+        let params = DecomposeParams { p: 6, q: 3, m: 3 };
+        let r = decompose(14, &params, top_indices).unwrap();
+        let last = r.stages.last().unwrap();
+        assert!(last.is_final);
+        assert!(last.window.len() <= 6);
+        assert_eq!(last.chosen.len(), 3);
+        assert_eq!(r.selected.len(), 3);
+        for s in &r.stages[..r.stages.len() - 1] {
+            assert!(!s.is_final);
+            assert_eq!(s.chosen.len(), 3);
+        }
     }
 
     #[test]

@@ -16,6 +16,7 @@ pub mod pipeline;
 pub mod quant;
 pub mod refine;
 pub mod runtime;
+pub mod sched;
 pub mod service;
 pub mod solvers;
 pub mod text;

@@ -10,7 +10,7 @@ use crate::config::{CobiConfig, PipelineConfig};
 use crate::corpus::Document;
 use crate::decompose::{decompose, stage_count, DecomposeParams};
 use crate::embed::{Embedder, HashEmbedder, Scores};
-use crate::ising::{EsProblem, Formulation};
+use crate::ising::EsProblem;
 use crate::quant::Rounding;
 use crate::refine::{refine, RefineConfig};
 use crate::runtime::ArtifactRuntime;
@@ -121,24 +121,11 @@ impl EsPipeline {
     }
 
     fn refine_config(&self) -> RefineConfig {
-        RefineConfig {
-            formulation: if self.cfg.improved_formulation {
-                Formulation::Improved
-            } else {
-                Formulation::Original
-            },
-            precision: self.cfg.precision,
-            rounding: self.cfg.rounding,
-            iterations: self.cfg.iterations,
-        }
+        self.cfg.refine_config()
     }
 
     fn decompose_params(&self) -> DecomposeParams {
-        DecomposeParams {
-            p: self.cfg.decompose_p,
-            q: self.cfg.decompose_q,
-            m: self.cfg.summary_len,
-        }
+        self.cfg.decompose_params()
     }
 
     /// Solve one window subproblem; returns positions into the window.

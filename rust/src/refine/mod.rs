@@ -90,32 +90,31 @@ pub struct RefineTrace {
     pub result: SelectionResult,
 }
 
-/// Run iterative refinement of `p` with `solver` (which solves quantized
-/// Ising instances). `rng` drives the rounding draws only — solver
-/// randomness lives in the solver's own seeded RNG.
-pub fn refine(
+/// Quantize the `cfg.iterations` candidate Hamiltonians for one
+/// subproblem (formulate once, re-round per iteration). This is the
+/// rng-consuming half of [`refine`], split out so schedulers
+/// (`sched::summarize_with_pool`) can draw instances in deterministic
+/// document order while the solves happen elsewhere — the RNG draw order
+/// is identical to the inline sequential loop.
+pub fn prepare_instances(
     p: &EsProblem,
     cfg: &RefineConfig,
-    solver: &mut dyn IsingSolver,
     rng: &mut Pcg32,
-) -> Result<RefineTrace> {
+) -> Vec<crate::ising::Ising> {
     let es = formulate(p, cfg.formulation);
-    let iterations = cfg.iterations.max(1);
-    let mut objectives = Vec::with_capacity(iterations);
-    let mut best_so_far = Vec::with_capacity(iterations);
-    let mut best: Option<SelectionResult> = None;
-
-    // quantize all iterations up front (RNG draw order identical to the
-    // sequential loop), then solve through the batch path — devices with
-    // a batched artifact dispatch once per ANNEAL_BATCH instances.
-    let instances: Vec<_> = (0..iterations)
+    (0..cfg.iterations.max(1))
         .map(|_| quantize(&es.ising, cfg.precision, cfg.rounding, rng))
-        .collect();
-    let refs: Vec<&crate::ising::Ising> = instances.iter().collect();
-    let solved_all = solver.solve_batch(&refs);
+        .collect()
+}
 
-    for solved in solved_all {
-        let raw = selected_indices(&solved.spins);
+/// The scoring half of [`refine`]: map each solved spin configuration back
+/// to a repaired selection, score under the FP objective, keep the best.
+pub fn select_best(p: &EsProblem, solved: &[crate::solvers::SolveResult]) -> RefineTrace {
+    let mut objectives = Vec::with_capacity(solved.len());
+    let mut best_so_far = Vec::with_capacity(solved.len());
+    let mut best: Option<SelectionResult> = None;
+    for s in solved {
+        let raw = selected_indices(&s.spins);
         let selected = repair_selection(p, raw);
         let objective = p.objective(&selected);
         objectives.push(objective);
@@ -127,11 +126,29 @@ pub fn refine(
         }
         best_so_far.push(best.as_ref().unwrap().objective);
     }
-    Ok(RefineTrace {
+    RefineTrace {
         objectives,
         best_so_far,
-        result: best.unwrap(),
-    })
+        result: best.expect("select_best needs at least one solve"),
+    }
+}
+
+/// Run iterative refinement of `p` with `solver` (which solves quantized
+/// Ising instances). `rng` drives the rounding draws only — solver
+/// randomness lives in the solver's own seeded RNG.
+pub fn refine(
+    p: &EsProblem,
+    cfg: &RefineConfig,
+    solver: &mut dyn IsingSolver,
+    rng: &mut Pcg32,
+) -> Result<RefineTrace> {
+    // quantize all iterations up front (RNG draw order identical to the
+    // sequential loop), then solve through the batch path — devices with
+    // a batched artifact dispatch once per ANNEAL_BATCH instances.
+    let instances = prepare_instances(p, cfg, rng);
+    let refs: Vec<&crate::ising::Ising> = instances.iter().collect();
+    let solved_all = solver.solve_batch(&refs);
+    Ok(select_best(p, &solved_all))
 }
 
 #[cfg(test)]

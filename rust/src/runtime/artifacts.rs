@@ -6,10 +6,14 @@
 //! types. The manifest's static shapes are validated on every call —
 //! shape drift between the Python constants and the Rust callers is a
 //! build error, not a silent miscomputation.
+//!
+//! Feature gating (DESIGN.md §Substitutions): the PJRT execution backend
+//! needs the `xla` bindings crate, which is not part of the default
+//! (offline) crate set. Without `--features pjrt` the registry compiles to
+//! a stub whose `open()` fails with a descriptive error, so every caller
+//! degrades to the native backends at runtime instead of failing to build.
 
 use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::Mutex;
 
 use anyhow::{bail, Context, Result};
 
@@ -34,180 +38,252 @@ pub struct GraphSpec {
     pub outputs: Vec<SlotSpec>,
 }
 
-/// A compiled artifact ready to execute.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    pub spec: GraphSpec,
-    pub name: String,
-}
-
-// SAFETY: execution goes through the TFRT CPU PJRT client, which is
-// internally thread-safe; the non-atomic Rc inside the xla wrapper is only
-// touched when an Executable is dropped, and Executables are always held
-// behind Arc with the owning ArtifactRuntime kept alive for the process
-// lifetime (see service::). The wrapper types merely lack derived markers.
-unsafe impl Send for Executable {}
-unsafe impl Sync for Executable {}
-
 /// Typed argument for execution.
 pub enum Arg<'a> {
     F32(&'a [f32]),
     I32(&'a [i32]),
 }
 
-impl Executable {
-    /// Execute with flat buffers; returns one flat f32 vec per output.
-    ///
-    /// All current artifacts produce f32 outputs; extend on demand.
-    pub fn run(&self, args: &[Arg<'_>]) -> Result<Vec<Vec<f32>>> {
-        let spec = &self.spec;
-        if args.len() != spec.inputs.len() {
-            bail!(
-                "{}: expected {} inputs, got {}",
-                self.name,
-                spec.inputs.len(),
-                args.len()
-            );
-        }
-        let mut literals = Vec::with_capacity(args.len());
-        for (i, (arg, slot)) in args.iter().zip(&spec.inputs).enumerate() {
-            let lit = match (arg, slot.dtype.as_str()) {
-                (Arg::F32(buf), "float32") => {
-                    if buf.len() != slot.elements() {
-                        bail!(
-                            "{} input {i}: expected {} f32 elements, got {}",
-                            self.name,
-                            slot.elements(),
-                            buf.len()
-                        );
-                    }
-                    let dims: Vec<i64> = slot.dims.iter().map(|&d| d as i64).collect();
-                    xla::Literal::vec1(buf).reshape(&dims)?
-                }
-                (Arg::I32(buf), "int32") => {
-                    if buf.len() != slot.elements() {
-                        bail!(
-                            "{} input {i}: expected {} i32 elements, got {}",
-                            self.name,
-                            slot.elements(),
-                            buf.len()
-                        );
-                    }
-                    let dims: Vec<i64> = slot.dims.iter().map(|&d| d as i64).collect();
-                    xla::Literal::vec1(buf).reshape(&dims)?
-                }
-                (_, want) => bail!("{} input {i}: dtype mismatch (manifest: {want})", self.name),
-            };
-            literals.push(lit);
-        }
-        let result = self.exe.execute::<xla::Literal>(&literals)?;
-        // jax lowered with return_tuple=True: single tuple output
-        let tuple = result[0][0]
-            .to_literal_sync()?
-            .to_tuple()
-            .context("expected tuple output")?;
-        if tuple.len() != spec.outputs.len() {
-            bail!(
-                "{}: manifest promises {} outputs, artifact returned {}",
-                self.name,
-                spec.outputs.len(),
-                tuple.len()
-            );
-        }
-        let mut out = Vec::with_capacity(tuple.len());
-        for (lit, slot) in tuple.iter().zip(&spec.outputs) {
-            let v: Vec<f32> = lit.to_vec()?;
-            if v.len() != slot.elements() {
+pub use backend::{ArtifactRuntime, Executable};
+
+#[cfg(feature = "pjrt")]
+mod backend {
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+    use std::sync::Mutex;
+
+    use anyhow::{bail, Context, Result};
+
+    use super::{parse_manifest, Arg, GraphSpec};
+
+    /// A compiled artifact ready to execute.
+    pub struct Executable {
+        exe: xla::PjRtLoadedExecutable,
+        pub spec: GraphSpec,
+        pub name: String,
+    }
+
+    // SAFETY: execution goes through the TFRT CPU PJRT client, which is
+    // internally thread-safe; the non-atomic Rc inside the xla wrapper is
+    // only touched when an Executable is dropped, and Executables are
+    // always held behind Arc with the owning ArtifactRuntime kept alive
+    // for the process lifetime (see service::). The wrapper types merely
+    // lack derived markers.
+    unsafe impl Send for Executable {}
+    unsafe impl Sync for Executable {}
+
+    impl Executable {
+        /// Execute with flat buffers; returns one flat f32 vec per output.
+        ///
+        /// All current artifacts produce f32 outputs; extend on demand.
+        pub fn run(&self, args: &[Arg<'_>]) -> Result<Vec<Vec<f32>>> {
+            let spec = &self.spec;
+            if args.len() != spec.inputs.len() {
                 bail!(
-                    "{}: output size {} != manifest {}",
+                    "{}: expected {} inputs, got {}",
                     self.name,
-                    v.len(),
-                    slot.elements()
+                    spec.inputs.len(),
+                    args.len()
                 );
             }
-            out.push(v);
+            let mut literals = Vec::with_capacity(args.len());
+            for (i, (arg, slot)) in args.iter().zip(&spec.inputs).enumerate() {
+                let lit = match (arg, slot.dtype.as_str()) {
+                    (Arg::F32(buf), "float32") => {
+                        if buf.len() != slot.elements() {
+                            bail!(
+                                "{} input {i}: expected {} f32 elements, got {}",
+                                self.name,
+                                slot.elements(),
+                                buf.len()
+                            );
+                        }
+                        let dims: Vec<i64> = slot.dims.iter().map(|&d| d as i64).collect();
+                        xla::Literal::vec1(buf).reshape(&dims)?
+                    }
+                    (Arg::I32(buf), "int32") => {
+                        if buf.len() != slot.elements() {
+                            bail!(
+                                "{} input {i}: expected {} i32 elements, got {}",
+                                self.name,
+                                slot.elements(),
+                                buf.len()
+                            );
+                        }
+                        let dims: Vec<i64> = slot.dims.iter().map(|&d| d as i64).collect();
+                        xla::Literal::vec1(buf).reshape(&dims)?
+                    }
+                    (_, want) => {
+                        bail!("{} input {i}: dtype mismatch (manifest: {want})", self.name)
+                    }
+                };
+                literals.push(lit);
+            }
+            let result = self.exe.execute::<xla::Literal>(&literals)?;
+            // jax lowered with return_tuple=True: single tuple output
+            let tuple = result[0][0]
+                .to_literal_sync()?
+                .to_tuple()
+                .context("expected tuple output")?;
+            if tuple.len() != spec.outputs.len() {
+                bail!(
+                    "{}: manifest promises {} outputs, artifact returned {}",
+                    self.name,
+                    spec.outputs.len(),
+                    tuple.len()
+                );
+            }
+            let mut out = Vec::with_capacity(tuple.len());
+            for (lit, slot) in tuple.iter().zip(&spec.outputs) {
+                let v: Vec<f32> = lit.to_vec()?;
+                if v.len() != slot.elements() {
+                    bail!(
+                        "{}: output size {} != manifest {}",
+                        self.name,
+                        v.len(),
+                        slot.elements()
+                    );
+                }
+                out.push(v);
+            }
+            Ok(out)
         }
-        Ok(out)
-    }
-}
-
-/// Manifest + lazily compiled executables over one PJRT CPU client.
-pub struct ArtifactRuntime {
-    dir: PathBuf,
-    client: xla::PjRtClient,
-    specs: HashMap<String, GraphSpec>,
-    compiled: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
-}
-
-// SAFETY: the PJRT CPU client and loaded executables are internally
-// thread-safe (TfrtCpuClient); the raw pointers in the xla wrapper types
-// lack auto-derived markers only.
-unsafe impl Send for ArtifactRuntime {}
-unsafe impl Sync for ArtifactRuntime {}
-
-impl ArtifactRuntime {
-    /// Open the artifact directory (must contain manifest.txt).
-    pub fn open(dir: &Path) -> Result<Self> {
-        let manifest = dir.join("manifest.txt");
-        let text = std::fs::read_to_string(&manifest)
-            .with_context(|| format!("reading {}", manifest.display()))?;
-        let specs = parse_manifest(&text)?;
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Self {
-            dir: dir.to_path_buf(),
-            client,
-            specs,
-            compiled: Mutex::new(HashMap::new()),
-        })
     }
 
-    /// Default location: $COBI_ES_ARTIFACTS or ./artifacts.
-    pub fn open_default() -> Result<Self> {
-        let dir = std::env::var("COBI_ES_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-        Self::open(Path::new(&dir))
+    /// Manifest + lazily compiled executables over one PJRT CPU client.
+    pub struct ArtifactRuntime {
+        dir: PathBuf,
+        client: xla::PjRtClient,
+        specs: HashMap<String, GraphSpec>,
+        compiled: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
     }
 
-    pub fn graph_names(&self) -> Vec<String> {
-        let mut v: Vec<String> = self.specs.keys().cloned().collect();
-        v.sort();
-        v
-    }
+    // SAFETY: the PJRT CPU client and loaded executables are internally
+    // thread-safe (TfrtCpuClient); the raw pointers in the xla wrapper
+    // types lack auto-derived markers only.
+    unsafe impl Send for ArtifactRuntime {}
+    unsafe impl Sync for ArtifactRuntime {}
 
-    pub fn spec(&self, name: &str) -> Option<&GraphSpec> {
-        self.specs.get(name)
-    }
-
-    /// Get (compiling on first use) the executable for `name`.
-    pub fn executable(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
-        if let Some(e) = self.compiled.lock().unwrap().get(name) {
-            return Ok(e.clone());
+    impl ArtifactRuntime {
+        /// Open the artifact directory (must contain manifest.txt).
+        pub fn open(dir: &Path) -> Result<Self> {
+            let manifest = dir.join("manifest.txt");
+            let text = std::fs::read_to_string(&manifest)
+                .with_context(|| format!("reading {}", manifest.display()))?;
+            let specs = parse_manifest(&text)?;
+            let client = xla::PjRtClient::cpu()?;
+            Ok(Self {
+                dir: dir.to_path_buf(),
+                client,
+                specs,
+                compiled: Mutex::new(HashMap::new()),
+            })
         }
-        let spec = self
-            .specs
-            .get(name)
-            .with_context(|| format!("unknown artifact '{name}'"))?
-            .clone();
-        let path = self.dir.join(&spec.file);
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .with_context(|| format!("parsing {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {name}"))?;
-        let executable = std::sync::Arc::new(Executable {
-            exe,
-            spec,
-            name: name.to_string(),
-        });
-        self.compiled
-            .lock()
-            .unwrap()
-            .insert(name.to_string(), executable.clone());
-        Ok(executable)
+
+        /// Default location: $COBI_ES_ARTIFACTS or ./artifacts.
+        pub fn open_default() -> Result<Self> {
+            let dir =
+                std::env::var("COBI_ES_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+            Self::open(Path::new(&dir))
+        }
+
+        pub fn graph_names(&self) -> Vec<String> {
+            let mut v: Vec<String> = self.specs.keys().cloned().collect();
+            v.sort();
+            v
+        }
+
+        pub fn spec(&self, name: &str) -> Option<&GraphSpec> {
+            self.specs.get(name)
+        }
+
+        /// Get (compiling on first use) the executable for `name`.
+        pub fn executable(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
+            if let Some(e) = self.compiled.lock().unwrap().get(name) {
+                return Ok(e.clone());
+            }
+            let spec = self
+                .specs
+                .get(name)
+                .with_context(|| format!("unknown artifact '{name}'"))?
+                .clone();
+            let path = self.dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?;
+            let executable = std::sync::Arc::new(Executable {
+                exe,
+                spec,
+                name: name.to_string(),
+            });
+            self.compiled
+                .lock()
+                .unwrap()
+                .insert(name.to_string(), executable.clone());
+            Ok(executable)
+        }
     }
 }
 
+#[cfg(not(feature = "pjrt"))]
+mod backend {
+    use std::path::Path;
+
+    use anyhow::{bail, Result};
+
+    use super::{Arg, GraphSpec};
+
+    const UNAVAILABLE: &str = "PJRT support not compiled in: rebuild with \
+         `--features pjrt` (and vendor the `xla` bindings crate); the \
+         native backends cover everything else";
+
+    /// Stub standing in for a compiled artifact; never constructible
+    /// because the stub [`ArtifactRuntime::open`] always fails.
+    pub struct Executable {
+        pub spec: GraphSpec,
+        pub name: String,
+    }
+
+    impl Executable {
+        pub fn run(&self, _args: &[Arg<'_>]) -> Result<Vec<Vec<f32>>> {
+            bail!("{}: {UNAVAILABLE}", self.name)
+        }
+    }
+
+    /// Stub registry: opening always fails with a descriptive error so
+    /// callers fall back to the native paths.
+    pub struct ArtifactRuntime(());
+
+    impl ArtifactRuntime {
+        pub fn open(dir: &Path) -> Result<Self> {
+            bail!("cannot open artifacts at {}: {UNAVAILABLE}", dir.display())
+        }
+
+        pub fn open_default() -> Result<Self> {
+            let dir =
+                std::env::var("COBI_ES_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+            Self::open(Path::new(&dir))
+        }
+
+        pub fn graph_names(&self) -> Vec<String> {
+            Vec::new()
+        }
+
+        pub fn spec(&self, _name: &str) -> Option<&GraphSpec> {
+            None
+        }
+
+        pub fn executable(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
+            bail!("artifact '{name}': {UNAVAILABLE}")
+        }
+    }
+}
+
+#[cfg_attr(not(feature = "pjrt"), allow(dead_code))] // stub backend parses nothing
 fn parse_manifest(text: &str) -> Result<HashMap<String, GraphSpec>> {
     let mut specs: HashMap<String, GraphSpec> = HashMap::new();
     for (lineno, line) in text.lines().enumerate() {
@@ -288,5 +364,12 @@ energy energy.hlo.txt out 0 float32 32
         let specs = parse_manifest("g f.hlo in 0 float32 scalar").unwrap();
         assert_eq!(specs["g"].inputs[0].dims, Vec::<usize>::new());
         assert_eq!(specs["g"].inputs[0].elements(), 1);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runtime_fails_loudly() {
+        let err = ArtifactRuntime::open(std::path::Path::new("artifacts")).unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
     }
 }

@@ -14,7 +14,14 @@ pub use artifacts::{ArtifactRuntime, Executable};
 pub use encoder::EncoderPipeline;
 
 /// Quick PJRT availability probe (used by `cobi-es doctor` and tests).
+#[cfg(feature = "pjrt")]
 pub fn smoke() -> anyhow::Result<String> {
     let client = xla::PjRtClient::cpu()?;
     Ok(client.platform_name())
+}
+
+/// Stub probe: the default (offline) build carries no PJRT backend.
+#[cfg(not(feature = "pjrt"))]
+pub fn smoke() -> anyhow::Result<String> {
+    anyhow::bail!("PJRT support not compiled in (rebuild with --features pjrt)")
 }

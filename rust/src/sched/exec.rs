@@ -1,0 +1,315 @@
+//! Graph-driven pooled summarization: the worker-side execution engine
+//! that walks a [`SubproblemGraph`](super::SubproblemGraph) level by
+//! level, submitting every ready window's refinement batch to the shared
+//! [`DevicePool`](super::DevicePool) BEFORE waiting on any of them — so
+//! all windows of a pass (and of every other in-flight document) are
+//! available for cross-document coalescing on the devices.
+//!
+//! Determinism: all RNG here is per-document. The quantization stream is
+//! `Pcg32::new(cfg.seed, 0xE5)` — the exact stream `EsPipeline` uses — and
+//! instances are drawn in unit-id (submission) order, which is fixed by
+//! the graph, not by completion timing. Solve randomness derives from the
+//! client's request-seed stream. Result: byte-identical summaries for a
+//! fixed (config, document) regardless of pool size, coalescing, worker
+//! count, or dispatch interleaving.
+
+use anyhow::{ensure, Context, Result};
+
+use crate::cobi::SeededGroup;
+use crate::config::PipelineConfig;
+use crate::corpus::Document;
+use crate::embed::{Embedder, HashEmbedder, Scores};
+use crate::ising::EsProblem;
+use crate::pipeline::Summary;
+use crate::refine::{prepare_instances, select_best};
+use crate::text::MAX_SENTENCES;
+use crate::util::rng::Pcg32;
+
+use super::graph::SubproblemGraph;
+use super::pool::{PoolClient, PoolSolver, CLIENT_SEED_STREAM};
+
+/// Summarize `doc` to `cfg.summary_len` sentences, solving every Ising
+/// subproblem through the shared device pool.
+pub fn summarize_with_pool(
+    doc: &Document,
+    cfg: &PipelineConfig,
+    client: &mut PoolClient,
+) -> Result<Summary> {
+    let mut embedder = HashEmbedder::new();
+    summarize_with_pool_using(doc, cfg, client, &mut embedder)
+}
+
+/// As [`summarize_with_pool`], with a caller-provided embedder.
+pub fn summarize_with_pool_using(
+    doc: &Document,
+    cfg: &PipelineConfig,
+    client: &mut PoolClient,
+    embedder: &mut dyn Embedder,
+) -> Result<Summary> {
+    let n = doc.len().min(MAX_SENTENCES);
+    ensure!(n >= cfg.summary_len, "document too short");
+    let sentences = &doc.sentences[..n];
+    let scores = embedder.scores(sentences).context("embedding failed")?;
+
+    let params = cfg.decompose_params();
+    let refine_cfg = cfg.refine_config();
+    // the same per-document stream EsPipeline::new uses — quantization
+    // draws replay identically across the inline and pooled paths
+    let mut rng = Pcg32::new(cfg.seed, 0xE5);
+
+    let mut graph = SubproblemGraph::new(n, &params)?;
+    let mut total_solves = 0usize;
+    while !graph.is_done() {
+        let units = graph.take_ready();
+        ensure!(!units.is_empty(), "scheduler stalled: no ready units");
+        // submit the whole level before waiting on anything
+        let mut pending = Vec::with_capacity(units.len());
+        for u in &units {
+            let sub = scores.subset(&u.window);
+            let p = EsProblem {
+                mu: sub.mu,
+                beta: sub.beta,
+                lambda: cfg.lambda,
+                m: u.target,
+            };
+            let instances = prepare_instances(&p, &refine_cfg, &mut rng);
+            total_solves += instances.len();
+            let pend = client
+                .submit(instances)
+                .with_context(|| format!("submitting unit {} of {}", u.id, doc.id))?;
+            pending.push((u.id, p, pend));
+        }
+        for (id, p, pend) in pending {
+            let solved = pend.wait()?;
+            let trace = select_best(&p, &solved);
+            graph.complete(id, trace.result.selected)?;
+        }
+    }
+    let result = graph.into_result()?;
+    Ok(finish(doc, sentences, &scores, cfg, result, total_solves))
+}
+
+/// As [`summarize_with_pool`], but solving every unit inline on a
+/// caller-owned solver — the per-worker sequential comparator for the
+/// pooled path (and the `sched_pool` bench's baseline). Uses the identical
+/// seed discipline: the `EsPipeline` quantization stream for rounding
+/// draws, and the request-seed stream `PoolHandle::client(cfg.seed)` would
+/// use for solve randomness. For a fixed (config, document) this produces
+/// summaries byte-identical to the pooled path under ANY pool shape —
+/// the determinism contract the byte-identity test pins down.
+pub fn summarize_sequential(
+    doc: &Document,
+    cfg: &PipelineConfig,
+    solver: &mut dyn PoolSolver,
+) -> Result<Summary> {
+    let mut embedder = HashEmbedder::new();
+    summarize_sequential_using(doc, cfg, solver, &mut embedder)
+}
+
+/// As [`summarize_sequential`], with a caller-provided embedder.
+pub fn summarize_sequential_using(
+    doc: &Document,
+    cfg: &PipelineConfig,
+    solver: &mut dyn PoolSolver,
+    embedder: &mut dyn Embedder,
+) -> Result<Summary> {
+    let n = doc.len().min(MAX_SENTENCES);
+    ensure!(n >= cfg.summary_len, "document too short");
+    let sentences = &doc.sentences[..n];
+    let scores = embedder.scores(sentences).context("embedding failed")?;
+
+    let params = cfg.decompose_params();
+    let refine_cfg = cfg.refine_config();
+    let mut rng = Pcg32::new(cfg.seed, 0xE5);
+    // per-request seeds drawn in unit-id order — exactly the draws a
+    // PoolClient keyed by cfg.seed performs on its submits
+    let mut seeds = Pcg32::new(cfg.seed, CLIENT_SEED_STREAM);
+
+    let mut graph = SubproblemGraph::new(n, &params)?;
+    let mut total_solves = 0usize;
+    while !graph.is_done() {
+        let units = graph.take_ready();
+        ensure!(!units.is_empty(), "scheduler stalled: no ready units");
+        for u in &units {
+            let sub = scores.subset(&u.window);
+            let p = EsProblem {
+                mu: sub.mu,
+                beta: sub.beta,
+                lambda: cfg.lambda,
+                m: u.target,
+            };
+            let instances = prepare_instances(&p, &refine_cfg, &mut rng);
+            total_solves += instances.len();
+            let seed = seeds.next_u64();
+            let solved = solver
+                .solve_groups(&[SeededGroup {
+                    instances: &instances,
+                    seed,
+                }])?
+                .pop()
+                .expect("one group in, one group out");
+            let trace = select_best(&p, &solved);
+            graph.complete(u.id, trace.result.selected)?;
+        }
+    }
+    let result = graph.into_result()?;
+    Ok(finish(doc, sentences, &scores, cfg, result, total_solves))
+}
+
+/// Shared tail of both executors: score the final selection on the
+/// full-document problem (same as the inline pipeline) and assemble the
+/// summary.
+fn finish(
+    doc: &Document,
+    sentences: &[String],
+    scores: &Scores,
+    cfg: &PipelineConfig,
+    result: crate::decompose::DecompositionResult,
+    total_solves: usize,
+) -> Summary {
+    let full = EsProblem {
+        mu: scores.mu.clone(),
+        beta: scores.beta.clone(),
+        lambda: cfg.lambda,
+        m: cfg.summary_len,
+    };
+    let objective = full.objective(&result.selected);
+    let stages = result.solves();
+    Summary {
+        doc_id: doc.id.clone(),
+        sentences: result
+            .selected
+            .iter()
+            .map(|&i| sentences[i].clone())
+            .collect(),
+        selected: result.selected,
+        objective,
+        total_solves,
+        stages,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Settings;
+    use crate::corpus::benchmark_set;
+    use crate::sched::DevicePool;
+
+    fn settings(solver: &str) -> Settings {
+        let mut s = Settings::default();
+        s.pipeline.solver = solver.into();
+        s.pipeline.iterations = 3;
+        s.sched.devices = 2;
+        s
+    }
+
+    #[test]
+    fn pooled_summarize_matches_stage_accounting() {
+        let s = settings("cobi");
+        let pool = DevicePool::start(&s, None).unwrap();
+        for set_name in ["bench_10", "cnn_dm_20", "cnn_dm_50"] {
+            let set = benchmark_set(set_name).unwrap();
+            let mut cfg = s.pipeline.clone();
+            cfg.summary_len = set.summary_len;
+            let mut client = pool.client(crate::sched::doc_seed(cfg.seed, &set.documents[0].id));
+            let summary = summarize_with_pool(&set.documents[0], &cfg, &mut client).unwrap();
+            assert_eq!(summary.selected.len(), set.summary_len, "{set_name}");
+            assert_eq!(
+                summary.stages,
+                crate::decompose::stage_count(set.doc_len(), &cfg.decompose_params()),
+                "{set_name}"
+            );
+            assert!(summary.selected.windows(2).all(|w| w[0] < w[1]));
+            assert!(summary.objective.is_finite());
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn pooled_summarize_is_deterministic_across_pool_shapes() {
+        // same doc + seed through a 1-device no-coalesce pool and a
+        // 3-device coalescing pool under concurrent load: identical bytes
+        let set = benchmark_set("cnn_dm_20").unwrap();
+        let doc = &set.documents[2];
+
+        let mut s1 = settings("cobi");
+        s1.sched.devices = 1;
+        s1.sched.max_coalesce = 1;
+        s1.sched.linger_us = 0;
+        let pool1 = DevicePool::start(&s1, None).unwrap();
+        let seed = crate::sched::doc_seed(s1.pipeline.seed, &doc.id);
+        let mut c1 = pool1.client(seed);
+        let a = summarize_with_pool(doc, &s1.pipeline, &mut c1).unwrap();
+        drop(c1);
+        pool1.shutdown();
+
+        let mut s2 = settings("cobi");
+        s2.sched.devices = 3;
+        s2.sched.max_coalesce = 8;
+        s2.sched.linger_us = 2_000;
+        let pool2 = DevicePool::start(&s2, None).unwrap();
+        // background noise: other documents in flight on the same pool
+        let handle = pool2.handle();
+        let noise: Vec<_> = (0..3)
+            .map(|k| {
+                let handle = handle.clone();
+                let d = set.documents[k].clone();
+                let cfg = s2.pipeline.clone();
+                std::thread::spawn(move || {
+                    let mut c = handle.client(crate::sched::doc_seed(cfg.seed, &d.id));
+                    summarize_with_pool(&d, &cfg, &mut c).unwrap()
+                })
+            })
+            .collect();
+        let mut c2 = pool2.client(seed);
+        let b = summarize_with_pool(doc, &s2.pipeline, &mut c2).unwrap();
+        for t in noise {
+            t.join().unwrap();
+        }
+        drop(c2);
+        drop(handle);
+        pool2.shutdown();
+
+        assert_eq!(a.selected, b.selected);
+        assert_eq!(a.sentences, b.sentences);
+        assert_eq!(a.objective.to_bits(), b.objective.to_bits());
+    }
+
+    #[test]
+    fn pooled_path_is_byte_identical_to_sequential_path_on_bench_10() {
+        // acceptance criterion: determinism preserved through batching —
+        // the shared pool (2 devices, coalescing) and an inline
+        // per-worker device must produce byte-identical summaries for
+        // every bench_10 document under a fixed seed.
+        let s = settings("cobi");
+        let set = benchmark_set("bench_10").unwrap();
+        let pool = DevicePool::start(&s, None).unwrap();
+        for doc in &set.documents {
+            let mut cfg = s.pipeline.clone();
+            cfg.summary_len = set.summary_len;
+            cfg.seed = crate::sched::doc_seed(cfg.seed, &doc.id);
+
+            let mut client = pool.client(cfg.seed);
+            let pooled = summarize_with_pool(doc, &cfg, &mut client).unwrap();
+
+            // construction seed 0: the seeded path never touches the
+            // device-global RNG, so it must not matter
+            let mut dev =
+                crate::cobi::CobiDevice::from_config(&s.cobi, 0, None).unwrap();
+            let sequential = summarize_sequential(doc, &cfg, &mut dev).unwrap();
+
+            assert_eq!(pooled.selected, sequential.selected, "{}", doc.id);
+            assert_eq!(pooled.sentences, sequential.sentences, "{}", doc.id);
+            assert_eq!(
+                pooled.objective.to_bits(),
+                sequential.objective.to_bits(),
+                "{}",
+                doc.id
+            );
+            assert_eq!(pooled.total_solves, sequential.total_solves);
+            assert_eq!(pooled.stages, sequential.stages);
+        }
+        pool.shutdown();
+    }
+}

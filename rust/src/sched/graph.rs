@@ -1,0 +1,369 @@
+//! `SubproblemGraph`: the decomposition workflow (paper §IV-B) replayed
+//! as a small DAG of solve units instead of an inline sequential loop.
+//!
+//! Structure: the graph is built level by level. Within one level every
+//! unit is a window of P *consecutive, disjoint* active sentences —
+//! windows share no sentences, so they are independent and may be solved
+//! concurrently or co-batched on a device in any order. Levels chain: the
+//! merge of level k's survivors + chosen sentences forms level k+1's
+//! active list, so the next level's windows only exist once the previous
+//! level fully completes. The final level is always a single M-selection
+//! unit over the remaining ≤ P sentences.
+//!
+//! The level carving solves exactly as many window subproblems as the
+//! inline `decompose` loop (each non-final solve removes P−Q sentences;
+//! both stop shrinking once ≤ P remain), so `stage_count` stays the
+//! shared source of truth for solve-count accounting. Window *contents*
+//! may differ from the inline loop's cursor walk for multi-window levels
+//! — the two are distinct scheduling policies over the same reduction.
+//! For single-stage documents (N ≤ P) the graph is exactly the inline
+//! final solve, which is what the byte-identity tests pin down.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::decompose::{validate_local, DecomposeParams, DecompositionResult, Stage};
+
+/// One ready-to-solve subproblem: choose `target` of `window`.
+#[derive(Debug, Clone)]
+pub struct SolveUnit {
+    /// Graph-unique id (handed back to [`SubproblemGraph::complete`]).
+    pub id: usize,
+    /// DAG level (0-based pass index).
+    pub level: usize,
+    /// Original-document sentence indices offered to the solver.
+    pub window: Vec<usize>,
+    /// Number of window positions the solver must return (Q, or M for the
+    /// final unit).
+    pub target: usize,
+    pub is_final: bool,
+}
+
+/// Dynamic DAG of decomposition subproblems for one document.
+pub struct SubproblemGraph {
+    params: DecomposeParams,
+    /// Active sentence indices (document order) feeding the current level.
+    active: Vec<usize>,
+    level: usize,
+    /// Built units not yet handed out.
+    ready: Vec<SolveUnit>,
+    /// Handed out, awaiting completion.
+    inflight: HashMap<usize, SolveUnit>,
+    /// Completed units of the CURRENT level (unit, chosen original idx).
+    level_done: Vec<(SolveUnit, Vec<usize>)>,
+    /// Full trace in unit-id order, decompose-compatible.
+    stages: Vec<Stage>,
+    next_id: usize,
+    /// Final selection once the final unit completes.
+    selected: Option<Vec<usize>>,
+}
+
+impl SubproblemGraph {
+    /// Plan the level-0 units for a document of `n` sentences.
+    pub fn new(n: usize, params: &DecomposeParams) -> Result<Self> {
+        params.validate()?;
+        ensure!(
+            n >= params.m,
+            "document of {n} sentences cannot fill M={}",
+            params.m
+        );
+        let mut g = Self {
+            params: *params,
+            active: (0..n).collect(),
+            level: 0,
+            ready: Vec::new(),
+            inflight: HashMap::new(),
+            level_done: Vec::new(),
+            stages: Vec::new(),
+            next_id: 0,
+            selected: None,
+        };
+        g.build_level();
+        Ok(g)
+    }
+
+    /// Carve the current active list into this level's units. Mirrors the
+    /// `stage_count` recurrence: the level-0 window solve is unconditional
+    /// at n == P; later levels shrink only while more than P remain.
+    fn build_level(&mut self) {
+        debug_assert!(self.ready.is_empty() && self.inflight.is_empty());
+        let len = self.active.len();
+        let p = self.params.p;
+        let shrink = (self.level == 0 && len >= p) || len > p;
+        if shrink {
+            let windows = len / p; // disjoint full windows of this pass
+            for w in 0..windows {
+                let window = self.active[w * p..(w + 1) * p].to_vec();
+                self.ready.push(SolveUnit {
+                    id: self.next_id,
+                    level: self.level,
+                    window,
+                    target: self.params.q,
+                    is_final: false,
+                });
+                self.next_id += 1;
+            }
+        } else {
+            self.ready.push(SolveUnit {
+                id: self.next_id,
+                level: self.level,
+                window: self.active.clone(),
+                target: self.params.m,
+                is_final: true,
+            });
+            self.next_id += 1;
+        }
+    }
+
+    /// Hand out every currently ready unit (all independent — disjoint
+    /// windows of one level). Returned units must each be answered via
+    /// [`SubproblemGraph::complete`]; the next level only materializes
+    /// once all of them are in.
+    pub fn take_ready(&mut self) -> Vec<SolveUnit> {
+        let units = std::mem::take(&mut self.ready);
+        for u in &units {
+            self.inflight.insert(u.id, u.clone());
+        }
+        units
+    }
+
+    /// Report unit `id` solved: `local` holds `target` distinct positions
+    /// INTO the unit's window (the `decompose` solver contract). When the
+    /// last unit of a level lands, survivors and chosen sentences merge
+    /// (document order) and the next level's units become ready.
+    pub fn complete(&mut self, id: usize, local: Vec<usize>) -> Result<()> {
+        {
+            let unit = self
+                .inflight
+                .get(&id)
+                .with_context(|| format!("unit {id} is not in flight"))?;
+            // validate before consuming the in-flight slot, so a rejected
+            // answer can be retried
+            validate_local(&local, unit.window.len(), unit.target)?;
+        }
+        let unit = self.inflight.remove(&id).expect("checked above");
+        let chosen: Vec<usize> = local.iter().map(|&l| unit.window[l]).collect();
+
+        if unit.is_final {
+            let mut selected = chosen.clone();
+            selected.sort_unstable();
+            self.stages.push(Stage {
+                window: unit.window.clone(),
+                chosen: selected.clone(),
+                is_final: true,
+            });
+            self.selected = Some(selected);
+            return Ok(());
+        }
+
+        self.level_done.push((unit, chosen));
+        if self.inflight.is_empty() && self.ready.is_empty() {
+            self.advance_level();
+        }
+        Ok(())
+    }
+
+    /// Merge the finished level into the next active list and build the
+    /// next level. Stages are recorded in unit-id (submission) order so
+    /// the trace is deterministic regardless of completion order.
+    fn advance_level(&mut self) {
+        let mut done = std::mem::take(&mut self.level_done);
+        done.sort_by_key(|(u, _)| u.id);
+
+        let mut in_window = std::collections::HashSet::new();
+        let mut chosen_all: Vec<usize> = Vec::new();
+        for (unit, chosen) in &done {
+            in_window.extend(unit.window.iter().copied());
+            chosen_all.extend(chosen.iter().copied());
+            self.stages.push(Stage {
+                window: unit.window.clone(),
+                chosen: chosen.clone(),
+                is_final: false,
+            });
+        }
+        let mut next: Vec<usize> = self
+            .active
+            .iter()
+            .copied()
+            .filter(|i| !in_window.contains(i))
+            .chain(chosen_all)
+            .collect();
+        next.sort_unstable();
+        self.active = next;
+        self.level += 1;
+        self.build_level();
+    }
+
+    /// True once the final M-selection completed.
+    pub fn is_done(&self) -> bool {
+        self.selected.is_some()
+    }
+
+    /// Number of levels materialized so far (including the in-progress one).
+    pub fn levels(&self) -> usize {
+        self.level + 1
+    }
+
+    /// Total units handed out so far.
+    pub fn units_issued(&self) -> usize {
+        self.next_id
+    }
+
+    /// Consume the graph into a decompose-compatible result.
+    pub fn into_result(self) -> Result<DecompositionResult> {
+        match self.selected {
+            Some(selected) => Ok(DecompositionResult {
+                selected,
+                stages: self.stages,
+            }),
+            None => bail!(
+                "graph not finished: {} in flight, {} ready",
+                self.inflight.len(),
+                self.ready.len()
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decompose::stage_count;
+
+    /// Toy solver matching decompose's tests: keep the positions with the
+    /// largest original index.
+    fn top_indices(window: &[usize], target: usize) -> Vec<usize> {
+        let mut pos: Vec<usize> = (0..window.len()).collect();
+        pos.sort_by_key(|&p| std::cmp::Reverse(window[p]));
+        pos.truncate(target);
+        pos
+    }
+
+    /// Drive a graph to completion with the toy solver.
+    fn run(n: usize, params: &DecomposeParams) -> DecompositionResult {
+        let mut g = SubproblemGraph::new(n, params).unwrap();
+        while !g.is_done() {
+            let units = g.take_ready();
+            assert!(!units.is_empty(), "stalled");
+            for u in units {
+                let local = top_indices(&u.window, u.target);
+                g.complete(u.id, local).unwrap();
+            }
+        }
+        g.into_result().unwrap()
+    }
+
+    #[test]
+    fn graph_solve_counts_match_stage_count() {
+        let params = DecomposeParams::paper_default();
+        for n in [10usize, 20, 21, 35, 50, 100, 128] {
+            let r = run(n, &params);
+            assert_eq!(r.solves(), stage_count(n, &params), "n={n}");
+            assert_eq!(r.selected.len(), params.m, "n={n}");
+            assert!(r.selected.windows(2).all(|w| w[0] < w[1]), "n={n}");
+            assert!(r.selected.iter().all(|&i| i < n), "n={n}");
+        }
+    }
+
+    #[test]
+    fn single_stage_document_is_one_final_unit() {
+        // N ≤ P: the graph must be exactly the inline final solve
+        let params = DecomposeParams::paper_default();
+        let mut g = SubproblemGraph::new(10, &params).unwrap();
+        let units = g.take_ready();
+        assert_eq!(units.len(), 1);
+        assert!(units[0].is_final);
+        assert_eq!(units[0].window, (0..10).collect::<Vec<_>>());
+        assert_eq!(units[0].target, 6);
+        g.complete(units[0].id, top_indices(&units[0].window, 6))
+            .unwrap();
+        assert!(g.is_done());
+    }
+
+    #[test]
+    fn n_equals_p_is_unconditional_first_window() {
+        let params = DecomposeParams { p: 20, q: 10, m: 6 };
+        let r = run(20, &params);
+        assert_eq!(r.solves(), 2); // 20 -> 10 -> 6
+        assert!(!r.stages[0].is_final);
+        assert_eq!(r.stages[0].window.len(), 20);
+        assert!(r.stages[1].is_final);
+        assert_eq!(r.stages[1].window.len(), 10);
+    }
+
+    #[test]
+    fn level_windows_are_disjoint_and_consecutive() {
+        let params = DecomposeParams { p: 8, q: 4, m: 3 };
+        let mut g = SubproblemGraph::new(30, &params).unwrap();
+        let units = g.take_ready();
+        assert_eq!(units.len(), 3); // 30 / 8
+        let mut seen = std::collections::HashSet::new();
+        for u in &units {
+            assert_eq!(u.window.len(), 8);
+            assert!(u.window.windows(2).all(|w| w[1] == w[0] + 1), "consecutive");
+            for &i in &u.window {
+                assert!(seen.insert(i), "windows overlap at {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn completion_order_does_not_change_the_merge() {
+        let params = DecomposeParams { p: 6, q: 3, m: 2 };
+        fn solve(mut g: SubproblemGraph, reverse: bool) -> DecompositionResult {
+            while !g.is_done() {
+                let mut units = g.take_ready();
+                if reverse {
+                    units.reverse();
+                }
+                for u in units {
+                    g.complete(u.id, top_indices(&u.window, u.target)).unwrap();
+                }
+            }
+            g.into_result().unwrap()
+        }
+        let ra = solve(SubproblemGraph::new(25, &params).unwrap(), false);
+        let rb = solve(SubproblemGraph::new(25, &params).unwrap(), true);
+        assert_eq!(ra.selected, rb.selected);
+        assert_eq!(ra.solves(), rb.solves());
+        assert_eq!(
+            ra.stages.iter().map(|s| s.window.clone()).collect::<Vec<_>>(),
+            rb.stages.iter().map(|s| s.window.clone()).collect::<Vec<_>>(),
+        );
+    }
+
+    #[test]
+    fn q_equals_m_final_stage() {
+        // Q == M: final unit still runs over the merged ≤ P sentences
+        let params = DecomposeParams { p: 6, q: 3, m: 3 };
+        let r = run(14, &params);
+        assert_eq!(r.selected.len(), 3);
+        let last = r.stages.last().unwrap();
+        assert!(last.is_final);
+        assert!(last.window.len() <= 6);
+        assert_eq!(last.chosen.len(), 3);
+    }
+
+    #[test]
+    fn bad_completions_are_rejected() {
+        let params = DecomposeParams { p: 5, q: 2, m: 2 };
+        let mut g = SubproblemGraph::new(12, &params).unwrap();
+        let units = g.take_ready();
+        let u = &units[0];
+        // unknown id
+        assert!(g.complete(999, vec![0, 1]).is_err());
+        // wrong count / duplicates / out of range are rejected...
+        assert!(g.complete(u.id, vec![0]).is_err());
+        assert!(g.complete(u.id, vec![1, 1]).is_err());
+        assert!(g.complete(u.id, vec![0, u.window.len()]).is_err());
+        // ...without consuming the in-flight slot: a valid retry lands
+        assert!(g.complete(u.id, vec![0, 1]).is_ok());
+    }
+
+    #[test]
+    fn degenerate_params_rejected() {
+        assert!(SubproblemGraph::new(4, &DecomposeParams { p: 5, q: 2, m: 6 }).is_err());
+        assert!(SubproblemGraph::new(20, &DecomposeParams { p: 5, q: 5, m: 2 }).is_err());
+    }
+}

@@ -1,0 +1,645 @@
+//! `DevicePool`: N solver instances draining one shared, fleet-wide queue
+//! of Ising solve requests.
+//!
+//! Thread/channel ownership (DESIGN.md §Sched):
+//!
+//!   PoolClient (one per in-flight document, owned by a service worker)
+//!        │ SyncSender<SolveRequest>           bounded, blocking send
+//!        ▼
+//!   shared MPSC queue ── Arc<Mutex<Receiver>> ── pulled by N device
+//!   threads ("cobi-pool-<i>", each owning one PoolSolver). A device
+//!   takes one request (blocking), then lingers up to `linger_us` —
+//!   WITHOUT holding the queue lock — to coalesce up to `max_coalesce`
+//!   more requests into a single seeded dispatch. Each request carries a
+//!   one-shot response channel; the device answers on it after the
+//!   dispatch.
+//!
+//! Determinism: a request's results depend only on (instances, request
+//! seed, solver config) — never on which device ran it, what was
+//! co-batched, or dispatch order. COBI devices derive per-request RNG
+//! streams inside `solve_groups_seeded`; Tabu/SA re-seed before each
+//! request. Request seeds come from a per-document `PoolClient` stream
+//! keyed by the document seed, so the whole service output is a pure
+//! function of (config, corpus) under any pool/worker interleaving.
+
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::cobi::{CobiDevice, SeededGroup};
+use crate::config::Settings;
+use crate::ising::Ising;
+use crate::runtime::ArtifactRuntime;
+use crate::service::metrics::Histogram;
+use crate::solvers::sa::SaSolver;
+use crate::solvers::tabu::TabuSolver;
+use crate::solvers::{IsingSolver, SolveResult};
+use crate::util::rng::Pcg32;
+
+/// RNG stream id for per-document request-seed sequences (shared with
+/// `exec::summarize_sequential`, the pool path's inline comparator).
+pub(crate) const CLIENT_SEED_STREAM: u64 = 0x5EED;
+/// Lock-free linger poll interval.
+const LINGER_POLL: Duration = Duration::from_micros(20);
+/// Max time an idle device holds the queue lock waiting for work. The
+/// blocking receive MUST be bounded: a guard held across an unbounded
+/// `recv()` starves sibling devices that need the lock to coalesce (their
+/// linger `try_recv` would block until new traffic arrives — a deadlock
+/// when the only client is itself waiting on one of those devices).
+const IDLE_POLL: Duration = Duration::from_millis(1);
+
+/// A solver that can serve pool requests with per-request determinism.
+pub trait PoolSolver: Send {
+    fn name(&self) -> &'static str;
+
+    /// Solve every group's instances. A group's results must be a pure
+    /// function of (instances, group seed, solver config) — independent
+    /// of co-batched groups and of any earlier requests.
+    fn solve_groups(&mut self, groups: &[SeededGroup<'_>]) -> Result<Vec<Vec<SolveResult>>>;
+}
+
+impl PoolSolver for CobiDevice {
+    fn name(&self) -> &'static str {
+        "cobi"
+    }
+
+    fn solve_groups(&mut self, groups: &[SeededGroup<'_>]) -> Result<Vec<Vec<SolveResult>>> {
+        self.solve_groups_seeded(groups)
+    }
+}
+
+impl PoolSolver for TabuSolver {
+    fn name(&self) -> &'static str {
+        "tabu"
+    }
+
+    fn solve_groups(&mut self, groups: &[SeededGroup<'_>]) -> Result<Vec<Vec<SolveResult>>> {
+        Ok(groups
+            .iter()
+            .map(|g| {
+                self.reseed(g.seed);
+                g.instances.iter().map(|i| self.solve(i)).collect()
+            })
+            .collect())
+    }
+}
+
+impl PoolSolver for SaSolver {
+    fn name(&self) -> &'static str {
+        "sa"
+    }
+
+    fn solve_groups(&mut self, groups: &[SeededGroup<'_>]) -> Result<Vec<Vec<SolveResult>>> {
+        Ok(groups
+            .iter()
+            .map(|g| {
+                self.reseed(g.seed);
+                g.instances.iter().map(|i| self.solve(i)).collect()
+            })
+            .collect())
+    }
+}
+
+/// Solvers the pool can host (per-request determinism implemented).
+pub fn pool_supports(solver: &str) -> bool {
+    matches!(solver, "cobi" | "tabu" | "sa")
+}
+
+/// Resolve the configured pool backend ("auto" = the pipeline solver).
+/// Single source of truth for `Service` routing and `DevicePool::start`.
+pub fn resolved_backend(settings: &Settings) -> &str {
+    if settings.sched.backend == "auto" {
+        &settings.pipeline.solver
+    } else {
+        &settings.sched.backend
+    }
+}
+
+/// Whether a `Service` under `settings` routes Ising solves through the
+/// shared pool — the one routing predicate, shared by `Service::start_with`
+/// and the CLI (which must pre-open the HLO artifact runtime iff the
+/// pooled/local route will construct a COBI-HLO device).
+pub fn service_pooled(settings: &Settings) -> bool {
+    settings.sched.enabled && pool_supports(resolved_backend(settings))
+}
+
+fn build_solver(
+    backend: &str,
+    settings: &Settings,
+    seed: u64,
+    rt: Option<&ArtifactRuntime>,
+) -> Result<Box<dyn PoolSolver>> {
+    match backend {
+        "cobi" => Ok(Box::new(CobiDevice::from_config(&settings.cobi, seed, rt)?)),
+        "tabu" => Ok(Box::new(TabuSolver::seeded(seed))),
+        "sa" => Ok(Box::new(SaSolver::seeded(seed))),
+        other => bail!(
+            "solver '{other}' cannot run on the device pool \
+             (supported: cobi, tabu, sa)"
+        ),
+    }
+}
+
+/// One queued solve request (a whole refinement batch for one window).
+struct SolveRequest {
+    instances: Vec<Ising>,
+    seed: u64,
+    enqueued: Instant,
+    respond: SyncSender<Result<Vec<SolveResult>>>,
+}
+
+/// Aggregate pool counters, snapshotted into `ServiceMetrics`.
+#[derive(Debug, Clone)]
+pub struct PoolMetrics {
+    /// Solver instances in the pool.
+    pub devices: usize,
+    /// Device dispatches (each covers >= 1 coalesced requests).
+    pub dispatches: u64,
+    /// Requests served.
+    pub requests: u64,
+    /// Ising instances solved.
+    pub instances: u64,
+    /// Total device busy time, seconds.
+    pub busy_s: f64,
+    /// Wall-clock covered by this snapshot, seconds (0 until snapshotted).
+    pub elapsed_s: f64,
+    /// Per-request pool queue wait histogram.
+    pub queue_wait: Histogram,
+}
+
+impl PoolMetrics {
+    fn new(devices: usize) -> Self {
+        Self {
+            devices,
+            dispatches: 0,
+            requests: 0,
+            instances: 0,
+            busy_s: 0.0,
+            elapsed_s: 0.0,
+            queue_wait: Histogram::latency(),
+        }
+    }
+
+    /// Mean Ising instances per device dispatch — the amortization the
+    /// pool exists to create (> 1 means batching is happening).
+    pub fn batch_occupancy(&self) -> f64 {
+        if self.dispatches == 0 {
+            0.0
+        } else {
+            self.instances as f64 / self.dispatches as f64
+        }
+    }
+
+    /// Mean requests fused per dispatch (cross-document coalescing).
+    pub fn coalescing(&self) -> f64 {
+        if self.dispatches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.dispatches as f64
+        }
+    }
+
+    /// Fraction of device-seconds spent solving (0 when unknown).
+    pub fn utilization(&self) -> f64 {
+        let capacity = self.elapsed_s * self.devices as f64;
+        if capacity > 0.0 {
+            (self.busy_s / capacity).min(1.0)
+        } else {
+            0.0
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "pool: devices={} dispatches={} requests={} instances={} | \
+             occupancy={:.2} coalesce={:.2} util={:.0}% | pool-wait {}",
+            self.devices,
+            self.dispatches,
+            self.requests,
+            self.instances,
+            self.batch_occupancy(),
+            self.coalescing(),
+            self.utilization() * 100.0,
+            self.queue_wait.summary(),
+        )
+    }
+}
+
+impl Default for PoolMetrics {
+    fn default() -> Self {
+        Self::new(0)
+    }
+}
+
+/// Cloneable submission endpoint (held by service workers; the pool's
+/// device threads exit once every handle AND the pool itself dropped).
+#[derive(Clone)]
+pub struct PoolHandle {
+    tx: SyncSender<SolveRequest>,
+}
+
+impl PoolHandle {
+    /// A per-document client whose request-seed stream is keyed by `seed`
+    /// (use `sched::doc_seed`), making document results independent of
+    /// worker assignment and dispatch interleaving.
+    pub fn client(&self, seed: u64) -> PoolClient {
+        PoolClient {
+            tx: self.tx.clone(),
+            seeds: Pcg32::new(seed, CLIENT_SEED_STREAM),
+        }
+    }
+}
+
+/// Per-document submission client: the sched executor submits refinement
+/// batches through it and waits on the returned [`PendingSolve`]s. Errors
+/// stay `Result`s end to end — there is deliberately no `IsingSolver`
+/// facade here, because that trait cannot carry a pool failure without
+/// panicking the calling worker.
+pub struct PoolClient {
+    tx: SyncSender<SolveRequest>,
+    seeds: Pcg32,
+}
+
+/// In-flight solve; `wait` blocks for the device's answer.
+pub struct PendingSolve {
+    rx: Receiver<Result<Vec<SolveResult>>>,
+}
+
+impl PendingSolve {
+    pub fn wait(self) -> Result<Vec<SolveResult>> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow!("device pool dropped the request (shutdown?)"))?
+    }
+}
+
+impl PoolClient {
+    /// Submit one request (all instances solved under one request seed).
+    /// Blocks only when the pool queue is full (bounded backpressure);
+    /// the solve itself proceeds asynchronously.
+    pub fn submit(&mut self, instances: Vec<Ising>) -> Result<PendingSolve> {
+        ensure!(!instances.is_empty(), "empty solve request");
+        let (rtx, rrx) = sync_channel(1);
+        let req = SolveRequest {
+            instances,
+            seed: self.seeds.next_u64(),
+            enqueued: Instant::now(),
+            respond: rtx,
+        };
+        self.tx
+            .send(req)
+            .map_err(|_| anyhow!("device pool is shut down"))?;
+        Ok(PendingSolve { rx: rrx })
+    }
+}
+
+/// The pool: owns the device threads and the shared queue's sender side.
+pub struct DevicePool {
+    tx: Option<SyncSender<SolveRequest>>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+    metrics: Arc<Mutex<PoolMetrics>>,
+    started: Instant,
+    pub backend: String,
+}
+
+impl DevicePool {
+    /// Start per `settings.sched` (+ `settings.cobi` for COBI devices).
+    /// `rt` is required only for the COBI-HLO backend.
+    pub fn start(settings: &Settings, rt: Option<&ArtifactRuntime>) -> Result<Self> {
+        let sched = &settings.sched;
+        let backend = resolved_backend(settings).to_string();
+        ensure!(
+            pool_supports(&backend),
+            "solver '{backend}' cannot run on the device pool"
+        );
+        let devices = sched.devices.max(1);
+        let (tx, rx) = sync_channel::<SolveRequest>(sched.queue_depth.max(1));
+        let rx = Arc::new(Mutex::new(rx));
+        let metrics = Arc::new(Mutex::new(PoolMetrics::new(devices)));
+        let max_coalesce = sched.max_coalesce.max(1);
+        let linger = Duration::from_micros(sched.linger_us);
+
+        let mut threads = Vec::with_capacity(devices);
+        for d in 0..devices {
+            // construction seed decorrelates devices that are NOT
+            // re-seeded per request (none today — kept for safety)
+            let seed = settings.pipeline.seed ^ 0xD00D ^ ((d as u64) << 32);
+            let mut solver = build_solver(&backend, settings, seed, rt)?;
+            let rx = rx.clone();
+            let metrics = metrics.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("cobi-pool-{d}"))
+                    .spawn(move || {
+                        device_loop(solver.as_mut(), &rx, &metrics, max_coalesce, linger)
+                    })?,
+            );
+        }
+        Ok(Self {
+            tx: Some(tx),
+            threads,
+            metrics,
+            started: Instant::now(),
+            backend,
+        })
+    }
+
+    pub fn handle(&self) -> PoolHandle {
+        PoolHandle {
+            tx: self.tx.as_ref().expect("pool not shut down").clone(),
+        }
+    }
+
+    /// Convenience: a client straight off the pool (see `PoolHandle::client`).
+    pub fn client(&self, seed: u64) -> PoolClient {
+        self.handle().client(seed)
+    }
+
+    pub fn devices(&self) -> usize {
+        self.metrics.lock().unwrap().devices
+    }
+
+    /// Snapshot the counters (fills in elapsed wall-clock for utilization).
+    pub fn metrics(&self) -> PoolMetrics {
+        let mut m = self.metrics.lock().unwrap().clone();
+        m.elapsed_s = self.started.elapsed().as_secs_f64();
+        m
+    }
+
+    /// Close the queue and join the device threads. All `PoolHandle` /
+    /// `PoolClient` clones must be dropped first or join will wait for
+    /// them to finish (they keep the queue alive).
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        self.tx.take(); // close our side of the queue
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for DevicePool {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+/// One device thread: pull → linger/coalesce → seeded dispatch → respond.
+fn device_loop(
+    solver: &mut dyn PoolSolver,
+    rx: &Arc<Mutex<Receiver<SolveRequest>>>,
+    metrics: &Arc<Mutex<PoolMetrics>>,
+    max_coalesce: usize,
+    linger: Duration,
+) {
+    loop {
+        let mut batch: Vec<SolveRequest> = Vec::with_capacity(max_coalesce);
+        // pull the first request. Bounded waits only (see IDLE_POLL): the
+        // guard is a statement temporary, so the lock is dropped between
+        // polls and is never held while lingering below.
+        loop {
+            let polled = rx.lock().unwrap().recv_timeout(IDLE_POLL);
+            match polled {
+                Ok(r) => {
+                    batch.push(r);
+                    break;
+                }
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => return, // closed and drained
+            }
+        }
+        let deadline = Instant::now() + linger;
+        while batch.len() < max_coalesce {
+            // bind first: a match-scrutinee temporary would keep the
+            // guard alive through the sleep arm, serializing siblings
+            let polled = rx.lock().unwrap().try_recv();
+            match polled {
+                Ok(r) => batch.push(r),
+                Err(TryRecvError::Empty) => {
+                    if Instant::now() >= deadline {
+                        break;
+                    }
+                    std::thread::sleep(LINGER_POLL);
+                }
+                Err(TryRecvError::Disconnected) => break,
+            }
+        }
+
+        let t0 = Instant::now();
+        let groups: Vec<SeededGroup<'_>> = batch
+            .iter()
+            .map(|r| SeededGroup {
+                instances: &r.instances,
+                seed: r.seed,
+            })
+            .collect();
+        let solved = solver.solve_groups(&groups);
+        drop(groups);
+        let busy = t0.elapsed();
+
+        {
+            let mut m = metrics.lock().unwrap();
+            m.dispatches += 1;
+            m.requests += batch.len() as u64;
+            m.instances += batch.iter().map(|r| r.instances.len() as u64).sum::<u64>();
+            m.busy_s += busy.as_secs_f64();
+            for r in &batch {
+                m.queue_wait
+                    .record(t0.saturating_duration_since(r.enqueued).as_secs_f64());
+            }
+        }
+
+        match solved {
+            Ok(per_group) => {
+                for (req, res) in batch.into_iter().zip(per_group) {
+                    let _ = req.respond.try_send(Ok(res));
+                }
+            }
+            Err(_) if batch.len() > 1 => {
+                // a coalesced dispatch failed: isolate the offender by
+                // retrying each request alone, so one document's bad
+                // instance (or a transient device error) cannot poison
+                // healthy co-batched documents. Per-request seeding makes
+                // the retry results identical to what the fused dispatch
+                // would have produced. Each retry is a real device
+                // dispatch, so it is counted (occupancy honestly degrades
+                // when failures force un-batching).
+                for req in batch {
+                    let tr = Instant::now();
+                    let res = solver
+                        .solve_groups(&[SeededGroup {
+                            instances: &req.instances,
+                            seed: req.seed,
+                        }])
+                        .map(|mut v| v.remove(0))
+                        .map_err(|e| {
+                            anyhow!("pool dispatch on '{}' failed: {e:#}", solver.name())
+                        });
+                    {
+                        let mut m = metrics.lock().unwrap();
+                        m.dispatches += 1;
+                        m.busy_s += tr.elapsed().as_secs_f64();
+                    }
+                    let _ = req.respond.try_send(res);
+                }
+            }
+            Err(e) => {
+                let msg = format!("pool dispatch on '{}' failed: {e:#}", solver.name());
+                for req in batch {
+                    let _ = req.respond.try_send(Err(anyhow!("{msg}")));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cobi::testutil::quantized_glass;
+
+    fn settings(solver: &str, devices: usize) -> Settings {
+        let mut s = Settings::default();
+        s.pipeline.solver = solver.into();
+        s.sched.devices = devices;
+        s.sched.linger_us = 50;
+        s
+    }
+
+    #[test]
+    fn pool_starts_and_shuts_down() {
+        let pool = DevicePool::start(&settings("cobi", 2), None).unwrap();
+        assert_eq!(pool.devices(), 2);
+        pool.shutdown(); // must not hang
+    }
+
+    #[test]
+    fn pool_solves_and_counts() {
+        let pool = DevicePool::start(&settings("cobi", 2), None).unwrap();
+        let mut client = pool.client(7);
+        let instances: Vec<Ising> = (0..5).map(|k| quantized_glass(k, 12)).collect();
+        let pending = client.submit(instances.clone()).unwrap();
+        let results = pending.wait().unwrap();
+        assert_eq!(results.len(), 5);
+        for (r, i) in results.iter().zip(&instances) {
+            assert_eq!(r.spins.len(), 12);
+            assert!((i.energy(&r.spins) - r.energy).abs() < 1e-6);
+        }
+        drop(client);
+        let m = pool.metrics();
+        assert_eq!(m.requests, 1);
+        assert_eq!(m.instances, 5);
+        assert!(m.dispatches >= 1);
+        assert!(m.elapsed_s > 0.0);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn same_client_seed_replays_identical_results() {
+        let pool = DevicePool::start(&settings("cobi", 3), None).unwrap();
+        let instances: Vec<Ising> = (0..4).map(|k| quantized_glass(40 + k, 14)).collect();
+        let run = |pool: &DevicePool| -> Vec<SolveResult> {
+            let mut client = pool.client(0xABCD);
+            client.submit(instances.clone()).unwrap().wait().unwrap()
+        };
+        let a = run(&pool);
+        let b = run(&pool);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.spins, y.spins);
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients_coalesce() {
+        let mut s = settings("cobi", 1);
+        s.sched.max_coalesce = 8;
+        s.sched.linger_us = 50_000; // generous: force coalescing
+        let pool = DevicePool::start(&s, None).unwrap();
+        let handle = pool.handle();
+        let threads: Vec<_> = (0..6)
+            .map(|t| {
+                let handle = handle.clone();
+                std::thread::spawn(move || {
+                    let mut client = handle.client(t as u64);
+                    let inst = vec![quantized_glass(70 + t as u64, 10); 2];
+                    client.submit(inst).unwrap().wait().unwrap().len()
+                })
+            })
+            .collect();
+        for t in threads {
+            assert_eq!(t.join().unwrap(), 2);
+        }
+        drop(handle);
+        let m = pool.metrics();
+        assert_eq!(m.requests, 6);
+        assert_eq!(m.instances, 12);
+        assert!(
+            m.dispatches < 6,
+            "no coalescing happened: {} dispatches for 6 requests",
+            m.dispatches
+        );
+        assert!(m.batch_occupancy() > 1.0, "occupancy {}", m.batch_occupancy());
+        pool.shutdown();
+    }
+
+    #[test]
+    fn failing_request_does_not_poison_cobatched_requests() {
+        // one document's unprogrammable instance must fail only its own
+        // request: co-batched healthy requests are retried individually
+        let mut s = settings("cobi", 1);
+        s.sched.max_coalesce = 8;
+        s.sched.linger_us = 50_000; // encourage coalescing with the bad one
+        let pool = DevicePool::start(&s, None).unwrap();
+        let handle = pool.handle();
+        let bad = {
+            let handle = handle.clone();
+            std::thread::spawn(move || {
+                let mut c = handle.client(1);
+                let mut inst = Ising::new(10);
+                inst.h[0] = 0.5; // fractional: fails device validation
+                c.submit(vec![inst]).unwrap().wait()
+            })
+        };
+        let good = {
+            let handle = handle.clone();
+            std::thread::spawn(move || {
+                let mut c = handle.client(2);
+                c.submit(vec![quantized_glass(600, 10)]).unwrap().wait()
+            })
+        };
+        assert!(bad.join().unwrap().is_err());
+        assert_eq!(good.join().unwrap().unwrap().len(), 1);
+        drop(handle);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn tabu_and_sa_pools_work() {
+        for solver in ["tabu", "sa"] {
+            let pool = DevicePool::start(&settings(solver, 2), None).unwrap();
+            let mut client = pool.client(3);
+            let res = client
+                .submit(vec![quantized_glass(9, 10)])
+                .unwrap()
+                .wait()
+                .unwrap();
+            assert_eq!(res.len(), 1);
+            assert_eq!(res[0].spins.len(), 10);
+            drop(client);
+            pool.shutdown();
+        }
+    }
+
+    #[test]
+    fn unsupported_backends_are_rejected() {
+        assert!(DevicePool::start(&settings("brute", 1), None).is_err());
+        assert!(!pool_supports("exact"));
+        assert!(pool_supports("cobi"));
+    }
+}

@@ -1,11 +1,124 @@
-//! Service metrics: counts + streaming latency summary.
+//! Service metrics: counts + streaming latency summary + per-stage
+//! queue-wait histograms + a snapshot of the device-pool counters.
 //!
-//! Latencies are kept in a bounded reservoir (uniform-ish by decimation)
-//! so percentile reporting stays O(1) memory under sustained load.
+//! Latencies are kept two ways: a bounded reservoir (uniform-ish by
+//! decimation) for percentile reporting, and fixed log-spaced
+//! [`Histogram`]s for cheap per-stage distribution tracking under
+//! sustained load — both O(1) memory.
 
 use std::time::Duration;
 
+use crate::sched::PoolMetrics;
+
 const RESERVOIR: usize = 4096;
+
+/// Fixed-bucket histogram (seconds). Buckets are `bounds[i]`-bounded from
+/// above, with one overflow bucket past the last bound.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    /// Upper bucket edges, ascending, seconds.
+    bounds: Vec<f64>,
+    /// bounds.len() + 1 counters (last = overflow).
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+}
+
+impl Histogram {
+    pub fn new(bounds: Vec<f64>) -> Self {
+        debug_assert!(bounds.windows(2).all(|w| w[0] < w[1]));
+        let counts = vec![0; bounds.len() + 1];
+        Self {
+            bounds,
+            counts,
+            count: 0,
+            sum: 0.0,
+        }
+    }
+
+    /// Log-spaced latency buckets: 10 µs .. 10 s.
+    pub fn latency() -> Self {
+        Self::new(vec![1e-5, 1e-4, 1e-3, 1e-2, 1e-1, 1.0, 10.0])
+    }
+
+    pub fn record(&mut self, secs: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| secs <= b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.count += 1;
+        self.sum += secs;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Upper bound of the bucket containing quantile `q` (conservative;
+    /// `f64::INFINITY` when it lands in the overflow bucket).
+    pub fn quantile_bound(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target.max(1) {
+                return self
+                    .bounds
+                    .get(i)
+                    .copied()
+                    .unwrap_or(f64::INFINITY);
+            }
+        }
+        f64::INFINITY
+    }
+
+    /// (upper_bound_seconds, count) pairs, overflow last with `inf`.
+    pub fn buckets(&self) -> Vec<(f64, u64)> {
+        self.bounds
+            .iter()
+            .copied()
+            .chain(std::iter::once(f64::INFINITY))
+            .zip(self.counts.iter().copied())
+            .collect()
+    }
+
+    pub fn summary(&self) -> String {
+        if self.count == 0 {
+            return "n=0".into();
+        }
+        let p99 = self.quantile_bound(0.99);
+        let p99s = if p99.is_finite() {
+            format!("{:.2}ms", p99 * 1e3)
+        } else {
+            format!(">{:.0}s", self.bounds.last().copied().unwrap_or(0.0))
+        };
+        format!(
+            "n={} mean={:.2}ms p99<={}",
+            self.count,
+            self.mean() * 1e3,
+            p99s
+        )
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::latency()
+    }
+}
 
 #[derive(Debug, Clone, Default)]
 pub struct ServiceMetrics {
@@ -17,12 +130,20 @@ pub struct ServiceMetrics {
     queue_waits: Vec<f64>,
     /// Seconds spent solving (reservoir sample).
     solve_times: Vec<f64>,
+    /// Per-stage distributions: service-queue wait and worker solve time.
+    /// (The pool-queue wait histogram lives in [`PoolMetrics`].)
+    pub queue_hist: Histogram,
+    pub solve_hist: Histogram,
+    /// Device-pool snapshot (zero-valued when the pool is disabled).
+    pub pool: PoolMetrics,
 }
 
 impl ServiceMetrics {
     pub fn record_latency(&mut self, queue_wait: Duration, solve: Duration) {
         push_reservoir(&mut self.queue_waits, queue_wait.as_secs_f64());
         push_reservoir(&mut self.solve_times, solve.as_secs_f64());
+        self.queue_hist.record(queue_wait.as_secs_f64());
+        self.solve_hist.record(solve.as_secs_f64());
     }
 
     pub fn latency_summary(&self) -> LatencySummary {
@@ -36,7 +157,7 @@ impl ServiceMetrics {
 
     pub fn report(&self) -> String {
         let l = self.latency_summary();
-        format!(
+        let mut out = format!(
             "submitted={} completed={} failed={} rejected={} | \
              queue p50={:.2}ms p99={:.2}ms | solve p50={:.2}ms p99={:.2}ms",
             self.submitted,
@@ -47,7 +168,12 @@ impl ServiceMetrics {
             l.queue_p99 * 1e3,
             l.solve_p50 * 1e3,
             l.solve_p99 * 1e3,
-        )
+        );
+        if self.pool.devices > 0 {
+            out.push_str(" | ");
+            out.push_str(&self.pool.report());
+        }
+        out
     }
 }
 
@@ -109,6 +235,7 @@ mod tests {
         }
         assert!(m.queue_waits.len() <= RESERVOIR);
         assert!(m.solve_times.len() <= RESERVOIR);
+        assert_eq!(m.queue_hist.count(), 10_000);
     }
 
     #[test]
@@ -117,5 +244,35 @@ mod tests {
         let l = m.latency_summary();
         assert_eq!(l.queue_p50, 0.0);
         assert!(m.report().contains("submitted=0"));
+        // pool line only appears when a pool exists
+        assert!(!m.report().contains("occupancy"));
+    }
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        let mut h = Histogram::latency();
+        for _ in 0..90 {
+            h.record(0.5e-3); // <= 1ms bucket
+        }
+        for _ in 0..10 {
+            h.record(0.5); // <= 1s bucket
+        }
+        assert_eq!(h.count(), 100);
+        assert!((h.mean() - (90.0 * 0.5e-3 + 10.0 * 0.5) / 100.0).abs() < 1e-12);
+        assert_eq!(h.quantile_bound(0.50), 1e-3);
+        assert_eq!(h.quantile_bound(0.99), 1.0);
+        let buckets = h.buckets();
+        assert_eq!(buckets.len(), 8);
+        assert_eq!(buckets[2], (1e-3, 90));
+        assert_eq!(buckets[5], (1.0, 10));
+        assert!(h.summary().contains("n=100"), "{}", h.summary());
+    }
+
+    #[test]
+    fn histogram_overflow_bucket() {
+        let mut h = Histogram::new(vec![1e-3, 1e-2]);
+        h.record(5.0);
+        assert!(h.quantile_bound(0.99).is_infinite());
+        assert_eq!(h.buckets()[2].1, 1);
     }
 }

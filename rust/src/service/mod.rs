@@ -10,9 +10,14 @@
 //!                                                        COBI device
 //!
 //! The router batches queued requests up to `max_batch` per dispatch (one
-//! channel send per batch, amortizing wakeups — the paper's device does
-//! one document at a time, so batching is at the request level), rejects
-//! when the queue is full, and aggregates latency/throughput metrics.
+//! channel send per batch, amortizing wakeups), rejects when the queue is
+//! full, and aggregates latency/throughput metrics.
+//!
+//! Ising solves route through the shared `sched::DevicePool` by default
+//! (pool-capable solvers: cobi/tabu/sa), so subproblems from ALL
+//! in-flight documents coalesce into batched device dispatches; workers
+//! fall back to private solvers for brute/exact/random or when
+//! `[sched] enabled = false`. See DESIGN.md §Sched.
 
 pub mod metrics;
 pub mod tcp;
@@ -28,9 +33,11 @@ use anyhow::{bail, Result};
 use crate::config::Settings;
 use crate::corpus::Document;
 use crate::pipeline::Summary;
+use crate::runtime::ArtifactRuntime;
+use crate::sched::{self, DevicePool};
 
 pub use metrics::ServiceMetrics;
-use worker::{spawn_workers, Job};
+use worker::{spawn_workers, Job, SolveRoute};
 
 /// Rejected-due-to-backpressure error marker.
 #[derive(Debug, thiserror::Error)]
@@ -67,21 +74,43 @@ pub struct Service {
     stop: Arc<AtomicBool>,
     workers: Vec<std::thread::JoinHandle<()>>,
     queue_depth: usize,
+    /// Shared solve pool (None when running worker-private solvers).
+    pool: Option<DevicePool>,
 }
 
 impl Service {
-    /// Start the worker pool per `settings.service`.
+    /// Start the worker pool per `settings.service` (+ the shared device
+    /// pool per `settings.sched` when enabled and solver-compatible).
     pub fn start(settings: &Settings) -> Result<Self> {
+        Self::start_with(settings, None)
+    }
+
+    /// As [`Service::start`], with an artifact runtime for the COBI-HLO
+    /// pool backend.
+    pub fn start_with(settings: &Settings, rt: Option<&ArtifactRuntime>) -> Result<Self> {
         let metrics = Arc::new(Mutex::new(ServiceMetrics::default()));
         let inflight = Arc::new(AtomicUsize::new(0));
         let stop = Arc::new(AtomicBool::new(false));
         let (tx, rx) = sync_channel::<Job>(settings.service.queue_depth);
+
+        let pool = if sched::service_pooled(settings) {
+            Some(DevicePool::start(settings, rt)?)
+        } else {
+            None
+        };
+        let route = match &pool {
+            Some(p) => SolveRoute::Pooled(p.handle()),
+            None => SolveRoute::Local,
+        };
+
         let workers = spawn_workers(
             settings,
             rx,
             metrics.clone(),
             inflight.clone(),
             stop.clone(),
+            route,
+            rt,
         )?;
         Ok(Self {
             tx,
@@ -91,6 +120,7 @@ impl Service {
             stop,
             workers,
             queue_depth: settings.service.queue_depth,
+            pool,
         })
     }
 
@@ -132,16 +162,31 @@ impl Service {
         self.queue_depth
     }
 
+    /// Metrics snapshot, including the device-pool counters when pooled.
     pub fn metrics(&self) -> ServiceMetrics {
-        self.metrics.lock().unwrap().clone()
+        let mut m = self.metrics.lock().unwrap().clone();
+        if let Some(pool) = &self.pool {
+            m.pool = pool.metrics();
+        }
+        m
     }
 
-    /// Graceful shutdown: stop accepting, drain workers.
+    /// True when Ising solves route through the shared device pool.
+    pub fn is_pooled(&self) -> bool {
+        self.pool.is_some()
+    }
+
+    /// Graceful shutdown: stop accepting, drain workers, then the pool.
     pub fn shutdown(self) {
         self.stop.store(true, Ordering::SeqCst);
         drop(self.tx); // closes the queue; workers exit after draining
         for w in self.workers {
             let _ = w.join();
+        }
+        // workers dropped their PoolHandles on exit; the pool's own
+        // sender is the last one, so device threads drain and join here
+        if let Some(pool) = self.pool {
+            pool.shutdown();
         }
     }
 }
@@ -214,6 +259,74 @@ mod tests {
     fn shutdown_joins_workers() {
         let svc = Service::start(&test_settings()).unwrap();
         svc.shutdown(); // must not hang
+    }
+
+    #[test]
+    fn pooled_route_is_default_and_reports_occupancy() {
+        let mut settings = test_settings();
+        settings.service.workers = 4;
+        settings.sched.devices = 2;
+        settings.sched.linger_us = 2_000;
+        let svc = Service::start(&settings).unwrap();
+        assert!(svc.is_pooled());
+        let set = benchmark_set("bench_10").unwrap();
+        let tickets: Vec<Ticket> = set
+            .documents
+            .iter()
+            .map(|d| svc.submit(d.clone()).unwrap())
+            .collect();
+        for t in tickets {
+            assert_eq!(t.wait().unwrap().selected.len(), 3);
+        }
+        let m = svc.metrics();
+        assert_eq!(m.completed, 20);
+        // bench_10 docs are single-stage: one pool request per document,
+        // `iterations` instances per request
+        assert_eq!(m.pool.requests, 20);
+        assert_eq!(
+            m.pool.instances,
+            20 * settings.pipeline.iterations as u64
+        );
+        assert!(m.pool.dispatches >= 1);
+        // occupancy > 1 here certifies instance-level amortization (each
+        // request carries `iterations` instances); cross-document request
+        // fusion is timing-dependent under test load, so coalescing() > 1
+        // is pinned by the dedicated pool test instead
+        // (sched::pool::tests::concurrent_clients_coalesce)
+        assert!(
+            m.pool.batch_occupancy() > 1.0,
+            "occupancy {} not > 1",
+            m.pool.batch_occupancy()
+        );
+        assert_eq!(m.pool.queue_wait.count(), 20);
+        assert!(m.queue_hist.count() >= 20);
+        assert!(m.report().contains("occupancy"));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn sched_disabled_falls_back_to_local_workers() {
+        let mut settings = test_settings();
+        settings.sched.enabled = false;
+        let svc = Service::start(&settings).unwrap();
+        assert!(!svc.is_pooled());
+        let set = benchmark_set("bench_10").unwrap();
+        let t = svc.submit(set.documents[0].clone()).unwrap();
+        assert_eq!(t.wait().unwrap().selected.len(), 3);
+        assert_eq!(svc.metrics().pool.devices, 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn non_ising_solvers_run_local_even_with_sched_enabled() {
+        let mut settings = test_settings();
+        settings.pipeline.solver = "exact".into();
+        let svc = Service::start(&settings).unwrap();
+        assert!(!svc.is_pooled());
+        let set = benchmark_set("bench_10").unwrap();
+        let t = svc.submit(set.documents[1].clone()).unwrap();
+        assert_eq!(t.wait().unwrap().selected.len(), 3);
+        svc.shutdown();
     }
 
     #[test]

@@ -7,6 +7,11 @@
 //!   exactly `::EOF::`;
 //!   server replies `OK <m>` followed by the m summary sentences (one per
 //!   line) and closes, or `ERR <message>`.
+//!
+//! A first line of exactly `::STATS::` instead requests the service
+//! metrics report (counts, latency percentiles and — when the shared
+//! device pool is running — batch occupancy / coalescing / utilization):
+//! the server replies `OK 1` followed by one report line.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -20,6 +25,7 @@ use crate::corpus::Document;
 use super::Service;
 
 pub const EOF_MARKER: &str = "::EOF::";
+pub const STATS_MARKER: &str = "::STATS::";
 
 /// A running TCP endpoint over a Service.
 pub struct TcpServer {
@@ -83,9 +89,17 @@ fn handle_connection(service: &Service, stream: TcpStream, id: u64) -> Result<()
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut text = String::new();
     let mut line = String::new();
+    let mut first = true;
     loop {
         line.clear();
         let n = reader.read_line(&mut line)?;
+        if first && line.trim_end() == STATS_MARKER {
+            let mut out = stream;
+            writeln!(out, "OK 1")?;
+            writeln!(out, "{}", service.metrics().report())?;
+            return Ok(());
+        }
+        first = false;
         if n == 0 || line.trim_end() == EOF_MARKER {
             break;
         }
@@ -108,6 +122,22 @@ fn handle_connection(service: &Service, stream: TcpStream, id: u64) -> Result<()
         }
     }
     Ok(())
+}
+
+/// Fetch the server's one-line metrics report (a `::STATS::` request).
+pub fn stats_remote(addr: std::net::SocketAddr) -> Result<String> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.write_all(format!("{STATS_MARKER}\n").as_bytes())?;
+    let mut reader = BufReader::new(stream);
+    let mut header = String::new();
+    reader.read_line(&mut header)?;
+    anyhow::ensure!(
+        header.trim_end() == "OK 1",
+        "unexpected stats header: {header:?}"
+    );
+    let mut report = String::new();
+    reader.read_line(&mut report)?;
+    Ok(report.trim_end().to_string())
 }
 
 /// Blocking client helper (used by tests, the serve demo and scripts).
@@ -172,6 +202,23 @@ mod tests {
         let server = TcpServer::start(svc.clone(), 0).unwrap();
         let err = summarize_remote(server.addr, "One sentence.").unwrap_err();
         assert!(err.to_string().contains("server error"), "{err}");
+        server.stop();
+    }
+
+    #[test]
+    fn tcp_stats_reports_pool_occupancy() {
+        let mut settings = Settings::default();
+        settings.service.workers = 2;
+        settings.pipeline.solver = "tabu".into();
+        settings.pipeline.iterations = 2;
+        let svc = Arc::new(Service::start(&settings).unwrap());
+        assert!(svc.is_pooled());
+        let server = TcpServer::start(svc.clone(), 0).unwrap();
+        let set = benchmark_set("cnn_dm_20").unwrap();
+        summarize_remote(server.addr, &set.documents[0].text()).unwrap();
+        let report = stats_remote(server.addr).unwrap();
+        assert!(report.contains("completed=1"), "{report}");
+        assert!(report.contains("occupancy"), "{report}");
         server.stop();
     }
 

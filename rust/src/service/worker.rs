@@ -1,6 +1,18 @@
-//! Worker pool: each worker owns a full EsPipeline (embedder + solver/COBI
-//! device) and drains the shared queue. A single shared receiver behind a
-//! mutex gives natural work-stealing load balance without a router thread.
+//! Worker pool: workers drain the shared request queue and run the
+//! embed/formulate/quantize/refine stages. Ising solves take one of two
+//! routes:
+//!
+//!   * `Pooled` (default for pool-capable solvers): the worker walks the
+//!     document's `sched::SubproblemGraph` and submits every ready
+//!     window's refinement batch to the shared `DevicePool`, so solves
+//!     from ALL in-flight documents coalesce on the devices. Seeds are
+//!     per-document (`sched::doc_seed`), making results independent of
+//!     worker assignment and dispatch order.
+//!   * `Local` (pool disabled, or brute/exact/random solvers): each
+//!     worker owns a full `EsPipeline` + private solver, as before.
+//!
+//! A single shared receiver behind a mutex gives natural work-stealing
+//! load balance without a router thread.
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, SyncSender};
@@ -12,6 +24,8 @@ use anyhow::Result;
 use crate::config::Settings;
 use crate::corpus::Document;
 use crate::pipeline::{EsPipeline, Summary};
+use crate::runtime::ArtifactRuntime;
+use crate::sched::{self, PoolHandle};
 
 use super::metrics::ServiceMetrics;
 
@@ -23,38 +37,70 @@ pub struct Job {
     pub enqueued: Instant,
 }
 
+/// How workers perform Ising solves.
+pub enum SolveRoute {
+    /// Worker-private pipeline + solver (seed derived from worker slot).
+    Local,
+    /// Shared device pool; per-document seeds.
+    Pooled(PoolHandle),
+}
+
 pub fn spawn_workers(
     settings: &Settings,
     rx: Receiver<Job>,
     metrics: Arc<Mutex<ServiceMetrics>>,
     inflight: Arc<AtomicUsize>,
     stop: Arc<AtomicBool>,
+    route: SolveRoute,
+    rt: Option<&ArtifactRuntime>,
 ) -> Result<Vec<std::thread::JoinHandle<()>>> {
     let shared_rx = Arc::new(Mutex::new(rx));
     let mut handles = Vec::new();
+    let pool_handle = match &route {
+        SolveRoute::Pooled(h) => Some(h.clone()),
+        SolveRoute::Local => None,
+    };
     for w in 0..settings.service.workers.max(1) {
-        // per-worker pipeline: derived seed keeps workers decorrelated but
-        // the fleet reproducible
-        let mut cfg = settings.pipeline.clone();
-        cfg.seed = cfg.seed.wrapping_add(w as u64 * 0x9E37);
-        let mut pipeline = EsPipeline::from_config(&cfg, &settings.cobi, None)?;
         let rx = shared_rx.clone();
         let metrics = metrics.clone();
         let inflight = inflight.clone();
         let stop = stop.clone();
         let max_batch = settings.service.max_batch.max(1);
+        let base_cfg = settings.pipeline.clone();
+
+        // per-worker solve function
+        let mut solve: Box<dyn FnMut(&Document) -> Result<Summary> + Send> =
+            match &pool_handle {
+                Some(handle) => {
+                    let handle = handle.clone();
+                    Box::new(move |doc: &Document| {
+                        // seeds keyed to the DOCUMENT: any worker produces
+                        // the same bytes for the same (config, doc)
+                        let seed = sched::doc_seed(base_cfg.seed, &doc.id);
+                        let mut cfg = base_cfg.clone();
+                        cfg.seed = seed;
+                        let mut client = handle.client(seed);
+                        sched::summarize_with_pool(doc, &cfg, &mut client)
+                    })
+                }
+                None => {
+                    // per-worker pipeline: derived seed keeps workers
+                    // decorrelated but the fleet reproducible. Pipelines
+                    // are built HERE (caller's stack), so the borrowed
+                    // artifact runtime never crosses into the threads —
+                    // executables are Arc-owned by construction time.
+                    let mut cfg = base_cfg.clone();
+                    cfg.seed = cfg.seed.wrapping_add(w as u64 * 0x9E37);
+                    let mut pipeline = EsPipeline::from_config(&cfg, &settings.cobi, rt)?;
+                    Box::new(move |doc: &Document| pipeline.summarize(doc))
+                }
+            };
+
         handles.push(
             std::thread::Builder::new()
                 .name(format!("cobi-worker-{w}"))
                 .spawn(move || {
-                    worker_loop(
-                        &mut pipeline,
-                        &rx,
-                        &metrics,
-                        &inflight,
-                        &stop,
-                        max_batch,
-                    )
+                    worker_loop(&mut *solve, &rx, &metrics, &inflight, &stop, max_batch)
                 })?,
         );
     }
@@ -62,7 +108,7 @@ pub fn spawn_workers(
 }
 
 fn worker_loop(
-    pipeline: &mut EsPipeline,
+    solve: &mut dyn FnMut(&Document) -> Result<Summary>,
     rx: &Arc<Mutex<Receiver<Job>>>,
     metrics: &Arc<Mutex<ServiceMetrics>>,
     inflight: &Arc<AtomicUsize>,
@@ -95,7 +141,7 @@ fn worker_loop(
             }
             let queue_wait = job.enqueued.elapsed();
             let t0 = Instant::now();
-            let result = pipeline.summarize(&job.doc);
+            let result = solve(&job.doc);
             let solve_time = t0.elapsed();
             {
                 let mut m = metrics.lock().unwrap();

@@ -46,6 +46,12 @@ impl SaSolver {
         Self::new(seed, SaConfig::default())
     }
 
+    /// Reset the RNG to a fresh stream keyed by `seed` (see
+    /// `TabuSolver::reseed`; the device pool re-seeds per request).
+    pub fn reseed(&mut self, seed: u64) {
+        self.rng = Pcg32::new(seed, 0x5A5A);
+    }
+
     fn run_once(&mut self, ising: &Ising) -> SolveResult {
         let n = ising.n;
         let mut s: Vec<i8> = (0..n)

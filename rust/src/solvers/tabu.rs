@@ -48,6 +48,13 @@ impl TabuSolver {
         Self::new(seed, TabuConfig::default())
     }
 
+    /// Reset the RNG to a fresh stream keyed by `seed` — the device pool
+    /// re-seeds before every request so results depend only on the
+    /// request seed, never on dispatch order.
+    pub fn reseed(&mut self, seed: u64) {
+        self.rng = Pcg32::new(seed, 0x7AB0);
+    }
+
     fn run_once(&mut self, ising: &Ising) -> SolveResult {
         let n = ising.n;
         let tenure = ((n as f64 * self.cfg.tenure_frac) as usize).max(4);

@@ -3,6 +3,13 @@
 //! Requires `artifacts/` (run `make artifacts` first); each test fails
 //! loudly if the artifacts are missing, because silent skips would let
 //! the three-layer contract rot.
+//!
+//! Compiled only with `--features pjrt` (DESIGN.md §Substitutions): the
+//! default offline build has no PJRT backend, so `ArtifactRuntime::open`
+//! is a stub that always errors — gating the whole file keeps "fail
+//! loudly when artifacts are missing" for pjrt builds without making the
+//! native-only tier-1 run fail by construction.
+#![cfg(feature = "pjrt")]
 
 use std::path::Path;
 
