@@ -1,0 +1,147 @@
+//! Bench: adaptive solver portfolio + fleet-wide warm-start cache vs the
+//! PR-1 device pool — the reuse story (repeated documents should get
+//! cheaper, not just batched).
+//!
+//! All three configurations run the SAME repeated-document workload
+//! (`bench_10`, the full set re-submitted `ROUNDS` times with *identical*
+//! ids — the cache's target shape) through the full `Service`, one round
+//! at a time so later rounds actually see the cache the earlier rounds
+//! populated:
+//!
+//!   * pool:       the PR-1 baseline — shared `DevicePool`, plain COBI
+//!     devices, no portfolio layer;
+//!   * portfolio-cold: `[portfolio] policy = "static"` + cache disabled —
+//!     must match the baseline's work (byte-identity is pinned by tests;
+//!     here it bounds the routing layer's overhead);
+//!   * portfolio-warm: cache enabled — round 2+ requests exact-hit
+//!     (identical quantized instances), same-size windows warm-hit, so
+//!     docs/sec should beat the baseline.
+//!
+//! Prints a human summary plus a JSON record; set COBI_BENCH_RECORD=1 to
+//! (over)write the committed baseline `BENCH_portfolio.json` with fresh
+//! numbers (see that file for the schema).
+
+use std::time::Instant;
+
+use cobi_es::config::Settings;
+use cobi_es::corpus::benchmark_set;
+use cobi_es::service::{Service, ServiceMetrics};
+
+const ROUNDS: usize = 3;
+const WORKERS: usize = 4;
+const DEVICES: usize = 4;
+const ITERATIONS: usize = 4;
+
+fn base_settings() -> Settings {
+    let mut s = Settings::default();
+    s.pipeline.solver = "cobi".into();
+    s.pipeline.iterations = ITERATIONS;
+    s.pipeline.summary_len = 3; // bench_10 documents have 10 sentences
+    s.service.workers = WORKERS;
+    s.service.queue_depth = 256;
+    s.sched.devices = DEVICES;
+    s
+}
+
+/// Run the repeated-document workload; returns (wall_s, docs, metrics).
+/// Rounds are submitted with a barrier between them so round r+1 can
+/// reuse what round r cached.
+fn run_workload(settings: &Settings) -> (f64, usize, ServiceMetrics) {
+    let svc = Service::start(settings).expect("service start");
+    let set = benchmark_set("bench_10").expect("benchmark set");
+    let t0 = Instant::now();
+    let mut docs = 0usize;
+    for _ in 0..ROUNDS {
+        let tickets: Vec<_> = set
+            .documents
+            .iter()
+            .map(|d| svc.submit(d.clone()).expect("queue_depth covers the workload"))
+            .collect();
+        for t in tickets {
+            t.wait().expect("summarize");
+            docs += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let m = svc.metrics();
+    svc.shutdown();
+    (wall, docs, m)
+}
+
+fn main() {
+    let mut pool = base_settings();
+    pool.portfolio.enabled = false;
+    let (pool_wall, docs, pool_m) = run_workload(&pool);
+    let pool_rate = docs as f64 / pool_wall;
+    println!("pool (PR-1 baseline):  {docs} docs in {pool_wall:.2}s = {pool_rate:.1} docs/s");
+    println!("  {}", pool_m.report());
+
+    let mut cold = base_settings();
+    cold.portfolio.enabled = true;
+    cold.portfolio.cache = false;
+    let (cold_wall, _, cold_m) = run_workload(&cold);
+    let cold_rate = docs as f64 / cold_wall;
+    println!("portfolio-cold:        {docs} docs in {cold_wall:.2}s = {cold_rate:.1} docs/s");
+    println!("  {}", cold_m.report());
+
+    let mut warm = base_settings();
+    warm.portfolio.enabled = true;
+    warm.portfolio.cache = true;
+    let (warm_wall, _, warm_m) = run_workload(&warm);
+    let warm_rate = docs as f64 / warm_wall;
+    println!("portfolio-warm:        {docs} docs in {warm_wall:.2}s = {warm_rate:.1} docs/s");
+    println!("  {}", warm_m.report());
+
+    let p = warm_m.portfolio.as_ref().expect("portfolio telemetry");
+    let exact_rate = p.cache.exact_rate();
+    let warm_hit_rate = p.cache.warm_rate();
+    let speedup = pool_wall / warm_wall;
+    println!(
+        "speedup vs pool {speedup:.2}x | cache exact {:.0}% warm {:.0}% ({} lookups, {} entries)",
+        exact_rate * 100.0,
+        warm_hit_rate * 100.0,
+        p.cache.lookups,
+        p.cache.entries,
+    );
+    assert!(
+        p.cache.exact_hits > 0,
+        "repeated rounds produced no exact cache hits"
+    );
+    assert!(
+        p.cache.warm_hits > 0,
+        "same-size windows produced no warm cache hits"
+    );
+
+    let json = format!(
+        r#"{{
+  "bench": "portfolio",
+  "status": "recorded",
+  "workload": {{
+    "set": "bench_10",
+    "rounds": {ROUNDS},
+    "documents": {docs},
+    "repeated_ids": true,
+    "solver": "cobi-native",
+    "iterations": {ITERATIONS},
+    "workers": {WORKERS},
+    "devices": {DEVICES}
+  }},
+  "pool_baseline": {{ "wall_s": {pool_wall:.4}, "docs_per_s": {pool_rate:.2} }},
+  "portfolio_cold": {{ "wall_s": {cold_wall:.4}, "docs_per_s": {cold_rate:.2} }},
+  "portfolio_warm": {{
+    "wall_s": {warm_wall:.4},
+    "docs_per_s": {warm_rate:.2},
+    "cache_exact_rate": {exact_rate:.3},
+    "cache_warm_rate": {warm_hit_rate:.3},
+    "cache_entries": {entries}
+  }},
+  "speedup_vs_pool": {speedup:.3}
+}}"#,
+        entries = p.cache.entries,
+    );
+    println!("\n{json}");
+    if std::env::var("COBI_BENCH_RECORD").is_ok() {
+        std::fs::write("BENCH_portfolio.json", format!("{json}\n")).expect("write baseline");
+        println!("recorded baseline to BENCH_portfolio.json");
+    }
+}

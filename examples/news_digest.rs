@@ -1,9 +1,20 @@
-//! News digest: batch-summarize a stream of synthetic news articles and
-//! compare solver quality / modeled cost — the paper intro's motivating
-//! workload ("news digests ... real-time inference in resource-
-//! constrained environments").
+//! # What it demonstrates
+//!
+//! Batch-summarizing a stream of synthetic news articles and comparing
+//! solver quality vs modeled hardware cost — the paper intro's
+//! motivating workload ("news digests ... real-time inference in
+//! resource-constrained environments").
 //!
 //!     cargo run --release --example news_digest
+//!
+//! # Expected output
+//!
+//! One table row per solver (cobi, tabu, random) over the 20-document
+//! cnn_dm_20 set: mean normalized objective (cobi/tabu ≈ 0.9+, random
+//! clearly lower), ROUGE-1/ROUGE-L against the planted references, and
+//! the modeled ms/doc and mJ/doc from the paper's timing model — COBI's
+//! energy column is orders of magnitude below Tabu's, which is the
+//! paper's headline claim. A final line restates the model constants.
 
 use cobi_es::config::{CobiConfig, PipelineConfig, TimingConfig};
 use cobi_es::corpus::benchmark_set;

@@ -1,3 +1,5 @@
+//! # What it demonstrates
+//!
 //! END-TO-END DRIVER (EXPERIMENTS.md §End-to-end): proves all three
 //! layers compose on a real small workload.
 //!
@@ -10,8 +12,15 @@
 //! under lax.scan = the COBI chip simulation) -> iterative refinement ->
 //! summary. Python never runs; only the AOT artifacts do.
 //!
-//! Reports the paper's headline metrics: normalized objective (Eq. 13),
-//! TTS (Eq. 15) and ETS (Eq. 16) for COBI vs Tabu vs brute force.
+//! # Expected output
+//!
+//! A layer-handshake banner (artifact names + platform), then the
+//! paper's headline metrics for COBI vs Tabu vs brute force on the
+//! benchmark articles: normalized objective (Eq. 13), TTS (Eq. 15) and
+//! ETS (Eq. 16) — COBI should match Tabu's quality at a fraction of the
+//! modeled energy. Requires the AOT artifacts: without `make artifacts`
+//! (or `COBI_ES_ARTIFACTS`), it exits early with a descriptive error —
+//! use `examples/quickstart.rs` for the artifact-free path.
 
 use cobi_es::cobi::CobiDevice;
 use cobi_es::config::Settings;

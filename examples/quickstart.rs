@@ -1,11 +1,19 @@
-//! Quickstart: summarize one document on the simulated COBI device.
+//! # What it demonstrates
+//!
+//! The simplest possible end-to-end run: summarize one document on the
+//! simulated COBI device. Builds a 20-sentence synthetic news document,
+//! runs the full paper workflow (improved Ising formulation ->
+//! decomposition -> stochastic rounding -> COBI solves -> refinement)
+//! and scores the result against the exact optimum. Start here.
 //!
 //!     cargo run --release --example quickstart
 //!
-//! Builds a 20-sentence synthetic news document, runs the full paper
-//! workflow (improved Ising formulation -> decomposition -> stochastic
-//! rounding -> COBI solves -> refinement) and prints the summary next to
-//! the exact optimum.
+//! # Expected output
+//!
+//! The numbered input sentences, the 6 selected summary sentences, then
+//! a quality line — `objective ... -> normalized X (exact optimum ...)`
+//! with X typically ≥ 0.9 — and a cost line (`1 decomposition stages,
+//! 10 COBI solves, ... ms wall`). Deterministic for a fixed seed.
 
 use cobi_es::config::{CobiConfig, PipelineConfig};
 use cobi_es::corpus::Generator;

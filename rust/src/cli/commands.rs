@@ -190,7 +190,8 @@ pub fn cmd_solve(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Apply the `serve` pool flags onto `[sched]` (see USAGE).
+/// Apply the `serve` pool + portfolio flags onto `[sched]`/`[portfolio]`
+/// (see USAGE).
 fn apply_pool_flags(settings: &mut Settings, args: &Args) -> Result<()> {
     if args.get_bool("no-pool") {
         settings.sched.enabled = false;
@@ -204,10 +205,25 @@ fn apply_pool_flags(settings: &mut Settings, args: &Args) -> Result<()> {
         // reject typos loudly: an unknown backend would otherwise just
         // silently route solves to worker-private solvers
         if b != "auto" && !crate::sched::pool_supports(b) {
-            bail!("--pool-backend expects auto|cobi|tabu|sa, got '{b}'");
+            bail!("--pool-backend expects auto|cobi|tabu|sa|portfolio, got '{b}'");
         }
         settings.sched.backend = b.to_string();
     }
+    if args.get_bool("portfolio") {
+        settings.portfolio.enabled = true;
+    }
+    if let Some(p) = args.get("portfolio-policy") {
+        // validate eagerly (same typo-loudness rationale as --pool-backend)
+        p.parse::<crate::portfolio::RoutePolicy>()
+            .map_err(anyhow::Error::msg)?;
+        settings.portfolio.policy = p.to_string();
+        settings.portfolio.enabled = true;
+    }
+    if args.get_bool("no-warm-cache") {
+        settings.portfolio.cache = false;
+    }
+    settings.portfolio.epsilon =
+        args.get_f64("portfolio-epsilon", settings.portfolio.epsilon)?;
     Ok(())
 }
 
@@ -225,8 +241,14 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     // actually be constructed, so e.g. `--pool-backend tabu` serves
     // without artifacts even under `[cobi] backend = "hlo"`.
     let pooled = crate::sched::service_pooled(&settings);
+    // the portfolio always constructs a COBI device internally, so it
+    // needs the runtime whenever the device config says "hlo"
     let needs_hlo = settings.cobi.backend == "hlo"
-        && ((pooled && crate::sched::resolved_backend(&settings) == "cobi")
+        && ((pooled
+            && matches!(
+                crate::sched::resolved_backend(&settings),
+                "cobi" | "portfolio"
+            ))
             || (!pooled && settings.pipeline.solver == "cobi"));
     let rt = if needs_hlo {
         Some(ArtifactRuntime::open_default().context(
@@ -244,6 +266,14 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
             settings.sched.linger_us,
             crate::sched::resolved_backend(&settings),
         );
+        if crate::sched::resolved_backend(&settings) == "portfolio" {
+            println!(
+                "portfolio: policy {}, static backend {}, warm cache {}",
+                settings.portfolio.policy,
+                settings.portfolio.static_backend,
+                if settings.portfolio.cache { "on" } else { "off" },
+            );
+        }
     } else {
         println!("device pool: disabled (worker-private solvers)");
     }

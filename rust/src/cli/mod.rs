@@ -17,7 +17,16 @@ pub struct Args {
 }
 
 /// Flags that take no value.
-const BOOLEAN_FLAGS: &[&str] = &["full", "help", "verbose", "csv", "hlo", "no-pool"];
+const BOOLEAN_FLAGS: &[&str] = &[
+    "full",
+    "help",
+    "verbose",
+    "csv",
+    "hlo",
+    "no-pool",
+    "portfolio",
+    "no-warm-cache",
+];
 
 impl Args {
     pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Self> {
@@ -100,8 +109,12 @@ COMMANDS:
                a '::EOF::' line -> 'OK <m>' + m summary lines;
                a '::STATS::' line -> 'OK 1' + a metrics report line)
                device pool: [--pool-devices N] [--pool-coalesce N]
-               [--pool-linger-us N] [--pool-backend auto|cobi|tabu|sa]
+               [--pool-linger-us N]
+               [--pool-backend auto|cobi|tabu|sa|portfolio]
                [--no-pool] (fall back to worker-private solvers)
+               portfolio: [--portfolio] (adaptive solver routing)
+               [--portfolio-policy static|size-tiered|bandit]
+               [--portfolio-epsilon F] [--no-warm-cache]
   doctor       Check artifacts, PJRT runtime and device calibration
   help         Show this message
 
@@ -141,6 +154,14 @@ mod tests {
         assert_eq!(a.get_usize("workers", 0).unwrap(), 2);
         // also valid as the last argument
         assert!(parse("serve --no-pool").get_bool("no-pool"));
+    }
+
+    #[test]
+    fn portfolio_flags_are_bare() {
+        let a = parse("serve --portfolio --no-warm-cache --portfolio-policy bandit");
+        assert!(a.get_bool("portfolio"));
+        assert!(a.get_bool("no-warm-cache"));
+        assert_eq!(a.get("portfolio-policy"), Some("bandit"));
     }
 
     #[test]

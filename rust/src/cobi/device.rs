@@ -405,6 +405,115 @@ impl CobiDevice {
     }
 }
 
+impl CobiDevice {
+    /// One seeded solve with an optional warm-start hint: initial
+    /// oscillator phases derive from `init` (s = +1 → phase 0, s = -1 →
+    /// phase π — the phase encoding of the hinted solution) instead of
+    /// random draws; per-step noise still comes from the request-seed
+    /// stream, so the anneal explores around the hint rather than
+    /// replaying it. Without a hint this is exactly one instance of the
+    /// seeded-group path. Used by the portfolio's warm-start route
+    /// (reuse-aware solving); results are a pure function of
+    /// (instance, seed, hint, device config).
+    pub fn solve_seeded_warm(
+        &mut self,
+        ising: &Ising,
+        seed: u64,
+        init: Option<&[i8]>,
+    ) -> Result<SolveResult> {
+        self.validate(ising)?;
+        if let Some(s) = init {
+            anyhow::ensure!(
+                s.len() == ising.n,
+                "warm-start hint has {} spins for a {}-spin instance",
+                s.len(),
+                ising.n
+            );
+        }
+        let t0 = std::time::Instant::now();
+        let osc = self.oscillator_config();
+        let kparams = self.kparams();
+        let noise_amp = self.cfg.noise_amp;
+        let mut rng = Pcg32::new(seed, DEVICE_STREAM);
+
+        let spins = match &self.backend {
+            CobiBackend::Native => {
+                // a cold start draws n phases — matching native_spins
+                let phase0 = warm_phase0(ising.n, init, &mut rng);
+                let mut noise = vec![0.0f32; ANNEAL_STEPS * ising.n];
+                rng.fill_normal(&mut noise, noise_amp);
+                anneal(ising, &osc, &phase0, &noise)
+            }
+            CobiBackend::Hlo { single, .. } => {
+                let single = single.clone();
+                let padded = ising.padded(PADDED_SPINS);
+                // a cold start draws PADDED_SPINS phases — matching
+                // hlo_single_spins, so the noise stream stays aligned
+                // with the seeded-group path; a hint draws none and
+                // leaves the padding slots at phase 0
+                let phase0 = match init {
+                    Some(_) => {
+                        let mut p = vec![0.0f32; PADDED_SPINS];
+                        p[..ising.n].copy_from_slice(&warm_phase0(ising.n, init, &mut rng));
+                        p
+                    }
+                    None => warm_phase0(PADDED_SPINS, None, &mut rng),
+                };
+                let mut noise = vec![0.0f32; ANNEAL_STEPS * PADDED_SPINS];
+                rng.fill_normal(&mut noise, noise_amp);
+                let outs = single.run(&[
+                    Arg::F32(&padded.j),
+                    Arg::F32(&padded.h),
+                    Arg::F32(&phase0),
+                    Arg::F32(&noise),
+                    Arg::F32(&kparams),
+                ])?;
+                outs[0][..ising.n]
+                    .iter()
+                    .map(|&v| if v >= 0.0 { 1i8 } else { -1i8 })
+                    .collect()
+            }
+        };
+        let energy = ising.energy(&spins);
+        self.charge(1, t0.elapsed().as_secs_f64());
+        // never return worse than the hint itself: a coarse near-match
+        // hint is only useful if it cannot hurt (the cache contract,
+        // DESIGN.md decision #10) — software solvers enforce this by
+        // starting best-so-far at the hint; the analog anneal can drift
+        // away, so clamp here. Strict `<` keeps the annealed result on
+        // exact ties.
+        if let Some(s) = init {
+            let hint_energy = ising.energy(s);
+            if hint_energy < energy {
+                return Ok(SolveResult {
+                    spins: s.to_vec(),
+                    energy: hint_energy,
+                });
+            }
+        }
+        Ok(SolveResult { spins, energy })
+    }
+}
+
+/// Initial phases for a (possibly) warm-started anneal over `n`
+/// oscillators: hinted spins map to their phase encoding (no RNG draws);
+/// a cold start draws uniform phases exactly like the seeded paths.
+fn warm_phase0(n: usize, init: Option<&[i8]>, rng: &mut Pcg32) -> Vec<f32> {
+    match init {
+        Some(s) => s
+            .iter()
+            .map(|&v| if v > 0 { 0.0 } else { std::f32::consts::PI })
+            .collect(),
+        None => {
+            let mut p = vec![0.0f32; n];
+            for x in p.iter_mut() {
+                *x = rng.range_f32(-std::f32::consts::PI, std::f32::consts::PI);
+            }
+            p
+        }
+    }
+}
+
 /// One instance prepared for a batched HLO dispatch.
 struct Prepared {
     /// Group index (0 for the unseeded batch path).
@@ -649,6 +758,49 @@ mod tests {
         }
         // accounting counts only real instances: 3 + (5 + 3) = 11
         assert_eq!(dev.stats().solves, 11);
+    }
+
+    #[test]
+    fn cold_warm_solve_matches_the_seeded_group_path() {
+        // without a hint, solve_seeded_warm must be bit-identical to a
+        // one-instance seeded group (same RNG stream, same draw order)
+        let inst = quantized_glass(700, 12);
+        let mut dev = CobiDevice::native(CobiConfig::default(), 80);
+        let a = dev.solve_seeded_warm(&inst, 4321, None).unwrap();
+        let b = dev
+            .solve_groups_seeded(&[SeededGroup {
+                instances: std::slice::from_ref(&inst),
+                seed: 4321,
+            }])
+            .unwrap();
+        assert_eq!(a.spins, b[0][0].spins);
+        assert_eq!(a.energy, b[0][0].energy);
+    }
+
+    #[test]
+    fn warm_hints_are_deterministic_and_charged() {
+        let inst = quantized_glass(701, 14);
+        let hint = vec![1i8; 14];
+        let mut dev = CobiDevice::native(CobiConfig::default(), 81);
+        let a = dev.solve_seeded_warm(&inst, 9, Some(&hint)).unwrap();
+        let b = dev.solve_seeded_warm(&inst, 9, Some(&hint)).unwrap();
+        assert_eq!(a.spins, b.spins);
+        assert!((inst.energy(&a.spins) - a.energy).abs() < 1e-9);
+        // the cache contract: a warm solve is never worse than its hint
+        assert!(a.energy <= inst.energy(&hint) + 1e-9);
+        assert_eq!(dev.stats().solves, 2);
+        // a wrong-length hint is a loud error
+        assert!(dev.solve_seeded_warm(&inst, 9, Some(&[1i8; 3])).is_err());
+    }
+
+    #[test]
+    fn warm_solve_never_loses_a_ground_state_hint() {
+        use crate::solvers::exact::ising_ground_exhaustive;
+        let inst = quantized_glass(702, 12);
+        let (ge, gs, _) = ising_ground_exhaustive(&inst);
+        let mut dev = CobiDevice::native(CobiConfig::default(), 82);
+        let r = dev.solve_seeded_warm(&inst, 5, Some(&gs)).unwrap();
+        assert!((r.energy - ge).abs() < 1e-9, "hint clamp lost the ground state");
     }
 
     #[test]

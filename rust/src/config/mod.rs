@@ -206,6 +206,48 @@ impl Default for SchedConfig {
     }
 }
 
+/// Adaptive solver-portfolio + warm-start-cache parameters
+/// (`portfolio::SolverPortfolio`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PortfolioConfig {
+    /// Route pool solves through the adaptive portfolio. When false the
+    /// pool hosts the single resolved backend exactly as before (PR-1
+    /// architecture); `[sched] backend = "portfolio"` also enables it.
+    pub enabled: bool,
+    /// Routing policy: "static" | "size-tiered" | "bandit".
+    pub policy: String,
+    /// Backend for `policy = "static"`: "cobi"|"tabu"|"sa"|"greedy"|"exact".
+    pub static_backend: String,
+    /// Bandit exploration rate in [0, 1] (epsilon-greedy).
+    pub epsilon: f64,
+    /// Largest instance routed to the exhaustive exact backend
+    /// (clamped internally to keep 2^n enumeration sane).
+    pub exact_max_n: usize,
+    /// Fleet-wide warm-start cache. NOTE: with the cache on, results
+    /// depend on service history — disable it (and use `policy =
+    /// "static"`) to keep the byte-replay determinism contract.
+    pub cache: bool,
+    /// Bound on cached solved instances (FIFO eviction past it).
+    pub cache_capacity: usize,
+    /// Bandit score weight of mean latency (s) against mean energy/spin.
+    pub latency_weight: f64,
+}
+
+impl Default for PortfolioConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            policy: "static".into(),
+            static_backend: "cobi".into(),
+            epsilon: 0.1,
+            exact_max_n: 12,
+            cache: true,
+            cache_capacity: 4096,
+            latency_weight: 1.0,
+        }
+    }
+}
+
 /// Root settings object.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Settings {
@@ -214,6 +256,7 @@ pub struct Settings {
     pub timing: TimingConfig,
     pub service: ServiceConfig,
     pub sched: SchedConfig,
+    pub portfolio: PortfolioConfig,
     /// Directory containing AOT artifacts (manifest.txt etc.).
     pub artifacts_dir: String,
 }
@@ -319,6 +362,27 @@ impl Settings {
         }
         set!(self.sched.queue_depth, get_i64, "sched.queue_depth");
         set!(self.sched.backend, get_str, "sched.backend");
+
+        set!(self.portfolio.enabled, get_bool, "portfolio.enabled");
+        set!(self.portfolio.policy, get_str, "portfolio.policy");
+        set!(
+            self.portfolio.static_backend,
+            get_str,
+            "portfolio.static_backend"
+        );
+        set!(self.portfolio.epsilon, get_f64, "portfolio.epsilon");
+        set!(self.portfolio.exact_max_n, get_i64, "portfolio.exact_max_n");
+        set!(self.portfolio.cache, get_bool, "portfolio.cache");
+        set!(
+            self.portfolio.cache_capacity,
+            get_i64,
+            "portfolio.cache_capacity"
+        );
+        set!(
+            self.portfolio.latency_weight,
+            get_f64,
+            "portfolio.latency_weight"
+        );
         Ok(())
     }
 }
@@ -395,6 +459,42 @@ backend = "tabu"
         assert_eq!(s.sched.linger_us, 500);
         assert_eq!(s.sched.queue_depth, 64);
         assert_eq!(s.sched.backend, "tabu");
+    }
+
+    #[test]
+    fn portfolio_defaults_and_overrides() {
+        let s = Settings::default();
+        assert!(!s.portfolio.enabled);
+        assert_eq!(s.portfolio.policy, "static");
+        assert_eq!(s.portfolio.static_backend, "cobi");
+        assert!(s.portfolio.cache);
+        assert_eq!(s.portfolio.cache_capacity, 4096);
+        assert!((s.portfolio.epsilon - 0.1).abs() < 1e-12);
+
+        let doc = toml::Document::parse(
+            r#"
+[portfolio]
+enabled = true
+policy = "bandit"
+static_backend = "tabu"
+epsilon = 0.25
+exact_max_n = 14
+cache = false
+cache_capacity = 128
+latency_weight = 2.5
+"#,
+        )
+        .unwrap();
+        let mut s = Settings::default();
+        s.apply(&doc).unwrap();
+        assert!(s.portfolio.enabled);
+        assert_eq!(s.portfolio.policy, "bandit");
+        assert_eq!(s.portfolio.static_backend, "tabu");
+        assert!((s.portfolio.epsilon - 0.25).abs() < 1e-12);
+        assert_eq!(s.portfolio.exact_max_n, 14);
+        assert!(!s.portfolio.cache);
+        assert_eq!(s.portfolio.cache_capacity, 128);
+        assert!((s.portfolio.latency_weight - 2.5).abs() < 1e-12);
     }
 
     #[test]

@@ -1,4 +1,13 @@
 //! Ising/QUBO core: model types, ES formulations, objective evaluation.
+//!
+//! `model` holds the dense [`Qubo`]/[`Ising`] types and the exact
+//! transformations between them; `formulation` turns an extractive-
+//! summarization instance ([`EsProblem`]: relevance µ, redundancy β,
+//! weight λ, budget M) into an Ising Hamiltonian via the paper's
+//! original (Eq. 7–9) and improved bias-shift (Eq. 10–12) formulations;
+//! `kofn` generalizes the bias shift to arbitrary k-of-n selection
+//! QUBOs; `objective` evaluates Eq. 3 and the exact bounds behind the
+//! Eq. 13 normalization that every experiment reports.
 
 pub mod formulation;
 pub mod model;

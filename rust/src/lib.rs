@@ -13,6 +13,7 @@ pub mod experiments;
 pub mod ising;
 pub mod metrics;
 pub mod pipeline;
+pub mod portfolio;
 pub mod quant;
 pub mod refine;
 pub mod runtime;

@@ -1,4 +1,12 @@
 //! Evaluation metrics: TTS/ETS models (Eqs. 14–16) and ROUGE quality.
+//!
+//! `tts` implements the paper's time-to-solution / energy-to-solution
+//! models — iterations to reach the target success probability (Eq. 14)
+//! priced under a per-solver [`TimingModel`] (Eqs. 15–16); these drive
+//! the Fig. 7/8 curves and the Table 1 projection. `quality` is the
+//! in-tree ROUGE-1/2/L implementation scored against each synthetic
+//! document's planted reference (the stand-in for the paper's ROUGE
+//! columns — see DESIGN.md §Substitutions).
 
 pub mod quality;
 pub mod tts;

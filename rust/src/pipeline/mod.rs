@@ -88,6 +88,31 @@ impl Summary {
     }
 }
 
+/// The end-to-end summarization pipeline: one of these per worker (or
+/// one, standalone) turns documents into M-sentence summaries through
+/// embed → formulate → decompose → quantize → solve → refine.
+///
+/// # Examples
+///
+/// ```
+/// use cobi_es::config::{CobiConfig, PipelineConfig};
+/// use cobi_es::corpus::Generator;
+/// use cobi_es::pipeline::EsPipeline;
+///
+/// let mut generator = Generator::with_seed(7);
+/// let doc = generator.document("demo", 12);
+/// let cfg = PipelineConfig {
+///     solver: "tabu".into(),
+///     iterations: 2,
+///     ..Default::default()
+/// };
+/// let mut pipeline = EsPipeline::from_config(&cfg, &CobiConfig::default(), None).unwrap();
+/// let summary = pipeline.summarize(&doc).unwrap();
+/// assert_eq!(summary.selected.len(), cfg.summary_len);
+/// // selections come back in document order, scored on the FP objective
+/// assert!(summary.selected.windows(2).all(|w| w[0] < w[1]));
+/// assert!(summary.objective.is_finite());
+/// ```
 pub struct EsPipeline {
     pub cfg: PipelineConfig,
     embedder: Box<dyn Embedder + Send>,

@@ -1,0 +1,362 @@
+//! Fleet-wide warm-start cache keyed by structural fingerprints of the
+//! quantized Ising instance.
+//!
+//! Three lookup tiers, tried in order:
+//!
+//! 1. **exact** — FNV-1a over (n, every h/J bit pattern), verified by full
+//!    instance equality so hash collisions can never serve wrong results.
+//!    A hit returns the stored solution directly: zero device time.
+//! 2. **near (fine)** — (n, sign class of every h). Stochastic rounding
+//!    re-samples coefficient magnitudes between refinement iterations but
+//!    rarely flips field signs, so sibling Hamiltonians of the same window
+//!    land on the same fine key. A hit serves the stored spins as an
+//!    initial configuration for a warm-started solver
+//!    (`IsingSolver::solve_from`, or phase initialisation on COBI).
+//! 3. **near (coarse)** — n alone: the most recent same-size solution. A
+//!    weak prior, but a free one — the solver still anneals from it.
+//!
+//! Capacity is bounded; eviction is insertion-order (FIFO), which matches
+//! the repeated-document workload the cache targets: hot entries are
+//! re-inserted by their next miss after eviction. Shared across all pool
+//! devices behind an `Arc` — reuse is fleet-wide, not per-device
+//! (DESIGN.md decision #10/#11).
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::Mutex;
+
+use crate::ising::Ising;
+use crate::solvers::SolveResult;
+use crate::text::tokenize::fnv1a;
+
+/// Result of one cache probe.
+#[derive(Debug, Clone)]
+pub enum CacheOutcome {
+    /// Identical quantized instance seen before: the stored solution,
+    /// servable without any solve.
+    Exact(SolveResult),
+    /// Structurally similar instance seen before: stored spins to use as
+    /// a warm-start hint (length always equals the probed instance's n).
+    Warm(Vec<i8>),
+    Miss,
+}
+
+/// Cache counters, snapshotted into
+/// [`PortfolioMetrics`](super::PortfolioMetrics).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CacheStats {
+    pub lookups: u64,
+    pub exact_hits: u64,
+    pub warm_hits: u64,
+    pub misses: u64,
+    pub inserts: u64,
+    pub evictions: u64,
+    /// Entries currently held.
+    pub entries: usize,
+}
+
+impl CacheStats {
+    pub fn exact_rate(&self) -> f64 {
+        if self.lookups == 0 {
+            0.0
+        } else {
+            self.exact_hits as f64 / self.lookups as f64
+        }
+    }
+
+    pub fn warm_rate(&self) -> f64 {
+        if self.lookups == 0 {
+            0.0
+        } else {
+            self.warm_hits as f64 / self.lookups as f64
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "cache lookups={} exact={:.0}% warm={:.0}% entries={} evictions={}",
+            self.lookups,
+            self.exact_rate() * 100.0,
+            self.warm_rate() * 100.0,
+            self.entries,
+            self.evictions,
+        )
+    }
+}
+
+struct Entry {
+    // both keys are stored so eviction can clean the indices in O(1)
+    exact_key: u64,
+    fine_key: u64,
+    ising: Ising,
+    spins: Vec<i8>,
+    energy: f64,
+}
+
+#[derive(Default)]
+struct Inner {
+    stats: CacheStats,
+    entries: HashMap<u64, Entry>,
+    /// exact_key -> entry ids (collision chain; equality-verified).
+    by_exact: HashMap<u64, Vec<u64>>,
+    /// fine near key (n + h sign classes) -> most recent entry id.
+    by_fine: HashMap<u64, u64>,
+    /// n -> most recent entry id.
+    by_size: HashMap<usize, u64>,
+    /// Insertion order for FIFO eviction.
+    order: VecDeque<u64>,
+    next_id: u64,
+}
+
+/// Bounded, thread-safe warm-start cache (see module docs).
+pub struct WarmStartCache {
+    inner: Mutex<Inner>,
+    capacity: usize,
+}
+
+/// Exact structural fingerprint: n plus every coefficient's bit pattern.
+pub fn exact_key(ising: &Ising) -> u64 {
+    let mut bytes = Vec::with_capacity(8 + 4 * (ising.h.len() + ising.j.len()));
+    bytes.extend_from_slice(&(ising.n as u64).to_le_bytes());
+    for &v in ising.h.iter().chain(ising.j.iter()) {
+        bytes.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    fnv1a(&bytes)
+}
+
+/// Fine near key: n plus the sign class (-, 0, +) of every local field.
+fn fine_key(ising: &Ising) -> u64 {
+    let mut bytes = Vec::with_capacity(8 + ising.h.len());
+    bytes.extend_from_slice(&(ising.n as u64).to_le_bytes());
+    for &v in &ising.h {
+        bytes.push(if v > 0.0 {
+            1
+        } else if v < 0.0 {
+            2
+        } else {
+            0
+        });
+    }
+    fnv1a(&bytes)
+}
+
+impl WarmStartCache {
+    /// A cache holding at most `capacity` solved instances.
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            inner: Mutex::new(Inner::default()),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Probe the cache for `ising` (see module docs for the tier order).
+    pub fn lookup(&self, ising: &Ising) -> CacheOutcome {
+        let mut guard = self.inner.lock().unwrap();
+        // reborrow once so field borrows are precise (stats counters are
+        // bumped while sibling indices are still borrowed)
+        let inner = &mut *guard;
+        inner.stats.lookups += 1;
+        let ek = exact_key(ising);
+        if let Some(ids) = inner.by_exact.get(&ek) {
+            for id in ids {
+                let e = &inner.entries[id];
+                if e.ising == *ising {
+                    let result = SolveResult {
+                        spins: e.spins.clone(),
+                        energy: e.energy,
+                    };
+                    inner.stats.exact_hits += 1;
+                    return CacheOutcome::Exact(result);
+                }
+            }
+        }
+        for id in [
+            inner.by_fine.get(&fine_key(ising)).copied(),
+            inner.by_size.get(&ising.n).copied(),
+        ]
+        .into_iter()
+        .flatten()
+        {
+            let e = &inner.entries[&id];
+            if e.ising.n == ising.n {
+                let spins = e.spins.clone();
+                inner.stats.warm_hits += 1;
+                return CacheOutcome::Warm(spins);
+            }
+        }
+        inner.stats.misses += 1;
+        CacheOutcome::Miss
+    }
+
+    /// Record a solved instance. Re-inserting an identical instance keeps
+    /// the lower-energy solution; otherwise the oldest entry is evicted
+    /// once the capacity bound is reached.
+    pub fn insert(&self, ising: &Ising, result: &SolveResult) {
+        let mut guard = self.inner.lock().unwrap();
+        let inner = &mut *guard;
+        let ek = exact_key(ising);
+        let fk = fine_key(ising);
+        let existing = inner
+            .by_exact
+            .get(&ek)
+            .and_then(|ids| ids.iter().copied().find(|id| inner.entries[id].ising == *ising));
+        if let Some(id) = existing {
+            let e = inner.entries.get_mut(&id).unwrap();
+            if result.energy < e.energy {
+                e.spins = result.spins.clone();
+                e.energy = result.energy;
+            }
+            // refresh recency of the near indices
+            inner.by_fine.insert(fk, id);
+            inner.by_size.insert(ising.n, id);
+            return;
+        }
+        while inner.entries.len() >= self.capacity {
+            let Some(old) = inner.order.pop_front() else {
+                break;
+            };
+            if let Some(e) = inner.entries.remove(&old) {
+                if let Some(chain) = inner.by_exact.get_mut(&e.exact_key) {
+                    chain.retain(|&id| id != old);
+                    if chain.is_empty() {
+                        inner.by_exact.remove(&e.exact_key);
+                    }
+                }
+                // near indices may already point at a newer entry with
+                // the same key — drop them only if they point at us
+                if inner.by_fine.get(&e.fine_key) == Some(&old) {
+                    inner.by_fine.remove(&e.fine_key);
+                }
+                if inner.by_size.get(&e.ising.n) == Some(&old) {
+                    inner.by_size.remove(&e.ising.n);
+                }
+                inner.stats.evictions += 1;
+            }
+        }
+        let id = inner.next_id;
+        inner.next_id += 1;
+        inner.entries.insert(
+            id,
+            Entry {
+                exact_key: ek,
+                fine_key: fk,
+                ising: ising.clone(),
+                spins: result.spins.clone(),
+                energy: result.energy,
+            },
+        );
+        inner.by_exact.entry(ek).or_default().push(id);
+        inner.by_fine.insert(fk, id);
+        inner.by_size.insert(ising.n, id);
+        inner.order.push_back(id);
+        inner.stats.inserts += 1;
+    }
+
+    /// Counter snapshot (entries reflects the current fill level).
+    pub fn stats(&self) -> CacheStats {
+        let inner = self.inner.lock().unwrap();
+        let mut s = inner.stats.clone();
+        s.entries = inner.entries.len();
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn glass(seed: u64, n: usize) -> Ising {
+        crate::cobi::testutil::quantized_glass(seed, n)
+    }
+
+    fn solved(spins: Vec<i8>, energy: f64) -> SolveResult {
+        SolveResult { spins, energy }
+    }
+
+    #[test]
+    fn exact_hit_round_trips_the_stored_solution() {
+        let cache = WarmStartCache::new(16);
+        let inst = glass(1, 10);
+        assert!(matches!(cache.lookup(&inst), CacheOutcome::Miss));
+        let r = solved(vec![1; 10], -5.0);
+        cache.insert(&inst, &r);
+        match cache.lookup(&inst) {
+            CacheOutcome::Exact(hit) => {
+                assert_eq!(hit.spins, r.spins);
+                assert_eq!(hit.energy, r.energy);
+            }
+            other => panic!("expected exact hit, got {other:?}"),
+        }
+        let s = cache.stats();
+        assert_eq!((s.lookups, s.exact_hits, s.misses), (2, 1, 1));
+    }
+
+    #[test]
+    fn same_size_instances_serve_warm_hints() {
+        let cache = WarmStartCache::new(16);
+        let a = glass(2, 12);
+        let b = glass(3, 12); // distinct coefficients, same n
+        assert_ne!(a, b);
+        cache.insert(&a, &solved(vec![-1; 12], -1.0));
+        match cache.lookup(&b) {
+            CacheOutcome::Warm(init) => assert_eq!(init.len(), 12),
+            other => panic!("expected warm hit, got {other:?}"),
+        }
+        // a different size misses entirely
+        assert!(matches!(cache.lookup(&glass(4, 9)), CacheOutcome::Miss));
+        let s = cache.stats();
+        assert_eq!(s.warm_hits, 1);
+        assert_eq!(s.misses, 1);
+    }
+
+    #[test]
+    fn coefficient_changes_change_the_exact_key() {
+        let a = glass(5, 8);
+        let mut b = a.clone();
+        b.h[0] += 1.0;
+        assert_ne!(exact_key(&a), exact_key(&b));
+        assert_ne!(exact_key(&a), exact_key(&glass(5, 9)));
+    }
+
+    #[test]
+    fn reinsert_keeps_the_better_solution() {
+        let cache = WarmStartCache::new(4);
+        let inst = glass(6, 10);
+        cache.insert(&inst, &solved(vec![1; 10], -2.0));
+        cache.insert(&inst, &solved(vec![-1; 10], -7.0)); // better: kept
+        cache.insert(&inst, &solved(vec![1; 10], -3.0)); // worse: ignored
+        match cache.lookup(&inst) {
+            CacheOutcome::Exact(hit) => {
+                assert_eq!(hit.energy, -7.0);
+                assert_eq!(hit.spins, vec![-1; 10]);
+            }
+            other => panic!("expected exact hit, got {other:?}"),
+        }
+        assert_eq!(cache.stats().entries, 1);
+    }
+
+    #[test]
+    fn capacity_is_bounded_with_fifo_eviction() {
+        let cache = WarmStartCache::new(2);
+        let a = glass(10, 8);
+        let b = glass(11, 8);
+        let c = glass(12, 8);
+        for inst in [&a, &b, &c] {
+            cache.insert(inst, &solved(vec![1; 8], 0.0));
+        }
+        let s = cache.stats();
+        assert_eq!(s.entries, 2);
+        assert_eq!(s.evictions, 1);
+        // oldest (a) evicted; newest (c) still exactly servable
+        assert!(matches!(cache.lookup(&c), CacheOutcome::Exact(_)));
+        // a now only warm-hits via the survivors' near keys
+        assert!(!matches!(cache.lookup(&a), CacheOutcome::Exact(_)));
+    }
+
+    #[test]
+    fn stats_rates_are_sane() {
+        let s = CacheStats::default();
+        assert_eq!(s.exact_rate(), 0.0);
+        assert_eq!(s.warm_rate(), 0.0);
+        assert!(s.report().contains("lookups=0"));
+    }
+}

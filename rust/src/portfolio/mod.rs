@@ -1,0 +1,686 @@
+//! Adaptive solver portfolio + fleet-wide warm-start cache — the layer
+//! between `sched` (which batches subproblems across documents) and
+//! `solvers` (which solve one quantized Ising instance each).
+//!
+//! The paper's evaluation (COBI vs. Tabu vs. brute force; TTS/ETS curves
+//! in Figs. 7/8) shows the best solver depends on subproblem size and
+//! precision, and reuse-aware Ising machines show solve-to-solve reuse is
+//! where large wins hide. This module exploits both observations:
+//!
+//! * [`SolverPortfolio`] — owns one instance of every backend (the COBI
+//!   device, Tabu, SA, greedy descent, exact-for-tiny-N) behind the
+//!   [`IsingSolver`] trait and routes each subproblem by a
+//!   [`RoutePolicy`] (`static`, `size-tiered`, or epsilon-greedy
+//!   `bandit` over per-(backend, size-bucket) running quality/latency
+//!   stats). It implements the pool's `PoolSolver` contract, so
+//!   [`DevicePool`](crate::sched::DevicePool) hosts it like any other
+//!   backend (`[portfolio] enabled = true`, or
+//!   `[sched] backend = "portfolio"`).
+//! * [`WarmStartCache`] — keyed by a structural fingerprint of the
+//!   quantized instance; exact hits are served directly (zero device
+//!   time), near hits become initial spin configurations for
+//!   warm-started solvers ([`IsingSolver::solve_from`], or oscillator
+//!   phase initialisation on COBI). Shared fleet-wide across all pool
+//!   devices via [`PortfolioShared`].
+//! * [`PortfolioMetrics`] — per-backend route counts and latency
+//!   histograms plus cache hit/miss/warm rates, snapshotted into
+//!   `ServiceMetrics` next to the pool counters.
+//!
+//! Determinism contract (DESIGN.md decisions #9–#10): with
+//! `policy = "static"` and the cache disabled, the portfolio is
+//! byte-identical to hosting the static backend directly on the pool —
+//! pinned by a bench_10 test against the sequential path. Any other
+//! configuration trades that replay property for adaptivity: bandit
+//! stats and cache contents depend on fleet history (routing itself
+//! stays deterministic given the request seed).
+
+pub mod cache;
+pub mod policy;
+
+pub use cache::{CacheOutcome, CacheStats, WarmStartCache};
+pub use policy::{
+    size_bucket, BackendKind, BanditStats, CellStats, RoutePolicy, N_BUCKETS, SIZE_BOUNDS,
+};
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::cobi::{CobiDevice, SeededGroup};
+use crate::config::{PortfolioConfig, Settings};
+use crate::ising::Ising;
+use crate::runtime::ArtifactRuntime;
+use crate::sched::pool::PoolSolver;
+use crate::service::metrics::Histogram;
+use crate::solvers::exact::ExactIsingSolver;
+use crate::solvers::greedy::GreedyDescent;
+use crate::solvers::sa::SaSolver;
+use crate::solvers::tabu::TabuSolver;
+use crate::solvers::{IsingSolver, SolveResult};
+use crate::util::rng::Pcg32;
+
+/// RNG stream id for the bandit's exploration draws (keyed by the request
+/// seed, so routing replays deterministically per document).
+const BANDIT_STREAM: u64 = 0xBA2D17;
+
+/// Hard ceiling on the exact backend's exhaustive enumeration (2^n
+/// states; the config value is clamped here).
+const EXACT_HARD_CAP: usize = 20;
+
+/// Fleet-wide portfolio telemetry: route counts and latency per backend,
+/// bandit statistics, and warm-start-cache counters. One instance is
+/// shared by every portfolio device in a pool (via [`PortfolioShared`])
+/// and snapshotted into `ServiceMetrics`.
+#[derive(Debug, Clone)]
+pub struct PortfolioMetrics {
+    /// Solve requests routed to each backend (`BackendKind::index` order).
+    pub routes: [u64; BackendKind::COUNT],
+    /// Per-backend dispatch-latency histograms (same indexing).
+    pub backend_latency: Vec<Histogram>,
+    /// Per-(backend, size-bucket) running quality/latency stats.
+    pub stats: BanditStats,
+    /// Warm-start-cache counters (filled in at snapshot time).
+    pub cache: CacheStats,
+}
+
+impl Default for PortfolioMetrics {
+    fn default() -> Self {
+        Self {
+            routes: [0; BackendKind::COUNT],
+            backend_latency: vec![Histogram::latency(); BackendKind::COUNT],
+            stats: BanditStats::default(),
+            cache: CacheStats::default(),
+        }
+    }
+}
+
+impl PortfolioMetrics {
+    /// Requests routed to `b`.
+    pub fn route_count(&self, b: BackendKind) -> u64 {
+        self.routes[b.index()]
+    }
+
+    /// Total routed requests across all backends.
+    pub fn total_routes(&self) -> u64 {
+        self.routes.iter().sum()
+    }
+
+    pub fn report(&self) -> String {
+        let mut routes = String::new();
+        for b in BackendKind::ALL {
+            if self.routes[b.index()] > 0 {
+                routes.push_str(&format!(" {}={}", b.name(), self.routes[b.index()]));
+            }
+        }
+        if routes.is_empty() {
+            routes.push_str(" none");
+        }
+        let mut lat = String::new();
+        for b in BackendKind::ALL {
+            let h = &self.backend_latency[b.index()];
+            if h.count() > 0 {
+                lat.push_str(&format!(" {}[{}]", b.name(), h.summary()));
+            }
+        }
+        let mut out = format!("portfolio: routes{routes} | {}", self.cache.report());
+        if !lat.is_empty() {
+            out.push_str(&format!(" | lat{lat}"));
+        }
+        out
+    }
+}
+
+/// The state shared by every portfolio device in one pool: the fleet-wide
+/// warm-start cache and the combined telemetry. Created once by
+/// `DevicePool::start` and cloned (cheap `Arc` clones) into each device's
+/// [`SolverPortfolio`].
+#[derive(Clone)]
+pub struct PortfolioShared {
+    pub metrics: Arc<Mutex<PortfolioMetrics>>,
+    pub cache: Arc<WarmStartCache>,
+}
+
+impl PortfolioShared {
+    pub fn new(cfg: &PortfolioConfig) -> Self {
+        Self {
+            metrics: Arc::new(Mutex::new(PortfolioMetrics::default())),
+            cache: Arc::new(WarmStartCache::new(cfg.cache_capacity)),
+        }
+    }
+
+    /// Telemetry snapshot with current cache counters merged in.
+    pub fn snapshot(&self) -> PortfolioMetrics {
+        let mut m = self.metrics.lock().unwrap().clone();
+        m.cache = self.cache.stats();
+        m
+    }
+}
+
+/// Derive a per-instance seed from a request seed (splitmix-style), used
+/// by the cache-enabled COBI path where instances solve individually.
+fn mix(seed: u64, k: u64) -> u64 {
+    let mut z = seed ^ k.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z ^ (z >> 31)
+}
+
+/// Adaptive multi-backend Ising solver (see module docs).
+///
+/// # Examples
+///
+/// ```
+/// use cobi_es::config::Settings;
+/// use cobi_es::ising::Ising;
+/// use cobi_es::portfolio::SolverPortfolio;
+///
+/// let mut settings = Settings::default();
+/// settings.portfolio.policy = "size-tiered".into();
+/// let mut portfolio = SolverPortfolio::from_settings(&settings, 7, None, None).unwrap();
+///
+/// let mut inst = Ising::new(6);
+/// inst.set_pair(0, 5, -2.0); // ferromagnetic pair
+/// // 6 spins routes to the exact backend: a true ground state comes back
+/// let r = portfolio.solve_one(&inst, 0xFEED).unwrap();
+/// assert_eq!(r.spins[0], r.spins[5]);
+/// assert!((inst.energy(&r.spins) - r.energy).abs() < 1e-9);
+/// ```
+pub struct SolverPortfolio {
+    policy: RoutePolicy,
+    static_backend: BackendKind,
+    epsilon: f64,
+    exact_max_n: usize,
+    latency_weight: f64,
+    cache_enabled: bool,
+    cobi: CobiDevice,
+    tabu: TabuSolver,
+    sa: SaSolver,
+    greedy: GreedyDescent,
+    exact: ExactIsingSolver,
+    shared: PortfolioShared,
+    /// Seed stream for the unseeded [`IsingSolver`] entry points.
+    seeds: Pcg32,
+}
+
+impl SolverPortfolio {
+    /// Build from `settings.portfolio` (+ `settings.cobi` for the device
+    /// backend; `rt` only for COBI-HLO). `shared` connects this instance
+    /// to a fleet-wide cache/metrics pair — pass `None` for a standalone
+    /// portfolio with private state.
+    pub fn from_settings(
+        settings: &Settings,
+        seed: u64,
+        rt: Option<&ArtifactRuntime>,
+        shared: Option<PortfolioShared>,
+    ) -> Result<Self> {
+        let cfg = &settings.portfolio;
+        let policy: RoutePolicy = cfg.policy.parse().map_err(anyhow::Error::msg)?;
+        let static_backend = BackendKind::from_name(&cfg.static_backend).with_context(|| {
+            format!(
+                "unknown portfolio static_backend '{}' \
+                 (expected cobi|tabu|sa|greedy|exact)",
+                cfg.static_backend
+            )
+        })?;
+        ensure!(
+            (0.0..=1.0).contains(&cfg.epsilon),
+            "portfolio epsilon {} outside [0, 1]",
+            cfg.epsilon
+        );
+        let exact_max_n = cfg.exact_max_n.min(EXACT_HARD_CAP);
+        Ok(Self {
+            policy,
+            static_backend,
+            epsilon: cfg.epsilon,
+            exact_max_n,
+            latency_weight: cfg.latency_weight,
+            cache_enabled: cfg.cache,
+            cobi: CobiDevice::from_config(&settings.cobi, seed ^ 0xF0_1170, rt)?,
+            tabu: TabuSolver::seeded(seed ^ 0x7AB),
+            sa: SaSolver::seeded(seed ^ 0x5A),
+            greedy: GreedyDescent::new(),
+            exact: ExactIsingSolver::new(exact_max_n),
+            shared: shared.unwrap_or_else(|| PortfolioShared::new(cfg)),
+            seeds: Pcg32::new(seed, 0x5EED0F),
+        })
+    }
+
+    /// The shared cache/metrics this portfolio feeds.
+    pub fn shared(&self) -> &PortfolioShared {
+        &self.shared
+    }
+
+    /// Whether `b` may solve `sample` at all (array limits, enumeration
+    /// ceilings); the software heuristics accept anything.
+    fn eligible(&self, b: BackendKind, sample: &Ising) -> bool {
+        match b {
+            BackendKind::Cobi => self.cobi.validate(sample).is_ok(),
+            BackendKind::Exact => sample.n <= self.exact_max_n,
+            BackendKind::Tabu | BackendKind::Sa | BackendKind::Greedy => true,
+        }
+    }
+
+    /// Route one request (all instances of a group share the route; they
+    /// are refinement siblings of one window, hence the same size).
+    fn choose(&self, sample: &Ising, seed: u64) -> BackendKind {
+        let n = sample.n;
+        match self.policy {
+            // a static exact backend cannot enumerate oversized windows;
+            // degrade to Tabu — deterministic (a function of n alone), so
+            // the static replay contract is preserved — instead of
+            // failing every such request at solve time
+            RoutePolicy::Static
+                if self.static_backend == BackendKind::Exact && n > self.exact_max_n =>
+            {
+                BackendKind::Tabu
+            }
+            RoutePolicy::Static => self.static_backend,
+            RoutePolicy::SizeTiered => {
+                if n <= self.exact_max_n {
+                    BackendKind::Exact
+                } else if self.cobi.validate(sample).is_ok() {
+                    BackendKind::Cobi
+                } else {
+                    BackendKind::Tabu
+                }
+            }
+            RoutePolicy::Bandit => {
+                let eligible: Vec<BackendKind> = BackendKind::ALL
+                    .into_iter()
+                    .filter(|&b| self.eligible(b, sample))
+                    .collect();
+                // tabu/sa/greedy are always eligible, so never empty
+                let mut rng = Pcg32::new(seed, BANDIT_STREAM);
+                if rng.f64() < self.epsilon {
+                    return eligible[rng.below(eligible.len() as u32) as usize];
+                }
+                let m = self.shared.metrics.lock().unwrap();
+                if let Some(&b) = eligible.iter().find(|&&b| m.stats.cell(b, n).count == 0) {
+                    return b; // optimism: try unvisited backends first
+                }
+                eligible
+                    .iter()
+                    .copied()
+                    .min_by(|&a, &b| {
+                        let sa = m.stats.score(a, n, self.latency_weight).unwrap();
+                        let sb = m.stats.score(b, n, self.latency_weight).unwrap();
+                        sa.partial_cmp(&sb).expect("finite bandit scores")
+                    })
+                    .expect("eligible backends nonempty")
+            }
+        }
+    }
+
+    /// Solve one seeded group: probe the cache, route the remainder.
+    /// Returns the results plus this group's telemetry, which the caller
+    /// commits only once the WHOLE dispatch has succeeded — a failed
+    /// coalesced dispatch is retried per request by the pool, and eager
+    /// commits would double-count the groups that had already succeeded
+    /// inside the failed dispatch. (Cache inserts stay eager: re-inserting
+    /// an identical instance is an in-place update, and a retried group
+    /// then exact-hits its own earlier results — same bytes, less work.)
+    fn solve_group_inner(
+        &mut self,
+        g: &SeededGroup<'_>,
+    ) -> Result<(Vec<SolveResult>, GroupTelemetry)> {
+        ensure!(!g.instances.is_empty(), "empty solve group");
+        let backend = self.choose(&g.instances[0], g.seed);
+        let count = g.instances.len();
+
+        let mut out: Vec<Option<SolveResult>> = vec![None; count];
+        // (instance index, optional warm-start hint) still to solve
+        let mut todo: Vec<(usize, Option<Vec<i8>>)> = Vec::with_capacity(count);
+        if self.cache_enabled {
+            for (i, inst) in g.instances.iter().enumerate() {
+                match self.shared.cache.lookup(inst) {
+                    CacheOutcome::Exact(r) => out[i] = Some(r),
+                    CacheOutcome::Warm(init) => todo.push((i, Some(init))),
+                    CacheOutcome::Miss => todo.push((i, None)),
+                }
+            }
+        } else {
+            todo.extend((0..count).map(|i| (i, None)));
+        }
+
+        let t0 = Instant::now();
+        let solved_count = todo.len();
+        if !todo.is_empty() {
+            match backend {
+                BackendKind::Cobi if !self.cache_enabled => {
+                    // the PR-1 pool path, bit for bit: one seeded dispatch
+                    // over the whole group (the static-policy byte-identity
+                    // contract rides on this arm)
+                    let res = self
+                        .cobi
+                        .solve_groups_seeded(&[SeededGroup {
+                            instances: g.instances,
+                            seed: g.seed,
+                        }])?
+                        .pop()
+                        .expect("one group in, one group out");
+                    for (slot, r) in out.iter_mut().zip(res) {
+                        *slot = Some(r);
+                    }
+                }
+                BackendKind::Cobi => {
+                    for (i, hint) in &todo {
+                        let r = self.cobi.solve_seeded_warm(
+                            &g.instances[*i],
+                            mix(g.seed, *i as u64),
+                            hint.as_deref(),
+                        )?;
+                        out[*i] = Some(r);
+                    }
+                }
+                BackendKind::Tabu => {
+                    self.tabu.reseed(g.seed);
+                    for (i, hint) in &todo {
+                        let inst = &g.instances[*i];
+                        out[*i] = Some(match hint {
+                            Some(h) => self.tabu.solve_from(inst, h),
+                            None => self.tabu.solve(inst),
+                        });
+                    }
+                }
+                BackendKind::Sa => {
+                    self.sa.reseed(g.seed);
+                    for (i, hint) in &todo {
+                        let inst = &g.instances[*i];
+                        out[*i] = Some(match hint {
+                            Some(h) => self.sa.solve_from(inst, h),
+                            None => self.sa.solve(inst),
+                        });
+                    }
+                }
+                BackendKind::Greedy => {
+                    for (i, hint) in &todo {
+                        let inst = &g.instances[*i];
+                        out[*i] = Some(match hint {
+                            Some(h) => self.greedy.solve_from(inst, h),
+                            None => self.greedy.solve(inst),
+                        });
+                    }
+                }
+                BackendKind::Exact => {
+                    for (i, _) in &todo {
+                        out[*i] = Some(self.exact.solve_checked(&g.instances[*i])?);
+                    }
+                }
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+
+        if self.cache_enabled {
+            for (i, _) in &todo {
+                if let Some(r) = &out[*i] {
+                    self.shared.cache.insert(&g.instances[*i], r);
+                }
+            }
+        }
+
+        let mut samples = Vec::with_capacity(solved_count);
+        if solved_count > 0 {
+            let per_instance = wall / solved_count as f64;
+            for (i, _) in &todo {
+                if let Some(r) = &out[*i] {
+                    let n = g.instances[*i].n;
+                    samples.push((n, r.energy / n.max(1) as f64, per_instance));
+                }
+            }
+        }
+        let telemetry = GroupTelemetry {
+            backend,
+            wall: (solved_count > 0).then_some(wall),
+            samples,
+        };
+
+        let results = out
+            .into_iter()
+            .map(|r| r.expect("every instance solved or cache-served"))
+            .collect();
+        Ok((results, telemetry))
+    }
+
+    /// Apply the telemetry of a fully successful dispatch to the
+    /// fleet-shared metrics.
+    fn commit(&self, deltas: &[GroupTelemetry]) {
+        let mut m = self.shared.metrics.lock().unwrap();
+        for d in deltas {
+            m.routes[d.backend.index()] += 1;
+            if let Some(w) = d.wall {
+                m.backend_latency[d.backend.index()].record(w);
+            }
+            for &(n, energy_per_spin, latency_s) in &d.samples {
+                m.stats.record(d.backend, n, energy_per_spin, latency_s);
+            }
+        }
+    }
+
+    /// Solve a single instance under an explicit request seed — the
+    /// seeded, `Result`-carrying counterpart of [`IsingSolver::solve`].
+    pub fn solve_one(&mut self, ising: &Ising, seed: u64) -> Result<SolveResult> {
+        let (mut res, telemetry) = self.solve_group_inner(&SeededGroup {
+            instances: std::slice::from_ref(ising),
+            seed,
+        })?;
+        self.commit(std::slice::from_ref(&telemetry));
+        Ok(res.pop().expect("one instance in, one result out"))
+    }
+}
+
+/// Per-group telemetry, buffered until the whole dispatch succeeds (see
+/// [`SolverPortfolio::solve_group_inner`]).
+struct GroupTelemetry {
+    backend: BackendKind,
+    /// Wall seconds of the backend dispatch; `None` when every instance
+    /// was served from the cache.
+    wall: Option<f64>,
+    /// (n, energy-per-spin, per-instance latency) per fresh solve.
+    samples: Vec<(usize, f64, f64)>,
+}
+
+impl PoolSolver for SolverPortfolio {
+    fn name(&self) -> &'static str {
+        "portfolio"
+    }
+
+    fn solve_groups(&mut self, groups: &[SeededGroup<'_>]) -> Result<Vec<Vec<SolveResult>>> {
+        let mut out = Vec::with_capacity(groups.len());
+        let mut deltas = Vec::with_capacity(groups.len());
+        for g in groups {
+            let (results, telemetry) = self.solve_group_inner(g)?;
+            out.push(results);
+            deltas.push(telemetry);
+        }
+        self.commit(&deltas);
+        Ok(out)
+    }
+}
+
+impl IsingSolver for SolverPortfolio {
+    fn name(&self) -> &'static str {
+        "portfolio"
+    }
+
+    fn solve(&mut self, ising: &Ising) -> SolveResult {
+        let seed = self.seeds.next_u64();
+        self.solve_one(ising, seed)
+            .expect("portfolio solve failed (instance not solvable on the routed backend)")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cobi::testutil::quantized_glass;
+    use crate::corpus::benchmark_set;
+    use crate::sched::{doc_seed, summarize_sequential, summarize_with_pool, DevicePool};
+    use crate::solvers::exact::ising_ground_exhaustive;
+
+    fn portfolio_settings(policy: &str, backend: &str, cache: bool) -> Settings {
+        let mut s = Settings::default();
+        s.portfolio.enabled = true;
+        s.portfolio.policy = policy.into();
+        s.portfolio.static_backend = backend.into();
+        s.portfolio.cache = cache;
+        s
+    }
+
+    fn standalone(policy: &str, backend: &str, cache: bool) -> SolverPortfolio {
+        SolverPortfolio::from_settings(&portfolio_settings(policy, backend, cache), 9, None, None)
+            .unwrap()
+    }
+
+    #[test]
+    fn static_cobi_portfolio_is_byte_identical_to_sequential_on_bench_10() {
+        // the acceptance pin: `[portfolio] policy = "static"` + cache
+        // disabled through the pool == the PR-1 sequential path, byte for
+        // byte, on every bench_10 document
+        let mut s = portfolio_settings("static", "cobi", false);
+        s.pipeline.iterations = 3;
+        s.sched.devices = 2;
+        let set = benchmark_set("bench_10").unwrap();
+        let pool = DevicePool::start(&s, None).unwrap();
+        assert_eq!(pool.backend, "portfolio");
+        for doc in &set.documents {
+            let mut cfg = s.pipeline.clone();
+            cfg.summary_len = set.summary_len;
+            cfg.seed = doc_seed(cfg.seed, &doc.id);
+
+            let mut client = pool.client(cfg.seed);
+            let pooled = summarize_with_pool(doc, &cfg, &mut client).unwrap();
+
+            let mut dev = CobiDevice::from_config(&s.cobi, 0, None).unwrap();
+            let sequential = summarize_sequential(doc, &cfg, &mut dev).unwrap();
+
+            assert_eq!(pooled.selected, sequential.selected, "{}", doc.id);
+            assert_eq!(pooled.sentences, sequential.sentences, "{}", doc.id);
+            assert_eq!(
+                pooled.objective.to_bits(),
+                sequential.objective.to_bits(),
+                "{}",
+                doc.id
+            );
+        }
+        let m = pool.portfolio_metrics().expect("portfolio metrics");
+        assert_eq!(m.total_routes(), m.route_count(BackendKind::Cobi));
+        assert_eq!(m.cache.lookups, 0, "cache must be fully bypassed");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn exact_cache_hits_serve_stored_results() {
+        let mut p = standalone("static", "tabu", true);
+        let inst = quantized_glass(50, 12);
+        let a = p.solve_one(&inst, 7).unwrap();
+        let b = p.solve_one(&inst, 7).unwrap();
+        assert_eq!(a.spins, b.spins);
+        assert_eq!(a.energy, b.energy);
+        let m = p.shared().snapshot();
+        assert_eq!(m.cache.exact_hits, 1);
+        assert_eq!(m.cache.misses, 1);
+        assert_eq!(m.cache.entries, 1);
+    }
+
+    #[test]
+    fn near_hits_warm_start_same_size_instances() {
+        let mut p = standalone("static", "tabu", true);
+        let a = quantized_glass(60, 14);
+        let b = quantized_glass(61, 14); // same n, different coefficients
+        p.solve_one(&a, 1).unwrap();
+        let rb = p.solve_one(&b, 2).unwrap();
+        assert!((b.energy(&rb.spins) - rb.energy).abs() < 1e-9);
+        let m = p.shared().snapshot();
+        assert_eq!(m.cache.warm_hits, 1);
+        assert_eq!(m.cache.entries, 2);
+    }
+
+    #[test]
+    fn size_tiered_routes_tiny_instances_to_exact() {
+        let mut p = standalone("size-tiered", "cobi", false);
+        let inst = quantized_glass(70, 10);
+        let r = p.solve_one(&inst, 3).unwrap();
+        let (ground, _, _) = ising_ground_exhaustive(&inst);
+        assert!((r.energy - ground).abs() < 1e-9, "exact route must be optimal");
+        let m = p.shared().snapshot();
+        assert_eq!(m.route_count(BackendKind::Exact), 1);
+        assert_eq!(m.total_routes(), 1);
+    }
+
+    #[test]
+    fn size_tiered_routes_chip_sized_instances_to_cobi() {
+        let mut p = standalone("size-tiered", "cobi", false);
+        let inst = quantized_glass(71, 24); // > exact_max_n, <= 59 spins
+        p.solve_one(&inst, 4).unwrap();
+        assert_eq!(p.shared().snapshot().route_count(BackendKind::Cobi), 1);
+    }
+
+    #[test]
+    fn static_exact_degrades_to_tabu_on_oversized_windows() {
+        // static_backend = "exact" must not fail every P=20 window at
+        // solve time: oversized instances route to tabu deterministically
+        let mut p = standalone("static", "exact", false);
+        let small = quantized_glass(72, 10);
+        let big = quantized_glass(73, 24); // > exact_max_n
+        p.solve_one(&small, 1).unwrap();
+        p.solve_one(&big, 2).unwrap();
+        let m = p.shared().snapshot();
+        assert_eq!(m.route_count(BackendKind::Exact), 1);
+        assert_eq!(m.route_count(BackendKind::Tabu), 1);
+    }
+
+    #[test]
+    fn bandit_routing_is_deterministic_given_seeds() {
+        let run = || {
+            let mut s = portfolio_settings("bandit", "cobi", false);
+            s.portfolio.epsilon = 0.3;
+            let mut p = SolverPortfolio::from_settings(&s, 9, None, None).unwrap();
+            let mut spins = Vec::new();
+            for k in 0..8u64 {
+                let inst = quantized_glass(80 + k, 12);
+                spins.push(p.solve_one(&inst, 1000 + k).unwrap().spins);
+            }
+            (spins, p.shared().snapshot().routes)
+        };
+        let (spins_a, routes_a) = run();
+        let (spins_b, routes_b) = run();
+        assert_eq!(spins_a, spins_b);
+        assert_eq!(routes_a, routes_b);
+        // eight requests were routed somewhere
+        assert_eq!(routes_a.iter().sum::<u64>(), 8);
+    }
+
+    #[test]
+    fn pool_devices_share_one_fleet_wide_cache() {
+        let mut s = portfolio_settings("static", "cobi", true);
+        s.sched.devices = 2;
+        let pool = DevicePool::start(&s, None).unwrap();
+        let instances: Vec<Ising> = (0..4).map(|k| quantized_glass(90 + k, 12)).collect();
+        let fresh: Vec<Ising> = (0..4).map(|k| quantized_glass(190 + k, 12)).collect();
+        let mut client = pool.client(0xCAFE);
+        // first request populates the cache...
+        client.submit(instances.clone()).unwrap().wait().unwrap();
+        // ...an identical request exact-hits it, whichever device serves...
+        client.submit(instances.clone()).unwrap().wait().unwrap();
+        // ...and distinct same-size instances warm-hit the near tier
+        client.submit(fresh).unwrap().wait().unwrap();
+        drop(client);
+        let m = pool.portfolio_metrics().expect("portfolio metrics");
+        assert_eq!(m.cache.exact_hits, 4);
+        assert_eq!(m.cache.warm_hits, 4);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn rejects_bad_configuration() {
+        let mut s = portfolio_settings("static", "cobi", false);
+        s.portfolio.policy = "alphazero".into();
+        assert!(SolverPortfolio::from_settings(&s, 1, None, None).is_err());
+        let mut s = portfolio_settings("static", "gurobi", false);
+        s.portfolio.static_backend = "gurobi".into();
+        assert!(SolverPortfolio::from_settings(&s, 1, None, None).is_err());
+        let mut s = portfolio_settings("bandit", "cobi", false);
+        s.portfolio.epsilon = 1.5;
+        assert!(SolverPortfolio::from_settings(&s, 1, None, None).is_err());
+    }
+}

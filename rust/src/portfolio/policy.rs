@@ -1,0 +1,234 @@
+//! Routing policies: which backend solves a given subproblem.
+//!
+//! Three policies, selected by `[portfolio] policy`:
+//!
+//! * `static` — every request goes to one configured backend. This is the
+//!   determinism-preserving mode: with the warm-start cache disabled it is
+//!   byte-identical to hosting that backend directly on the pool.
+//! * `size-tiered` — route by instance size: tiny instances go to the
+//!   exhaustive exact solver (cheaper than annealing and provably
+//!   optimal), chip-sized instances to COBI, oversized ones to Tabu. The
+//!   shape the paper's own evaluation suggests (Fig. 7/8: the best solver
+//!   depends on subproblem size).
+//! * `bandit` — epsilon-greedy over per-(backend, size-bucket) running
+//!   quality/latency statistics updated online, so the fleet learns which
+//!   backend wins for which workload. Exploration draws derive from the
+//!   request seed, so routing is deterministic given the document seed
+//!   (though results still depend on fleet history through the stats).
+
+use std::str::FromStr;
+
+/// Every backend a [`SolverPortfolio`](super::SolverPortfolio) can route
+/// to, in fixed preference order (used to break bandit score ties and to
+/// order "never tried" exploration).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// The simulated COBI oscillator device (native or HLO backend).
+    Cobi,
+    /// Tabu search (the paper's software baseline).
+    Tabu,
+    /// Simulated annealing.
+    Sa,
+    /// Deterministic steepest-descent (fast, hint-friendly).
+    Greedy,
+    /// Exhaustive ground-state enumeration for tiny N.
+    Exact,
+}
+
+impl BackendKind {
+    /// All backends, in the canonical routing/tie-break order.
+    pub const ALL: [BackendKind; 5] = [
+        BackendKind::Cobi,
+        BackendKind::Tabu,
+        BackendKind::Sa,
+        BackendKind::Greedy,
+        BackendKind::Exact,
+    ];
+
+    /// Number of backends (array dimension for per-backend counters).
+    pub const COUNT: usize = Self::ALL.len();
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Cobi => "cobi",
+            BackendKind::Tabu => "tabu",
+            BackendKind::Sa => "sa",
+            BackendKind::Greedy => "greedy",
+            BackendKind::Exact => "exact",
+        }
+    }
+
+    /// Stable index into per-backend counter arrays.
+    pub fn index(self) -> usize {
+        match self {
+            BackendKind::Cobi => 0,
+            BackendKind::Tabu => 1,
+            BackendKind::Sa => 2,
+            BackendKind::Greedy => 3,
+            BackendKind::Exact => 4,
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        Self::ALL.into_iter().find(|b| b.name() == s)
+    }
+}
+
+/// Routing policy (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    Static,
+    SizeTiered,
+    Bandit,
+}
+
+impl FromStr for RoutePolicy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "static" => Ok(RoutePolicy::Static),
+            "size-tiered" => Ok(RoutePolicy::SizeTiered),
+            "bandit" => Ok(RoutePolicy::Bandit),
+            other => Err(format!(
+                "unknown portfolio policy '{other}' (expected static|size-tiered|bandit)"
+            )),
+        }
+    }
+}
+
+/// Upper bounds of the bandit size buckets (spin counts); one overflow
+/// bucket past the last bound. Chosen to straddle the decomposition's
+/// window sizes (P=20, Q=10, final M) and the 59-spin COBI array.
+pub const SIZE_BOUNDS: [usize; 4] = [8, 16, 32, 64];
+
+/// Bucket count, including the overflow bucket.
+pub const N_BUCKETS: usize = SIZE_BOUNDS.len() + 1;
+
+/// Bucket index for an `n`-spin instance.
+pub fn size_bucket(n: usize) -> usize {
+    SIZE_BOUNDS
+        .iter()
+        .position(|&b| n <= b)
+        .unwrap_or(SIZE_BOUNDS.len())
+}
+
+/// Running statistics for one (backend, size-bucket) cell.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CellStats {
+    /// Instances solved by this backend in this bucket.
+    pub count: u64,
+    /// Sum of per-instance `energy / n` (lower is better quality).
+    pub energy_per_spin_sum: f64,
+    /// Sum of per-instance wall-clock seconds.
+    pub latency_sum_s: f64,
+}
+
+impl CellStats {
+    pub fn mean_energy_per_spin(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.energy_per_spin_sum / self.count as f64
+        }
+    }
+
+    pub fn mean_latency_s(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.latency_sum_s / self.count as f64
+        }
+    }
+}
+
+/// Per-(backend, size-bucket) online statistics driving the bandit policy.
+///
+/// Quality is tracked as mean energy per spin: instances inside one bucket
+/// share the quantization grid (integer ±`weight_range`) and similar n, so
+/// the per-spin energies of competing backends are directly comparable —
+/// a cheap stand-in for the paper's TTS curves that needs no per-instance
+/// ground truth.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct BanditStats {
+    cells: [[CellStats; N_BUCKETS]; BackendKind::COUNT],
+}
+
+impl BanditStats {
+    pub fn record(&mut self, b: BackendKind, n: usize, energy_per_spin: f64, latency_s: f64) {
+        let c = &mut self.cells[b.index()][size_bucket(n)];
+        c.count += 1;
+        c.energy_per_spin_sum += energy_per_spin;
+        c.latency_sum_s += latency_s;
+    }
+
+    pub fn cell(&self, b: BackendKind, n: usize) -> &CellStats {
+        &self.cells[b.index()][size_bucket(n)]
+    }
+
+    /// Exploitation score for backend `b` on `n`-spin instances — lower is
+    /// better. `None` until the cell has data (the bandit tries unvisited
+    /// backends first, in [`BackendKind::ALL`] order).
+    pub fn score(&self, b: BackendKind, n: usize, latency_weight: f64) -> Option<f64> {
+        let c = self.cell(b, n);
+        (c.count > 0).then(|| c.mean_energy_per_spin() + latency_weight * c.mean_latency_s())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_names_round_trip() {
+        for b in BackendKind::ALL {
+            assert_eq!(BackendKind::from_name(b.name()), Some(b));
+        }
+        assert_eq!(BackendKind::from_name("gurobi"), None);
+        // indices are a permutation of 0..COUNT
+        let mut seen = [false; BackendKind::COUNT];
+        for b in BackendKind::ALL {
+            assert!(!seen[b.index()]);
+            seen[b.index()] = true;
+        }
+    }
+
+    #[test]
+    fn policies_parse() {
+        assert_eq!("static".parse::<RoutePolicy>().unwrap(), RoutePolicy::Static);
+        assert_eq!(
+            "size-tiered".parse::<RoutePolicy>().unwrap(),
+            RoutePolicy::SizeTiered
+        );
+        assert_eq!("bandit".parse::<RoutePolicy>().unwrap(), RoutePolicy::Bandit);
+        assert!("greedy-epsilon".parse::<RoutePolicy>().is_err());
+    }
+
+    #[test]
+    fn buckets_cover_all_sizes() {
+        assert_eq!(size_bucket(1), 0);
+        assert_eq!(size_bucket(8), 0);
+        assert_eq!(size_bucket(9), 1);
+        assert_eq!(size_bucket(20), 2);
+        assert_eq!(size_bucket(64), 3);
+        assert_eq!(size_bucket(100), 4);
+        assert!(size_bucket(usize::MAX) < N_BUCKETS);
+    }
+
+    #[test]
+    fn bandit_stats_accumulate_and_score() {
+        let mut s = BanditStats::default();
+        assert!(s.score(BackendKind::Tabu, 10, 1.0).is_none());
+        s.record(BackendKind::Tabu, 10, -2.0, 0.010);
+        s.record(BackendKind::Tabu, 10, -4.0, 0.030);
+        let c = s.cell(BackendKind::Tabu, 10);
+        assert_eq!(c.count, 2);
+        assert!((c.mean_energy_per_spin() + 3.0).abs() < 1e-12);
+        assert!((c.mean_latency_s() - 0.020).abs() < 1e-12);
+        let score = s.score(BackendKind::Tabu, 10, 1.0).unwrap();
+        assert!((score - (-3.0 + 0.020)).abs() < 1e-12);
+        // other cells untouched
+        assert!(s.score(BackendKind::Tabu, 40, 1.0).is_none());
+        assert!(s.score(BackendKind::Cobi, 10, 1.0).is_none());
+    }
+}

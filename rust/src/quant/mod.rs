@@ -1,4 +1,14 @@
 //! Quantization: precision grids + rounding schemes (paper §III-B, §IV-A).
+//!
+//! The COBI array programs integer couplings in a narrow DAC range, so
+//! every floating-point Hamiltonian must be mapped onto a grid before it
+//! can run on hardware. [`Precision`] names the grids (the chip's int
+//! ±14, plus 4–8-bit fixed grids for the precision sweep and `fp` as the
+//! no-op); [`quantize`]/[`Rounding`] implement the mapping — the
+//! `stochastic` scheme re-samples the Hamiltonian per refinement
+//! iteration, which is the diversity §IV-A exploits to recover FP-level
+//! quality from low-precision solves. `preprocess` holds the shared
+//! scale/clip step.
 
 pub mod precision;
 pub mod preprocess;

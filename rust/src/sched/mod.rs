@@ -17,6 +17,12 @@
 //!     determinism contract: summaries are a pure function of
 //!     (config, document), independent of pool shape and interleaving.
 //!
+//! The pool's devices host either one fixed backend (cobi/tabu/sa) or,
+//! with `[portfolio] enabled = true`, an adaptive
+//! [`SolverPortfolio`](crate::portfolio::SolverPortfolio) that routes
+//! each request by policy and reuses prior solutions through a
+//! fleet-wide warm-start cache (see `crate::portfolio`).
+//!
 //! See DESIGN.md §Sched for the architecture diagram and the
 //! thread/channel ownership story.
 

@@ -3,16 +3,21 @@
 //!
 //! Thread/channel ownership (DESIGN.md §Sched):
 //!
-//!   PoolClient (one per in-flight document, owned by a service worker)
-//!        │ SyncSender<SolveRequest>           bounded, blocking send
-//!        ▼
-//!   shared MPSC queue ── Arc<Mutex<Receiver>> ── pulled by N device
-//!   threads ("cobi-pool-<i>", each owning one PoolSolver). A device
-//!   takes one request (blocking), then lingers up to `linger_us` —
-//!   WITHOUT holding the queue lock — to coalesce up to `max_coalesce`
-//!   more requests into a single seeded dispatch. Each request carries a
-//!   one-shot response channel; the device answers on it after the
-//!   dispatch.
+//!     PoolClient (one per in-flight document, owned by a service worker)
+//!          │ SyncSender<SolveRequest>           bounded, blocking send
+//!          ▼
+//!     shared MPSC queue ── Arc<Mutex<Receiver>> ── pulled by N device
+//!     threads ("cobi-pool-<i>", each owning one PoolSolver). A device
+//!     takes one request (blocking), then lingers up to `linger_us` —
+//!     WITHOUT holding the queue lock — to coalesce up to `max_coalesce`
+//!     more requests into a single seeded dispatch. Each request carries
+//!     a one-shot response channel; the device answers on it after the
+//!     dispatch.
+//!
+//! With `[portfolio] enabled = true` (or `backend = "portfolio"`) each
+//! device hosts a `SolverPortfolio` instead of a single solver; all
+//! devices share one fleet-wide warm-start cache and one portfolio
+//! telemetry block (`DevicePool::portfolio_metrics`).
 //!
 //! Determinism: a request's results depend only on (instances, request
 //! seed, solver config) — never on which device ran it, what was
@@ -31,6 +36,7 @@ use anyhow::{anyhow, bail, ensure, Result};
 use crate::cobi::{CobiDevice, SeededGroup};
 use crate::config::Settings;
 use crate::ising::Ising;
+use crate::portfolio::{PortfolioMetrics, PortfolioShared, SolverPortfolio};
 use crate::runtime::ArtifactRuntime;
 use crate::service::metrics::Histogram;
 use crate::solvers::sa::SaSolver;
@@ -104,13 +110,17 @@ impl PoolSolver for SaSolver {
 
 /// Solvers the pool can host (per-request determinism implemented).
 pub fn pool_supports(solver: &str) -> bool {
-    matches!(solver, "cobi" | "tabu" | "sa")
+    matches!(solver, "cobi" | "tabu" | "sa" | "portfolio")
 }
 
-/// Resolve the configured pool backend ("auto" = the pipeline solver).
-/// Single source of truth for `Service` routing and `DevicePool::start`.
+/// Resolve the configured pool backend. `[portfolio] enabled = true`
+/// overrides everything (the portfolio wraps all pool-capable backends);
+/// otherwise "auto" means the pipeline solver. Single source of truth for
+/// `Service` routing and `DevicePool::start`.
 pub fn resolved_backend(settings: &Settings) -> &str {
-    if settings.sched.backend == "auto" {
+    if settings.portfolio.enabled {
+        "portfolio"
+    } else if settings.sched.backend == "auto" {
         &settings.pipeline.solver
     } else {
         &settings.sched.backend
@@ -130,14 +140,21 @@ fn build_solver(
     settings: &Settings,
     seed: u64,
     rt: Option<&ArtifactRuntime>,
+    shared: Option<&PortfolioShared>,
 ) -> Result<Box<dyn PoolSolver>> {
     match backend {
         "cobi" => Ok(Box::new(CobiDevice::from_config(&settings.cobi, seed, rt)?)),
         "tabu" => Ok(Box::new(TabuSolver::seeded(seed))),
         "sa" => Ok(Box::new(SaSolver::seeded(seed))),
+        "portfolio" => Ok(Box::new(SolverPortfolio::from_settings(
+            settings,
+            seed,
+            rt,
+            shared.cloned(),
+        )?)),
         other => bail!(
             "solver '{other}' cannot run on the device pool \
-             (supported: cobi, tabu, sa)"
+             (supported: cobi, tabu, sa, portfolio)"
         ),
     }
 }
@@ -296,12 +313,37 @@ impl PoolClient {
 }
 
 /// The pool: owns the device threads and the shared queue's sender side.
+///
+/// # Examples
+///
+/// ```
+/// use cobi_es::config::Settings;
+/// use cobi_es::ising::Ising;
+/// use cobi_es::sched::DevicePool;
+///
+/// let mut settings = Settings::default();
+/// settings.pipeline.solver = "tabu".into();
+/// settings.sched.devices = 1;
+/// let pool = DevicePool::start(&settings, None).unwrap();
+///
+/// let mut inst = Ising::new(6);
+/// inst.set_pair(0, 1, -2.0);
+/// let mut client = pool.client(42); // request seeds keyed by doc seed
+/// let results = client.submit(vec![inst]).unwrap().wait().unwrap();
+/// assert_eq!(results.len(), 1);
+///
+/// drop(client); // all clients must drop before shutdown joins
+/// pool.shutdown();
+/// ```
 pub struct DevicePool {
     tx: Option<SyncSender<SolveRequest>>,
     threads: Vec<std::thread::JoinHandle<()>>,
     metrics: Arc<Mutex<PoolMetrics>>,
     started: Instant,
     pub backend: String,
+    /// Fleet-shared portfolio state (cache + telemetry); present only
+    /// when the resolved backend is "portfolio".
+    portfolio: Option<PortfolioShared>,
 }
 
 impl DevicePool {
@@ -320,13 +362,17 @@ impl DevicePool {
         let metrics = Arc::new(Mutex::new(PoolMetrics::new(devices)));
         let max_coalesce = sched.max_coalesce.max(1);
         let linger = Duration::from_micros(sched.linger_us);
+        // one fleet-wide warm-start cache + telemetry block, shared by
+        // every portfolio device (DESIGN.md decision #11)
+        let portfolio = (backend == "portfolio")
+            .then(|| PortfolioShared::new(&settings.portfolio));
 
         let mut threads = Vec::with_capacity(devices);
         for d in 0..devices {
             // construction seed decorrelates devices that are NOT
             // re-seeded per request (none today — kept for safety)
             let seed = settings.pipeline.seed ^ 0xD00D ^ ((d as u64) << 32);
-            let mut solver = build_solver(&backend, settings, seed, rt)?;
+            let mut solver = build_solver(&backend, settings, seed, rt, portfolio.as_ref())?;
             let rx = rx.clone();
             let metrics = metrics.clone();
             threads.push(
@@ -343,7 +389,14 @@ impl DevicePool {
             metrics,
             started: Instant::now(),
             backend,
+            portfolio,
         })
+    }
+
+    /// Portfolio telemetry snapshot (route counts, cache rates,
+    /// per-backend latency) — `None` unless the backend is "portfolio".
+    pub fn portfolio_metrics(&self) -> Option<PortfolioMetrics> {
+        self.portfolio.as_ref().map(|p| p.snapshot())
     }
 
     pub fn handle(&self) -> PoolHandle {
@@ -641,5 +694,30 @@ mod tests {
         assert!(DevicePool::start(&settings("brute", 1), None).is_err());
         assert!(!pool_supports("exact"));
         assert!(pool_supports("cobi"));
+        assert!(pool_supports("portfolio"));
+    }
+
+    #[test]
+    fn portfolio_backend_pools_and_reports() {
+        let mut s = settings("cobi", 2);
+        s.portfolio.enabled = true;
+        let pool = DevicePool::start(&s, None).unwrap();
+        assert_eq!(pool.backend, "portfolio");
+        let mut client = pool.client(5);
+        let res = client
+            .submit(vec![quantized_glass(11, 10)])
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(res.len(), 1);
+        drop(client);
+        let pm = pool.portfolio_metrics().expect("portfolio metrics");
+        assert_eq!(pm.total_routes(), 1);
+        pool.shutdown();
+
+        // non-portfolio pools expose no portfolio telemetry
+        let plain = DevicePool::start(&settings("tabu", 1), None).unwrap();
+        assert!(plain.portfolio_metrics().is_none());
+        plain.shutdown();
     }
 }

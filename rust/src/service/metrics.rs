@@ -1,5 +1,7 @@
 //! Service metrics: counts + streaming latency summary + per-stage
-//! queue-wait histograms + a snapshot of the device-pool counters.
+//! queue-wait histograms + snapshots of the device-pool counters and the
+//! solver-portfolio telemetry (per-backend route counts, warm-start-cache
+//! hit rates, per-backend latency histograms).
 //!
 //! Latencies are kept two ways: a bounded reservoir (uniform-ish by
 //! decimation) for percentile reporting, and fixed log-spaced
@@ -8,6 +10,7 @@
 
 use std::time::Duration;
 
+use crate::portfolio::PortfolioMetrics;
 use crate::sched::PoolMetrics;
 
 const RESERVOIR: usize = 4096;
@@ -136,6 +139,10 @@ pub struct ServiceMetrics {
     pub solve_hist: Histogram,
     /// Device-pool snapshot (zero-valued when the pool is disabled).
     pub pool: PoolMetrics,
+    /// Solver-portfolio snapshot: per-backend route counts, cache
+    /// hit/warm/miss rates, per-backend latency histograms. `None` unless
+    /// the pool backend is "portfolio".
+    pub portfolio: Option<PortfolioMetrics>,
 }
 
 impl ServiceMetrics {
@@ -172,6 +179,10 @@ impl ServiceMetrics {
         if self.pool.devices > 0 {
             out.push_str(" | ");
             out.push_str(&self.pool.report());
+        }
+        if let Some(p) = &self.portfolio {
+            out.push_str(" | ");
+            out.push_str(&p.report());
         }
         out
     }

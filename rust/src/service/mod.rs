@@ -14,10 +14,11 @@
 //! full, and aggregates latency/throughput metrics.
 //!
 //! Ising solves route through the shared `sched::DevicePool` by default
-//! (pool-capable solvers: cobi/tabu/sa), so subproblems from ALL
+//! (pool-capable solvers: cobi/tabu/sa, or the adaptive "portfolio"
+//! backend when `[portfolio] enabled = true`), so subproblems from ALL
 //! in-flight documents coalesce into batched device dispatches; workers
 //! fall back to private solvers for brute/exact/random or when
-//! `[sched] enabled = false`. See DESIGN.md §Sched.
+//! `[sched] enabled = false`. See DESIGN.md §Sched and §Portfolio.
 
 pub mod metrics;
 pub mod tcp;
@@ -162,11 +163,13 @@ impl Service {
         self.queue_depth
     }
 
-    /// Metrics snapshot, including the device-pool counters when pooled.
+    /// Metrics snapshot, including the device-pool counters (and, when
+    /// the pool hosts the solver portfolio, its route/cache telemetry).
     pub fn metrics(&self) -> ServiceMetrics {
         let mut m = self.metrics.lock().unwrap().clone();
         if let Some(pool) = &self.pool {
             m.pool = pool.metrics();
+            m.portfolio = pool.portfolio_metrics();
         }
         m
     }
@@ -301,6 +304,42 @@ mod tests {
         assert_eq!(m.pool.queue_wait.count(), 20);
         assert!(m.queue_hist.count() >= 20);
         assert!(m.report().contains("occupancy"));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn portfolio_route_surfaces_telemetry_in_service_metrics() {
+        let mut settings = test_settings();
+        settings.portfolio.enabled = true; // static cobi + warm cache
+        let svc = Service::start(&settings).unwrap();
+        assert!(svc.is_pooled());
+        let set = benchmark_set("bench_10").unwrap();
+        // first wave populates the fleet-wide cache...
+        let tickets: Vec<Ticket> = set
+            .documents
+            .iter()
+            .map(|d| svc.submit(d.clone()).unwrap())
+            .collect();
+        for t in tickets {
+            assert_eq!(t.wait().unwrap().selected.len(), 3);
+        }
+        // ...an identical second wave (same doc ids => same doc seeds =>
+        // identical quantized instances) must exact-hit it
+        let tickets: Vec<Ticket> = set
+            .documents
+            .iter()
+            .map(|d| svc.submit(d.clone()).unwrap())
+            .collect();
+        for t in tickets {
+            assert_eq!(t.wait().unwrap().selected.len(), 3);
+        }
+        let m = svc.metrics();
+        assert_eq!(m.completed, 40);
+        let p = m.portfolio.expect("portfolio telemetry");
+        assert_eq!(p.total_routes(), m.pool.requests);
+        assert!(p.cache.lookups > 0);
+        assert!(p.cache.exact_hits > 0, "repeated documents must hit the cache");
+        assert!(m.report().contains("portfolio"));
         svc.shutdown();
     }
 

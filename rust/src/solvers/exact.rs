@@ -10,9 +10,11 @@
 //!     used by the supplementary multiple-optima study and as the test
 //!     oracle for the heuristic solvers.
 
+use anyhow::{ensure, Result};
+
 use crate::ising::{EsProblem, Ising};
 
-use super::SelectionResult;
+use super::{IsingSolver, SelectionResult, SolveResult};
 
 /// Internal: maximize g(S) = Σ_{i∈S} a_i + Σ_{unordered pairs in S} w_ij
 /// over |S| = m, by DFS branch and bound.
@@ -177,6 +179,48 @@ pub fn ising_ground_exhaustive(ising: &Ising) -> (f64, Vec<i8>, u64) {
     (best, best_s, count)
 }
 
+/// [`IsingSolver`] facade over [`ising_ground_exhaustive`] for tiny
+/// instances — the portfolio's exact-for-tiny-N backend. On the ≤ P=20
+/// window sizes the decomposition produces, 2^n enumeration is often
+/// cheaper than annealing and returns a certified ground state.
+/// Deterministic; ties between degenerate optima resolve to the first
+/// configuration in Gray-code order (a fixed, replayable order).
+pub struct ExactIsingSolver {
+    /// Largest instance this solver accepts (clamped to the enumeration
+    /// ceiling of [`ising_ground_exhaustive`]).
+    pub max_n: usize,
+}
+
+impl ExactIsingSolver {
+    pub fn new(max_n: usize) -> Self {
+        Self { max_n: max_n.min(30) }
+    }
+
+    /// Fallible solve: errors (instead of panicking) on oversized
+    /// instances — the portfolio routes through this.
+    pub fn solve_checked(&self, ising: &Ising) -> Result<SolveResult> {
+        ensure!(
+            ising.n <= self.max_n,
+            "instance has {} spins; exact enumeration is capped at {}",
+            ising.n,
+            self.max_n
+        );
+        let (energy, spins, _) = ising_ground_exhaustive(ising);
+        Ok(SolveResult { spins, energy })
+    }
+}
+
+impl IsingSolver for ExactIsingSolver {
+    fn name(&self) -> &'static str {
+        "exact"
+    }
+
+    fn solve(&mut self, ising: &Ising) -> SolveResult {
+        self.solve_checked(ising)
+            .expect("instance too large for the exact backend (route elsewhere)")
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -290,6 +334,27 @@ mod tests {
         let (e, _s, count) = ising_ground_exhaustive(&ising);
         assert_eq!(e, 0.0);
         assert_eq!(count, 16);
+    }
+
+    #[test]
+    fn ising_solver_facade_matches_exhaustive_enumeration() {
+        let mut rng = Pcg32::seeded(26);
+        let mut ising = Ising::new(12);
+        for i in 0..12 {
+            ising.h[i] = rng.range_f32(-1.0, 1.0);
+            for j in (i + 1)..12 {
+                ising.set_pair(i, j, rng.range_f32(-1.0, 1.0));
+            }
+        }
+        let mut solver = ExactIsingSolver::new(16);
+        let r = solver.solve(&ising);
+        let (ge, gs, _) = ising_ground_exhaustive(&ising);
+        assert_eq!(r.spins, gs);
+        assert!((r.energy - ge).abs() < 1e-12);
+        // oversized instances error instead of panicking
+        assert!(ExactIsingSolver::new(8).solve_checked(&ising).is_err());
+        // the ceiling clamps to the enumeration limit
+        assert_eq!(ExactIsingSolver::new(64).max_n, 30);
     }
 
     #[test]

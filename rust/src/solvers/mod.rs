@@ -30,18 +30,101 @@ pub struct SelectionResult {
     pub objective: f64,
 }
 
+/// Tolerance under which two energies (or move deltas) count as exactly
+/// tied for the solver-wide tie-break rule (see [`IsingSolver`]).
+pub const TIE_EPS: f64 = 1e-12;
+
 /// An Ising minimizer. Implementations are deterministic given their
 /// construction seed, so experiments replay exactly.
+///
+/// ## Tie-break rule
+///
+/// Wherever an implementation selects among exactly tied candidates
+/// (move deltas within [`TIE_EPS`], equal-energy configurations), the
+/// **lowest spin index / earliest candidate wins**: argmin/argmax scans
+/// replace the incumbent only on strict improvement, and best-so-far
+/// tracking keeps the earlier result on ties. This is what lets the
+/// solver portfolio route requests without changing summaries under a
+/// static policy — a solver that resolved ties by scan direction or
+/// insertion order would silently diverge between backends. (The COBI
+/// readout obeys the same spirit: an exactly-zero oscillator phase maps
+/// to spin +1, identically in the native and HLO backends.)
+///
+/// # Examples
+///
+/// ```
+/// use cobi_es::ising::Ising;
+/// use cobi_es::solvers::{tabu::TabuSolver, IsingSolver};
+///
+/// let mut ising = Ising::new(4);
+/// ising.set_pair(0, 1, -1.0); // ferromagnetic pair
+/// let mut solver = TabuSolver::seeded(7);
+/// let r = solver.solve(&ising);
+/// assert_eq!(r.spins[0], r.spins[1]); // aligned in the ground state
+/// assert!((ising.energy(&r.spins) - r.energy).abs() < 1e-9);
+/// ```
 pub trait IsingSolver {
     fn name(&self) -> &'static str;
 
     /// Minimize H over spin configurations.
     fn solve(&mut self, ising: &Ising) -> SolveResult;
 
-    /// Solve several independent instances. The default solves them
-    /// sequentially; devices with a batched dispatch path (the COBI HLO
-    /// backend's `anneal_batch` artifact) override it to amortize
-    /// per-call overhead — the refinement loop always goes through here.
+    /// Solve from a warm-start hint: `init` is a full spin configuration
+    /// (length `ising.n`) believed to be near a good solution — typically
+    /// a cached solution of a structurally similar instance
+    /// (`portfolio::WarmStartCache`). The default ignores the hint and
+    /// delegates to [`solve`](IsingSolver::solve); hint-capable solvers
+    /// (Tabu, SA, greedy descent) start their first descent/restart from
+    /// `init` instead of a random configuration. A correct
+    /// implementation never returns a result worse than `init` itself.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use cobi_es::ising::Ising;
+    /// use cobi_es::solvers::{greedy::GreedyDescent, IsingSolver};
+    ///
+    /// let mut ising = Ising::new(2);
+    /// ising.set_pair(0, 1, -1.0);
+    /// // both flips tie from (+1, -1); lowest index wins: spin 0 flips
+    /// let r = GreedyDescent::new().solve_from(&ising, &[1, -1]);
+    /// assert_eq!(r.spins, vec![-1, -1]);
+    /// ```
+    fn solve_from(&mut self, ising: &Ising, init: &[i8]) -> SolveResult {
+        debug_assert_eq!(init.len(), ising.n, "warm-start hint length mismatch");
+        self.solve(ising)
+    }
+
+    /// Solve several independent instances.
+    ///
+    /// ## Batching contract
+    ///
+    /// Exactly one result per instance, in input order, and every result
+    /// must be identical to what the same solver would have produced by
+    /// calling [`solve`](IsingSolver::solve) on the instances one at a
+    /// time, in order — batching may amortize dispatch cost but must not
+    /// change results (for stochastic solvers that means consuming the
+    /// RNG stream in instance order). The default solves sequentially;
+    /// devices with a batched dispatch path (the COBI HLO backend's
+    /// `anneal_batch` artifact) override it to amortize per-call
+    /// overhead — the refinement loop always goes through here.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use cobi_es::ising::Ising;
+    /// use cobi_es::solvers::{tabu::TabuSolver, IsingSolver};
+    ///
+    /// let mut a = Ising::new(3);
+    /// a.h[0] = 1.0;
+    /// let mut b = Ising::new(3);
+    /// b.h[2] = -1.0;
+    /// let batched = TabuSolver::seeded(5).solve_batch(&[&a, &b]);
+    /// // identical to sequential solves on a same-seeded solver
+    /// let mut seq = TabuSolver::seeded(5);
+    /// assert_eq!(batched[0].spins, seq.solve(&a).spins);
+    /// assert_eq!(batched[1].spins, seq.solve(&b).spins);
+    /// ```
     fn solve_batch(&mut self, instances: &[&Ising]) -> Vec<SolveResult> {
         instances.iter().map(|i| self.solve(i)).collect()
     }
@@ -107,6 +190,47 @@ mod tests {
                 assert!((l[i] - fresh[i]).abs() < 1e-9, "i={i}");
             }
         }
+    }
+
+    #[test]
+    fn warm_started_solvers_never_lose_a_supplied_ground_state() {
+        // unique ground state: h = [1, -1, 1], no couplings -> [-1, 1, -1].
+        // A warm start AT the ground state must come back unchanged from
+        // every hint-capable solver (best-so-far keeps the earlier result
+        // on ties, and nothing beats the ground state strictly).
+        let mut ising = Ising::new(3);
+        ising.h = vec![1.0, -1.0, 1.0];
+        let ground = vec![-1i8, 1, -1];
+        let results = [
+            crate::solvers::tabu::TabuSolver::seeded(3).solve_from(&ising, &ground),
+            crate::solvers::sa::SaSolver::seeded(3).solve_from(&ising, &ground),
+            crate::solvers::greedy::GreedyDescent::new().solve_from(&ising, &ground),
+        ];
+        for r in results {
+            assert_eq!(r.spins, ground);
+            assert!((r.energy + 3.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn tied_flips_resolve_to_the_lowest_index() {
+        // 2-spin ferromagnet probed from (+1, -1): flipping either spin
+        // gains exactly the same energy. The documented tie-break rule
+        // (lowest index wins) means spin 0 flips, landing in (-1, -1) —
+        // never (+1, +1), which a highest-index scan would produce.
+        let mut ising = Ising::new(2);
+        ising.set_pair(0, 1, -1.0);
+        let g = crate::solvers::greedy::GreedyDescent::new().solve_from(&ising, &[1, -1]);
+        assert_eq!(g.spins, vec![-1, -1]);
+        let mut tabu = crate::solvers::tabu::TabuSolver::new(
+            1,
+            crate::solvers::tabu::TabuConfig {
+                restarts: 1,
+                ..Default::default()
+            },
+        );
+        let t = tabu.solve_from(&ising, &[1, -1]);
+        assert_eq!(t.spins, vec![-1, -1]);
     }
 
     #[test]

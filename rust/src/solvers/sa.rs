@@ -53,10 +53,19 @@ impl SaSolver {
     }
 
     fn run_once(&mut self, ising: &Ising) -> SolveResult {
-        let n = ising.n;
-        let mut s: Vec<i8> = (0..n)
+        let init: Vec<i8> = (0..ising.n)
             .map(|_| if self.rng.bernoulli(0.5) { 1 } else { -1 })
             .collect();
+        self.run_from(ising, init)
+    }
+
+    /// One annealing run from an explicit start configuration (warm-start
+    /// path: no init randomness is drawn; best-so-far starts at `init`,
+    /// so the result is never worse than the hint).
+    fn run_from(&mut self, ising: &Ising, init: Vec<i8>) -> SolveResult {
+        let n = ising.n;
+        debug_assert_eq!(init.len(), n);
+        let mut s = init;
         let mut l = init_local_fields(ising, &s);
         let mut e = ising.energy(&s);
         let mut best_e = e;
@@ -101,6 +110,20 @@ impl IsingSolver for SaSolver {
             }
         }
         best.unwrap()
+    }
+
+    fn solve_from(&mut self, ising: &Ising, init: &[i8]) -> SolveResult {
+        debug_assert_eq!(init.len(), ising.n, "warm-start hint length mismatch");
+        // first restart from the hint, remaining restarts cold; strict
+        // `<` keeps the warm result on exact ties
+        let mut best = self.run_from(ising, init.to_vec());
+        for _ in 1..self.cfg.restarts.max(1) {
+            let r = self.run_once(ising);
+            if r.energy < best.energy {
+                best = r;
+            }
+        }
+        best
     }
 }
 

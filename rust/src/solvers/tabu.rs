@@ -56,13 +56,22 @@ impl TabuSolver {
     }
 
     fn run_once(&mut self, ising: &Ising) -> SolveResult {
+        let init: Vec<i8> = (0..ising.n)
+            .map(|_| if self.rng.bernoulli(0.5) { 1 } else { -1 })
+            .collect();
+        self.run_from(ising, init)
+    }
+
+    /// One tabu run starting from an explicit configuration (the
+    /// warm-start path draws no init randomness; the RNG is touched only
+    /// by all-tabu kicks, exactly as in a cold run).
+    fn run_from(&mut self, ising: &Ising, init: Vec<i8>) -> SolveResult {
         let n = ising.n;
+        debug_assert_eq!(init.len(), n);
         let tenure = ((n as f64 * self.cfg.tenure_frac) as usize).max(4);
         let max_moves = self.cfg.moves_per_spin * n;
 
-        let mut s: Vec<i8> = (0..n)
-            .map(|_| if self.rng.bernoulli(0.5) { 1 } else { -1 })
-            .collect();
+        let mut s = init;
         let mut l = init_local_fields(ising, &s);
         let mut e = ising.energy(&s);
         let mut best_e = e;
@@ -71,7 +80,9 @@ impl TabuSolver {
         let mut tabu_until = vec![0usize; n];
 
         for mv in 0..max_moves {
-            // pick the best admissible flip
+            // pick the best admissible flip; strict `<` means exact ties
+            // keep the earlier (lowest-index) candidate — the solver-wide
+            // tie-break rule (see `IsingSolver` docs)
             let mut chosen: Option<(usize, f64)> = None;
             for i in 0..n {
                 let delta = -2.0 * s[i] as f64 * l[i];
@@ -79,9 +90,8 @@ impl TabuSolver {
                 if !admissible {
                     continue;
                 }
-                match chosen {
-                    Some((_, d)) if d <= delta => {}
-                    _ => chosen = Some((i, delta)),
+                if chosen.map_or(true, |(_, d)| delta < d) {
+                    chosen = Some((i, delta));
                 }
             }
             // all moves tabu (tiny n): take a random kick
@@ -121,6 +131,20 @@ impl IsingSolver for TabuSolver {
             }
         }
         best.unwrap()
+    }
+
+    fn solve_from(&mut self, ising: &Ising, init: &[i8]) -> SolveResult {
+        debug_assert_eq!(init.len(), ising.n, "warm-start hint length mismatch");
+        // first restart from the hint, remaining restarts cold; strict
+        // `<` keeps the warm result on exact ties
+        let mut best = self.run_from(ising, init.to_vec());
+        for _ in 1..self.cfg.restarts.max(1) {
+            let r = self.run_once(ising);
+            if r.energy < best.energy {
+                best = r;
+            }
+        }
+        best
     }
 }
 

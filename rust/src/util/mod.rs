@@ -1,4 +1,12 @@
 //! Shared substrates: PRNG, statistics, benchmarking, property testing.
+//!
+//! The vendored crate set is deliberately tiny (DESIGN.md decision #5),
+//! so the infrastructure other repos pull from crates.io lives here:
+//! `rng` (seeded PCG/SplitMix streams — the root of the repo-wide
+//! determinism story), `stats` (means/quantiles shared by experiments
+//! and metrics), `bench` (the criterion-substitute harness behind every
+//! `benches/` target, env-tunable via `COBI_BENCH_*`), and `proptest`
+//! (a minimal seeded property-testing loop used by the unit tests).
 
 pub mod bench;
 pub mod proptest;
