@@ -1,14 +1,22 @@
 //! Microbenchmarks of the L3 hot paths — the measurement side of the
 //! EXPERIMENTS.md §Perf loop. Each case is one logical operation on
 //! paper-sized inputs (n = 20 problems, 64-spin padded device instances).
+//!
+//! The `*-int` cases measure the integer-domain solve pipeline (ISSUE 3:
+//! `QuantIsing` + `quantize_into` + integer `SolverKernel` loops) against
+//! their `f32`/`f64` twins on the SAME quantized instance — the outputs
+//! are bit-identical (pinned by unit tests), so the ratio is pure kernel
+//! speed. Set `COBI_BENCH_RECORD=1` to overwrite `BENCH_hotpath.json`
+//! with the measured medians and ratios.
 
 use cobi_es::cobi::CobiDevice;
 use cobi_es::config::CobiConfig;
-use cobi_es::ising::{formulate, EsProblem, Formulation, Ising};
-use cobi_es::quant::{quantize, Precision, Rounding};
+use cobi_es::ising::{formulate, EsProblem, Formulation, Ising, QuantIsing};
+use cobi_es::quant::{quantize, quantize_into, Precision, Rounding};
+use cobi_es::refine::{refine, refine_batched, RefineConfig};
 use cobi_es::solvers::oscillator::{anneal, OscillatorConfig, OscillatorSolver};
 use cobi_es::solvers::tabu::TabuSolver;
-use cobi_es::solvers::{brute, exact, IsingSolver};
+use cobi_es::solvers::{brute, exact, IsingSolver, QuantSolve};
 use cobi_es::util::bench::{black_box, Bencher};
 use cobi_es::util::rng::Pcg32;
 
@@ -26,14 +34,29 @@ fn random_es(seed: u64, n: usize, m: usize) -> EsProblem {
     EsProblem { mu, beta, lambda: 0.6, m }
 }
 
+fn median_s(b: &Bencher, name: &str) -> f64 {
+    b.results
+        .iter()
+        .find(|r| r.name == name)
+        .map(|r| r.median.as_secs_f64())
+        .unwrap_or(f64::NAN)
+}
+
 fn main() {
     let mut b = Bencher::new();
     let p20 = random_es(1, 20, 6);
     let p100 = random_es(2, 100, 6);
+    let p64 = random_es(9, 64, 8);
     let es = formulate(&p20, Formulation::Improved);
+    let es64 = formulate(&p64, Formulation::Improved);
     let mut rng = Pcg32::seeded(3);
     let quantized = quantize(&es.ising, Precision::CobiInt, Rounding::Stochastic, &mut rng);
+    let quantized64 = quantize(&es64.ising, Precision::CobiInt, Rounding::Stochastic, &mut rng);
     let padded: Ising = quantized.padded(64);
+    let mut qint = QuantIsing::default();
+    assert!(qint.try_copy_from(&quantized));
+    let mut qint64 = QuantIsing::default();
+    assert!(qint64.try_copy_from(&quantized64));
 
     // formulation + quantization (per refinement iteration)
     b.bench("formulate/improved n=20", || {
@@ -43,6 +66,17 @@ fn main() {
     b.bench("quantize/stochastic int14 n=20", || {
         black_box(quantize(&es.ising, Precision::CobiInt, Rounding::Stochastic, &mut qrng));
     });
+    let mut qrng_int = Pcg32::seeded(4);
+    let mut qbuf = QuantIsing::default();
+    b.bench("quantize_into/stochastic int14 n=20 (int)", || {
+        black_box(quantize_into(
+            &es.ising,
+            Precision::CobiInt,
+            Rounding::Stochastic,
+            &mut qrng_int,
+            &mut qbuf,
+        ));
+    });
 
     // objective evaluation (the 18.9 µs/iteration term of Eq. 15)
     let sel = [0usize, 3, 7, 11, 15, 19];
@@ -50,11 +84,47 @@ fn main() {
         black_box(p20.objective(&sel));
     });
 
-    // solvers
-    let mut tabu = TabuSolver::seeded(5);
-    b.bench("tabu/solve n=20 int14", || {
-        black_box(tabu.solve(&quantized));
+    // solvers — f64 reference kernel vs integer kernel, same instance,
+    // bit-identical outputs
+    let mut tabu_f = TabuSolver::seeded(5);
+    b.bench("tabu/solve n=20 int14 (f64 kernel)", || {
+        black_box(tabu_f.solve_reference_f64(&quantized));
     });
+    let mut tabu_i = TabuSolver::seeded(5);
+    let mut spins_out: Vec<i8> = Vec::new();
+    b.bench("tabu/solve n=20 int14 (int kernel)", || {
+        black_box(tabu_i.solve_quant_into(&qint, &mut spins_out));
+    });
+    let mut tabu_f64_64 = TabuSolver::seeded(5);
+    b.bench("tabu/solve n=64 int14 (f64 kernel)", || {
+        black_box(tabu_f64_64.solve_reference_f64(&quantized64));
+    });
+    let mut tabu_i64 = TabuSolver::seeded(5);
+    b.bench("tabu/solve n=64 int14 (int kernel)", || {
+        black_box(tabu_i64.solve_quant_into(&qint64, &mut spins_out));
+    });
+
+    // one full refinement run (quantize → solve → repair → score,
+    // 4 iterations): the batched f32 path vs the integer fast path
+    let refine_cfg = RefineConfig {
+        formulation: Formulation::Improved,
+        precision: Precision::CobiInt,
+        rounding: Rounding::Stochastic,
+        iterations: 4,
+    };
+    let mut refine_solver_f = TabuSolver::seeded(6);
+    let mut refine_rng_f = Pcg32::seeded(7);
+    b.bench("refine/tabu n=20 x4 (f32 batch path)", || {
+        black_box(
+            refine_batched(&p20, &refine_cfg, &mut refine_solver_f, &mut refine_rng_f).unwrap(),
+        );
+    });
+    let mut refine_solver_i = TabuSolver::seeded(6);
+    let mut refine_rng_i = Pcg32::seeded(7);
+    b.bench("refine/tabu n=20 x4 (int fast path)", || {
+        black_box(refine(&p20, &refine_cfg, &mut refine_solver_i, &mut refine_rng_i).unwrap());
+    });
+
     let mut osc = OscillatorSolver::seeded(6);
     b.bench("oscillator/solve n=20 (unpadded)", || {
         black_box(osc.solve(&quantized));
@@ -87,4 +157,50 @@ fn main() {
     });
 
     println!("\n{} cases measured", b.results.len());
+
+    // ---- integer-vs-f32 record (BENCH_hotpath.json) -------------------
+    let quant_f = median_s(&b, "quantize/stochastic int14 n=20");
+    let quant_i = median_s(&b, "quantize_into/stochastic int14 n=20 (int)");
+    let tabu20_f = median_s(&b, "tabu/solve n=20 int14 (f64 kernel)");
+    let tabu20_i = median_s(&b, "tabu/solve n=20 int14 (int kernel)");
+    let tabu64_f = median_s(&b, "tabu/solve n=64 int14 (f64 kernel)");
+    let tabu64_i = median_s(&b, "tabu/solve n=64 int14 (int kernel)");
+    let refine_f = median_s(&b, "refine/tabu n=20 x4 (f32 batch path)");
+    let refine_i = median_s(&b, "refine/tabu n=20 x4 (int fast path)");
+    let ratio = |f: f64, i: f64| f / i;
+    println!(
+        "\nint-vs-f32 speedups: quantize {:.2}x | tabu n=20 {:.2}x | tabu n=64 {:.2}x | refine {:.2}x",
+        ratio(quant_f, quant_i),
+        ratio(tabu20_f, tabu20_i),
+        ratio(tabu64_f, tabu64_i),
+        ratio(refine_f, refine_i),
+    );
+    let json = format!(
+        r#"{{
+  "bench": "hotpath_micro",
+  "status": "recorded",
+  "note": "medians in microseconds; ratio = f32-or-f64 path / integer path on the same quantized instance (outputs bit-identical)",
+  "quantize_n20": {{ "f32_us": {:.3}, "int_us": {:.3}, "ratio": {:.3} }},
+  "tabu_n20": {{ "f64_us": {:.3}, "int_us": {:.3}, "ratio": {:.3} }},
+  "tabu_n64": {{ "f64_us": {:.3}, "int_us": {:.3}, "ratio": {:.3} }},
+  "refine_tabu_n20_x4": {{ "f32_path_us": {:.3}, "int_path_us": {:.3}, "ratio": {:.3} }}
+}}"#,
+        quant_f * 1e6,
+        quant_i * 1e6,
+        ratio(quant_f, quant_i),
+        tabu20_f * 1e6,
+        tabu20_i * 1e6,
+        ratio(tabu20_f, tabu20_i),
+        tabu64_f * 1e6,
+        tabu64_i * 1e6,
+        ratio(tabu64_f, tabu64_i),
+        refine_f * 1e6,
+        refine_i * 1e6,
+        ratio(refine_f, refine_i),
+    );
+    println!("\n{json}");
+    if std::env::var("COBI_BENCH_RECORD").is_ok() {
+        std::fs::write("BENCH_hotpath.json", format!("{json}\n")).expect("write baseline");
+        println!("recorded baseline to BENCH_hotpath.json");
+    }
 }

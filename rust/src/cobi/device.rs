@@ -57,11 +57,33 @@ pub struct SeededGroup<'a> {
     pub seed: u64,
 }
 
+/// Reusable per-device buffers for the solve hot path: the padded
+/// instance (`Ising::padded_into`) plus the phase/noise draw tensors.
+/// Holds no solve state — only capacity — so reuse across requests cannot
+/// affect results (every element is overwritten before use; pinned by the
+/// determinism tests below).
+struct DevScratch {
+    pad: Ising,
+    phase: Vec<f32>,
+    noise: Vec<f32>,
+}
+
+impl Default for DevScratch {
+    fn default() -> Self {
+        Self {
+            pad: Ising::new(0),
+            phase: Vec::new(),
+            noise: Vec::new(),
+        }
+    }
+}
+
 pub struct CobiDevice {
     pub cfg: CobiConfig,
     backend: CobiBackend,
     rng: Pcg32,
     stats: CobiStats,
+    scratch: DevScratch,
 }
 
 impl CobiDevice {
@@ -72,6 +94,7 @@ impl CobiDevice {
             backend: CobiBackend::Native,
             rng: Pcg32::new(seed, DEVICE_STREAM),
             stats: CobiStats::default(),
+            scratch: DevScratch::default(),
         }
     }
 
@@ -100,6 +123,7 @@ impl CobiDevice {
             },
             rng: Pcg32::new(seed, DEVICE_STREAM),
             stats: CobiStats::default(),
+            scratch: DevScratch::default(),
         })
     }
 
@@ -175,48 +199,49 @@ impl CobiDevice {
         self.stats.wall_time_s += wall_s;
     }
 
-    /// One native (unpadded) anneal; draws phase0/noise from `rng`.
+    /// One native (unpadded) anneal; draws phase0/noise from `rng` into
+    /// the reusable scratch tensors (every element overwritten — reuse
+    /// cannot change results, only skip the per-solve allocations).
     fn native_spins(
         osc: &OscillatorConfig,
         noise_amp: f32,
         ising: &Ising,
         rng: &mut Pcg32,
+        scratch: &mut DevScratch,
     ) -> Vec<i8> {
         // §Perf: the native integrator runs UNPADDED — padding spins carry
         // zero coupling and cannot influence the real ones, so simulating
         // them is pure waste ((64/n)^2 extra mat-vec work). Only the HLO
         // artifact needs the fixed 64-spin shape.
         let n = ising.n;
-        let mut phase0 = vec![0.0f32; n];
-        for p in phase0.iter_mut() {
-            *p = rng.range_f32(-std::f32::consts::PI, std::f32::consts::PI);
-        }
-        let mut noise = vec![0.0f32; ANNEAL_STEPS * n];
-        rng.fill_normal(&mut noise, noise_amp);
-        anneal(ising, osc, &phase0, &noise)
+        warm_phase0_into(n, None, rng, &mut scratch.phase);
+        scratch.noise.clear();
+        scratch.noise.resize(ANNEAL_STEPS * n, 0.0);
+        rng.fill_normal(&mut scratch.noise, noise_amp);
+        anneal(ising, osc, &scratch.phase, &scratch.noise)
     }
 
     /// One padded HLO anneal through the single-instance artifact; draws
-    /// phase0/noise from `rng`.
+    /// phase0/noise from `rng`; pads through `scratch.pad` instead of a
+    /// fresh 64×64 matrix per call.
     fn hlo_single_spins(
         exe: &Executable,
         kparams: &[f32; 3],
         noise_amp: f32,
         ising: &Ising,
         rng: &mut Pcg32,
+        scratch: &mut DevScratch,
     ) -> Result<Vec<i8>> {
-        let padded = ising.padded(PADDED_SPINS);
-        let mut phase0 = vec![0.0f32; PADDED_SPINS];
-        for p in phase0.iter_mut() {
-            *p = rng.range_f32(-std::f32::consts::PI, std::f32::consts::PI);
-        }
-        let mut noise = vec![0.0f32; ANNEAL_STEPS * PADDED_SPINS];
-        rng.fill_normal(&mut noise, noise_amp);
+        ising.padded_into(PADDED_SPINS, &mut scratch.pad);
+        warm_phase0_into(PADDED_SPINS, None, rng, &mut scratch.phase);
+        scratch.noise.clear();
+        scratch.noise.resize(ANNEAL_STEPS * PADDED_SPINS, 0.0);
+        rng.fill_normal(&mut scratch.noise, noise_amp);
         let outs = exe.run(&[
-            Arg::F32(&padded.j),
-            Arg::F32(&padded.h),
-            Arg::F32(&phase0),
-            Arg::F32(&noise),
+            Arg::F32(&scratch.pad.j),
+            Arg::F32(&scratch.pad.h),
+            Arg::F32(&scratch.phase),
+            Arg::F32(&scratch.noise),
             Arg::F32(kparams),
         ])?;
         Ok(outs[0][..ising.n]
@@ -236,10 +261,19 @@ impl CobiDevice {
         let noise_amp = self.cfg.noise_amp;
 
         let spins: Vec<i8> = match &self.backend {
-            CobiBackend::Native => Self::native_spins(&osc, noise_amp, ising, &mut self.rng),
+            CobiBackend::Native => {
+                Self::native_spins(&osc, noise_amp, ising, &mut self.rng, &mut self.scratch)
+            }
             CobiBackend::Hlo { single, .. } => {
                 let single = single.clone();
-                Self::hlo_single_spins(&single, &kparams, noise_amp, ising, &mut self.rng)?
+                Self::hlo_single_spins(
+                    &single,
+                    &kparams,
+                    noise_amp,
+                    ising,
+                    &mut self.rng,
+                    &mut self.scratch,
+                )?
             }
         };
         let energy = ising.energy(&spins);
@@ -339,6 +373,7 @@ impl CobiDevice {
         // dispatch errors, so modeled time/energy never undercount work
         // the device really did
         let mut done: u64 = 0;
+        let scratch = &mut self.scratch;
         let run = {
             let out = &mut out;
             let done = &mut done;
@@ -349,7 +384,7 @@ impl CobiDevice {
                             let mut rng = Pcg32::new(g.seed, DEVICE_STREAM);
                             for inst in g.instances {
                                 let spins =
-                                    Self::native_spins(&osc, noise_amp, inst, &mut rng);
+                                    Self::native_spins(&osc, noise_amp, inst, &mut rng, scratch);
                                 let energy = inst.energy(&spins);
                                 out[gi].push(SolveResult { spins, energy });
                                 *done += 1;
@@ -361,7 +396,7 @@ impl CobiDevice {
                             let mut rng = Pcg32::new(g.seed, DEVICE_STREAM);
                             for inst in g.instances {
                                 let spins = Self::hlo_single_spins(
-                                    &exe, &kparams, noise_amp, inst, &mut rng,
+                                    &exe, &kparams, noise_amp, inst, &mut rng, scratch,
                                 )?;
                                 let energy = inst.energy(&spins);
                                 out[gi].push(SolveResult { spins, energy });
@@ -436,36 +471,38 @@ impl CobiDevice {
         let noise_amp = self.cfg.noise_amp;
         let mut rng = Pcg32::new(seed, DEVICE_STREAM);
 
+        let scratch = &mut self.scratch;
         let spins = match &self.backend {
             CobiBackend::Native => {
                 // a cold start draws n phases — matching native_spins
-                let phase0 = warm_phase0(ising.n, init, &mut rng);
-                let mut noise = vec![0.0f32; ANNEAL_STEPS * ising.n];
-                rng.fill_normal(&mut noise, noise_amp);
-                anneal(ising, &osc, &phase0, &noise)
+                warm_phase0_into(ising.n, init, &mut rng, &mut scratch.phase);
+                scratch.noise.clear();
+                scratch.noise.resize(ANNEAL_STEPS * ising.n, 0.0);
+                rng.fill_normal(&mut scratch.noise, noise_amp);
+                anneal(ising, &osc, &scratch.phase, &scratch.noise)
             }
             CobiBackend::Hlo { single, .. } => {
                 let single = single.clone();
-                let padded = ising.padded(PADDED_SPINS);
+                ising.padded_into(PADDED_SPINS, &mut scratch.pad);
                 // a cold start draws PADDED_SPINS phases — matching
                 // hlo_single_spins, so the noise stream stays aligned
                 // with the seeded-group path; a hint draws none and
                 // leaves the padding slots at phase 0
-                let phase0 = match init {
+                match init {
                     Some(_) => {
-                        let mut p = vec![0.0f32; PADDED_SPINS];
-                        p[..ising.n].copy_from_slice(&warm_phase0(ising.n, init, &mut rng));
-                        p
+                        warm_phase0_into(ising.n, init, &mut rng, &mut scratch.phase);
+                        scratch.phase.resize(PADDED_SPINS, 0.0);
                     }
-                    None => warm_phase0(PADDED_SPINS, None, &mut rng),
-                };
-                let mut noise = vec![0.0f32; ANNEAL_STEPS * PADDED_SPINS];
-                rng.fill_normal(&mut noise, noise_amp);
+                    None => warm_phase0_into(PADDED_SPINS, None, &mut rng, &mut scratch.phase),
+                }
+                scratch.noise.clear();
+                scratch.noise.resize(ANNEAL_STEPS * PADDED_SPINS, 0.0);
+                rng.fill_normal(&mut scratch.noise, noise_amp);
                 let outs = single.run(&[
-                    Arg::F32(&padded.j),
-                    Arg::F32(&padded.h),
-                    Arg::F32(&phase0),
-                    Arg::F32(&noise),
+                    Arg::F32(&scratch.pad.j),
+                    Arg::F32(&scratch.pad.h),
+                    Arg::F32(&scratch.phase),
+                    Arg::F32(&scratch.noise),
                     Arg::F32(&kparams),
                 ])?;
                 outs[0][..ising.n]
@@ -495,39 +532,43 @@ impl CobiDevice {
     }
 }
 
-/// Initial phases for a (possibly) warm-started anneal over `n`
-/// oscillators: hinted spins map to their phase encoding (no RNG draws);
-/// a cold start draws uniform phases exactly like the seeded paths.
-fn warm_phase0(n: usize, init: Option<&[i8]>, rng: &mut Pcg32) -> Vec<f32> {
+/// Fill `out` with initial phases for a (possibly) warm-started anneal
+/// over `n` oscillators: hinted spins map to their phase encoding (no RNG
+/// draws); a cold start draws uniform phases exactly like the seeded
+/// paths. `out` is a reusable buffer (cleared, resized, fully written).
+fn warm_phase0_into(n: usize, init: Option<&[i8]>, rng: &mut Pcg32, out: &mut Vec<f32>) {
+    out.clear();
+    out.resize(n, 0.0);
     match init {
-        Some(s) => s
-            .iter()
-            .map(|&v| if v > 0 { 0.0 } else { std::f32::consts::PI })
-            .collect(),
+        Some(s) => {
+            for (x, &v) in out.iter_mut().zip(s) {
+                *x = if v > 0 { 0.0 } else { std::f32::consts::PI };
+            }
+        }
         None => {
-            let mut p = vec![0.0f32; n];
-            for x in p.iter_mut() {
+            for x in out.iter_mut() {
                 *x = rng.range_f32(-std::f32::consts::PI, std::f32::consts::PI);
             }
-            p
         }
     }
 }
 
-/// One instance prepared for a batched HLO dispatch.
-struct Prepared {
+/// One instance prepared for a batched HLO dispatch. Holds the UNPADDED
+/// instance by reference — `pack_chunk` writes its rows straight into the
+/// flat artifact buffers, so the intermediate 64×64 padded matrix the old
+/// path materialized per instance is gone entirely.
+struct Prepared<'a> {
     /// Group index (0 for the unseeded batch path).
     gi: usize,
     /// Instance index within the group.
     ii: usize,
-    padded: Ising,
+    inst: &'a Ising,
     phase0: Vec<f32>,
     noise: Vec<f32>,
 }
 
-impl Prepared {
-    fn draw(gi: usize, ii: usize, inst: &Ising, noise_amp: f32, rng: &mut Pcg32) -> Self {
-        let padded = inst.padded(PADDED_SPINS);
+impl<'a> Prepared<'a> {
+    fn draw(gi: usize, ii: usize, inst: &'a Ising, noise_amp: f32, rng: &mut Pcg32) -> Self {
         let mut phase0 = vec![0.0f32; PADDED_SPINS];
         for p in phase0.iter_mut() {
             *p = rng.range_f32(-std::f32::consts::PI, std::f32::consts::PI);
@@ -537,7 +578,7 @@ impl Prepared {
         Self {
             gi,
             ii,
-            padded,
+            inst,
             phase0,
             noise,
         }
@@ -545,11 +586,13 @@ impl Prepared {
 }
 
 /// Pack up to ANNEAL_BATCH prepared instances into the artifact's flat
-/// input buffers. Slots past `chunk.len()` stay all-zero: a zero-coupling,
-/// zero-field, zero-noise oscillator array is inert, cannot influence the
-/// real slots, consumes no RNG draws, and its output rows are discarded —
-/// the three properties the tail-padding unit tests pin down.
-fn pack_chunk(chunk: &[Prepared]) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+/// input buffers, padding each instance's rows in place (identical values
+/// to packing `inst.padded(PADDED_SPINS)`, without building it). Slots
+/// past `chunk.len()` stay all-zero: a zero-coupling, zero-field,
+/// zero-noise oscillator array is inert, cannot influence the real slots,
+/// consumes no RNG draws, and its output rows are discarded — the three
+/// properties the tail-padding unit tests pin down.
+fn pack_chunk(chunk: &[Prepared<'_>]) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
     assert!(!chunk.is_empty() && chunk.len() <= ANNEAL_BATCH);
     let nn = PADDED_SPINS * PADDED_SPINS;
     let sn = ANNEAL_STEPS * PADDED_SPINS;
@@ -558,8 +601,12 @@ fn pack_chunk(chunk: &[Prepared]) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
     let mut phase0 = vec![0.0f32; ANNEAL_BATCH * PADDED_SPINS];
     let mut noise = vec![0.0f32; ANNEAL_BATCH * sn];
     for (slot, p) in chunk.iter().enumerate() {
-        j[slot * nn..(slot + 1) * nn].copy_from_slice(&p.padded.j);
-        h[slot * PADDED_SPINS..(slot + 1) * PADDED_SPINS].copy_from_slice(&p.padded.h);
+        let n = p.inst.n;
+        for r in 0..n {
+            let dst = slot * nn + r * PADDED_SPINS;
+            j[dst..dst + n].copy_from_slice(&p.inst.j[r * n..(r + 1) * n]);
+        }
+        h[slot * PADDED_SPINS..slot * PADDED_SPINS + n].copy_from_slice(&p.inst.h);
         phase0[slot * PADDED_SPINS..(slot + 1) * PADDED_SPINS].copy_from_slice(&p.phase0);
         noise[slot * sn..(slot + 1) * sn].copy_from_slice(&p.noise);
     }
@@ -711,8 +758,13 @@ mod tests {
         // in every buffer (couplings, fields, phases, noise) so they
         // cannot influence real slots and represent no RNG draws.
         let mut rng = Pcg32::seeded(55);
-        let prepared: Vec<Prepared> = (0..3)
-            .map(|ii| Prepared::draw(0, ii, &quantized_glass(200 + ii as u64, 10), 0.1, &mut rng))
+        let instances: Vec<Ising> = (0..3)
+            .map(|ii| quantized_glass(200 + ii as u64, 10))
+            .collect();
+        let prepared: Vec<Prepared> = instances
+            .iter()
+            .enumerate()
+            .map(|(ii, inst)| Prepared::draw(0, ii, inst, 0.1, &mut rng))
             .collect();
         let (j, h, phase0, noise) = pack_chunk(&prepared);
         let nn = PADDED_SPINS * PADDED_SPINS;
@@ -721,8 +773,13 @@ mod tests {
         assert_eq!(h.len(), ANNEAL_BATCH * PADDED_SPINS);
         assert_eq!(phase0.len(), ANNEAL_BATCH * PADDED_SPINS);
         assert_eq!(noise.len(), ANNEAL_BATCH * sn);
-        // real slots made it in
-        assert_eq!(&j[..nn], &prepared[0].padded.j[..]);
+        // real slots carry exactly the padded instance (the direct pack
+        // must be indistinguishable from packing inst.padded(64))
+        let padded0 = instances[0].padded(PADDED_SPINS);
+        assert_eq!(&j[..nn], &padded0.j[..]);
+        assert_eq!(&h[..PADDED_SPINS], &padded0.h[..]);
+        let padded1 = instances[1].padded(PADDED_SPINS);
+        assert_eq!(&j[nn..2 * nn], &padded1.j[..]);
         assert_eq!(&phase0[PADDED_SPINS..2 * PADDED_SPINS], &prepared[1].phase0[..]);
         // tail slots are identically zero
         assert!(j[3 * nn..].iter().all(|&v| v == 0.0));

@@ -128,4 +128,53 @@ mod tests {
         assert_eq!(sub.beta[1 * 3 + 2], s.beta[3 * 6 + 5]);
         assert_eq!(sub.beta[0], 0.0);
     }
+
+    #[test]
+    fn subset_on_arbitrary_noncontiguous_index_sets() {
+        // decomposition windows are usually contiguous ranges, but subset
+        // must be correct for ANY index set: gaps, reversed order,
+        // repeated indices, singletons, and the empty set
+        let emb: Vec<f32> = (0..7 * 5).map(|i| ((i * 13 % 17) as f32 - 8.0) * 0.3).collect();
+        let s = scores_from_embeddings(&emb, 7, 5);
+
+        // reversed, gapped order: positions map by POSITION, not by value
+        let idx = [6, 0, 4];
+        let sub = s.subset(&idx);
+        assert_eq!(sub.n(), 3);
+        for (a, &i) in idx.iter().enumerate() {
+            assert_eq!(sub.mu[a], s.mu[i], "mu position {a}");
+            for (b, &j) in idx.iter().enumerate() {
+                let expect = if a == b { 0.0 } else { s.beta[i * 7 + j] };
+                assert_eq!(sub.beta[a * 3 + b], expect, "beta ({a},{b})");
+            }
+        }
+        // symmetry survives because the source is symmetric
+        assert_eq!(sub.beta[2], sub.beta[2 * 3]);
+
+        // a repeated index yields a ZERO diagonal block even off-diagonal
+        // (a != b but i == j picks the source diagonal, which is zero);
+        // the duplicated row's cross terms still match the source
+        let dup = s.subset(&[2, 2, 5]);
+        assert_eq!(dup.beta[1], s.beta[2 * 7 + 2]);
+        assert_eq!(dup.beta[1], 0.0);
+        assert_eq!(dup.beta[2], s.beta[2 * 7 + 5]);
+        assert_eq!(dup.beta[3 + 2], s.beta[2 * 7 + 5]);
+
+        // singleton and empty sets
+        let one = s.subset(&[3]);
+        assert_eq!(one.n(), 1);
+        assert_eq!(one.mu[0], s.mu[3]);
+        assert_eq!(one.beta, vec![0.0]);
+        let none = s.subset(&[]);
+        assert_eq!(none.n(), 0);
+        assert!(none.beta.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn subset_rejects_out_of_range_indices() {
+        let emb: Vec<f32> = (0..4 * 3).map(|i| i as f32).collect();
+        let s = scores_from_embeddings(&emb, 4, 3);
+        s.subset(&[1, 4]);
+    }
 }

@@ -12,7 +12,7 @@
 //! (vehicle routing [14], influence maximization [15], TSP [16]) — the
 //! `kofn_bias` helper is exposed for that reason.
 
-use crate::util::stats::median_f32;
+use crate::util::stats::median_f32_in_place;
 
 use super::model::{Ising, Qubo};
 
@@ -97,8 +97,15 @@ pub fn es_qubo(p: &EsProblem, mu_b: f32) -> Qubo {
 /// μ_b rule of Eq. 12 computed on the original Ising coefficients:
 /// μ_b = 2 (median(h_i) − median(J_ij)).
 pub fn kofn_bias(original: &Ising) -> f32 {
-    let med_h = median_f32(&original.h);
-    let med_j = median_f32(&original.upper_couplings());
+    // one f32 scratch serves both medians (h first, then the upper
+    // triangle via `upper_couplings_into`): no f64 copy, no per-statistic
+    // Vec — results are bit-identical to the allocating medians
+    let n = original.n;
+    let mut scratch: Vec<f32> = Vec::with_capacity(n * n.saturating_sub(1) / 2);
+    scratch.extend_from_slice(&original.h);
+    let med_h = median_f32_in_place(&mut scratch);
+    original.upper_couplings_into(&mut scratch);
+    let med_j = median_f32_in_place(&mut scratch);
     2.0 * (med_h - med_j)
 }
 
@@ -277,6 +284,22 @@ mod tests {
             (med_h1 - med_j).abs() < 0.15 * (med_h0 - med_j).abs() + 1e-4,
             "h' median {med_h1} vs J median {med_j} (was {med_h0})"
         );
+    }
+
+    #[test]
+    fn kofn_bias_matches_the_naive_median_formula_bitwise() {
+        // the scratch-slice implementation must reproduce the allocating
+        // f64-median computation exactly — the improved formulation (and
+        // hence every summary) rides on this value
+        let mut rng = Pcg32::seeded(16);
+        for n in [4usize, 9, 20, 33] {
+            let p = random_es(&mut rng, n, 3.min(n - 1));
+            let (orig, _) = es_qubo(&p, 0.0).to_ising();
+            let naive = 2.0
+                * (crate::util::stats::median_f32(&orig.h)
+                    - crate::util::stats::median_f32(&orig.upper_couplings()));
+            assert_eq!(kofn_bias(&orig).to_bits(), naive.to_bits(), "n = {n}");
+        }
     }
 
     #[test]

@@ -1,7 +1,9 @@
 //! Ising/QUBO core: model types, ES formulations, objective evaluation.
 //!
 //! `model` holds the dense [`Qubo`]/[`Ising`] types and the exact
-//! transformations between them; `formulation` turns an extractive-
+//! transformations between them; `quant_model` holds [`QuantIsing`], the
+//! integer-domain twin the solver fast path runs on; `formulation` turns
+//! an extractive-
 //! summarization instance ([`EsProblem`]: relevance µ, redundancy β,
 //! weight λ, budget M) into an Ising Hamiltonian via the paper's
 //! original (Eq. 7–9) and improved bias-shift (Eq. 10–12) formulations;
@@ -13,7 +15,9 @@ pub mod formulation;
 pub mod model;
 pub mod kofn;
 pub mod objective;
+pub mod quant_model;
 
 pub use formulation::{es_qubo, formulate, kofn_bias, EsIsing, EsProblem, Formulation};
 pub use model::{selected_indices, selection_to_spins, Ising, Qubo};
+pub use quant_model::QuantIsing;
 pub use objective::{exact_bounds, normalized_objective, ObjectiveBounds};

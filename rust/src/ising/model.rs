@@ -73,17 +73,21 @@ impl Qubo {
         let mut ising = Ising::new(n);
         let mut offset = 0.0f64;
         for i in 0..n {
+            // iterate the row slice directly (same idiom as Ising::energy)
+            // instead of a bounds-checked multiply per element; summation
+            // order is unchanged, so results stay bit-identical
+            let row = &self.quad[i * n..(i + 1) * n];
             let mut row_sum = 0.0f64;
-            for j in 0..n {
+            for (j, &v) in row.iter().enumerate() {
                 if j != i {
-                    row_sum += self.q(i, j) as f64;
+                    row_sum += v as f64;
                 }
             }
             ising.h[i] = (self.linear[i] as f64 / 2.0 + row_sum / 2.0) as f32;
             offset += self.linear[i] as f64 / 2.0 + row_sum / 4.0;
-            for j in 0..n {
+            for (j, &v) in row.iter().enumerate() {
                 if j != i {
-                    ising.j[i * n + j] = self.q(i, j) / 4.0;
+                    ising.j[i * n + j] = v / 4.0;
                 }
             }
         }
@@ -150,35 +154,69 @@ impl Ising {
     }
 
     /// Off-diagonal coefficient list (upper triangle), used by median
-    /// statistics in the improved formulation.
+    /// statistics in the improved formulation. Callers that only need a
+    /// sort-and-pick statistic should use [`Ising::upper_couplings_into`]
+    /// with a reusable scratch buffer instead.
     pub fn upper_couplings(&self) -> Vec<f32> {
-        let mut out = Vec::with_capacity(self.n * (self.n - 1) / 2);
-        for i in 0..self.n {
-            for j in (i + 1)..self.n {
-                out.push(self.jij(i, j));
-            }
-        }
+        let mut out = Vec::new();
+        self.upper_couplings_into(&mut out);
         out
     }
 
-    /// Largest absolute coefficient (h and J jointly) — quantization scale.
+    /// Fill `out` with the upper-triangle couplings (same element order as
+    /// [`Ising::upper_couplings`]: rows in order, `j > i` within a row),
+    /// reusing `out`'s allocation. Copies row slices directly — half the
+    /// scan of a full-matrix walk, no per-element index arithmetic.
+    pub fn upper_couplings_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.reserve(self.n * self.n.saturating_sub(1) / 2);
+        for i in 0..self.n {
+            out.extend_from_slice(&self.j[i * self.n + i + 1..(i + 1) * self.n]);
+        }
+    }
+
+    /// Largest absolute coefficient (h and J jointly) — quantization
+    /// scale. Scans only the upper triangle of J: the symmetry invariant
+    /// (`set_pair` writes both mirrors) makes the lower triangle
+    /// redundant, halving the matrix walk.
     pub fn max_abs(&self) -> f32 {
         let hm = self.h.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
-        let jm = self.j.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+        let mut jm = 0.0f32;
+        for i in 0..self.n {
+            for &x in &self.j[i * self.n + i + 1..(i + 1) * self.n] {
+                jm = jm.max(x.abs());
+            }
+        }
         hm.max(jm)
     }
 
     /// Pad to `n_pad` spins (zero fields/couplings on the new spins) —
     /// the COBI artifacts are compiled for a fixed 64-spin problem.
     pub fn padded(&self, n_pad: usize) -> Ising {
+        let mut out = Ising {
+            n: 0,
+            h: Vec::new(),
+            j: Vec::new(),
+        };
+        self.padded_into(n_pad, &mut out);
+        out
+    }
+
+    /// As [`Ising::padded`], writing into a reusable buffer: `out` is
+    /// resized, zeroed and filled — no allocation once its capacity has
+    /// grown to `n_pad` (the device hot-path contract).
+    pub fn padded_into(&self, n_pad: usize, out: &mut Ising) {
         assert!(n_pad >= self.n);
-        let mut out = Ising::new(n_pad);
+        out.n = n_pad;
+        out.h.clear();
+        out.h.resize(n_pad, 0.0);
         out.h[..self.n].copy_from_slice(&self.h);
+        out.j.clear();
+        out.j.resize(n_pad * n_pad, 0.0);
         for i in 0..self.n {
             out.j[i * n_pad..i * n_pad + self.n]
                 .copy_from_slice(&self.j[i * self.n..(i + 1) * self.n]);
         }
-        out
     }
 }
 
@@ -295,5 +333,66 @@ mod tests {
         let sel = vec![0, 3, 7];
         let s = selection_to_spins(10, &sel);
         assert_eq!(selected_indices(&s), sel);
+    }
+
+    #[test]
+    fn max_abs_upper_triangle_scan_sees_every_coefficient() {
+        // the halved scan must agree with a full walk on symmetric J, and
+        // must not miss extremes living in h or in any row position
+        let mut rng = Pcg32::seeded(21);
+        for _ in 0..10 {
+            let q = random_qubo(&mut rng, 9);
+            let (ising, _) = q.to_ising();
+            let full = ising
+                .h
+                .iter()
+                .chain(ising.j.iter())
+                .fold(0.0f32, |a, &x| a.max(x.abs()));
+            assert_eq!(ising.max_abs(), full);
+        }
+        let mut h_only = Ising::new(5);
+        h_only.h[4] = -9.5;
+        assert_eq!(h_only.max_abs(), 9.5);
+        let mut last_pair = Ising::new(5);
+        last_pair.set_pair(3, 4, -7.25); // final upper-triangle slot
+        assert_eq!(last_pair.max_abs(), 7.25);
+    }
+
+    #[test]
+    fn upper_couplings_into_matches_allocation_free() {
+        let mut rng = Pcg32::seeded(22);
+        let q = random_qubo(&mut rng, 8);
+        let (ising, _) = q.to_ising();
+        let fresh = ising.upper_couplings();
+        assert_eq!(fresh.len(), 8 * 7 / 2);
+        let mut buf = vec![99.0f32; 3]; // stale contents must be discarded
+        ising.upper_couplings_into(&mut buf);
+        assert_eq!(buf, fresh);
+        // element order is rows-then-columns, j > i
+        assert_eq!(buf[0], ising.jij(0, 1));
+        assert_eq!(buf[7], ising.jij(1, 2));
+        assert_eq!(*buf.last().unwrap(), ising.jij(6, 7));
+    }
+
+    #[test]
+    fn padded_into_reuses_and_fully_overwrites_the_buffer() {
+        let mut rng = Pcg32::seeded(23);
+        let q = random_qubo(&mut rng, 6);
+        let (ising, _) = q.to_ising();
+        // poison the buffer with a larger, nonzero instance first
+        let mut buf = Ising::new(70);
+        buf.h.iter_mut().for_each(|v| *v = 5.0);
+        buf.j.iter_mut().for_each(|v| *v = -5.0);
+        ising.padded_into(64, &mut buf);
+        assert_eq!(buf, ising.padded(64));
+        // padding region is identically zero (no stale poison survives)
+        assert!(buf.h[6..].iter().all(|&v| v == 0.0));
+        for i in 0..64 {
+            for j in 0..64 {
+                if i >= 6 || j >= 6 {
+                    assert_eq!(buf.jij(i, j), 0.0, "stale value at ({i},{j})");
+                }
+            }
+        }
     }
 }

@@ -1,0 +1,237 @@
+//! Integer-domain Ising instance — the native representation of a
+//! quantized Hamiltonian.
+//!
+//! The COBI array programs **integer** couplings (paper §II-B), yet the
+//! original solve pipeline round-tripped every quantized instance through
+//! dense `f32` matrices with `f64` scalar inner loops. [`QuantIsing`]
+//! stores what the hardware actually sees: `h: Vec<i32>`, `j: Vec<i16>`,
+//! row-major, with the SAME conventions as [`Ising`] — symmetric `j` with
+//! both (i,j) and (j,i) populated, zero diagonal, and ordered-pair energy
+//! sums `H(s) = Σ_i h_i s_i + Σ_{i≠j} J_ij s_i s_j`.
+//!
+//! ## Exact-tie rule
+//!
+//! On the integer path all energies, local fields and move deltas are
+//! `i64` accumulators, so two candidate moves tie **iff their integer
+//! deltas are equal** — the `TIE_EPS = 1e-12` tolerance of the `f64` path
+//! is retired here, not approximated. The two rules agree exactly: every
+//! supported grid fits in 16 bits, so coefficients, fields and energies
+//! are small integers that `f64` represents exactly, and for integers
+//! `a < b - 1e-12` ⟺ `a < b`. This is what makes the integer kernels
+//! **bit-identical** to the `f64` kernels on quantized instances (pinned
+//! by per-solver equivalence tests), which in turn is what lets the
+//! solvers switch domains transparently without changing one summary
+//! byte.
+//!
+//! ## Accumulator headroom
+//!
+//! `try_copy_from` admits `|J| ≤ i16::MAX` and `|h| ≤ 1e9`. With
+//! `n ≤ MAX_SENTENCES = 128` (and far beyond), energies are bounded by
+//! `n·|h|max + n²·|J|max < 2^38`, and local fields by
+//! `|h|max + 2n·|J|max < 2^31` — no `i64` overflow is reachable.
+
+use super::model::Ising;
+
+/// Largest `|J|` admitted into the `i16` coupling matrix.
+pub const QUANT_J_ABS_MAX: f32 = i16::MAX as f32;
+/// Largest `|h|` admitted into the `i32` field vector (far above any
+/// quantization grid; bounds the `i64` accumulator analysis above).
+pub const QUANT_H_ABS_MAX: f32 = 1e9;
+
+/// Integer-valued Ising instance (minimization over s in {-1,+1}^n).
+/// See the module docs for conventions and the exact-tie rule.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct QuantIsing {
+    pub n: usize,
+    /// Local fields h_i (integer grid values).
+    pub h: Vec<i32>,
+    /// Couplings J_ij, row-major n*n, symmetric, zero diagonal.
+    pub j: Vec<i16>,
+}
+
+impl QuantIsing {
+    pub fn new(n: usize) -> Self {
+        Self {
+            n,
+            h: vec![0; n],
+            j: vec![0; n * n],
+        }
+    }
+
+    /// Resize to `n` spins with all coefficients zeroed. Reuses the
+    /// existing buffers — no allocation once capacity has grown to the
+    /// largest instance seen (the hot-path contract of `quantize_into`).
+    pub fn reset(&mut self, n: usize) {
+        self.n = n;
+        self.h.clear();
+        self.h.resize(n, 0);
+        self.j.clear();
+        self.j.resize(n * n, 0);
+    }
+
+    #[inline]
+    pub fn jij(&self, i: usize, j: usize) -> i32 {
+        self.j[i * self.n + j] as i32
+    }
+
+    /// Set the symmetric pair (i,j) and (j,i).
+    pub fn set_pair(&mut self, i: usize, j: usize, v: i16) {
+        assert_ne!(i, j);
+        self.j[i * self.n + j] = v;
+        self.j[j * self.n + i] = v;
+    }
+
+    /// Ising energy, ordered-pair convention — exact integer arithmetic.
+    pub fn energy(&self, s: &[i8]) -> i64 {
+        debug_assert_eq!(s.len(), self.n);
+        let mut e = 0i64;
+        for i in 0..self.n {
+            let si = s[i] as i64;
+            let row = &self.j[i * self.n..(i + 1) * self.n];
+            let mut acc = 0i64;
+            for j in 0..self.n {
+                acc += row[j] as i64 * s[j] as i64;
+            }
+            e += self.h[i] as i64 * si + si * acc;
+        }
+        e
+    }
+
+    /// Local field seen by spin i: L_i = h_i + 2 Σ_j J_ij s_j.
+    /// Flipping spin i changes the energy by ΔE = -2 s_i L_i.
+    pub fn local_field(&self, s: &[i8], i: usize) -> i64 {
+        let row = &self.j[i * self.n..(i + 1) * self.n];
+        let mut acc = 0i64;
+        for j in 0..self.n {
+            acc += row[j] as i64 * s[j] as i64;
+        }
+        self.h[i] as i64 + 2 * acc
+    }
+
+    /// Copy an integer-valued `f32` instance into this buffer. Returns
+    /// `false` (leaving `self` unspecified) when any coefficient is
+    /// non-integral, non-finite, or outside the admitted ranges — the
+    /// caller then stays on the `f64` path. Reuses the buffers; no
+    /// allocation in steady state.
+    pub fn try_copy_from(&mut self, src: &Ising) -> bool {
+        let n = src.n;
+        self.n = n;
+        self.h.clear();
+        self.h.reserve(n);
+        for &v in &src.h {
+            if !(v.is_finite() && v.fract() == 0.0 && v.abs() <= QUANT_H_ABS_MAX) {
+                return false;
+            }
+            self.h.push(v as i32);
+        }
+        self.j.clear();
+        self.j.reserve(n * n);
+        for &v in &src.j {
+            if !(v.is_finite() && v.fract() == 0.0 && v.abs() <= QUANT_J_ABS_MAX) {
+                return false;
+            }
+            self.j.push(v as i16);
+        }
+        true
+    }
+
+    /// Expand back to the `f32` representation (exact: every admitted
+    /// integer is f32-representable). Mostly for tests and interop.
+    pub fn to_ising(&self) -> Ising {
+        Ising {
+            n: self.n,
+            h: self.h.iter().map(|&v| v as f32).collect(),
+            j: self.j.iter().map(|&v| v as f32).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn int_glass(seed: u64, n: usize, max: i32) -> QuantIsing {
+        let mut rng = Pcg32::seeded(seed);
+        let mut q = QuantIsing::new(n);
+        for i in 0..n {
+            q.h[i] = rng.below(2 * max as u32 + 1) as i32 - max;
+            for j in (i + 1)..n {
+                let v = (rng.below(2 * max as u32 + 1) as i32 - max) as i16;
+                q.set_pair(i, j, v);
+            }
+        }
+        q
+    }
+
+    #[test]
+    fn integer_energy_matches_f64_energy_exactly() {
+        let mut rng = Pcg32::seeded(1);
+        for seed in 0..10 {
+            let q = int_glass(seed, 14, 14);
+            let f = q.to_ising();
+            let s: Vec<i8> = (0..14)
+                .map(|_| if rng.bernoulli(0.5) { 1 } else { -1 })
+                .collect();
+            assert_eq!(q.energy(&s) as f64, f.energy(&s));
+            for i in 0..14 {
+                assert_eq!(q.local_field(&s, i) as f64, f.local_field(&s, i));
+            }
+        }
+    }
+
+    #[test]
+    fn round_trip_through_f32_is_lossless() {
+        let q = int_glass(3, 12, 14);
+        let mut back = QuantIsing::default();
+        assert!(back.try_copy_from(&q.to_ising()));
+        assert_eq!(back, q);
+    }
+
+    #[test]
+    fn try_copy_rejects_fractional_and_oversized() {
+        let mut out = QuantIsing::default();
+        let mut frac = Ising::new(4);
+        frac.h[0] = 0.5;
+        assert!(!out.try_copy_from(&frac));
+
+        let mut big_j = Ising::new(4);
+        big_j.set_pair(0, 1, 40_000.0); // > i16::MAX
+        assert!(!out.try_copy_from(&big_j));
+
+        let mut nan = Ising::new(4);
+        nan.h[2] = f32::NAN;
+        assert!(!out.try_copy_from(&nan));
+
+        // integral instances in range are admitted
+        let mut ok = Ising::new(4);
+        ok.h[0] = -3.0;
+        ok.set_pair(1, 2, 14.0);
+        assert!(out.try_copy_from(&ok));
+        assert_eq!(out.h[0], -3);
+        assert_eq!(out.jij(1, 2), 14);
+        assert_eq!(out.jij(2, 1), 14);
+    }
+
+    #[test]
+    fn negative_zero_maps_to_zero() {
+        let mut src = Ising::new(2);
+        src.h[0] = -0.0;
+        let mut out = QuantIsing::default();
+        assert!(out.try_copy_from(&src));
+        assert_eq!(out.h[0], 0);
+    }
+
+    #[test]
+    fn reset_reuses_capacity_and_zeroes() {
+        let mut q = int_glass(5, 10, 7);
+        let hp = q.h.capacity();
+        let jp = q.j.capacity();
+        q.reset(8);
+        assert_eq!(q.n, 8);
+        assert!(q.h.iter().all(|&v| v == 0));
+        assert!(q.j.iter().all(|&v| v == 0));
+        assert!(q.h.capacity() >= hp.min(8));
+        assert!(q.j.capacity() <= jp.max(64));
+    }
+}

@@ -26,7 +26,6 @@ use std::sync::Mutex;
 
 use crate::ising::Ising;
 use crate::solvers::SolveResult;
-use crate::text::tokenize::fnv1a;
 
 /// Result of one cache probe.
 #[derive(Debug, Clone)]
@@ -113,30 +112,65 @@ pub struct WarmStartCache {
     capacity: usize,
 }
 
-/// Exact structural fingerprint: n plus every coefficient's bit pattern.
-pub fn exact_key(ising: &Ising) -> u64 {
-    let mut bytes = Vec::with_capacity(8 + 4 * (ising.h.len() + ising.j.len()));
-    bytes.extend_from_slice(&(ising.n as u64).to_le_bytes());
-    for &v in ising.h.iter().chain(ising.j.iter()) {
-        bytes.extend_from_slice(&v.to_bits().to_le_bytes());
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+/// Mixed into value-hashed words so an integer coefficient and a raw bit
+/// pattern of the same numeric value cannot trivially alias (collisions
+/// are harmless anyway — exact hits verify full equality).
+const INT_TAG: u64 = 0x51A0_7E11_0000_0000;
+
+/// FNV-1a over one u64, fed byte by byte (matches `fnv1a` on the word's
+/// LE bytes) — lets the keys stream without building a byte buffer.
+#[inline]
+fn fnv_u64(mut hash: u64, word: u64) -> u64 {
+    for b in word.to_le_bytes() {
+        hash ^= b as u64;
+        hash = hash.wrapping_mul(FNV_PRIME);
     }
-    fnv1a(&bytes)
+    hash
+}
+
+/// Exact structural fingerprint of the quantized instance.
+///
+/// Every integer-valued coefficient — i.e. every coefficient of every
+/// quantized instance, which is all the cache ever sees in production —
+/// hashes by its **integer value** (`v as i64`), not its `f32` bit
+/// pattern. That is faster (a cast instead of byte serialization through
+/// an intermediate `Vec`, which this function no longer allocates) and
+/// removes float-bit fragility: `-0.0` and `+0.0` compare equal under
+/// `Ising` equality but have different bits, so bit-hashing could miss an
+/// entry that full equality would serve. Fractional or out-of-range
+/// coefficients fall back to bit-pattern hashing; a hash collision can
+/// only ever cost a redundant solve because hits verify full equality
+/// (DESIGN.md decision #10).
+pub fn exact_key(ising: &Ising) -> u64 {
+    let mut hash = fnv_u64(FNV_OFFSET, ising.n as u64);
+    for &v in ising.h.iter().chain(ising.j.iter()) {
+        let word = if v.is_finite() && v.fract() == 0.0 && v.abs() <= 1e9 {
+            (v as i64 as u64) ^ INT_TAG
+        } else {
+            v.to_bits() as u64
+        };
+        hash = fnv_u64(hash, word);
+    }
+    hash
 }
 
 /// Fine near key: n plus the sign class (-, 0, +) of every local field.
+/// Streams like [`exact_key`] — no byte buffer.
 fn fine_key(ising: &Ising) -> u64 {
-    let mut bytes = Vec::with_capacity(8 + ising.h.len());
-    bytes.extend_from_slice(&(ising.n as u64).to_le_bytes());
+    let mut hash = fnv_u64(FNV_OFFSET, ising.n as u64);
     for &v in &ising.h {
-        bytes.push(if v > 0.0 {
+        let class: u64 = if v > 0.0 {
             1
         } else if v < 0.0 {
             2
         } else {
             0
-        });
+        };
+        hash = fnv_u64(hash, class);
     }
-    fnv1a(&bytes)
+    hash
 }
 
 impl WarmStartCache {
@@ -315,6 +349,35 @@ mod tests {
         b.h[0] += 1.0;
         assert_ne!(exact_key(&a), exact_key(&b));
         assert_ne!(exact_key(&a), exact_key(&glass(5, 9)));
+    }
+
+    #[test]
+    fn exact_key_hashes_integer_values_not_float_bits() {
+        // -0.0 == +0.0 under Ising equality: the integer-tuple key must
+        // agree, so an entry stored under one zero is servable under the
+        // other (the float-bit fragility the integer key retires)
+        let a = glass(7, 8);
+        let mut b = a.clone();
+        for v in b.h.iter_mut().chain(b.j.iter_mut()) {
+            if *v == 0.0 {
+                *v = -0.0;
+            }
+        }
+        assert_eq!(a, b, "instances must be equal despite different zero bits");
+        assert_eq!(exact_key(&a), exact_key(&b));
+
+        let cache = WarmStartCache::new(8);
+        cache.insert(&a, &solved(vec![1; 8], -3.0));
+        assert!(matches!(cache.lookup(&b), CacheOutcome::Exact(_)));
+    }
+
+    #[test]
+    fn fractional_instances_still_key_consistently() {
+        let mut a = glass(8, 6);
+        a.h[0] = 0.25; // not integer-valued: bit-pattern fallback
+        let cache = WarmStartCache::new(8);
+        cache.insert(&a, &solved(vec![-1; 6], -1.5));
+        assert!(matches!(cache.lookup(&a), CacheOutcome::Exact(_)));
     }
 
     #[test]

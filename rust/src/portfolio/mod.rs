@@ -17,11 +17,18 @@
 //!   backend (`[portfolio] enabled = true`, or
 //!   `[sched] backend = "portfolio"`).
 //! * [`WarmStartCache`] — keyed by a structural fingerprint of the
-//!   quantized instance; exact hits are served directly (zero device
-//!   time), near hits become initial spin configurations for
-//!   warm-started solvers ([`IsingSolver::solve_from`], or oscillator
-//!   phase initialisation on COBI). Shared fleet-wide across all pool
-//!   devices via [`PortfolioShared`].
+//!   quantized instance (the exact tier hashes the **integer coefficient
+//!   tuple**, allocation-free — see `cache::exact_key`); exact hits are
+//!   served directly (zero device time), near hits become initial spin
+//!   configurations for warm-started solvers
+//!   ([`IsingSolver::solve_from`], or oscillator phase initialisation on
+//!   COBI). Shared fleet-wide across all pool devices via
+//!   [`PortfolioShared`].
+//!
+//! Hot path: the software backends (Tabu, SA, greedy) are long-lived and
+//! own their `SolveScratch`, so routed solves reuse buffers across
+//! requests and run the integer `SolverKernel` on quantized instances —
+//! routing adds no per-request allocation beyond the dispatch itself.
 //! * [`PortfolioMetrics`] — per-backend route counts and latency
 //!   histograms plus cache hit/miss/warm rates, snapshotted into
 //!   `ServiceMetrics` next to the pool counters.
@@ -593,6 +600,27 @@ mod tests {
         let m = p.shared().snapshot();
         assert_eq!(m.cache.warm_hits, 1);
         assert_eq!(m.cache.entries, 2);
+    }
+
+    #[test]
+    fn routed_software_backends_match_the_f64_reference_kernel() {
+        // portfolio-routed tabu/greedy solves on quantized instances run
+        // the integer kernel; they must equal the f64 reference bit for
+        // bit (the portfolio-level face of the kernel equivalence pin)
+        let inst = quantized_glass(55, 16);
+        let mut p = standalone("static", "tabu", false);
+        let routed = p.solve_one(&inst, 0xA11CE).unwrap();
+        let mut reference = crate::solvers::tabu::TabuSolver::seeded(0);
+        reference.reseed(0xA11CE);
+        let expect = reference.solve_reference_f64(&inst);
+        assert_eq!(routed.spins, expect.spins);
+        assert_eq!(routed.energy.to_bits(), expect.energy.to_bits());
+
+        let mut pg = standalone("static", "greedy", false);
+        let routed_g = pg.solve_one(&inst, 0xA11CE).unwrap();
+        let expect_g = GreedyDescent::new().solve_reference_f64(&inst);
+        assert_eq!(routed_g.spins, expect_g.spins);
+        assert_eq!(routed_g.energy.to_bits(), expect_g.energy.to_bits());
     }
 
     #[test]

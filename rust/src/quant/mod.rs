@@ -8,11 +8,14 @@
 //! `stochastic` scheme re-samples the Hamiltonian per refinement
 //! iteration, which is the diversity §IV-A exploits to recover FP-level
 //! quality from low-precision solves. `preprocess` holds the shared
-//! scale/clip step.
+//! scale/clip step. The hot path uses [`quantize_into`], which writes
+//! straight into a reusable integer instance
+//! ([`QuantIsing`](crate::ising::QuantIsing)) with the exact RNG draw
+//! order of [`quantize`] — no intermediate `f32` matrix, no allocation.
 
 pub mod precision;
 pub mod preprocess;
 pub mod rounding;
 
 pub use precision::Precision;
-pub use rounding::{quantize, Rounding};
+pub use rounding::{quantize, quantize_into, Rounding};

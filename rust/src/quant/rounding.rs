@@ -10,7 +10,7 @@
 use std::fmt;
 use std::str::FromStr;
 
-use crate::ising::Ising;
+use crate::ising::{Ising, QuantIsing};
 use crate::util::rng::Pcg32;
 
 use super::precision::Precision;
@@ -113,6 +113,49 @@ pub fn quantize(ising: &Ising, precision: Precision, rounding: Rounding, rng: &m
     out
 }
 
+/// Quantize straight into a reusable integer instance — the hot-path twin
+/// of [`quantize`]: no intermediate `f32` `Ising`, no allocation once
+/// `out`'s buffers have grown to the instance size.
+///
+/// Draw-for-draw identical to [`quantize`]: the same `rounding.round`
+/// calls on the same scaled values in the same order (all `h` in index
+/// order, then upper-triangle pairs row by row), so for a fixed RNG state
+/// the integer output equals the `f32` output value-for-value — the
+/// refinement fast path replays the exact rounding stream of the batched
+/// path.
+///
+/// Returns `false` without touching `out` or the RNG when `precision` has
+/// no integer grid (`Precision::Fp`): the FP identity case has no integer
+/// representation, and callers stay on the `f32` path.
+pub fn quantize_into(
+    ising: &Ising,
+    precision: Precision,
+    rounding: Rounding,
+    rng: &mut Pcg32,
+    out: &mut QuantIsing,
+) -> bool {
+    let Some(scale) = precision.scale_for(ising.max_abs()) else {
+        return false;
+    };
+    let grid = precision.grid_max().unwrap();
+    let gridf = grid as f32;
+    let n = ising.n;
+    out.reset(n);
+    for i in 0..n {
+        // every grid fits in i16/i32 (≤ 16 bits), so the casts are exact
+        out.h[i] = rounding.round(ising.h[i] * scale, rng).clamp(-gridf, gridf) as i32;
+    }
+    for i in 0..n {
+        let row = &ising.j[i * n..(i + 1) * n];
+        for j in (i + 1)..n {
+            let q = rounding.round(row[j] * scale, rng).clamp(-gridf, gridf) as i16;
+            out.j[i * n + j] = q;
+            out.j[j * n + i] = q;
+        }
+    }
+    true
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -207,6 +250,62 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn quantize_into_is_draw_for_draw_identical_to_quantize() {
+        // same seed, every precision/rounding combo: the integer output
+        // must equal the f32 output value-for-value, and both must leave
+        // the RNG in the same state (pinned by a follow-up draw)
+        use crate::ising::QuantIsing;
+        let mut ising = Ising::new(10);
+        {
+            let mut rng = Pcg32::seeded(41);
+            for i in 0..10 {
+                ising.h[i] = rng.range_f32(-6.0, 6.0);
+                for j in (i + 1)..10 {
+                    ising.set_pair(i, j, rng.range_f32(-2.0, 2.0));
+                }
+            }
+        }
+        let mut out = QuantIsing::default();
+        for precision in [Precision::CobiInt, Precision::Fixed(4), Precision::Fixed(8)] {
+            for rounding in [
+                Rounding::Deterministic,
+                Rounding::Stoch5050,
+                Rounding::Stochastic,
+            ] {
+                let mut rng_a = Pcg32::seeded(99);
+                let mut rng_b = Pcg32::seeded(99);
+                let f = quantize(&ising, precision, rounding, &mut rng_a);
+                assert!(quantize_into(&ising, precision, rounding, &mut rng_b, &mut out));
+                assert_eq!(out.n, f.n);
+                for i in 0..10 {
+                    assert_eq!(out.h[i] as f32, f.h[i], "{precision} {rounding} h[{i}]");
+                    for j in 0..10 {
+                        assert_eq!(
+                            out.jij(i, j) as f32,
+                            f.jij(i, j),
+                            "{precision} {rounding} J[{i},{j}]"
+                        );
+                    }
+                }
+                assert_eq!(rng_a.next_u64(), rng_b.next_u64(), "RNG streams diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_into_declines_fp_without_consuming_rng() {
+        use crate::ising::QuantIsing;
+        let mut ising = Ising::new(4);
+        ising.h[0] = 1.234;
+        let mut out = QuantIsing::new(2);
+        let mut rng = Pcg32::seeded(7);
+        let before = rng.clone().next_u64();
+        assert!(!quantize_into(&ising, Precision::Fp, Rounding::Stochastic, &mut rng, &mut out));
+        assert_eq!(rng.next_u64(), before, "FP decline must not draw");
+        assert_eq!(out.n, 2, "FP decline must not touch the buffer");
     }
 
     #[test]

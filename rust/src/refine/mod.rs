@@ -10,11 +10,25 @@
 //! (only solver randomness explores); stochastic rounding also re-samples
 //! the Hamiltonian — the diversity the paper exploits to compensate for
 //! precision loss.
+//!
+//! ## The integer fast path
+//!
+//! For gridded precisions and kernel-capable solvers (Tabu, SA, greedy —
+//! [`IsingSolver::quant_kernel`]), [`refine`] skips the `f32` instance
+//! materialization entirely: each iteration quantizes straight into a
+//! reusable [`QuantIsing`](crate::ising::QuantIsing)
+//! ([`quantize_into`]), solves on the integer kernel into a reusable
+//! spin buffer, and repairs/scores through caller-owned index buffers —
+//! **zero heap allocation per iteration** in steady state (pinned by
+//! `tests/alloc_audit.rs`). Results are bit-identical to the batched
+//! `f32` path ([`refine_batched`]), pinned by tests below. Device-backed
+//! solvers (COBI) keep the batched path — their amortization lives in
+//! `solve_batch`, not in the coefficient domain.
 
 use anyhow::Result;
 
-use crate::ising::{formulate, selected_indices, EsProblem, Formulation};
-use crate::quant::{quantize, Precision, Rounding};
+use crate::ising::{formulate, selected_indices, EsProblem, Formulation, QuantIsing};
+use crate::quant::{quantize, quantize_into, Precision, Rounding};
 use crate::solvers::{IsingSolver, SelectionResult};
 use crate::util::rng::Pcg32;
 
@@ -45,15 +59,32 @@ impl Default for RefineConfig {
 /// softens the cardinality constraint and (b) quantized instances may
 /// ground-state off-cardinality.
 pub fn repair_selection(p: &EsProblem, mut selected: Vec<usize>) -> Vec<usize> {
+    let mut cand = Vec::new();
+    repair_selection_in_place(p, &mut selected, &mut cand);
+    selected
+}
+
+/// The buffer-reusing core of [`repair_selection`]: repairs `selected` in
+/// place, using `cand` as candidate scratch. Candidate index sequences
+/// (and hence every floating-point objective evaluation and its
+/// tie-break) are identical to the allocating version — the hot path
+/// reuses both buffers across refinement iterations, so steady state
+/// allocates nothing here.
+pub(crate) fn repair_selection_in_place(
+    p: &EsProblem,
+    selected: &mut Vec<usize>,
+    cand: &mut Vec<usize>,
+) {
     selected.sort_unstable();
     selected.dedup();
     while selected.len() > p.m {
         // drop argmax of objective-after-removal
         let mut best: Option<(usize, f64)> = None;
         for k in 0..selected.len() {
-            let mut cand = selected.clone();
+            cand.clear();
+            cand.extend_from_slice(selected);
             cand.remove(k);
-            let obj = p.objective(&cand);
+            let obj = p.objective(cand);
             if best.map_or(true, |(_, b)| obj > b) {
                 best = Some((k, obj));
             }
@@ -66,9 +97,10 @@ pub fn repair_selection(p: &EsProblem, mut selected: Vec<usize>) -> Vec<usize> {
             if selected.binary_search(&i).is_ok() {
                 continue;
             }
-            let mut cand = selected.clone();
+            cand.clear();
+            cand.extend_from_slice(selected);
             cand.push(i);
-            let obj = p.objective(&cand);
+            let obj = p.objective(cand);
             if best.map_or(true, |(_, b)| obj > b) {
                 best = Some((i, obj));
             }
@@ -76,7 +108,6 @@ pub fn repair_selection(p: &EsProblem, mut selected: Vec<usize>) -> Vec<usize> {
         selected.push(best.unwrap().0);
         selected.sort_unstable();
     }
-    selected
 }
 
 /// Trace of one refinement run (per-iteration objectives, for the Fig 2/3
@@ -136,19 +167,97 @@ pub fn select_best(p: &EsProblem, solved: &[crate::solvers::SolveResult]) -> Ref
 /// Run iterative refinement of `p` with `solver` (which solves quantized
 /// Ising instances). `rng` drives the rounding draws only — solver
 /// randomness lives in the solver's own seeded RNG.
+///
+/// Routes to the integer fast path (see module docs) when the precision
+/// has an integer grid and the solver exposes a
+/// [`quant_kernel`](IsingSolver::quant_kernel); otherwise takes
+/// [`refine_batched`]. The two produce bit-identical traces — the route
+/// is a performance decision, never a semantic one.
 pub fn refine(
     p: &EsProblem,
     cfg: &RefineConfig,
     solver: &mut dyn IsingSolver,
     rng: &mut Pcg32,
 ) -> Result<RefineTrace> {
-    // quantize all iterations up front (RNG draw order identical to the
-    // sequential loop), then solve through the batch path — devices with
-    // a batched artifact dispatch once per ANNEAL_BATCH instances.
+    if cfg.precision.grid_max().is_some() && solver.quant_kernel().is_some() {
+        return refine_integer(p, cfg, solver, rng);
+    }
+    refine_batched(p, cfg, solver, rng)
+}
+
+/// The `f32` batch path: quantize all iterations up front (RNG draw order
+/// identical to the interleaved loop — rounding and solver randomness are
+/// separate streams), then solve through `solve_batch`, so devices with a
+/// batched artifact dispatch once per ANNEAL_BATCH instances. Public as
+/// the pinned reference for the integer fast path (equivalence tests,
+/// domain benches); [`refine`] is the entry point callers want.
+pub fn refine_batched(
+    p: &EsProblem,
+    cfg: &RefineConfig,
+    solver: &mut dyn IsingSolver,
+    rng: &mut Pcg32,
+) -> Result<RefineTrace> {
     let instances = prepare_instances(p, cfg, rng);
     let refs: Vec<&crate::ising::Ising> = instances.iter().collect();
     let solved_all = solver.solve_batch(&refs);
     Ok(select_best(p, &solved_all))
+}
+
+/// The integer fast path: quantize → solve → repair → score entirely
+/// through reusable buffers (see module docs). Caller guarantees a
+/// gridded precision and a kernel-capable solver.
+fn refine_integer(
+    p: &EsProblem,
+    cfg: &RefineConfig,
+    solver: &mut dyn IsingSolver,
+    rng: &mut Pcg32,
+) -> Result<RefineTrace> {
+    let es = formulate(p, cfg.formulation);
+    let iters = cfg.iterations.max(1);
+    let n = p.n();
+    // per-subproblem setup; every per-iteration step below reuses these
+    // (capacities are upper bounds, so iterations never grow them)
+    let mut quant = QuantIsing::new(0);
+    let mut spins: Vec<i8> = Vec::with_capacity(n);
+    let mut sel: Vec<usize> = Vec::with_capacity(n);
+    let mut cand: Vec<usize> = Vec::with_capacity(n + 1);
+    let mut best_sel: Vec<usize> = Vec::with_capacity(n);
+    let mut objectives = Vec::with_capacity(iters);
+    let mut best_so_far = Vec::with_capacity(iters);
+    let mut best_obj = f64::NEG_INFINITY;
+    let mut have_best = false;
+    let kernel = solver
+        .quant_kernel()
+        .expect("refine_integer requires a kernel-capable solver");
+    for _ in 0..iters {
+        let gridded = quantize_into(&es.ising, cfg.precision, cfg.rounding, rng, &mut quant);
+        debug_assert!(gridded, "refine_integer requires a gridded precision");
+        kernel.solve_quant_into(&quant, &mut spins);
+        sel.clear();
+        sel.extend(
+            spins
+                .iter()
+                .enumerate()
+                .filter_map(|(i, &v)| (v > 0).then_some(i)),
+        );
+        repair_selection_in_place(p, &mut sel, &mut cand);
+        let objective = p.objective(&sel);
+        objectives.push(objective);
+        if !have_best || objective > best_obj {
+            have_best = true;
+            best_obj = objective;
+            best_sel.clone_from(&sel);
+        }
+        best_so_far.push(best_obj);
+    }
+    Ok(RefineTrace {
+        objectives,
+        best_so_far,
+        result: SelectionResult {
+            selected: best_sel,
+            objective: best_obj,
+        },
+    })
 }
 
 #[cfg(test)]
@@ -195,6 +304,73 @@ mod tests {
         let p = random_es(&mut rng, 10, 4);
         let sel = vec![1, 3, 5, 7];
         assert_eq!(repair_selection(&p, sel.clone()), sel);
+    }
+
+    #[test]
+    fn repair_handles_empty_selection() {
+        let mut rng = Pcg32::seeded(40);
+        let p = random_es(&mut rng, 8, 3);
+        let fixed = repair_selection(&p, vec![]);
+        assert_eq!(fixed.len(), 3);
+        assert!(fixed.windows(2).all(|w| w[0] < w[1]));
+        assert!(fixed.iter().all(|&i| i < 8));
+    }
+
+    #[test]
+    fn repair_handles_selection_longer_than_n() {
+        // an off-cardinality solver answer can select every spin and
+        // carry duplicates; repair must still land on exactly M
+        let mut rng = Pcg32::seeded(41);
+        let p = random_es(&mut rng, 6, 2);
+        let over: Vec<usize> = (0..6).chain(0..6).chain(0..6).collect(); // len 18 > n
+        let fixed = repair_selection(&p, over);
+        assert_eq!(fixed.len(), 2);
+        assert!(fixed.iter().all(|&i| i < 6));
+    }
+
+    #[test]
+    fn repair_handles_m_zero() {
+        let mut rng = Pcg32::seeded(42);
+        let mut p = random_es(&mut rng, 7, 3);
+        p.m = 0;
+        assert!(repair_selection(&p, vec![2, 5]).is_empty());
+        assert!(repair_selection(&p, vec![]).is_empty());
+        assert!(repair_selection(&p, (0..7).collect()).is_empty());
+    }
+
+    #[test]
+    fn repair_dedups_before_counting() {
+        // duplicates collapse to one occurrence BEFORE the length check:
+        // [4, 4, 4] is one unique index, so two more must be added (not
+        // two dropped)
+        let mut rng = Pcg32::seeded(43);
+        let p = random_es(&mut rng, 9, 3);
+        let fixed = repair_selection(&p, vec![4, 4, 4]);
+        assert_eq!(fixed.len(), 3);
+        assert!(fixed.contains(&4));
+        let mut d = fixed.clone();
+        d.dedup();
+        assert_eq!(d.len(), 3, "duplicates survived repair");
+    }
+
+    #[test]
+    fn in_place_repair_matches_allocating_repair() {
+        // the hot path's buffer-reusing variant must replay the exact
+        // candidate sequences (and hence FP tie-breaks) of the original
+        let mut rng = Pcg32::seeded(44);
+        for _ in 0..30 {
+            let n = 5 + rng.below(10) as usize;
+            let m = rng.below(n as u32) as usize;
+            let mut p = random_es(&mut rng, n, 1);
+            p.m = m;
+            let k = rng.below(n as u32 + 1) as usize;
+            let start = rng.sample_indices(n, k);
+            let reference = repair_selection(&p, start.clone());
+            let mut in_place = start;
+            let mut cand = Vec::new();
+            repair_selection_in_place(&p, &mut in_place, &mut cand);
+            assert_eq!(in_place, reference);
+        }
     }
 
     #[test]
@@ -250,6 +426,80 @@ mod tests {
         let trace = refine(&p, &cfg, &mut solver, &mut rng).unwrap();
         let gap = (exact.objective - trace.result.objective) / exact.objective.abs();
         assert!(gap < 0.02, "gap {gap}: {} vs {}", trace.result.objective, exact.objective);
+    }
+
+    #[test]
+    fn integer_fast_path_is_bit_identical_to_the_batched_path() {
+        // acceptance pin: for every kernel-capable solver and rounding
+        // scheme, `refine` (integer fast path) must reproduce
+        // `refine_batched` (f32 instances through solve_batch) bit for
+        // bit — per-iteration objectives AND the final selection
+        use crate::solvers::greedy::GreedyDescent;
+        use crate::solvers::sa::SaSolver;
+        let p = {
+            let mut r = Pcg32::seeded(50);
+            random_es(&mut r, 14, 5)
+        };
+        for rounding in [
+            Rounding::Deterministic,
+            Rounding::Stoch5050,
+            Rounding::Stochastic,
+        ] {
+            for precision in [Precision::CobiInt, Precision::Fixed(4)] {
+                let cfg = RefineConfig {
+                    formulation: Formulation::Improved,
+                    precision,
+                    rounding,
+                    iterations: 8,
+                };
+                let runs: [(&str, Box<dyn Fn() -> Box<dyn IsingSolver>>); 3] = [
+                    ("tabu", Box::new(|| Box::new(TabuSolver::seeded(7)) as Box<dyn IsingSolver>)),
+                    ("sa", Box::new(|| Box::new(SaSolver::seeded(7)) as Box<dyn IsingSolver>)),
+                    ("greedy", Box::new(|| Box::new(GreedyDescent::new()) as Box<dyn IsingSolver>)),
+                ];
+                for (name, make) in runs {
+                    let mut rng_a = Pcg32::seeded(60);
+                    let mut rng_b = Pcg32::seeded(60);
+                    let mut solver_a = make();
+                    let mut solver_b = make();
+                    let fast = refine(&p, &cfg, solver_a.as_mut(), &mut rng_a).unwrap();
+                    let batched =
+                        refine_batched(&p, &cfg, solver_b.as_mut(), &mut rng_b).unwrap();
+                    assert_eq!(
+                        fast.result.selected, batched.result.selected,
+                        "{name} {precision} {rounding}"
+                    );
+                    assert_eq!(
+                        fast.result.objective.to_bits(),
+                        batched.result.objective.to_bits(),
+                        "{name} {precision} {rounding}"
+                    );
+                    let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                    assert_eq!(
+                        bits(&fast.objectives),
+                        bits(&batched.objectives),
+                        "{name} {precision} {rounding} per-iteration objectives"
+                    );
+                    assert_eq!(bits(&fast.best_so_far), bits(&batched.best_so_far));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fp_precision_keeps_the_batched_path() {
+        // no integer grid exists for Precision::Fp: refine must fall back
+        // and still work end to end
+        let mut rng = Pcg32::seeded(51);
+        let p = random_es(&mut rng, 10, 3);
+        let cfg = RefineConfig {
+            precision: Precision::Fp,
+            iterations: 4,
+            ..Default::default()
+        };
+        let trace = refine(&p, &cfg, &mut TabuSolver::seeded(9), &mut rng).unwrap();
+        assert_eq!(trace.objectives.len(), 4);
+        assert_eq!(trace.result.selected.len(), 3);
     }
 
     #[test]

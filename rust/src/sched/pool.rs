@@ -26,6 +26,14 @@
 //! request. Request seeds come from a per-document `PoolClient` stream
 //! keyed by the document seed, so the whole service output is a pure
 //! function of (config, corpus) under any pool/worker interleaving.
+//!
+//! Hot path: each device thread owns ONE long-lived solver, and the
+//! solver owns its `SolveScratch` workspace (DESIGN.md decision #13) —
+//! so steady-state traffic reuses spins/local-field/tenure buffers across
+//! requests, and quantized (integer-valued) instances run the integer
+//! `SolverKernel` automatically. Re-seeding resets only the RNG, never
+//! the scratch: scratch carries capacity, not state, so per-request
+//! determinism is unaffected (pinned by the test below).
 
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError};
 use std::sync::{Arc, Mutex};
@@ -670,6 +678,34 @@ mod tests {
         assert_eq!(good.join().unwrap().unwrap().len(), 1);
         drop(handle);
         pool.shutdown();
+    }
+
+    #[test]
+    fn pooled_tabu_runs_the_integer_kernel_identically_to_a_direct_solver() {
+        // pool instances are quantized, so the device-hosted solver takes
+        // the integer fast path; results must equal a directly re-seeded
+        // solver's (which takes the same path) AND the f64 reference —
+        // the pool-level face of the kernel equivalence contract
+        let pool = DevicePool::start(&settings("tabu", 1), None).unwrap();
+        let instances: Vec<Ising> = (0..3).map(|k| quantized_glass(800 + k, 14)).collect();
+        let mut client = pool.client(0xBEEF);
+        let pooled = client.submit(instances.clone()).unwrap().wait().unwrap();
+        drop(client);
+        pool.shutdown();
+
+        let request_seed = Pcg32::new(0xBEEF, CLIENT_SEED_STREAM).next_u64();
+        let mut direct = TabuSolver::seeded(0);
+        direct.reseed(request_seed);
+        let mut reference = TabuSolver::seeded(0);
+        reference.reseed(request_seed);
+        for (k, (p, inst)) in pooled.iter().zip(&instances).enumerate() {
+            let d = direct.solve(inst);
+            let r = reference.solve_reference_f64(inst);
+            assert_eq!(p.spins, d.spins, "instance {k}");
+            assert_eq!(p.energy.to_bits(), d.energy.to_bits(), "instance {k}");
+            assert_eq!(p.spins, r.spins, "instance {k} vs f64 reference");
+            assert_eq!(p.energy.to_bits(), r.energy.to_bits(), "instance {k}");
+        }
     }
 
     #[test]

@@ -157,7 +157,8 @@ pub fn ising_ground_exhaustive(ising: &Ising) -> (f64, Vec<i8>, u64) {
     let n = ising.n;
     assert!(n <= 30, "exhaustive enumeration infeasible for n={n}");
     let mut s = vec![-1i8; n];
-    let mut l = super::init_local_fields(ising, &s);
+    let mut l = vec![0.0f64; n];
+    super::SolverKernel::local_fields_into(ising, &s, &mut l);
     let mut e = ising.energy(&s);
     let mut best = e;
     let mut best_s = s.clone();

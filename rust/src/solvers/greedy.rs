@@ -6,9 +6,10 @@
 //! until M are selected, O(n * M * M). Exact when λ = 0; otherwise a
 //! heuristic that the Ising solvers must beat to justify the hardware.
 
-use crate::ising::{EsProblem, Ising};
+use crate::ising::{EsProblem, Ising, QuantIsing};
 
-use super::{apply_flip, init_local_fields, IsingSolver, SelectionResult, SolveResult, TIE_EPS};
+use super::kernel::{KernelScratch, QuantSolve, SolveScratch, SolverKernel};
+use super::{IsingSolver, SelectionResult, SolveResult};
 
 /// Greedy forward selection.
 pub fn solve(p: &EsProblem) -> SelectionResult {
@@ -85,45 +86,90 @@ pub fn solve_with_exchange(p: &EsProblem, max_rounds: usize) -> SelectionResult 
 /// with the largest energy gain until no flip improves, breaking exact
 /// ties toward the lowest index (the solver-wide rule — see
 /// [`IsingSolver`] docs). Zero randomness, O(n) per flip via incremental
-/// local fields.
+/// local fields. The descent is generic over [`SolverKernel`]:
+/// integer-valued instances run on exact `i64` arithmetic, bit-identical
+/// to the `f64` path (pinned below).
 ///
 /// In the solver portfolio this is the cheap hint-polisher: warm-started
 /// from a cached near-match (`solve_from`) it converges in a handful of
 /// flips, and its result is never worse than the hint. Cold solves start
 /// from the field-aligned configuration (`s_i = -sign(h_i)`, ties to +1).
-#[derive(Debug, Clone, Copy, Default)]
-pub struct GreedyDescent;
+#[derive(Debug, Clone, Default)]
+pub struct GreedyDescent {
+    scratch: SolveScratch,
+}
 
 impl GreedyDescent {
     pub fn new() -> Self {
-        Self
+        Self::default()
     }
 
-    /// Strict descent from `init` to the nearest local minimum.
-    fn descend(ising: &Ising, mut s: Vec<i8>) -> SolveResult {
-        let n = ising.n;
-        let mut l = init_local_fields(ising, &s);
-        let mut e = ising.energy(&s);
-        loop {
-            // best strictly-improving flip; strict `<` keeps the lowest
-            // index on exact ties
-            let mut chosen: Option<(usize, f64)> = None;
-            for i in 0..n {
-                let delta = -2.0 * s[i] as f64 * l[i];
-                if delta < -TIE_EPS && chosen.map_or(true, |(_, d)| delta < d) {
-                    chosen = Some((i, delta));
-                }
+    /// Solve, picking the coefficient domain (see `TabuSolver::solve_any`).
+    fn solve_any(&mut self, ising: &Ising, init: Option<&[i8]>) -> SolveResult {
+        let scratch = &mut self.scratch;
+        if scratch.quant.try_copy_from(ising) {
+            let energy = descend_core(&scratch.quant, &mut scratch.int, init);
+            SolveResult {
+                spins: scratch.int.best.clone(),
+                energy,
             }
-            match chosen {
-                Some((i, delta)) => {
-                    apply_flip(ising, &mut s, &mut l, i);
-                    e += delta;
-                }
-                None => break, // local minimum: strict descent terminates
+        } else {
+            let energy = descend_core(ising, &mut scratch.fp, init);
+            SolveResult {
+                spins: scratch.fp.best.clone(),
+                energy,
             }
         }
-        SolveResult { spins: s, energy: e }
     }
+
+    /// Force the `f64` kernel — the reference entry the integer path is
+    /// pinned against (see `TabuSolver::solve_reference_f64`).
+    pub fn solve_reference_f64(&mut self, ising: &Ising) -> SolveResult {
+        let energy = descend_core(ising, &mut self.scratch.fp, None);
+        SolveResult {
+            spins: self.scratch.fp.best.clone(),
+            energy,
+        }
+    }
+}
+
+/// Strict steepest descent to the nearest local minimum, from `init` when
+/// given or the field-aligned cold start otherwise. Final spins land in
+/// `ks.best`; returns their energy.
+pub(crate) fn descend_core<K: SolverKernel>(
+    k: &K,
+    ks: &mut KernelScratch<K::Acc>,
+    init: Option<&[i8]>,
+) -> f64 {
+    let n = k.n();
+    debug_assert!(init.map_or(true, |h| h.len() == n), "warm-start hint length mismatch");
+    ks.prepare(n);
+    match init {
+        Some(h) => ks.spins.copy_from_slice(h),
+        None => k.cold_init(&mut ks.spins),
+    }
+    k.local_fields_into(&ks.spins, &mut ks.l);
+    let mut e = k.energy_acc(&ks.spins);
+    loop {
+        // best strictly-improving flip; strict `<` keeps the lowest
+        // index on exact ties
+        let mut chosen: Option<(usize, K::Acc)> = None;
+        for i in 0..n {
+            let delta = K::flip_delta(&ks.spins, &ks.l, i);
+            if K::improves(delta) && chosen.map_or(true, |(_, d)| delta < d) {
+                chosen = Some((i, delta));
+            }
+        }
+        match chosen {
+            Some((i, delta)) => {
+                k.apply_flip_acc(&mut ks.spins, &mut ks.l, i);
+                e += delta;
+            }
+            None => break, // local minimum: strict descent terminates
+        }
+    }
+    ks.best.copy_from_slice(&ks.spins);
+    K::to_f64(e)
 }
 
 impl IsingSolver for GreedyDescent {
@@ -132,17 +178,25 @@ impl IsingSolver for GreedyDescent {
     }
 
     fn solve(&mut self, ising: &Ising) -> SolveResult {
-        let init: Vec<i8> = ising
-            .h
-            .iter()
-            .map(|&h| if h > 0.0 { -1 } else { 1 })
-            .collect();
-        Self::descend(ising, init)
+        self.solve_any(ising, None)
     }
 
     fn solve_from(&mut self, ising: &Ising, init: &[i8]) -> SolveResult {
         debug_assert_eq!(init.len(), ising.n, "warm-start hint length mismatch");
-        Self::descend(ising, init.to_vec())
+        self.solve_any(ising, Some(init))
+    }
+
+    fn quant_kernel(&mut self) -> Option<&mut dyn QuantSolve> {
+        Some(self)
+    }
+}
+
+impl QuantSolve for GreedyDescent {
+    fn solve_quant_into(&mut self, q: &QuantIsing, out: &mut Vec<i8>) -> f64 {
+        let energy = descend_core(q, &mut self.scratch.int, None);
+        out.clear();
+        out.extend_from_slice(&self.scratch.int.best);
+        energy
     }
 }
 
@@ -232,6 +286,35 @@ mod tests {
             let mut s = a.spins.clone();
             s[i] = -s[i];
             assert!(ising.energy(&s) >= a.energy - 1e-9, "flip {i} improves");
+        }
+    }
+
+    #[test]
+    fn integer_kernel_is_bit_identical_to_f64_on_quantized_instances() {
+        // acceptance pin (greedy): cold descent AND warm descent return
+        // the same spins and bitwise-equal energy in both domains
+        use crate::cobi::testutil::quantized_glass;
+        let mut rng = Pcg32::seeded(33);
+        for seed in 0..6 {
+            for n in [5, 12, 20, 33] {
+                let inst = quantized_glass(3000 + seed, n);
+                let a = GreedyDescent::new().solve_reference_f64(&inst);
+                let b = GreedyDescent::new().solve(&inst);
+                assert_eq!(a.spins, b.spins, "seed {seed} n {n}");
+                assert_eq!(a.energy.to_bits(), b.energy.to_bits(), "seed {seed} n {n}");
+
+                let hint: Vec<i8> = (0..n)
+                    .map(|_| if rng.bernoulli(0.5) { 1 } else { -1 })
+                    .collect();
+                let wa = {
+                    let mut g = GreedyDescent::new();
+                    let e = descend_core(&inst, &mut g.scratch.fp, Some(&hint));
+                    (g.scratch.fp.best.clone(), e)
+                };
+                let wb = GreedyDescent::new().solve_from(&inst, &hint);
+                assert_eq!(wa.0, wb.spins, "warm seed {seed} n {n}");
+                assert_eq!(wa.1.to_bits(), wb.energy.to_bits(), "warm seed {seed} n {n}");
+            }
         }
     }
 

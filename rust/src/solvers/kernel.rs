@@ -1,0 +1,345 @@
+//! `SolverKernel`: one set of Tabu/SA/greedy inner loops, two coefficient
+//! domains.
+//!
+//! The quantized solve path used to run integer-valued Hamiltonians
+//! through dense `f32` matrices with `f64` scalar loops. This module lets
+//! each heuristic solver run the SAME control flow over either domain:
+//!
+//! * [`Ising`] — `f32` coefficients, `f64` accumulators, the original
+//!   kernels. Tie comparisons use the [`TIE_EPS`] margin.
+//! * [`QuantIsing`] — `i32`/`i16` coefficients, `i64` accumulators. Ties
+//!   are **exact integer equality**; no epsilon exists on this path.
+//!
+//! The two rules coincide on quantized instances (small integers are
+//! exact in `f64`, and for integers `a < b - 1e-12` ⟺ `a < b`), so the
+//! integer kernels return **bit-identical spins and energies** to the
+//! `f64` kernels — pinned by per-solver equivalence tests. That identity
+//! is what lets [`TabuSolver`](super::tabu::TabuSolver),
+//! [`SaSolver`](super::sa::SaSolver) and
+//! [`GreedyDescent`](super::greedy::GreedyDescent) switch to the integer
+//! domain transparently whenever an instance is integer-valued, without
+//! changing one summary byte.
+//!
+//! [`SolveScratch`] is the per-solver workspace (spins, local fields,
+//! tabu tenures, the integer-instance buffer): every buffer is resized in
+//! place, so a long-lived solver — one per pool device, portfolio backend
+//! or pipeline — does zero heap allocation per solve in steady state
+//! (DESIGN.md decision #13 records why solvers own it, not the pool).
+
+use crate::ising::{Ising, QuantIsing};
+
+use super::TIE_EPS;
+
+/// A coefficient domain the heuristic inner loops can run on: provides
+/// energies, incremental local fields and the domain's tie semantics.
+/// Implemented by [`Ising`] (`f64` accumulators, `TIE_EPS` ties) and
+/// [`QuantIsing`] (`i64` accumulators, exact ties) — see module docs.
+pub trait SolverKernel {
+    /// Energy / local-field / move-delta accumulator. `Default` is the
+    /// zero value (what `KernelScratch::prepare` fills buffers with).
+    type Acc: Copy
+        + Default
+        + PartialOrd
+        + std::ops::Add<Output = Self::Acc>
+        + std::ops::AddAssign;
+
+    fn n(&self) -> usize;
+
+    /// Full energy of `s` (ordered-pair convention).
+    fn energy_acc(&self, s: &[i8]) -> Self::Acc;
+
+    /// Fill `l` with local fields L_i = h_i + 2 Σ_j J_ij s_j.
+    fn local_fields_into(&self, s: &[i8], l: &mut [Self::Acc]);
+
+    /// Flip spin `k` and update all local fields incrementally (O(n)).
+    fn apply_flip_acc(&self, s: &mut [i8], l: &mut [Self::Acc], k: usize);
+
+    /// Energy delta of flipping spin `i`: ΔE = -2 s_i L_i.
+    fn flip_delta(s: &[i8], l: &[Self::Acc], i: usize) -> Self::Acc;
+
+    /// `a` beats `b` by more than a tie margin (the "strictly better"
+    /// test for best-so-far and aspiration): `a < b - TIE_EPS` on the
+    /// f64 domain, exact `a < b` on the integer domain.
+    fn lt_margin(a: Self::Acc, b: Self::Acc) -> bool;
+
+    /// Strictly-improving move: `delta < -TIE_EPS` / `delta < 0`.
+    fn improves(delta: Self::Acc) -> bool;
+
+    /// Downhill-or-flat move (the SA free-accept test): `delta <= 0`.
+    fn non_increasing(delta: Self::Acc) -> bool;
+
+    /// Exact on every reachable value (integer accumulators stay far
+    /// below 2^53 — see `ising::quant_model` headroom analysis).
+    fn to_f64(a: Self::Acc) -> f64;
+
+    /// Field-aligned cold start: s_i = -sign(h_i), ties to +1 (the
+    /// greedy-descent cold init).
+    fn cold_init(&self, s: &mut [i8]);
+}
+
+impl SolverKernel for Ising {
+    type Acc = f64;
+
+    #[inline]
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn energy_acc(&self, s: &[i8]) -> f64 {
+        self.energy(s)
+    }
+
+    fn local_fields_into(&self, s: &[i8], l: &mut [f64]) {
+        let n = self.n;
+        for i in 0..n {
+            let row = &self.j[i * n..(i + 1) * n];
+            let mut acc = 0.0f64;
+            for j in 0..n {
+                acc += row[j] as f64 * s[j] as f64;
+            }
+            l[i] = self.h[i] as f64 + 2.0 * acc;
+        }
+    }
+
+    fn apply_flip_acc(&self, s: &mut [i8], l: &mut [f64], k: usize) {
+        super::apply_flip(self, s, l, k);
+    }
+
+    #[inline]
+    fn flip_delta(s: &[i8], l: &[f64], i: usize) -> f64 {
+        -2.0 * s[i] as f64 * l[i]
+    }
+
+    #[inline]
+    fn lt_margin(a: f64, b: f64) -> bool {
+        a < b - TIE_EPS
+    }
+
+    #[inline]
+    fn improves(delta: f64) -> bool {
+        delta < -TIE_EPS
+    }
+
+    #[inline]
+    fn non_increasing(delta: f64) -> bool {
+        delta <= 0.0
+    }
+
+    #[inline]
+    fn to_f64(a: f64) -> f64 {
+        a
+    }
+
+    fn cold_init(&self, s: &mut [i8]) {
+        for (x, &h) in s.iter_mut().zip(&self.h) {
+            *x = if h > 0.0 { -1 } else { 1 };
+        }
+    }
+}
+
+impl SolverKernel for QuantIsing {
+    type Acc = i64;
+
+    #[inline]
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn energy_acc(&self, s: &[i8]) -> i64 {
+        self.energy(s)
+    }
+
+    fn local_fields_into(&self, s: &[i8], l: &mut [i64]) {
+        let n = self.n;
+        for i in 0..n {
+            let row = &self.j[i * n..(i + 1) * n];
+            let mut acc = 0i64;
+            for j in 0..n {
+                acc += row[j] as i64 * s[j] as i64;
+            }
+            l[i] = self.h[i] as i64 + 2 * acc;
+        }
+    }
+
+    fn apply_flip_acc(&self, s: &mut [i8], l: &mut [i64], k: usize) {
+        s[k] = -s[k];
+        let new_sk = s[k] as i64;
+        let n = self.n;
+        let row = &self.j[k * n..(k + 1) * n];
+        for i in 0..n {
+            // row[k] == 0 (zero diagonal) so including i == k is harmless
+            l[i] += 4 * row[i] as i64 * new_sk;
+        }
+    }
+
+    #[inline]
+    fn flip_delta(s: &[i8], l: &[i64], i: usize) -> i64 {
+        -2 * s[i] as i64 * l[i]
+    }
+
+    #[inline]
+    fn lt_margin(a: i64, b: i64) -> bool {
+        a < b
+    }
+
+    #[inline]
+    fn improves(delta: i64) -> bool {
+        delta < 0
+    }
+
+    #[inline]
+    fn non_increasing(delta: i64) -> bool {
+        delta <= 0
+    }
+
+    #[inline]
+    fn to_f64(a: i64) -> f64 {
+        a as f64
+    }
+
+    fn cold_init(&self, s: &mut [i8]) {
+        for (x, &h) in s.iter_mut().zip(&self.h) {
+            *x = if h > 0 { -1 } else { 1 };
+        }
+    }
+}
+
+/// Reusable working memory for one coefficient domain: current spins, the
+/// best configuration of the current run, the best across runs, local
+/// fields and tabu tenures. `prepare` resizes everything in place.
+#[derive(Debug, Clone, Default)]
+pub struct KernelScratch<A> {
+    pub(crate) spins: Vec<i8>,
+    pub(crate) run_best: Vec<i8>,
+    pub(crate) best: Vec<i8>,
+    pub(crate) l: Vec<A>,
+    pub(crate) tabu_until: Vec<usize>,
+}
+
+impl<A: Copy + Default> KernelScratch<A> {
+    pub(crate) fn prepare(&mut self, n: usize) {
+        self.spins.clear();
+        self.spins.resize(n, 0);
+        self.run_best.clear();
+        self.run_best.resize(n, 0);
+        self.best.clear();
+        self.best.resize(n, 0);
+        self.l.clear();
+        self.l.resize(n, A::default());
+        // tabu_until is (re)zeroed per run by the tabu core
+    }
+}
+
+/// The per-solver workspace threaded through every hot solve: one
+/// [`KernelScratch`] per domain plus the integer-instance buffer that
+/// `try_copy_from` / `quantize_into` fill. Owned by the solver (Tabu, SA,
+/// greedy descent) so that the long-lived solver instances hosted by pool
+/// devices, portfolios and pipelines reuse it across requests — steady
+/// state does zero hot-path allocation.
+#[derive(Debug, Clone, Default)]
+pub struct SolveScratch {
+    pub(crate) fp: KernelScratch<f64>,
+    pub(crate) int: KernelScratch<i64>,
+    pub(crate) quant: QuantIsing,
+}
+
+/// A solver that can run its inner loop directly on an integer-domain
+/// instance, writing the result into caller-owned buffers — the
+/// allocation-free entry the refinement fast path uses. Returns the best
+/// energy (an exact integer, reported as `f64` for [`SolveResult`]
+/// compatibility); `out` is cleared and filled with the best spins.
+///
+/// [`SolveResult`]: super::SolveResult
+pub trait QuantSolve {
+    fn solve_quant_into(&mut self, q: &QuantIsing, out: &mut Vec<i8>) -> f64;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn int_glass(seed: u64, n: usize) -> QuantIsing {
+        let mut rng = Pcg32::seeded(seed);
+        let mut q = QuantIsing::new(n);
+        for i in 0..n {
+            q.h[i] = rng.below(29) as i32 - 14;
+            for j in (i + 1)..n {
+                q.set_pair(i, j, (rng.below(29) as i32 - 14) as i16);
+            }
+        }
+        q
+    }
+
+    #[test]
+    fn integer_local_fields_track_flips_exactly() {
+        let q = int_glass(5, 16);
+        let f = q.to_ising();
+        let mut rng = Pcg32::seeded(6);
+        let mut s: Vec<i8> = (0..16)
+            .map(|_| if rng.bernoulli(0.5) { 1 } else { -1 })
+            .collect();
+        let mut li = vec![0i64; 16];
+        let mut lf = vec![0.0f64; 16];
+        q.local_fields_into(&s, &mut li);
+        <Ising as SolverKernel>::local_fields_into(&f, &s, &mut lf);
+        for _ in 0..40 {
+            let k = rng.below(16) as usize;
+            let di = <QuantIsing as SolverKernel>::flip_delta(&s, &li, k);
+            let df = <Ising as SolverKernel>::flip_delta(&s, &lf, k);
+            assert_eq!(di as f64, df);
+            let mut s2 = s.clone();
+            q.apply_flip_acc(&mut s, &mut li, k);
+            f.apply_flip_acc(&mut s2, &mut lf, k);
+            assert_eq!(s, s2);
+            for i in 0..16 {
+                assert_eq!(li[i] as f64, lf[i], "field {i} diverged");
+            }
+            // incremental matches from-scratch
+            let mut fresh = vec![0i64; 16];
+            q.local_fields_into(&s, &mut fresh);
+            assert_eq!(fresh, li);
+        }
+    }
+
+    #[test]
+    fn tie_semantics_agree_on_integers() {
+        // the module-level claim in miniature: the f64 margin rule and
+        // the exact integer rule decide identically on integer data
+        for a in -3i64..=3 {
+            for b in -3i64..=3 {
+                assert_eq!(
+                    <QuantIsing as SolverKernel>::lt_margin(a, b),
+                    <Ising as SolverKernel>::lt_margin(a as f64, b as f64),
+                    "lt_margin({a}, {b})"
+                );
+            }
+            assert_eq!(
+                <QuantIsing as SolverKernel>::improves(a),
+                <Ising as SolverKernel>::improves(a as f64),
+                "improves({a})"
+            );
+            assert_eq!(
+                <QuantIsing as SolverKernel>::non_increasing(a),
+                <Ising as SolverKernel>::non_increasing(a as f64),
+                "non_increasing({a})"
+            );
+        }
+    }
+
+    #[test]
+    fn cold_init_agrees_across_domains() {
+        let q = int_glass(9, 12);
+        let f = q.to_ising();
+        let mut si = vec![0i8; 12];
+        let mut sf = vec![0i8; 12];
+        q.cold_init(&mut si);
+        f.cold_init(&mut sf);
+        assert_eq!(si, sf);
+        // zero field maps to +1 in both domains
+        let z = QuantIsing::new(3);
+        let mut s = vec![0i8; 3];
+        z.cold_init(&mut s);
+        assert_eq!(s, vec![1, 1, 1]);
+    }
+}

@@ -5,10 +5,13 @@
 pub mod brute;
 pub mod exact;
 pub mod greedy;
+pub mod kernel;
 pub mod oscillator;
 pub mod random;
 pub mod sa;
 pub mod tabu;
+
+pub use kernel::{KernelScratch, QuantSolve, SolveScratch, SolverKernel};
 
 use crate::ising::Ising;
 
@@ -31,7 +34,11 @@ pub struct SelectionResult {
 }
 
 /// Tolerance under which two energies (or move deltas) count as exactly
-/// tied for the solver-wide tie-break rule (see [`IsingSolver`]).
+/// tied for the solver-wide tie-break rule (see [`IsingSolver`]) on the
+/// `f64` kernel path. The integer kernel path ([`SolverKernel`] over
+/// [`QuantIsing`](crate::ising::QuantIsing)) has no epsilon: ties are
+/// exact integer equality, which agrees with this rule bit-for-bit on
+/// quantized instances (see `ising::quant_model` module docs).
 pub const TIE_EPS: f64 = 1e-12;
 
 /// An Ising minimizer. Implementations are deterministic given their
@@ -128,21 +135,17 @@ pub trait IsingSolver {
     fn solve_batch(&mut self, instances: &[&Ising]) -> Vec<SolveResult> {
         instances.iter().map(|i| self.solve(i)).collect()
     }
-}
 
-/// Helper shared by solvers: energy + local-field initialisation.
-pub(crate) fn init_local_fields(ising: &Ising, s: &[i8]) -> Vec<f64> {
-    let n = ising.n;
-    let mut l = vec![0.0f64; n];
-    for i in 0..n {
-        let row = &ising.j[i * n..(i + 1) * n];
-        let mut acc = 0.0f64;
-        for j in 0..n {
-            acc += row[j] as f64 * s[j] as f64;
-        }
-        l[i] = ising.h[i] as f64 + 2.0 * acc;
+    /// The integer-domain entry of this solver, if it has one. Hint-free
+    /// heuristics with a [`SolverKernel`] inner loop (Tabu, SA, greedy
+    /// descent) return `Some(self)`; devices and facades return `None`
+    /// (the default) and keep the `f32` batch path. The refinement fast
+    /// path uses this to quantize straight into integer buffers and skip
+    /// the `f32` instance materialization entirely — results are
+    /// bit-identical either way (see `ising::quant_model`).
+    fn quant_kernel(&mut self) -> Option<&mut dyn QuantSolve> {
+        None
     }
-    l
 }
 
 /// Apply a flip of spin `k` and update local fields incrementally:
@@ -180,12 +183,14 @@ mod tests {
         let mut rng = Pcg32::seeded(77);
         let ising = random_ising(&mut rng, 16);
         let mut s: Vec<i8> = (0..16).map(|_| if rng.bernoulli(0.5) { 1 } else { -1 }).collect();
-        let mut l = init_local_fields(&ising, &s);
+        let mut l = vec![0.0f64; 16];
+        ising.local_fields_into(&s, &mut l);
         for _ in 0..50 {
             let k = rng.below(16) as usize;
             apply_flip(&ising, &mut s, &mut l, k);
             // recompute from scratch and compare
-            let fresh = init_local_fields(&ising, &s);
+            let mut fresh = vec![0.0f64; 16];
+            ising.local_fields_into(&s, &mut fresh);
             for i in 0..16 {
                 assert!((l[i] - fresh[i]).abs() < 1e-9, "i={i}");
             }
@@ -239,11 +244,12 @@ mod tests {
         let mut rng = Pcg32::seeded(78);
         let ising = random_ising(&mut rng, 12);
         let mut s: Vec<i8> = (0..12).map(|_| if rng.bernoulli(0.5) { 1 } else { -1 }).collect();
-        let mut l = init_local_fields(&ising, &s);
+        let mut l = vec![0.0f64; 12];
+        ising.local_fields_into(&s, &mut l);
         for _ in 0..20 {
             let k = rng.below(12) as usize;
             let e0 = ising.energy(&s);
-            let pred = -2.0 * s[k] as f64 * l[k];
+            let pred = <Ising as SolverKernel>::flip_delta(&s, &l, k);
             apply_flip(&ising, &mut s, &mut l, k);
             let e1 = ising.energy(&s);
             assert!(((e1 - e0) - pred).abs() < 1e-9);

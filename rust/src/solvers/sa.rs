@@ -1,11 +1,18 @@
 //! Simulated annealing Ising solver (extension beyond the paper's
 //! baselines; used in the ablation benches as a second software reference
 //! point and by tests as an independent heuristic cross-check).
+//!
+//! The sweep loop is generic over [`SolverKernel`]: integer-valued
+//! instances run on `i64` accumulators (only the Metropolis exponent
+//! touches floating point, computed from the exact integer delta), others
+//! on the original `f64` path — bit-identical on quantized instances,
+//! pinned by the equivalence test below.
 
-use crate::ising::Ising;
+use crate::ising::{Ising, QuantIsing};
 use crate::util::rng::Pcg32;
 
-use super::{apply_flip, init_local_fields, IsingSolver, SolveResult};
+use super::kernel::{KernelScratch, QuantSolve, SolveScratch, SolverKernel};
+use super::{IsingSolver, SolveResult};
 
 #[derive(Debug, Clone)]
 pub struct SaConfig {
@@ -32,6 +39,7 @@ impl Default for SaConfig {
 pub struct SaSolver {
     cfg: SaConfig,
     rng: Pcg32,
+    scratch: SolveScratch,
 }
 
 impl SaSolver {
@@ -39,6 +47,7 @@ impl SaSolver {
         Self {
             cfg,
             rng: Pcg32::new(seed, 0x5A5A),
+            scratch: SolveScratch::default(),
         }
     }
 
@@ -52,48 +61,105 @@ impl SaSolver {
         self.rng = Pcg32::new(seed, 0x5A5A);
     }
 
-    fn run_once(&mut self, ising: &Ising) -> SolveResult {
-        let init: Vec<i8> = (0..ising.n)
-            .map(|_| if self.rng.bernoulli(0.5) { 1 } else { -1 })
-            .collect();
-        self.run_from(ising, init)
+    /// Solve, picking the coefficient domain (see `TabuSolver::solve_any`).
+    fn solve_any(&mut self, ising: &Ising, warm: Option<&[i8]>) -> SolveResult {
+        let Self { cfg, rng, scratch } = self;
+        if scratch.quant.try_copy_from(ising) {
+            let energy = sa_core(&scratch.quant, cfg, rng, &mut scratch.int, warm);
+            SolveResult {
+                spins: scratch.int.best.clone(),
+                energy,
+            }
+        } else {
+            let energy = sa_core(ising, cfg, rng, &mut scratch.fp, warm);
+            SolveResult {
+                spins: scratch.fp.best.clone(),
+                energy,
+            }
+        }
     }
 
-    /// One annealing run from an explicit start configuration (warm-start
-    /// path: no init randomness is drawn; best-so-far starts at `init`,
-    /// so the result is never worse than the hint).
-    fn run_from(&mut self, ising: &Ising, init: Vec<i8>) -> SolveResult {
-        let n = ising.n;
-        debug_assert_eq!(init.len(), n);
-        let mut s = init;
-        let mut l = init_local_fields(ising, &s);
-        let mut e = ising.energy(&s);
-        let mut best_e = e;
-        let mut best_s = s.clone();
+    /// Force the `f64` kernel — the reference entry the integer path is
+    /// pinned against (see `TabuSolver::solve_reference_f64`).
+    pub fn solve_reference_f64(&mut self, ising: &Ising) -> SolveResult {
+        let Self { cfg, rng, scratch } = self;
+        let energy = sa_core(ising, cfg, rng, &mut scratch.fp, None);
+        SolveResult {
+            spins: scratch.fp.best.clone(),
+            energy,
+        }
+    }
+}
 
-        let sweeps = self.cfg.sweeps.max(1);
-        let cool = (self.cfg.t_end / self.cfg.t_start).powf(1.0 / sweeps as f64);
-        let mut t = self.cfg.t_start;
-        for _ in 0..sweeps {
-            for _ in 0..n {
-                let i = self.rng.below(n as u32) as usize;
-                let delta = -2.0 * s[i] as f64 * l[i];
-                if delta <= 0.0 || self.rng.f64() < (-delta / t).exp() {
-                    apply_flip(ising, &mut s, &mut l, i);
-                    e += delta;
-                    if e < best_e - 1e-12 {
-                        best_e = e;
-                        best_s.copy_from_slice(&s);
-                    }
+/// Restart wrapper over [`sa_run`]: restart 0 starts from `warm` when
+/// given (no init randomness; best-so-far starts at the hint, so the
+/// result is never worse than it), later restarts from random
+/// configurations; best kept on strict `<`.
+pub(crate) fn sa_core<K: SolverKernel>(
+    k: &K,
+    cfg: &SaConfig,
+    rng: &mut Pcg32,
+    ks: &mut KernelScratch<K::Acc>,
+    warm: Option<&[i8]>,
+) -> f64 {
+    let n = k.n();
+    debug_assert!(warm.map_or(true, |h| h.len() == n), "warm-start hint length mismatch");
+    ks.prepare(n);
+    let mut overall: Option<K::Acc> = None;
+    for r in 0..cfg.restarts.max(1) {
+        match warm {
+            Some(h) if r == 0 => ks.spins.copy_from_slice(h),
+            _ => {
+                for x in ks.spins.iter_mut() {
+                    *x = if rng.bernoulli(0.5) { 1 } else { -1 };
                 }
             }
-            t *= cool;
         }
-        SolveResult {
-            spins: best_s,
-            energy: best_e,
+        let e = sa_run(k, cfg, rng, ks);
+        if overall.map_or(true, |b| e < b) {
+            overall = Some(e);
+            ks.best.copy_from_slice(&ks.run_best);
         }
     }
+    K::to_f64(overall.expect("restarts >= 1"))
+}
+
+/// One annealing run from the configuration in `ks.spins`; best spins of
+/// the run land in `ks.run_best`.
+fn sa_run<K: SolverKernel>(
+    k: &K,
+    cfg: &SaConfig,
+    rng: &mut Pcg32,
+    ks: &mut KernelScratch<K::Acc>,
+) -> K::Acc {
+    let n = k.n();
+    k.local_fields_into(&ks.spins, &mut ks.l);
+    let mut e = k.energy_acc(&ks.spins);
+    let mut best_e = e;
+    ks.run_best.copy_from_slice(&ks.spins);
+
+    let sweeps = cfg.sweeps.max(1);
+    let cool = (cfg.t_end / cfg.t_start).powf(1.0 / sweeps as f64);
+    let mut t = cfg.t_start;
+    for _ in 0..sweeps {
+        for _ in 0..n {
+            let i = rng.below(n as u32) as usize;
+            let delta = K::flip_delta(&ks.spins, &ks.l, i);
+            // downhill-or-flat accepts free (no RNG draw — identical
+            // draw order across domains); uphill via Metropolis on the
+            // exact delta
+            if K::non_increasing(delta) || rng.f64() < (-K::to_f64(delta) / t).exp() {
+                k.apply_flip_acc(&mut ks.spins, &mut ks.l, i);
+                e += delta;
+                if K::lt_margin(e, best_e) {
+                    best_e = e;
+                    ks.run_best.copy_from_slice(&ks.spins);
+                }
+            }
+        }
+        t *= cool;
+    }
+    best_e
 }
 
 impl IsingSolver for SaSolver {
@@ -102,34 +168,35 @@ impl IsingSolver for SaSolver {
     }
 
     fn solve(&mut self, ising: &Ising) -> SolveResult {
-        let mut best: Option<SolveResult> = None;
-        for _ in 0..self.cfg.restarts.max(1) {
-            let r = self.run_once(ising);
-            if best.as_ref().map_or(true, |b| r.energy < b.energy) {
-                best = Some(r);
-            }
-        }
-        best.unwrap()
+        self.solve_any(ising, None)
     }
 
     fn solve_from(&mut self, ising: &Ising, init: &[i8]) -> SolveResult {
         debug_assert_eq!(init.len(), ising.n, "warm-start hint length mismatch");
         // first restart from the hint, remaining restarts cold; strict
         // `<` keeps the warm result on exact ties
-        let mut best = self.run_from(ising, init.to_vec());
-        for _ in 1..self.cfg.restarts.max(1) {
-            let r = self.run_once(ising);
-            if r.energy < best.energy {
-                best = r;
-            }
-        }
-        best
+        self.solve_any(ising, Some(init))
+    }
+
+    fn quant_kernel(&mut self) -> Option<&mut dyn QuantSolve> {
+        Some(self)
+    }
+}
+
+impl QuantSolve for SaSolver {
+    fn solve_quant_into(&mut self, q: &QuantIsing, out: &mut Vec<i8>) -> f64 {
+        let Self { cfg, rng, scratch } = self;
+        let energy = sa_core(q, cfg, rng, &mut scratch.int, None);
+        out.clear();
+        out.extend_from_slice(&scratch.int.best);
+        energy
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cobi::testutil::quantized_glass;
     use crate::solvers::exact::ising_ground_exhaustive;
 
     fn random_ising(seed: u64, n: usize) -> Ising {
@@ -172,5 +239,30 @@ mod tests {
             SaSolver::seeded(4).solve(&ising).spins,
             SaSolver::seeded(4).solve(&ising).spins
         );
+    }
+
+    #[test]
+    fn integer_kernel_is_bit_identical_to_f64_on_quantized_instances() {
+        // acceptance pin (SA): identical spins, bitwise-equal energy —
+        // including identical Metropolis draw order, since the free-accept
+        // branch decides the same way in both domains
+        for seed in 0..6 {
+            for n in [5, 12, 20, 33] {
+                let inst = quantized_glass(2000 + seed, n);
+                let a = SaSolver::seeded(seed).solve_reference_f64(&inst);
+                let b = SaSolver::seeded(seed).solve(&inst);
+                assert_eq!(a.spins, b.spins, "seed {seed} n {n}");
+                assert_eq!(a.energy.to_bits(), b.energy.to_bits(), "seed {seed} n {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn integer_warm_start_never_loses_the_hint() {
+        let inst = quantized_glass(91, 12);
+        let (ge, gs, _) = ising_ground_exhaustive(&inst);
+        let r = SaSolver::seeded(3).solve_from(&inst, &gs);
+        assert_eq!(r.spins, gs);
+        assert!((r.energy - ge).abs() < 1e-9);
     }
 }

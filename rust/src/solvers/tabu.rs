@@ -1,15 +1,23 @@
 //! Tabu search over Ising instances (paper's software baseline [7], [25]).
 //!
 //! Tenure-based single-flip Tabu with aspiration and restarts, using the
-//! incremental local-field machinery from `solvers::` (O(n) per move).
-//! This is the solver the paper runs "under the same precision as COBI"
-//! in Figs 1–3/5–8; its budget defaults reproduce a dwave-tabu-like
+//! incremental local-field machinery from `solvers::kernel` (O(n) per
+//! move). This is the solver the paper runs "under the same precision as
+//! COBI" in Figs 1–3/5–8; its budget defaults reproduce a dwave-tabu-like
 //! effort profile on 10–64 spin instances.
+//!
+//! The inner loop is generic over [`SolverKernel`]: integer-valued
+//! instances (every quantized Hamiltonian) run on `i64` accumulators over
+//! `i32`/`i16` coefficients; everything else takes the original `f64`
+//! path. The two are bit-identical on quantized instances (see
+//! `ising::quant_model`), pinned by the equivalence test below, so the
+//! domain switch is invisible to callers.
 
-use crate::ising::Ising;
+use crate::ising::{Ising, QuantIsing};
 use crate::util::rng::Pcg32;
 
-use super::{apply_flip, init_local_fields, IsingSolver, SolveResult};
+use super::kernel::{KernelScratch, QuantSolve, SolveScratch, SolverKernel};
+use super::{IsingSolver, SolveResult};
 
 #[derive(Debug, Clone)]
 pub struct TabuConfig {
@@ -34,6 +42,7 @@ impl Default for TabuConfig {
 pub struct TabuSolver {
     cfg: TabuConfig,
     rng: Pcg32,
+    scratch: SolveScratch,
 }
 
 impl TabuSolver {
@@ -41,6 +50,7 @@ impl TabuSolver {
         Self {
             cfg,
             rng: Pcg32::new(seed, 0x7AB0),
+            scratch: SolveScratch::default(),
         }
     }
 
@@ -50,71 +60,133 @@ impl TabuSolver {
 
     /// Reset the RNG to a fresh stream keyed by `seed` — the device pool
     /// re-seeds before every request so results depend only on the
-    /// request seed, never on dispatch order.
+    /// request seed, never on dispatch order. The scratch workspace is
+    /// untouched: it carries no solve state across requests, only
+    /// capacity.
     pub fn reseed(&mut self, seed: u64) {
         self.rng = Pcg32::new(seed, 0x7AB0);
     }
 
-    fn run_once(&mut self, ising: &Ising) -> SolveResult {
-        let init: Vec<i8> = (0..ising.n)
-            .map(|_| if self.rng.bernoulli(0.5) { 1 } else { -1 })
-            .collect();
-        self.run_from(ising, init)
-    }
-
-    /// One tabu run starting from an explicit configuration (the
-    /// warm-start path draws no init randomness; the RNG is touched only
-    /// by all-tabu kicks, exactly as in a cold run).
-    fn run_from(&mut self, ising: &Ising, init: Vec<i8>) -> SolveResult {
-        let n = ising.n;
-        debug_assert_eq!(init.len(), n);
-        let tenure = ((n as f64 * self.cfg.tenure_frac) as usize).max(4);
-        let max_moves = self.cfg.moves_per_spin * n;
-
-        let mut s = init;
-        let mut l = init_local_fields(ising, &s);
-        let mut e = ising.energy(&s);
-        let mut best_e = e;
-        let mut best_s = s.clone();
-        // tabu_until[i]: first move index at which flipping i is allowed
-        let mut tabu_until = vec![0usize; n];
-
-        for mv in 0..max_moves {
-            // pick the best admissible flip; strict `<` means exact ties
-            // keep the earlier (lowest-index) candidate — the solver-wide
-            // tie-break rule (see `IsingSolver` docs)
-            let mut chosen: Option<(usize, f64)> = None;
-            for i in 0..n {
-                let delta = -2.0 * s[i] as f64 * l[i];
-                let admissible = tabu_until[i] <= mv || e + delta < best_e - 1e-12;
-                if !admissible {
-                    continue;
-                }
-                if chosen.map_or(true, |(_, d)| delta < d) {
-                    chosen = Some((i, delta));
-                }
+    /// Solve, picking the coefficient domain: integer-valued instances
+    /// run the `i64` kernel, others the `f64` kernel — bit-identical
+    /// results wherever both apply.
+    fn solve_any(&mut self, ising: &Ising, warm: Option<&[i8]>) -> SolveResult {
+        let Self { cfg, rng, scratch } = self;
+        if scratch.quant.try_copy_from(ising) {
+            let energy = tabu_core(&scratch.quant, cfg, rng, &mut scratch.int, warm);
+            SolveResult {
+                spins: scratch.int.best.clone(),
+                energy,
             }
-            // all moves tabu (tiny n): take a random kick
-            let (i, delta) =
-                chosen.unwrap_or_else(|| (self.rng.below(n as u32) as usize, f64::NAN));
-            let delta = if delta.is_nan() {
-                -2.0 * s[i] as f64 * l[i]
-            } else {
-                delta
-            };
-            apply_flip(ising, &mut s, &mut l, i);
-            e += delta;
-            tabu_until[i] = mv + 1 + tenure;
-            if e < best_e - 1e-12 {
-                best_e = e;
-                best_s.copy_from_slice(&s);
+        } else {
+            let energy = tabu_core(ising, cfg, rng, &mut scratch.fp, warm);
+            SolveResult {
+                spins: scratch.fp.best.clone(),
+                energy,
             }
         }
+    }
+
+    /// Force the `f64` kernel regardless of the instance's domain — the
+    /// reference entry the integer path is pinned against (equivalence
+    /// tests, domain microbenches). Consumes the RNG exactly like
+    /// [`IsingSolver::solve`].
+    pub fn solve_reference_f64(&mut self, ising: &Ising) -> SolveResult {
+        let Self { cfg, rng, scratch } = self;
+        let energy = tabu_core(ising, cfg, rng, &mut scratch.fp, None);
         SolveResult {
-            spins: best_s,
-            energy: best_e,
+            spins: scratch.fp.best.clone(),
+            energy,
         }
     }
+}
+
+/// Restart wrapper over [`tabu_run`]: restart 0 starts from `warm` when
+/// given (drawing no init randomness), later restarts from random
+/// configurations; best-across-restarts kept on strict `<` (earlier
+/// restart wins exact ties). Returns the best energy; best spins land in
+/// `ks.best`.
+pub(crate) fn tabu_core<K: SolverKernel>(
+    k: &K,
+    cfg: &TabuConfig,
+    rng: &mut Pcg32,
+    ks: &mut KernelScratch<K::Acc>,
+    warm: Option<&[i8]>,
+) -> f64 {
+    let n = k.n();
+    debug_assert!(warm.map_or(true, |h| h.len() == n), "warm-start hint length mismatch");
+    ks.prepare(n);
+    let mut overall: Option<K::Acc> = None;
+    for r in 0..cfg.restarts.max(1) {
+        match warm {
+            Some(h) if r == 0 => ks.spins.copy_from_slice(h),
+            _ => {
+                for x in ks.spins.iter_mut() {
+                    *x = if rng.bernoulli(0.5) { 1 } else { -1 };
+                }
+            }
+        }
+        let e = tabu_run(k, cfg, rng, ks);
+        if overall.map_or(true, |b| e < b) {
+            overall = Some(e);
+            ks.best.copy_from_slice(&ks.run_best);
+        }
+    }
+    K::to_f64(overall.expect("restarts >= 1"))
+}
+
+/// One tabu run from the configuration in `ks.spins` (the RNG is touched
+/// only by all-tabu kicks). Best spins of the run land in `ks.run_best`.
+fn tabu_run<K: SolverKernel>(
+    k: &K,
+    cfg: &TabuConfig,
+    rng: &mut Pcg32,
+    ks: &mut KernelScratch<K::Acc>,
+) -> K::Acc {
+    let n = k.n();
+    let tenure = ((n as f64 * cfg.tenure_frac) as usize).max(4);
+    let max_moves = cfg.moves_per_spin * n;
+
+    k.local_fields_into(&ks.spins, &mut ks.l);
+    let mut e = k.energy_acc(&ks.spins);
+    let mut best_e = e;
+    ks.run_best.copy_from_slice(&ks.spins);
+    // tabu_until[i]: first move index at which flipping i is allowed
+    ks.tabu_until.clear();
+    ks.tabu_until.resize(n, 0);
+
+    for mv in 0..max_moves {
+        // pick the best admissible flip; strict `<` means exact ties
+        // keep the earlier (lowest-index) candidate — the solver-wide
+        // tie-break rule (see `IsingSolver` docs)
+        let mut chosen: Option<(usize, K::Acc)> = None;
+        for i in 0..n {
+            let delta = K::flip_delta(&ks.spins, &ks.l, i);
+            let admissible = ks.tabu_until[i] <= mv || K::lt_margin(e + delta, best_e);
+            if !admissible {
+                continue;
+            }
+            if chosen.map_or(true, |(_, d)| delta < d) {
+                chosen = Some((i, delta));
+            }
+        }
+        // all moves tabu (tiny n): take a random kick
+        let (i, delta) = match chosen {
+            Some(c) => c,
+            None => {
+                let i = rng.below(n as u32) as usize;
+                (i, K::flip_delta(&ks.spins, &ks.l, i))
+            }
+        };
+        k.apply_flip_acc(&mut ks.spins, &mut ks.l, i);
+        e += delta;
+        ks.tabu_until[i] = mv + 1 + tenure;
+        if K::lt_margin(e, best_e) {
+            best_e = e;
+            ks.run_best.copy_from_slice(&ks.spins);
+        }
+    }
+    best_e
 }
 
 impl IsingSolver for TabuSolver {
@@ -123,34 +195,35 @@ impl IsingSolver for TabuSolver {
     }
 
     fn solve(&mut self, ising: &Ising) -> SolveResult {
-        let mut best: Option<SolveResult> = None;
-        for _ in 0..self.cfg.restarts.max(1) {
-            let r = self.run_once(ising);
-            if best.as_ref().map_or(true, |b| r.energy < b.energy) {
-                best = Some(r);
-            }
-        }
-        best.unwrap()
+        self.solve_any(ising, None)
     }
 
     fn solve_from(&mut self, ising: &Ising, init: &[i8]) -> SolveResult {
         debug_assert_eq!(init.len(), ising.n, "warm-start hint length mismatch");
         // first restart from the hint, remaining restarts cold; strict
         // `<` keeps the warm result on exact ties
-        let mut best = self.run_from(ising, init.to_vec());
-        for _ in 1..self.cfg.restarts.max(1) {
-            let r = self.run_once(ising);
-            if r.energy < best.energy {
-                best = r;
-            }
-        }
-        best
+        self.solve_any(ising, Some(init))
+    }
+
+    fn quant_kernel(&mut self) -> Option<&mut dyn QuantSolve> {
+        Some(self)
+    }
+}
+
+impl QuantSolve for TabuSolver {
+    fn solve_quant_into(&mut self, q: &QuantIsing, out: &mut Vec<i8>) -> f64 {
+        let Self { cfg, rng, scratch } = self;
+        let energy = tabu_core(q, cfg, rng, &mut scratch.int, None);
+        out.clear();
+        out.extend_from_slice(&scratch.int.best);
+        energy
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cobi::testutil::quantized_glass;
     use crate::solvers::exact::ising_ground_exhaustive;
 
     fn random_ising(seed: u64, n: usize) -> Ising {
@@ -213,5 +286,63 @@ mod tests {
         let r = solver.solve(&ising);
         assert_eq!(r.spins.len(), 32);
         assert!(r.spins.iter().all(|&v| v == 1 || v == -1));
+    }
+
+    #[test]
+    fn integer_kernel_is_bit_identical_to_f64_on_quantized_instances() {
+        // the acceptance pin: on every quantized instance the integer
+        // path (what `solve` auto-selects) must return the SAME spins and
+        // bitwise-equal energy as the f64 reference kernel
+        for seed in 0..6 {
+            for n in [5, 12, 20, 33] {
+                let inst = quantized_glass(1000 + seed, n);
+                let a = TabuSolver::seeded(seed).solve_reference_f64(&inst);
+                let b = TabuSolver::seeded(seed).solve(&inst);
+                assert_eq!(a.spins, b.spins, "seed {seed} n {n}");
+                assert_eq!(
+                    a.energy.to_bits(),
+                    b.energy.to_bits(),
+                    "seed {seed} n {n}: {} vs {}",
+                    a.energy,
+                    b.energy
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn integer_kernel_warm_start_matches_f64_path() {
+        let inst = quantized_glass(77, 14);
+        let hint: Vec<i8> = (0..14).map(|i| if i % 3 == 0 { 1 } else { -1 }).collect();
+        // the fractional twin forces the f64 path through the public API:
+        // scale by a non-representable factor then back? Instead pin the
+        // warm path against a same-seeded reference via the core directly.
+        let mut a = TabuSolver::seeded(4);
+        let ra = {
+            let TabuSolver { cfg, rng, scratch } = &mut a;
+            let e = tabu_core(&inst, cfg, rng, &mut scratch.fp, Some(&hint));
+            (scratch.fp.best.clone(), e)
+        };
+        let rb = TabuSolver::seeded(4).solve_from(&inst, &hint);
+        assert_eq!(ra.0, rb.spins);
+        assert_eq!(ra.1.to_bits(), rb.energy.to_bits());
+    }
+
+    #[test]
+    fn solve_quant_into_reuses_the_output_buffer() {
+        let inst = quantized_glass(88, 12);
+        let mut q = QuantIsing::default();
+        assert!(q.try_copy_from(&inst));
+        let mut out = Vec::new();
+        let mut solver = TabuSolver::seeded(6);
+        let e1 = solver.solve_quant_into(&q, &mut out);
+        assert_eq!(out.len(), 12);
+        assert_eq!(q.energy(&out) as f64, e1);
+        // same solver, fresh RNG stream: identical to the Ising-facade
+        // solve on the f32 twin
+        let mut facade = TabuSolver::seeded(6);
+        let r = facade.solve(&inst);
+        assert_eq!(r.spins, out);
+        assert_eq!(r.energy.to_bits(), e1.to_bits());
     }
 }

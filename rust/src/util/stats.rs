@@ -84,9 +84,32 @@ pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
 }
 
 /// Median of f32 values (convenience for Ising coefficient vectors).
+/// Hot paths that already own a scratch slice use
+/// [`median_f32_in_place`] instead — identical result, no f64 copy.
 pub fn median_f32(values: &[f32]) -> f32 {
     let v: Vec<f64> = values.iter().map(|&x| x as f64).collect();
     median(&v) as f32
+}
+
+/// Median of an f32 scratch slice, sorted in place — bit-identical to
+/// [`median_f32`] (same sort order for non-NaN data; the two middle
+/// elements interpolate in f64 exactly as `quantile_sorted` does) without
+/// allocating the intermediate f64 vector.
+pub fn median_f32_in_place(values: &mut [f32]) -> f32 {
+    assert!(!values.is_empty(), "median of empty slice");
+    values.sort_by(|a, b| a.partial_cmp(b).expect("NaN in median"));
+    if values.len() == 1 {
+        return values[0];
+    }
+    let pos = 0.5 * (values.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        values[lo]
+    } else {
+        let w = pos - lo as f64;
+        (values[lo] as f64 * (1.0 - w) + values[hi] as f64 * w) as f32
+    }
 }
 
 #[cfg(test)]
@@ -117,6 +140,23 @@ mod tests {
     fn median_even_odd() {
         assert_eq!(median(&[1.0, 3.0, 2.0]), 2.0);
         assert_eq!(median(&[1.0, 2.0, 3.0, 4.0]), 2.5);
+    }
+
+    #[test]
+    fn median_f32_in_place_matches_median_f32_bitwise() {
+        let mut state = 0x2545F4914F6CDD1Du64;
+        for len in [1usize, 2, 3, 4, 7, 10, 31, 100] {
+            let values: Vec<f32> = (0..len)
+                .map(|_| {
+                    state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+                    ((state >> 40) as f32 / 1000.0) - 8.0
+                })
+                .collect();
+            let reference = median_f32(&values);
+            let mut scratch = values.clone();
+            let in_place = median_f32_in_place(&mut scratch);
+            assert_eq!(in_place.to_bits(), reference.to_bits(), "len {len}");
+        }
     }
 
     #[test]

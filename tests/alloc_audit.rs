@@ -1,0 +1,101 @@
+//! Allocation audit for the integer refinement fast path.
+//!
+//! The claim (DESIGN.md §Perf, ISSUE 3 acceptance): once a solver's
+//! scratch and the refine-local buffers are warm, the steady-state
+//! quantize → solve → repair → score loop performs ZERO heap allocations
+//! per iteration. Measuring "per iteration" from outside `refine` without
+//! instrumenting it: run the same subproblem with 2 and with 40
+//! iterations on a warmed solver — if iterations allocate nothing, the
+//! two calls perform exactly the same number of allocations (all of it
+//! per-call setup: formulation, trace vectors, buffer creation).
+//!
+//! The counter is a process-global atomic, so a concurrently allocating
+//! harness thread could inflate either measurement; the test therefore
+//! takes the minimum delta over several repeats (background noise only
+//! ever adds). This file holds exactly one #[test] so no sibling test
+//! thread allocates concurrently.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct CountingAlloc;
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocations_during<R>(f: impl FnOnce() -> R) -> (u64, R) {
+    let before = ALLOCATIONS.load(Ordering::Relaxed);
+    let out = f();
+    (ALLOCATIONS.load(Ordering::Relaxed) - before, out)
+}
+
+#[test]
+fn steady_state_refine_iterations_do_not_allocate() {
+    use cobi_es::ising::EsProblem;
+    use cobi_es::refine::{refine, RefineConfig};
+    use cobi_es::solvers::greedy::GreedyDescent;
+    use cobi_es::solvers::sa::SaSolver;
+    use cobi_es::solvers::tabu::TabuSolver;
+    use cobi_es::solvers::IsingSolver;
+    use cobi_es::util::rng::Pcg32;
+
+    let p = {
+        let mut rng = Pcg32::seeded(5);
+        let n = 20;
+        let mu: Vec<f32> = (0..n).map(|_| rng.range_f32(0.3, 0.95)).collect();
+        let mut beta = vec![0.0f32; n * n];
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let b = rng.range_f32(0.2, 0.9);
+                beta[i * n + j] = b;
+                beta[j * n + i] = b;
+            }
+        }
+        EsProblem { mu, beta, lambda: 0.6, m: 6 }
+    };
+    let cfg_short = RefineConfig { iterations: 2, ..Default::default() };
+    let cfg_long = RefineConfig { iterations: 40, ..Default::default() };
+
+    let solvers: [(&str, Box<dyn IsingSolver>); 3] = [
+        ("tabu", Box::new(TabuSolver::seeded(9))),
+        ("sa", Box::new(SaSolver::seeded(9))),
+        ("greedy", Box::new(GreedyDescent::new())),
+    ];
+    for (name, mut solver) in solvers {
+        let mut rng = Pcg32::seeded(11);
+        // warm the solver-owned scratch (first call sizes every buffer)
+        refine(&p, &cfg_short, solver.as_mut(), &mut rng).unwrap();
+
+        let mut min_delta = u64::MAX;
+        for _ in 0..5 {
+            let (short, _) =
+                allocations_during(|| refine(&p, &cfg_short, solver.as_mut(), &mut rng).unwrap());
+            let (long, _) =
+                allocations_during(|| refine(&p, &cfg_long, solver.as_mut(), &mut rng).unwrap());
+            min_delta = min_delta.min(long.saturating_sub(short));
+        }
+        assert_eq!(
+            min_delta, 0,
+            "{name}: 38 extra refinement iterations allocated {min_delta} times \
+             (per-iteration work must reuse scratch buffers)"
+        );
+    }
+}
