@@ -13,13 +13,27 @@
 //!     in-flight documents into batched dispatches.
 //!
 //! Prints a human summary plus a JSON record; set COBI_BENCH_RECORD=1 to
-//! (over)write the committed baseline `BENCH_sched.json` with fresh
-//! numbers (see that file for the schema).
+//! (over)write the committed baselines `BENCH_sched.json` (pooled vs
+//! sequential) and `BENCH_decompose.json` (window vs tree level
+//! parallelism) with fresh numbers (see those files for the schemas).
+//!
+//! ## Decompose strategy matrix (the window-vs-tree cases)
+//!
+//! The tree plan's advantage is SAME-LEVEL PARALLELISM: on an
+//! N-sentence document the window plan's level k offers `len/P` full
+//! windows and leaves a `len mod P` tail idle, while the tree plan
+//! carves `ceil(len/P)` balanced leaves covering every sentence — wider
+//! levels, no idle tail, O(log N) depth. The matrix runs the SAME
+//! `xsum_100` workload through the full pooled service under
+//! `strategy = "window"` and `strategy = "tree"` and reports docs/s plus
+//! the pool's occupancy/coalescing counters; deeper queues per level is
+//! the mechanism, so coalescing is the number to watch.
 
 use std::time::Instant;
 
 use cobi_es::config::Settings;
 use cobi_es::corpus::benchmark_set;
+use cobi_es::decompose::Strategy;
 use cobi_es::service::{Service, ServiceMetrics};
 
 const ROUNDS: usize = 3; // 3 x 20 = 60 documents per path
@@ -38,11 +52,17 @@ fn base_settings() -> Settings {
 
 /// Run the whole workload through a Service; returns (wall_s, metrics).
 fn run_workload(settings: &Settings) -> (f64, ServiceMetrics) {
+    run_workload_on(settings, "cnn_dm_20", ROUNDS)
+}
+
+/// As [`run_workload`], on an explicit benchmark set repeated `rounds`
+/// times with distinct document ids.
+fn run_workload_on(settings: &Settings, set_name: &str, rounds: usize) -> (f64, ServiceMetrics) {
     let svc = Service::start(settings).expect("service start");
-    let set = benchmark_set("cnn_dm_20").expect("benchmark set");
+    let set = benchmark_set(set_name).expect("benchmark set");
     let t0 = Instant::now();
-    let mut tickets = Vec::with_capacity(ROUNDS * set.documents.len());
-    for r in 0..ROUNDS {
+    let mut tickets = Vec::with_capacity(rounds * set.documents.len());
+    for r in 0..rounds {
         for doc in &set.documents {
             let mut d = doc.clone();
             d.id = format!("{}-r{r}", d.id);
@@ -56,6 +76,56 @@ fn run_workload(settings: &Settings) -> (f64, ServiceMetrics) {
     let m = svc.metrics();
     svc.shutdown();
     (wall, m)
+}
+
+/// The window-vs-tree matrix on long documents (see module docs);
+/// returns the JSON fragment for `BENCH_decompose.json`.
+fn bench_decompose_strategies() -> String {
+    const SET: &str = "xsum_100";
+    const STRAT_ROUNDS: usize = 1; // 20 x 100-sentence docs per strategy
+    let docs = STRAT_ROUNDS * 20;
+    let mut fragments = Vec::new();
+    for strategy in [Strategy::Window, Strategy::Tree] {
+        let mut s = base_settings();
+        s.pipeline.strategy = strategy;
+        s.sched.devices = DEVICES;
+        let (wall, m) = run_workload_on(&s, SET, STRAT_ROUNDS);
+        let rate = docs as f64 / wall;
+        println!(
+            "strategy {strategy}: {docs} x 100-sentence docs in {wall:.2}s = {rate:.1} docs/s"
+        );
+        println!("  {}", m.report());
+        fragments.push(format!(
+            r#"    "{strategy}": {{
+      "wall_s": {wall:.4},
+      "docs_per_s": {rate:.2},
+      "batch_occupancy": {occ:.3},
+      "coalescing": {coal:.3},
+      "utilization": {util:.3}
+    }}"#,
+            occ = m.pool.batch_occupancy(),
+            coal = m.pool.coalescing(),
+            util = m.pool.utilization(),
+        ));
+    }
+    format!(
+        r#"{{
+  "bench": "decompose_strategies",
+  "status": "recorded",
+  "workload": {{
+    "set": "{SET}",
+    "documents": {docs},
+    "solver": "cobi-native",
+    "iterations": {ITERATIONS},
+    "workers": {WORKERS},
+    "devices": {DEVICES}
+  }},
+  "strategies": {{
+{fragments}
+  }}
+}}"#,
+        fragments = fragments.join(",\n"),
+    )
 }
 
 fn main() {
@@ -123,5 +193,14 @@ fn main() {
     if std::env::var("COBI_BENCH_RECORD").is_ok() {
         std::fs::write("BENCH_sched.json", format!("{json}\n")).expect("write baseline");
         println!("recorded baseline to BENCH_sched.json");
+    }
+
+    println!("\n-- decompose strategy matrix (window vs tree) --");
+    let decompose_json = bench_decompose_strategies();
+    println!("\n{decompose_json}");
+    if std::env::var("COBI_BENCH_RECORD").is_ok() {
+        std::fs::write("BENCH_decompose.json", format!("{decompose_json}\n"))
+            .expect("write baseline");
+        println!("recorded baseline to BENCH_decompose.json");
     }
 }

@@ -40,6 +40,9 @@ fn apply_pipeline_flags(settings: &mut Settings, args: &Args) -> Result<()> {
     if let Some(r) = args.get("rounding") {
         settings.pipeline.rounding = r.parse().map_err(anyhow::Error::msg)?;
     }
+    if let Some(s) = args.get("strategy") {
+        settings.pipeline.strategy = s.parse().map_err(anyhow::Error::msg)?;
+    }
     if args.get_bool("hlo") {
         settings.cobi.backend = "hlo".to_string();
     }
@@ -61,6 +64,7 @@ fn pipeline_from(settings: &Settings) -> Result<(EsPipeline, Option<ArtifactRunt
     }
 }
 
+/// `summarize`: one document through the configured pipeline.
 pub fn cmd_summarize(args: &Args) -> Result<()> {
     let mut settings = load_settings(args)?;
     apply_pipeline_flags(&mut settings, args)?;
@@ -84,8 +88,9 @@ pub fn cmd_summarize(args: &Args) -> Result<()> {
 
     println!("document: {} ({} sentences)", doc.id, doc.len());
     println!(
-        "solver: {} | iterations: {} | precision: {} | rounding: {}",
+        "solver: {} | strategy: {} | iterations: {} | precision: {} | rounding: {}",
         settings.pipeline.solver,
+        settings.pipeline.strategy,
         settings.pipeline.iterations,
         settings.pipeline.precision,
         settings.pipeline.rounding
@@ -101,6 +106,7 @@ pub fn cmd_summarize(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `experiment`: regenerate paper figures/tables.
 pub fn cmd_experiment(args: &Args) -> Result<()> {
     let settings = load_settings(args)?;
     let scale = if args.get_bool("full") {
@@ -144,6 +150,7 @@ pub fn cmd_experiment(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `gen-corpus`: write a benchmark set as text files.
 pub fn cmd_gen_corpus(args: &Args) -> Result<()> {
     let set_name = args.get("set").context("--set required")?;
     let out_dir = Path::new(args.get("out").context("--out required")?);
@@ -162,6 +169,7 @@ pub fn cmd_gen_corpus(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `solve`: compare every solver on one document.
 pub fn cmd_solve(args: &Args) -> Result<()> {
     let mut settings = load_settings(args)?;
     apply_pipeline_flags(&mut settings, args)?;
@@ -227,6 +235,7 @@ fn apply_pool_flags(settings: &mut Settings, args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `serve`: run the edge service (demo or TCP mode).
 pub fn cmd_serve(args: &Args) -> Result<()> {
     let mut settings = load_settings(args)?;
     apply_pipeline_flags(&mut settings, args)?;
@@ -322,6 +331,7 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `doctor`: artifact/runtime/device health checks.
 pub fn cmd_doctor(args: &Args) -> Result<()> {
     let settings = load_settings(args)?;
     println!("cobi-es doctor");

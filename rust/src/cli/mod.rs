@@ -12,7 +12,9 @@ use anyhow::{bail, Result};
 /// Parsed argument list.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// Positional arguments, in order.
     pub positional: Vec<String>,
+    /// `--key value` pairs and boolean flags.
     pub flags: BTreeMap<String, String>,
 }
 
@@ -29,6 +31,7 @@ const BOOLEAN_FLAGS: &[&str] = &[
 ];
 
 impl Args {
+    /// Parse an argv iterator (program name already stripped).
     pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Self> {
         let mut out = Args::default();
         let mut it = argv.into_iter().peekable();
@@ -56,14 +59,17 @@ impl Args {
         Ok(out)
     }
 
+    /// Raw string value of `--key`, if present.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(|s| s.as_str())
     }
 
+    /// True when a boolean flag was passed.
     pub fn get_bool(&self, key: &str) -> bool {
         matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
     }
 
+    /// Integer flag with a default; errors on non-numeric input.
     pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
         match self.get(key) {
             None => Ok(default),
@@ -73,6 +79,7 @@ impl Args {
         }
     }
 
+    /// Float flag with a default; errors on non-numeric input.
     pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
         match self.get(key) {
             None => Ok(default),
@@ -83,6 +90,7 @@ impl Args {
     }
 }
 
+/// Top-level usage text (printed by `help` and on bad commands).
 pub const USAGE: &str = "\
 cobi-es — extractive summarization on a (simulated) CMOS Ising machine
 
@@ -94,7 +102,8 @@ COMMANDS:
                --input <file> | --benchmark <set> [--doc N]
                [--solver cobi|tabu|sa|brute|exact|random] [--iterations N]
                [--summary-len M] [--precision fp|4bit..8bit|int14]
-               [--rounding deterministic|stoch5050|stochastic] [--hlo]
+               [--rounding deterministic|stoch5050|stochastic]
+               [--strategy window|tree|stream] [--hlo]
   experiment   Regenerate a paper figure/table
                <fig1|fig2|fig3|fig5|fig6|fig7|fig8|table1|supp-optima|all>
                [--full] [--out <file.md>] [--csv]
@@ -105,9 +114,14 @@ COMMANDS:
                [--benchmark <set>] [--doc N] [--iterations N]
   serve        Start the edge summarization service
                demo mode: [--requests N] [--workers N] [--solver ...]
+               [--strategy window|tree|stream]
                network mode: --port <u16> (line protocol; text then
                a '::EOF::' line -> 'OK <m>' + m summary lines;
-               a '::STATS::' line -> 'OK 1' + a metrics report line)
+               a '::STATS::' line -> 'OK 1' + a metrics report line;
+               a '::STREAM::' first line opens a SUMMARIZE_STREAM
+               session: chunks ended by '::CHUNK::' each return a
+               'REV <m>' summary revision, '::EOF::' closes with the
+               final 'OK <m>' summary)
                device pool: [--pool-devices N] [--pool-coalesce N]
                [--pool-linger-us N]
                [--pool-backend auto|cobi|tabu|sa|portfolio]

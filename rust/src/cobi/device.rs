@@ -38,6 +38,7 @@ pub enum CobiBackend {
 /// Accounting: modeled hardware cost of all solves so far.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct CobiStats {
+    /// Hardware solves performed.
     pub solves: u64,
     /// Modeled device time (s): solves * solve_time_s.
     pub device_time_s: f64,
@@ -53,7 +54,9 @@ pub struct CobiStats {
 /// co-batching with other requests cannot change the results
 /// (DESIGN.md decision #8).
 pub struct SeededGroup<'a> {
+    /// The group's instances (one refinement batch).
     pub instances: &'a [Ising],
+    /// Request seed deriving ALL of the group's randomness.
     pub seed: u64,
 }
 
@@ -78,7 +81,9 @@ impl Default for DevScratch {
     }
 }
 
+/// The simulated COBI device (native or HLO backend).
 pub struct CobiDevice {
+    /// Device-model parameters.
     pub cfg: CobiConfig,
     backend: CobiBackend,
     rng: Pcg32,
@@ -139,10 +144,12 @@ impl CobiDevice {
         }
     }
 
+    /// Counters snapshot.
     pub fn stats(&self) -> CobiStats {
         self.stats
     }
 
+    /// Zero the counters.
     pub fn reset_stats(&mut self) {
         self.stats = CobiStats::default();
     }

@@ -11,6 +11,7 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
+use crate::decompose::Strategy;
 use crate::quant::{Precision, Rounding};
 
 /// COBI device-model parameters (defaults follow the published chip:
@@ -30,7 +31,9 @@ pub struct CobiConfig {
     pub noise_amp: f32,
     /// Annealer dynamics: coupling gain, SHIL max, Euler dt.
     pub k_coupling: f32,
+    /// SHIL (sub-harmonic injection locking) ramp maximum.
     pub k_shil_max: f32,
+    /// Euler integration step.
     pub dt: f32,
     /// Backend: "hlo" (PJRT anneal artifact) or "native" (pure-rust mirror).
     pub backend: String,
@@ -68,7 +71,13 @@ pub struct PipelineConfig {
     /// Decomposition window P and target Q (§IV-B); decomposition is
     /// bypassed when the document already fits (n <= p).
     pub decompose_p: usize,
+    /// Decomposition target Q (see [`PipelineConfig::decompose_p`]).
     pub decompose_q: usize,
+    /// Decomposition strategy (TOML: `[decompose] strategy =
+    /// "window|tree|stream"`): `window` is the paper's sliding reduction
+    /// (byte-identical reference), `tree` the balanced hierarchical
+    /// merge, `stream` the incremental rolling-frontier planner.
+    pub strategy: Strategy,
     /// Final summary length M.
     pub summary_len: usize,
     /// Solver for quantized instances: "cobi", "tabu", "brute", "exact",
@@ -88,6 +97,7 @@ impl Default for PipelineConfig {
             iterations: 10,
             decompose_p: 20,
             decompose_q: 10,
+            strategy: Strategy::Window,
             summary_len: 6,
             solver: "cobi".into(),
             seed: 0xC0B1,
@@ -251,17 +261,24 @@ impl Default for PortfolioConfig {
 /// Root settings object.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Settings {
+    /// COBI device-model parameters.
     pub cobi: CobiConfig,
+    /// ES pipeline parameters.
     pub pipeline: PipelineConfig,
+    /// Timing/energy model constants.
     pub timing: TimingConfig,
+    /// Edge-service parameters.
     pub service: ServiceConfig,
+    /// Subproblem scheduler / device pool parameters.
     pub sched: SchedConfig,
+    /// Solver portfolio + warm-start cache parameters.
     pub portfolio: PortfolioConfig,
     /// Directory containing AOT artifacts (manifest.txt etc.).
     pub artifacts_dir: String,
 }
 
 impl Settings {
+    /// Load settings from a TOML file over the compiled-in defaults.
     pub fn load(path: &Path) -> Result<Self> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading config {}", path.display()))?;
@@ -331,6 +348,14 @@ impl Settings {
         set!(self.pipeline.iterations, get_i64, "pipeline.iterations");
         set!(self.pipeline.decompose_p, get_i64, "pipeline.decompose_p");
         set!(self.pipeline.decompose_q, get_i64, "pipeline.decompose_q");
+        // `[decompose] strategy` is the canonical spelling; the
+        // `[pipeline]` alias keeps single-section configs working.
+        // Applied alias-first so the canonical key wins when both appear.
+        for key in ["pipeline.strategy", "decompose.strategy"] {
+            if let Some(s) = doc.get_str(key) {
+                self.pipeline.strategy = s.parse().map_err(anyhow::Error::msg)?;
+            }
+        }
         set!(self.pipeline.summary_len, get_i64, "pipeline.summary_len");
         set!(self.pipeline.solver, get_str, "pipeline.solver");
         if let Some(v) = doc.get_i64("pipeline.seed") {
@@ -495,6 +520,30 @@ latency_weight = 2.5
         assert!(!s.portfolio.cache);
         assert_eq!(s.portfolio.cache_capacity, 128);
         assert!((s.portfolio.latency_weight - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn decompose_strategy_defaults_and_overrides() {
+        assert_eq!(Settings::default().pipeline.strategy, Strategy::Window);
+        let mut s = Settings::default();
+        let doc = toml::Document::parse("[decompose]\nstrategy = \"tree\"").unwrap();
+        s.apply(&doc).unwrap();
+        assert_eq!(s.pipeline.strategy, Strategy::Tree);
+        // [pipeline] alias
+        let doc = toml::Document::parse("[pipeline]\nstrategy = \"stream\"").unwrap();
+        s.apply(&doc).unwrap();
+        assert_eq!(s.pipeline.strategy, Strategy::Streaming);
+        // typos are loud, not silently window
+        let doc = toml::Document::parse("[decompose]\nstrategy = \"zigzag\"").unwrap();
+        assert!(s.apply(&doc).is_err());
+        // when both keys appear, the canonical [decompose] one wins
+        let doc = toml::Document::parse(
+            "[pipeline]\nstrategy = \"window\"\n[decompose]\nstrategy = \"tree\"",
+        )
+        .unwrap();
+        let mut s = Settings::default();
+        s.apply(&doc).unwrap();
+        assert_eq!(s.pipeline.strategy, Strategy::Tree);
     }
 
     #[test]

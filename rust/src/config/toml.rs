@@ -10,28 +10,37 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
+/// A parsed TOML value (the subset this parser supports).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// Quoted string.
     Str(String),
+    /// 64-bit integer.
     Int(i64),
+    /// 64-bit float.
     Float(f64),
+    /// Boolean.
     Bool(bool),
+    /// Homogeneous array.
     Array(Vec<Value>),
 }
 
 impl Value {
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// The integer value, if this is an integer.
     pub fn as_i64(&self) -> Option<i64> {
         match self {
             Value::Int(i) => Some(*i),
             _ => None,
         }
     }
+    /// The float value (integers widen), if numeric.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Value::Float(f) => Some(*f),
@@ -39,12 +48,14 @@ impl Value {
             _ => None,
         }
     }
+    /// The boolean value, if this is a boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
             _ => None,
         }
     }
+    /// The array elements, if this is an array.
     pub fn as_array(&self) -> Option<&[Value]> {
         match self {
             Value::Array(v) => Some(v),
@@ -74,20 +85,25 @@ impl fmt::Display for Value {
     }
 }
 
+/// Line-numbered parse failure.
 #[derive(Debug, thiserror::Error)]
 #[error("toml parse error at line {line}: {msg}")]
 pub struct ParseError {
+    /// 1-based line number of the offending input.
     pub line: usize,
+    /// What went wrong.
     pub msg: String,
 }
 
 /// Parsed document: dotted-path key -> value ("section.key").
 #[derive(Debug, Default, Clone)]
 pub struct Document {
+    /// Flattened `section.key` -> value entries.
     pub entries: BTreeMap<String, Value>,
 }
 
 impl Document {
+    /// Parse a TOML-subset document (module docs list the subset).
     pub fn parse(input: &str) -> Result<Self, ParseError> {
         let mut entries = BTreeMap::new();
         let mut section = String::new();
@@ -134,19 +150,24 @@ impl Document {
         Ok(Self { entries })
     }
 
+    /// Value at the flattened `section.key` path.
     pub fn get(&self, path: &str) -> Option<&Value> {
         self.entries.get(path)
     }
 
+    /// String at `path`, if present and a string.
     pub fn get_str(&self, path: &str) -> Option<&str> {
         self.get(path).and_then(Value::as_str)
     }
+    /// Integer at `path`, if present and an integer.
     pub fn get_i64(&self, path: &str) -> Option<i64> {
         self.get(path).and_then(Value::as_i64)
     }
+    /// Float at `path`, if present and numeric.
     pub fn get_f64(&self, path: &str) -> Option<f64> {
         self.get(path).and_then(Value::as_f64)
     }
+    /// Boolean at `path`, if present and boolean.
     pub fn get_bool(&self, path: &str) -> Option<bool> {
         self.get(path).and_then(Value::as_bool)
     }

@@ -15,15 +15,19 @@ use anyhow::{bail, Result};
 use super::synthetic::{Generator, GeneratorConfig};
 use super::Document;
 
+/// One pinned benchmark set (see the module table).
 #[derive(Debug, Clone)]
 pub struct BenchmarkSet {
+    /// Set name (e.g. "cnn_dm_20").
     pub name: String,
+    /// The pinned documents, in generation order.
     pub documents: Vec<Document>,
     /// Target summary length M for this set.
     pub summary_len: usize,
 }
 
 impl BenchmarkSet {
+    /// Sentences per document in this set.
     pub fn doc_len(&self) -> usize {
         self.documents.first().map(|d| d.len()).unwrap_or(0)
     }

@@ -5,34 +5,43 @@
 //! this offline environment, so `synthetic` generates topic-structured
 //! news-style documents whose (mu, beta) geometry matches what the
 //! pipeline actually consumes (DESIGN.md §Substitutions), and `benchmark`
-//! pins the seeded benchmark sets used by every experiment.
+//! pins the seeded benchmark sets used by every experiment. Beyond the
+//! paper-sized sets, [`Generator::long_document`] builds
+//! thousands-of-sentences archival pages for the tree strategy and
+//! [`Generator::feed`] ragged-chunked arrival streams for
+//! `SUMMARIZE_STREAM` workloads.
 
 pub mod benchmark;
 pub mod synthetic;
 
 pub use benchmark::{benchmark_set, BenchmarkSet};
-pub use synthetic::{Generator, GeneratorConfig};
+pub use synthetic::{Generator, GeneratorConfig, StreamingFeed};
 
 /// A document: ordered sentences plus a construction-time reference
 /// summary (indices of the generator's designated key-fact sentences),
 /// used for ROUGE-style quality reporting.
 #[derive(Debug, Clone)]
 pub struct Document {
+    /// Stable document id (per-document seeds key off it).
     pub id: String,
+    /// Ordered sentences.
     pub sentences: Vec<String>,
     /// Indices (into `sentences`) of the reference key-fact sentences.
     pub reference: Vec<usize>,
 }
 
 impl Document {
+    /// Sentences joined into one string.
     pub fn text(&self) -> String {
         self.sentences.join(" ")
     }
 
+    /// Sentence count.
     pub fn len(&self) -> usize {
         self.sentences.len()
     }
 
+    /// True when the document has no sentences.
     pub fn is_empty(&self) -> bool {
         self.sentences.is_empty()
     }

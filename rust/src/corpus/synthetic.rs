@@ -87,6 +87,7 @@ const FILLERS: &[&str] = &[
     "observers noted",
 ];
 
+/// Generator knobs: topic sparsity, coherence, reference length.
 #[derive(Debug, Clone)]
 pub struct GeneratorConfig {
     /// Number of topics mixed per document (sparse mixture).
@@ -115,6 +116,7 @@ pub struct Generator {
 }
 
 impl Generator {
+    /// Generator with an explicit config.
     pub fn new(seed: u64, cfg: GeneratorConfig) -> Self {
         Self {
             cfg,
@@ -122,6 +124,7 @@ impl Generator {
         }
     }
 
+    /// Generator with the default config.
     pub fn with_seed(seed: u64) -> Self {
         Self::new(seed, GeneratorConfig::default())
     }
@@ -196,6 +199,77 @@ impl Generator {
             .map(|i| self.document(&format!("{prefix}-{i:03}"), n_sentences))
             .collect()
     }
+
+    /// Generate a LONG document (hundreds to thousands of sentences —
+    /// the tree/streaming workloads): topical sections of 20–60
+    /// sentences, each section drawing a fresh sparse topic mixture, so
+    /// redundancy clusters stay local the way archival news pages do.
+    /// Key facts are spread across the whole document like
+    /// [`document`](Generator::document)'s.
+    pub fn long_document(&mut self, id: &str, n_sentences: usize) -> Document {
+        assert!(n_sentences >= self.cfg.key_facts, "too short for key facts");
+        let mut key_slots: Vec<usize> = (0..self.cfg.key_facts)
+            .map(|i| i * n_sentences / self.cfg.key_facts)
+            .collect();
+        key_slots.dedup();
+
+        let k = self.cfg.topics_per_doc.min(TOPICS.len());
+        let mut sentences = Vec::with_capacity(n_sentences);
+        let mut section_topics = self.rng.sample_indices(TOPICS.len(), k);
+        let mut section_left = 0usize;
+        let mut prev_topic = section_topics[0];
+        for i in 0..n_sentences {
+            if section_left == 0 {
+                // new section: fresh topic mixture, 20–60 sentences
+                section_topics = self.rng.sample_indices(TOPICS.len(), k);
+                section_left = 20 + self.rng.below(41) as usize;
+                prev_topic = section_topics[0];
+            }
+            section_left -= 1;
+            let topic = if self.rng.bernoulli(self.cfg.coherence) {
+                prev_topic
+            } else {
+                section_topics[self.rng.below(section_topics.len() as u32) as usize]
+            };
+            prev_topic = topic;
+            sentences.push(self.sentence(topic, key_slots.contains(&i)));
+        }
+        Document {
+            id: id.to_string(),
+            sentences,
+            reference: key_slots,
+        }
+    }
+
+    /// Generate a streaming feed: one long document plus a seeded ragged
+    /// chunking of its sentences (chunk sizes uniform in
+    /// `1..=2*mean_chunk-1`, so the mean is `mean_chunk`) — the input
+    /// shape of `SUMMARIZE_STREAM` sessions and the batching-invariance
+    /// tests.
+    pub fn feed(&mut self, id: &str, n_sentences: usize, mean_chunk: usize) -> StreamingFeed {
+        let doc = self.long_document(id, n_sentences);
+        let mean = mean_chunk.max(1);
+        let mut chunks = Vec::new();
+        let mut at = 0usize;
+        while at < n_sentences {
+            let size = (1 + self.rng.below((2 * mean) as u32 - 1) as usize)
+                .min(n_sentences - at);
+            chunks.push(doc.sentences[at..at + size].to_vec());
+            at += size;
+        }
+        StreamingFeed { doc, chunks }
+    }
+}
+
+/// A streaming workload: a long document plus the chunk boundaries it
+/// arrives in (see [`Generator::feed`]).
+#[derive(Debug, Clone)]
+pub struct StreamingFeed {
+    /// The full document (ground truth for invariance checks).
+    pub doc: Document,
+    /// The arrival chunks: concatenated, they are exactly
+    /// `doc.sentences`.
+    pub chunks: Vec<Vec<String>>,
 }
 
 #[cfg(test)]
@@ -239,6 +313,36 @@ mod tests {
         assert_eq!(set.len(), d.reference.len());
         assert!(d.reference.iter().all(|&i| i < d.len()));
         assert_eq!(d.reference.len(), 6);
+    }
+
+    #[test]
+    fn long_documents_have_exact_counts_and_valid_references() {
+        let mut g = Generator::with_seed(9);
+        for n in [150usize, 600, 2000] {
+            let d = g.long_document("long", n);
+            assert_eq!(d.len(), n);
+            let refs: HashSet<_> = d.reference.iter().collect();
+            assert_eq!(refs.len(), d.reference.len());
+            assert!(d.reference.iter().all(|&i| i < n));
+        }
+        // deterministic from the seed
+        let a = Generator::with_seed(10).long_document("l", 500);
+        let b = Generator::with_seed(10).long_document("l", 500);
+        assert_eq!(a.sentences, b.sentences);
+    }
+
+    #[test]
+    fn feeds_chunk_the_document_exactly() {
+        let mut g = Generator::with_seed(11);
+        let feed = g.feed("feed", 317, 12);
+        assert_eq!(feed.doc.len(), 317);
+        let rejoined: Vec<String> = feed.chunks.iter().flatten().cloned().collect();
+        assert_eq!(rejoined, feed.doc.sentences);
+        assert!(feed.chunks.iter().all(|c| !c.is_empty() && c.len() <= 23));
+        // same seed, same chunking
+        let again = Generator::with_seed(11).feed("feed", 317, 12);
+        let sizes = |f: &StreamingFeed| f.chunks.iter().map(|c| c.len()).collect::<Vec<_>>();
+        assert_eq!(sizes(&feed), sizes(&again));
     }
 
     #[test]

@@ -11,10 +11,46 @@
 //! a window of original-sentence indices to the chosen subset), so Tabu,
 //! COBI, brute force and random all run through identical decomposition
 //! logic — exactly how the paper compares them.
+//!
+//! The flat sliding-window loop in this file is ONE decomposition shape;
+//! [`DecomposePlan`] generalizes the shape ([`Strategy::Window`] pinned
+//! byte-identical, [`Strategy::Tree`] for log-depth parallel merges) and
+//! [`StreamingPlanner`] handles sentences that arrive incrementally. See
+//! the `plan` and `stream` module docs for the determinism contract.
+
+pub mod plan;
+pub mod stream;
+
+pub use plan::{node_seed, DecomposePlan, PlannedUnit, Strategy};
+pub use stream::{
+    CompressUnit, StreamingPlanner, STREAM_COMPRESS_LEVEL, STREAM_REVISION_LEVEL,
+};
 
 use anyhow::{ensure, Result};
 
-/// Decomposition parameters.
+/// Decomposition parameters (paper §IV-B: P=20, Q=10, M=6).
+///
+/// # Examples
+///
+/// What it demonstrates: the paper defaults validate; parameters whose
+/// final window could be smaller than the requested summary are rejected
+/// up front instead of failing mid-decomposition.
+///
+/// ```
+/// use cobi_es::decompose::DecomposeParams;
+///
+/// let params = DecomposeParams::paper_default();
+/// assert_eq!((params.p, params.q, params.m), (20, 10, 6));
+/// assert!(params.validate().is_ok());
+///
+/// // Q must shrink the window...
+/// assert!(DecomposeParams { p: 10, q: 10, m: 3 }.validate().is_err());
+/// // ...and M must fit the smallest window the reduction can leave
+/// // behind (the frontier can shrink to exactly Q sentences)
+/// assert!(DecomposeParams { p: 20, q: 4, m: 6 }.validate().is_err());
+/// ```
+///
+/// Expected output: no output — the assertions pass.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct DecomposeParams {
     /// Window size P.
@@ -26,10 +62,19 @@ pub struct DecomposeParams {
 }
 
 impl DecomposeParams {
+    /// The paper's published workflow constants: P=20, Q=10, M=6.
     pub fn paper_default() -> Self {
         Self { p: 20, q: 10, m: 6 }
     }
 
+    /// Reject parameter combinations the reduction cannot execute.
+    ///
+    /// Beyond the basic shape rules (Q < P, nondegenerate values), M must
+    /// not exceed Q: after any shrink stage the active list can be as
+    /// small as Q sentences (e.g. N == P reduces straight to Q), and the
+    /// final solve would then silently ask for more sentences than it
+    /// has. `M <= Q < P` makes the old `M <= P` bound redundant, but both
+    /// are kept for a self-documenting error message.
     pub fn validate(&self) -> Result<()> {
         ensure!(self.q >= 1 && self.p >= 2 && self.m >= 1, "degenerate P/Q/M");
         ensure!(
@@ -39,6 +84,13 @@ impl DecomposeParams {
             self.p
         );
         ensure!(self.m <= self.p, "final M = {} exceeds window P = {}", self.m, self.p);
+        ensure!(
+            self.m <= self.q,
+            "final M = {} exceeds intermediate Q = {}: the final window can \
+             shrink to Q sentences and could not fill the summary",
+            self.m,
+            self.q
+        );
         Ok(())
     }
 }
@@ -59,6 +111,7 @@ pub struct Stage {
 pub struct DecompositionResult {
     /// Final selected original-document indices, ascending.
     pub selected: Vec<usize>,
+    /// Every solved stage, in deterministic submission order.
     pub stages: Vec<Stage>,
 }
 
@@ -348,5 +401,19 @@ mod tests {
         assert!(DecomposeParams { p: 5, q: 5, m: 2 }.validate().is_err());
         assert!(DecomposeParams { p: 5, q: 2, m: 6 }.validate().is_err());
         assert!(decompose(4, &DecomposeParams { p: 5, q: 2, m: 6 }, top_indices).is_err());
+    }
+
+    #[test]
+    fn m_exceeding_q_rejected_up_front() {
+        // edge case: P=20, Q=3, M=6 passes the old M <= P check, but a
+        // 20-sentence document reduces 20 -> 3 and the final solve would
+        // ask for 6 of 3 sentences — validate must reject it eagerly
+        // rather than letting the workflow fail mid-decomposition
+        let params = DecomposeParams { p: 20, q: 3, m: 6 };
+        assert!(params.validate().is_err());
+        assert!(decompose(20, &params, top_indices).is_err());
+        // M == Q stays legal (the boundary the paper's Q=10 > M=6 never
+        // exercises)
+        assert!(DecomposeParams { p: 20, q: 6, m: 6 }.validate().is_ok());
     }
 }

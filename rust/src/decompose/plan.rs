@@ -1,0 +1,401 @@
+//! Decomposition planning: how a document's reduction is shaped into
+//! solvable windows.
+//!
+//! The paper's §IV-B workflow is ONE shape — a sliding chain of P-windows
+//! — but it is not the only valid reduction of "repeatedly summarize
+//! windows until ≤ P sentences remain". [`DecomposePlan`] makes the shape
+//! a first-class, configurable object with three strategies:
+//!
+//!   * [`Strategy::Window`] — the paper's carving, pinned byte-identical
+//!     to the pre-plan scheduler: each level takes the `len / P` full
+//!     disjoint windows of the active list and shrinks each to Q; the
+//!     tail (`len mod P`) survives untouched.
+//!   * [`Strategy::Tree`] — balanced hierarchical merge: the active list
+//!     is split into `ceil(len / P)` *balanced* contiguous leaves (every
+//!     sentence is inside some leaf — no idle tail), each leaf > Q is
+//!     reduced to Q, and the merged survivors repeat the carving one
+//!     level up. Depth is O(log N) and every level is fully parallel,
+//!     which is what the [`DevicePool`](crate::sched::DevicePool) wants:
+//!     all of a level's windows can be in flight at once instead of a
+//!     long sequential wrap-around chain.
+//!   * [`Strategy::Streaming`] — incremental: sentences arrive over time
+//!     and a [`StreamingPlanner`](crate::decompose::StreamingPlanner)
+//!     maintains a rolling summary frontier, re-solving only when the
+//!     frontier fills to P. See the `stream` module.
+//!
+//! ## Determinism contract (Tree / Streaming)
+//!
+//! `Window` replays the sequential quantization / request-seed streams of
+//! the inline pipeline (unit-id order). `Tree` and `Streaming` instead
+//! derive a seed per *plan node* via [`node_seed`] — a pure function of
+//! (document seed, level, slot) — so every node's rounding draws and
+//! solve randomness are independent of pool shape, dispatch
+//! interleaving, sibling count, and (for streaming) how arriving
+//! sentences were batched into chunks.
+
+use std::fmt;
+use std::str::FromStr;
+
+use anyhow::Result;
+
+use crate::util::rng::SplitMix64;
+
+use super::DecomposeParams;
+
+/// Which decomposition shape a pipeline uses (`[decompose] strategy`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Strategy {
+    /// The paper's sliding-window reduction (§IV-B) — the reference
+    /// shape, byte-identical to the pre-plan pipeline.
+    #[default]
+    Window,
+    /// Balanced hierarchical merge: log-depth, maximally parallel levels.
+    Tree,
+    /// Incremental planner over arriving sentences (rolling frontier).
+    Streaming,
+}
+
+impl Strategy {
+    /// Canonical config-file spelling.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Strategy::Window => "window",
+            Strategy::Tree => "tree",
+            Strategy::Streaming => "stream",
+        }
+    }
+}
+
+impl fmt::Display for Strategy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl FromStr for Strategy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "window" | "sliding" => Ok(Strategy::Window),
+            "tree" => Ok(Strategy::Tree),
+            "stream" | "streaming" => Ok(Strategy::Streaming),
+            other => Err(format!(
+                "unknown decompose strategy '{other}' (expected window|tree|stream)"
+            )),
+        }
+    }
+}
+
+/// One planned subproblem: choose `target` of `window`, where `window`
+/// holds original-document sentence indices.
+#[derive(Debug, Clone)]
+pub struct PlannedUnit {
+    /// Original-document sentence indices offered to the solver.
+    pub window: Vec<usize>,
+    /// How many window positions the solver must return (Q, or M for the
+    /// final unit).
+    pub target: usize,
+    /// True for the final M-selection unit.
+    pub is_final: bool,
+}
+
+/// A decomposition plan: carves an active sentence list into one level of
+/// independent solve units at a time.
+///
+/// The plan is *stateless* — [`carve`](DecomposePlan::carve) is a pure
+/// function of (active list, level, params) — so the scheduler's
+/// [`SubproblemGraph`](crate::sched::SubproblemGraph) owns all mutable
+/// reduction state and the plan can be shared/rebuilt freely.
+///
+/// # Examples
+///
+/// What it demonstrates: the `Window` and `Tree` carvings of the same
+/// 45-sentence active list — `Window` leaves a tail of survivors, `Tree`
+/// covers every sentence with balanced leaves.
+///
+/// ```
+/// use cobi_es::decompose::{DecomposePlan, DecomposeParams, Strategy};
+///
+/// let params = DecomposeParams::paper_default(); // P=20, Q=10, M=6
+/// let active: Vec<usize> = (0..45).collect();
+///
+/// let window = DecomposePlan::new(Strategy::Window, &params).unwrap();
+/// let units = window.carve(&active, 0);
+/// // 45 / 20 = 2 full windows; 5 sentences survive as the tail
+/// assert_eq!(units.len(), 2);
+/// assert!(units.iter().all(|u| u.window.len() == 20 && u.target == 10));
+///
+/// let tree = DecomposePlan::new(Strategy::Tree, &params).unwrap();
+/// let units = tree.carve(&active, 0);
+/// // ceil(45 / 20) = 3 balanced leaves of 15 — every sentence covered
+/// assert_eq!(units.len(), 3);
+/// assert!(units.iter().all(|u| u.window.len() == 15 && u.target == 10));
+/// let covered: usize = units.iter().map(|u| u.window.len()).sum();
+/// assert_eq!(covered, 45);
+/// ```
+///
+/// Expected output: no output — the assertions pass.
+#[derive(Debug, Clone)]
+pub struct DecomposePlan {
+    strategy: Strategy,
+    params: DecomposeParams,
+}
+
+impl DecomposePlan {
+    /// Build a plan for `strategy` over validated `params`.
+    ///
+    /// `Streaming` is accepted here (the plan degenerates to the window
+    /// carving for whole-document replay), but streaming workloads want
+    /// the incremental [`StreamingPlanner`](super::StreamingPlanner)
+    /// instead.
+    pub fn new(strategy: Strategy, params: &DecomposeParams) -> Result<Self> {
+        params.validate()?;
+        Ok(Self {
+            strategy,
+            params: *params,
+        })
+    }
+
+    /// The plan's strategy.
+    pub fn strategy(&self) -> Strategy {
+        self.strategy
+    }
+
+    /// The plan's decomposition parameters.
+    pub fn params(&self) -> &DecomposeParams {
+        &self.params
+    }
+
+    /// True when summaries under this plan must derive their randomness
+    /// from per-node seeds ([`node_seed`]) instead of the sequential
+    /// unit-id-ordered streams (see module docs).
+    pub fn per_node_seeds(&self) -> bool {
+        !matches!(self.strategy, Strategy::Window)
+    }
+
+    /// Carve one level: given the active sentence list (original indices,
+    /// document order), return this level's independent units. Sentences
+    /// not covered by any returned window survive to the next level
+    /// unchanged. An empty `active` list returns no units.
+    ///
+    /// Shared shrink rule (the `stage_count` recurrence): the level-0
+    /// carving is unconditional at `len == P`; later levels shrink only
+    /// while more than P sentences remain; otherwise the single final
+    /// M-selection unit is produced.
+    pub fn carve(&self, active: &[usize], level: usize) -> Vec<PlannedUnit> {
+        let len = active.len();
+        if len == 0 {
+            return Vec::new();
+        }
+        let p = self.params.p;
+        let shrink = (level == 0 && len >= p) || len > p;
+        if !shrink {
+            return vec![PlannedUnit {
+                window: active.to_vec(),
+                target: self.params.m,
+                is_final: true,
+            }];
+        }
+        match self.strategy {
+            Strategy::Window | Strategy::Streaming => self.carve_window(active),
+            Strategy::Tree => self.carve_tree(active),
+        }
+    }
+
+    /// The reference carving: `len / P` disjoint FULL windows; the tail
+    /// (`len mod P`) survives. Byte-identical to the pre-plan scheduler.
+    fn carve_window(&self, active: &[usize]) -> Vec<PlannedUnit> {
+        let p = self.params.p;
+        (0..active.len() / p)
+            .map(|w| PlannedUnit {
+                window: active[w * p..(w + 1) * p].to_vec(),
+                target: self.params.q,
+                is_final: false,
+            })
+            .collect()
+    }
+
+    /// The tree carving: `ceil(len / P)` balanced contiguous leaves
+    /// covering EVERY active sentence; leaves longer than Q become solve
+    /// units, leaves already ≤ Q pass through as survivors. Falls back to
+    /// the window carving in the degenerate case where balancing yields
+    /// no leaf > Q (possible only when P < 2(Q+1)), so a level always
+    /// shrinks.
+    fn carve_tree(&self, active: &[usize]) -> Vec<PlannedUnit> {
+        let len = active.len();
+        let p = self.params.p;
+        let q = self.params.q;
+        let leaves = (len + p - 1) / p;
+        let base = len / leaves;
+        let extra = len % leaves; // first `extra` leaves get one more
+        let mut units = Vec::with_capacity(leaves);
+        let mut start = 0usize;
+        for leaf in 0..leaves {
+            let size = base + usize::from(leaf < extra);
+            let window = &active[start..start + size];
+            start += size;
+            if size > q {
+                units.push(PlannedUnit {
+                    window: window.to_vec(),
+                    target: q,
+                    is_final: false,
+                });
+            }
+        }
+        if units.is_empty() {
+            // every balanced leaf was ≤ Q: no shrink would happen. The
+            // window carving always shrinks (≥ 1 full window of P > Q).
+            return self.carve_window(active);
+        }
+        units
+    }
+}
+
+/// Per-node seed for `Tree` / `Streaming` decompositions: a pure function
+/// of (document seed, level, slot-within-level), independent of how many
+/// siblings a level has, which device solves the node, and when.
+///
+/// Streaming uses `level` = a node-kind tag and `slot` = the node's
+/// position in the arrival order (see `decompose::stream`).
+pub fn node_seed(doc_seed: u64, level: usize, slot: usize) -> u64 {
+    // chained SplitMix64 mixing: each input fully avalanches before the
+    // next is folded in, so (level, slot) pairs can't alias by XOR
+    let a = SplitMix64::new(doc_seed ^ 0x7EE5_EED0_DECA_11A0).next_u64();
+    let b = SplitMix64::new(a ^ level as u64).next_u64();
+    SplitMix64::new(b ^ slot as u64).next_u64()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params(p: usize, q: usize, m: usize) -> DecomposeParams {
+        DecomposeParams { p, q, m }
+    }
+
+    #[test]
+    fn strategy_parses_and_displays() {
+        for (s, want) in [
+            ("window", Strategy::Window),
+            ("tree", Strategy::Tree),
+            ("stream", Strategy::Streaming),
+            ("streaming", Strategy::Streaming),
+        ] {
+            assert_eq!(s.parse::<Strategy>().unwrap(), want);
+        }
+        assert!("nope".parse::<Strategy>().is_err());
+        assert_eq!(Strategy::Tree.to_string(), "tree");
+        assert_eq!(Strategy::Streaming.to_string(), "stream");
+        assert_eq!(Strategy::default(), Strategy::Window);
+    }
+
+    #[test]
+    fn window_carving_matches_reference_shape() {
+        let plan = DecomposePlan::new(Strategy::Window, &params(8, 4, 3)).unwrap();
+        let active: Vec<usize> = (10..40).collect(); // len 30
+        let units = plan.carve(&active, 0);
+        assert_eq!(units.len(), 3); // 30 / 8
+        for (w, u) in units.iter().enumerate() {
+            assert_eq!(u.window, active[w * 8..(w + 1) * 8].to_vec());
+            assert_eq!(u.target, 4);
+            assert!(!u.is_final);
+        }
+    }
+
+    #[test]
+    fn tree_carving_is_balanced_and_covers_everything() {
+        let plan = DecomposePlan::new(Strategy::Tree, &params(20, 10, 6)).unwrap();
+        let active: Vec<usize> = (0..45).collect();
+        let units = plan.carve(&active, 0);
+        assert_eq!(units.len(), 3);
+        let mut covered = Vec::new();
+        for u in &units {
+            assert_eq!(u.window.len(), 15);
+            assert!(u.window.windows(2).all(|w| w[1] == w[0] + 1));
+            covered.extend(u.window.iter().copied());
+        }
+        assert_eq!(covered, active, "tree leaves must cover every sentence");
+    }
+
+    #[test]
+    fn tree_leaf_sizes_differ_by_at_most_one() {
+        let plan = DecomposePlan::new(Strategy::Tree, &params(20, 10, 6)).unwrap();
+        for len in [21usize, 47, 100, 999] {
+            let active: Vec<usize> = (0..len).collect();
+            let units = plan.carve(&active, 1);
+            let sizes: Vec<usize> = units.iter().map(|u| u.window.len()).collect();
+            let min = *sizes.iter().min().unwrap();
+            let max = *sizes.iter().max().unwrap();
+            assert!(max - min <= 1, "len={len} sizes={sizes:?}");
+            assert!(max <= 20, "len={len}: leaf exceeds P");
+        }
+    }
+
+    #[test]
+    fn tree_passthrough_leaves_survive_unsolved() {
+        // len 21, P=20 -> 2 leaves of 11 and 10; Q=10 means the 10-leaf
+        // passes through (no unit) and only the 11-leaf is solved
+        let plan = DecomposePlan::new(Strategy::Tree, &params(20, 10, 6)).unwrap();
+        let active: Vec<usize> = (0..21).collect();
+        let units = plan.carve(&active, 0);
+        assert_eq!(units.len(), 1);
+        assert_eq!(units[0].window.len(), 11);
+    }
+
+    #[test]
+    fn tree_degenerate_params_fall_back_to_window_carving() {
+        // P=5, Q=4, len=8: balanced leaves of 4 are all ≤ Q — without a
+        // fallback the level would never shrink
+        let plan = DecomposePlan::new(Strategy::Tree, &params(5, 4, 2)).unwrap();
+        let active: Vec<usize> = (0..8).collect();
+        let units = plan.carve(&active, 0);
+        assert_eq!(units.len(), 1);
+        assert_eq!(units[0].window.len(), 5);
+        assert_eq!(units[0].target, 4);
+    }
+
+    #[test]
+    fn final_unit_below_p_for_all_strategies() {
+        for strategy in [Strategy::Window, Strategy::Tree, Strategy::Streaming] {
+            let plan = DecomposePlan::new(strategy, &params(20, 10, 6)).unwrap();
+            let active: Vec<usize> = (0..12).collect();
+            let units = plan.carve(&active, 3);
+            assert_eq!(units.len(), 1, "{strategy}");
+            assert!(units[0].is_final);
+            assert_eq!(units[0].target, 6);
+            assert_eq!(units[0].window, active);
+        }
+    }
+
+    #[test]
+    fn level_zero_carves_unconditionally_at_exactly_p() {
+        // the stage_count rule: n == P still runs a first shrink level
+        for strategy in [Strategy::Window, Strategy::Tree] {
+            let plan = DecomposePlan::new(strategy, &params(20, 10, 6)).unwrap();
+            let active: Vec<usize> = (0..20).collect();
+            let l0 = plan.carve(&active, 0);
+            assert_eq!(l0.len(), 1, "{strategy}");
+            assert!(!l0[0].is_final, "{strategy}");
+            // ...but a LATER level of exactly P goes straight to final
+            let l1 = plan.carve(&active, 1);
+            assert!(l1[0].is_final, "{strategy}");
+        }
+    }
+
+    #[test]
+    fn node_seed_is_stable_and_position_sensitive() {
+        let a = node_seed(42, 0, 0);
+        assert_eq!(a, node_seed(42, 0, 0));
+        assert_ne!(a, node_seed(42, 0, 1));
+        assert_ne!(a, node_seed(42, 1, 0));
+        assert_ne!(a, node_seed(43, 0, 0));
+        // (level, slot) must not alias under swaps
+        assert_ne!(node_seed(42, 1, 2), node_seed(42, 2, 1));
+    }
+
+    #[test]
+    fn invalid_params_rejected_at_plan_build() {
+        assert!(DecomposePlan::new(Strategy::Tree, &params(5, 5, 2)).is_err());
+    }
+}

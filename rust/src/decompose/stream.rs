@@ -1,0 +1,242 @@
+//! Incremental decomposition over arriving sentences.
+//!
+//! [`StreamingPlanner`] is the index-level state machine behind the
+//! `stream` strategy: sentences arrive one at a time (the executor
+//! un-batches whatever chunking the transport used), the planner keeps a
+//! **rolling summary frontier** of at most P−1 sentence indices between
+//! compressions, and whenever an arrival fills the frontier to exactly P
+//! it emits ONE compression window (the whole frontier) to be reduced to
+//! Q — after which the frontier is the chosen Q survivors and arrivals
+//! continue. Nothing already compressed is ever re-solved; only the
+//! windows whose membership changed (the frontier) are.
+//!
+//! Because the compression trigger depends only on the TOTAL number of
+//! sentences arrived — never on chunk boundaries — the sequence of
+//! compression windows (and with per-node seeding, every solve) is
+//! invariant to arrival batching: feeding a document sentence-by-sentence
+//! or in one chunk produces identical state at every arrival count. This
+//! is one half of the streaming determinism contract
+//! (see `decompose::plan` module docs); the other half is
+//! [`node_seed`](super::node_seed)-derived randomness per compression /
+//! revision node.
+//!
+//! A *summary revision* (the final M-selection over the current frontier)
+//! is computed by the executor on demand and never mutates the planner —
+//! the planner only tracks arrivals and compressions.
+
+use anyhow::{ensure, Result};
+
+use super::{validate_local, DecomposeParams};
+
+/// Node-kind tags for [`node_seed`](super::node_seed)'s `level` argument:
+/// compression nodes and revision nodes draw from disjoint seed families.
+pub const STREAM_COMPRESS_LEVEL: usize = usize::MAX - 1;
+/// See [`STREAM_COMPRESS_LEVEL`].
+pub const STREAM_REVISION_LEVEL: usize = usize::MAX;
+
+/// One due compression: reduce `window` (the full frontier, |window| = P)
+/// to Q survivors.
+#[derive(Debug, Clone)]
+pub struct CompressUnit {
+    /// Original-document sentence indices (ascending arrival order of
+    /// survivors — the frontier).
+    pub window: Vec<usize>,
+    /// 0-based compression ordinal — the `slot` for per-node seeding.
+    pub seq: usize,
+    /// Survivors to keep (always Q).
+    pub target: usize,
+}
+
+/// Incremental planner: arrivals in, compression windows out.
+///
+/// Protocol: call [`push`](StreamingPlanner::push) once per arriving
+/// sentence; when it returns a [`CompressUnit`], solve it and report the
+/// chosen window positions via [`complete`](StreamingPlanner::complete)
+/// before pushing again (enforced — a pending compression blocks further
+/// arrivals, which is what makes state a pure function of arrival count).
+#[derive(Debug)]
+pub struct StreamingPlanner {
+    params: DecomposeParams,
+    /// Frontier: original indices in document order, < P between
+    /// compressions.
+    active: Vec<usize>,
+    arrived: usize,
+    compressions: usize,
+    pending: bool,
+}
+
+impl StreamingPlanner {
+    /// New planner for validated `params`.
+    pub fn new(params: &DecomposeParams) -> Result<Self> {
+        params.validate()?;
+        Ok(Self {
+            params: *params,
+            active: Vec::with_capacity(params.p),
+            arrived: 0,
+            compressions: 0,
+            pending: false,
+        })
+    }
+
+    /// Register the arrival of the next sentence (its original index is
+    /// the current [`arrived`](StreamingPlanner::arrived) count). Returns
+    /// a compression window when the frontier filled to P.
+    pub fn push(&mut self) -> Result<Option<CompressUnit>> {
+        ensure!(
+            !self.pending,
+            "a compression is pending: complete() it before pushing more sentences"
+        );
+        self.active.push(self.arrived);
+        self.arrived += 1;
+        if self.active.len() == self.params.p {
+            self.pending = true;
+            return Ok(Some(CompressUnit {
+                window: self.active.clone(),
+                seq: self.compressions,
+                target: self.params.q,
+            }));
+        }
+        Ok(None)
+    }
+
+    /// Report the pending compression solved: `local` holds Q distinct
+    /// positions INTO the compression window (the `decompose` solver
+    /// contract). The frontier becomes the chosen survivors.
+    pub fn complete(&mut self, unit: &CompressUnit, local: &[usize]) -> Result<()> {
+        ensure!(self.pending, "no compression is pending");
+        ensure!(
+            unit.seq == self.compressions,
+            "stale compression unit {} (expected {})",
+            unit.seq,
+            self.compressions
+        );
+        validate_local(local, unit.window.len(), unit.target)?;
+        let mut chosen: Vec<usize> = local.iter().map(|&l| unit.window[l]).collect();
+        chosen.sort_unstable();
+        self.active = chosen;
+        self.compressions += 1;
+        self.pending = false;
+        Ok(())
+    }
+
+    /// Current frontier (original indices, ascending).
+    pub fn frontier(&self) -> &[usize] {
+        &self.active
+    }
+
+    /// Total sentences arrived so far.
+    pub fn arrived(&self) -> usize {
+        self.arrived
+    }
+
+    /// Compressions performed so far.
+    pub fn compressions(&self) -> usize {
+        self.compressions
+    }
+
+    /// True when a revision (M-selection over the frontier) is possible.
+    pub fn can_summarize(&self) -> bool {
+        !self.pending && self.active.len() >= self.params.m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn keep_first(window: &[usize], target: usize) -> Vec<usize> {
+        debug_assert!(window.len() >= target);
+        (0..target).collect()
+    }
+
+    fn drive(n: usize, params: &DecomposeParams) -> StreamingPlanner {
+        let mut pl = StreamingPlanner::new(params).unwrap();
+        for _ in 0..n {
+            if let Some(unit) = pl.push().unwrap() {
+                let local = keep_first(&unit.window, unit.target);
+                pl.complete(&unit, &local).unwrap();
+            }
+        }
+        pl
+    }
+
+    #[test]
+    fn frontier_stays_below_p_between_compressions() {
+        let params = DecomposeParams { p: 20, q: 10, m: 6 };
+        let pl = drive(57, &params);
+        assert_eq!(pl.arrived(), 57);
+        assert!(pl.frontier().len() < 20);
+        // compressions at arrivals 20, 30, 40, 50 (each restores q=10)
+        assert_eq!(pl.compressions(), 4);
+        assert_eq!(pl.frontier().len(), 10 + 7);
+        assert!(pl.can_summarize());
+    }
+
+    #[test]
+    fn compression_fires_exactly_at_p() {
+        let params = DecomposeParams { p: 5, q: 2, m: 2 };
+        let mut pl = StreamingPlanner::new(&params).unwrap();
+        for k in 0..4 {
+            assert!(pl.push().unwrap().is_none(), "arrival {k}");
+        }
+        let unit = pl.push().unwrap().expect("5th arrival fills the frontier");
+        assert_eq!(unit.window, vec![0, 1, 2, 3, 4]);
+        assert_eq!(unit.seq, 0);
+        assert_eq!(unit.target, 2);
+        // pushing with a pending compression is an error
+        assert!(pl.push().is_err());
+        pl.complete(&unit, &[1, 3]).unwrap();
+        assert_eq!(pl.frontier(), &[1, 3]);
+    }
+
+    #[test]
+    fn state_is_a_pure_function_of_arrival_count() {
+        // the batching-invariance property in miniature: two planners fed
+        // the same total arrivals (regardless of how calls are grouped by
+        // the caller — push is per-sentence by construction) agree on
+        // frontier, compressions, and window sequence
+        let params = DecomposeParams { p: 6, q: 3, m: 2 };
+        let a = drive(40, &params);
+        let b = drive(40, &params);
+        assert_eq!(a.frontier(), b.frontier());
+        assert_eq!(a.compressions(), b.compressions());
+    }
+
+    #[test]
+    fn stale_or_invalid_completions_rejected() {
+        let params = DecomposeParams { p: 4, q: 2, m: 2 };
+        let mut pl = StreamingPlanner::new(&params).unwrap();
+        for _ in 0..3 {
+            assert!(pl.push().unwrap().is_none());
+        }
+        let unit = pl.push().unwrap().unwrap();
+        // wrong count / duplicates / out of range
+        assert!(pl.complete(&unit, &[0]).is_err());
+        assert!(pl.complete(&unit, &[1, 1]).is_err());
+        assert!(pl.complete(&unit, &[0, 9]).is_err());
+        // stale seq
+        let stale = CompressUnit { seq: 7, ..unit.clone() };
+        assert!(pl.complete(&stale, &[0, 1]).is_err());
+        // valid retry lands
+        pl.complete(&unit, &[0, 1]).unwrap();
+        // completing again with nothing pending is an error
+        assert!(pl.complete(&unit, &[0, 1]).is_err());
+    }
+
+    #[test]
+    fn can_summarize_tracks_frontier_and_m() {
+        let params = DecomposeParams { p: 6, q: 3, m: 3 };
+        let mut pl = StreamingPlanner::new(&params).unwrap();
+        assert!(!pl.can_summarize());
+        pl.push().unwrap();
+        pl.push().unwrap();
+        assert!(!pl.can_summarize(), "2 < m");
+        pl.push().unwrap();
+        assert!(pl.can_summarize());
+    }
+
+    #[test]
+    fn degenerate_params_rejected() {
+        assert!(StreamingPlanner::new(&DecomposeParams { p: 5, q: 5, m: 2 }).is_err());
+    }
+}

@@ -16,11 +16,13 @@ use crate::util::rng::SplitMix64;
 use super::similarity::{scores_from_embeddings, Scores};
 use super::Embedder;
 
+/// Embedding dimensionality (matches the artifact's D = 64).
 pub const EMBED_DIM: usize = 64;
 
 /// Shared positive component weight (anisotropy strength).
 const COMMON_WEIGHT: f32 = 0.6;
 
+/// Hashed-random-projection embedder (module docs).
 pub struct HashEmbedder {
     /// Common direction added to every sentence embedding.
     common: Vec<f32>,
@@ -34,6 +36,7 @@ impl Default for HashEmbedder {
 }
 
 impl HashEmbedder {
+    /// Embedder with the fixed deterministic common component.
     pub fn new() -> Self {
         let mut rng = SplitMix64::new(0xC0FF_EE00);
         let common: Vec<f32> = (0..EMBED_DIM)

@@ -16,6 +16,8 @@ pub use similarity::{scores_from_embeddings, Scores};
 
 /// Sentences -> relevance/redundancy scores.
 pub trait Embedder {
+    /// Stable embedder name for reports.
     fn name(&self) -> &'static str;
+    /// Relevance/redundancy scores for `sentences` (paper Eqs. 1-2).
     fn scores(&mut self, sentences: &[String]) -> anyhow::Result<Scores>;
 }

@@ -15,6 +15,7 @@ pub struct Scores {
 }
 
 impl Scores {
+    /// Number of sentences scored.
     pub fn n(&self) -> usize {
         self.mu.len()
     }
@@ -38,13 +39,17 @@ impl Scores {
     }
 }
 
+/// Dot product in the exact summation order every score in this module
+/// uses. `pub(crate)` so the incremental streaming scorer
+/// (`sched::stream`) reproduces batch scores bit for bit.
 #[inline]
-fn dot(a: &[f32], b: &[f32]) -> f32 {
+pub(crate) fn dot(a: &[f32], b: &[f32]) -> f32 {
     a.iter().zip(b).map(|(x, y)| x * y).sum()
 }
 
+/// Euclidean norm (see [`dot`] for why this is `pub(crate)`).
 #[inline]
-fn norm(a: &[f32]) -> f32 {
+pub(crate) fn norm(a: &[f32]) -> f32 {
     dot(a, a).sqrt()
 }
 

@@ -12,8 +12,11 @@ use crate::util::rng::Pcg32;
 
 /// A benchmark document turned into an ES problem + exact bounds.
 pub struct BenchProblem {
+    /// Document id within the benchmark set.
     pub doc_id: String,
+    /// Full-document ES problem (mu, beta, lambda, M).
     pub problem: EsProblem,
+    /// Exact objective bounds for normalizing solver scores.
     pub bounds: ObjectiveBounds,
 }
 

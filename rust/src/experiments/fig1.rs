@@ -17,6 +17,7 @@ use crate::util::stats::BoxStats;
 use super::common::{exp_rng, load_problems, make_solver};
 use super::{Report, Scale};
 
+/// Regenerate this figure at `scale` under `settings`.
 pub fn run(scale: Scale, settings: &Settings) -> Result<Vec<Report>> {
     let docs = scale.docs(20);
     let problems = load_problems("cnn_dm_20", docs, settings)?;

@@ -18,6 +18,7 @@ use crate::util::stats::mean;
 use super::common::{exp_rng, load_problems, make_solver};
 use super::{Report, Scale};
 
+/// Regenerate Fig. 2/3 panels for `set_name` at `scale`.
 pub fn run(scale: Scale, settings: &Settings, set_name: &str) -> Result<Vec<Report>> {
     let docs = scale.docs(20);
     let runs = scale.runs(10);

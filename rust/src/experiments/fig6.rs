@@ -54,6 +54,7 @@ fn iteration_points(stages: usize, scale: Scale) -> Vec<(usize, usize)> {
     per_stage.into_iter().map(|r| (r, r * stages)).collect()
 }
 
+/// Regenerate this figure at `scale` under `settings`.
 pub fn run(scale: Scale, settings: &Settings) -> Result<Vec<Report>> {
     let mut reports = Vec::new();
     let sets: &[(&str, &str)] = match scale {

@@ -82,6 +82,7 @@ pub fn brute_evals(n: usize, params: &DecomposeParams) -> u128 {
     evals
 }
 
+/// Regenerate these figures at `scale` under `settings`.
 pub fn run(scale: Scale, settings: &Settings) -> Result<Vec<Report>> {
     let sets: &[&str] = match scale {
         Scale::Quick => &["cnn_dm_20"],

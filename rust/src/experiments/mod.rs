@@ -22,13 +22,18 @@ use crate::config::Settings;
 /// Tabular result with a title and free-form notes.
 #[derive(Debug, Clone)]
 pub struct Report {
+    /// Report title (figure/panel name).
     pub title: String,
+    /// Column headers.
     pub headers: Vec<String>,
+    /// Table rows (stringified cells).
     pub rows: Vec<Vec<String>>,
+    /// Free-form notes rendered under the table.
     pub notes: Vec<String>,
 }
 
 impl Report {
+    /// New empty report with `headers`.
     pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
         Self {
             title: title.into(),
@@ -38,15 +43,18 @@ impl Report {
         }
     }
 
+    /// Append one row.
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.headers.len(), "ragged report row");
         self.rows.push(cells);
     }
 
+    /// Append a note line.
     pub fn note(&mut self, s: impl Into<String>) {
         self.notes.push(s.into());
     }
 
+    /// Render as a markdown table.
     pub fn to_markdown(&self) -> String {
         let mut out = format!("### {}\n\n", self.title);
         out.push_str(&format!("| {} |\n", self.headers.join(" | ")));
@@ -63,6 +71,7 @@ impl Report {
         out
     }
 
+    /// Render as CSV (headers + rows).
     pub fn to_csv(&self) -> String {
         let mut out = self.headers.join(",") + "\n";
         for row in &self.rows {
@@ -83,6 +92,7 @@ pub enum Scale {
 }
 
 impl Scale {
+    /// Benchmark documents to evaluate at this scale.
     pub fn docs(&self, full: usize) -> usize {
         match self {
             Scale::Quick => full.min(6),
@@ -90,6 +100,7 @@ impl Scale {
         }
     }
 
+    /// Repeated runs per point at this scale.
     pub fn runs(&self, full: usize) -> usize {
         match self {
             Scale::Quick => full.min(3),
@@ -97,6 +108,7 @@ impl Scale {
         }
     }
 
+    /// Refinement-iteration sweep points at this scale.
     pub fn iteration_grid(&self) -> Vec<usize> {
         match self {
             Scale::Quick => vec![2, 6, 10, 20],

@@ -16,6 +16,7 @@ use crate::util::stats::mean;
 use super::common::{exp_rng, load_problems};
 use super::{Report, Scale};
 
+/// Run the supplementary study at `scale` under `settings`.
 pub fn run(scale: Scale, settings: &Settings) -> Result<Vec<Report>> {
     // exhaustive enumeration: 10-sentence set is cheap (2^10), 20-sentence
     // (2^20) reserved for full scale

@@ -24,6 +24,7 @@ use crate::util::stats::mean;
 use super::common::{exp_rng, load_problems, make_solver};
 use super::{Report, Scale};
 
+/// Regenerate the table at `scale` under `settings`.
 pub fn run(scale: Scale, settings: &Settings) -> Result<Vec<Report>> {
     let docs = scale.docs(20);
     let runs = scale.runs(match scale {

@@ -31,10 +31,12 @@ pub struct EsProblem {
 }
 
 impl EsProblem {
+    /// Number of sentences.
     pub fn n(&self) -> usize {
         self.mu.len()
     }
 
+    /// Redundancy beta_ij.
     #[inline]
     pub fn beta_ij(&self, i: usize, j: usize) -> f32 {
         self.beta[i * self.n() + j]
@@ -71,7 +73,9 @@ impl EsProblem {
 /// Which formulation to emit.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Formulation {
+    /// Eq. 6: the plain penalty formulation.
     Original,
+    /// Eq. 10–12: the bias-shifted ("improved") formulation.
     Improved,
 }
 
@@ -112,6 +116,7 @@ pub fn kofn_bias(original: &Ising) -> f32 {
 /// Result of formulating an ES instance.
 #[derive(Debug, Clone)]
 pub struct EsIsing {
+    /// The Ising instance (minimize H to select sentences).
     pub ising: Ising,
     /// Constant offset: H_qubo(x(s)) = H_ising(s) + offset.
     pub offset: f64,

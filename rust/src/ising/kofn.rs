@@ -23,17 +23,21 @@ use crate::util::stats::median_f32;
 /// subject to Σ x_i = k.
 #[derive(Debug, Clone)]
 pub struct KofnProblem {
+    /// Per-item values.
     pub value: Vec<f32>,
     /// Pairwise cost, row-major n*n, symmetric, zero diagonal.
     pub cost: Vec<f32>,
+    /// Selection cardinality k.
     pub k: usize,
 }
 
 impl KofnProblem {
+    /// Number of items.
     pub fn n(&self) -> usize {
         self.value.len()
     }
 
+    /// Objective of `selected` under this instance.
     pub fn objective(&self, selected: &[usize]) -> f64 {
         let n = self.n();
         let mut obj = 0.0f64;

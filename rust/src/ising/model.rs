@@ -19,6 +19,7 @@
 /// Quadratic Unconstrained Binary Optimization instance (minimization).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Qubo {
+    /// Number of binary variables.
     pub n: usize,
     /// Linear coefficients Q_ii.
     pub linear: Vec<f32>,
@@ -27,6 +28,7 @@ pub struct Qubo {
 }
 
 impl Qubo {
+    /// Zero QUBO over `n` variables.
     pub fn new(n: usize) -> Self {
         Self {
             n,
@@ -35,6 +37,7 @@ impl Qubo {
         }
     }
 
+    /// Coefficient Q_ij.
     #[inline]
     pub fn q(&self, i: usize, j: usize) -> f32 {
         self.quad[i * self.n + j]
@@ -98,6 +101,7 @@ impl Qubo {
 /// Ising instance (minimization over s in {-1,+1}^n).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Ising {
+    /// Number of spins.
     pub n: usize,
     /// Local fields h_i.
     pub h: Vec<f32>,
@@ -106,6 +110,7 @@ pub struct Ising {
 }
 
 impl Ising {
+    /// Zero instance with `n` spins.
     pub fn new(n: usize) -> Self {
         Self {
             n,
@@ -114,11 +119,13 @@ impl Ising {
         }
     }
 
+    /// Coupling J_ij.
     #[inline]
     pub fn jij(&self, i: usize, j: usize) -> f32 {
         self.j[i * self.n + j]
     }
 
+    /// Set J_ij = J_ji = v.
     pub fn set_pair(&mut self, i: usize, j: usize, v: f32) {
         assert_ne!(i, j);
         self.j[i * self.n + j] = v;

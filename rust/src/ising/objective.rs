@@ -13,7 +13,9 @@ use super::formulation::EsProblem;
 /// Exact bounds of the Eq. 3 objective over all M-subsets.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ObjectiveBounds {
+    /// Exact minimum objective.
     pub min: f64,
+    /// Exact maximum objective.
     pub max: f64,
 }
 

@@ -42,6 +42,7 @@ pub const QUANT_H_ABS_MAX: f32 = 1e9;
 /// See the module docs for conventions and the exact-tie rule.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct QuantIsing {
+    /// Number of spins.
     pub n: usize,
     /// Local fields h_i (integer grid values).
     pub h: Vec<i32>,
@@ -50,6 +51,7 @@ pub struct QuantIsing {
 }
 
 impl QuantIsing {
+    /// Zero instance with `n` spins.
     pub fn new(n: usize) -> Self {
         Self {
             n,
@@ -69,6 +71,7 @@ impl QuantIsing {
         self.j.resize(n * n, 0);
     }
 
+    /// Coupling J_ij.
     #[inline]
     pub fn jij(&self, i: usize, j: usize) -> i32 {
         self.j[i * self.n + j] as i32

@@ -1,7 +1,13 @@
 //! cobi-es: extractive summarization on a (simulated) CMOS coupled-
 //! oscillator Ising machine — a three-layer Rust + JAX + Pallas
 //! reproduction of Zeng et al., "Extractive summarization on a CMOS Ising
-//! machine" (2026). See DESIGN.md for the architecture and substitutions.
+//! machine" (2026). See DESIGN.md for the architecture and substitutions,
+//! and docs/ARCHITECTURE.md for the end-to-end request walkthrough.
+//!
+//! Every public item in this crate is documented; the CI docs build
+//! denies `missing_docs`, so new API surface must ship with rustdoc.
+
+#![warn(missing_docs)]
 
 pub mod cli;
 pub mod cobi;

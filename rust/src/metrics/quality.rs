@@ -90,11 +90,15 @@ pub fn rouge_l(candidate: &str, reference: &str) -> f64 {
 /// Bundle of the three scores.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Rouge {
+    /// ROUGE-1 F1 (unigram overlap).
     pub rouge1: f64,
+    /// ROUGE-2 F1 (bigram overlap).
     pub rouge2: f64,
+    /// ROUGE-L F1 (longest common subsequence).
     pub rouge_l: f64,
 }
 
+/// All three ROUGE scores of `candidate` against `reference`.
 pub fn rouge_all(candidate: &str, reference: &str) -> Rouge {
     Rouge {
         rouge1: rouge_n(candidate, reference, 1),

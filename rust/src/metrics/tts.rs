@@ -93,12 +93,17 @@ pub fn iterations_to_target(p_success: f64, p_target: f64) -> f64 {
 /// TTS (Eq. 15) and ETS (Eq. 16) for one solver.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TtsEts {
+    /// Per-iteration success probability.
     pub p_success: f64,
+    /// Iterations to reach the target probability (Eq. 14).
     pub iterations: f64,
+    /// Time-to-solution, seconds (Eq. 15).
     pub tts_s: f64,
+    /// Energy-to-solution, joules (Eq. 16).
     pub ets_j: f64,
 }
 
+/// TTS/ETS of a solver with measured success rate `p_success` under `model`.
 pub fn tts_ets(
     first_success: &[Option<usize>],
     max_iterations: usize,

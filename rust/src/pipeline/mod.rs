@@ -8,7 +8,10 @@ use anyhow::{ensure, Context, Result};
 
 use crate::config::{CobiConfig, PipelineConfig};
 use crate::corpus::Document;
-use crate::decompose::{decompose, stage_count, DecomposeParams};
+use crate::decompose::{
+    decompose, node_seed, stage_count, DecomposeParams, DecomposePlan, Strategy,
+    StreamingPlanner, STREAM_COMPRESS_LEVEL, STREAM_REVISION_LEVEL,
+};
 use crate::embed::{Embedder, HashEmbedder, Scores};
 use crate::ising::EsProblem;
 use crate::quant::Rounding;
@@ -34,6 +37,7 @@ pub enum SolverBackend {
 }
 
 impl SolverBackend {
+    /// Stable backend name for reports.
     pub fn name(&self) -> &'static str {
         match self {
             SolverBackend::Ising(s) => s.name(),
@@ -69,6 +73,7 @@ impl SolverBackend {
 /// A produced summary.
 #[derive(Debug, Clone)]
 pub struct Summary {
+    /// Source document id.
     pub doc_id: String,
     /// Selected sentence indices (ascending, original document order).
     pub selected: Vec<usize>,
@@ -83,6 +88,7 @@ pub struct Summary {
 }
 
 impl Summary {
+    /// Summary sentences joined into one string.
     pub fn text(&self) -> String {
         self.sentences.join(" ")
     }
@@ -114,6 +120,7 @@ impl Summary {
 /// assert!(summary.objective.is_finite());
 /// ```
 pub struct EsPipeline {
+    /// Pipeline configuration (public for experiment drivers).
     pub cfg: PipelineConfig,
     embedder: Box<dyn Embedder + Send>,
     backend: SolverBackend,
@@ -121,6 +128,7 @@ pub struct EsPipeline {
 }
 
 impl EsPipeline {
+    /// Pipeline from explicit parts.
     pub fn new(
         cfg: PipelineConfig,
         embedder: Box<dyn Embedder + Send>,
@@ -181,8 +189,20 @@ impl EsPipeline {
         Ok(selected)
     }
 
-    /// Summarize a document to `cfg.summary_len` sentences.
+    /// Summarize a document to `cfg.summary_len` sentences, decomposing
+    /// per `cfg.strategy` (the inline analogues of the sched executors;
+    /// see `decompose::plan` for the strategy semantics).
     pub fn summarize(&mut self, doc: &Document) -> Result<Summary> {
+        match self.cfg.strategy {
+            Strategy::Window => self.summarize_window(doc),
+            Strategy::Tree => self.summarize_tree(doc),
+            Strategy::Streaming => self.summarize_stream(doc),
+        }
+    }
+
+    /// The paper's sliding-window reduction (§IV-B) — the reference path,
+    /// byte-identical to every pre-strategy release.
+    fn summarize_window(&mut self, doc: &Document) -> Result<Summary> {
         let n = doc.len().min(MAX_SENTENCES);
         ensure!(n >= self.cfg.summary_len, "document too short");
         let sentences = &doc.sentences[..n];
@@ -201,17 +221,157 @@ impl EsPipeline {
             Self::solve_window(&scores, window, target, lambda, &refine_cfg, backend, rng)
         })?;
 
-        // score on the full-document problem
+        Ok(Self::assemble(doc, sentences, &scores, &self.cfg, result))
+    }
+
+    /// Balanced hierarchical merge: the tree plan's levels solved in
+    /// unit order, each unit's rounding draws seeded from its tree
+    /// position (`node_seed`) — the inline twin of the pooled tree walk.
+    fn summarize_tree(&mut self, doc: &Document) -> Result<Summary> {
+        let n = doc.len().min(MAX_SENTENCES);
+        ensure!(n >= self.cfg.summary_len, "document too short");
+        let sentences = &doc.sentences[..n];
+        let scores = self
+            .embedder
+            .scores(sentences)
+            .context("embedding failed")?;
+
+        let params = self.decompose_params();
+        let refine_cfg = self.refine_config();
+        let lambda = self.cfg.lambda;
+        let seed = self.cfg.seed;
+        let backend = &mut self.backend;
+
+        let plan = DecomposePlan::new(Strategy::Tree, &params)?;
+        let mut graph = crate::sched::SubproblemGraph::with_plan(n, plan)?;
+        while !graph.is_done() {
+            let units = graph.take_ready();
+            ensure!(!units.is_empty(), "tree plan stalled: no ready units");
+            for u in units {
+                let mut rng = Pcg32::new(node_seed(seed, u.level, u.slot), 0xE5);
+                let local = Self::solve_window(
+                    &scores, &u.window, u.target, lambda, &refine_cfg, backend, &mut rng,
+                )?;
+                graph.complete(u.id, local)?;
+            }
+        }
+        let result = graph.into_result()?;
+        Ok(Self::assemble(doc, sentences, &scores, &self.cfg, result))
+    }
+
+    /// Causal replay of the streaming strategy: the rolling frontier is
+    /// compressed exactly as if the document's sentences had arrived one
+    /// by one, with each compression scored over only the sentences seen
+    /// so far.
+    ///
+    /// Cost note: the [`Embedder`] trait only exposes whole-prefix
+    /// scoring, so each compression recomputes `scores(&sentences[..=t])`
+    /// — O(t²·D) per compression. That is acceptable here ONLY because
+    /// this path keeps the batch paths' `MAX_SENTENCES` clamp (the
+    /// pipeline's embedder may be the fixed-shape encoder artifact, and a
+    /// ≤128-sentence document sees ~a dozen compressions). Feeds of real
+    /// length belong on [`StreamSummarizer`](crate::sched::StreamSummarizer),
+    /// which embeds each sentence once and scores windows incrementally
+    /// in O(P²·D) — that is the service's streaming executor.
+    fn summarize_stream(&mut self, doc: &Document) -> Result<Summary> {
+        let n = doc.len().min(MAX_SENTENCES);
+        ensure!(n >= self.cfg.summary_len, "document too short");
+        let sentences = &doc.sentences[..n];
+
+        let params = self.decompose_params();
+        let refine_cfg = self.refine_config();
+        let lambda = self.cfg.lambda;
+        let seed = self.cfg.seed;
+
+        let mut planner = StreamingPlanner::new(&params)?;
+        for t in 0..n {
+            let Some(unit) = planner.push()? else { continue };
+            // causal scores: centroid over the t+1 arrived sentences only
+            let scores = self
+                .embedder
+                .scores(&sentences[..=t])
+                .context("embedding failed")?;
+            let mut rng =
+                Pcg32::new(node_seed(seed, STREAM_COMPRESS_LEVEL, unit.seq), 0xE5);
+            let local = Self::solve_window(
+                &scores,
+                &unit.window,
+                unit.target,
+                lambda,
+                &refine_cfg,
+                &mut self.backend,
+                &mut rng,
+            )?;
+            planner.complete(&unit, &local)?;
+        }
+
+        // final revision over the frontier, scored at full arrival count
+        let scores = self
+            .embedder
+            .scores(sentences)
+            .context("embedding failed")?;
+        let frontier: Vec<usize> = planner.frontier().to_vec();
+        ensure!(
+            frontier.len() >= self.cfg.summary_len,
+            "stream frontier too short for the summary"
+        );
+        let mut rng = Pcg32::new(node_seed(seed, STREAM_REVISION_LEVEL, n), 0xE5);
+        let local = Self::solve_window(
+            &scores,
+            &frontier,
+            self.cfg.summary_len,
+            lambda,
+            &refine_cfg,
+            &mut self.backend,
+            &mut rng,
+        )?;
+        let mut local = local;
+        local.sort_unstable();
+        let selected: Vec<usize> = local.iter().map(|&l| frontier[l]).collect();
+
+        // scored on the FRONTIER problem (see sched::stream: the full-
+        // document objective has no causal analogue in a stream)
+        let sub = scores.subset(&frontier);
+        let p = EsProblem {
+            mu: sub.mu,
+            beta: sub.beta,
+            lambda,
+            m: self.cfg.summary_len,
+        };
+        let objective = p.objective(&local);
+        let stages = planner.compressions() + 1;
+        Ok(Summary {
+            doc_id: doc.id.clone(),
+            sentences: selected
+                .iter()
+                .map(|&i| sentences[i].clone())
+                .collect(),
+            selected,
+            objective,
+            total_solves: stages * self.cfg.iterations.max(1),
+            stages,
+        })
+    }
+
+    /// Shared tail of the window/tree paths: score the final selection on
+    /// the full-document problem and assemble the summary.
+    fn assemble(
+        doc: &Document,
+        sentences: &[String],
+        scores: &Scores,
+        cfg: &PipelineConfig,
+        result: crate::decompose::DecompositionResult,
+    ) -> Summary {
         let full = EsProblem {
             mu: scores.mu.clone(),
             beta: scores.beta.clone(),
-            lambda,
-            m: self.cfg.summary_len,
+            lambda: cfg.lambda,
+            m: cfg.summary_len,
         };
         let objective = full.objective(&result.selected);
 
         let stages = result.solves();
-        Ok(Summary {
+        Summary {
             doc_id: doc.id.clone(),
             sentences: result
                 .selected
@@ -220,9 +380,9 @@ impl EsPipeline {
                 .collect(),
             selected: result.selected,
             objective,
-            total_solves: stages * self.cfg.iterations.max(1),
+            total_solves: stages * cfg.iterations.max(1),
             stages,
-        })
+        }
     }
 
     /// Expected decomposition stages for a document of `n` sentences.
@@ -346,5 +506,54 @@ mod tests {
         let s = p.summarize(&set.documents[0]).unwrap();
         assert_eq!(s.stages, 4);
         assert_eq!(s.selected.len(), 6);
+    }
+
+    #[test]
+    fn tree_and_stream_strategies_summarize_inline() {
+        use crate::decompose::Strategy;
+        let set = benchmark_set("cnn_dm_50").unwrap();
+        let doc = &set.documents[0];
+        for strategy in [Strategy::Tree, Strategy::Streaming] {
+            let cfg = PipelineConfig {
+                solver: "tabu".into(),
+                iterations: 2,
+                strategy,
+                ..Default::default()
+            };
+            let make = || EsPipeline::from_config(&cfg, &CobiConfig::default(), None).unwrap();
+            let s = make().summarize(doc).unwrap();
+            assert_eq!(s.selected.len(), 6, "{strategy}");
+            assert!(s.selected.windows(2).all(|w| w[0] < w[1]), "{strategy}");
+            assert!(s.selected.iter().all(|&i| i < 50), "{strategy}");
+            assert!(s.objective.is_finite(), "{strategy}");
+            assert!(s.stages >= 2, "{strategy}");
+            // inline strategies are deterministic: a fresh pipeline
+            // replays the identical summary
+            let s2 = make().summarize(doc).unwrap();
+            assert_eq!(s.selected, s2.selected, "{strategy}");
+            assert_eq!(s.objective.to_bits(), s2.objective.to_bits(), "{strategy}");
+        }
+    }
+
+    #[test]
+    fn strategies_reduce_to_one_final_solve_below_p() {
+        // N <= P: every strategy degenerates to the same single final
+        // M-selection shape (counts agree; selections may differ only
+        // through seeding)
+        use crate::decompose::Strategy;
+        let set = benchmark_set("bench_10").unwrap();
+        for strategy in [Strategy::Window, Strategy::Tree, Strategy::Streaming] {
+            let cfg = PipelineConfig {
+                solver: "tabu".into(),
+                iterations: 2,
+                summary_len: 3,
+                strategy,
+                ..Default::default()
+            };
+            let mut p = EsPipeline::from_config(&cfg, &CobiConfig::default(), None).unwrap();
+            let s = p.summarize(&set.documents[0]).unwrap();
+            assert_eq!(s.stages, 1, "{strategy}");
+            assert_eq!(s.selected.len(), 3, "{strategy}");
+        }
     }
 }

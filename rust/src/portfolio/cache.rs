@@ -36,6 +36,7 @@ pub enum CacheOutcome {
     /// Structurally similar instance seen before: stored spins to use as
     /// a warm-start hint (length always equals the probed instance's n).
     Warm(Vec<i8>),
+    /// Nothing usable cached.
     Miss,
 }
 
@@ -43,17 +44,24 @@ pub enum CacheOutcome {
 /// [`PortfolioMetrics`](super::PortfolioMetrics).
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct CacheStats {
+    /// Cache probes.
     pub lookups: u64,
+    /// Exact-tier hits (stored solution served, zero device time).
     pub exact_hits: u64,
+    /// Near-tier hits (warm-start hint served).
     pub warm_hits: u64,
+    /// Probes that found nothing usable.
     pub misses: u64,
+    /// Solutions stored.
     pub inserts: u64,
+    /// FIFO evictions.
     pub evictions: u64,
     /// Entries currently held.
     pub entries: usize,
 }
 
 impl CacheStats {
+    /// Exact hits per lookup.
     pub fn exact_rate(&self) -> f64 {
         if self.lookups == 0 {
             0.0
@@ -62,6 +70,7 @@ impl CacheStats {
         }
     }
 
+    /// Warm hits per lookup.
     pub fn warm_rate(&self) -> f64 {
         if self.lookups == 0 {
             0.0
@@ -70,6 +79,7 @@ impl CacheStats {
         }
     }
 
+    /// One-line counter summary.
     pub fn report(&self) -> String {
         format!(
             "cache lookups={} exact={:.0}% warm={:.0}% entries={} evictions={}",

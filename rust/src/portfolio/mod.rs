@@ -113,6 +113,7 @@ impl PortfolioMetrics {
         self.routes.iter().sum()
     }
 
+    /// One-line telemetry fragment for service reports.
     pub fn report(&self) -> String {
         let mut routes = String::new();
         for b in BackendKind::ALL {
@@ -144,11 +145,14 @@ impl PortfolioMetrics {
 /// [`SolverPortfolio`].
 #[derive(Clone)]
 pub struct PortfolioShared {
+    /// Fleet-shared telemetry block.
     pub metrics: Arc<Mutex<PortfolioMetrics>>,
+    /// Fleet-shared warm-start cache.
     pub cache: Arc<WarmStartCache>,
 }
 
 impl PortfolioShared {
+    /// Fresh shared state per `cfg` (one per `DevicePool`).
     pub fn new(cfg: &PortfolioConfig) -> Self {
         Self {
             metrics: Arc::new(Mutex::new(PortfolioMetrics::default())),

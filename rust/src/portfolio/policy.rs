@@ -48,6 +48,7 @@ impl BackendKind {
     /// Number of backends (array dimension for per-backend counters).
     pub const COUNT: usize = Self::ALL.len();
 
+    /// Canonical lowercase name.
     pub fn name(self) -> &'static str {
         match self {
             BackendKind::Cobi => "cobi",
@@ -69,6 +70,7 @@ impl BackendKind {
         }
     }
 
+    /// Parse a canonical name (`None` on junk).
     pub fn from_name(s: &str) -> Option<Self> {
         Self::ALL.into_iter().find(|b| b.name() == s)
     }
@@ -77,8 +79,12 @@ impl BackendKind {
 /// Routing policy (see module docs).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RoutePolicy {
+    /// Everything to the configured static backend.
     Static,
+    /// Route by instance size: exact for tiny, COBI for chip-sized,
+    /// Tabu for the rest.
     SizeTiered,
+    /// Epsilon-greedy over per-(backend, size-bucket) running stats.
     Bandit,
 }
 
@@ -125,6 +131,7 @@ pub struct CellStats {
 }
 
 impl CellStats {
+    /// Mean solution energy per spin (quality proxy; lower is better).
     pub fn mean_energy_per_spin(&self) -> f64 {
         if self.count == 0 {
             0.0
@@ -133,6 +140,7 @@ impl CellStats {
         }
     }
 
+    /// Mean wall-clock per request, seconds.
     pub fn mean_latency_s(&self) -> f64 {
         if self.count == 0 {
             0.0
@@ -155,6 +163,7 @@ pub struct BanditStats {
 }
 
 impl BanditStats {
+    /// Fold one request's outcome into its (backend, size) cell.
     pub fn record(&mut self, b: BackendKind, n: usize, energy_per_spin: f64, latency_s: f64) {
         let c = &mut self.cells[b.index()][size_bucket(n)];
         c.count += 1;
@@ -162,6 +171,7 @@ impl BanditStats {
         c.latency_sum_s += latency_s;
     }
 
+    /// The running stats cell for (backend, size bucket).
     pub fn cell(&self, b: BackendKind, n: usize) -> &CellStats {
         &self.cells[b.index()][size_bucket(n)]
     }

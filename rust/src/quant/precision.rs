@@ -11,6 +11,7 @@
 use std::fmt;
 use std::str::FromStr;
 
+/// Quantization grid for solver instances.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Precision {
     /// Full floating point (no quantization).

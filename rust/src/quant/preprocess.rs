@@ -34,6 +34,7 @@ pub fn scale_truncate(ising: &Ising, grid_max: i32, scale_to_j: bool) -> Ising {
 /// Result of a merge: the reduced instance plus the mapping back.
 #[derive(Debug, Clone)]
 pub struct MergedIsing {
+    /// The reduced instance.
     pub ising: Ising,
     /// group[k] = original spin indices merged into reduced spin k.
     pub groups: Vec<Vec<usize>>,

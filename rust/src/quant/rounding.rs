@@ -15,10 +15,14 @@ use crate::util::rng::Pcg32;
 
 use super::precision::Precision;
 
+/// Rounding scheme for quantization (§IV-A).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Rounding {
+    /// Round to the nearest grid point.
     Deterministic,
+    /// Fair coin flip between floor and ceil.
     Stoch5050,
+    /// Round up with probability equal to the fractional part.
     Stochastic,
 }
 

@@ -35,8 +35,11 @@ use crate::util::rng::Pcg32;
 /// Refinement configuration for one subproblem solve.
 #[derive(Debug, Clone)]
 pub struct RefineConfig {
+    /// Ising formulation variant (original / improved).
     pub formulation: Formulation,
+    /// Quantization grid.
     pub precision: Precision,
+    /// Rounding scheme (SIV-A).
     pub rounding: Rounding,
     /// Number of quantize→solve→evaluate iterations.
     pub iterations: usize,
@@ -118,6 +121,7 @@ pub struct RefineTrace {
     pub objectives: Vec<f64>,
     /// Best-so-far objective after each iteration (prefix max).
     pub best_so_far: Vec<f64>,
+    /// Best repaired selection across iterations.
     pub result: SelectionResult,
 }
 

@@ -20,11 +20,14 @@ use anyhow::{bail, Context, Result};
 /// One input/output slot from the manifest.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SlotSpec {
+    /// Element type ("f32" / "i32").
     pub dtype: String,
+    /// Static shape.
     pub dims: Vec<usize>,
 }
 
 impl SlotSpec {
+    /// Element count (product of dims).
     pub fn elements(&self) -> usize {
         self.dims.iter().product::<usize>().max(1)
     }
@@ -33,14 +36,19 @@ impl SlotSpec {
 /// Manifest entry for one graph.
 #[derive(Debug, Clone, Default)]
 pub struct GraphSpec {
+    /// Artifact file name within the directory.
     pub file: String,
+    /// Input slot specs, in call order.
     pub inputs: Vec<SlotSpec>,
+    /// Output slot specs.
     pub outputs: Vec<SlotSpec>,
 }
 
 /// Typed argument for execution.
 pub enum Arg<'a> {
+    /// Borrowed 32-bit float buffer.
     F32(&'a [f32]),
+    /// Borrowed 32-bit int buffer.
     I32(&'a [i32]),
 }
 
@@ -187,12 +195,14 @@ mod backend {
             Self::open(Path::new(&dir))
         }
 
+        /// Names of compiled graphs in the manifest.
         pub fn graph_names(&self) -> Vec<String> {
             let mut v: Vec<String> = self.specs.keys().cloned().collect();
             v.sort();
             v
         }
 
+        /// Spec for graph `name`, if present.
         pub fn spec(&self, name: &str) -> Option<&GraphSpec> {
             self.specs.get(name)
         }
@@ -249,6 +259,7 @@ mod backend {
     }
 
     impl Executable {
+        /// Stub execution: always errors (`pjrt` feature disabled).
         pub fn run(&self, _args: &[Arg<'_>]) -> Result<Vec<Vec<f32>>> {
             bail!("{}: {UNAVAILABLE}", self.name)
         }
@@ -259,24 +270,29 @@ mod backend {
     pub struct ArtifactRuntime(());
 
     impl ArtifactRuntime {
+        /// Open an artifact directory (manifest + graphs).
         pub fn open(dir: &Path) -> Result<Self> {
             bail!("cannot open artifacts at {}: {UNAVAILABLE}", dir.display())
         }
 
+        /// Open `COBI_ES_ARTIFACTS` or `./artifacts`.
         pub fn open_default() -> Result<Self> {
             let dir =
                 std::env::var("COBI_ES_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
             Self::open(Path::new(&dir))
         }
 
+        /// Stub: no graphs without the `pjrt` feature.
         pub fn graph_names(&self) -> Vec<String> {
             Vec::new()
         }
 
+        /// Stub: always `None`.
         pub fn spec(&self, _name: &str) -> Option<&GraphSpec> {
             None
         }
 
+        /// Stub: errors descriptively.
         pub fn executable(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
             bail!("artifact '{name}': {UNAVAILABLE}")
         }

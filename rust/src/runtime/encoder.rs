@@ -14,6 +14,7 @@ use crate::text::{Tokenizer, MAX_SENTENCES, MAX_TOKENS};
 
 use super::artifacts::{Arg, ArtifactRuntime, Executable};
 
+/// The AOT embedding path: encoder + cosine artifacts through PJRT.
 pub struct EncoderPipeline {
     encoder: Arc<Executable>,
     cosine: Arc<Executable>,
@@ -22,6 +23,7 @@ pub struct EncoderPipeline {
 }
 
 impl EncoderPipeline {
+    /// Build from the runtime's `encoder` and `cosine` graphs.
     pub fn new(rt: &ArtifactRuntime) -> Result<Self> {
         let encoder = rt.executable("encoder")?;
         let cosine = rt.executable("cosine")?;

@@ -9,19 +9,34 @@ use std::path::Path;
 
 use anyhow::{bail, ensure, Context, Result};
 
+/// One recorded tensor (input or output of a compiled graph).
 #[derive(Debug, Clone)]
 pub enum TestArray {
-    F32 { dims: Vec<usize>, data: Vec<f32> },
-    I32 { dims: Vec<usize>, data: Vec<i32> },
+    /// 32-bit float tensor.
+    F32 {
+        /// Static shape.
+        dims: Vec<usize>,
+        /// Row-major elements.
+        data: Vec<f32>,
+    },
+    /// 32-bit int tensor.
+    I32 {
+        /// Static shape.
+        dims: Vec<usize>,
+        /// Row-major elements.
+        data: Vec<i32>,
+    },
 }
 
 impl TestArray {
+    /// Tensor dims.
     pub fn dims(&self) -> &[usize] {
         match self {
             TestArray::F32 { dims, .. } | TestArray::I32 { dims, .. } => dims,
         }
     }
 
+    /// Float data, if this is an F32 tensor.
     pub fn as_f32(&self) -> Option<&[f32]> {
         match self {
             TestArray::F32 { data, .. } => Some(data),
@@ -29,6 +44,7 @@ impl TestArray {
         }
     }
 
+    /// Int data, if this is an I32 tensor.
     pub fn as_i32(&self) -> Option<&[i32]> {
         match self {
             TestArray::I32 { data, .. } => Some(data),
@@ -37,9 +53,12 @@ impl TestArray {
     }
 }
 
+/// A compile-time-recorded (inputs, outputs) pair for numeric replay.
 #[derive(Debug, Clone)]
 pub struct TestVector {
+    /// Graph inputs, in call order.
     pub inputs: Vec<TestArray>,
+    /// Expected outputs.
     pub outputs: Vec<TestArray>,
 }
 
@@ -64,6 +83,7 @@ impl<'a> Cursor<'a> {
     }
 }
 
+/// Load a binary test vector from `path`.
 pub fn load(path: &Path) -> Result<TestVector> {
     let raw = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
     let mut cur = Cursor { buf: &raw, off: 0 };

@@ -5,19 +5,25 @@
 //! all windows of a pass (and of every other in-flight document) are
 //! available for cross-document coalescing on the devices.
 //!
-//! Determinism: all RNG here is per-document. The quantization stream is
+//! Determinism: all RNG here is per-document. Under the default
+//! [`Strategy::Window`] plan the quantization stream is
 //! `Pcg32::new(cfg.seed, 0xE5)` — the exact stream `EsPipeline` uses — and
 //! instances are drawn in unit-id (submission) order, which is fixed by
-//! the graph, not by completion timing. Solve randomness derives from the
-//! client's request-seed stream. Result: byte-identical summaries for a
-//! fixed (config, document) regardless of pool size, coalescing, worker
-//! count, or dispatch interleaving.
+//! the graph, not by completion timing; solve randomness derives from the
+//! client's request-seed stream. Under [`Strategy::Tree`] every plan node
+//! instead derives its own seed from (document seed, level, slot) via
+//! [`node_seed`](crate::decompose::node_seed), and
+//! [`Strategy::Streaming`] documents route through
+//! [`StreamSummarizer`](super::StreamSummarizer). Either way the result
+//! is byte-identical summaries for a fixed (config, document) regardless
+//! of pool size, coalescing, worker count, or dispatch interleaving.
 
 use anyhow::{ensure, Context, Result};
 
 use crate::cobi::SeededGroup;
 use crate::config::PipelineConfig;
 use crate::corpus::Document;
+use crate::decompose::{node_seed, DecomposePlan, Strategy};
 use crate::embed::{Embedder, HashEmbedder, Scores};
 use crate::ising::EsProblem;
 use crate::pipeline::Summary;
@@ -27,9 +33,42 @@ use crate::util::rng::Pcg32;
 
 use super::graph::SubproblemGraph;
 use super::pool::{PoolClient, PoolSolver, CLIENT_SEED_STREAM};
+use super::stream::{StreamRoute, StreamSummarizer};
+use super::{request_seed, QUANT_STREAM};
 
 /// Summarize `doc` to `cfg.summary_len` sentences, solving every Ising
-/// subproblem through the shared device pool.
+/// subproblem through the shared device pool, decomposed per
+/// `cfg.strategy`.
+///
+/// # Examples
+///
+/// What it demonstrates: one synthetic document through a shared
+/// 2-device pool. The summary is a pure function of (config, document) —
+/// the pool's shape never leaks into the result.
+///
+/// ```
+/// use cobi_es::config::Settings;
+/// use cobi_es::corpus::Generator;
+/// use cobi_es::sched::{doc_seed, summarize_with_pool, DevicePool};
+///
+/// let mut settings = Settings::default();
+/// settings.pipeline.solver = "tabu".into();
+/// settings.pipeline.iterations = 2;
+/// let pool = DevicePool::start(&settings, None).unwrap();
+///
+/// let doc = Generator::with_seed(9).document("doc-a", 12);
+/// let mut cfg = settings.pipeline.clone();
+/// cfg.seed = doc_seed(cfg.seed, &doc.id); // seeds key to the document
+/// let mut client = pool.client(cfg.seed);
+/// let summary = summarize_with_pool(&doc, &cfg, &mut client).unwrap();
+/// assert_eq!(summary.selected.len(), cfg.summary_len);
+/// assert!(summary.selected.windows(2).all(|w| w[0] < w[1]));
+///
+/// drop(client); // clients must drop before shutdown joins
+/// pool.shutdown();
+/// ```
+///
+/// Expected output: no output — the assertions pass.
 pub fn summarize_with_pool(
     doc: &Document,
     cfg: &PipelineConfig,
@@ -40,12 +79,25 @@ pub fn summarize_with_pool(
 }
 
 /// As [`summarize_with_pool`], with a caller-provided embedder.
+///
+/// `Strategy::Streaming` documents ignore `embedder` and always embed
+/// through the incremental hash path ([`StreamSummarizer`]): the trait
+/// only exposes whole-document scoring, which a causal frontier cannot
+/// use.
 pub fn summarize_with_pool_using(
     doc: &Document,
     cfg: &PipelineConfig,
     client: &mut PoolClient,
     embedder: &mut dyn Embedder,
 ) -> Result<Summary> {
+    if cfg.strategy == Strategy::Streaming {
+        // whole document replayed as one arrival chunk — byte-identical
+        // to the same sentences fed incrementally in any chunking
+        let mut stream = StreamSummarizer::new(&doc.id, cfg)?;
+        let mut route = StreamRoute::Pooled(client);
+        stream.push_sentences(&doc.sentences, &mut route)?;
+        return stream.revision(&mut route);
+    }
     let n = doc.len().min(MAX_SENTENCES);
     ensure!(n >= cfg.summary_len, "document too short");
     let sentences = &doc.sentences[..n];
@@ -53,11 +105,14 @@ pub fn summarize_with_pool_using(
 
     let params = cfg.decompose_params();
     let refine_cfg = cfg.refine_config();
+    let per_node = cfg.strategy != Strategy::Window;
     // the same per-document stream EsPipeline::new uses — quantization
     // draws replay identically across the inline and pooled paths
-    let mut rng = Pcg32::new(cfg.seed, 0xE5);
+    // (window plan only; per-node plans re-derive a stream per unit)
+    let mut rng = Pcg32::new(cfg.seed, QUANT_STREAM);
 
-    let mut graph = SubproblemGraph::new(n, &params)?;
+    let mut graph =
+        SubproblemGraph::with_plan(n, DecomposePlan::new(cfg.strategy, &params)?)?;
     let mut total_solves = 0usize;
     while !graph.is_done() {
         let units = graph.take_ready();
@@ -72,11 +127,18 @@ pub fn summarize_with_pool_using(
                 lambda: cfg.lambda,
                 m: u.target,
             };
-            let instances = prepare_instances(&p, &refine_cfg, &mut rng);
-            total_solves += instances.len();
-            let pend = client
-                .submit(instances)
-                .with_context(|| format!("submitting unit {} of {}", u.id, doc.id))?;
+            let pend = if per_node {
+                let ns = node_seed(cfg.seed, u.level, u.slot);
+                let instances =
+                    prepare_instances(&p, &refine_cfg, &mut Pcg32::new(ns, QUANT_STREAM));
+                total_solves += instances.len();
+                client.submit_seeded(instances, request_seed(ns))
+            } else {
+                let instances = prepare_instances(&p, &refine_cfg, &mut rng);
+                total_solves += instances.len();
+                client.submit(instances)
+            }
+            .with_context(|| format!("submitting unit {} of {}", u.id, doc.id))?;
             pending.push((u.id, p, pend));
         }
         for (id, p, pend) in pending {
@@ -106,13 +168,20 @@ pub fn summarize_sequential(
     summarize_sequential_using(doc, cfg, solver, &mut embedder)
 }
 
-/// As [`summarize_sequential`], with a caller-provided embedder.
+/// As [`summarize_sequential`], with a caller-provided embedder (ignored
+/// for `Strategy::Streaming` — see [`summarize_with_pool_using`]).
 pub fn summarize_sequential_using(
     doc: &Document,
     cfg: &PipelineConfig,
     solver: &mut dyn PoolSolver,
     embedder: &mut dyn Embedder,
 ) -> Result<Summary> {
+    if cfg.strategy == Strategy::Streaming {
+        let mut stream = StreamSummarizer::new(&doc.id, cfg)?;
+        let mut route = StreamRoute::Inline(solver);
+        stream.push_sentences(&doc.sentences, &mut route)?;
+        return stream.revision(&mut route);
+    }
     let n = doc.len().min(MAX_SENTENCES);
     ensure!(n >= cfg.summary_len, "document too short");
     let sentences = &doc.sentences[..n];
@@ -120,12 +189,15 @@ pub fn summarize_sequential_using(
 
     let params = cfg.decompose_params();
     let refine_cfg = cfg.refine_config();
-    let mut rng = Pcg32::new(cfg.seed, 0xE5);
+    let per_node = cfg.strategy != Strategy::Window;
+    let mut rng = Pcg32::new(cfg.seed, QUANT_STREAM);
     // per-request seeds drawn in unit-id order — exactly the draws a
-    // PoolClient keyed by cfg.seed performs on its submits
+    // PoolClient keyed by cfg.seed performs on its submits (window plan;
+    // per-node plans derive each request seed from the unit's node seed)
     let mut seeds = Pcg32::new(cfg.seed, CLIENT_SEED_STREAM);
 
-    let mut graph = SubproblemGraph::new(n, &params)?;
+    let mut graph =
+        SubproblemGraph::with_plan(n, DecomposePlan::new(cfg.strategy, &params)?)?;
     let mut total_solves = 0usize;
     while !graph.is_done() {
         let units = graph.take_ready();
@@ -138,9 +210,16 @@ pub fn summarize_sequential_using(
                 lambda: cfg.lambda,
                 m: u.target,
             };
-            let instances = prepare_instances(&p, &refine_cfg, &mut rng);
+            let (instances, seed) = if per_node {
+                let ns = node_seed(cfg.seed, u.level, u.slot);
+                (
+                    prepare_instances(&p, &refine_cfg, &mut Pcg32::new(ns, QUANT_STREAM)),
+                    request_seed(ns),
+                )
+            } else {
+                (prepare_instances(&p, &refine_cfg, &mut rng), seeds.next_u64())
+            };
             total_solves += instances.len();
-            let seed = seeds.next_u64();
             let solved = solver
                 .solve_groups(&[SeededGroup {
                     instances: &instances,
@@ -274,6 +353,120 @@ mod tests {
         assert_eq!(a.selected, b.selected);
         assert_eq!(a.sentences, b.sentences);
         assert_eq!(a.objective.to_bits(), b.objective.to_bits());
+    }
+
+    #[test]
+    fn tree_strategy_pooled_matches_sequential_bytewise() {
+        // per-node seeding makes the pooled and inline tree walks agree
+        // byte for byte, exactly like the window path's pin
+        let mut s = settings("cobi");
+        s.pipeline.strategy = Strategy::Tree;
+        let set = benchmark_set("cnn_dm_50").unwrap();
+        let pool = DevicePool::start(&s, None).unwrap();
+        for doc in set.documents.iter().take(3) {
+            let mut cfg = s.pipeline.clone();
+            cfg.summary_len = set.summary_len;
+            cfg.seed = crate::sched::doc_seed(cfg.seed, &doc.id);
+
+            let mut client = pool.client(cfg.seed);
+            let pooled = summarize_with_pool(doc, &cfg, &mut client).unwrap();
+
+            let mut dev =
+                crate::cobi::CobiDevice::from_config(&s.cobi, 0, None).unwrap();
+            let sequential = summarize_sequential(doc, &cfg, &mut dev).unwrap();
+
+            assert_eq!(pooled.selected, sequential.selected, "{}", doc.id);
+            assert_eq!(pooled.sentences, sequential.sentences, "{}", doc.id);
+            assert_eq!(
+                pooled.objective.to_bits(),
+                sequential.objective.to_bits(),
+                "{}",
+                doc.id
+            );
+            assert_eq!(pooled.total_solves, sequential.total_solves);
+            assert_eq!(pooled.stages, sequential.stages);
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn tree_strategy_is_deterministic_across_pool_shapes() {
+        // acceptance pin: Tree summaries are independent of the pool's
+        // device count, coalescing, and concurrent load
+        let set = benchmark_set("cnn_dm_50").unwrap();
+        let doc = &set.documents[1];
+
+        let mut s1 = settings("cobi");
+        s1.pipeline.strategy = Strategy::Tree;
+        s1.sched.devices = 1;
+        s1.sched.max_coalesce = 1;
+        s1.sched.linger_us = 0;
+        let pool1 = DevicePool::start(&s1, None).unwrap();
+        let mut cfg = s1.pipeline.clone();
+        cfg.seed = crate::sched::doc_seed(cfg.seed, &doc.id);
+        let mut c1 = pool1.client(cfg.seed);
+        let a = summarize_with_pool(doc, &cfg, &mut c1).unwrap();
+        drop(c1);
+        pool1.shutdown();
+
+        let mut s2 = settings("cobi");
+        s2.pipeline.strategy = Strategy::Tree;
+        s2.sched.devices = 4;
+        s2.sched.max_coalesce = 8;
+        s2.sched.linger_us = 2_000;
+        let pool2 = DevicePool::start(&s2, None).unwrap();
+        let handle = pool2.handle();
+        let noise: Vec<_> = (2..5)
+            .map(|k| {
+                let handle = handle.clone();
+                let d = set.documents[k].clone();
+                let mut cfg = s2.pipeline.clone();
+                std::thread::spawn(move || {
+                    cfg.seed = crate::sched::doc_seed(cfg.seed, &d.id);
+                    let mut c = handle.client(cfg.seed);
+                    summarize_with_pool(&d, &cfg, &mut c).unwrap()
+                })
+            })
+            .collect();
+        let mut c2 = pool2.client(cfg.seed);
+        let b = summarize_with_pool(doc, &cfg, &mut c2).unwrap();
+        for t in noise {
+            t.join().unwrap();
+        }
+        drop(c2);
+        drop(handle);
+        pool2.shutdown();
+
+        assert_eq!(a.selected, b.selected);
+        assert_eq!(a.sentences, b.sentences);
+        assert_eq!(a.objective.to_bits(), b.objective.to_bits());
+        assert_eq!(a.total_solves, b.total_solves);
+    }
+
+    #[test]
+    fn stream_strategy_flows_through_both_executors() {
+        // a stream-strategy document takes the StreamSummarizer path in
+        // both executors and agrees byte for byte across them
+        let mut s = settings("tabu");
+        s.pipeline.strategy = Strategy::Streaming;
+        let set = benchmark_set("cnn_dm_20").unwrap();
+        let doc = &set.documents[0];
+        let mut cfg = s.pipeline.clone();
+        cfg.seed = crate::sched::doc_seed(cfg.seed, &doc.id);
+
+        let pool = DevicePool::start(&s, None).unwrap();
+        let mut client = pool.client(cfg.seed);
+        let pooled = summarize_with_pool(doc, &cfg, &mut client).unwrap();
+        drop(client);
+        pool.shutdown();
+
+        let mut solver = crate::solvers::tabu::TabuSolver::seeded(0);
+        let sequential = summarize_sequential(doc, &cfg, &mut solver).unwrap();
+
+        assert_eq!(pooled.selected.len(), cfg.summary_len);
+        assert_eq!(pooled.selected, sequential.selected);
+        assert_eq!(pooled.sentences, sequential.sentences);
+        assert_eq!(pooled.objective.to_bits(), sequential.objective.to_bits());
     }
 
     #[test]

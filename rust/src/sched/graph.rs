@@ -1,29 +1,34 @@
 //! `SubproblemGraph`: the decomposition workflow (paper §IV-B) replayed
 //! as a small DAG of solve units instead of an inline sequential loop.
 //!
-//! Structure: the graph is built level by level. Within one level every
-//! unit is a window of P *consecutive, disjoint* active sentences —
-//! windows share no sentences, so they are independent and may be solved
-//! concurrently or co-batched on a device in any order. Levels chain: the
-//! merge of level k's survivors + chosen sentences forms level k+1's
-//! active list, so the next level's windows only exist once the previous
-//! level fully completes. The final level is always a single M-selection
-//! unit over the remaining ≤ P sentences.
+//! Structure: the graph is built level by level, with each level's units
+//! carved by a [`DecomposePlan`] — windows share no sentences, so they
+//! are independent and may be solved concurrently or co-batched on a
+//! device in any order. Levels chain: the merge of level k's survivors +
+//! chosen sentences forms level k+1's active list, so the next level's
+//! windows only exist once the previous level fully completes. The final
+//! level is always a single M-selection unit over the remaining ≤ P
+//! sentences.
 //!
-//! The level carving solves exactly as many window subproblems as the
-//! inline `decompose` loop (each non-final solve removes P−Q sentences;
-//! both stop shrinking once ≤ P remain), so `stage_count` stays the
-//! shared source of truth for solve-count accounting. Window *contents*
-//! may differ from the inline loop's cursor walk for multi-window levels
-//! — the two are distinct scheduling policies over the same reduction.
-//! For single-stage documents (N ≤ P) the graph is exactly the inline
-//! final solve, which is what the byte-identity tests pin down.
+//! With the default [`Strategy::Window`] plan the carving solves exactly
+//! as many window subproblems as the inline `decompose` loop (each
+//! non-final solve removes P−Q sentences; both stop shrinking once ≤ P
+//! remain), so `stage_count` stays the shared source of truth for
+//! solve-count accounting. Window *contents* may differ from the inline
+//! loop's cursor walk for multi-window levels — the two are distinct
+//! scheduling policies over the same reduction. For single-stage
+//! documents (N ≤ P) the graph is exactly the inline final solve, which
+//! is what the byte-identity tests pin down. [`Strategy::Tree`] carves
+//! balanced leaves covering every active sentence, trading solve-count
+//! parity for maximal same-level parallelism and O(log N) depth.
 
 use std::collections::HashMap;
 
 use anyhow::{bail, ensure, Context, Result};
 
-use crate::decompose::{validate_local, DecomposeParams, DecompositionResult, Stage};
+use crate::decompose::{
+    validate_local, DecomposeParams, DecomposePlan, DecompositionResult, Stage, Strategy,
+};
 
 /// One ready-to-solve subproblem: choose `target` of `window`.
 #[derive(Debug, Clone)]
@@ -32,17 +37,22 @@ pub struct SolveUnit {
     pub id: usize,
     /// DAG level (0-based pass index).
     pub level: usize,
+    /// Position within the level (0-based). `(level, slot)` is the unit's
+    /// stable tree position — the input to per-node seeding
+    /// ([`crate::decompose::node_seed`]) under `Tree`/`Streaming` plans.
+    pub slot: usize,
     /// Original-document sentence indices offered to the solver.
     pub window: Vec<usize>,
     /// Number of window positions the solver must return (Q, or M for the
     /// final unit).
     pub target: usize,
+    /// True for the final M-selection unit.
     pub is_final: bool,
 }
 
 /// Dynamic DAG of decomposition subproblems for one document.
 pub struct SubproblemGraph {
-    params: DecomposeParams,
+    plan: DecomposePlan,
     /// Active sentence indices (document order) feeding the current level.
     active: Vec<usize>,
     level: usize,
@@ -60,16 +70,26 @@ pub struct SubproblemGraph {
 }
 
 impl SubproblemGraph {
-    /// Plan the level-0 units for a document of `n` sentences.
+    /// Plan the level-0 units for a document of `n` sentences under the
+    /// reference [`Strategy::Window`] plan (the pre-plan behavior, pinned
+    /// byte-identical by the executor tests).
     pub fn new(n: usize, params: &DecomposeParams) -> Result<Self> {
-        params.validate()?;
+        Self::with_plan(n, DecomposePlan::new(Strategy::Window, params)?)
+    }
+
+    /// Plan the level-0 units for a document of `n` sentences, with the
+    /// level carving delegated to `plan` (window or tree;
+    /// `Strategy::Streaming` documents replayed whole degrade to the
+    /// window carving — incremental arrival wants
+    /// [`StreamingPlanner`](crate::decompose::StreamingPlanner) instead).
+    pub fn with_plan(n: usize, plan: DecomposePlan) -> Result<Self> {
         ensure!(
-            n >= params.m,
+            n >= plan.params().m,
             "document of {n} sentences cannot fill M={}",
-            params.m
+            plan.params().m
         );
         let mut g = Self {
-            params: *params,
+            plan,
             active: (0..n).collect(),
             level: 0,
             ready: Vec::new(),
@@ -83,37 +103,35 @@ impl SubproblemGraph {
         Ok(g)
     }
 
-    /// Carve the current active list into this level's units. Mirrors the
-    /// `stage_count` recurrence: the level-0 window solve is unconditional
-    /// at n == P; later levels shrink only while more than P remain.
+    /// The plan carving this graph's levels.
+    pub fn plan(&self) -> &DecomposePlan {
+        &self.plan
+    }
+
+    /// Carve the current active list into this level's units via the
+    /// plan. The shrink rule mirrors the `stage_count` recurrence: the
+    /// level-0 carving is unconditional at n == P; later levels shrink
+    /// only while more than P remain (enforced inside
+    /// [`DecomposePlan::carve`]).
     fn build_level(&mut self) {
         debug_assert!(self.ready.is_empty() && self.inflight.is_empty());
-        let len = self.active.len();
-        let p = self.params.p;
-        let shrink = (self.level == 0 && len >= p) || len > p;
-        if shrink {
-            let windows = len / p; // disjoint full windows of this pass
-            for w in 0..windows {
-                let window = self.active[w * p..(w + 1) * p].to_vec();
-                self.ready.push(SolveUnit {
-                    id: self.next_id,
-                    level: self.level,
-                    window,
-                    target: self.params.q,
-                    is_final: false,
-                });
-                self.next_id += 1;
-            }
-        } else {
+        for (slot, unit) in self
+            .plan
+            .carve(&self.active, self.level)
+            .into_iter()
+            .enumerate()
+        {
             self.ready.push(SolveUnit {
                 id: self.next_id,
                 level: self.level,
-                window: self.active.clone(),
-                target: self.params.m,
-                is_final: true,
+                slot,
+                window: unit.window,
+                target: unit.target,
+                is_final: unit.is_final,
             });
             self.next_id += 1;
         }
+        debug_assert!(!self.ready.is_empty(), "plan carved an empty level");
     }
 
     /// Hand out every currently ready unit (all independent — disjoint
@@ -365,5 +383,116 @@ mod tests {
     fn degenerate_params_rejected() {
         assert!(SubproblemGraph::new(4, &DecomposeParams { p: 5, q: 2, m: 6 }).is_err());
         assert!(SubproblemGraph::new(20, &DecomposeParams { p: 5, q: 5, m: 2 }).is_err());
+    }
+
+    /// Drive a tree-plan graph to completion with the toy solver.
+    fn run_tree(n: usize, params: &DecomposeParams) -> DecompositionResult {
+        let plan = DecomposePlan::new(Strategy::Tree, params).unwrap();
+        let mut g = SubproblemGraph::with_plan(n, plan).unwrap();
+        while !g.is_done() {
+            let units = g.take_ready();
+            assert!(!units.is_empty(), "stalled");
+            for u in units {
+                let local = top_indices(&u.window, u.target);
+                g.complete(u.id, local).unwrap();
+            }
+        }
+        g.into_result().unwrap()
+    }
+
+    #[test]
+    fn tree_plan_completes_with_valid_selection() {
+        let params = DecomposeParams::paper_default();
+        for n in [10usize, 20, 21, 45, 100, 128, 500] {
+            let r = run_tree(n, &params);
+            assert_eq!(r.selected.len(), params.m, "n={n}");
+            assert!(r.selected.windows(2).all(|w| w[0] < w[1]), "n={n}");
+            assert!(r.selected.iter().all(|&i| i < n), "n={n}");
+        }
+    }
+
+    #[test]
+    fn tree_levels_cover_every_active_sentence() {
+        // unlike the window carving (which leaves a `len mod P` tail
+        // idle), every tree level's windows partition the active list
+        let params = DecomposeParams::paper_default();
+        let plan = DecomposePlan::new(Strategy::Tree, &params).unwrap();
+        let mut g = SubproblemGraph::with_plan(105, plan).unwrap();
+        let units = g.take_ready();
+        let covered: usize = units.iter().map(|u| u.window.len()).sum();
+        assert_eq!(covered, 105);
+        assert_eq!(units.len(), 6); // ceil(105/20) balanced leaves
+        for (slot, u) in units.iter().enumerate() {
+            assert_eq!(u.slot, slot);
+            assert_eq!(u.level, 0);
+        }
+        drop(g);
+
+        // window carving on the same document: 5 full windows, 5 idle
+        let mut g = SubproblemGraph::new(105, &params).unwrap();
+        let units = g.take_ready();
+        assert_eq!(units.len(), 5);
+        let covered: usize = units.iter().map(|u| u.window.len()).sum();
+        assert_eq!(covered, 100);
+        drop(g);
+    }
+
+    #[test]
+    fn tree_depth_is_logarithmic() {
+        // 500 sentences, paper params: leaves shrink ~2x per level, so
+        // the tree finishes in a handful of fully parallel levels
+        let params = DecomposeParams::paper_default();
+        let plan = DecomposePlan::new(Strategy::Tree, &params).unwrap();
+        let mut g = SubproblemGraph::with_plan(500, plan).unwrap();
+        let mut levels = 0usize;
+        let mut max_width = 0usize;
+        while !g.is_done() {
+            let units = g.take_ready();
+            levels += 1;
+            max_width = max_width.max(units.len());
+            for u in units {
+                let local = top_indices(&u.window, u.target);
+                g.complete(u.id, local).unwrap();
+            }
+        }
+        assert!(levels <= 6, "tree took {levels} levels for 500 sentences");
+        assert!(max_width >= 25, "level-0 width {max_width} not parallel");
+        // the window plan needs strictly more, narrower levels here
+        let mut g = SubproblemGraph::new(500, &params).unwrap();
+        let mut win_levels = 0usize;
+        while !g.is_done() {
+            let units = g.take_ready();
+            win_levels += 1;
+            for u in units {
+                let local = top_indices(&u.window, u.target);
+                g.complete(u.id, local).unwrap();
+            }
+        }
+        assert!(win_levels >= levels, "window {win_levels} vs tree {levels}");
+    }
+
+    #[test]
+    fn tree_completion_order_does_not_change_the_merge() {
+        let params = DecomposeParams { p: 6, q: 3, m: 2 };
+        fn solve(mut g: SubproblemGraph, reverse: bool) -> DecompositionResult {
+            while !g.is_done() {
+                let mut units = g.take_ready();
+                if reverse {
+                    units.reverse();
+                }
+                for u in units {
+                    g.complete(u.id, top_indices(&u.window, u.target)).unwrap();
+                }
+            }
+            g.into_result().unwrap()
+        }
+        let plan = || DecomposePlan::new(Strategy::Tree, &params).unwrap();
+        let ra = solve(SubproblemGraph::with_plan(40, plan()).unwrap(), false);
+        let rb = solve(SubproblemGraph::with_plan(40, plan()).unwrap(), true);
+        assert_eq!(ra.selected, rb.selected);
+        assert_eq!(
+            ra.stages.iter().map(|s| s.window.clone()).collect::<Vec<_>>(),
+            rb.stages.iter().map(|s| s.window.clone()).collect::<Vec<_>>(),
+        );
     }
 }

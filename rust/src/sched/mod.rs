@@ -5,8 +5,14 @@
 //! amortizes dispatch over ANNEAL_BATCH instances — this module is the
 //! subsystem that connects the two at fleet scale:
 //!
-//!   * [`SubproblemGraph`] — decomposition replayed as levels of
-//!     disjoint, independently solvable windows (passes chain);
+//!   * [`SubproblemGraph`] — the decomposition replayed as levels of
+//!     disjoint, independently solvable windows (passes chain), carved
+//!     by the configured
+//!     [`DecomposePlan`](crate::decompose::DecomposePlan) — the paper's
+//!     sliding windows or the balanced log-depth tree;
+//!   * [`StreamSummarizer`] — the incremental executor for arriving
+//!     sentence feeds (`SUMMARIZE_STREAM`): rolling frontier, per-chunk
+//!     summary revisions, O(P) state on unbounded feeds;
 //!   * [`DevicePool`] — N solver instances pulling ready subproblems
 //!     from one shared queue *across all in-flight documents*, coalescing
 //!     up to `max_coalesce` requests per dispatch with a configurable
@@ -23,12 +29,14 @@
 //! each request by policy and reuses prior solutions through a
 //! fleet-wide warm-start cache (see `crate::portfolio`).
 //!
-//! See DESIGN.md §Sched for the architecture diagram and the
-//! thread/channel ownership story.
+//! See DESIGN.md §Sched for the architecture rationale and
+//! docs/ARCHITECTURE.md for the request walkthrough and the
+//! thread/channel ownership diagram.
 
 pub mod exec;
 pub mod graph;
 pub mod pool;
+pub mod stream;
 
 pub use exec::{
     summarize_sequential, summarize_sequential_using, summarize_with_pool,
@@ -39,6 +47,12 @@ pub use pool::{
     pool_supports, resolved_backend, service_pooled, DevicePool, PendingSolve, PoolClient,
     PoolHandle, PoolMetrics,
 };
+pub use stream::{StreamRoute, StreamSummarizer};
+
+/// RNG stream id of the per-document quantization draws — the exact
+/// stream `EsPipeline::new` seeds, shared by the executors so the pooled
+/// and inline paths cannot drift.
+pub(crate) const QUANT_STREAM: u64 = 0xE5;
 
 /// Per-document master seed: the pipeline seed XOR a stable hash of the
 /// document id. Keyed to the DOCUMENT (not the worker slot), so results
@@ -46,6 +60,15 @@ pub use pool::{
 /// worker pool lacked.
 pub fn doc_seed(base: u64, doc_id: &str) -> u64 {
     base ^ crate::text::tokenize::fnv1a(doc_id.as_bytes())
+}
+
+/// The solve-request seed for a `Tree`/`Streaming` plan node: the first
+/// draw of the node's own client-seed stream — exactly what a
+/// [`PoolClient`] keyed by the node seed would attach to its first
+/// submit, so per-node dispatch stays on the same seeding discipline as
+/// the sequential per-document stream (decision #8).
+pub(crate) fn request_seed(node_seed: u64) -> u64 {
+    crate::util::rng::Pcg32::new(node_seed, pool::CLIENT_SEED_STREAM).next_u64()
 }
 
 #[cfg(test)]

@@ -1,18 +1,15 @@
 //! `DevicePool`: N solver instances draining one shared, fleet-wide queue
 //! of Ising solve requests.
 //!
-//! Thread/channel ownership (DESIGN.md §Sched):
-//!
-//!     PoolClient (one per in-flight document, owned by a service worker)
-//!          │ SyncSender<SolveRequest>           bounded, blocking send
-//!          ▼
-//!     shared MPSC queue ── Arc<Mutex<Receiver>> ── pulled by N device
-//!     threads ("cobi-pool-<i>", each owning one PoolSolver). A device
-//!     takes one request (blocking), then lingers up to `linger_us` —
-//!     WITHOUT holding the queue lock — to coalesce up to `max_coalesce`
-//!     more requests into a single seeded dispatch. Each request carries
-//!     a one-shot response channel; the device answers on it after the
-//!     dispatch.
+//! Shape: a `PoolClient` (one per in-flight document, owned by a service
+//! worker or stream session) sends `SolveRequest`s into one bounded MPSC
+//! queue pulled by N device threads ("cobi-pool-<i>", each owning one
+//! `PoolSolver`). A device takes one request, then lingers up to
+//! `linger_us` — WITHOUT holding the queue lock — to coalesce up to
+//! `max_coalesce` more requests into a single seeded dispatch, answering
+//! each request on its one-shot response channel. The full thread and
+//! channel ownership diagram lives in `docs/ARCHITECTURE.md` §3 (the
+//! canonical copy; DESIGN.md §6 links there too).
 //!
 //! With `[portfolio] enabled = true` (or `backend = "portfolio"`) each
 //! device hosts a `SolverPortfolio` instead of a single solver; all
@@ -66,6 +63,7 @@ const IDLE_POLL: Duration = Duration::from_millis(1);
 
 /// A solver that can serve pool requests with per-request determinism.
 pub trait PoolSolver: Send {
+    /// Stable backend name for reports.
     fn name(&self) -> &'static str;
 
     /// Solve every group's instances. A group's results must be a pure
@@ -143,7 +141,10 @@ pub fn service_pooled(settings: &Settings) -> bool {
     settings.sched.enabled && pool_supports(resolved_backend(settings))
 }
 
-fn build_solver(
+/// Build one pool-capable solver instance (also used by the service's
+/// local-route streaming sessions, which need per-request determinism
+/// without a pool).
+pub(crate) fn build_solver(
     backend: &str,
     settings: &Settings,
     seed: u64,
@@ -236,6 +237,7 @@ impl PoolMetrics {
         }
     }
 
+    /// One-line pool counter summary.
     pub fn report(&self) -> String {
         format!(
             "pool: devices={} dispatches={} requests={} instances={} | \
@@ -293,6 +295,7 @@ pub struct PendingSolve {
 }
 
 impl PendingSolve {
+    /// Block for the device's answer.
     pub fn wait(self) -> Result<Vec<SolveResult>> {
         self.rx
             .recv()
@@ -301,15 +304,28 @@ impl PendingSolve {
 }
 
 impl PoolClient {
-    /// Submit one request (all instances solved under one request seed).
-    /// Blocks only when the pool queue is full (bounded backpressure);
-    /// the solve itself proceeds asynchronously.
+    /// Submit one request (all instances solved under one request seed
+    /// drawn from the client's per-document stream). Blocks only when the
+    /// pool queue is full (bounded backpressure); the solve itself
+    /// proceeds asynchronously.
     pub fn submit(&mut self, instances: Vec<Ising>) -> Result<PendingSolve> {
+        let seed = self.seeds.next_u64();
+        self.submit_seeded(instances, seed)
+    }
+
+    /// Submit one request under an explicit request seed, bypassing the
+    /// client's sequential stream. This is how `Tree`/`Streaming`
+    /// decompositions dispatch: each plan node's seed is derived from the
+    /// document seed and the node's tree position
+    /// ([`crate::decompose::node_seed`]), so results cannot depend on
+    /// submission order, sibling count, or arrival batching — properties
+    /// the stream-ordered [`submit`](PoolClient::submit) cannot offer.
+    pub fn submit_seeded(&mut self, instances: Vec<Ising>, seed: u64) -> Result<PendingSolve> {
         ensure!(!instances.is_empty(), "empty solve request");
         let (rtx, rrx) = sync_channel(1);
         let req = SolveRequest {
             instances,
-            seed: self.seeds.next_u64(),
+            seed,
             enqueued: Instant::now(),
             respond: rtx,
         };
@@ -348,6 +364,7 @@ pub struct DevicePool {
     threads: Vec<std::thread::JoinHandle<()>>,
     metrics: Arc<Mutex<PoolMetrics>>,
     started: Instant,
+    /// Resolved backend name hosted by the devices.
     pub backend: String,
     /// Fleet-shared portfolio state (cache + telemetry); present only
     /// when the resolved backend is "portfolio".
@@ -407,6 +424,7 @@ impl DevicePool {
         self.portfolio.as_ref().map(|p| p.snapshot())
     }
 
+    /// A cloneable submission handle.
     pub fn handle(&self) -> PoolHandle {
         PoolHandle {
             tx: self.tx.as_ref().expect("pool not shut down").clone(),
@@ -418,6 +436,7 @@ impl DevicePool {
         self.handle().client(seed)
     }
 
+    /// Number of device threads.
     pub fn devices(&self) -> usize {
         self.metrics.lock().unwrap().devices
     }

@@ -1,0 +1,423 @@
+//! Streaming summarization executor: sentences in, summary revisions out.
+//!
+//! [`StreamSummarizer`] drives the incremental
+//! [`StreamingPlanner`](crate::decompose::StreamingPlanner) with real
+//! embeddings and real solves. It is the engine behind the service's
+//! `SUMMARIZE_STREAM` sessions and the `stream` decompose strategy:
+//!
+//!   * sentences arrive in chunks of any size ([`push_text`] /
+//!     [`push_sentences`](StreamSummarizer::push_sentences)); the
+//!     executor un-batches them, embeds each sentence once
+//!     (incremental hash embedding + a running document centroid), and
+//!     lets the planner fire a compression whenever the rolling frontier
+//!     fills to P;
+//!   * only the frontier is ever re-solved — compressed-away sentences
+//!     keep O(P) state no matter how long the feed runs (thousands of
+//!     sentences stream in constant memory, beyond the batch paths'
+//!     `MAX_SENTENCES` clamp);
+//!   * a [`revision`](StreamSummarizer::revision) solves the final
+//!     M-selection over the current frontier without mutating stream
+//!     state — call it after every chunk for live summary updates.
+//!
+//! Determinism: every solve node (compression `seq`, or a revision at
+//! arrival count `t`) derives its rounding stream and request seed from
+//! [`node_seed`](crate::decompose::node_seed) — a pure function of the
+//! config seed and the node's position in the arrival order. Combined
+//! with the planner's count-based trigger this makes every revision (and
+//! the final summary) byte-identical regardless of how the feed was
+//! chunked, which pool shape solved it, or whether it ran inline —
+//! pinned by the tests below.
+//!
+//! Successive revisions differ by a few frontier rows, which is exactly
+//! the shape the portfolio's warm-start cache near-tiers exploit when
+//! the pool routes through `[portfolio] enabled = true`.
+//!
+//! [`push_text`]: StreamSummarizer::push_text
+
+use std::collections::BTreeMap;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::cobi::SeededGroup;
+use crate::config::PipelineConfig;
+use crate::decompose::{
+    node_seed, CompressUnit, DecomposeParams, StreamingPlanner, STREAM_COMPRESS_LEVEL,
+    STREAM_REVISION_LEVEL,
+};
+use crate::embed::hash_embed::HashEmbedder;
+use crate::embed::similarity::{dot, norm};
+use crate::ising::{EsProblem, Ising};
+use crate::pipeline::Summary;
+use crate::refine::{prepare_instances, select_best, RefineConfig};
+use crate::solvers::SolveResult;
+use crate::text::split_sentences;
+use crate::util::rng::Pcg32;
+
+use super::pool::{PoolClient, PoolSolver};
+use super::{request_seed, QUANT_STREAM};
+
+/// Where a stream session's Ising solves run: the shared device pool
+/// (service sessions) or an inline caller-owned solver (tests, the
+/// sequential comparator). Both routes produce byte-identical results
+/// for the same request seed (decision #8).
+pub enum StreamRoute<'a> {
+    /// Solves submitted to the shared [`DevicePool`](super::DevicePool)
+    /// through a per-document client.
+    Pooled(&'a mut PoolClient),
+    /// Solves run inline on a caller-owned pool-capable solver.
+    Inline(&'a mut dyn PoolSolver),
+}
+
+impl StreamRoute<'_> {
+    fn solve(&mut self, instances: Vec<Ising>, seed: u64) -> Result<Vec<SolveResult>> {
+        match self {
+            StreamRoute::Pooled(client) => client.submit_seeded(instances, seed)?.wait(),
+            StreamRoute::Inline(solver) => Ok(solver
+                .solve_groups(&[SeededGroup {
+                    instances: &instances,
+                    seed,
+                }])?
+                .pop()
+                .expect("one group in, one group out")),
+        }
+    }
+}
+
+/// A frontier sentence: its text plus its unit-normalized embedding.
+struct ActiveSentence {
+    text: String,
+    unit: Vec<f32>,
+}
+
+/// Incremental summarizer over an arriving sentence feed (module docs).
+pub struct StreamSummarizer {
+    doc_id: String,
+    cfg: PipelineConfig,
+    refine_cfg: RefineConfig,
+    planner: StreamingPlanner,
+    embedder: HashEmbedder,
+    /// Frontier sentences keyed by original index (= arrival order).
+    active: BTreeMap<usize, ActiveSentence>,
+    /// Running sum of every arrived sentence's RAW embedding — the same
+    /// accumulation order `scores_from_embeddings` uses, so causal mu
+    /// scores match a batch computation over the arrived prefix bit for
+    /// bit.
+    centroid: Vec<f32>,
+    total_solves: usize,
+    revisions: usize,
+}
+
+impl StreamSummarizer {
+    /// Open a stream for `doc_id` under `cfg` (strategy-independent: the
+    /// caller already chose streaming by constructing this).
+    pub fn new(doc_id: &str, cfg: &PipelineConfig) -> Result<Self> {
+        let params: DecomposeParams = cfg.decompose_params();
+        Ok(Self {
+            doc_id: doc_id.to_string(),
+            cfg: cfg.clone(),
+            refine_cfg: cfg.refine_config(),
+            planner: StreamingPlanner::new(&params)?,
+            embedder: HashEmbedder::new(),
+            active: BTreeMap::new(),
+            centroid: Vec::new(),
+            total_solves: 0,
+            revisions: 0,
+        })
+    }
+
+    /// Feed a chunk of raw text (sentence-split internally). Returns the
+    /// number of sentences ingested.
+    pub fn push_text(&mut self, text: &str, route: &mut StreamRoute<'_>) -> Result<usize> {
+        let sentences = split_sentences(text);
+        let n = sentences.len();
+        self.push_sentences(&sentences, route)?;
+        Ok(n)
+    }
+
+    /// Feed a chunk of already-split sentences. Chunk boundaries carry no
+    /// meaning: any grouping of the same sentence sequence leaves the
+    /// stream in an identical state (module docs).
+    pub fn push_sentences(
+        &mut self,
+        sentences: &[String],
+        route: &mut StreamRoute<'_>,
+    ) -> Result<()> {
+        for s in sentences {
+            let raw = self.embedder.embed_sentence(s);
+            if self.centroid.is_empty() {
+                self.centroid = vec![0.0; raw.len()];
+            }
+            for (c, r) in self.centroid.iter_mut().zip(&raw) {
+                *c += r;
+            }
+            let nn = norm(&raw).max(1e-12);
+            let unit: Vec<f32> = raw.iter().map(|v| v / nn).collect();
+            let idx = self.planner.arrived();
+            self.active.insert(
+                idx,
+                ActiveSentence {
+                    text: s.clone(),
+                    unit,
+                },
+            );
+            if let Some(unit) = self.planner.push()? {
+                self.compress(unit, route)
+                    .with_context(|| format!("compressing stream {}", self.doc_id))?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Solve one due compression and shrink the frontier to its
+    /// survivors.
+    fn compress(&mut self, unit: CompressUnit, route: &mut StreamRoute<'_>) -> Result<()> {
+        let p = self.window_problem(&unit.window, unit.target);
+        let ns = node_seed(self.cfg.seed, STREAM_COMPRESS_LEVEL, unit.seq);
+        let instances =
+            prepare_instances(&p, &self.refine_cfg, &mut Pcg32::new(ns, QUANT_STREAM));
+        self.total_solves += instances.len();
+        let solved = route.solve(instances, request_seed(ns))?;
+        let trace = select_best(&p, &solved);
+        self.planner.complete(&unit, &trace.result.selected)?;
+        // evict compressed-away sentences: state stays O(P)
+        let keep: std::collections::BTreeSet<usize> =
+            self.planner.frontier().iter().copied().collect();
+        self.active.retain(|idx, _| keep.contains(idx));
+        Ok(())
+    }
+
+    /// Solve the final M-selection over the current frontier and return
+    /// the summary revision. Never mutates frontier state, so a revision
+    /// at arrival count `t` is identical no matter how many earlier
+    /// revisions were requested — and two streams that received the same
+    /// `t` sentences (in any chunking) revise identically.
+    pub fn revision(&mut self, route: &mut StreamRoute<'_>) -> Result<Summary> {
+        ensure!(
+            self.planner.can_summarize(),
+            "stream of {} sentences cannot fill a {}-sentence summary yet",
+            self.planner.arrived(),
+            self.cfg.summary_len
+        );
+        let frontier: Vec<usize> = self.planner.frontier().to_vec();
+        let p = self.window_problem(&frontier, self.cfg.summary_len);
+        let ns = node_seed(self.cfg.seed, STREAM_REVISION_LEVEL, self.planner.arrived());
+        let instances =
+            prepare_instances(&p, &self.refine_cfg, &mut Pcg32::new(ns, QUANT_STREAM));
+        self.total_solves += instances.len();
+        let solved = route.solve(instances, request_seed(ns))?;
+        let trace = select_best(&p, &solved);
+        self.revisions += 1;
+
+        let mut local = trace.result.selected.clone();
+        local.sort_unstable();
+        let selected: Vec<usize> = local.iter().map(|&l| frontier[l]).collect();
+        Ok(Summary {
+            doc_id: self.doc_id.clone(),
+            sentences: selected
+                .iter()
+                .map(|&i| self.active[&i].text.clone())
+                .collect(),
+            selected,
+            // scored on the FRONTIER problem: the full-document objective
+            // of the batch paths has no causal analogue once early
+            // sentences are compressed away
+            objective: trace.result.objective,
+            total_solves: self.total_solves,
+            stages: self.planner.compressions() + 1,
+        })
+    }
+
+    /// Relevance/redundancy scores for `window` (frontier members),
+    /// causal at the current arrival count: mu against the running
+    /// centroid over every arrived sentence, beta between the window's
+    /// unit embeddings. Matches `scores_from_embeddings` over the arrived
+    /// prefix bit for bit (shared `dot`/`norm` kernels, same accumulation
+    /// order).
+    fn window_problem(&self, window: &[usize], m: usize) -> EsProblem {
+        let k = window.len();
+        let dn = norm(&self.centroid).max(1e-12);
+        let doc: Vec<f32> = self.centroid.iter().map(|v| v / dn).collect();
+        let mut mu = Vec::with_capacity(k);
+        let mut beta = vec![0.0f32; k * k];
+        for (a, &i) in window.iter().enumerate() {
+            let ua = &self.active[&i].unit;
+            mu.push(dot(ua, &doc));
+            for (b, &j) in window.iter().enumerate().skip(a + 1) {
+                let v = dot(ua, &self.active[&j].unit);
+                beta[a * k + b] = v;
+                beta[b * k + a] = v;
+            }
+        }
+        EsProblem {
+            mu,
+            beta,
+            lambda: self.cfg.lambda,
+            m,
+        }
+    }
+
+    /// Total sentences arrived so far.
+    pub fn arrived(&self) -> usize {
+        self.planner.arrived()
+    }
+
+    /// Frontier compressions performed so far.
+    pub fn compressions(&self) -> usize {
+        self.planner.compressions()
+    }
+
+    /// Summary revisions served so far.
+    pub fn revisions(&self) -> usize {
+        self.revisions
+    }
+
+    /// Current frontier length (bounded by P).
+    pub fn frontier_len(&self) -> usize {
+        self.planner.frontier().len()
+    }
+
+    /// True once enough sentences arrived to fill a summary.
+    pub fn can_summarize(&self) -> bool {
+        self.planner.can_summarize()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Settings;
+    use crate::corpus::Generator;
+    use crate::sched::DevicePool;
+    use crate::solvers::tabu::TabuSolver;
+
+    fn stream_cfg() -> PipelineConfig {
+        PipelineConfig {
+            solver: "tabu".into(),
+            iterations: 2,
+            strategy: crate::decompose::Strategy::Streaming,
+            ..Default::default()
+        }
+    }
+
+    fn run_chunked(sentences: &[String], chunks: &[usize]) -> Summary {
+        let cfg = stream_cfg();
+        let mut solver = TabuSolver::seeded(0);
+        let mut route = StreamRoute::Inline(&mut solver);
+        let mut s = StreamSummarizer::new("feed", &cfg).unwrap();
+        let mut at = 0usize;
+        for &c in chunks {
+            let end = (at + c).min(sentences.len());
+            s.push_sentences(&sentences[at..end], &mut route).unwrap();
+            at = end;
+        }
+        if at < sentences.len() {
+            s.push_sentences(&sentences[at..], &mut route).unwrap();
+        }
+        s.revision(&mut route).unwrap()
+    }
+
+    #[test]
+    fn summary_is_invariant_to_arrival_batching() {
+        // the streaming determinism contract: one-shot, sentence-by-
+        // sentence, and ragged chunkings all produce identical bytes
+        let doc = Generator::with_seed(21).document("feed", 57);
+        let a = run_chunked(&doc.sentences, &[57]);
+        let b = run_chunked(&doc.sentences, &[1; 57]);
+        let c = run_chunked(&doc.sentences, &[3, 19, 1, 20, 7, 7]);
+        for other in [&b, &c] {
+            assert_eq!(a.selected, other.selected);
+            assert_eq!(a.sentences, other.sentences);
+            assert_eq!(a.objective.to_bits(), other.objective.to_bits());
+            assert_eq!(a.total_solves, other.total_solves);
+            assert_eq!(a.stages, other.stages);
+        }
+    }
+
+    #[test]
+    fn pooled_route_matches_inline_route_bytewise() {
+        // same stream through a coalescing 3-device pool and an inline
+        // solver: identical bytes (per-node seeds make the route and the
+        // pool shape invisible)
+        let doc = Generator::with_seed(22).document("feed", 44);
+        let inline = run_chunked(&doc.sentences, &[5; 9]);
+
+        let mut settings = Settings::default();
+        settings.pipeline = stream_cfg();
+        settings.sched.devices = 3;
+        settings.sched.max_coalesce = 8;
+        settings.sched.linger_us = 1_000;
+        let pool = DevicePool::start(&settings, None).unwrap();
+        let mut client = pool.client(0xFEED);
+        let mut route = StreamRoute::Pooled(&mut client);
+        let mut s = StreamSummarizer::new("feed", &settings.pipeline).unwrap();
+        for chunk in doc.sentences.chunks(11) {
+            s.push_sentences(chunk, &mut route).unwrap();
+        }
+        let pooled = s.revision(&mut route).unwrap();
+        drop(route);
+        drop(client);
+        pool.shutdown();
+
+        assert_eq!(pooled.selected, inline.selected);
+        assert_eq!(pooled.sentences, inline.sentences);
+        assert_eq!(pooled.objective.to_bits(), inline.objective.to_bits());
+    }
+
+    #[test]
+    fn intermediate_revisions_do_not_change_the_final_summary() {
+        let doc = Generator::with_seed(23).document("feed", 50);
+        let cfg = stream_cfg();
+        let mut solver = TabuSolver::seeded(0);
+        let mut route = StreamRoute::Inline(&mut solver);
+        let mut s = StreamSummarizer::new("feed", &cfg).unwrap();
+        let mut revs = Vec::new();
+        for chunk in doc.sentences.chunks(10) {
+            s.push_sentences(chunk, &mut route).unwrap();
+            revs.push(s.revision(&mut route).unwrap());
+        }
+        assert_eq!(s.revisions(), 5);
+        // a fresh stream with no intermediate revisions agrees on the
+        // final selection (total_solves differs by the revision solves)
+        let fresh = run_chunked(&doc.sentences, &[50]);
+        let last = revs.last().unwrap();
+        assert_eq!(last.selected, fresh.selected);
+        assert_eq!(last.sentences, fresh.sentences);
+        assert_eq!(last.objective.to_bits(), fresh.objective.to_bits());
+        // earlier revisions summarize earlier frontiers
+        assert!(revs[0].stages <= last.stages);
+    }
+
+    #[test]
+    fn long_feed_streams_in_bounded_state() {
+        // 600 sentences — far past the batch paths' MAX_SENTENCES clamp —
+        // with the frontier (and the active map) bounded by P throughout
+        let params_p = PipelineConfig::default().decompose_p;
+        let doc = Generator::with_seed(24).document("long-feed", 600);
+        let cfg = stream_cfg();
+        let mut solver = TabuSolver::seeded(0);
+        let mut route = StreamRoute::Inline(&mut solver);
+        let mut s = StreamSummarizer::new("long-feed", &cfg).unwrap();
+        for chunk in doc.sentences.chunks(37) {
+            s.push_sentences(chunk, &mut route).unwrap();
+            assert!(s.frontier_len() < params_p);
+        }
+        assert_eq!(s.arrived(), 600);
+        assert_eq!(s.compressions(), (600 - params_p) / 10 + 1); // 59
+        let summary = s.revision(&mut route).unwrap();
+        assert_eq!(summary.selected.len(), cfg.summary_len);
+        assert!(summary.selected.windows(2).all(|w| w[0] < w[1]));
+        assert!(summary.selected.iter().all(|&i| i < 600));
+        assert!(summary.objective.is_finite());
+    }
+
+    #[test]
+    fn too_short_stream_refuses_a_revision() {
+        let cfg = stream_cfg();
+        let mut solver = TabuSolver::seeded(0);
+        let mut route = StreamRoute::Inline(&mut solver);
+        let mut s = StreamSummarizer::new("tiny", &cfg).unwrap();
+        let sentences: Vec<String> = (0..3).map(|i| format!("Sentence number {i}.")).collect();
+        s.push_sentences(&sentences, &mut route).unwrap();
+        assert!(s.revision(&mut route).is_err(), "3 < summary_len");
+    }
+}

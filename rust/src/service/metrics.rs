@@ -10,10 +10,62 @@
 
 use std::time::Duration;
 
+use crate::decompose::Strategy;
 use crate::portfolio::PortfolioMetrics;
 use crate::sched::PoolMetrics;
 
 const RESERVOIR: usize = 4096;
+
+/// Per-decomposition-strategy completion counters, plus streaming-session
+/// activity (sessions opened, chunks ingested, revisions served). One
+/// block per service, updated on request completion / stream calls.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct StrategyMetrics {
+    /// Completed summaries decomposed with the sliding-window plan.
+    pub window: u64,
+    /// Completed summaries decomposed with the tree plan.
+    pub tree: u64,
+    /// Completed summaries produced by the streaming path (one-shot
+    /// stream-strategy submits AND final stream-session summaries).
+    pub stream: u64,
+    /// `SUMMARIZE_STREAM` sessions opened.
+    pub stream_sessions: u64,
+    /// Chunks ingested across all stream sessions.
+    pub stream_chunks: u64,
+    /// Summary revisions served across all stream sessions.
+    pub stream_revisions: u64,
+}
+
+impl StrategyMetrics {
+    /// Count one completed summary under `strategy`.
+    pub fn record(&mut self, strategy: Strategy) {
+        match strategy {
+            Strategy::Window => self.window += 1,
+            Strategy::Tree => self.tree += 1,
+            Strategy::Streaming => self.stream += 1,
+        }
+    }
+
+    /// Total completed summaries across strategies.
+    pub fn total(&self) -> u64 {
+        self.window + self.tree + self.stream
+    }
+
+    /// One-line report fragment (empty when nothing was recorded).
+    pub fn report(&self) -> String {
+        let mut out = format!(
+            "strategy window={} tree={} stream={}",
+            self.window, self.tree, self.stream
+        );
+        if self.stream_sessions > 0 {
+            out.push_str(&format!(
+                " (sessions={} chunks={} revisions={})",
+                self.stream_sessions, self.stream_chunks, self.stream_revisions
+            ));
+        }
+        out
+    }
+}
 
 /// Fixed-bucket histogram (seconds). Buckets are `bounds[i]`-bounded from
 /// above, with one overflow bucket past the last bound.
@@ -28,6 +80,7 @@ pub struct Histogram {
 }
 
 impl Histogram {
+    /// Histogram with explicit ascending bucket bounds (seconds).
     pub fn new(bounds: Vec<f64>) -> Self {
         debug_assert!(bounds.windows(2).all(|w| w[0] < w[1]));
         let counts = vec![0; bounds.len() + 1];
@@ -44,6 +97,7 @@ impl Histogram {
         Self::new(vec![1e-5, 1e-4, 1e-3, 1e-2, 1e-1, 1.0, 10.0])
     }
 
+    /// Count one observation of `secs`.
     pub fn record(&mut self, secs: f64) {
         let idx = self
             .bounds
@@ -55,10 +109,12 @@ impl Histogram {
         self.sum += secs;
     }
 
+    /// Total observations.
     pub fn count(&self) -> u64 {
         self.count
     }
 
+    /// Mean observation (0 when empty).
     pub fn mean(&self) -> f64 {
         if self.count == 0 {
             0.0
@@ -98,6 +154,7 @@ impl Histogram {
             .collect()
     }
 
+    /// Compact `n`/mean/p99 fragment.
     pub fn summary(&self) -> String {
         if self.count == 0 {
             return "n=0".into();
@@ -123,11 +180,16 @@ impl Default for Histogram {
     }
 }
 
+/// Aggregate service counters, latency summaries, and subsystem snapshots.
 #[derive(Debug, Clone, Default)]
 pub struct ServiceMetrics {
+    /// Requests accepted into the queue.
     pub submitted: u64,
+    /// Requests completed successfully.
     pub completed: u64,
+    /// Requests that errored.
     pub failed: u64,
+    /// Requests rejected by backpressure.
     pub rejected: u64,
     /// Seconds spent queued (reservoir sample).
     queue_waits: Vec<f64>,
@@ -136,7 +198,10 @@ pub struct ServiceMetrics {
     /// Per-stage distributions: service-queue wait and worker solve time.
     /// (The pool-queue wait histogram lives in [`PoolMetrics`].)
     pub queue_hist: Histogram,
+    /// Worker solve-time distribution.
     pub solve_hist: Histogram,
+    /// Per-strategy completions + streaming-session activity.
+    pub strategies: StrategyMetrics,
     /// Device-pool snapshot (zero-valued when the pool is disabled).
     pub pool: PoolMetrics,
     /// Solver-portfolio snapshot: per-backend route counts, cache
@@ -146,6 +211,7 @@ pub struct ServiceMetrics {
 }
 
 impl ServiceMetrics {
+    /// Record one request's queue wait and solve time.
     pub fn record_latency(&mut self, queue_wait: Duration, solve: Duration) {
         push_reservoir(&mut self.queue_waits, queue_wait.as_secs_f64());
         push_reservoir(&mut self.solve_times, solve.as_secs_f64());
@@ -153,6 +219,7 @@ impl ServiceMetrics {
         self.solve_hist.record(solve.as_secs_f64());
     }
 
+    /// Reservoir-based percentile summary.
     pub fn latency_summary(&self) -> LatencySummary {
         LatencySummary {
             queue_p50: percentile(&self.queue_waits, 0.50),
@@ -162,6 +229,7 @@ impl ServiceMetrics {
         }
     }
 
+    /// One-line operator report (counts, latencies, strategies, pool, portfolio).
     pub fn report(&self) -> String {
         let l = self.latency_summary();
         let mut out = format!(
@@ -176,6 +244,10 @@ impl ServiceMetrics {
             l.solve_p50 * 1e3,
             l.solve_p99 * 1e3,
         );
+        if self.strategies.total() > 0 || self.strategies.stream_sessions > 0 {
+            out.push_str(" | ");
+            out.push_str(&self.strategies.report());
+        }
         if self.pool.devices > 0 {
             out.push_str(" | ");
             out.push_str(&self.pool.report());
@@ -188,11 +260,16 @@ impl ServiceMetrics {
     }
 }
 
+/// Queue/solve latency percentiles, seconds.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct LatencySummary {
+    /// Median queue wait.
     pub queue_p50: f64,
+    /// 99th-percentile queue wait.
     pub queue_p99: f64,
+    /// Median solve time.
     pub solve_p50: f64,
+    /// 99th-percentile solve time.
     pub solve_p99: f64,
 }
 
@@ -277,6 +354,25 @@ mod tests {
         assert_eq!(buckets[2], (1e-3, 90));
         assert_eq!(buckets[5], (1.0, 10));
         assert!(h.summary().contains("n=100"), "{}", h.summary());
+    }
+
+    #[test]
+    fn strategy_counters_surface_in_the_report() {
+        let mut m = ServiceMetrics::default();
+        assert!(!m.report().contains("strategy"), "empty metrics stay quiet");
+        m.strategies.record(Strategy::Window);
+        m.strategies.record(Strategy::Tree);
+        m.strategies.record(Strategy::Tree);
+        m.strategies.record(Strategy::Streaming);
+        assert_eq!(m.strategies.total(), 4);
+        let r = m.report();
+        assert!(r.contains("strategy window=1 tree=2 stream=1"), "{r}");
+        assert!(!r.contains("sessions"), "{r}");
+        m.strategies.stream_sessions = 2;
+        m.strategies.stream_chunks = 7;
+        m.strategies.stream_revisions = 5;
+        let r = m.report();
+        assert!(r.contains("sessions=2 chunks=7 revisions=5"), "{r}");
     }
 
     #[test]

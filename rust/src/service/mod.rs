@@ -18,7 +18,11 @@
 //! backend when `[portfolio] enabled = true`), so subproblems from ALL
 //! in-flight documents coalesce into batched device dispatches; workers
 //! fall back to private solvers for brute/exact/random or when
-//! `[sched] enabled = false`. See DESIGN.md §Sched and §Portfolio.
+//! `[sched] enabled = false`. Documents decompose per
+//! `[decompose] strategy` (window / tree / stream), and
+//! [`Service::open_stream`] serves incremental `SUMMARIZE_STREAM`
+//! sessions with per-chunk summary revisions. See DESIGN.md §Sched and
+//! §Portfolio, and docs/ARCHITECTURE.md for the request walkthrough.
 
 pub mod metrics;
 pub mod tcp;
@@ -35,9 +39,10 @@ use crate::config::Settings;
 use crate::corpus::Document;
 use crate::pipeline::Summary;
 use crate::runtime::ArtifactRuntime;
-use crate::sched::{self, DevicePool};
+use crate::sched::pool::PoolSolver;
+use crate::sched::{self, DevicePool, PoolClient, StreamRoute, StreamSummarizer};
 
-pub use metrics::ServiceMetrics;
+pub use metrics::{ServiceMetrics, StrategyMetrics};
 use worker::{spawn_workers, Job, SolveRoute};
 
 /// Rejected-due-to-backpressure error marker.
@@ -47,6 +52,7 @@ pub struct Overloaded;
 
 /// Client-side handle for one submitted request.
 pub struct Ticket {
+    /// Request id (unique per service).
     pub id: u64,
     rx: Receiver<Result<Summary>>,
     submitted: Instant,
@@ -61,8 +67,101 @@ impl Ticket {
         }
     }
 
+    /// Time since submission.
     pub fn elapsed(&self) -> std::time::Duration {
         self.submitted.elapsed()
+    }
+}
+
+/// Where a [`ServiceStream`]'s solves run (owned variants of
+/// [`StreamRoute`]).
+enum StreamOwner {
+    Pooled(PoolClient),
+    Local(Box<dyn PoolSolver>),
+}
+
+/// One open incremental summarization session (see
+/// [`Service::open_stream`]). Chunks in, summary revisions out; close it
+/// with [`finish`](ServiceStream::finish). Counter contract: opening a
+/// session counts one `submitted`; a successful `finish` counts one
+/// `completed` (+ one stream-strategy summary); a failed `finish` — or
+/// abandoning the session without finishing (client disconnect, ingest
+/// error) — counts one `failed`, so `submitted = completed + failed`
+/// holds across batch and stream traffic alike.
+pub struct ServiceStream {
+    inner: StreamSummarizer,
+    route: StreamOwner,
+    metrics: Arc<Mutex<ServiceMetrics>>,
+    /// True once `finish` settled the session's completed/failed counter.
+    settled: bool,
+}
+
+impl ServiceStream {
+    /// Ingest one chunk of raw text (sentence-split internally; chunk
+    /// boundaries must fall between sentences). Returns the number of
+    /// sentences ingested.
+    pub fn push_text(&mut self, text: &str) -> Result<usize> {
+        let inner = &mut self.inner;
+        let n = match &mut self.route {
+            StreamOwner::Pooled(client) => {
+                inner.push_text(text, &mut StreamRoute::Pooled(client))
+            }
+            StreamOwner::Local(solver) => {
+                inner.push_text(text, &mut StreamRoute::Inline(solver.as_mut()))
+            }
+        }?;
+        self.metrics.lock().unwrap().strategies.stream_chunks += 1;
+        Ok(n)
+    }
+
+    /// True once enough sentences arrived to fill a summary.
+    pub fn can_summarize(&self) -> bool {
+        self.inner.can_summarize()
+    }
+
+    /// Serve a summary revision over the current frontier.
+    pub fn revision(&mut self) -> Result<Summary> {
+        let inner = &mut self.inner;
+        let summary = match &mut self.route {
+            StreamOwner::Pooled(client) => inner.revision(&mut StreamRoute::Pooled(client)),
+            StreamOwner::Local(solver) => {
+                inner.revision(&mut StreamRoute::Inline(solver.as_mut()))
+            }
+        }?;
+        self.metrics.lock().unwrap().strategies.stream_revisions += 1;
+        Ok(summary)
+    }
+
+    /// Close the session with a final revision, settling its
+    /// completed/failed counter (see the type docs).
+    pub fn finish(mut self) -> Result<Summary> {
+        self.settled = true;
+        let result = self.revision();
+        let mut m = self.metrics.lock().unwrap();
+        match &result {
+            Ok(_) => {
+                m.completed += 1;
+                m.strategies.record(crate::decompose::Strategy::Streaming);
+            }
+            Err(_) => m.failed += 1,
+        }
+        drop(m);
+        result
+    }
+
+    /// Total sentences ingested so far.
+    pub fn arrived(&self) -> usize {
+        self.inner.arrived()
+    }
+}
+
+impl Drop for ServiceStream {
+    fn drop(&mut self) {
+        // abandoned mid-session (ingest error, client disconnect):
+        // settle as failed so submitted = completed + failed holds
+        if !self.settled {
+            self.metrics.lock().unwrap().failed += 1;
+        }
     }
 }
 
@@ -77,6 +176,8 @@ pub struct Service {
     queue_depth: usize,
     /// Shared solve pool (None when running worker-private solvers).
     pool: Option<DevicePool>,
+    /// Retained for late construction of stream-session solvers.
+    settings: Settings,
 }
 
 impl Service {
@@ -122,6 +223,57 @@ impl Service {
             workers,
             queue_depth: settings.service.queue_depth,
             pool,
+            settings: settings.clone(),
+        })
+    }
+
+    /// Open an incremental summarization session (the service face of
+    /// `SUMMARIZE_STREAM`): feed text chunks as they arrive, get a
+    /// summary revision after any chunk, close with a final revision.
+    ///
+    /// Sessions run on the CALLER's thread — the worker queue is for
+    /// whole-document jobs; a stream's heavy lifting (the Ising solves)
+    /// still lands on the shared device pool when one is running, so
+    /// concurrent sessions and batch traffic coalesce on the same
+    /// devices. Without a pool the session owns a private pool-capable
+    /// solver (cobi/tabu/sa — brute/exact/random cannot stream).
+    ///
+    /// Determinism: the session seed is `doc_seed(cfg.seed, id)`, and
+    /// every compression/revision node seeds from its arrival position,
+    /// so two sessions with the same id receiving the same sentences —
+    /// in ANY chunking, against ANY pool shape — revise identically.
+    pub fn open_stream(&self, id: &str) -> Result<ServiceStream> {
+        let seed = sched::doc_seed(self.settings.pipeline.seed, id);
+        let mut cfg = self.settings.pipeline.clone();
+        cfg.seed = seed;
+        let route = match &self.pool {
+            Some(pool) => StreamOwner::Pooled(pool.client(seed)),
+            None => {
+                let backend = sched::resolved_backend(&self.settings).to_string();
+                let solver =
+                    sched::pool::build_solver(&backend, &self.settings, seed, None, None)
+                        .map_err(|e| {
+                            anyhow::anyhow!(
+                                "streaming needs a pool-capable solver \
+                                 (cobi/tabu/sa/portfolio): {e}"
+                            )
+                        })?;
+                StreamOwner::Local(solver)
+            }
+        };
+        let inner = StreamSummarizer::new(id, &cfg)?;
+        {
+            // a session is one logical request: count it submitted here,
+            // settled (completed/failed) by finish or drop
+            let mut m = self.metrics.lock().unwrap();
+            m.submitted += 1;
+            m.strategies.stream_sessions += 1;
+        }
+        Ok(ServiceStream {
+            inner,
+            route,
+            metrics: self.metrics.clone(),
+            settled: false,
         })
     }
 
@@ -159,6 +311,7 @@ impl Service {
         self.inflight.load(Ordering::Relaxed)
     }
 
+    /// Configured queue bound.
     pub fn queue_depth(&self) -> usize {
         self.queue_depth
     }
@@ -340,6 +493,88 @@ mod tests {
         assert!(p.cache.lookups > 0);
         assert!(p.cache.exact_hits > 0, "repeated documents must hit the cache");
         assert!(m.report().contains("portfolio"));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn stream_sessions_summarize_incrementally() {
+        let settings = test_settings();
+        let svc = Service::start(&settings).unwrap();
+        assert!(svc.is_pooled());
+        let set = benchmark_set("cnn_dm_20").unwrap();
+        let doc = &set.documents[0];
+        let mut session = svc.open_stream(&doc.id).unwrap();
+        let n = session.push_text(&doc.text()).unwrap();
+        assert_eq!(n, 20);
+        assert!(session.can_summarize());
+        let rev = session.revision().unwrap();
+        assert_eq!(rev.selected.len(), 3);
+        // finish at the same arrival count replays the identical revision
+        let fin = session.finish().unwrap();
+        assert_eq!(fin.selected, rev.selected);
+        assert_eq!(fin.sentences, rev.sentences);
+        let m = svc.metrics();
+        assert_eq!(m.strategies.stream_sessions, 1);
+        assert_eq!(m.strategies.stream_chunks, 1);
+        assert_eq!(m.strategies.stream_revisions, 2);
+        assert_eq!(m.strategies.stream, 1);
+        // sessions keep the counter identity: one submitted, one
+        // completed, nothing failed
+        assert_eq!(m.submitted, 1);
+        assert_eq!(m.completed, 1);
+        assert_eq!(m.failed, 0);
+        assert!(m.report().contains("strategy"), "{}", m.report());
+
+        // an abandoned session settles as failed on drop
+        let dangling = svc.open_stream("abandoned").unwrap();
+        drop(dangling);
+        let m = svc.metrics();
+        assert_eq!(m.submitted, 2);
+        assert_eq!(m.failed, 1);
+        assert_eq!(m.completed, 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn stream_sessions_run_locally_when_the_pool_is_off() {
+        let mut settings = test_settings();
+        settings.sched.enabled = false;
+        let svc = Service::start(&settings).unwrap();
+        assert!(!svc.is_pooled());
+        let set = benchmark_set("cnn_dm_20").unwrap();
+        let mut session = svc.open_stream("local-stream").unwrap();
+        session.push_text(&set.documents[1].text()).unwrap();
+        let fin = session.finish().unwrap();
+        assert_eq!(fin.selected.len(), 3);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn stream_sessions_reject_non_pool_capable_local_solvers() {
+        let mut settings = test_settings();
+        settings.pipeline.solver = "exact".into(); // forces the local route
+        let svc = Service::start(&settings).unwrap();
+        assert!(!svc.is_pooled());
+        assert!(svc.open_stream("nope").is_err());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn strategy_counters_track_completed_submits() {
+        let mut settings = test_settings();
+        settings.pipeline.strategy = crate::decompose::Strategy::Tree;
+        let svc = Service::start(&settings).unwrap();
+        let set = benchmark_set("bench_10").unwrap();
+        let tickets: Vec<Ticket> = set.documents[..3]
+            .iter()
+            .map(|d| svc.submit(d.clone()).unwrap())
+            .collect();
+        for t in tickets {
+            assert_eq!(t.wait().unwrap().selected.len(), 3);
+        }
+        let m = svc.metrics();
+        assert_eq!(m.strategies.tree, 3);
+        assert_eq!(m.strategies.window, 0);
         svc.shutdown();
     }
 

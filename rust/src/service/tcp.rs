@@ -9,9 +9,19 @@
 //!   line) and closes, or `ERR <message>`.
 //!
 //! A first line of exactly `::STATS::` instead requests the service
-//! metrics report (counts, latency percentiles and — when the shared
-//! device pool is running — batch occupancy / coalescing / utilization):
-//! the server replies `OK 1` followed by one report line.
+//! metrics report (counts, latency percentiles, per-strategy totals and —
+//! when the shared device pool is running — batch occupancy / coalescing
+//! / utilization): the server replies `OK 1` followed by one report line.
+//!
+//! A first line of exactly `::STREAM::` opens a `SUMMARIZE_STREAM`
+//! session: the client sends document text in chunks, each terminated by
+//! a `::CHUNK::` line; after every chunk the server replies with a
+//! summary REVISION of everything received so far — `REV <m>` followed by
+//! m sentences (`REV 0` while too few sentences have arrived). A final
+//! `::EOF::` line (any trailing text before it counts as a last chunk)
+//! closes the session with the final summary as `OK <m>` + m sentences.
+//! Chunk boundaries must fall between sentences; revisions re-solve only
+//! the rolling frontier, so arbitrarily long feeds stream in O(P) state.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -24,11 +34,18 @@ use crate::corpus::Document;
 
 use super::Service;
 
+/// Terminates a document (and closes a stream session).
 pub const EOF_MARKER: &str = "::EOF::";
+/// First-line marker requesting the metrics report.
 pub const STATS_MARKER: &str = "::STATS::";
+/// First-line marker opening a `SUMMARIZE_STREAM` session.
+pub const STREAM_MARKER: &str = "::STREAM::";
+/// Ends one stream chunk and requests a summary revision.
+pub const CHUNK_MARKER: &str = "::CHUNK::";
 
 /// A running TCP endpoint over a Service.
 pub struct TcpServer {
+    /// Bound listen address.
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
@@ -76,6 +93,7 @@ impl TcpServer {
         })
     }
 
+    /// Stop accepting and join the accept thread.
     pub fn stop(mut self) {
         self.stop.store(true, Ordering::SeqCst);
         if let Some(t) = self.accept_thread.take() {
@@ -98,6 +116,9 @@ fn handle_connection(service: &Service, stream: TcpStream, id: u64) -> Result<()
             writeln!(out, "OK 1")?;
             writeln!(out, "{}", service.metrics().report())?;
             return Ok(());
+        }
+        if first && line.trim_end() == STREAM_MARKER {
+            return handle_stream_session(service, reader, stream, id);
         }
         first = false;
         if n == 0 || line.trim_end() == EOF_MARKER {
@@ -124,6 +145,84 @@ fn handle_connection(service: &Service, stream: TcpStream, id: u64) -> Result<()
     Ok(())
 }
 
+/// One open `SUMMARIZE_STREAM` connection: chunks in, revisions out.
+fn handle_stream_session(
+    service: &Service,
+    mut reader: BufReader<TcpStream>,
+    stream: TcpStream,
+    id: u64,
+) -> Result<()> {
+    let mut out = stream;
+    let mut session = match service.open_stream(&format!("tcp-stream-{id}")) {
+        Ok(s) => s,
+        Err(e) => {
+            writeln!(out, "ERR {e}")?;
+            return Ok(());
+        }
+    };
+    let mut text = String::new();
+    let mut line = String::new();
+    loop {
+        line.clear();
+        let n = reader.read_line(&mut line)?;
+        let trimmed = line.trim_end();
+        if n == 0 || trimmed == EOF_MARKER {
+            // trailing text before ::EOF:: counts as a last chunk
+            if let Err(e) = ingest(&mut session, &mut text) {
+                writeln!(out, "ERR {e}")?;
+                return Ok(());
+            }
+            match session.finish() {
+                Ok(summary) => {
+                    writeln!(out, "OK {}", summary.sentences.len())?;
+                    for s in &summary.sentences {
+                        writeln!(out, "{s}")?;
+                    }
+                }
+                Err(e) => {
+                    writeln!(out, "ERR {e}")?;
+                }
+            }
+            return Ok(());
+        }
+        if trimmed == CHUNK_MARKER {
+            if let Err(e) = ingest(&mut session, &mut text) {
+                writeln!(out, "ERR {e}")?;
+                return Ok(());
+            }
+            if session.can_summarize() {
+                match session.revision() {
+                    Ok(rev) => {
+                        writeln!(out, "REV {}", rev.sentences.len())?;
+                        for s in &rev.sentences {
+                            writeln!(out, "{s}")?;
+                        }
+                    }
+                    Err(e) => {
+                        writeln!(out, "ERR {e}")?;
+                        return Ok(());
+                    }
+                }
+            } else {
+                // not enough sentences yet: an empty revision, session
+                // stays open
+                writeln!(out, "REV 0")?;
+            }
+            continue;
+        }
+        text.push_str(&line);
+    }
+}
+
+/// Feed the buffered chunk text (if any) into the session.
+fn ingest(session: &mut crate::service::ServiceStream, text: &mut String) -> Result<()> {
+    if !text.trim().is_empty() {
+        session.push_text(text)?;
+    }
+    text.clear();
+    Ok(())
+}
+
 /// Fetch the server's one-line metrics report (a `::STATS::` request).
 pub fn stats_remote(addr: std::net::SocketAddr) -> Result<String> {
     let mut stream = TcpStream::connect(addr)?;
@@ -138,6 +237,53 @@ pub fn stats_remote(addr: std::net::SocketAddr) -> Result<String> {
     let mut report = String::new();
     reader.read_line(&mut report)?;
     Ok(report.trim_end().to_string())
+}
+
+/// Read one framed reply: `REV <n>` / `OK <n>` followed by n sentence
+/// lines, or `ERR <message>` (an error).
+fn read_reply(reader: &mut BufReader<TcpStream>) -> Result<(&'static str, Vec<String>)> {
+    let mut header = String::new();
+    reader.read_line(&mut header)?;
+    let header = header.trim_end();
+    let (tag, rest) = if let Some(rest) = header.strip_prefix("REV ") {
+        ("REV", rest)
+    } else if let Some(rest) = header.strip_prefix("OK ") {
+        ("OK", rest)
+    } else {
+        anyhow::bail!("server error: {header}");
+    };
+    let n: usize = rest.parse().context("bad reply header")?;
+    let mut lines = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        lines.push(line.trim_end().to_string());
+    }
+    Ok((tag, lines))
+}
+
+/// Blocking stream-session client: send `chunks` through a `::STREAM::`
+/// session; returns (one summary revision per chunk — empty while too
+/// few sentences have arrived — and the final summary).
+pub fn stream_remote(
+    addr: std::net::SocketAddr,
+    chunks: &[&str],
+) -> Result<(Vec<Vec<String>>, Vec<String>)> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.write_all(format!("{STREAM_MARKER}\n").as_bytes())?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut revisions = Vec::with_capacity(chunks.len());
+    for chunk in chunks {
+        stream.write_all(chunk.as_bytes())?;
+        stream.write_all(format!("\n{CHUNK_MARKER}\n").as_bytes())?;
+        let (tag, lines) = read_reply(&mut reader)?;
+        anyhow::ensure!(tag == "REV", "expected a REV reply, got {tag}");
+        revisions.push(lines);
+    }
+    stream.write_all(format!("{EOF_MARKER}\n").as_bytes())?;
+    let (tag, lines) = read_reply(&mut reader)?;
+    anyhow::ensure!(tag == "OK", "expected the final OK reply, got {tag}");
+    Ok((revisions, lines))
 }
 
 /// Blocking client helper (used by tests, the serve demo and scripts).
@@ -219,6 +365,70 @@ mod tests {
         let report = stats_remote(server.addr).unwrap();
         assert!(report.contains("completed=1"), "{report}");
         assert!(report.contains("occupancy"), "{report}");
+        server.stop();
+    }
+
+    #[test]
+    fn tcp_stream_session_revises_and_finishes() {
+        let mut settings = Settings::default();
+        settings.service.workers = 1;
+        settings.pipeline.solver = "tabu".into();
+        settings.pipeline.iterations = 2;
+        let svc = Arc::new(Service::start(&settings).unwrap());
+        let server = TcpServer::start(svc.clone(), 0).unwrap();
+
+        let set = benchmark_set("cnn_dm_50").unwrap();
+        let doc = &set.documents[0];
+        // three chunks on sentence boundaries
+        let c1 = doc.sentences[..10].join(" ");
+        let c2 = doc.sentences[10..30].join(" ");
+        let c3 = doc.sentences[30..].join(" ");
+        let (revisions, fin) =
+            stream_remote(server.addr, &[&c1, &c2, &c3]).unwrap();
+        assert_eq!(revisions.len(), 3);
+        for rev in &revisions {
+            assert_eq!(rev.len(), 6, "each chunk yields a full revision");
+        }
+        assert_eq!(fin.len(), 6);
+        for s in &fin {
+            assert!(
+                doc.sentences.iter().any(|d| d == s),
+                "sentence not from document: {s}"
+            );
+        }
+        // revisions over longer prefixes may differ, the final summary
+        // matches a whole-document stream of the same session seed
+        let report = stats_remote(server.addr).unwrap();
+        assert!(report.contains("sessions=1"), "{report}");
+        assert!(report.contains("revisions=4"), "{report}");
+        server.stop();
+    }
+
+    #[test]
+    fn tcp_stream_session_reports_empty_revision_when_too_short() {
+        let mut settings = Settings::default();
+        settings.service.workers = 1;
+        settings.pipeline.solver = "tabu".into();
+        settings.pipeline.iterations = 1;
+        settings.pipeline.summary_len = 3;
+        let svc = Arc::new(Service::start(&settings).unwrap());
+        let server = TcpServer::start(svc.clone(), 0).unwrap();
+        // one sentence: first revision must be empty, and the session
+        // still errors cleanly at EOF (frontier < summary_len)
+        let mut stream = std::net::TcpStream::connect(server.addr).unwrap();
+        stream
+            .write_all(format!("{STREAM_MARKER}\nOne sentence only.\n{CHUNK_MARKER}\n").as_bytes())
+            .unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line.trim_end(), "REV 0");
+        stream
+            .write_all(format!("{EOF_MARKER}\n").as_bytes())
+            .unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("ERR"), "{line}");
         server.stop();
     }
 

@@ -31,9 +31,13 @@ use super::metrics::ServiceMetrics;
 
 /// One queued request.
 pub struct Job {
+    /// Request id.
     pub id: u64,
+    /// The document to summarize.
     pub doc: Document,
+    /// One-shot reply channel.
     pub respond: SyncSender<Result<Summary>>,
+    /// Submission time (queue-wait accounting).
     pub enqueued: Instant,
 }
 
@@ -45,6 +49,7 @@ pub enum SolveRoute {
     Pooled(PoolHandle),
 }
 
+/// Spawn the worker threads per `settings.service`.
 pub fn spawn_workers(
     settings: &Settings,
     rx: Receiver<Job>,
@@ -96,11 +101,20 @@ pub fn spawn_workers(
                 }
             };
 
+        let strategy = settings.pipeline.strategy;
         handles.push(
             std::thread::Builder::new()
                 .name(format!("cobi-worker-{w}"))
                 .spawn(move || {
-                    worker_loop(&mut *solve, &rx, &metrics, &inflight, &stop, max_batch)
+                    worker_loop(
+                        &mut *solve,
+                        &rx,
+                        &metrics,
+                        &inflight,
+                        &stop,
+                        max_batch,
+                        strategy,
+                    )
                 })?,
         );
     }
@@ -114,6 +128,7 @@ fn worker_loop(
     inflight: &Arc<AtomicUsize>,
     stop: &Arc<AtomicBool>,
     max_batch: usize,
+    strategy: crate::decompose::Strategy,
 ) {
     loop {
         // pull a batch: one blocking recv, then drain up to max_batch-1
@@ -146,7 +161,10 @@ fn worker_loop(
             {
                 let mut m = metrics.lock().unwrap();
                 match &result {
-                    Ok(_) => m.completed += 1,
+                    Ok(_) => {
+                        m.completed += 1;
+                        m.strategies.record(strategy);
+                    }
                     Err(_) => m.failed += 1,
                 }
                 m.record_latency(queue_wait, solve_time);

@@ -193,6 +193,7 @@ pub struct ExactIsingSolver {
 }
 
 impl ExactIsingSolver {
+    /// Facade accepting instances of at most `max_n` spins.
     pub fn new(max_n: usize) -> Self {
         Self { max_n: max_n.min(30) }
     }

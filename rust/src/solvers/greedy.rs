@@ -100,6 +100,7 @@ pub struct GreedyDescent {
 }
 
 impl GreedyDescent {
+    /// Fresh descent solver (owns its scratch workspace).
     pub fn new() -> Self {
         Self::default()
     }

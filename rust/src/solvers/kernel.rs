@@ -43,6 +43,7 @@ pub trait SolverKernel {
         + std::ops::Add<Output = Self::Acc>
         + std::ops::AddAssign;
 
+    /// Number of spins in the bound instance.
     fn n(&self) -> usize;
 
     /// Full energy of `s` (ordered-pair convention).
@@ -251,6 +252,7 @@ pub struct SolveScratch {
 ///
 /// [`SolveResult`]: super::SolveResult
 pub trait QuantSolve {
+    /// Solve `q` on the integer kernel, writing the best spins into `out`.
     fn solve_quant_into(&mut self, q: &QuantIsing, out: &mut Vec<i8>) -> f64;
 }
 

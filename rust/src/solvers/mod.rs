@@ -28,6 +28,7 @@ pub struct SolveResult {
 /// Result of one constrained (cardinality-M) selection solve.
 #[derive(Debug, Clone)]
 pub struct SelectionResult {
+    /// Chosen indices, ascending.
     pub selected: Vec<usize>,
     /// Eq. 3 objective (to maximize) of `selected`.
     pub objective: f64,
@@ -71,6 +72,7 @@ pub const TIE_EPS: f64 = 1e-12;
 /// assert!((ising.energy(&r.spins) - r.energy).abs() < 1e-9);
 /// ```
 pub trait IsingSolver {
+    /// Stable solver name for reports and routing.
     fn name(&self) -> &'static str;
 
     /// Minimize H over spin configurations.

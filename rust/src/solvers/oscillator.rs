@@ -15,6 +15,7 @@ use crate::util::rng::Pcg32;
 
 use super::{IsingSolver, SolveResult};
 
+/// Oscillator-integrator parameters (native mirror of the HLO anneal).
 #[derive(Debug, Clone)]
 pub struct OscillatorConfig {
     /// Euler steps per solve (matches model.ANNEAL_STEPS for the artifact).
@@ -163,11 +164,13 @@ pub fn anneal(
 /// Self-contained solver: draws phase0 ~ U(-pi, pi) and noise ~ N(0, amp)
 /// from its seeded RNG per solve.
 pub struct OscillatorSolver {
+    /// Integrator parameters.
     pub cfg: OscillatorConfig,
     rng: Pcg32,
 }
 
 impl OscillatorSolver {
+    /// Solver with an explicit config.
     pub fn new(seed: u64, cfg: OscillatorConfig) -> Self {
         Self {
             cfg,
@@ -175,6 +178,7 @@ impl OscillatorSolver {
         }
     }
 
+    /// Solver with the default config, seeded.
     pub fn seeded(seed: u64) -> Self {
         Self::new(seed, OscillatorConfig::default())
     }

@@ -7,11 +7,13 @@ use crate::util::rng::Pcg32;
 
 use super::SelectionResult;
 
+/// Uniform-random M-subset baseline.
 pub struct RandomBaseline {
     rng: Pcg32,
 }
 
 impl RandomBaseline {
+    /// Baseline with a seeded RNG stream.
     pub fn seeded(seed: u64) -> Self {
         Self {
             rng: Pcg32::new(seed, 0xBA5E),

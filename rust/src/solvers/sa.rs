@@ -14,12 +14,14 @@ use crate::util::rng::Pcg32;
 use super::kernel::{KernelScratch, QuantSolve, SolveScratch, SolverKernel};
 use super::{IsingSolver, SolveResult};
 
+/// Simulated-annealing schedule parameters.
 #[derive(Debug, Clone)]
 pub struct SaConfig {
     /// Sweeps (n flip attempts each).
     pub sweeps: usize,
     /// Initial/final temperatures for geometric cooling.
     pub t_start: f64,
+    /// Final temperature of the geometric cooling.
     pub t_end: f64,
     /// Independent restarts.
     pub restarts: usize,
@@ -36,6 +38,7 @@ impl Default for SaConfig {
     }
 }
 
+/// Simulated annealing over Ising instances (geometric cooling).
 pub struct SaSolver {
     cfg: SaConfig,
     rng: Pcg32,
@@ -43,6 +46,7 @@ pub struct SaSolver {
 }
 
 impl SaSolver {
+    /// Solver with an explicit schedule.
     pub fn new(seed: u64, cfg: SaConfig) -> Self {
         Self {
             cfg,
@@ -51,6 +55,7 @@ impl SaSolver {
         }
     }
 
+    /// Solver with the default schedule, seeded.
     pub fn seeded(seed: u64) -> Self {
         Self::new(seed, SaConfig::default())
     }

@@ -19,6 +19,7 @@ use crate::util::rng::Pcg32;
 use super::kernel::{KernelScratch, QuantSolve, SolveScratch, SolverKernel};
 use super::{IsingSolver, SolveResult};
 
+/// Tabu-search parameters.
 #[derive(Debug, Clone)]
 pub struct TabuConfig {
     /// Tabu tenure as a fraction of n (clamped to >= 4 moves).
@@ -39,6 +40,7 @@ impl Default for TabuConfig {
     }
 }
 
+/// Tabu search — the paper's software baseline solver.
 pub struct TabuSolver {
     cfg: TabuConfig,
     rng: Pcg32,
@@ -46,6 +48,7 @@ pub struct TabuSolver {
 }
 
 impl TabuSolver {
+    /// Solver with explicit parameters.
     pub fn new(seed: u64, cfg: TabuConfig) -> Self {
         Self {
             cfg,
@@ -54,6 +57,7 @@ impl TabuSolver {
         }
     }
 
+    /// Solver with default parameters, seeded.
     pub fn seeded(seed: u64) -> Self {
         Self::new(seed, TabuConfig::default())
     }

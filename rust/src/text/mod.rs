@@ -16,5 +16,7 @@ pub use tokenize::{hash_token, tokenize, Tokenizer};
 /// requires regenerating artifacts; runtime::artifacts cross-checks against
 /// the manifest at load time.
 pub const VOCAB: u32 = 4096;
+/// Max tokens per sentence (artifact T dim).
 pub const MAX_TOKENS: usize = 32;
+/// Max sentences per document (artifact B dim).
 pub const MAX_SENTENCES: usize = 128;

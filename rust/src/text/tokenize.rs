@@ -49,10 +49,12 @@ pub fn tokenize(sentence: &str) -> Vec<String> {
 pub struct Tokenizer;
 
 impl Tokenizer {
+    /// Tokenizer with the baked VOCAB/MAX_TOKENS dims.
     pub fn new() -> Self {
         Self
     }
 
+    /// Hash-encode one sentence to a fixed token row (0-padded).
     pub fn encode_sentence(&self, sentence: &str) -> [i32; MAX_TOKENS] {
         let mut row = [0i32; MAX_TOKENS];
         for (i, w) in tokenize(sentence).iter().take(MAX_TOKENS).enumerate() {

@@ -8,17 +8,25 @@
 
 use std::time::{Duration, Instant};
 
+/// One case's measurement summary.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Case name.
     pub name: String,
+    /// Iterations measured.
     pub iters: u64,
+    /// Median per-op time.
     pub median: Duration,
+    /// Mean per-op time.
     pub mean: Duration,
+    /// Fastest per-op time.
     pub min: Duration,
+    /// Slowest per-op time.
     pub max: Duration,
 }
 
 impl BenchResult {
+    /// Criterion-style one-line summary.
     pub fn report(&self) -> String {
         format!(
             "{:<44} time: [{} {} {}]  ({} iters)",
@@ -31,6 +39,7 @@ impl BenchResult {
     }
 }
 
+/// Human-readable duration (ns / us / ms / s).
 pub fn fmt_dur(d: Duration) -> String {
     let ns = d.as_nanos() as f64;
     if ns < 1_000.0 {
@@ -51,6 +60,7 @@ pub struct Bencher {
     pub measure_time: Duration,
     /// Warm-up time per case.
     pub warmup_time: Duration,
+    /// Results in run order.
     pub results: Vec<BenchResult>,
 }
 
@@ -75,6 +85,7 @@ fn env_duration(var: &str, default_ms: u64) -> Duration {
 }
 
 impl Bencher {
+    /// Runner with env-tunable default budgets.
     pub fn new() -> Self {
         Self::default()
     }

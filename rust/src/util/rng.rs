@@ -13,10 +13,12 @@ pub struct SplitMix64 {
 }
 
 impl SplitMix64 {
+    /// Generator starting at `seed`.
     pub fn new(seed: u64) -> Self {
         Self { state: seed }
     }
 
+    /// Next 64 random bits.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
@@ -55,6 +57,7 @@ impl Pcg32 {
         Self::new(seed, 0xDA3E_39CB_94B9_5BDB)
     }
 
+    /// Next 32 random bits.
     #[inline]
     pub fn next_u32(&mut self) -> u32 {
         let old = self.state;
@@ -64,6 +67,7 @@ impl Pcg32 {
         xorshifted.rotate_right(rot)
     }
 
+    /// Next 64 random bits (two 32-bit draws, high word first).
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         ((self.next_u32() as u64) << 32) | self.next_u32() as u64

@@ -4,16 +4,24 @@
 /// (Fig 1/5/6: whiskers = min/max, box = quartiles, cross/line = mean).
 #[derive(Debug, Clone, PartialEq)]
 pub struct BoxStats {
+    /// Smallest value.
     pub min: f64,
+    /// Lower quartile.
     pub q25: f64,
+    /// Median.
     pub median: f64,
+    /// Upper quartile.
     pub q75: f64,
+    /// Largest value.
     pub max: f64,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Sample count.
     pub n: usize,
 }
 
 impl BoxStats {
+    /// Summarize `values` (panics on an empty slice or NaN).
     pub fn compute(values: &[f64]) -> Self {
         assert!(!values.is_empty(), "BoxStats of empty slice");
         let mut v = values.to_vec();
@@ -38,6 +46,7 @@ impl BoxStats {
     }
 }
 
+/// Arithmetic mean (NaN for an empty slice).
 pub fn mean(values: &[f64]) -> f64 {
     if values.is_empty() {
         return f64::NAN;
@@ -45,6 +54,7 @@ pub fn mean(values: &[f64]) -> f64 {
     values.iter().sum::<f64>() / values.len() as f64
 }
 
+/// Sample variance (0 below two values).
 pub fn variance(values: &[f64]) -> f64 {
     if values.len() < 2 {
         return 0.0;
@@ -53,6 +63,7 @@ pub fn variance(values: &[f64]) -> f64 {
     values.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (values.len() - 1) as f64
 }
 
+/// Sample standard deviation.
 pub fn stddev(values: &[f64]) -> f64 {
     variance(values).sqrt()
 }
