@@ -1,0 +1,171 @@
+//! Bench: the cost of resilience — quality delta and added latency of
+//! replicated voting solves on a degraded COBI device.
+//!
+//! Matrix: fault rate {clean, 1%, 5% stuck oscillators} × replication
+//! {1, 3} (clean runs once, unreplicated — the baseline every delta is
+//! against). Each cell runs the full `Service` over the bench_10 set
+//! (pool of COBI-native devices carrying the `resilience::fault` model)
+//! and records wall-clock, docs/sec, mean summary objective, and the
+//! resilience counters.
+//!
+//! Expected shape: replication 3 roughly triples device solves (latency
+//! up), holds the mean objective at the clean baseline under faults, and
+//! the replication-1 fault rows show the quality decay that justifies
+//! the layer.
+//!
+//! Prints a human summary plus a JSON record; set COBI_BENCH_RECORD=1 to
+//! (over)write the committed baseline `BENCH_resilience.json`.
+
+use std::time::Instant;
+
+use cobi_es::config::Settings;
+use cobi_es::corpus::benchmark_set;
+use cobi_es::service::Service;
+
+const WORKERS: usize = 4;
+const DEVICES: usize = 2;
+const ITERATIONS: usize = 4;
+
+fn settings(stuck: f64, replication: usize) -> Settings {
+    let mut s = Settings::default();
+    s.pipeline.solver = "cobi".into();
+    s.pipeline.iterations = ITERATIONS;
+    s.pipeline.summary_len = 3; // bench_10 documents have 10 sentences
+    s.service.workers = WORKERS;
+    s.service.queue_depth = 256;
+    s.sched.devices = DEVICES;
+    if stuck > 0.0 {
+        s.resilience.fault.enabled = true;
+        s.resilience.fault.stuck_rate = stuck as f32;
+        s.resilience.fault.drift_rate = (stuck * 0.4) as f32;
+        s.resilience.fault.burst_rate = stuck as f32;
+    }
+    if replication > 1 {
+        s.resilience.enabled = true;
+        s.resilience.replication = replication;
+    }
+    s
+}
+
+struct Cell {
+    label: String,
+    wall_s: f64,
+    docs_per_s: f64,
+    mean_objective: f64,
+    replica_solves: u64,
+    disagreements: u64,
+    repairs: u64,
+}
+
+fn run_cell(label: &str, s: &Settings) -> Cell {
+    let svc = Service::start(s).expect("service start");
+    let set = benchmark_set("bench_10").expect("benchmark set");
+    let t0 = Instant::now();
+    let tickets: Vec<_> = set
+        .documents
+        .iter()
+        .map(|d| svc.submit(d.clone()).expect("queue depth covers the set"))
+        .collect();
+    let mut total_objective = 0.0f64;
+    let mut docs = 0usize;
+    for t in tickets {
+        let summary = t.wait().expect("summarize");
+        total_objective += summary.objective;
+        docs += 1;
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let m = svc.metrics();
+    let r = m.resilience.clone().unwrap_or_default();
+    svc.shutdown();
+    let cell = Cell {
+        label: label.to_string(),
+        wall_s,
+        docs_per_s: docs as f64 / wall_s,
+        mean_objective: total_objective / docs as f64,
+        replica_solves: r.replica_solves,
+        disagreements: r.vote_disagreements,
+        repairs: r.repairs,
+    };
+    println!(
+        "{:<16} {:>7.3}s  {:>6.1} docs/s  mean-obj {:.4}  replicas={} disagree={} repairs={}",
+        cell.label,
+        cell.wall_s,
+        cell.docs_per_s,
+        cell.mean_objective,
+        cell.replica_solves,
+        cell.disagreements,
+        cell.repairs,
+    );
+    cell
+}
+
+fn main() {
+    let clean = run_cell("clean", &settings(0.0, 1));
+    let f1_r1 = run_cell("1%-repl1", &settings(0.01, 1));
+    let f1_r3 = run_cell("1%-repl3", &settings(0.01, 3));
+    let f5_r1 = run_cell("5%-repl1", &settings(0.05, 1));
+    let f5_r3 = run_cell("5%-repl3", &settings(0.05, 3));
+
+    let delta = |c: &Cell| c.mean_objective - clean.mean_objective;
+    let latency = |c: &Cell| c.wall_s / clean.wall_s;
+    println!(
+        "\nquality delta vs clean: 1%/r1 {:+.4} | 1%/r3 {:+.4} | 5%/r1 {:+.4} | 5%/r3 {:+.4}",
+        delta(&f1_r1),
+        delta(&f1_r3),
+        delta(&f5_r1),
+        delta(&f5_r3),
+    );
+    println!(
+        "latency factor vs clean: 1%/r3 {:.2}x | 5%/r3 {:.2}x",
+        latency(&f1_r3),
+        latency(&f5_r3),
+    );
+    assert!(
+        f5_r3.replica_solves > f5_r1.replica_solves,
+        "replication recorded no extra solves"
+    );
+
+    let cell_json = |c: &Cell| {
+        format!(
+            r#"{{ "wall_s": {:.4}, "docs_per_s": {:.2}, "mean_objective": {:.6}, "quality_delta_vs_clean": {:.6}, "replica_solves": {}, "disagreements": {}, "repairs": {} }}"#,
+            c.wall_s,
+            c.docs_per_s,
+            c.mean_objective,
+            delta(c),
+            c.replica_solves,
+            c.disagreements,
+            c.repairs,
+        )
+    };
+    let json = format!(
+        r#"{{
+  "bench": "resilience",
+  "status": "recorded",
+  "workload": {{
+    "set": "bench_10",
+    "documents": 10,
+    "solver": "cobi-native",
+    "iterations": {ITERATIONS},
+    "workers": {WORKERS},
+    "devices": {DEVICES},
+    "drift_rate": "0.4 x stuck rate",
+    "burst_rate": "stuck rate"
+  }},
+  "clean": {},
+  "fault_1pct_repl1": {},
+  "fault_1pct_repl3": {},
+  "fault_5pct_repl1": {},
+  "fault_5pct_repl3": {}
+}}"#,
+        cell_json(&clean),
+        cell_json(&f1_r1),
+        cell_json(&f1_r3),
+        cell_json(&f5_r1),
+        cell_json(&f5_r3),
+    );
+    println!("\n{json}");
+    if std::env::var("COBI_BENCH_RECORD").is_ok() {
+        std::fs::write("BENCH_resilience.json", format!("{json}\n")).expect("write baseline");
+        println!("recorded baseline to BENCH_resilience.json");
+    }
+}

@@ -49,25 +49,68 @@ fn apply_pipeline_flags(settings: &mut Settings, args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn pipeline_from(settings: &Settings) -> Result<(EsPipeline, Option<ArtifactRuntime>)> {
-    if settings.cobi.backend == "hlo" {
-        let rt = ArtifactRuntime::open_default().context(
-            "hlo backend needs artifacts/ (run `make artifacts`) or COBI_ES_ARTIFACTS",
-        )?;
-        let p = EsPipeline::from_config(&settings.pipeline, &settings.cobi, Some(&rt))?;
-        Ok((p, Some(rt)))
-    } else {
-        Ok((
-            EsPipeline::from_config(&settings.pipeline, &settings.cobi, None)?,
-            None,
-        ))
+/// Apply the `[resilience]` flags shared by `summarize` and `serve`.
+fn apply_resilience_flags(settings: &mut Settings, args: &Args) -> Result<()> {
+    if args.get_bool("resilience") {
+        settings.resilience.enabled = true;
     }
+    if args.get("replication").is_some() {
+        settings.resilience.replication =
+            args.get_usize("replication", settings.resilience.replication)?;
+        settings.resilience.enabled = true;
+    }
+    if args.get_bool("calibrate") {
+        settings.resilience.calibrate = true;
+        settings.resilience.enabled = true;
+    }
+    if args.get_bool("no-repair") {
+        settings.resilience.repair = false;
+    }
+    if args.get("fault-stuck").is_some() {
+        settings.resilience.fault.stuck_rate =
+            args.get_f64("fault-stuck", settings.resilience.fault.stuck_rate as f64)? as f32;
+        settings.resilience.fault.enabled = true;
+    }
+    if args.get("fault-drift").is_some() {
+        settings.resilience.fault.drift_rate =
+            args.get_f64("fault-drift", settings.resilience.fault.drift_rate as f64)? as f32;
+        settings.resilience.fault.enabled = true;
+    }
+    if args.get("fault-seed").is_some() {
+        settings.resilience.fault.seed = args.get_usize("fault-seed", 0)? as u64;
+        // like the rate flags: asking for a fault seed means faults on
+        // (the default rates apply) — a stored-but-inert seed would be a
+        // silent no-op
+        settings.resilience.fault.enabled = true;
+    }
+    Ok(())
+}
+
+fn pipeline_from(settings: &Settings) -> Result<(EsPipeline, Option<ArtifactRuntime>)> {
+    let rt = if settings.cobi.backend == "hlo" {
+        Some(ArtifactRuntime::open_default().context(
+            "hlo backend needs artifacts/ (run `make artifacts`) or COBI_ES_ARTIFACTS",
+        )?)
+    } else {
+        None
+    };
+    // with the resilience layer on (or faults on a COBI solver), the
+    // pipeline's solver runs behind the ResilientSolver/fault wiring —
+    // one decision point shared with the service's local-route workers
+    if let Some(p) =
+        crate::resilience::resilient_pipeline(settings, &settings.pipeline, rt.as_ref(), None)?
+    {
+        return Ok((p, rt));
+    }
+    let p = EsPipeline::from_config(&settings.pipeline, &settings.cobi, rt.as_ref())?;
+    Ok((p, rt))
 }
 
 /// `summarize`: one document through the configured pipeline.
 pub fn cmd_summarize(args: &Args) -> Result<()> {
     let mut settings = load_settings(args)?;
     apply_pipeline_flags(&mut settings, args)?;
+    apply_resilience_flags(&mut settings, args)?;
 
     let doc = if let Some(path) = args.get("input") {
         let text = std::fs::read_to_string(path)?;
@@ -240,6 +283,7 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     let mut settings = load_settings(args)?;
     apply_pipeline_flags(&mut settings, args)?;
     apply_pool_flags(&mut settings, args)?;
+    apply_resilience_flags(&mut settings, args)?;
     settings.service.workers = args.get_usize("workers", settings.service.workers)?;
     let requests = args.get_usize("requests", 20)?;
 
@@ -285,6 +329,26 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         }
     } else {
         println!("device pool: disabled (worker-private solvers)");
+    }
+    // the resilience layer applies on BOTH routes (pool devices or
+    // worker-private pipelines), so report it outside the pool branch
+    if settings.resilience.enabled {
+        println!(
+            "resilience: replication {}, retries {}, repair {}, calibrate {}{}",
+            settings.resilience.replication,
+            settings.resilience.retries,
+            if settings.resilience.repair { "on" } else { "off" },
+            if settings.resilience.calibrate { "on" } else { "off" },
+            if settings.resilience.fault.enabled {
+                format!(
+                    " | faults: stuck {:.1}% drift {:.1}%",
+                    settings.resilience.fault.stuck_rate * 100.0,
+                    settings.resilience.fault.drift_rate * 100.0,
+                )
+            } else {
+                String::new()
+            },
+        );
     }
 
     // --port: run the TCP endpoint until killed

@@ -28,6 +28,9 @@ const BOOLEAN_FLAGS: &[&str] = &[
     "no-pool",
     "portfolio",
     "no-warm-cache",
+    "resilience",
+    "calibrate",
+    "no-repair",
 ];
 
 impl Args {
@@ -104,8 +107,12 @@ COMMANDS:
                [--summary-len M] [--precision fp|4bit..8bit|int14]
                [--rounding deterministic|stoch5050|stochastic]
                [--strategy window|tree|stream] [--hlo]
+               resilience: [--resilience] [--replication N]
+               [--calibrate] [--no-repair] [--fault-stuck F]
+               [--fault-drift F] [--fault-seed N]
   experiment   Regenerate a paper figure/table
-               <fig1|fig2|fig3|fig5|fig6|fig7|fig8|table1|supp-optima|all>
+               <fig1|fig2|fig3|fig5|fig6|fig7|fig8|table1|supp-optima|
+                fault-sweep|all>
                [--full] [--out <file.md>] [--csv]
   gen-corpus   Write a benchmark set as text files
                --set <name> --out <dir>
@@ -129,6 +136,10 @@ COMMANDS:
                portfolio: [--portfolio] (adaptive solver routing)
                [--portfolio-policy static|size-tiered|bandit]
                [--portfolio-epsilon F] [--no-warm-cache]
+               resilience: [--resilience] (replicated voting solves +
+               verify-and-retry) [--replication N] [--calibrate]
+               [--no-repair] fault injection: [--fault-stuck F]
+               [--fault-drift F] [--fault-seed N]
   doctor       Check artifacts, PJRT runtime and device calibration
   help         Show this message
 

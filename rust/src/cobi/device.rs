@@ -6,6 +6,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::CobiConfig;
 use crate::ising::Ising;
+use crate::resilience::fault::{FaultCounters, FaultDraw, FaultModel, FAULT_STREAM};
 use crate::runtime::artifacts::{Arg, ArtifactRuntime, Executable};
 use crate::solvers::oscillator::{anneal, OscillatorConfig};
 use crate::solvers::{IsingSolver, SolveResult};
@@ -89,6 +90,18 @@ pub struct CobiDevice {
     rng: Pcg32,
     stats: CobiStats,
     scratch: DevScratch,
+    /// Construction/reseed seed (keys the fault stream of the unseeded
+    /// entry points).
+    base_seed: u64,
+    /// Hardware non-ideality model (`[resilience] fault_*`; None = the
+    /// clean device, byte-identical to every pre-fault release).
+    fault: Option<FaultModel>,
+    /// Fault stream of the unseeded entry points (`program_and_solve`,
+    /// `solve_batch`); the seeded paths derive a fresh fault stream per
+    /// request instead. Reset by [`CobiDevice::reseed`].
+    fault_rng: Pcg32,
+    /// Reusable buffer holding one solve's perturbed instance.
+    fault_scratch: Ising,
 }
 
 impl CobiDevice {
@@ -100,6 +113,13 @@ impl CobiDevice {
             rng: Pcg32::new(seed, DEVICE_STREAM),
             stats: CobiStats::default(),
             scratch: DevScratch::default(),
+            base_seed: seed,
+            fault: None,
+            // the FAULT stream even before a model attaches: the
+            // parallel-stream invariant (decision #16) is structural,
+            // not dependent on set_fault_model re-deriving it
+            fault_rng: Pcg32::new(seed, FAULT_STREAM),
+            fault_scratch: Ising::new(0),
         }
     }
 
@@ -129,6 +149,10 @@ impl CobiDevice {
             rng: Pcg32::new(seed, DEVICE_STREAM),
             stats: CobiStats::default(),
             scratch: DevScratch::default(),
+            base_seed: seed,
+            fault: None,
+            fault_rng: Pcg32::new(seed, FAULT_STREAM),
+            fault_scratch: Ising::new(0),
         })
     }
 
@@ -159,6 +183,32 @@ impl CobiDevice {
     /// that replay a device-global stream (tests, calibration).
     pub fn reseed(&mut self, seed: u64) {
         self.rng = Pcg32::new(seed, DEVICE_STREAM);
+        self.base_seed = seed;
+        if let Some(fm) = &self.fault {
+            self.fault_rng = fm.rng_for(seed);
+        }
+    }
+
+    /// Attach a hardware fault model (see `resilience::fault`). Without
+    /// one the device is the clean simulator, byte-identical to every
+    /// pre-fault release; with one, every solve injects seed-derived
+    /// non-idealities (DESIGN.md decision #16).
+    pub fn set_fault_model(&mut self, fm: FaultModel) {
+        self.fault_rng = fm.rng_for(self.base_seed);
+        self.fault = Some(fm);
+    }
+
+    /// The attached fault model, if any.
+    pub fn fault_model(&self) -> Option<&FaultModel> {
+        self.fault.as_ref()
+    }
+
+    /// Point the attached fault model's injection counters at a
+    /// fleet-shared block (no-op without a fault model).
+    pub fn share_fault_counters(&mut self, counters: Arc<FaultCounters>) {
+        if let Some(fm) = &mut self.fault {
+            fm.set_counters(counters);
+        }
     }
 
     /// Validate that an instance is programmable on the chip: spin count
@@ -208,13 +258,16 @@ impl CobiDevice {
 
     /// One native (unpadded) anneal; draws phase0/noise from `rng` into
     /// the reusable scratch tensors (every element overwritten — reuse
-    /// cannot change results, only skip the per-solve allocations).
+    /// cannot change results, only skip the per-solve allocations). A
+    /// fault draw's burst window amplifies the noise tensor in place
+    /// (clean solves pass `None` and perform the identical draws).
     fn native_spins(
         osc: &OscillatorConfig,
         noise_amp: f32,
         ising: &Ising,
         rng: &mut Pcg32,
         scratch: &mut DevScratch,
+        draw: Option<&FaultDraw>,
     ) -> Vec<i8> {
         // §Perf: the native integrator runs UNPADDED — padding spins carry
         // zero coupling and cannot influence the real ones, so simulating
@@ -225,12 +278,16 @@ impl CobiDevice {
         scratch.noise.clear();
         scratch.noise.resize(ANNEAL_STEPS * n, 0.0);
         rng.fill_normal(&mut scratch.noise, noise_amp);
+        if let Some(d) = draw {
+            d.apply_burst(&mut scratch.noise, n);
+        }
         anneal(ising, osc, &scratch.phase, &scratch.noise)
     }
 
     /// One padded HLO anneal through the single-instance artifact; draws
     /// phase0/noise from `rng`; pads through `scratch.pad` instead of a
-    /// fresh 64×64 matrix per call.
+    /// fresh 64×64 matrix per call. Burst faults amplify the noise
+    /// tensor like [`CobiDevice::native_spins`].
     fn hlo_single_spins(
         exe: &Executable,
         kparams: &[f32; 3],
@@ -238,12 +295,16 @@ impl CobiDevice {
         ising: &Ising,
         rng: &mut Pcg32,
         scratch: &mut DevScratch,
+        draw: Option<&FaultDraw>,
     ) -> Result<Vec<i8>> {
         ising.padded_into(PADDED_SPINS, &mut scratch.pad);
         warm_phase0_into(PADDED_SPINS, None, rng, &mut scratch.phase);
         scratch.noise.clear();
         scratch.noise.resize(ANNEAL_STEPS * PADDED_SPINS, 0.0);
         rng.fill_normal(&mut scratch.noise, noise_amp);
+        if let Some(d) = draw {
+            d.apply_burst(&mut scratch.noise, PADDED_SPINS);
+        }
         let outs = exe.run(&[
             Arg::F32(&scratch.pad.j),
             Arg::F32(&scratch.pad.h),
@@ -259,7 +320,11 @@ impl CobiDevice {
 
     /// Program the array and run one solve. Validates, pads to the
     /// artifact size, draws phase0/noise, runs the backend, crops the
-    /// result and charges the timing model.
+    /// result and charges the timing model. With a fault model attached
+    /// the programmed instance is perturbed (drift / DAC mismatch), the
+    /// anneal may carry a burst-noise window, stuck oscillators override
+    /// the readout, and the energy is recomputed on the CLEAN instance
+    /// so reported energies always match the returned spins.
     pub fn program_and_solve(&mut self, ising: &Ising) -> Result<SolveResult> {
         self.validate(ising)?;
         let t0 = std::time::Instant::now();
@@ -267,22 +332,39 @@ impl CobiDevice {
         let kparams = self.kparams();
         let noise_amp = self.cfg.noise_amp;
 
-        let spins: Vec<i8> = match &self.backend {
-            CobiBackend::Native => {
-                Self::native_spins(&osc, noise_amp, ising, &mut self.rng, &mut self.scratch)
-            }
-            CobiBackend::Hlo { single, .. } => {
-                let single = single.clone();
-                Self::hlo_single_spins(
-                    &single,
-                    &kparams,
-                    noise_amp,
-                    ising,
-                    &mut self.rng,
-                    &mut self.scratch,
-                )?
-            }
+        let (mut spins, draw) = {
+            let Self {
+                backend,
+                rng,
+                scratch,
+                fault,
+                fault_rng,
+                fault_scratch,
+                ..
+            } = self;
+            let (inst_run, draw) = faulted(fault.as_ref(), ising, fault_rng, fault_scratch);
+            let spins: Vec<i8> = match backend {
+                CobiBackend::Native => {
+                    Self::native_spins(&osc, noise_amp, inst_run, rng, scratch, draw.as_ref())
+                }
+                CobiBackend::Hlo { single, .. } => {
+                    let single = single.clone();
+                    Self::hlo_single_spins(
+                        &single,
+                        &kparams,
+                        noise_amp,
+                        inst_run,
+                        rng,
+                        scratch,
+                        draw.as_ref(),
+                    )?
+                }
+            };
+            (spins, draw)
         };
+        if let Some(d) = &draw {
+            d.apply_stuck(&mut spins);
+        }
         let energy = ising.energy(&spins);
         self.charge(1, t0.elapsed().as_secs_f64());
         Ok(SolveResult { spins, energy })
@@ -316,21 +398,41 @@ impl CobiDevice {
         let mut results = Vec::with_capacity(instances.len());
         for chunk in instances.chunks(ANNEAL_BATCH) {
             let t0 = std::time::Instant::now();
-            let prepared: Vec<Prepared> = chunk
-                .iter()
-                .enumerate()
-                .map(|(ii, inst)| Prepared::draw(0, ii, inst, noise_amp, &mut self.rng))
-                .collect();
-            let (j, h, phase0, noise) = pack_chunk(&prepared);
-            let outs = batch_exe.run(&[
-                Arg::F32(&j),
-                Arg::F32(&h),
-                Arg::F32(&phase0),
-                Arg::F32(&noise),
-                Arg::F32(&kparams),
-            ])?;
-            for (slot, inst) in chunk.iter().enumerate() {
-                results.push(crop_slot(&outs[0], slot, inst));
+            {
+                let Self {
+                    rng,
+                    fault,
+                    fault_rng,
+                    ..
+                } = &mut *self;
+                let mut prepared: Vec<Prepared> = Vec::with_capacity(chunk.len());
+                for (ii, inst) in chunk.iter().enumerate() {
+                    let frng = if fault.is_some() {
+                        Some(&mut *fault_rng)
+                    } else {
+                        None
+                    };
+                    prepared.push(Prepared::draw(
+                        0,
+                        ii,
+                        inst,
+                        noise_amp,
+                        rng,
+                        fault.as_ref(),
+                        frng,
+                    ));
+                }
+                let (j, h, phase0, noise) = pack_chunk(&prepared);
+                let outs = batch_exe.run(&[
+                    Arg::F32(&j),
+                    Arg::F32(&h),
+                    Arg::F32(&phase0),
+                    Arg::F32(&noise),
+                    Arg::F32(&kparams),
+                ])?;
+                for (slot, p) in prepared.iter().enumerate() {
+                    results.push(p.finish(&outs[0], slot));
+                }
             }
             self.charge(chunk.len() as u64, t0.elapsed().as_secs_f64());
         }
@@ -381,6 +483,8 @@ impl CobiDevice {
         // the device really did
         let mut done: u64 = 0;
         let scratch = &mut self.scratch;
+        let fault = self.fault.as_ref();
+        let fault_scratch = &mut self.fault_scratch;
         let run = {
             let out = &mut out;
             let done = &mut done;
@@ -389,9 +493,27 @@ impl CobiDevice {
                     Exec::Native => {
                         for (gi, g) in groups.iter().enumerate() {
                             let mut rng = Pcg32::new(g.seed, DEVICE_STREAM);
+                            // fault draws come from a parallel stream
+                            // keyed by the request seed, so clean-path
+                            // phase/noise draws are never shifted and
+                            // faulty groups stay co-batching-invariant
+                            let mut frng = fault.map(|fm| fm.rng_for(g.seed));
                             for inst in g.instances {
-                                let spins =
-                                    Self::native_spins(&osc, noise_amp, inst, &mut rng, scratch);
+                                let (inst_run, draw) = match frng.as_mut() {
+                                    Some(fr) => faulted(fault, inst, fr, fault_scratch),
+                                    None => (inst, None),
+                                };
+                                let mut spins = Self::native_spins(
+                                    &osc,
+                                    noise_amp,
+                                    inst_run,
+                                    &mut rng,
+                                    scratch,
+                                    draw.as_ref(),
+                                );
+                                if let Some(d) = &draw {
+                                    d.apply_stuck(&mut spins);
+                                }
                                 let energy = inst.energy(&spins);
                                 out[gi].push(SolveResult { spins, energy });
                                 *done += 1;
@@ -401,10 +523,24 @@ impl CobiDevice {
                     Exec::Single(exe) => {
                         for (gi, g) in groups.iter().enumerate() {
                             let mut rng = Pcg32::new(g.seed, DEVICE_STREAM);
+                            let mut frng = fault.map(|fm| fm.rng_for(g.seed));
                             for inst in g.instances {
-                                let spins = Self::hlo_single_spins(
-                                    &exe, &kparams, noise_amp, inst, &mut rng, scratch,
+                                let (inst_run, draw) = match frng.as_mut() {
+                                    Some(fr) => faulted(fault, inst, fr, fault_scratch),
+                                    None => (inst, None),
+                                };
+                                let mut spins = Self::hlo_single_spins(
+                                    &exe,
+                                    &kparams,
+                                    noise_amp,
+                                    inst_run,
+                                    &mut rng,
+                                    scratch,
+                                    draw.as_ref(),
                                 )?;
+                                if let Some(d) = &draw {
+                                    d.apply_stuck(&mut spins);
+                                }
                                 let energy = inst.energy(&spins);
                                 out[gi].push(SolveResult { spins, energy });
                                 *done += 1;
@@ -417,8 +553,17 @@ impl CobiDevice {
                         let mut prepared: Vec<Prepared> = Vec::new();
                         for (gi, g) in groups.iter().enumerate() {
                             let mut rng = Pcg32::new(g.seed, DEVICE_STREAM);
+                            let mut frng = fault.map(|fm| fm.rng_for(g.seed));
                             for (ii, inst) in g.instances.iter().enumerate() {
-                                prepared.push(Prepared::draw(gi, ii, inst, noise_amp, &mut rng));
+                                prepared.push(Prepared::draw(
+                                    gi,
+                                    ii,
+                                    inst,
+                                    noise_amp,
+                                    &mut rng,
+                                    fault,
+                                    frng.as_mut(),
+                                ));
                             }
                         }
                         for chunk in prepared.chunks(ANNEAL_BATCH) {
@@ -431,8 +576,7 @@ impl CobiDevice {
                                 Arg::F32(&kparams),
                             ])?;
                             for (slot, p) in chunk.iter().enumerate() {
-                                let inst = &groups[p.gi].instances[p.ii];
-                                out[p.gi].push(crop_slot(&outs[0], slot, inst));
+                                out[p.gi].push(p.finish(&outs[0], slot));
                             }
                             *done += chunk.len() as u64;
                         }
@@ -479,18 +623,29 @@ impl CobiDevice {
         let mut rng = Pcg32::new(seed, DEVICE_STREAM);
 
         let scratch = &mut self.scratch;
-        let spins = match &self.backend {
+        let fault = self.fault.as_ref();
+        let fault_scratch = &mut self.fault_scratch;
+        // request-seeded fault stream, like the seeded-group path
+        let mut frng = fault.map(|fm| fm.rng_for(seed));
+        let (inst_run, draw) = match frng.as_mut() {
+            Some(fr) => faulted(fault, ising, fr, fault_scratch),
+            None => (ising, None),
+        };
+        let mut spins = match &self.backend {
             CobiBackend::Native => {
                 // a cold start draws n phases — matching native_spins
                 warm_phase0_into(ising.n, init, &mut rng, &mut scratch.phase);
                 scratch.noise.clear();
                 scratch.noise.resize(ANNEAL_STEPS * ising.n, 0.0);
                 rng.fill_normal(&mut scratch.noise, noise_amp);
-                anneal(ising, &osc, &scratch.phase, &scratch.noise)
+                if let Some(d) = &draw {
+                    d.apply_burst(&mut scratch.noise, ising.n);
+                }
+                anneal(inst_run, &osc, &scratch.phase, &scratch.noise)
             }
             CobiBackend::Hlo { single, .. } => {
                 let single = single.clone();
-                ising.padded_into(PADDED_SPINS, &mut scratch.pad);
+                inst_run.padded_into(PADDED_SPINS, &mut scratch.pad);
                 // a cold start draws PADDED_SPINS phases — matching
                 // hlo_single_spins, so the noise stream stays aligned
                 // with the seeded-group path; a hint draws none and
@@ -505,6 +660,9 @@ impl CobiDevice {
                 scratch.noise.clear();
                 scratch.noise.resize(ANNEAL_STEPS * PADDED_SPINS, 0.0);
                 rng.fill_normal(&mut scratch.noise, noise_amp);
+                if let Some(d) = &draw {
+                    d.apply_burst(&mut scratch.noise, PADDED_SPINS);
+                }
                 let outs = single.run(&[
                     Arg::F32(&scratch.pad.j),
                     Arg::F32(&scratch.pad.h),
@@ -518,6 +676,9 @@ impl CobiDevice {
                     .collect()
             }
         };
+        if let Some(d) = &draw {
+            d.apply_stuck(&mut spins);
+        }
         let energy = ising.energy(&spins);
         self.charge(1, t0.elapsed().as_secs_f64());
         // never return worse than the hint itself: a coarse near-match
@@ -536,6 +697,27 @@ impl CobiDevice {
             }
         }
         Ok(SolveResult { spins, energy })
+    }
+}
+
+/// Resolve the instance a solve should anneal: with a fault model, draw
+/// this solve's fault realization from `frng` and materialize the
+/// perturbed instance into `storage` (reused across solves); without one
+/// the clean instance passes through untouched and `frng` is never drawn
+/// from. The returned [`FaultDraw`] carries the post-anneal stages
+/// (stuck-spin overrides, burst window).
+fn faulted<'a>(
+    fault: Option<&FaultModel>,
+    inst: &'a Ising,
+    frng: &mut Pcg32,
+    storage: &'a mut Ising,
+) -> (&'a Ising, Option<FaultDraw>) {
+    match fault {
+        Some(fm) => {
+            let draw = fm.perturb_into(inst, frng, storage);
+            (&*storage, Some(draw))
+        }
+        None => (inst, None),
     }
 }
 
@@ -570,25 +752,72 @@ struct Prepared<'a> {
     /// Instance index within the group.
     ii: usize,
     inst: &'a Ising,
+    /// The perturbed instance actually programmed (fault model only).
+    faulty: Option<Ising>,
+    /// This instance's fault realization (stuck overrides applied to the
+    /// cropped readout, burst already folded into `noise`).
+    draw: Option<FaultDraw>,
     phase0: Vec<f32>,
     noise: Vec<f32>,
 }
 
 impl<'a> Prepared<'a> {
-    fn draw(gi: usize, ii: usize, inst: &'a Ising, noise_amp: f32, rng: &mut Pcg32) -> Self {
+    fn draw(
+        gi: usize,
+        ii: usize,
+        inst: &'a Ising,
+        noise_amp: f32,
+        rng: &mut Pcg32,
+        fault: Option<&FaultModel>,
+        frng: Option<&mut Pcg32>,
+    ) -> Self {
+        // fault draws come first, from their own stream — the phase and
+        // noise draws below are identical with or without a fault model
+        let (faulty, draw) = match (fault, frng) {
+            (Some(fm), Some(fr)) => {
+                let mut perturbed = Ising::new(0);
+                let d = fm.perturb_into(inst, fr, &mut perturbed);
+                (Some(perturbed), Some(d))
+            }
+            _ => (None, None),
+        };
         let mut phase0 = vec![0.0f32; PADDED_SPINS];
         for p in phase0.iter_mut() {
             *p = rng.range_f32(-std::f32::consts::PI, std::f32::consts::PI);
         }
         let mut noise = vec![0.0f32; ANNEAL_STEPS * PADDED_SPINS];
         rng.fill_normal(&mut noise, noise_amp);
+        if let Some(d) = &draw {
+            d.apply_burst(&mut noise, PADDED_SPINS);
+        }
         Self {
             gi,
             ii,
             inst,
+            faulty,
+            draw,
             phase0,
             noise,
         }
+    }
+
+    /// The instance whose rows get packed into the artifact buffers (the
+    /// perturbed copy under a fault model, the clean one otherwise).
+    fn programmed(&self) -> &Ising {
+        self.faulty.as_ref().unwrap_or(self.inst)
+    }
+
+    /// Crop this instance's output slot, apply any stuck-oscillator
+    /// overrides, and score on the CLEAN instance.
+    fn finish(&self, flat: &[f32], slot: usize) -> SolveResult {
+        let mut r = crop_slot(flat, slot, self.inst);
+        if let Some(d) = &self.draw {
+            if !d.stuck.is_empty() {
+                d.apply_stuck(&mut r.spins);
+                r.energy = self.inst.energy(&r.spins);
+            }
+        }
+        r
     }
 }
 
@@ -608,12 +837,13 @@ fn pack_chunk(chunk: &[Prepared<'_>]) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>
     let mut phase0 = vec![0.0f32; ANNEAL_BATCH * PADDED_SPINS];
     let mut noise = vec![0.0f32; ANNEAL_BATCH * sn];
     for (slot, p) in chunk.iter().enumerate() {
-        let n = p.inst.n;
+        let inst = p.programmed();
+        let n = inst.n;
         for r in 0..n {
             let dst = slot * nn + r * PADDED_SPINS;
-            j[dst..dst + n].copy_from_slice(&p.inst.j[r * n..(r + 1) * n]);
+            j[dst..dst + n].copy_from_slice(&inst.j[r * n..(r + 1) * n]);
         }
-        h[slot * PADDED_SPINS..slot * PADDED_SPINS + n].copy_from_slice(&p.inst.h);
+        h[slot * PADDED_SPINS..slot * PADDED_SPINS + n].copy_from_slice(&inst.h);
         phase0[slot * PADDED_SPINS..(slot + 1) * PADDED_SPINS].copy_from_slice(&p.phase0);
         noise[slot * sn..(slot + 1) * sn].copy_from_slice(&p.noise);
     }
@@ -771,7 +1001,7 @@ mod tests {
         let prepared: Vec<Prepared> = instances
             .iter()
             .enumerate()
-            .map(|(ii, inst)| Prepared::draw(0, ii, inst, 0.1, &mut rng))
+            .map(|(ii, inst)| Prepared::draw(0, ii, inst, 0.1, &mut rng, None, None))
             .collect();
         let (j, h, phase0, noise) = pack_chunk(&prepared);
         let nn = PADDED_SPINS * PADDED_SPINS;
@@ -865,6 +1095,167 @@ mod tests {
         let mut dev = CobiDevice::native(CobiConfig::default(), 82);
         let r = dev.solve_seeded_warm(&inst, 5, Some(&gs)).unwrap();
         assert!((r.energy - ge).abs() < 1e-9, "hint clamp lost the ground state");
+    }
+
+    #[test]
+    fn fault_free_model_with_zero_rates_matches_the_clean_device() {
+        // attaching a fault model whose every stage is disabled must be
+        // indistinguishable from the clean device: the fault stream is
+        // parallel, so phase/noise draws are untouched, and the zero-rate
+        // perturbation is a value-identical copy
+        use crate::config::FaultConfig;
+        let instances: Vec<Ising> = (0..3).map(|k| quantized_glass(1000 + k, 12)).collect();
+        let mut clean = CobiDevice::native(CobiConfig::default(), 3);
+        let mut nulled = CobiDevice::native(CobiConfig::default(), 3);
+        nulled.set_fault_model(FaultModel::new(&FaultConfig {
+            enabled: true,
+            stuck_rate: 0.0,
+            drift_rate: 0.0,
+            drift_amp: 0.0,
+            dac_mismatch: 0.0,
+            burst_rate: 0.0,
+            burst_amp: 1.0,
+            seed: 5,
+        }));
+        let group = |dev: &mut CobiDevice| {
+            dev.solve_groups_seeded(&[SeededGroup {
+                instances: &instances,
+                seed: 42,
+            }])
+            .unwrap()
+        };
+        let a = group(&mut clean);
+        let b = group(&mut nulled);
+        for (x, y) in a[0].iter().zip(&b[0]) {
+            assert_eq!(x.spins, y.spins);
+            assert_eq!(x.energy.to_bits(), y.energy.to_bits());
+        }
+        // the device-global path agrees too
+        let inst = quantized_glass(1003, 10);
+        let pa = clean.program_and_solve(&inst).unwrap();
+        let pb = nulled.program_and_solve(&inst).unwrap();
+        assert_eq!(pa.spins, pb.spins);
+    }
+
+    fn heavy_faults() -> crate::config::FaultConfig {
+        crate::config::FaultConfig {
+            enabled: true,
+            stuck_rate: 0.3,
+            drift_rate: 0.3,
+            drift_amp: 0.3,
+            dac_mismatch: 0.1,
+            burst_rate: 0.5,
+            burst_amp: 4.0,
+            seed: 0xFA17,
+        }
+    }
+
+    #[test]
+    fn faulty_solves_are_seed_reproducible_and_counted() {
+        let instances: Vec<Ising> = (0..4).map(|k| quantized_glass(1100 + k, 14)).collect();
+        let run = || {
+            let mut dev = CobiDevice::native(CobiConfig::default(), 9);
+            dev.set_fault_model(FaultModel::new(&heavy_faults()));
+            let out = dev
+                .solve_groups_seeded(&[SeededGroup {
+                    instances: &instances,
+                    seed: 0xF00D,
+                }])
+                .unwrap();
+            let counters = dev.fault_model().unwrap().counters().snapshot();
+            (out, counters)
+        };
+        let (a, ca) = run();
+        let (b, cb) = run();
+        for (x, y) in a[0].iter().zip(&b[0]) {
+            assert_eq!(x.spins, y.spins, "faulty runs must replay byte-identically");
+            assert_eq!(x.energy.to_bits(), y.energy.to_bits());
+        }
+        assert_eq!(ca, cb, "fault counters must replay too");
+        assert!(ca.any(), "heavy fault rates must inject something");
+        // reported energies are always the clean-instance energy of the
+        // returned spins, even under faults
+        for (r, inst) in a[0].iter().zip(&instances) {
+            assert!((inst.energy(&r.spins) - r.energy).abs() < 1e-9);
+        }
+        // and the faulty results differ from the clean device's
+        let mut clean = CobiDevice::native(CobiConfig::default(), 9);
+        let c = clean
+            .solve_groups_seeded(&[SeededGroup {
+                instances: &instances,
+                seed: 0xF00D,
+            }])
+            .unwrap();
+        assert!(
+            a[0].iter().zip(&c[0]).any(|(x, y)| x.spins != y.spins),
+            "heavy faults left every solve untouched"
+        );
+    }
+
+    #[test]
+    fn faulty_groups_stay_independent_of_cobatching() {
+        // decision #16: fault draws derive from the request seed alone,
+        // so a faulty group's results are identical whether it is solved
+        // alone or co-batched with another group
+        let a: Vec<Ising> = (0..3).map(|k| quantized_glass(1200 + k, 12)).collect();
+        let b: Vec<Ising> = (0..2).map(|k| quantized_glass(1300 + k, 12)).collect();
+        let device = || {
+            let mut d = CobiDevice::native(CobiConfig::default(), 1);
+            d.set_fault_model(FaultModel::new(&heavy_faults()));
+            d
+        };
+        let alone = device()
+            .solve_groups_seeded(&[SeededGroup { instances: &a, seed: 777 }])
+            .unwrap();
+        let together = device()
+            .solve_groups_seeded(&[
+                SeededGroup { instances: &b, seed: 888 },
+                SeededGroup { instances: &a, seed: 777 },
+            ])
+            .unwrap();
+        for (x, y) in alone[0].iter().zip(&together[1]) {
+            assert_eq!(x.spins, y.spins);
+            assert_eq!(x.energy.to_bits(), y.energy.to_bits());
+        }
+    }
+
+    #[test]
+    fn fully_stuck_device_returns_the_stuck_pattern() {
+        use crate::config::FaultConfig;
+        let inst = quantized_glass(1400, 10);
+        let mut dev = CobiDevice::native(CobiConfig::default(), 2);
+        dev.set_fault_model(FaultModel::new(&FaultConfig {
+            enabled: true,
+            stuck_rate: 1.0,
+            drift_rate: 0.0,
+            drift_amp: 0.0,
+            dac_mismatch: 0.0,
+            burst_rate: 0.0,
+            burst_amp: 1.0,
+            seed: 3,
+        }));
+        let out = dev
+            .solve_groups_seeded(&[SeededGroup {
+                instances: std::slice::from_ref(&inst),
+                seed: 55,
+            }])
+            .unwrap();
+        let r = &out[0][0];
+        // every oscillator stuck: the readout is exactly the stuck
+        // pattern drawn from the request's fault stream, and the energy
+        // honestly reflects it
+        let fm = dev.fault_model().unwrap();
+        let mut frng = fm.rng_for(55);
+        let mut storage = Ising::new(0);
+        let draw = fm.perturb_into(&inst, &mut frng, &mut storage);
+        assert_eq!(draw.stuck.len(), 10);
+        let mut expected = vec![0i8; 10];
+        for &(k, s) in &draw.stuck {
+            expected[k] = s;
+        }
+        assert_eq!(r.spins, expected);
+        assert!((inst.energy(&r.spins) - r.energy).abs() < 1e-9);
+        assert_eq!(dev.fault_model().unwrap().counters().snapshot().stuck_spins, 20);
     }
 
     #[test]

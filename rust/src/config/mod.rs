@@ -258,6 +258,106 @@ impl Default for PortfolioConfig {
     }
 }
 
+/// COBI hardware fault-model parameters (`[resilience]` — the `fault_*`
+/// keys). Deterministic, seed-derived non-idealities injected into the
+/// simulated device: real CMOS oscillator arrays drift, stick, and carry
+/// per-line DAC mismatch; this models them without giving up
+/// byte-reproducibility (DESIGN.md decision #16).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultConfig {
+    /// Master switch: inject faults into COBI solves (default off — the
+    /// clean device is byte-identical to every pre-fault release).
+    pub enabled: bool,
+    /// Per-oscillator probability of being stuck at a fixed spin for one
+    /// solve.
+    pub stuck_rate: f32,
+    /// Per-coupling probability of multiplicative drift for one solve.
+    pub drift_rate: f32,
+    /// Drift magnitude: a drifted coupling is scaled by
+    /// `1 + drift_amp * u`, `u` uniform in [-1, 1).
+    pub drift_amp: f32,
+    /// Per-line DAC gain mismatch amplitude: line `i` programs with gain
+    /// `1 + dac_mismatch * u_i` applied to `h_i` and every `J_ij`
+    /// (0 disables the stage and consumes no fault draws).
+    pub dac_mismatch: f32,
+    /// Per-solve probability of a burst-noise event (a window of anneal
+    /// steps with amplified phase noise).
+    pub burst_rate: f32,
+    /// Burst amplification factor applied to the noise window.
+    pub burst_amp: f32,
+    /// Fault-stream seed, mixed with each request seed so fault draws are
+    /// reproducible per request and independent of co-batching.
+    pub seed: u64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            stuck_rate: 0.02,
+            drift_rate: 0.02,
+            drift_amp: 0.15,
+            dac_mismatch: 0.05,
+            burst_rate: 0.05,
+            burst_amp: 4.0,
+            seed: 0xFA17,
+        }
+    }
+}
+
+/// Resilience-layer parameters (`resilience::ResilientSolver` +
+/// `resilience::Calibrator`): replicated solves with energy-verified
+/// voting, software verify-and-retry, and startup calibration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResilienceConfig {
+    /// Wrap pool solvers in the resilience layer (default off: the raw
+    /// backends keep every existing determinism pin byte-identical).
+    pub enabled: bool,
+    /// Replicated solves per request (1 = no replication). Overridden per
+    /// device by calibration when `calibrate = true`.
+    pub replication: usize,
+    /// Ceiling on calibration-chosen replication.
+    pub max_replication: usize,
+    /// Fresh-seed re-dispatches before escalating to the software
+    /// fallback (tabu) when a dispatch fails or verification rejects
+    /// every replica.
+    pub retries: usize,
+    /// Software energy verification: recompute each replica's energy and
+    /// vote on the verified value; a replica whose reported energy
+    /// mismatches its spins is rejected.
+    pub verify: bool,
+    /// Spin-repair the vote winner with a deterministic greedy descent
+    /// (fixes stuck-node damage; never returns worse than the winner).
+    pub repair: bool,
+    /// Probe devices with known-ground-truth k-of-n instances at startup
+    /// and set the replication factor per device.
+    pub calibrate: bool,
+    /// Calibration probe instances per device.
+    pub calibration_probes: usize,
+    /// Target per-request success probability the calibrated replication
+    /// factor must reach.
+    pub calibration_target: f64,
+    /// Hardware fault-model parameters (the `fault_*` keys).
+    pub fault: FaultConfig,
+}
+
+impl Default for ResilienceConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            replication: 1,
+            max_replication: 5,
+            retries: 2,
+            verify: true,
+            repair: true,
+            calibrate: false,
+            calibration_probes: 8,
+            calibration_target: 0.9,
+            fault: FaultConfig::default(),
+        }
+    }
+}
+
 /// Root settings object.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Settings {
@@ -273,6 +373,8 @@ pub struct Settings {
     pub sched: SchedConfig,
     /// Solver portfolio + warm-start cache parameters.
     pub portfolio: PortfolioConfig,
+    /// Hardware fault model + resilience-layer parameters.
+    pub resilience: ResilienceConfig,
     /// Directory containing AOT artifacts (manifest.txt etc.).
     pub artifacts_dir: String,
 }
@@ -408,6 +510,49 @@ impl Settings {
             get_f64,
             "portfolio.latency_weight"
         );
+
+        set!(self.resilience.enabled, get_bool, "resilience.enabled");
+        set!(self.resilience.replication, get_i64, "resilience.replication");
+        set!(
+            self.resilience.max_replication,
+            get_i64,
+            "resilience.max_replication"
+        );
+        set!(self.resilience.retries, get_i64, "resilience.retries");
+        set!(self.resilience.verify, get_bool, "resilience.verify");
+        set!(self.resilience.repair, get_bool, "resilience.repair");
+        set!(self.resilience.calibrate, get_bool, "resilience.calibrate");
+        set!(
+            self.resilience.calibration_probes,
+            get_i64,
+            "resilience.calibration_probes"
+        );
+        set!(
+            self.resilience.calibration_target,
+            get_f64,
+            "resilience.calibration_target"
+        );
+        set!(
+            self.resilience.fault.enabled,
+            get_bool,
+            "resilience.fault_enabled"
+        );
+        macro_rules! set_f32 {
+            ($field:expr, $key:expr) => {
+                if let Some(v) = doc.get_f64($key) {
+                    $field = v as f32;
+                }
+            };
+        }
+        set_f32!(self.resilience.fault.stuck_rate, "resilience.fault_stuck_rate");
+        set_f32!(self.resilience.fault.drift_rate, "resilience.fault_drift_rate");
+        set_f32!(self.resilience.fault.drift_amp, "resilience.fault_drift_amp");
+        set_f32!(self.resilience.fault.dac_mismatch, "resilience.fault_dac_mismatch");
+        set_f32!(self.resilience.fault.burst_rate, "resilience.fault_burst_rate");
+        set_f32!(self.resilience.fault.burst_amp, "resilience.fault_burst_amp");
+        if let Some(v) = doc.get_i64("resilience.fault_seed") {
+            self.resilience.fault.seed = v as u64;
+        }
         Ok(())
     }
 }
@@ -544,6 +689,61 @@ latency_weight = 2.5
         let mut s = Settings::default();
         s.apply(&doc).unwrap();
         assert_eq!(s.pipeline.strategy, Strategy::Tree);
+    }
+
+    #[test]
+    fn resilience_defaults_and_overrides() {
+        let s = Settings::default();
+        assert!(!s.resilience.enabled, "resilience must default off");
+        assert!(!s.resilience.fault.enabled, "faults must default off");
+        assert_eq!(s.resilience.replication, 1);
+        assert_eq!(s.resilience.retries, 2);
+        assert!(s.resilience.verify);
+        assert!(s.resilience.repair);
+        assert!(!s.resilience.calibrate);
+
+        let doc = toml::Document::parse(
+            r#"
+[resilience]
+enabled = true
+replication = 3
+max_replication = 7
+retries = 4
+verify = false
+repair = false
+calibrate = true
+calibration_probes = 16
+calibration_target = 0.99
+fault_enabled = true
+fault_stuck_rate = 0.05
+fault_drift_rate = 0.01
+fault_drift_amp = 0.2
+fault_dac_mismatch = 0.1
+fault_burst_rate = 0.2
+fault_burst_amp = 8.0
+fault_seed = 1234
+"#,
+        )
+        .unwrap();
+        let mut s = Settings::default();
+        s.apply(&doc).unwrap();
+        assert!(s.resilience.enabled);
+        assert_eq!(s.resilience.replication, 3);
+        assert_eq!(s.resilience.max_replication, 7);
+        assert_eq!(s.resilience.retries, 4);
+        assert!(!s.resilience.verify);
+        assert!(!s.resilience.repair);
+        assert!(s.resilience.calibrate);
+        assert_eq!(s.resilience.calibration_probes, 16);
+        assert!((s.resilience.calibration_target - 0.99).abs() < 1e-12);
+        assert!(s.resilience.fault.enabled);
+        assert!((s.resilience.fault.stuck_rate - 0.05).abs() < 1e-7);
+        assert!((s.resilience.fault.drift_rate - 0.01).abs() < 1e-7);
+        assert!((s.resilience.fault.drift_amp - 0.2).abs() < 1e-7);
+        assert!((s.resilience.fault.dac_mismatch - 0.1).abs() < 1e-7);
+        assert!((s.resilience.fault.burst_rate - 0.2).abs() < 1e-7);
+        assert!((s.resilience.fault.burst_amp - 8.0).abs() < 1e-7);
+        assert_eq!(s.resilience.fault.seed, 1234);
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! single-core box; `--full` reproduces the paper-sized sweeps.
 
 pub mod common;
+pub mod fault_sweep;
 pub mod fig1;
 pub mod fig23;
 pub mod fig5;
@@ -119,7 +120,16 @@ impl Scale {
 
 /// All experiment ids, in paper order.
 pub const ALL_EXPERIMENTS: &[&str] = &[
-    "fig1", "fig2", "fig3", "fig5", "fig6", "fig7", "fig8", "table1", "supp-optima",
+    "fig1",
+    "fig2",
+    "fig3",
+    "fig5",
+    "fig6",
+    "fig7",
+    "fig8",
+    "table1",
+    "supp-optima",
+    "fault-sweep",
 ];
 
 /// Run one experiment by id.
@@ -133,6 +143,7 @@ pub fn run(id: &str, scale: Scale, settings: &Settings) -> Result<Vec<Report>> {
         "fig7" | "fig8" => fig78::run(scale, settings),
         "table1" => table1::run(scale, settings),
         "supp-optima" => supp::run(scale, settings),
+        "fault-sweep" => fault_sweep::run(scale, settings),
         other => bail!("unknown experiment '{other}' (try one of {ALL_EXPERIMENTS:?})"),
     }
 }

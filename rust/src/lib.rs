@@ -22,6 +22,7 @@ pub mod pipeline;
 pub mod portfolio;
 pub mod quant;
 pub mod refine;
+pub mod resilience;
 pub mod runtime;
 pub mod sched;
 pub mod service;

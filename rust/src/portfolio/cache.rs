@@ -408,6 +408,36 @@ mod tests {
     }
 
     #[test]
+    fn faulty_retried_dispatch_cannot_poison_the_exact_tier() {
+        // the resilience scenario: a request solved cleanly populates
+        // the exact tier; a later faulty/retried dispatch of the SAME
+        // quantized instance produces a worse-energy solution and
+        // re-inserts it. The insert-only-if-better guard must keep the
+        // good solution — retried dispatches can add work, never degrade
+        // what the fleet already knows.
+        let cache = WarmStartCache::new(8);
+        let inst = glass(20, 12);
+        let good = solved(vec![-1; 12], -9.0);
+        cache.insert(&inst, &good);
+        // a degraded re-solve (e.g. stuck oscillators) lands higher
+        cache.insert(&inst, &solved(vec![1; 12], -2.0));
+        // and a retry burst re-inserts several bad candidates
+        for k in 0..3 {
+            cache.insert(&inst, &solved(vec![1; 12], -1.0 - k as f64));
+        }
+        match cache.lookup(&inst) {
+            CacheOutcome::Exact(hit) => {
+                assert_eq!(hit.energy, -9.0, "worse-energy reinsert poisoned the cache");
+                assert_eq!(hit.spins, good.spins);
+            }
+            other => panic!("expected exact hit, got {other:?}"),
+        }
+        let s = cache.stats();
+        assert_eq!(s.entries, 1, "reinserts must update in place, not duplicate");
+        assert_eq!(s.evictions, 0);
+    }
+
+    #[test]
     fn capacity_is_bounded_with_fifo_eviction() {
         let cache = WarmStartCache::new(2);
         let a = glass(10, 8);

@@ -239,6 +239,16 @@ impl SolverPortfolio {
             cfg.epsilon
         );
         let exact_max_n = cfg.exact_max_n.min(EXACT_HARD_CAP);
+        // the hardware fault model rides on the internal COBI device:
+        // under `[resilience] fault_enabled = true` the portfolio's cobi
+        // route degrades exactly like a standalone faulty device, and
+        // the bandit's energy-per-spin stats demote it organically
+        let mut cobi = CobiDevice::from_config(&settings.cobi, seed ^ 0xF0_1170, rt)?;
+        if settings.resilience.fault.enabled {
+            cobi.set_fault_model(crate::resilience::FaultModel::new(
+                &settings.resilience.fault,
+            ));
+        }
         Ok(Self {
             policy,
             static_backend,
@@ -246,7 +256,7 @@ impl SolverPortfolio {
             exact_max_n,
             latency_weight: cfg.latency_weight,
             cache_enabled: cfg.cache,
-            cobi: CobiDevice::from_config(&settings.cobi, seed ^ 0xF0_1170, rt)?,
+            cobi,
             tabu: TabuSolver::seeded(seed ^ 0x7AB),
             sa: SaSolver::seeded(seed ^ 0x5A),
             greedy: GreedyDescent::new(),
@@ -259,6 +269,15 @@ impl SolverPortfolio {
     /// The shared cache/metrics this portfolio feeds.
     pub fn shared(&self) -> &PortfolioShared {
         &self.shared
+    }
+
+    /// Point the internal COBI device's fault-injection counters at a
+    /// fleet-shared block (no-op without a fault model).
+    pub fn share_fault_counters(
+        &mut self,
+        counters: std::sync::Arc<crate::resilience::FaultCounters>,
+    ) {
+        self.cobi.share_fault_counters(counters);
     }
 
     /// Whether `b` may solve `sample` at all (array limits, enumeration
@@ -701,6 +720,38 @@ mod tests {
         assert_eq!(m.cache.exact_hits, 4);
         assert_eq!(m.cache.warm_hits, 4);
         pool.shutdown();
+    }
+
+    #[test]
+    fn faulty_cobi_degrades_the_bandit_quality_signal() {
+        // the demotion mechanism: a faulty device records worse
+        // energy-per-spin into its bandit cell than a clean one on the
+        // same workload, so the exploit choice steers away from it.
+        // Static-routed to cobi so every sample lands in the cobi cell.
+        let run = |faulty: bool| {
+            let mut s = portfolio_settings("static", "cobi", false);
+            if faulty {
+                s.resilience.fault.enabled = true;
+                s.resilience.fault.stuck_rate = 0.4;
+                s.resilience.fault.drift_rate = 0.2;
+            }
+            let mut p = SolverPortfolio::from_settings(&s, 9, None, None).unwrap();
+            for k in 0..12u64 {
+                let inst = quantized_glass(700 + k, 14);
+                p.solve_one(&inst, 4000 + k).unwrap();
+            }
+            p.shared()
+                .snapshot()
+                .stats
+                .cell(BackendKind::Cobi, 14)
+                .mean_energy_per_spin()
+        };
+        let clean = run(false);
+        let degraded = run(true);
+        assert!(
+            degraded > clean,
+            "faulty cobi quality signal {degraded} must be worse (higher) than clean {clean}"
+        );
     }
 
     #[test]

@@ -300,6 +300,104 @@ mod tests {
     }
 
     #[test]
+    fn quantize_into_saturates_exactly_at_the_precision_bounds() {
+        // Fixed(16) is the widest grid: grid_max = 2^15 - 1 = 32767 =
+        // i16::MAX for J and well inside i32 for h. Coefficients AT the
+        // instance max must land exactly on ±grid_max — never on
+        // ±2^(b-1) = ±32768, which would wrap the i16 storage — under
+        // every rounding scheme (stochastic rounding may try to round a
+        // float-error hair past the edge; the clamp must catch it
+        // BEFORE the integer cast).
+        use crate::ising::QuantIsing;
+        let mut ising = Ising::new(6);
+        ising.h[0] = 0.3; // max |h|: scale = grid / 0.3 is inexact in f32
+        ising.h[1] = -0.3;
+        ising.set_pair(2, 3, 0.3); // a J at the joint max too
+        ising.set_pair(4, 5, -0.3);
+        let mut out = QuantIsing::default();
+        for rounding in [
+            Rounding::Deterministic,
+            Rounding::Stoch5050,
+            Rounding::Stochastic,
+        ] {
+            let mut rng = Pcg32::seeded(17);
+            assert!(quantize_into(&ising, Precision::Fixed(16), rounding, &mut rng, &mut out));
+            // the scaled max is 32767 up to one f32 ulp of error, so the
+            // deterministic scheme lands exactly on the edge; stochastic
+            // schemes may resolve the sub-ulp fraction one step down but
+            // must NEVER clear the edge (the clamp runs before the
+            // integer cast, so ±32768 = i16 wraparound is unreachable)
+            match rounding {
+                Rounding::Deterministic => {
+                    assert_eq!(out.h[0], 32767, "max h must sit on the grid edge");
+                    assert_eq!(out.h[1], -32767, "grid is symmetric, not two's-complement");
+                    assert_eq!(out.jij(2, 3), 32767, "max J must sit on the grid edge");
+                    assert_eq!(out.jij(4, 5), -32767);
+                }
+                _ => {
+                    assert!(out.h[0] >= 32766 && out.h[0] <= 32767, "{rounding}: {}", out.h[0]);
+                    assert!(out.h[1] <= -32766 && out.h[1] >= -32767, "{rounding}: {}", out.h[1]);
+                    assert!(out.jij(2, 3) >= 32766 && out.jij(2, 3) <= 32767, "{rounding}");
+                    assert!(out.jij(4, 5) <= -32766 && out.jij(4, 5) >= -32767, "{rounding}");
+                }
+            }
+            for i in 0..6 {
+                assert!(out.h[i].abs() <= 32767, "{rounding}: h[{i}] off-grid");
+                for j in 0..6 {
+                    // i16::MIN (-32768) is representable but off-grid:
+                    // saturation must never produce it
+                    assert!(out.jij(i, j) > i16::MIN as i32, "{rounding}: J[{i},{j}] wrapped");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stochastic_quantize_into_is_deterministic_on_a_reused_scratch_buffer() {
+        // two consecutive quantize_into calls on the SAME scratch buffer
+        // with identically-seeded RNGs must agree exactly — buffer reuse
+        // (including shrinking from a larger instance) can never leak
+        // stale coefficients or perturb the draw stream
+        use crate::ising::QuantIsing;
+        let build = |seed: u64, n: usize| {
+            let mut rng = Pcg32::seeded(seed);
+            let mut ising = Ising::new(n);
+            for i in 0..n {
+                ising.h[i] = rng.range_f32(-5.0, 5.0);
+                for j in (i + 1)..n {
+                    ising.set_pair(i, j, rng.range_f32(-2.0, 2.0));
+                }
+            }
+            ising
+        };
+        let big = build(1, 14);
+        let small = build(2, 9);
+        let mut reused = QuantIsing::default();
+        // grow the buffer with the big instance first...
+        let mut rng = Pcg32::seeded(5);
+        assert!(quantize_into(&big, Precision::CobiInt, Rounding::Stochastic, &mut rng, &mut reused));
+        // ...then quantize the small one into the same (dirty) buffer
+        let mut rng_a = Pcg32::seeded(9);
+        assert!(quantize_into(&small, Precision::CobiInt, Rounding::Stochastic, &mut rng_a, &mut reused));
+        let reused_h = reused.h.clone();
+        let reused_j = reused.j.clone();
+
+        let mut fresh = QuantIsing::default();
+        let mut rng_b = Pcg32::seeded(9);
+        assert!(quantize_into(&small, Precision::CobiInt, Rounding::Stochastic, &mut rng_b, &mut fresh));
+        assert_eq!(reused.n, 9);
+        assert_eq!(reused_h, fresh.h, "stale h leaked through buffer reuse");
+        assert_eq!(reused_j, fresh.j, "stale J leaked through buffer reuse");
+        // the RNGs end in the same state: the draw streams were identical
+        assert_eq!(rng_a.next_u64(), rng_b.next_u64());
+        // and an immediate second call on the same buffer replays exactly
+        let mut rng_c = Pcg32::seeded(9);
+        assert!(quantize_into(&small, Precision::CobiInt, Rounding::Stochastic, &mut rng_c, &mut reused));
+        assert_eq!(reused.h, fresh.h);
+        assert_eq!(reused.j, fresh.j);
+    }
+
+    #[test]
     fn quantize_into_declines_fp_without_consuming_rng() {
         use crate::ising::QuantIsing;
         let mut ising = Ising::new(4);

@@ -1,0 +1,226 @@
+//! Startup calibration: probe a (possibly faulty) solver with
+//! known-ground-truth k-of-n instances and derive a per-device
+//! replication factor.
+//!
+//! The probe set is deterministic: seeded facility-dispersion k-of-n
+//! instances (the paper's claimed generalization workload,
+//! `ising::kofn`), quantized to the COBI grid, small enough that
+//! [`ising_ground_exhaustive`] gives the exact ground energy. Each probe
+//! is dispatched through the seeded pool path
+//! ([`PoolSolver::solve_groups`]) with a fixed probe seed, so
+//! calibration (a) is byte-reproducible and (b) never touches the
+//! device-global RNG — requests served after calibration are
+//! byte-identical to requests served without it.
+//!
+//! The measured single-solve success probability `p` (energy within 10%
+//! of ground, the same band the device quality tests use) maps to the
+//! smallest replication factor `r` with `1 - (1-p)^r >= target`, clamped
+//! to `[1, max_replication]` — an unhealthy device automatically earns
+//! more replicas, a healthy one stays at 1.
+
+use anyhow::Result;
+
+use crate::cobi::SeededGroup;
+use crate::config::ResilienceConfig;
+use crate::ising::kofn::facility_dispersion;
+use crate::ising::Ising;
+use crate::quant::{quantize, Precision, Rounding};
+use crate::sched::pool::PoolSolver;
+use crate::solvers::exact::ising_ground_exhaustive;
+use crate::util::rng::Pcg32;
+
+/// Relative energy gap under which a probe solve counts as a success
+/// (mirrors the device quality band in `cobi::device` tests).
+const SUCCESS_GAP: f64 = 0.10;
+/// Probe instance size: large enough to be nontrivial, small enough for
+/// exhaustive ground-truth enumeration.
+const PROBE_N: usize = 12;
+/// Probe selection cardinality.
+const PROBE_K: usize = 4;
+/// Base seed of the probe stream (instances and request seeds).
+const PROBE_SEED: u64 = 0xCA11_B8A7E;
+
+/// One device's calibration result.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Calibration {
+    /// Probes dispatched.
+    pub probes: usize,
+    /// Fraction of probes whose energy landed within the success band.
+    pub success_rate: f64,
+    /// Mean relative energy gap to ground truth across probes.
+    pub mean_gap: f64,
+    /// Replication factor chosen for the measured success rate.
+    pub replication: usize,
+}
+
+/// The startup prober (see module docs).
+#[derive(Debug, Clone)]
+pub struct Calibrator {
+    /// Probe instances to dispatch.
+    pub probes: usize,
+    /// Target per-request success probability after replication.
+    pub target: f64,
+    /// Ceiling on the chosen replication factor.
+    pub max_replication: usize,
+}
+
+impl Calibrator {
+    /// Calibrator from the `[resilience]` settings.
+    pub fn from_config(cfg: &ResilienceConfig) -> Self {
+        Self {
+            probes: cfg.calibration_probes.max(1),
+            target: cfg.calibration_target.clamp(0.0, 0.999_999),
+            max_replication: cfg.max_replication.max(1),
+        }
+    }
+
+    /// One deterministic probe instance (quantized to the COBI grid).
+    fn probe_instance(&self, k: usize) -> Ising {
+        let mut rng = Pcg32::seeded(PROBE_SEED.wrapping_add(k as u64));
+        let problem = facility_dispersion(&mut rng, PROBE_N, PROBE_K);
+        let ising = problem.formulate(true);
+        quantize(&ising, Precision::CobiInt, Rounding::Deterministic, &mut rng)
+    }
+
+    /// Probe `solver` and derive its replication factor.
+    pub fn calibrate(&self, solver: &mut dyn PoolSolver) -> Result<Calibration> {
+        let mut successes = 0usize;
+        let mut gap_sum = 0.0f64;
+        for k in 0..self.probes {
+            let inst = self.probe_instance(k);
+            let (ground, _, _) = ising_ground_exhaustive(&inst);
+            let solved = solver
+                .solve_groups(&[SeededGroup {
+                    instances: std::slice::from_ref(&inst),
+                    seed: PROBE_SEED ^ ((k as u64) << 17),
+                }])?
+                .pop()
+                .expect("one probe group in, one out")
+                .pop()
+                .expect("one probe instance in, one out");
+            // verify in software: calibration must not trust the device
+            let energy = inst.energy(&solved.spins);
+            let gap = (energy - ground) / ground.abs().max(1e-9);
+            gap_sum += gap.max(0.0);
+            if gap < SUCCESS_GAP {
+                successes += 1;
+            }
+        }
+        let success_rate = successes as f64 / self.probes as f64;
+        Ok(Calibration {
+            probes: self.probes,
+            success_rate,
+            mean_gap: gap_sum / self.probes as f64,
+            replication: self.replication_for(success_rate),
+        })
+    }
+
+    /// Smallest replication `r` with `1 - (1-p)^r >= target`, clamped to
+    /// `[1, max_replication]`.
+    pub fn replication_for(&self, p: f64) -> usize {
+        if p >= self.target {
+            return 1;
+        }
+        if p <= 0.0 {
+            return self.max_replication;
+        }
+        let mut miss = 1.0f64;
+        for r in 1..=self.max_replication {
+            miss *= 1.0 - p;
+            if 1.0 - miss >= self.target {
+                return r;
+            }
+        }
+        self.max_replication
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::tabu::TabuSolver;
+    use crate::solvers::SolveResult;
+
+    /// A solver that always answers with a fixed (bad) configuration.
+    struct Stubborn;
+
+    impl PoolSolver for Stubborn {
+        fn name(&self) -> &'static str {
+            "stubborn"
+        }
+
+        fn solve_groups(
+            &mut self,
+            groups: &[SeededGroup<'_>],
+        ) -> Result<Vec<Vec<SolveResult>>> {
+            Ok(groups
+                .iter()
+                .map(|g| {
+                    g.instances
+                        .iter()
+                        .map(|i| {
+                            let spins = vec![1i8; i.n];
+                            SolveResult {
+                                spins: spins.clone(),
+                                energy: i.energy(&spins),
+                            }
+                        })
+                        .collect()
+                })
+                .collect())
+        }
+    }
+
+    fn calibrator() -> Calibrator {
+        Calibrator {
+            probes: 6,
+            target: 0.9,
+            max_replication: 5,
+        }
+    }
+
+    #[test]
+    fn healthy_software_solver_calibrates_to_replication_one() {
+        let mut tabu = TabuSolver::seeded(1);
+        let cal = calibrator().calibrate(&mut tabu).unwrap();
+        assert_eq!(cal.probes, 6);
+        assert!(cal.success_rate > 0.9, "tabu success {}", cal.success_rate);
+        assert_eq!(cal.replication, 1);
+        assert!(cal.mean_gap < 0.05, "tabu mean gap {}", cal.mean_gap);
+    }
+
+    #[test]
+    fn hopeless_solver_earns_max_replication() {
+        // the all-ones configuration is (essentially) never within 10% of
+        // ground on a dispersion instance: success rate 0 → max replicas
+        let cal = calibrator().calibrate(&mut Stubborn).unwrap();
+        assert!(cal.success_rate < 0.5);
+        assert!(cal.replication > 1);
+    }
+
+    #[test]
+    fn calibration_is_deterministic() {
+        let run = || {
+            let mut tabu = TabuSolver::seeded(1);
+            calibrator().calibrate(&mut tabu).unwrap()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn replication_curve_is_monotone_and_clamped() {
+        let c = calibrator();
+        assert_eq!(c.replication_for(1.0), 1);
+        assert_eq!(c.replication_for(0.95), 1);
+        assert_eq!(c.replication_for(0.0), 5);
+        // 1-(1-0.6)^2 = 0.84 < 0.9; 1-(1-0.6)^3 = 0.936 >= 0.9
+        assert_eq!(c.replication_for(0.6), 3);
+        let mut last = usize::MAX;
+        for p in [0.1, 0.3, 0.5, 0.7, 0.9, 0.99] {
+            let r = c.replication_for(p);
+            assert!(r <= last, "replication must not grow with success rate");
+            assert!((1..=5).contains(&r));
+            last = r;
+        }
+    }
+}

@@ -1,0 +1,415 @@
+//! Calibrated COBI non-idealities: a deterministic, seed-derived fault
+//! model attached to [`CobiDevice`](crate::cobi::CobiDevice).
+//!
+//! Real CMOS coupled-oscillator arrays are not the clean integer-coupled
+//! machine the rest of the repo simulates: couplings drift with
+//! temperature and aging, individual oscillators latch ("stuck-at"
+//! nodes), per-row/column DAC lines carry gain mismatch, and supply
+//! transients inject burst phase noise. This module injects all four,
+//! with two hard rules (DESIGN.md decision #16):
+//!
+//! 1. **Every fault draw is seed-derived.** A solve's fault realization
+//!    comes from a dedicated RNG stream keyed by
+//!    `(request seed, fault seed)` — never from wall-clock, device
+//!    identity, or dispatch order — so a faulty run is byte-reproducible
+//!    across pool shapes and co-batching, exactly like a clean run.
+//! 2. **The clean path is untouched.** With no fault model attached (the
+//!    default) the device performs the identical RNG draws and identical
+//!    arithmetic as before; with a model attached but every rate at
+//!    zero, the fault stream is created but never drawn from, and the
+//!    annealed instance is a value-identical copy — pinned by tests.
+//!
+//! Fault stages, applied in a fixed order per solve (DAC gains → drift →
+//! stuck draws → burst window):
+//!
+//! * **DAC gain mismatch** — line `i` programs with gain
+//!   `g_i = 1 + dac_mismatch · u_i`; `h_i` scales by `g_i`, `J_ij` by
+//!   `g_i · g_j` (symmetric by construction).
+//! * **Coupling drift** — each unordered pair drifts with probability
+//!   `drift_rate` by `1 + drift_amp · u`, mirrored to both triangles.
+//! * **Stuck oscillators** — each spin is stuck at a random sign with
+//!   probability `stuck_rate`; the readout is overridden after the
+//!   anneal and the energy recomputed on the CLEAN instance, so reported
+//!   energies always match the returned spins.
+//! * **Burst phase noise** — with probability `burst_rate` one window of
+//!   anneal steps has its phase noise amplified by `burst_amp`
+//!   (multiplicative, so it consumes no extra noise draws).
+//!
+//! Fault counters are shared behind an `Arc` so a device pool can report
+//! fleet-wide injection totals through `::STATS::`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::cobi::ANNEAL_STEPS;
+use crate::config::FaultConfig;
+use crate::ising::Ising;
+use crate::util::rng::Pcg32;
+
+/// RNG stream id for fault draws — parallel to the device's phase/noise
+/// stream, so attaching a fault model never shifts the clean draws.
+pub const FAULT_STREAM: u64 = 0xFA_0175;
+
+/// Fleet-shared fault-injection counters (atomics: bumped on the device
+/// hot path without a lock).
+#[derive(Debug, Default)]
+pub struct FaultCounters {
+    /// Solves that had at least one fault injected.
+    pub faulty_solves: AtomicU64,
+    /// Stuck-at oscillator overrides applied.
+    pub stuck_spins: AtomicU64,
+    /// Couplings perturbed by drift.
+    pub drifted_couplings: AtomicU64,
+    /// DAC lines with nonzero gain mismatch applied.
+    pub dac_lines: AtomicU64,
+    /// Burst-noise windows injected.
+    pub bursts: AtomicU64,
+}
+
+/// Plain snapshot of [`FaultCounters`] (for metrics blocks).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Solves that had at least one fault injected.
+    pub faulty_solves: u64,
+    /// Stuck-at oscillator overrides applied.
+    pub stuck_spins: u64,
+    /// Couplings perturbed by drift.
+    pub drifted_couplings: u64,
+    /// DAC lines with nonzero gain mismatch applied.
+    pub dac_lines: u64,
+    /// Burst-noise windows injected.
+    pub bursts: u64,
+}
+
+impl FaultCounters {
+    /// Counter snapshot.
+    pub fn snapshot(&self) -> FaultStats {
+        FaultStats {
+            faulty_solves: self.faulty_solves.load(Ordering::Relaxed),
+            stuck_spins: self.stuck_spins.load(Ordering::Relaxed),
+            drifted_couplings: self.drifted_couplings.load(Ordering::Relaxed),
+            dac_lines: self.dac_lines.load(Ordering::Relaxed),
+            bursts: self.bursts.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl FaultStats {
+    /// One-line counter fragment for service reports.
+    pub fn report(&self) -> String {
+        format!(
+            "faults solves={} stuck={} drift={} dac={} bursts={}",
+            self.faulty_solves,
+            self.stuck_spins,
+            self.drifted_couplings,
+            self.dac_lines,
+            self.bursts,
+        )
+    }
+
+    /// True when any fault was ever injected.
+    pub fn any(&self) -> bool {
+        self.faulty_solves > 0
+    }
+}
+
+/// One solve's fault realization (drawn by
+/// [`FaultModel::perturb_into`], consumed by the device paths).
+#[derive(Debug, Clone, Default)]
+pub struct FaultDraw {
+    /// Stuck oscillators: `(spin index, stuck sign)`, ascending indices.
+    pub stuck: Vec<(usize, i8)>,
+    /// Burst window over the anneal steps: `(start_step, end_step,
+    /// amplification)`; noise values in the window are multiplied by the
+    /// factor.
+    pub burst: Option<(usize, usize, f32)>,
+}
+
+impl FaultDraw {
+    /// Override stuck oscillators in a readout. Callers must recompute
+    /// the energy on the clean instance afterwards.
+    pub fn apply_stuck(&self, spins: &mut [i8]) {
+        for &(k, s) in &self.stuck {
+            if k < spins.len() {
+                spins[k] = s;
+            }
+        }
+    }
+
+    /// Amplify the burst window in a flat `[steps × n]` noise tensor.
+    pub fn apply_burst(&self, noise: &mut [f32], n: usize) {
+        if let Some((start, end, amp)) = self.burst {
+            let lo = (start * n).min(noise.len());
+            let hi = (end * n).min(noise.len());
+            for v in &mut noise[lo..hi] {
+                *v *= amp;
+            }
+        }
+    }
+}
+
+/// The device-attached fault model (see module docs). Holds the fault
+/// configuration and the (shareable) injection counters; all randomness
+/// comes from caller-provided, request-seeded RNGs.
+#[derive(Debug, Clone)]
+pub struct FaultModel {
+    cfg: FaultConfig,
+    counters: Arc<FaultCounters>,
+}
+
+impl FaultModel {
+    /// Model with private counters.
+    pub fn new(cfg: &FaultConfig) -> Self {
+        Self {
+            cfg: cfg.clone(),
+            counters: Arc::new(FaultCounters::default()),
+        }
+    }
+
+    /// Replace the counter block (lets a pool share one fleet-wide set).
+    pub fn set_counters(&mut self, counters: Arc<FaultCounters>) {
+        self.counters = counters;
+    }
+
+    /// The model's counter block.
+    pub fn counters(&self) -> &Arc<FaultCounters> {
+        &self.counters
+    }
+
+    /// The model's configuration.
+    pub fn config(&self) -> &FaultConfig {
+        &self.cfg
+    }
+
+    /// The fault RNG for a request seed: a parallel stream keyed by
+    /// `(request seed XOR fault seed)` so fault draws are reproducible
+    /// per request and never perturb the device's phase/noise stream.
+    pub fn rng_for(&self, request_seed: u64) -> Pcg32 {
+        Pcg32::new(request_seed ^ self.cfg.seed, FAULT_STREAM)
+    }
+
+    /// Draw one solve's fault realization and write the perturbed
+    /// instance into `out` (resized and fully overwritten). Returns the
+    /// post-anneal part of the realization (stuck overrides + burst
+    /// window). Draw order is fixed (gains, drift, stuck, burst) and a
+    /// stage with a zero rate/amplitude consumes no draws.
+    pub fn perturb_into(&self, inst: &Ising, rng: &mut Pcg32, out: &mut Ising) -> FaultDraw {
+        let n = inst.n;
+        out.n = n;
+        out.h.clear();
+        out.h.extend_from_slice(&inst.h);
+        out.j.clear();
+        out.j.extend_from_slice(&inst.j);
+
+        let mut faulted = false;
+        let mut dac_lines = 0u64;
+        // NOTE on allocation: the fault path deliberately allocates per
+        // solve (this gains vector, the stuck list, and — on batch
+        // paths — one perturbed instance per prepared slot). Degraded-
+        // hardware mode is a resilience/diagnostic configuration, and
+        // the O(n²) coefficient copy above dominates anyway; the
+        // zero-alloc contract (DESIGN decision #13) covers the CLEAN
+        // refinement hot path, which never enters here.
+        // per-line DAC gain mismatch: h_i *= g_i, J_ij *= g_i * g_j
+        if self.cfg.dac_mismatch > 0.0 {
+            let mut gains = vec![1.0f32; n];
+            for (i, g) in gains.iter_mut().enumerate() {
+                let u = rng.range_f32(-1.0, 1.0);
+                *g = 1.0 + self.cfg.dac_mismatch * u;
+                if *g != 1.0 {
+                    dac_lines += 1;
+                }
+                out.h[i] *= *g;
+            }
+            for i in 0..n {
+                for j in 0..n {
+                    out.j[i * n + j] *= gains[i] * gains[j];
+                }
+            }
+            faulted |= dac_lines > 0;
+        }
+
+        // multiplicative coupling drift, mirrored per unordered pair
+        let mut drifted = 0u64;
+        if self.cfg.drift_rate > 0.0 {
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    if rng.f32() < self.cfg.drift_rate {
+                        let factor = 1.0 + self.cfg.drift_amp * rng.range_f32(-1.0, 1.0);
+                        out.j[i * n + j] *= factor;
+                        out.j[j * n + i] = out.j[i * n + j];
+                        drifted += 1;
+                    }
+                }
+            }
+            faulted |= drifted > 0;
+        }
+
+        // stuck-at oscillators
+        let mut stuck = Vec::new();
+        if self.cfg.stuck_rate > 0.0 {
+            for k in 0..n {
+                if rng.f32() < self.cfg.stuck_rate {
+                    let sign = if rng.bernoulli(0.5) { 1i8 } else { -1i8 };
+                    stuck.push((k, sign));
+                }
+            }
+            faulted |= !stuck.is_empty();
+        }
+
+        // burst phase noise over a window of anneal steps
+        let mut burst = None;
+        if self.cfg.burst_rate > 0.0 && rng.f32() < self.cfg.burst_rate {
+            let window = (ANNEAL_STEPS / 8).max(1);
+            let start = rng.below(ANNEAL_STEPS as u32) as usize;
+            let end = (start + window).min(ANNEAL_STEPS);
+            burst = Some((start, end, self.cfg.burst_amp));
+            faulted = true;
+        }
+
+        let c = &self.counters;
+        if faulted {
+            c.faulty_solves.fetch_add(1, Ordering::Relaxed);
+        }
+        c.stuck_spins.fetch_add(stuck.len() as u64, Ordering::Relaxed);
+        c.drifted_couplings.fetch_add(drifted, Ordering::Relaxed);
+        c.dac_lines.fetch_add(dac_lines, Ordering::Relaxed);
+        if burst.is_some() {
+            c.bursts.fetch_add(1, Ordering::Relaxed);
+        }
+
+        FaultDraw { stuck, burst }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn glass(seed: u64, n: usize) -> Ising {
+        let mut rng = Pcg32::seeded(seed);
+        let mut ising = Ising::new(n);
+        for i in 0..n {
+            ising.h[i] = rng.range_f32(-3.0, 3.0);
+            for j in (i + 1)..n {
+                ising.set_pair(i, j, rng.range_f32(-1.0, 1.0));
+            }
+        }
+        ising
+    }
+
+    fn heavy() -> FaultConfig {
+        FaultConfig {
+            enabled: true,
+            stuck_rate: 0.5,
+            drift_rate: 0.5,
+            drift_amp: 0.3,
+            dac_mismatch: 0.1,
+            burst_rate: 1.0,
+            burst_amp: 4.0,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn draws_are_seed_deterministic() {
+        let fm = FaultModel::new(&heavy());
+        let inst = glass(1, 12);
+        let mut out_a = Ising::new(0);
+        let mut out_b = Ising::new(0);
+        let a = fm.perturb_into(&inst, &mut fm.rng_for(42), &mut out_a);
+        let b = fm.perturb_into(&inst, &mut fm.rng_for(42), &mut out_b);
+        assert_eq!(out_a, out_b);
+        assert_eq!(a.stuck, b.stuck);
+        assert_eq!(a.burst, b.burst);
+        // a different request seed realizes different faults
+        let mut out_c = Ising::new(0);
+        let c = fm.perturb_into(&inst, &mut fm.rng_for(43), &mut out_c);
+        assert!(out_a != out_c || a.stuck != c.stuck || a.burst != c.burst);
+    }
+
+    #[test]
+    fn zero_rates_are_a_value_identical_copy_with_no_draws() {
+        let cfg = FaultConfig {
+            enabled: true,
+            stuck_rate: 0.0,
+            drift_rate: 0.0,
+            drift_amp: 0.0,
+            dac_mismatch: 0.0,
+            burst_rate: 0.0,
+            burst_amp: 1.0,
+            seed: 9,
+        };
+        let fm = FaultModel::new(&cfg);
+        let inst = glass(2, 10);
+        let mut rng = fm.rng_for(5);
+        let probe = rng.clone().next_u64();
+        let mut out = Ising::new(0);
+        let draw = fm.perturb_into(&inst, &mut rng, &mut out);
+        assert_eq!(out, inst, "zero rates must copy the instance untouched");
+        assert!(draw.stuck.is_empty());
+        assert!(draw.burst.is_none());
+        assert_eq!(rng.next_u64(), probe, "zero rates must consume no draws");
+        assert_eq!(fm.counters().snapshot(), FaultStats::default());
+    }
+
+    #[test]
+    fn perturbed_instances_stay_symmetric_with_zero_diagonal() {
+        let fm = FaultModel::new(&heavy());
+        let inst = glass(3, 14);
+        let mut out = Ising::new(0);
+        fm.perturb_into(&inst, &mut fm.rng_for(11), &mut out);
+        assert_eq!(out.n, 14);
+        for i in 0..14 {
+            assert_eq!(out.jij(i, i), 0.0, "diagonal perturbed at {i}");
+            for j in 0..14 {
+                assert_eq!(out.jij(i, j), out.jij(j, i), "asymmetric ({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn heavy_faults_perturb_and_count() {
+        let fm = FaultModel::new(&heavy());
+        let inst = glass(4, 16);
+        let mut out = Ising::new(0);
+        let draw = fm.perturb_into(&inst, &mut fm.rng_for(1), &mut out);
+        assert_ne!(out, inst, "heavy fault rates must perturb the instance");
+        assert!(draw.burst.is_some(), "burst_rate = 1 must always fire");
+        let s = fm.counters().snapshot();
+        assert!(s.any());
+        assert!(s.drifted_couplings > 0);
+        assert!(s.dac_lines > 0);
+        assert_eq!(s.bursts, 1);
+        assert!(s.report().contains("faults solves=1"));
+    }
+
+    #[test]
+    fn stuck_overrides_and_burst_windows_apply() {
+        let draw = FaultDraw {
+            stuck: vec![(0, -1), (3, 1)],
+            burst: Some((1, 2, 4.0)),
+        };
+        let mut spins = vec![1i8, 1, 1, -1, 1];
+        draw.apply_stuck(&mut spins);
+        assert_eq!(spins, vec![-1, 1, 1, 1, 1]);
+        // 3 steps x 2 oscillators: only step 1's pair is amplified
+        let mut noise = vec![1.0f32; 6];
+        draw.apply_burst(&mut noise, 2);
+        assert_eq!(noise, vec![1.0, 1.0, 4.0, 4.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn shared_counters_aggregate_across_models() {
+        let shared = Arc::new(FaultCounters::default());
+        let mut a = FaultModel::new(&heavy());
+        let mut b = FaultModel::new(&heavy());
+        a.set_counters(shared.clone());
+        b.set_counters(shared.clone());
+        let inst = glass(5, 10);
+        let mut out = Ising::new(0);
+        a.perturb_into(&inst, &mut a.rng_for(1), &mut out);
+        b.perturb_into(&inst, &mut b.rng_for(2), &mut out);
+        assert_eq!(shared.snapshot().faulty_solves, 2);
+    }
+}

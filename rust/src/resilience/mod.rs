@@ -1,0 +1,907 @@
+//! Hardware fault model + resilience layer: keep serving correct
+//! summaries on degraded COBI hardware.
+//!
+//! Three layers (DESIGN.md §8):
+//!
+//! * [`fault`] — calibrated, seed-derived COBI non-idealities
+//!   (per-coupling drift, stuck oscillators, DAC gain mismatch, burst
+//!   phase noise) attached to
+//!   [`CobiDevice`](crate::cobi::CobiDevice) behind `[resilience]`
+//!   `fault_*` config, default off. Every fault draw derives from the
+//!   request seed, so faulty runs are byte-reproducible across pool
+//!   shapes (decision #16).
+//! * [`ResilientSolver`] — wraps any [`PoolSolver`] (the COBI device,
+//!   tabu, SA, or the whole portfolio) with **replicated solves +
+//!   energy-verified voting** (the winner is the verified-energy
+//!   minimum; exact ties break to the lowest replica index — decision
+//!   #17), a **software verify** step (recompute each replica's energy;
+//!   a replica whose report mismatches its spins is rejected),
+//!   **verify-and-retry** (fresh-seed re-dispatch when a dispatch fails
+//!   or verification rejects everything, escalating to a software tabu
+//!   fallback after `retries` attempts), and deterministic greedy
+//!   **spin-repair** of the winner (stuck-node damage is a few flips
+//!   from a local minimum; the selection-level
+//!   `refine::repair_selection_in_place` then restores cardinality
+//!   downstream exactly as in the clean path).
+//! * [`Calibrator`] — probes each device at startup with
+//!   known-ground-truth k-of-n instances and sets the replication
+//!   factor per device from the measured success rate.
+//!
+//! Wiring: `sched::pool::build_solver` wraps every pool device when
+//! `[resilience] enabled = true`, so the device pool, stream sessions
+//! and the portfolio all inherit the layer; fleet-wide counters
+//! (replicas, vote disagreements, verify failures, retries,
+//! escalations, repairs, fault injections) surface through
+//! [`ResilienceMetrics`] in `ServiceMetrics` and `::STATS::`.
+
+pub mod calibrate;
+pub mod fault;
+
+pub use calibrate::{Calibration, Calibrator};
+pub use fault::{FaultCounters, FaultDraw, FaultModel, FaultStats};
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::{ensure, Result};
+
+use crate::cobi::SeededGroup;
+use crate::config::ResilienceConfig;
+use crate::ising::Ising;
+use crate::sched::pool::PoolSolver;
+use crate::solvers::greedy::GreedyDescent;
+use crate::solvers::tabu::TabuSolver;
+use crate::solvers::{IsingSolver, SolveResult};
+use crate::util::rng::Pcg32;
+
+/// Tolerance for the software energy verification: a replica whose
+/// reported energy differs from its recomputed energy by more than this
+/// is rejected (quantized instances produce exactly representable
+/// energies, so honest reports match to well under this bound).
+const VERIFY_EPS: f64 = 1e-6;
+/// Salt offsetting per-instance verify-retry seeds away from the replica
+/// seed indices.
+const RETRY_SALT: u64 = 0x1000_0000;
+/// Salt offsetting escalation-fallback seeds away from everything else.
+const ESCALATE_SALT: u64 = 0x2000_0000;
+/// RNG stream id for the unseeded [`IsingSolver`] adapter's seed draws.
+const ADAPTER_SEED_STREAM: u64 = 0x2E51_1E57;
+
+/// Derive the seed of replica / retry `k` from a request seed.
+/// `replica_seed(s, 0) == s`, so replication 1 dispatches the exact
+/// request the raw solver would see (the passthrough property pinned by
+/// tests).
+pub fn replica_seed(seed: u64, k: u64) -> u64 {
+    if k == 0 {
+        return seed;
+    }
+    let mut z = seed ^ k.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z ^ (z >> 31)
+}
+
+/// Pick the vote winner among verified replica energies (replica order):
+/// lowest energy wins, exact ties break to the lowest index (strict `<`
+/// keeps the incumbent — decision #17).
+pub(crate) fn vote_winner(energies: &[f64]) -> usize {
+    debug_assert!(!energies.is_empty());
+    let mut best = 0usize;
+    for (k, &e) in energies.iter().enumerate().skip(1) {
+        if e < energies[best] {
+            best = k;
+        }
+    }
+    best
+}
+
+/// Fleet-wide resilience counters, snapshotted into `ServiceMetrics`.
+#[derive(Debug, Clone, Default)]
+pub struct ResilienceMetrics {
+    /// Solve groups served by resilient solvers.
+    pub requests: u64,
+    /// Inner replica solves dispatched (instances × replicas, including
+    /// retries).
+    pub replica_solves: u64,
+    /// Instances whose replicas disagreed on the spin configuration.
+    pub vote_disagreements: u64,
+    /// Replica results rejected by the software energy verification.
+    pub verify_failures: u64,
+    /// Fresh-seed re-dispatches (failed dispatches or all-rejected
+    /// verification).
+    pub retries: u64,
+    /// Instances escalated to the software fallback after exhausting
+    /// retries.
+    pub escalations: u64,
+    /// Vote winners improved by the greedy spin-repair.
+    pub repairs: u64,
+    /// Per-device startup calibrations, in device construction order.
+    pub calibrations: Vec<Calibration>,
+    /// Fault-injection counters (filled at snapshot time).
+    pub faults: FaultStats,
+}
+
+impl ResilienceMetrics {
+    /// One-line report fragment for service reports and `::STATS::`.
+    pub fn report(&self) -> String {
+        let mut out = format!(
+            "resilience: requests={} replicas={} disagree={} verify_fail={} \
+             retries={} escalations={} repairs={}",
+            self.requests,
+            self.replica_solves,
+            self.vote_disagreements,
+            self.verify_failures,
+            self.retries,
+            self.escalations,
+            self.repairs,
+        );
+        if !self.calibrations.is_empty() {
+            out.push_str(" cal=[");
+            for (i, c) in self.calibrations.iter().enumerate() {
+                if i > 0 {
+                    out.push(' ');
+                }
+                out.push_str(&format!("p={:.2}:r={}", c.success_rate, c.replication));
+            }
+            out.push(']');
+        }
+        if self.faults.any() {
+            out.push_str(" | ");
+            out.push_str(&self.faults.report());
+        }
+        out
+    }
+}
+
+/// The state shared by every resilient solver in one pool: the combined
+/// counter block plus the fleet-wide fault-injection counters (handed to
+/// each device's [`FaultModel`]).
+#[derive(Clone, Default)]
+pub struct ResilienceShared {
+    /// Fleet-shared resilience counters.
+    pub metrics: Arc<Mutex<ResilienceMetrics>>,
+    /// Fleet-shared fault-injection counters.
+    pub faults: Arc<FaultCounters>,
+}
+
+impl ResilienceShared {
+    /// Fresh shared state (one per `DevicePool`).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Counter snapshot with current fault counters merged in.
+    pub fn snapshot(&self) -> ResilienceMetrics {
+        let mut m = self.metrics.lock().unwrap().clone();
+        m.faults = self.faults.snapshot();
+        m
+    }
+}
+
+/// Locally accumulated counter deltas, committed once per dispatch.
+#[derive(Default)]
+struct Delta {
+    requests: u64,
+    replica_solves: u64,
+    vote_disagreements: u64,
+    verify_failures: u64,
+    retries: u64,
+    escalations: u64,
+    repairs: u64,
+}
+
+/// Replication + voting + verify-and-retry around any pool solver (see
+/// module docs).
+pub struct ResilientSolver {
+    inner: Box<dyn PoolSolver>,
+    fallback: TabuSolver,
+    repairer: GreedyDescent,
+    cfg: ResilienceConfig,
+    replication: usize,
+    shared: ResilienceShared,
+}
+
+impl ResilientSolver {
+    /// Wrap `inner` per `cfg`, feeding fleet counters in `shared`.
+    pub fn new(
+        inner: Box<dyn PoolSolver>,
+        cfg: &ResilienceConfig,
+        shared: ResilienceShared,
+    ) -> Self {
+        Self {
+            inner,
+            fallback: TabuSolver::seeded(0),
+            repairer: GreedyDescent::new(),
+            replication: cfg.replication.clamp(1, cfg.max_replication.max(1)),
+            cfg: cfg.clone(),
+            shared,
+        }
+    }
+
+    /// The wrapped solver (calibration probes go through here).
+    pub fn inner_mut(&mut self) -> &mut dyn PoolSolver {
+        self.inner.as_mut()
+    }
+
+    /// Current replication factor.
+    pub fn replication(&self) -> usize {
+        self.replication
+    }
+
+    /// Override the replication factor (clamped to `[1, max_replication]`).
+    pub fn set_replication(&mut self, r: usize) {
+        self.replication = r.clamp(1, self.cfg.max_replication.max(1));
+    }
+
+    /// Probe the wrapped solver with the startup [`Calibrator`], adopt
+    /// the measured replication factor, and record the calibration in
+    /// the shared metrics.
+    pub fn calibrate(&mut self) -> Result<Calibration> {
+        let cal = Calibrator::from_config(&self.cfg).calibrate(self.inner.as_mut())?;
+        self.set_replication(cal.replication);
+        self.shared.metrics.lock().unwrap().calibrations.push(cal);
+        Ok(cal)
+    }
+
+    /// Escalation: solve one instance on the deterministic software
+    /// fallback, seeded from the request.
+    fn escalate(&mut self, inst: &Ising, seed: u64, i: usize, delta: &mut Delta) -> SolveResult {
+        delta.escalations += 1;
+        self.fallback
+            .reseed(replica_seed(seed, ESCALATE_SALT ^ i as u64));
+        self.fallback.solve(inst)
+    }
+
+    /// Verified energy of a replica result, or `None` when verification
+    /// rejects it.
+    fn verified_energy(&self, inst: &Ising, r: &SolveResult, delta: &mut Delta) -> Option<f64> {
+        if !self.cfg.verify {
+            return Some(r.energy);
+        }
+        let e = inst.energy(&r.spins);
+        if (e - r.energy).abs() > VERIFY_EPS {
+            delta.verify_failures += 1;
+            return None;
+        }
+        Some(e)
+    }
+
+    /// Serve one group: replicate, verify, vote, repair (see module
+    /// docs). `predispatched` carries this group's `replication` replica
+    /// results when the caller already dispatched them (the fused path
+    /// of [`PoolSolver::solve_groups`]); `None` dispatches here, with
+    /// fresh-seed retries on failure.
+    fn solve_group(
+        &mut self,
+        g: &SeededGroup<'_>,
+        predispatched: Option<&[Vec<SolveResult>]>,
+        delta: &mut Delta,
+    ) -> Result<Vec<SolveResult>> {
+        ensure!(!g.instances.is_empty(), "empty solve group");
+        delta.requests += 1;
+        let r = self.replication;
+        let count = g.instances.len();
+
+        let owned: Option<Vec<Vec<SolveResult>>>;
+        let replicas: Option<&[Vec<SolveResult>]> = match predispatched {
+            Some(p) => {
+                debug_assert_eq!(p.len(), r);
+                delta.replica_solves += (r * count) as u64;
+                Some(p)
+            }
+            None => {
+                // dispatch this group's replicas (all in one inner call,
+                // so they co-batch); a failed dispatch retries whole
+                // with fresh seeds, then the group escalates instance
+                // by instance
+                let mut got: Option<Vec<Vec<SolveResult>>> = None;
+                for attempt in 0..=self.cfg.retries {
+                    let groups: Vec<SeededGroup<'_>> = (0..r)
+                        .map(|k| SeededGroup {
+                            instances: g.instances,
+                            seed: replica_seed(g.seed, (attempt * r + k) as u64),
+                        })
+                        .collect();
+                    match self.inner.solve_groups(&groups) {
+                        Ok(v) => {
+                            delta.replica_solves += (r * count) as u64;
+                            got = Some(v);
+                            break;
+                        }
+                        Err(_) => delta.retries += 1,
+                    }
+                }
+                owned = got;
+                owned.as_deref()
+            }
+        };
+        let Some(replicas) = replicas else {
+            // the inner solver cannot serve this group at all (e.g. an
+            // unprogrammable instance): the software fallback can
+            return Ok(g
+                .instances
+                .iter()
+                .enumerate()
+                .map(|(i, inst)| self.escalate(inst, g.seed, i, delta))
+                .collect());
+        };
+
+        let mut out = Vec::with_capacity(count);
+        for (i, inst) in g.instances.iter().enumerate() {
+            // verified candidates in replica order
+            let mut candidates: Vec<(usize, f64)> = Vec::with_capacity(r);
+            for (k, rep) in replicas.iter().enumerate() {
+                if let Some(e) = self.verified_energy(inst, &rep[i], delta) {
+                    candidates.push((k, e));
+                }
+            }
+
+            let mut winner: Option<SolveResult> = None;
+            if candidates.is_empty() {
+                // every replica failed verification: fresh-seed retries,
+                // then escalation
+                for attempt in 0..self.cfg.retries {
+                    delta.retries += 1;
+                    let seed =
+                        replica_seed(g.seed, RETRY_SALT ^ ((i as u64) << 8) ^ attempt as u64);
+                    let retried = self
+                        .inner
+                        .solve_groups(&[SeededGroup {
+                            instances: std::slice::from_ref(inst),
+                            seed,
+                        }])
+                        .ok()
+                        .and_then(|mut v| v.pop())
+                        .and_then(|mut v| v.pop());
+                    if let Some(rr) = retried {
+                        delta.replica_solves += 1;
+                        if let Some(e) = self.verified_energy(inst, &rr, delta) {
+                            winner = Some(SolveResult {
+                                spins: rr.spins,
+                                energy: e,
+                            });
+                            break;
+                        }
+                    }
+                }
+                if winner.is_none() {
+                    winner = Some(self.escalate(inst, g.seed, i, delta));
+                }
+            } else {
+                // energy vote: minimum verified energy, exact ties to
+                // the lowest replica index (decision #17)
+                let energies: Vec<f64> = candidates.iter().map(|&(_, e)| e).collect();
+                let best = vote_winner(&energies);
+                let (best_k, best_e) = candidates[best];
+                if candidates
+                    .iter()
+                    .any(|&(k, _)| replicas[k][i].spins != replicas[best_k][i].spins)
+                {
+                    delta.vote_disagreements += 1;
+                }
+                winner = Some(SolveResult {
+                    spins: replicas[best_k][i].spins.clone(),
+                    energy: best_e,
+                });
+            }
+
+            let mut winner = winner.expect("vote, retry or escalation produced a result");
+            if self.cfg.repair {
+                // deterministic spin-repair: a stuck oscillator leaves
+                // the readout a few improving flips from a local
+                // minimum; greedy descent (lowest-index tie rule) fixes
+                // that and never returns worse than its start
+                let polished = self.repairer.solve_from(inst, &winner.spins);
+                if polished.energy < winner.energy {
+                    delta.repairs += 1;
+                    winner = polished;
+                }
+            }
+            out.push(winner);
+        }
+        Ok(out)
+    }
+
+    fn commit(&self, delta: Delta) {
+        let mut m = self.shared.metrics.lock().unwrap();
+        m.requests += delta.requests;
+        m.replica_solves += delta.replica_solves;
+        m.vote_disagreements += delta.vote_disagreements;
+        m.verify_failures += delta.verify_failures;
+        m.retries += delta.retries;
+        m.escalations += delta.escalations;
+        m.repairs += delta.repairs;
+    }
+}
+
+impl PoolSolver for ResilientSolver {
+    fn name(&self) -> &'static str {
+        "resilient"
+    }
+
+    fn solve_groups(&mut self, groups: &[SeededGroup<'_>]) -> Result<Vec<Vec<SolveResult>>> {
+        let mut delta = Delta::default();
+        let r = self.replication;
+        // ONE fused dispatch covering every coalesced group's replicas:
+        // the pool hands multiple groups precisely so the device can
+        // co-batch them (ANNEAL_BATCH amortization), and a wrapper that
+        // dispatched per group would collapse that batch occupancy. On
+        // failure, each group falls back to its own dispatch-with-
+        // retries (attempt 0 replays the identical replica seeds, so
+        // per-request determinism is unaffected — same discipline as
+        // the pool's own coalesced-failure retry).
+        let fused: Vec<SeededGroup<'_>> = groups
+            .iter()
+            .flat_map(|g| {
+                (0..r).map(move |k| SeededGroup {
+                    instances: g.instances,
+                    seed: replica_seed(g.seed, k as u64),
+                })
+            })
+            .collect();
+        let fused_result = match self.inner.solve_groups(&fused) {
+            Ok(v) => Some(v),
+            Err(_) => {
+                delta.retries += 1;
+                None
+            }
+        };
+        let mut out = Vec::with_capacity(groups.len());
+        for (gi, g) in groups.iter().enumerate() {
+            let pre = fused_result.as_ref().map(|v| &v[gi * r..(gi + 1) * r]);
+            match self.solve_group(g, pre, &mut delta) {
+                Ok(res) => out.push(res),
+                Err(e) => {
+                    self.commit(delta);
+                    return Err(e);
+                }
+            }
+        }
+        self.commit(delta);
+        Ok(out)
+    }
+}
+
+/// Adapter: any [`PoolSolver`] as an [`IsingSolver`], drawing request
+/// seeds from an internal per-instance stream — how `summarize
+/// --resilience` hosts a [`ResilientSolver`] inside the inline
+/// `EsPipeline`.
+pub struct SeededPoolBackend {
+    inner: Box<dyn PoolSolver>,
+    seeds: Pcg32,
+}
+
+impl SeededPoolBackend {
+    /// Adapter over `inner`, seed stream keyed by `seed`.
+    pub fn new(inner: Box<dyn PoolSolver>, seed: u64) -> Self {
+        Self {
+            inner,
+            seeds: Pcg32::new(seed, ADAPTER_SEED_STREAM),
+        }
+    }
+}
+
+/// Build an inline [`EsPipeline`](crate::pipeline::EsPipeline) whose
+/// solver runs behind the resilience layer / fault model, or `None` when
+/// neither applies to `cfg.solver` — callers then construct their usual
+/// pipeline. The single decision point for every inline surface
+/// (`summarize`, local-route service workers), mirroring what
+/// `sched::pool::build_solver` does for pooled routes:
+///
+/// * `[resilience] enabled = true` wraps any pool-capable solver
+///   (replication + voting + verify-and-retry);
+/// * fault injection alone only applies to the COBI device — a tabu/sa
+///   pipeline is returned unchanged (`None`), so enabling faults cannot
+///   silently change un-faultable solvers' results through rerouting.
+///
+/// `shared` connects the pipeline's counters to a caller-owned block
+/// (the no-pool `Service` hosts one so `::STATS::` still reports the
+/// resilience/fault counters); `None` keeps them private.
+pub(crate) fn resilient_pipeline(
+    settings: &crate::config::Settings,
+    cfg: &crate::config::PipelineConfig,
+    rt: Option<&crate::runtime::ArtifactRuntime>,
+    shared: Option<&ResilienceShared>,
+) -> Result<Option<crate::pipeline::EsPipeline>> {
+    let wants = settings.resilience.enabled
+        || (settings.resilience.fault.enabled && cfg.solver == "cobi");
+    if !wants || !crate::sched::pool_supports(&cfg.solver) {
+        return Ok(None);
+    }
+    let solver =
+        crate::sched::pool::build_solver(&cfg.solver, settings, cfg.seed, rt, None, shared)?;
+    Ok(Some(crate::pipeline::EsPipeline::new(
+        cfg.clone(),
+        Box::new(crate::embed::HashEmbedder::new()),
+        crate::pipeline::SolverBackend::Ising(Box::new(SeededPoolBackend::new(
+            solver, cfg.seed,
+        ))),
+    )))
+}
+
+impl IsingSolver for SeededPoolBackend {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn solve(&mut self, ising: &Ising) -> SolveResult {
+        let seed = self.seeds.next_u64();
+        self.inner
+            .solve_groups(&[SeededGroup {
+                instances: std::slice::from_ref(ising),
+                seed,
+            }])
+            .expect("pool-backend solve failed")
+            .pop()
+            .expect("one group in, one out")
+            .pop()
+            .expect("one instance in, one out")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cobi::testutil::quantized_glass;
+    use crate::cobi::CobiDevice;
+    use crate::config::{CobiConfig, FaultConfig};
+
+    fn cfg(replication: usize) -> ResilienceConfig {
+        ResilienceConfig {
+            enabled: true,
+            replication,
+            ..Default::default()
+        }
+    }
+
+    /// Inner that fails its first `fails` dispatches, then delegates.
+    struct FlakyInner {
+        fails: usize,
+        inner: TabuSolver,
+    }
+
+    impl PoolSolver for FlakyInner {
+        fn name(&self) -> &'static str {
+            "flaky"
+        }
+
+        fn solve_groups(&mut self, groups: &[SeededGroup<'_>]) -> Result<Vec<Vec<SolveResult>>> {
+            if self.fails > 0 {
+                self.fails -= 1;
+                anyhow::bail!("transient device failure");
+            }
+            self.inner.solve_groups(groups)
+        }
+    }
+
+    /// Inner that reports corrupted energies (spins are fine).
+    struct LyingInner {
+        inner: TabuSolver,
+    }
+
+    impl PoolSolver for LyingInner {
+        fn name(&self) -> &'static str {
+            "lying"
+        }
+
+        fn solve_groups(&mut self, groups: &[SeededGroup<'_>]) -> Result<Vec<Vec<SolveResult>>> {
+            let mut out = self.inner.solve_groups(groups)?;
+            for g in &mut out {
+                for r in g {
+                    r.energy -= 1000.0; // a lie no honest readout makes
+                }
+            }
+            Ok(out)
+        }
+    }
+
+    #[test]
+    fn replica_seed_zero_is_identity() {
+        for s in [0u64, 1, 0xDEAD_BEEF, u64::MAX] {
+            assert_eq!(replica_seed(s, 0), s);
+            assert_ne!(replica_seed(s, 1), s);
+            assert_ne!(replica_seed(s, 1), replica_seed(s, 2));
+        }
+    }
+
+    #[test]
+    fn vote_breaks_exact_ties_to_the_lowest_index() {
+        assert_eq!(vote_winner(&[-3.0]), 0);
+        assert_eq!(vote_winner(&[-3.0, -5.0, -4.0]), 1);
+        assert_eq!(vote_winner(&[-5.0, -5.0, -5.0]), 0, "ties keep the earliest");
+        assert_eq!(vote_winner(&[-1.0, -5.0, -5.0]), 1);
+    }
+
+    #[test]
+    fn replication_one_without_repair_is_a_passthrough() {
+        // replica_seed(s, 0) == s and verification recomputes the exact
+        // energy the device already computed, so the wrapper is
+        // byte-identical to the raw solver
+        let instances: Vec<Ising> = (0..4).map(|k| quantized_glass(900 + k, 12)).collect();
+        let mut raw = CobiDevice::native(CobiConfig::default(), 0);
+        let expected = raw
+            .solve_groups_seeded(&[SeededGroup {
+                instances: &instances,
+                seed: 77,
+            }])
+            .unwrap();
+
+        let mut c = cfg(1);
+        c.repair = false;
+        let dev = CobiDevice::native(CobiConfig::default(), 0);
+        let mut rs = ResilientSolver::new(Box::new(dev), &c, ResilienceShared::new());
+        let got = rs
+            .solve_groups(&[SeededGroup {
+                instances: &instances,
+                seed: 77,
+            }])
+            .unwrap();
+        for (e, g) in expected[0].iter().zip(&got[0]) {
+            assert_eq!(e.spins, g.spins);
+            assert_eq!(e.energy.to_bits(), g.energy.to_bits());
+        }
+        let m = rs.shared.snapshot();
+        assert_eq!(m.requests, 1);
+        assert_eq!(m.replica_solves, 4);
+        assert_eq!(m.verify_failures, 0);
+        assert_eq!(m.escalations, 0);
+    }
+
+    #[test]
+    fn replicated_solves_are_deterministic_and_counted() {
+        let instances: Vec<Ising> = (0..3).map(|k| quantized_glass(910 + k, 12)).collect();
+        let run = || {
+            let dev = CobiDevice::native(CobiConfig::default(), 0);
+            let mut rs = ResilientSolver::new(Box::new(dev), &cfg(3), ResilienceShared::new());
+            let out = rs
+                .solve_groups(&[SeededGroup {
+                    instances: &instances,
+                    seed: 5,
+                }])
+                .unwrap();
+            (out, rs.shared.snapshot().replica_solves)
+        };
+        let (a, solves_a) = run();
+        let (b, solves_b) = run();
+        assert_eq!(solves_a, 9, "3 replicas x 3 instances");
+        assert_eq!(solves_a, solves_b);
+        for (x, y) in a[0].iter().zip(&b[0]) {
+            assert_eq!(x.spins, y.spins);
+            assert_eq!(x.energy.to_bits(), y.energy.to_bits());
+        }
+    }
+
+    #[test]
+    fn voting_never_loses_to_a_single_solve() {
+        // the vote winner's verified energy is a min over replicas that
+        // includes the replication-1 result (replica 0 = the request
+        // seed), so best-of-3 <= single, instance by instance
+        let instances: Vec<Ising> = (0..4).map(|k| quantized_glass(920 + k, 14)).collect();
+        let solve = |replication: usize| {
+            let mut c = cfg(replication);
+            c.repair = false;
+            let dev = CobiDevice::native(CobiConfig::default(), 0);
+            let mut rs = ResilientSolver::new(Box::new(dev), &c, ResilienceShared::new());
+            rs.solve_groups(&[SeededGroup {
+                instances: &instances,
+                seed: 31,
+            }])
+            .unwrap()
+        };
+        let single = solve(1);
+        let voted = solve(3);
+        for (s, v) in single[0].iter().zip(&voted[0]) {
+            assert!(v.energy <= s.energy + 1e-9);
+        }
+    }
+
+    #[test]
+    fn fused_multi_group_dispatch_matches_per_group_results() {
+        // the fused path (one inner dispatch covering every coalesced
+        // group's replicas) must be invisible in the results: solving
+        // groups together or alone agrees byte for byte, because the
+        // inner solver's seeded groups are co-batching-invariant
+        let a: Vec<Ising> = (0..2).map(|k| quantized_glass(960 + k, 12)).collect();
+        let b: Vec<Ising> = (0..3).map(|k| quantized_glass(970 + k, 12)).collect();
+        let make = || {
+            ResilientSolver::new(
+                Box::new(CobiDevice::native(CobiConfig::default(), 0)),
+                &cfg(2),
+                ResilienceShared::new(),
+            )
+        };
+        let mut fused = make();
+        let together = fused
+            .solve_groups(&[
+                SeededGroup { instances: &a, seed: 1 },
+                SeededGroup { instances: &b, seed: 2 },
+            ])
+            .unwrap();
+        let mut solo = make();
+        let alone_a = solo
+            .solve_groups(&[SeededGroup { instances: &a, seed: 1 }])
+            .unwrap();
+        let alone_b = solo
+            .solve_groups(&[SeededGroup { instances: &b, seed: 2 }])
+            .unwrap();
+        for (x, y) in together[0].iter().zip(&alone_a[0]) {
+            assert_eq!(x.spins, y.spins);
+            assert_eq!(x.energy.to_bits(), y.energy.to_bits());
+        }
+        for (x, y) in together[1].iter().zip(&alone_b[0]) {
+            assert_eq!(x.spins, y.spins);
+            assert_eq!(x.energy.to_bits(), y.energy.to_bits());
+        }
+        // fused path counted every replica solve: (2 + 3) x 2
+        assert_eq!(fused.shared.snapshot().replica_solves, 10);
+    }
+
+    #[test]
+    fn transient_failures_retry_and_recover() {
+        let inst = vec![quantized_glass(930, 10)];
+        let mut c = cfg(1);
+        c.retries = 2;
+        let flaky = FlakyInner {
+            fails: 1,
+            inner: TabuSolver::seeded(0),
+        };
+        let mut rs = ResilientSolver::new(Box::new(flaky), &c, ResilienceShared::new());
+        let out = rs
+            .solve_groups(&[SeededGroup {
+                instances: &inst,
+                seed: 9,
+            }])
+            .unwrap();
+        assert_eq!(out[0].len(), 1);
+        assert!((inst[0].energy(&out[0][0].spins) - out[0][0].energy).abs() < 1e-9);
+        let m = rs.shared.snapshot();
+        assert_eq!(m.retries, 1);
+        assert_eq!(m.escalations, 0);
+    }
+
+    #[test]
+    fn exhausted_retries_escalate_to_the_deterministic_fallback() {
+        let inst = vec![quantized_glass(931, 10)];
+        let run = || {
+            let mut c = cfg(2);
+            c.retries = 1;
+            let flaky = FlakyInner {
+                fails: usize::MAX, // never recovers
+                inner: TabuSolver::seeded(0),
+            };
+            let mut rs = ResilientSolver::new(Box::new(flaky), &c, ResilienceShared::new());
+            let out = rs
+                .solve_groups(&[SeededGroup {
+                    instances: &inst,
+                    seed: 10,
+                }])
+                .unwrap();
+            (out, rs.shared.snapshot())
+        };
+        let (a, ma) = run();
+        let (b, mb) = run();
+        assert_eq!(a[0][0].spins, b[0][0].spins, "escalation must be deterministic");
+        assert_eq!(ma.escalations, 1);
+        assert_eq!(mb.escalations, 1);
+        // failed fused dispatch + the group's own attempt 0 + 1 retry
+        assert_eq!(ma.retries, 3);
+        // the escalated result is a genuine solution of the instance
+        assert!((inst[0].energy(&a[0][0].spins) - a[0][0].energy).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unprogrammable_instances_are_served_by_escalation() {
+        // a fractional instance fails COBI validation on every attempt;
+        // with resilience the request is served by the software fallback
+        // instead of erroring
+        let mut inst = Ising::new(8);
+        inst.h[0] = 0.5;
+        let dev = CobiDevice::native(CobiConfig::default(), 0);
+        let mut rs = ResilientSolver::new(Box::new(dev), &cfg(1), ResilienceShared::new());
+        let out = rs
+            .solve_groups(&[SeededGroup {
+                instances: std::slice::from_ref(&inst),
+                seed: 3,
+            }])
+            .unwrap();
+        assert_eq!(out[0][0].spins.len(), 8);
+        assert!(rs.shared.snapshot().escalations >= 1);
+    }
+
+    #[test]
+    fn corrupted_energy_reports_fail_verification_and_still_serve() {
+        let inst = vec![quantized_glass(932, 10)];
+        let mut c = cfg(2);
+        c.retries = 1;
+        let lying = LyingInner {
+            inner: TabuSolver::seeded(0),
+        };
+        let mut rs = ResilientSolver::new(Box::new(lying), &c, ResilienceShared::new());
+        let out = rs
+            .solve_groups(&[SeededGroup {
+                instances: &inst,
+                seed: 12,
+            }])
+            .unwrap();
+        // the served energy is the true software-verified energy of the
+        // served spins — never the corrupted report
+        assert!((inst[0].energy(&out[0][0].spins) - out[0][0].energy).abs() < 1e-9);
+        let m = rs.shared.snapshot();
+        assert!(m.verify_failures >= 2, "both replicas lied: {m:?}");
+        assert!(m.retries >= 1, "all-rejected verification must retry");
+        assert_eq!(m.escalations, 1, "lying retries exhaust into escalation");
+    }
+
+    #[test]
+    fn voting_recovers_quality_on_a_stuck_device() {
+        // heavy stuck faults: replication + repair must beat the raw
+        // faulty device on verified energy, deterministically
+        let instances: Vec<Ising> = (0..4).map(|k| quantized_glass(940 + k, 14)).collect();
+        let fault = FaultConfig {
+            enabled: true,
+            stuck_rate: 0.3,
+            drift_rate: 0.0,
+            dac_mismatch: 0.0,
+            burst_rate: 0.0,
+            ..Default::default()
+        };
+        let faulty_device = || {
+            let mut d = CobiDevice::native(CobiConfig::default(), 0);
+            d.set_fault_model(FaultModel::new(&fault));
+            d
+        };
+        let mut raw = faulty_device();
+        let raw_out = raw
+            .solve_groups_seeded(&[SeededGroup {
+                instances: &instances,
+                seed: 50,
+            }])
+            .unwrap();
+
+        let mut rs = ResilientSolver::new(
+            Box::new(faulty_device()),
+            &cfg(3),
+            ResilienceShared::new(),
+        );
+        let res_out = rs
+            .solve_groups(&[SeededGroup {
+                instances: &instances,
+                seed: 50,
+            }])
+            .unwrap();
+        let raw_total: f64 = raw_out[0].iter().map(|r| r.energy).sum();
+        let res_total: f64 = res_out[0].iter().map(|r| r.energy).sum();
+        assert!(
+            res_total <= raw_total + 1e-9,
+            "voting+repair {res_total} must not lose to raw faulty {raw_total}"
+        );
+        let m = rs.shared.snapshot();
+        assert!(m.faults.any(), "fault counters must record injections");
+    }
+
+    #[test]
+    fn seeded_pool_backend_adapts_and_replays() {
+        let inst = quantized_glass(950, 10);
+        let mut a = SeededPoolBackend::new(Box::new(TabuSolver::seeded(0)), 7);
+        let mut b = SeededPoolBackend::new(Box::new(TabuSolver::seeded(0)), 7);
+        let ra = a.solve(&inst);
+        let rb = b.solve(&inst);
+        assert_eq!(ra.spins, rb.spins);
+        assert_eq!(a.name(), "tabu");
+        // the stream advances: a second solve explores a new seed
+        let ra2 = a.solve(&inst);
+        assert!((inst.energy(&ra2.spins) - ra2.energy).abs() < 1e-9);
+    }
+
+    #[test]
+    fn calibration_sets_replication_and_records() {
+        let mut c = cfg(1);
+        c.calibration_probes = 4;
+        let dev = CobiDevice::native(CobiConfig::default(), 1);
+        let mut rs = ResilientSolver::new(Box::new(dev), &c, ResilienceShared::new());
+        let cal = rs.calibrate().unwrap();
+        assert_eq!(rs.replication(), cal.replication);
+        let m = rs.shared.snapshot();
+        assert_eq!(m.calibrations.len(), 1);
+        assert_eq!(m.calibrations[0], cal);
+        assert!(m.report().contains("cal=["), "{}", m.report());
+    }
+}

@@ -42,6 +42,7 @@ use crate::cobi::{CobiDevice, SeededGroup};
 use crate::config::Settings;
 use crate::ising::Ising;
 use crate::portfolio::{PortfolioMetrics, PortfolioShared, SolverPortfolio};
+use crate::resilience::{FaultModel, ResilienceMetrics, ResilienceShared, ResilientSolver};
 use crate::runtime::ArtifactRuntime;
 use crate::service::metrics::Histogram;
 use crate::solvers::sa::SaSolver;
@@ -142,30 +143,67 @@ pub fn service_pooled(settings: &Settings) -> bool {
 }
 
 /// Build one pool-capable solver instance (also used by the service's
-/// local-route streaming sessions, which need per-request determinism
-/// without a pool).
+/// local-route streaming sessions and `summarize --resilience`, which
+/// need per-request determinism without a pool).
+///
+/// Resilience wiring happens HERE, so every construction site inherits
+/// it uniformly: with `[resilience] fault_enabled = true` the COBI
+/// device (standalone or inside the portfolio) gets a [`FaultModel`]
+/// whose counters feed the fleet-shared block when one is provided;
+/// with `[resilience] enabled = true` the built solver is wrapped in a
+/// [`ResilientSolver`] (replication + voting + verify-and-retry), which
+/// is calibrated at construction when `calibrate = true`.
 pub(crate) fn build_solver(
     backend: &str,
     settings: &Settings,
     seed: u64,
     rt: Option<&ArtifactRuntime>,
     shared: Option<&PortfolioShared>,
+    resilience: Option<&ResilienceShared>,
 ) -> Result<Box<dyn PoolSolver>> {
-    match backend {
-        "cobi" => Ok(Box::new(CobiDevice::from_config(&settings.cobi, seed, rt)?)),
-        "tabu" => Ok(Box::new(TabuSolver::seeded(seed))),
-        "sa" => Ok(Box::new(SaSolver::seeded(seed))),
-        "portfolio" => Ok(Box::new(SolverPortfolio::from_settings(
-            settings,
-            seed,
-            rt,
-            shared.cloned(),
-        )?)),
+    let fault_model = || {
+        settings.resilience.fault.enabled.then(|| {
+            let mut fm = FaultModel::new(&settings.resilience.fault);
+            if let Some(r) = resilience {
+                fm.set_counters(r.faults.clone());
+            }
+            fm
+        })
+    };
+    let inner: Box<dyn PoolSolver> = match backend {
+        "cobi" => {
+            let mut dev = CobiDevice::from_config(&settings.cobi, seed, rt)?;
+            if let Some(fm) = fault_model() {
+                dev.set_fault_model(fm);
+            }
+            Box::new(dev)
+        }
+        "tabu" => Box::new(TabuSolver::seeded(seed)),
+        "sa" => Box::new(SaSolver::seeded(seed)),
+        "portfolio" => {
+            // the portfolio attaches the fault model to its internal
+            // COBI device itself (it owns the construction); only the
+            // fleet counter block is threaded through here
+            let mut p = SolverPortfolio::from_settings(settings, seed, rt, shared.cloned())?;
+            if let Some(r) = resilience {
+                p.share_fault_counters(r.faults.clone());
+            }
+            Box::new(p)
+        }
         other => bail!(
             "solver '{other}' cannot run on the device pool \
              (supported: cobi, tabu, sa, portfolio)"
         ),
+    };
+    if settings.resilience.enabled {
+        let shared = resilience.cloned().unwrap_or_default();
+        let mut rs = ResilientSolver::new(inner, &settings.resilience, shared);
+        if settings.resilience.calibrate {
+            rs.calibrate()?;
+        }
+        return Ok(Box::new(rs));
     }
+    Ok(inner)
 }
 
 /// One queued solve request (a whole refinement batch for one window).
@@ -369,6 +407,9 @@ pub struct DevicePool {
     /// Fleet-shared portfolio state (cache + telemetry); present only
     /// when the resolved backend is "portfolio".
     portfolio: Option<PortfolioShared>,
+    /// Fleet-shared resilience state (counters + fault injections);
+    /// present when the resilience layer or the fault model is enabled.
+    resilience: Option<ResilienceShared>,
 }
 
 impl DevicePool {
@@ -391,13 +432,24 @@ impl DevicePool {
         // every portfolio device (DESIGN.md decision #11)
         let portfolio = (backend == "portfolio")
             .then(|| PortfolioShared::new(&settings.portfolio));
+        // one fleet-wide resilience counter block (replication/vote/
+        // retry counters + fault injections), shared the same way
+        let resilience = (settings.resilience.enabled || settings.resilience.fault.enabled)
+            .then(ResilienceShared::new);
 
         let mut threads = Vec::with_capacity(devices);
         for d in 0..devices {
             // construction seed decorrelates devices that are NOT
             // re-seeded per request (none today — kept for safety)
             let seed = settings.pipeline.seed ^ 0xD00D ^ ((d as u64) << 32);
-            let mut solver = build_solver(&backend, settings, seed, rt, portfolio.as_ref())?;
+            let mut solver = build_solver(
+                &backend,
+                settings,
+                seed,
+                rt,
+                portfolio.as_ref(),
+                resilience.as_ref(),
+            )?;
             let rx = rx.clone();
             let metrics = metrics.clone();
             threads.push(
@@ -415,6 +467,7 @@ impl DevicePool {
             started: Instant::now(),
             backend,
             portfolio,
+            resilience,
         })
     }
 
@@ -422,6 +475,13 @@ impl DevicePool {
     /// per-backend latency) — `None` unless the backend is "portfolio".
     pub fn portfolio_metrics(&self) -> Option<PortfolioMetrics> {
         self.portfolio.as_ref().map(|p| p.snapshot())
+    }
+
+    /// Resilience telemetry snapshot (replication/vote/retry counters,
+    /// per-device calibrations, fault injections) — `None` unless the
+    /// resilience layer or the fault model is enabled.
+    pub fn resilience_metrics(&self) -> Option<ResilienceMetrics> {
+        self.resilience.as_ref().map(|r| r.snapshot())
     }
 
     /// A cloneable submission handle.
@@ -774,5 +834,49 @@ mod tests {
         let plain = DevicePool::start(&settings("tabu", 1), None).unwrap();
         assert!(plain.portfolio_metrics().is_none());
         plain.shutdown();
+    }
+
+    #[test]
+    fn resilient_pool_serves_and_reports() {
+        let mut s = settings("cobi", 2);
+        s.resilience.enabled = true;
+        s.resilience.replication = 2;
+        s.resilience.fault.enabled = true;
+        s.resilience.fault.stuck_rate = 0.2;
+        let pool = DevicePool::start(&s, None).unwrap();
+        let mut client = pool.client(7);
+        let instances: Vec<Ising> = (0..2).map(|k| quantized_glass(950 + k, 12)).collect();
+        let res = client.submit(instances.clone()).unwrap().wait().unwrap();
+        assert_eq!(res.len(), 2);
+        for (r, i) in res.iter().zip(&instances) {
+            // resilient results always carry software-verified energies
+            assert!((i.energy(&r.spins) - r.energy).abs() < 1e-9);
+        }
+        drop(client);
+        let m = pool.resilience_metrics().expect("resilience metrics");
+        assert_eq!(m.requests, 1);
+        assert_eq!(m.replica_solves, 4, "2 replicas x 2 instances");
+        pool.shutdown();
+
+        // plain pools expose no resilience telemetry
+        let plain = DevicePool::start(&settings("tabu", 1), None).unwrap();
+        assert!(plain.resilience_metrics().is_none());
+        plain.shutdown();
+    }
+
+    #[test]
+    fn calibrated_pool_devices_record_their_calibration() {
+        let mut s = settings("cobi", 2);
+        s.resilience.enabled = true;
+        s.resilience.calibrate = true;
+        s.resilience.calibration_probes = 3;
+        let pool = DevicePool::start(&s, None).unwrap();
+        let m = pool.resilience_metrics().expect("resilience metrics");
+        assert_eq!(m.calibrations.len(), 2, "one calibration per device");
+        for c in &m.calibrations {
+            assert_eq!(c.probes, 3);
+            assert!((1..=s.resilience.max_replication).contains(&c.replication));
+        }
+        pool.shutdown();
     }
 }

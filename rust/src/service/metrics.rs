@@ -12,6 +12,7 @@ use std::time::Duration;
 
 use crate::decompose::Strategy;
 use crate::portfolio::PortfolioMetrics;
+use crate::resilience::ResilienceMetrics;
 use crate::sched::PoolMetrics;
 
 const RESERVOIR: usize = 4096;
@@ -208,6 +209,10 @@ pub struct ServiceMetrics {
     /// hit/warm/miss rates, per-backend latency histograms. `None` unless
     /// the pool backend is "portfolio".
     pub portfolio: Option<PortfolioMetrics>,
+    /// Resilience snapshot: replication/vote/verify/retry/escalation
+    /// counters, per-device calibrations and fault injections. `None`
+    /// unless `[resilience]` (layer or fault model) is enabled.
+    pub resilience: Option<ResilienceMetrics>,
 }
 
 impl ServiceMetrics {
@@ -255,6 +260,10 @@ impl ServiceMetrics {
         if let Some(p) = &self.portfolio {
             out.push_str(" | ");
             out.push_str(&p.report());
+        }
+        if let Some(r) = &self.resilience {
+            out.push_str(" | ");
+            out.push_str(&r.report());
         }
         out
     }
@@ -373,6 +382,28 @@ mod tests {
         m.strategies.stream_revisions = 5;
         let r = m.report();
         assert!(r.contains("sessions=2 chunks=7 revisions=5"), "{r}");
+    }
+
+    #[test]
+    fn resilience_counters_surface_in_the_report() {
+        let mut m = ServiceMetrics::default();
+        assert!(!m.report().contains("resilience"), "absent block stays quiet");
+        m.resilience = Some(ResilienceMetrics {
+            requests: 4,
+            replica_solves: 12,
+            vote_disagreements: 2,
+            retries: 1,
+            faults: crate::resilience::FaultStats {
+                faulty_solves: 3,
+                stuck_spins: 5,
+                ..Default::default()
+            },
+            ..Default::default()
+        });
+        let report = m.report();
+        assert!(report.contains("resilience: requests=4 replicas=12"), "{report}");
+        assert!(report.contains("disagree=2"), "{report}");
+        assert!(report.contains("faults solves=3 stuck=5"), "{report}");
     }
 
     #[test]

@@ -38,6 +38,7 @@ use anyhow::{bail, Result};
 use crate::config::Settings;
 use crate::corpus::Document;
 use crate::pipeline::Summary;
+use crate::resilience::ResilienceShared;
 use crate::runtime::ArtifactRuntime;
 use crate::sched::pool::PoolSolver;
 use crate::sched::{self, DevicePool, PoolClient, StreamRoute, StreamSummarizer};
@@ -176,6 +177,11 @@ pub struct Service {
     queue_depth: usize,
     /// Shared solve pool (None when running worker-private solvers).
     pool: Option<DevicePool>,
+    /// Service-owned resilience counter block for the LOCAL route (the
+    /// pooled route's block lives in the pool); present when the
+    /// resilience layer or the fault model is enabled without a pool,
+    /// so `::STATS::` reports the counters either way.
+    resilience: Option<ResilienceShared>,
     /// Retained for late construction of stream-session solvers.
     settings: Settings,
 }
@@ -200,6 +206,11 @@ impl Service {
         } else {
             None
         };
+        // without a pool, the service hosts the fleet resilience block
+        // itself so local-route worker/stream counters still aggregate
+        let resilience = (pool.is_none()
+            && (settings.resilience.enabled || settings.resilience.fault.enabled))
+            .then(ResilienceShared::new);
         let route = match &pool {
             Some(p) => SolveRoute::Pooled(p.handle()),
             None => SolveRoute::Local,
@@ -213,6 +224,7 @@ impl Service {
             stop.clone(),
             route,
             rt,
+            resilience.as_ref(),
         )?;
         Ok(Self {
             tx,
@@ -223,6 +235,7 @@ impl Service {
             workers,
             queue_depth: settings.service.queue_depth,
             pool,
+            resilience,
             settings: settings.clone(),
         })
     }
@@ -250,14 +263,20 @@ impl Service {
             Some(pool) => StreamOwner::Pooled(pool.client(seed)),
             None => {
                 let backend = sched::resolved_backend(&self.settings).to_string();
-                let solver =
-                    sched::pool::build_solver(&backend, &self.settings, seed, None, None)
-                        .map_err(|e| {
-                            anyhow::anyhow!(
-                                "streaming needs a pool-capable solver \
-                                 (cobi/tabu/sa/portfolio): {e}"
-                            )
-                        })?;
+                let solver = sched::pool::build_solver(
+                    &backend,
+                    &self.settings,
+                    seed,
+                    None,
+                    None,
+                    self.resilience.as_ref(),
+                )
+                .map_err(|e| {
+                    anyhow::anyhow!(
+                        "streaming needs a pool-capable solver \
+                         (cobi/tabu/sa/portfolio): {e}"
+                    )
+                })?;
                 StreamOwner::Local(solver)
             }
         };
@@ -317,12 +336,16 @@ impl Service {
     }
 
     /// Metrics snapshot, including the device-pool counters (and, when
-    /// the pool hosts the solver portfolio, its route/cache telemetry).
+    /// enabled, the solver portfolio's route/cache telemetry and the
+    /// resilience layer's replication/vote/retry/fault counters).
     pub fn metrics(&self) -> ServiceMetrics {
         let mut m = self.metrics.lock().unwrap().clone();
         if let Some(pool) = &self.pool {
             m.pool = pool.metrics();
             m.portfolio = pool.portfolio_metrics();
+            m.resilience = pool.resilience_metrics();
+        } else if let Some(r) = &self.resilience {
+            m.resilience = Some(r.snapshot());
         }
         m
     }

@@ -24,6 +24,7 @@ use anyhow::Result;
 use crate::config::Settings;
 use crate::corpus::Document;
 use crate::pipeline::{EsPipeline, Summary};
+use crate::resilience::ResilienceShared;
 use crate::runtime::ArtifactRuntime;
 use crate::sched::{self, PoolHandle};
 
@@ -50,6 +51,7 @@ pub enum SolveRoute {
 }
 
 /// Spawn the worker threads per `settings.service`.
+#[allow(clippy::too_many_arguments)]
 pub fn spawn_workers(
     settings: &Settings,
     rx: Receiver<Job>,
@@ -58,6 +60,7 @@ pub fn spawn_workers(
     stop: Arc<AtomicBool>,
     route: SolveRoute,
     rt: Option<&ArtifactRuntime>,
+    resilience: Option<&ResilienceShared>,
 ) -> Result<Vec<std::thread::JoinHandle<()>>> {
     let shared_rx = Arc::new(Mutex::new(rx));
     let mut handles = Vec::new();
@@ -94,9 +97,17 @@ pub fn spawn_workers(
                     // are built HERE (caller's stack), so the borrowed
                     // artifact runtime never crosses into the threads —
                     // executables are Arc-owned by construction time.
+                    // The resilience layer / fault model applies to the
+                    // local route exactly like the pooled one
+                    // (`resilient_pipeline` is the shared decision).
                     let mut cfg = base_cfg.clone();
                     cfg.seed = cfg.seed.wrapping_add(w as u64 * 0x9E37);
-                    let mut pipeline = EsPipeline::from_config(&cfg, &settings.cobi, rt)?;
+                    let mut pipeline = match crate::resilience::resilient_pipeline(
+                        settings, &cfg, rt, resilience,
+                    )? {
+                        Some(p) => p,
+                        None => EsPipeline::from_config(&cfg, &settings.cobi, rt)?,
+                    };
                     Box::new(move |doc: &Document| pipeline.summarize(doc))
                 }
             };

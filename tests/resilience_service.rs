@@ -1,0 +1,240 @@
+//! Integration tests for the resilience subsystem: byte-reproducibility
+//! of faulty runs across pool shapes, quality preservation under
+//! replicated voting, and service-level telemetry.
+//!
+//! The `full_tier1_slice_with_resilience_enabled` test is env-gated
+//! (COBI_ES_RESILIENCE_FULL=1, set by CI) and re-runs a slice of the
+//! tier-1 service paths with `[resilience] enabled = true`, so the fault
+//! path cannot rot silently while staying cheap for local `cargo test`.
+
+use cobi_es::config::Settings;
+use cobi_es::corpus::benchmark_set;
+use cobi_es::embed::{Embedder, HashEmbedder};
+use cobi_es::ising::{exact_bounds, EsProblem};
+use cobi_es::pipeline::Summary;
+use cobi_es::sched::{doc_seed, summarize_with_pool, DevicePool};
+use cobi_es::service::Service;
+
+/// COBI settings with a seeded fault model and the resilience layer on.
+fn faulty_settings(stuck: f32, replication: usize) -> Settings {
+    let mut s = Settings::default();
+    s.pipeline.solver = "cobi".into();
+    s.pipeline.iterations = 4;
+    s.resilience.fault.enabled = stuck > 0.0;
+    s.resilience.fault.stuck_rate = stuck;
+    s.resilience.fault.drift_rate = 0.02;
+    s.resilience.fault.burst_rate = 0.05;
+    s.resilience.enabled = replication > 1;
+    s.resilience.replication = replication;
+    s
+}
+
+fn pooled_summary(s: &Settings, doc_idx: usize) -> Summary {
+    let set = benchmark_set("bench_10").unwrap();
+    let doc = &set.documents[doc_idx];
+    let pool = DevicePool::start(s, None).unwrap();
+    let mut cfg = s.pipeline.clone();
+    cfg.summary_len = set.summary_len;
+    cfg.seed = doc_seed(cfg.seed, &doc.id);
+    let mut client = pool.client(cfg.seed);
+    let summary = summarize_with_pool(doc, &cfg, &mut client).unwrap();
+    drop(client);
+    pool.shutdown();
+    summary
+}
+
+#[test]
+fn faulty_voting_run_is_byte_reproducible_across_pool_shapes() {
+    // acceptance pin: a seeded FaultModel (5% stuck, 2% drift) with
+    // replication-3 voting produces byte-identical summaries on a
+    // 1-device no-coalesce pool and a 4-device coalescing pool — fault
+    // draws derive from request seeds, never from device identity
+    let mut s1 = faulty_settings(0.05, 3);
+    s1.sched.devices = 1;
+    s1.sched.max_coalesce = 1;
+    s1.sched.linger_us = 0;
+    let mut s4 = faulty_settings(0.05, 3);
+    s4.sched.devices = 4;
+    s4.sched.max_coalesce = 8;
+    s4.sched.linger_us = 2_000;
+    for doc_idx in [0, 3] {
+        let a = pooled_summary(&s1, doc_idx);
+        let b = pooled_summary(&s4, doc_idx);
+        assert_eq!(a.selected, b.selected, "doc {doc_idx}");
+        assert_eq!(a.sentences, b.sentences, "doc {doc_idx}");
+        assert_eq!(a.objective.to_bits(), b.objective.to_bits(), "doc {doc_idx}");
+    }
+}
+
+#[test]
+fn voting_holds_bench10_quality_at_the_clean_baseline() {
+    // acceptance pin: under 5% stuck + 2% drift faults with replication-3
+    // voting, bench_10 summary quality stays at the clean run's level —
+    // per document within a 0.03 normalized-objective band, and on
+    // average no more than 0.005 below clean (energy-vote winners can
+    // legitimately differ from clean solves, so exact equality is not
+    // the invariant)
+    let set = benchmark_set("bench_10").unwrap();
+    let clean = faulty_settings(0.0, 1);
+    let faulty = faulty_settings(0.05, 3);
+
+    let mut embedder = HashEmbedder::new();
+    let mut clean_mean = 0.0f64;
+    let mut faulty_mean = 0.0f64;
+    for (idx, doc) in set.documents.iter().enumerate() {
+        let scores = embedder.scores(&doc.sentences).unwrap();
+        let problem = EsProblem {
+            mu: scores.mu,
+            beta: scores.beta,
+            lambda: clean.pipeline.lambda,
+            m: set.summary_len,
+        };
+        let bounds = exact_bounds(&problem);
+        let c = bounds.normalize(pooled_summary(&clean, idx).objective);
+        let f = bounds.normalize(pooled_summary(&faulty, idx).objective);
+        assert!(
+            f >= c - 0.03,
+            "doc {idx}: faulty+voting {f:.4} fell below clean {c:.4}"
+        );
+        clean_mean += c;
+        faulty_mean += f;
+    }
+    let n = set.documents.len() as f64;
+    assert!(
+        faulty_mean / n >= clean_mean / n - 0.005,
+        "mean quality degraded: faulty {:.4} vs clean {:.4}",
+        faulty_mean / n,
+        clean_mean / n
+    );
+}
+
+#[test]
+fn service_reports_resilience_and_fault_counters() {
+    let mut s = faulty_settings(0.2, 2);
+    s.service.workers = 2;
+    let svc = Service::start(&s).unwrap();
+    assert!(svc.is_pooled());
+    let set = benchmark_set("bench_10").unwrap();
+    let tickets: Vec<_> = set.documents[..4]
+        .iter()
+        .map(|d| svc.submit(d.clone()).unwrap())
+        .collect();
+    for t in tickets {
+        assert_eq!(t.wait().unwrap().selected.len(), 3);
+    }
+    let m = svc.metrics();
+    assert_eq!(m.completed, 4);
+    let r = m.resilience.expect("resilience telemetry");
+    assert_eq!(r.requests, 4, "one pool request per bench_10 document");
+    assert_eq!(r.replica_solves, 4 * 2 * s.pipeline.iterations as u64);
+    assert!(r.faults.any(), "20% stuck rate must inject faults");
+    let report = m.report();
+    assert!(report.contains("resilience:"), "{report}");
+    assert!(report.contains("faults solves="), "{report}");
+    svc.shutdown();
+}
+
+#[test]
+fn fault_injection_without_the_resilience_layer_still_counts() {
+    // faults can be enabled standalone (the degradation-measurement
+    // shape the fault-sweep experiment uses): no wrapper, but the
+    // counters still surface through the pool
+    let s = faulty_settings(0.3, 1);
+    let svc = Service::start(&s).unwrap();
+    let set = benchmark_set("bench_10").unwrap();
+    let t = svc.submit(set.documents[0].clone()).unwrap();
+    t.wait().unwrap();
+    let m = svc.metrics();
+    let r = m.resilience.expect("fault counters surface without the wrapper");
+    assert_eq!(r.requests, 0, "no resilient wrapper, no replication counters");
+    assert!(r.faults.any());
+    svc.shutdown();
+}
+
+#[test]
+fn no_pool_workers_still_apply_the_fault_model() {
+    // regression: the local (no-pool) worker route must go through the
+    // same resilience/fault wiring as the pooled route — a `--no-pool
+    // --fault-stuck` service must not silently serve clean summaries
+    let summaries = |stuck: f32| -> Vec<Vec<usize>> {
+        let mut s = faulty_settings(stuck, 1);
+        s.sched.enabled = false; // force SolveRoute::Local
+        s.service.workers = 1; // one worker => one deterministic seed
+        let svc = Service::start(&s).unwrap();
+        assert!(!svc.is_pooled());
+        let set = benchmark_set("bench_10").unwrap();
+        let tickets: Vec<_> = set
+            .documents
+            .iter()
+            .map(|d| svc.submit(d.clone()).unwrap())
+            .collect();
+        let out: Vec<Vec<usize>> = tickets
+            .into_iter()
+            .map(|t| t.wait().unwrap().selected)
+            .collect();
+        if stuck > 0.0 {
+            // the service-owned counter block makes no-pool fault
+            // telemetry visible in ::STATS:: too
+            let m = svc.metrics();
+            let r = m.resilience.expect("no-pool resilience telemetry");
+            assert!(r.faults.any(), "no fault injections counted");
+            assert!(m.report().contains("faults solves="), "{}", m.report());
+        }
+        svc.shutdown();
+        out
+    };
+    let clean = summaries(0.0);
+    let heavy = summaries(0.8); // 80% stuck: outputs cannot all survive
+    assert_eq!(clean.len(), 10);
+    assert!(
+        clean.iter().zip(&heavy).any(|(c, f)| c != f),
+        "local-route faults had no effect on any of 10 documents"
+    );
+}
+
+#[test]
+fn full_tier1_slice_with_resilience_enabled() {
+    // env-gated (CI sets COBI_ES_RESILIENCE_FULL=1): re-run a tier-1
+    // service slice with the resilience layer on across strategies and
+    // solvers; unset, a single smoke pass keeps the path alive locally
+    let full = std::env::var("COBI_ES_RESILIENCE_FULL").is_ok();
+    let strategies: &[cobi_es::decompose::Strategy] = if full {
+        &[
+            cobi_es::decompose::Strategy::Window,
+            cobi_es::decompose::Strategy::Tree,
+            cobi_es::decompose::Strategy::Streaming,
+        ]
+    } else {
+        &[cobi_es::decompose::Strategy::Window]
+    };
+    let solvers: &[&str] = if full { &["cobi", "tabu"] } else { &["cobi"] };
+    let set_name = if full { "cnn_dm_20" } else { "bench_10" };
+    let docs = if full { 6 } else { 2 };
+
+    let set = benchmark_set(set_name).unwrap();
+    for &solver in solvers {
+        for &strategy in strategies {
+            let mut s = faulty_settings(0.05, 2);
+            s.pipeline.solver = solver.into();
+            s.pipeline.strategy = strategy;
+            s.service.workers = 2;
+            let svc = Service::start(&s).unwrap();
+            let tickets: Vec<_> = set.documents[..docs]
+                .iter()
+                .map(|d| svc.submit(d.clone()).unwrap())
+                .collect();
+            for t in tickets {
+                let summary = t.wait().unwrap();
+                assert_eq!(
+                    summary.selected.len(),
+                    set.summary_len,
+                    "{solver}/{strategy}"
+                );
+            }
+            let m = svc.metrics();
+            assert_eq!(m.completed, docs as u64, "{solver}/{strategy}");
+            assert!(m.resilience.is_some(), "{solver}/{strategy}");
+            svc.shutdown();
+        }
+    }
+}
