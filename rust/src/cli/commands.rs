@@ -86,6 +86,19 @@ fn apply_resilience_flags(settings: &mut Settings, args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Apply the `[obs]` flags: `--obs` switches span recording on,
+/// `--trace-out PATH` selects the JSONL sink (and implies `--obs` — a
+/// sink with tracing off would silently record nothing).
+fn apply_obs_flags(settings: &mut Settings, args: &Args) {
+    if args.get_bool("obs") {
+        settings.obs.enabled = true;
+    }
+    if let Some(path) = args.get("trace-out") {
+        settings.obs.trace_out = path.to_string();
+        settings.obs.enabled = true;
+    }
+}
+
 fn pipeline_from(settings: &Settings) -> Result<(EsPipeline, Option<ArtifactRuntime>)> {
     let rt = if settings.cobi.backend == "hlo" {
         Some(ArtifactRuntime::open_default().context(
@@ -97,9 +110,13 @@ fn pipeline_from(settings: &Settings) -> Result<(EsPipeline, Option<ArtifactRunt
     // with the resilience layer on (or faults on a COBI solver), the
     // pipeline's solver runs behind the ResilientSolver/fault wiring —
     // one decision point shared with the service's local-route workers
-    if let Some(p) =
-        crate::resilience::resilient_pipeline(settings, &settings.pipeline, rt.as_ref(), None)?
-    {
+    if let Some(p) = crate::resilience::resilient_pipeline(
+        settings,
+        &settings.pipeline,
+        rt.as_ref(),
+        None,
+        None,
+    )? {
         return Ok((p, rt));
     }
     let p = EsPipeline::from_config(&settings.pipeline, &settings.cobi, rt.as_ref())?;
@@ -284,6 +301,7 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     apply_pipeline_flags(&mut settings, args)?;
     apply_pool_flags(&mut settings, args)?;
     apply_resilience_flags(&mut settings, args)?;
+    apply_obs_flags(&mut settings, args);
     settings.service.workers = args.get_usize("workers", settings.service.workers)?;
     let requests = args.get_usize("requests", 20)?;
 
@@ -350,6 +368,20 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
             },
         );
     }
+    if settings.obs.enabled {
+        println!(
+            "observability: tracing on (ring {}, exemplars {}){}",
+            settings.obs.ring_capacity,
+            settings.obs.exemplars,
+            if settings.obs.trace_out.is_empty() {
+                String::new()
+            } else {
+                format!(" | trace-out {}", settings.obs.trace_out)
+            },
+        );
+    }
+    let trace_out = (!settings.obs.trace_out.is_empty())
+        .then(|| std::path::PathBuf::from(&settings.obs.trace_out));
 
     // --port: run the TCP endpoint until killed
     if let Some(port) = args.get("port") {
@@ -357,13 +389,29 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         let svc = std::sync::Arc::new(Service::start_with(&settings, rt.as_ref())?);
         let server = crate::service::tcp::TcpServer::start(svc.clone(), port)?;
         println!(
-            "listening on {} — send document text then a '{}' line",
+            "listening on {} — send document text then a '{}' line \
+             ('{}' report | '{}' json | '{}' exposition)",
             server.addr,
-            crate::service::tcp::EOF_MARKER
+            crate::service::tcp::EOF_MARKER,
+            crate::service::tcp::STATS_MARKER,
+            crate::service::tcp::STATS_JSON_MARKER,
+            crate::service::tcp::METRICS_MARKER,
         );
+        let mut ticks = 0u64;
         loop {
-            std::thread::sleep(std::time::Duration::from_secs(5));
-            println!("{}", svc.metrics().report());
+            // half-second trace flushes keep the JSONL near-live; the
+            // one-line report stays on its old 5s cadence
+            std::thread::sleep(std::time::Duration::from_millis(500));
+            if let Some(path) = &trace_out {
+                let spans = svc.obs().traces().drain();
+                if let Err(e) = crate::obs::export::append_jsonl(path, &spans) {
+                    eprintln!("trace export failed: {e}");
+                }
+            }
+            ticks += 1;
+            if ticks % 10 == 0 {
+                println!("{}", svc.metrics().report());
+            }
         }
     }
 
@@ -391,6 +439,11 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     let wall = t0.elapsed().as_secs_f64();
     println!("completed {ok}/{requests} in {wall:.2}s ({:.1} docs/s)", ok as f64 / wall);
     println!("{}", svc.metrics().report());
+    if let Some(path) = &trace_out {
+        let spans = svc.obs().traces().drain();
+        crate::obs::export::append_jsonl(path, &spans)?;
+        println!("wrote {} trace trees to {}", spans.len(), path.display());
+    }
     svc.shutdown();
     Ok(())
 }

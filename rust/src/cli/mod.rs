@@ -31,6 +31,7 @@ const BOOLEAN_FLAGS: &[&str] = &[
     "resilience",
     "calibrate",
     "no-repair",
+    "obs",
 ];
 
 impl Args {
@@ -112,7 +113,7 @@ COMMANDS:
                [--fault-drift F] [--fault-seed N]
   experiment   Regenerate a paper figure/table
                <fig1|fig2|fig3|fig5|fig6|fig7|fig8|table1|supp-optima|
-                fault-sweep|all>
+                fault-sweep|energy-report|all>
                [--full] [--out <file.md>] [--csv]
   gen-corpus   Write a benchmark set as text files
                --set <name> --out <dir>
@@ -125,6 +126,9 @@ COMMANDS:
                network mode: --port <u16> (line protocol; text then
                a '::EOF::' line -> 'OK <m>' + m summary lines;
                a '::STATS::' line -> 'OK 1' + a metrics report line;
+               a '::STATS JSON::' line -> 'OK 1' + one JSON stats line;
+               a '::METRICS::' line -> 'OK <n>' + n Prometheus-style
+               exposition lines (energy ledger included);
                a '::STREAM::' first line opens a SUMMARIZE_STREAM
                session: chunks ended by '::CHUNK::' each return a
                'REV <m>' summary revision, '::EOF::' closes with the
@@ -140,6 +144,9 @@ COMMANDS:
                verify-and-retry) [--replication N] [--calibrate]
                [--no-repair] fault injection: [--fault-stuck F]
                [--fault-drift F] [--fault-seed N]
+               observability: [--obs] (request-scoped tracing)
+               [--trace-out <file.jsonl>] (JSONL span dump; implies
+               --obs)
   doctor       Check artifacts, PJRT runtime and device calibration
   help         Show this message
 

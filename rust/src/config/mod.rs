@@ -358,6 +358,36 @@ impl Default for ResilienceConfig {
     }
 }
 
+/// Observability parameters (`obs::ObsShared`): request-scoped span
+/// tracing and its bounded buffers. The fleet energy ledger and the
+/// slow-request exemplar store are always on (O(1)-memory counters);
+/// this section only governs span recording.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ObsConfig {
+    /// Record per-request span trees (default off: the serving hot path
+    /// allocates nothing for tracing until this is set, pinned by
+    /// `tests/alloc_audit.rs`). `serve --trace-out <path>` also enables
+    /// it.
+    pub enabled: bool,
+    /// Bound on buffered span trees (oldest overwritten past it).
+    pub ring_capacity: usize,
+    /// Slowest-request exemplars kept for `::STATS::`.
+    pub exemplars: usize,
+    /// JSONL trace-dump path ("" = no dump). CLI: `--trace-out`.
+    pub trace_out: String,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            ring_capacity: 256,
+            exemplars: 8,
+            trace_out: String::new(),
+        }
+    }
+}
+
 /// Root settings object.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Settings {
@@ -375,6 +405,8 @@ pub struct Settings {
     pub portfolio: PortfolioConfig,
     /// Hardware fault model + resilience-layer parameters.
     pub resilience: ResilienceConfig,
+    /// Observability (span tracing) parameters.
+    pub obs: ObsConfig,
     /// Directory containing AOT artifacts (manifest.txt etc.).
     pub artifacts_dir: String,
 }
@@ -553,6 +585,11 @@ impl Settings {
         if let Some(v) = doc.get_i64("resilience.fault_seed") {
             self.resilience.fault.seed = v as u64;
         }
+
+        set!(self.obs.enabled, get_bool, "obs.enabled");
+        set!(self.obs.ring_capacity, get_i64, "obs.ring_capacity");
+        set!(self.obs.exemplars, get_i64, "obs.exemplars");
+        set!(self.obs.trace_out, get_str, "obs.trace_out");
         Ok(())
     }
 }
@@ -744,6 +781,32 @@ fault_seed = 1234
         assert!((s.resilience.fault.burst_rate - 0.2).abs() < 1e-7);
         assert!((s.resilience.fault.burst_amp - 8.0).abs() < 1e-7);
         assert_eq!(s.resilience.fault.seed, 1234);
+    }
+
+    #[test]
+    fn obs_defaults_and_overrides() {
+        let s = Settings::default();
+        assert!(!s.obs.enabled, "span tracing must default off");
+        assert_eq!(s.obs.ring_capacity, 256);
+        assert_eq!(s.obs.exemplars, 8);
+        assert!(s.obs.trace_out.is_empty());
+
+        let doc = toml::Document::parse(
+            r#"
+[obs]
+enabled = true
+ring_capacity = 64
+exemplars = 4
+trace_out = "/tmp/trace.jsonl"
+"#,
+        )
+        .unwrap();
+        let mut s = Settings::default();
+        s.apply(&doc).unwrap();
+        assert!(s.obs.enabled);
+        assert_eq!(s.obs.ring_capacity, 64);
+        assert_eq!(s.obs.exemplars, 4);
+        assert_eq!(s.obs.trace_out, "/tmp/trace.jsonl");
     }
 
     #[test]

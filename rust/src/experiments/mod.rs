@@ -7,6 +7,7 @@
 //! single-core box; `--full` reproduces the paper-sized sweeps.
 
 pub mod common;
+pub mod energy_report;
 pub mod fault_sweep;
 pub mod fig1;
 pub mod fig23;
@@ -130,6 +131,7 @@ pub const ALL_EXPERIMENTS: &[&str] = &[
     "table1",
     "supp-optima",
     "fault-sweep",
+    "energy-report",
 ];
 
 /// Run one experiment by id.
@@ -144,6 +146,7 @@ pub fn run(id: &str, scale: Scale, settings: &Settings) -> Result<Vec<Report>> {
         "table1" => table1::run(scale, settings),
         "supp-optima" => supp::run(scale, settings),
         "fault-sweep" => fault_sweep::run(scale, settings),
+        "energy-report" => energy_report::run(scale, settings),
         other => bail!("unknown experiment '{other}' (try one of {ALL_EXPERIMENTS:?})"),
     }
 }

@@ -18,6 +18,7 @@ pub mod embed;
 pub mod experiments;
 pub mod ising;
 pub mod metrics;
+pub mod obs;
 pub mod pipeline;
 pub mod portfolio;
 pub mod quant;

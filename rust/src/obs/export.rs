@@ -1,0 +1,450 @@
+//! Observability exporters: Prometheus-style text exposition
+//! (`::METRICS::`), machine-readable stats JSON (`::STATS JSON::`), and
+//! the JSONL trace dump behind `serve --trace-out`.
+//!
+//! All three render from plain snapshots (`ServiceMetrics`, drained
+//! [`Span`] trees) with hand-rolled formatting — no `serde` in the
+//! vendored dependency set (decision #5). The exposition follows the
+//! Prometheus text conventions (`# TYPE` lines, `{label="…"}` pairs,
+//! histogram `_bucket`/`_sum`/`_count` triplets with cumulative
+//! counts); metric names are prefixed `cobi_es_`.
+
+use std::io::Write as _;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::json::escape_into;
+use super::span::Span;
+use super::{bucket_label, ObsMetrics};
+use crate::portfolio::BackendKind;
+use crate::service::metrics::{Histogram, ServiceMetrics};
+
+/// Render the full Prometheus-style exposition for one metrics
+/// snapshot. Every line ends with `\n`; the `::METRICS::` handler
+/// frames it as `OK <line-count>` + the lines.
+pub fn exposition(m: &ServiceMetrics) -> String {
+    let mut out = String::with_capacity(2048);
+    let push_counter = |out: &mut String, name: &str, labels: &str, v: u64| {
+        out.push_str(&format!("cobi_es_{name}{labels} {v}\n"));
+    };
+
+    out.push_str("# TYPE cobi_es_requests_total counter\n");
+    for (state, v) in [
+        ("submitted", m.submitted),
+        ("completed", m.completed),
+        ("failed", m.failed),
+        ("rejected", m.rejected),
+    ] {
+        push_counter(&mut out, "requests_total", &format!("{{state=\"{state}\"}}"), v);
+    }
+
+    out.push_str("# TYPE cobi_es_summaries_total counter\n");
+    for (strategy, v) in [
+        ("window", m.strategies.window),
+        ("tree", m.strategies.tree),
+        ("stream", m.strategies.stream),
+    ] {
+        push_counter(
+            &mut out,
+            "summaries_total",
+            &format!("{{strategy=\"{strategy}\"}}"),
+            v,
+        );
+    }
+
+    histogram_lines(&mut out, "queue_wait_seconds", "", &m.queue_hist);
+    histogram_lines(&mut out, "solve_seconds", "", &m.solve_hist);
+
+    if m.pool.devices > 0 {
+        out.push_str("# TYPE cobi_es_pool_devices gauge\n");
+        out.push_str(&format!("cobi_es_pool_devices {}\n", m.pool.devices));
+        out.push_str("# TYPE cobi_es_pool_dispatches_total counter\n");
+        push_counter(&mut out, "pool_dispatches_total", "", m.pool.dispatches);
+        out.push_str("# TYPE cobi_es_pool_requests_total counter\n");
+        push_counter(&mut out, "pool_requests_total", "", m.pool.requests);
+        out.push_str("# TYPE cobi_es_pool_instances_total counter\n");
+        push_counter(&mut out, "pool_instances_total", "", m.pool.instances);
+        out.push_str("# TYPE cobi_es_pool_busy_seconds_total counter\n");
+        out.push_str(&format!("cobi_es_pool_busy_seconds_total {}\n", m.pool.busy_s));
+    }
+
+    if let Some(p) = &m.portfolio {
+        out.push_str("# TYPE cobi_es_portfolio_routes_total counter\n");
+        for b in BackendKind::ALL {
+            push_counter(
+                &mut out,
+                "portfolio_routes_total",
+                &format!("{{backend=\"{}\"}}", b.name()),
+                p.route_count(b),
+            );
+        }
+        out.push_str("# TYPE cobi_es_cache_events_total counter\n");
+        for (event, v) in [
+            ("lookup", p.cache.lookups),
+            ("exact_hit", p.cache.exact_hits),
+            ("warm_hit", p.cache.warm_hits),
+            ("miss", p.cache.misses),
+        ] {
+            push_counter(
+                &mut out,
+                "cache_events_total",
+                &format!("{{event=\"{event}\"}}"),
+                v,
+            );
+        }
+    }
+
+    if let Some(r) = &m.resilience {
+        out.push_str("# TYPE cobi_es_resilience_events_total counter\n");
+        for (event, v) in [
+            ("requests", r.requests),
+            ("replica_solves", r.replica_solves),
+            ("vote_disagreements", r.vote_disagreements),
+            ("verify_failures", r.verify_failures),
+            ("retries", r.retries),
+            ("escalations", r.escalations),
+            ("repairs", r.repairs),
+        ] {
+            push_counter(
+                &mut out,
+                "resilience_events_total",
+                &format!("{{event=\"{event}\"}}"),
+                v,
+            );
+        }
+    }
+
+    if let Some(o) = &m.obs {
+        out.push_str("# TYPE cobi_es_traces_total counter\n");
+        push_counter(&mut out, "traces_total", "{state=\"recorded\"}", o.recorded);
+        push_counter(&mut out, "traces_total", "{state=\"dropped\"}", o.dropped);
+        out.push_str("# TYPE cobi_es_dispatch_instances_total counter\n");
+        push_counter(&mut out, "dispatch_instances_total", "", o.dispatch_instances);
+
+        // the fleet energy ledger: joules, device-seconds and solve
+        // counts per (backend, subsystem, size bucket)
+        out.push_str("# TYPE cobi_es_energy_joules_total counter\n");
+        out.push_str("# TYPE cobi_es_device_seconds_total counter\n");
+        out.push_str("# TYPE cobi_es_ledger_solves_total counter\n");
+        for row in &o.ledger {
+            let labels = format!(
+                "{{backend=\"{}\",subsystem=\"{}\",bucket=\"{}\"}}",
+                row.backend,
+                row.subsystem,
+                bucket_label(row.bucket)
+            );
+            out.push_str(&format!("cobi_es_energy_joules_total{labels} {}\n", row.cell.joules));
+            out.push_str(&format!(
+                "cobi_es_device_seconds_total{labels} {}\n",
+                row.cell.device_s
+            ));
+            out.push_str(&format!("cobi_es_ledger_solves_total{labels} {}\n", row.cell.solves));
+        }
+    }
+
+    out
+}
+
+/// Append a Prometheus histogram (`_bucket` cumulative counts + `_sum`
+/// + `_count`) for `h` under `cobi_es_<name>`.
+fn histogram_lines(out: &mut String, name: &str, labels: &str, h: &Histogram) {
+    out.push_str(&format!("# TYPE cobi_es_{name} histogram\n"));
+    let mut cum = 0u64;
+    for (bound, count) in h.buckets() {
+        cum += count;
+        let le = if bound.is_finite() {
+            format!("{bound}")
+        } else {
+            "+Inf".to_string()
+        };
+        let sep = if labels.is_empty() { "" } else { "," };
+        out.push_str(&format!(
+            "cobi_es_{name}_bucket{{{labels}{sep}le=\"{le}\"}} {cum}\n"
+        ));
+    }
+    out.push_str(&format!("cobi_es_{name}_sum{labels2} {}\n", h.sum(), labels2 = braced(labels)));
+    out.push_str(&format!(
+        "cobi_es_{name}_count{labels2} {}\n",
+        h.count(),
+        labels2 = braced(labels)
+    ));
+}
+
+fn braced(labels: &str) -> String {
+    if labels.is_empty() {
+        String::new()
+    } else {
+        format!("{{{labels}}}")
+    }
+}
+
+/// Render one metrics snapshot as a single-line JSON object — the
+/// `::STATS JSON::` reply body. Shape (stable keys, all optional
+/// sections `null` when absent):
+/// `{"requests": {...}, "latency": {...}, "strategies": {...},
+///   "pool": {...}|null, "portfolio": {...}|null,
+///   "resilience": {...}|null, "obs": {...}|null}`.
+pub fn stats_json(m: &ServiceMetrics) -> String {
+    let mut out = String::with_capacity(1024);
+    out.push('{');
+
+    out.push_str("\"requests\":{");
+    out.push_str(&format!(
+        "\"submitted\":{},\"completed\":{},\"failed\":{},\"rejected\":{}",
+        m.submitted, m.completed, m.failed, m.rejected
+    ));
+    out.push('}');
+
+    let l = m.latency_summary();
+    out.push_str(&format!(
+        ",\"latency\":{{\"queue_p50_s\":{},\"queue_p99_s\":{},\"solve_p50_s\":{},\"solve_p99_s\":{}}}",
+        l.queue_p50, l.queue_p99, l.solve_p50, l.solve_p99
+    ));
+
+    out.push_str(&format!(
+        ",\"strategies\":{{\"window\":{},\"tree\":{},\"stream\":{},\"sessions\":{},\"chunks\":{},\"revisions\":{}}}",
+        m.strategies.window,
+        m.strategies.tree,
+        m.strategies.stream,
+        m.strategies.stream_sessions,
+        m.strategies.stream_chunks,
+        m.strategies.stream_revisions
+    ));
+
+    if m.pool.devices > 0 {
+        out.push_str(&format!(
+            ",\"pool\":{{\"devices\":{},\"dispatches\":{},\"requests\":{},\"instances\":{},\"busy_s\":{},\"occupancy\":{}}}",
+            m.pool.devices,
+            m.pool.dispatches,
+            m.pool.requests,
+            m.pool.instances,
+            m.pool.busy_s,
+            m.pool.batch_occupancy()
+        ));
+    } else {
+        out.push_str(",\"pool\":null");
+    }
+
+    if let Some(p) = &m.portfolio {
+        out.push_str(",\"portfolio\":{\"routes\":{");
+        for (i, b) in BackendKind::ALL.into_iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("\"{}\":{}", b.name(), p.route_count(b)));
+        }
+        out.push_str(&format!(
+            "}},\"cache\":{{\"lookups\":{},\"exact_hits\":{},\"warm_hits\":{},\"misses\":{},\"entries\":{}}}}}",
+            p.cache.lookups, p.cache.exact_hits, p.cache.warm_hits, p.cache.misses, p.cache.entries
+        ));
+    } else {
+        out.push_str(",\"portfolio\":null");
+    }
+
+    if let Some(r) = &m.resilience {
+        out.push_str(&format!(
+            ",\"resilience\":{{\"requests\":{},\"replica_solves\":{},\"vote_disagreements\":{},\"verify_failures\":{},\"retries\":{},\"escalations\":{},\"repairs\":{}}}",
+            r.requests,
+            r.replica_solves,
+            r.vote_disagreements,
+            r.verify_failures,
+            r.retries,
+            r.escalations,
+            r.repairs
+        ));
+    } else {
+        out.push_str(",\"resilience\":null");
+    }
+
+    match &m.obs {
+        Some(o) => {
+            out.push_str(&format!(
+                ",\"obs\":{{\"tracing\":{},\"recorded\":{},\"dropped\":{},\"energy_j\":{},\"device_s\":{}",
+                o.tracing_enabled, o.recorded, o.dropped, o.total_joules(), o.total_device_s()
+            ));
+            out.push_str(",\"exemplars\":[");
+            for (i, e) in o.exemplars.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push_str("{\"doc\":\"");
+                escape_into(&mut out, &e.doc);
+                out.push_str(&format!("\",\"secs\":{}}}", e.secs));
+            }
+            out.push_str("],\"ledger\":[");
+            for (i, row) in o.ledger.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push_str("{\"backend\":\"");
+                escape_into(&mut out, &row.backend);
+                out.push_str(&format!(
+                    "\",\"subsystem\":\"{}\",\"bucket\":\"{}\",\"solves\":{},\"device_s\":{},\"joules\":{}}}",
+                    row.subsystem,
+                    bucket_label(row.bucket),
+                    row.cell.solves,
+                    row.cell.device_s,
+                    row.cell.joules
+                ));
+            }
+            out.push_str("]}");
+        }
+        None => out.push_str(",\"obs\":null"),
+    }
+
+    out.push('}');
+    out
+}
+
+/// Convenience for callers that only hold an [`ObsMetrics`]: total
+/// ledger joules per backend as `(backend, joules)` pairs.
+pub fn joules_by_backend(o: &ObsMetrics) -> Vec<(String, f64)> {
+    let mut out: Vec<(String, f64)> = Vec::new();
+    for row in &o.ledger {
+        match out.iter_mut().find(|(b, _)| *b == row.backend) {
+            Some((_, j)) => *j += row.cell.joules,
+            None => out.push((row.backend.clone(), row.cell.joules)),
+        }
+    }
+    out
+}
+
+/// Append `spans` to `path` as JSONL — one full span tree (wall
+/// sections included) per line. Creates the file on first use.
+pub fn append_jsonl(path: &Path, spans: &[Span]) -> Result<()> {
+    if spans.is_empty() {
+        return Ok(());
+    }
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+        .with_context(|| format!("opening trace file {}", path.display()))?;
+    let mut buf = String::new();
+    for span in spans {
+        buf.push_str(&span.to_json(true));
+        buf.push('\n');
+    }
+    f.write_all(buf.as_bytes())
+        .with_context(|| format!("writing trace file {}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::json::JsonValue;
+    use crate::obs::{EnergyLedger, EnergyModel, Subsystem};
+    use crate::config::Settings;
+
+    fn snapshot_with_obs() -> ServiceMetrics {
+        let mut m = ServiceMetrics::default();
+        m.record_latency(
+            std::time::Duration::from_millis(1),
+            std::time::Duration::from_millis(20),
+        );
+        m.submitted = 3;
+        m.completed = 2;
+        let ledger = EnergyLedger::new(EnergyModel::from_settings(&Settings::default()));
+        ledger.charge("cobi", Subsystem::Pool, 20, 4);
+        ledger.charge("tabu", Subsystem::Resilience, 10, 1);
+        m.obs = Some(crate::obs::ObsMetrics {
+            tracing_enabled: true,
+            recorded: 1,
+            ledger: ledger.rows(),
+            exemplars: vec![crate::obs::Exemplar {
+                doc: "doc-1".into(),
+                secs: 0.021,
+            }],
+            ..Default::default()
+        });
+        m
+    }
+
+    #[test]
+    fn exposition_contains_ledger_counters_and_histograms() {
+        let text = exposition(&snapshot_with_obs());
+        assert!(text.contains("# TYPE cobi_es_energy_joules_total counter"), "{text}");
+        assert!(
+            text.contains("cobi_es_energy_joules_total{backend=\"cobi\",subsystem=\"pool\",bucket=\"le32\"}"),
+            "{text}"
+        );
+        assert!(text.contains("cobi_es_device_seconds_total{backend=\"tabu\""), "{text}");
+        assert!(text.contains("cobi_es_ledger_solves_total"), "{text}");
+        assert!(text.contains("cobi_es_requests_total{state=\"submitted\"} 3"), "{text}");
+        assert!(text.contains("cobi_es_solve_seconds_bucket{le=\"+Inf\"} 1"), "{text}");
+        assert!(text.contains("cobi_es_solve_seconds_count 1"), "{text}");
+        // every line is either a comment or "name{labels} value"
+        for line in text.lines() {
+            assert!(
+                line.starts_with("# TYPE cobi_es_") || line.starts_with("cobi_es_"),
+                "{line}"
+            );
+        }
+    }
+
+    #[test]
+    fn histogram_bucket_counts_are_cumulative() {
+        let mut h = Histogram::new(vec![1e-3, 1e-2]);
+        h.record(0.5e-3);
+        h.record(5e-3);
+        h.record(5.0);
+        let mut out = String::new();
+        histogram_lines(&mut out, "t_seconds", "", &h);
+        assert!(out.contains("cobi_es_t_seconds_bucket{le=\"0.001\"} 1"), "{out}");
+        assert!(out.contains("cobi_es_t_seconds_bucket{le=\"0.01\"} 2"), "{out}");
+        assert!(out.contains("cobi_es_t_seconds_bucket{le=\"+Inf\"} 3"), "{out}");
+        assert!(out.contains("cobi_es_t_seconds_count 3"), "{out}");
+    }
+
+    #[test]
+    fn stats_json_parses_and_round_trips_counters() {
+        let m = snapshot_with_obs();
+        let line = stats_json(&m);
+        let v = JsonValue::parse(&line).unwrap();
+        assert_eq!(v.get("requests").unwrap().get("submitted").unwrap().as_u64(), Some(3));
+        assert_eq!(v.get("pool"), Some(&JsonValue::Null));
+        assert_eq!(v.get("portfolio"), Some(&JsonValue::Null));
+        let obs = v.get("obs").unwrap();
+        assert_eq!(obs.get("recorded").unwrap().as_u64(), Some(1));
+        let ledger = obs.get("ledger").unwrap().as_array().unwrap();
+        assert_eq!(ledger.len(), 2);
+        assert_eq!(ledger[0].get("backend").unwrap().as_str(), Some("cobi"));
+        assert_eq!(ledger[0].get("solves").unwrap().as_u64(), Some(4));
+        let ex = obs.get("exemplars").unwrap().as_array().unwrap();
+        assert_eq!(ex[0].get("doc").unwrap().as_str(), Some("doc-1"));
+        assert!(obs.get("energy_j").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn joules_by_backend_aggregates_rows() {
+        let m = snapshot_with_obs();
+        let by = joules_by_backend(m.obs.as_ref().unwrap());
+        assert_eq!(by.len(), 2);
+        assert_eq!(by[0].0, "cobi");
+        assert!(by.iter().all(|(_, j)| *j > 0.0));
+    }
+
+    #[test]
+    fn jsonl_appends_one_parseable_line_per_tree() {
+        let dir = std::env::temp_dir().join(format!("cobi-es-obs-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let spans = vec![
+            Span::new("request").with("doc", "a"),
+            Span::new("request").with("doc", "b"),
+        ];
+        append_jsonl(&path, &spans).unwrap();
+        append_jsonl(&path, &spans[..1].to_vec()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        for line in lines {
+            let v = JsonValue::parse(line).unwrap();
+            assert!(v.get("stage").is_some());
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,429 @@
+//! Fleet-wide energy ledger: modeled joules and device-seconds
+//! aggregated by (backend × subsystem × instance-size bucket).
+//!
+//! Every Ising solve the fleet dispatches is charged here with its
+//! *modeled* cost — a pure function of (backend, instance size) built
+//! from the same constants as [`crate::metrics::tts::TimingModel`]
+//! (COBI per-solve time/power, software tabu sweep time, CPU solution
+//! evaluation time) — so ledger contents are deterministic for a given
+//! workload no matter how the pool coalesced or which worker served it.
+//! Wall-clock time is deliberately NOT a ledger input (decision #18);
+//! it lives in span `wall` sections and `ServiceMetrics` histograms.
+//!
+//! Charging sites (each solve is charged exactly once):
+//!
+//! * [`LedgerSolver`] wraps every non-portfolio pool backend inside
+//!   `sched::pool::build_solver`, *underneath* the resilience layer, so
+//!   replicated/retried solves are charged at their true multiplicity;
+//! * `SolverPortfolio` charges its ROUTED backend per fresh solve
+//!   (cache-served instances cost no device time and are not charged);
+//! * the `energy-report` experiment charges one shared solve profile to
+//!   several backends to reproduce the paper's energy-comparison table.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::cobi::SeededGroup;
+use crate::config::Settings;
+use crate::portfolio::{size_bucket, N_BUCKETS, SIZE_BOUNDS};
+use crate::sched::pool::PoolSolver;
+use crate::solvers::SolveResult;
+
+/// Enumeration ceiling for the modeled brute-force backend: documents
+/// never produce windows past the portfolio's `EXACT_HARD_CAP`, and
+/// capping the exponent keeps `2^n` finite for any caller.
+const EXACT_MODEL_CAP: usize = 60;
+
+/// Which layer of the serving stack dispatched a solve.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Subsystem {
+    /// Inline (no-pool) pipeline workers.
+    Pipeline,
+    /// Shared device-pool workers.
+    Pool,
+    /// `SUMMARIZE_STREAM` sessions (local route).
+    Stream,
+    /// Solves issued through the resilience layer (replicas, retries,
+    /// calibration probes included).
+    Resilience,
+    /// The experiment harness.
+    Experiment,
+}
+
+impl Subsystem {
+    /// All subsystems, in ledger-row order.
+    pub const ALL: [Subsystem; 5] = [
+        Subsystem::Pipeline,
+        Subsystem::Pool,
+        Subsystem::Stream,
+        Subsystem::Resilience,
+        Subsystem::Experiment,
+    ];
+
+    /// Stable lowercase label (exposition + JSON).
+    pub fn name(self) -> &'static str {
+        match self {
+            Subsystem::Pipeline => "pipeline",
+            Subsystem::Pool => "pool",
+            Subsystem::Stream => "stream",
+            Subsystem::Resilience => "resilience",
+            Subsystem::Experiment => "experiment",
+        }
+    }
+}
+
+/// Modeled cost of one solve: device occupancy and total energy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EnergyCost {
+    /// Seconds of device (COBI) or CPU (software) solve time.
+    pub device_s: f64,
+    /// Joules: solve energy plus the CPU solution-evaluation energy,
+    /// matching `TimingModel::iter_energy_j`.
+    pub joules: f64,
+}
+
+/// The per-backend cost model (pure data, cheap to copy).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EnergyModel {
+    /// COBI per-solve anneal time (s) — `[cobi] solve_time_s`.
+    pub cobi_solve_s: f64,
+    /// COBI chip power (W) — `[cobi] power_w`.
+    pub cobi_power_w: f64,
+    /// Software tabu per-solve time (s) — `[timing] tabu_time_s`.
+    pub tabu_time_s: f64,
+    /// CPU per-solution evaluation time (s) — `[timing] eval_time_s`.
+    pub eval_time_s: f64,
+    /// CPU power (W) — `[timing] cpu_power_w`.
+    pub cpu_power_w: f64,
+}
+
+impl EnergyModel {
+    /// Build from the `[cobi]` and `[timing]` config sections.
+    pub fn from_settings(settings: &Settings) -> Self {
+        Self {
+            cobi_solve_s: settings.cobi.solve_time_s,
+            cobi_power_w: settings.cobi.power_w,
+            tabu_time_s: settings.timing.tabu_time_s,
+            eval_time_s: settings.timing.eval_time_s,
+            cpu_power_w: settings.timing.cpu_power_w,
+        }
+    }
+
+    /// Modeled cost of ONE solve of an `n`-spin instance on `backend`.
+    ///
+    /// `cobi` uses the chip model; `tabu`/`sa` (and any unrecognized
+    /// software backend) use the software sweep model; `greedy` costs
+    /// one evaluation-time descent; `exact`/`brute` model exhaustive
+    /// enumeration (`2^n` evaluations, exponent capped). Every arm adds
+    /// the CPU evaluation energy, mirroring `TimingModel`.
+    pub fn per_instance(&self, backend: &str, n: usize) -> EnergyCost {
+        let eval_j = self.eval_time_s * self.cpu_power_w;
+        match backend {
+            "cobi" => EnergyCost {
+                device_s: self.cobi_solve_s,
+                joules: self.cobi_solve_s * self.cobi_power_w + eval_j,
+            },
+            "greedy" => EnergyCost {
+                device_s: self.eval_time_s,
+                joules: self.eval_time_s * self.cpu_power_w + eval_j,
+            },
+            "exact" | "brute" => {
+                let evals = 2f64.powi(n.min(EXACT_MODEL_CAP) as i32);
+                let secs = evals * self.eval_time_s;
+                EnergyCost {
+                    device_s: secs,
+                    joules: secs * self.cpu_power_w,
+                }
+            }
+            // tabu, sa, and anything unrecognized: software sweep model
+            _ => EnergyCost {
+                device_s: self.tabu_time_s,
+                joules: self.tabu_time_s * self.cpu_power_w + eval_j,
+            },
+        }
+    }
+}
+
+/// One accumulation cell (and the ledger's grand total).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LedgerCell {
+    /// Instances charged.
+    pub solves: u64,
+    /// Modeled device/CPU solve seconds.
+    pub device_s: f64,
+    /// Modeled joules.
+    pub joules: f64,
+}
+
+/// One exported ledger row: a cell plus its (backend, subsystem, size
+/// bucket) key.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LedgerRow {
+    /// Backend label (`cobi`, `tabu`, `sa`, `greedy`, `exact`, …).
+    pub backend: String,
+    /// Dispatching subsystem label.
+    pub subsystem: &'static str,
+    /// Size-bucket index (see [`bucket_label`]).
+    pub bucket: usize,
+    /// The accumulated cell.
+    pub cell: LedgerCell,
+}
+
+/// Human/exposition label of size bucket `b`: `le8`/`le16`/`le32`/
+/// `le64`/`gt64` (from the portfolio's [`SIZE_BOUNDS`]).
+pub fn bucket_label(b: usize) -> String {
+    if b < SIZE_BOUNDS.len() {
+        format!("le{}", SIZE_BOUNDS[b])
+    } else {
+        format!("gt{}", SIZE_BOUNDS[SIZE_BOUNDS.len() - 1])
+    }
+}
+
+type Key = (String, Subsystem, usize);
+
+/// The fleet-wide ledger (see module docs). Shared via `Arc`; charging
+/// takes one short mutex hold per dispatch.
+#[derive(Debug)]
+pub struct EnergyLedger {
+    model: EnergyModel,
+    cells: Mutex<BTreeMap<Key, LedgerCell>>,
+}
+
+impl EnergyLedger {
+    /// Empty ledger over `model`.
+    pub fn new(model: EnergyModel) -> Self {
+        Self {
+            model,
+            cells: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// The cost model (spans use it for per-solve modeled attributes).
+    pub fn model(&self) -> &EnergyModel {
+        &self.model
+    }
+
+    /// Charge one `n`-spin instance `count` times.
+    pub fn charge(&self, backend: &str, subsystem: Subsystem, n: usize, count: u64) {
+        self.charge_sizes(backend, subsystem, (0..count).map(|_| n));
+    }
+
+    /// Charge one instance per size in `sizes` (single lock hold).
+    pub fn charge_sizes(
+        &self,
+        backend: &str,
+        subsystem: Subsystem,
+        sizes: impl IntoIterator<Item = usize>,
+    ) {
+        // accumulate per bucket outside the lock
+        let mut local: [LedgerCell; N_BUCKETS] = [LedgerCell::default(); N_BUCKETS];
+        for n in sizes {
+            let cost = self.model.per_instance(backend, n);
+            let cell = &mut local[size_bucket(n)];
+            cell.solves += 1;
+            cell.device_s += cost.device_s;
+            cell.joules += cost.joules;
+        }
+        let mut cells = self.cells.lock().unwrap();
+        for (b, add) in local.iter().enumerate() {
+            if add.solves == 0 {
+                continue;
+            }
+            let cell = cells
+                .entry((backend.to_string(), subsystem, b))
+                .or_default();
+            cell.solves += add.solves;
+            cell.device_s += add.device_s;
+            cell.joules += add.joules;
+        }
+    }
+
+    /// All non-empty rows in (backend, subsystem, bucket) order.
+    pub fn rows(&self) -> Vec<LedgerRow> {
+        self.cells
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|((backend, sub, bucket), cell)| LedgerRow {
+                backend: backend.clone(),
+                subsystem: sub.name(),
+                bucket: *bucket,
+                cell: *cell,
+            })
+            .collect()
+    }
+
+    /// Grand total across every cell.
+    pub fn totals(&self) -> LedgerCell {
+        let cells = self.cells.lock().unwrap();
+        let mut t = LedgerCell::default();
+        for cell in cells.values() {
+            t.solves += cell.solves;
+            t.device_s += cell.device_s;
+            t.joules += cell.joules;
+        }
+        t
+    }
+
+    /// Total for one backend across subsystems and buckets.
+    pub fn backend_totals(&self, backend: &str) -> LedgerCell {
+        let cells = self.cells.lock().unwrap();
+        let mut t = LedgerCell::default();
+        for ((b, _, _), cell) in cells.iter() {
+            if b == backend {
+                t.solves += cell.solves;
+                t.device_s += cell.device_s;
+                t.joules += cell.joules;
+            }
+        }
+        t
+    }
+}
+
+/// [`PoolSolver`] decorator that charges the ledger for every instance
+/// of every successfully served dispatch (failed dispatches are retried
+/// by the pool and would double-charge), then returns the inner result
+/// untouched — solves, seeds and results are bit-identical with or
+/// without the wrapper.
+pub struct LedgerSolver {
+    inner: Box<dyn PoolSolver>,
+    backend: String,
+    subsystem: Subsystem,
+    ledger: Arc<EnergyLedger>,
+}
+
+impl LedgerSolver {
+    /// Wrap `inner`, charging `(backend, subsystem)` cells of `ledger`.
+    pub fn new(
+        inner: Box<dyn PoolSolver>,
+        backend: &str,
+        subsystem: Subsystem,
+        ledger: Arc<EnergyLedger>,
+    ) -> Self {
+        Self {
+            inner,
+            backend: backend.to_string(),
+            subsystem,
+            ledger,
+        }
+    }
+}
+
+impl PoolSolver for LedgerSolver {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn solve_groups(&mut self, groups: &[SeededGroup<'_>]) -> Result<Vec<Vec<SolveResult>>> {
+        let out = self.inner.solve_groups(groups)?;
+        self.ledger.charge_sizes(
+            &self.backend,
+            self.subsystem,
+            groups
+                .iter()
+                .flat_map(|g| g.instances.iter().map(|inst| inst.n)),
+        );
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cobi::testutil::quantized_glass;
+    use crate::solvers::tabu::TabuSolver;
+
+    fn model() -> EnergyModel {
+        EnergyModel::from_settings(&Settings::default())
+    }
+
+    #[test]
+    fn per_instance_matches_the_timing_model_constants() {
+        let m = model();
+        let cobi = m.per_instance("cobi", 20);
+        assert!((cobi.device_s - 200e-6).abs() < 1e-15);
+        assert!((cobi.joules - (200e-6 * 25e-3 + 18.9e-6 * 20.0)).abs() < 1e-12);
+        let tabu = m.per_instance("tabu", 20);
+        assert!((tabu.device_s - 25e-3).abs() < 1e-15);
+        assert!((tabu.joules - (25e-3 + 18.9e-6) * 20.0).abs() < 1e-12);
+        let exact = m.per_instance("exact", 20);
+        assert!((exact.device_s - 1_048_576.0 * 18.9e-6).abs() < 1e-6);
+        // the paper's ordering: cobi ≪ tabu ≪ brute force
+        assert!(cobi.joules < tabu.joules);
+        assert!(tabu.joules < exact.joules);
+    }
+
+    #[test]
+    fn exact_exponent_is_capped() {
+        let m = model();
+        let huge = m.per_instance("exact", 10_000);
+        assert!(huge.joules.is_finite());
+        assert_eq!(huge.device_s, 2f64.powi(60) * m.eval_time_s);
+    }
+
+    #[test]
+    fn charges_aggregate_by_backend_subsystem_and_bucket() {
+        let ledger = EnergyLedger::new(model());
+        ledger.charge("cobi", Subsystem::Pool, 20, 3);
+        ledger.charge("cobi", Subsystem::Pool, 10, 1);
+        ledger.charge("tabu", Subsystem::Resilience, 20, 2);
+        let rows = ledger.rows();
+        assert_eq!(rows.len(), 3);
+        // BTreeMap order: backend, then subsystem, then bucket
+        assert_eq!(rows[0].backend, "cobi");
+        assert_eq!(rows[0].bucket, size_bucket(10));
+        assert_eq!(rows[1].cell.solves, 3);
+        assert_eq!(rows[2].subsystem, "resilience");
+        let t = ledger.totals();
+        assert_eq!(t.solves, 6);
+        let c = ledger.backend_totals("cobi");
+        assert_eq!(c.solves, 4);
+        let per = ledger.model().per_instance("cobi", 20);
+        assert!((rows[1].cell.joules - 3.0 * per.joules).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ledger_solver_charges_served_instances_and_passes_results_through() {
+        let ledger = Arc::new(EnergyLedger::new(model()));
+        let insts = vec![quantized_glass(1, 12), quantized_glass(2, 12)];
+
+        let mut raw = TabuSolver::seeded(0);
+        let expect = raw
+            .solve_groups(&[SeededGroup {
+                instances: &insts,
+                seed: 7,
+            }])
+            .unwrap();
+
+        let mut wrapped = LedgerSolver::new(
+            Box::new(TabuSolver::seeded(0)),
+            "tabu",
+            Subsystem::Pool,
+            ledger.clone(),
+        );
+        assert_eq!(wrapped.name(), "tabu");
+        let got = wrapped
+            .solve_groups(&[SeededGroup {
+                instances: &insts,
+                seed: 7,
+            }])
+            .unwrap();
+        for (a, b) in got[0].iter().zip(&expect[0]) {
+            assert_eq!(a.spins, b.spins, "ledger wrapper must not perturb results");
+            assert_eq!(a.energy.to_bits(), b.energy.to_bits());
+        }
+
+        let t = ledger.totals();
+        assert_eq!(t.solves, 2);
+        let per = ledger.model().per_instance("tabu", 12);
+        assert!((t.joules - 2.0 * per.joules).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bucket_labels_cover_every_bucket() {
+        let labels: Vec<String> = (0..N_BUCKETS).map(bucket_label).collect();
+        assert_eq!(labels, ["le8", "le16", "le32", "le64", "gt64"]);
+    }
+}

@@ -1,0 +1,470 @@
+//! Observability: request-scoped tracing + the fleet energy ledger.
+//!
+//! The cross-cutting layer every serving subsystem reports through
+//! (ROADMAP "structured per-request tracing spans"):
+//!
+//! * [`Span`] / [`TraceCollector`] — per-request span trees (ingest →
+//!   embed → decompose → quantize/solve per unit → score) carrying the
+//!   document seed, strategy, backend route, cache tier, replication
+//!   factor and modeled device time/energy, recorded into a bounded
+//!   never-blocking ring. Deterministic attributes are pure functions
+//!   of (config, document), so the pinned form of a trace is
+//!   byte-identical across pool shapes (decision #18); wall-clock
+//!   measurements (queue wait, solve time, coalesce occupancy) live in
+//!   separate `wall` sections excluded from pinned output.
+//! * [`EnergyLedger`] — fleet-wide modeled joules / device-seconds by
+//!   (backend × subsystem × size bucket); feeds the `energy-report`
+//!   experiment and the `::METRICS::` exposition.
+//! * Exporters ([`export`]) — JSONL trace dump (`serve --trace-out`),
+//!   Prometheus-style text exposition (`::METRICS::`), machine-readable
+//!   stats (`::STATS JSON::`), and the top-K slowest-request exemplar
+//!   store surfaced in `::STATS::`.
+//!
+//! Determinism contract: tracing never draws from any RNG stream, and
+//! with `[obs] enabled = false` (the default) [`ObsShared::start_request`]
+//! returns `None` before allocating — the zero-alloc refine hot path is
+//! untouched (pinned by `tests/alloc_audit.rs`). The energy ledger and
+//! exemplar store stay on regardless: both are O(1)-memory counters off
+//! the solver hot path.
+
+pub mod export;
+pub mod json;
+pub mod ledger;
+pub mod span;
+
+pub use ledger::{
+    bucket_label, EnergyCost, EnergyLedger, EnergyModel, LedgerCell, LedgerRow, LedgerSolver,
+    Subsystem,
+};
+pub use span::{AttrValue, Span};
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::config::Settings;
+
+/// One slow-request exemplar: total latency (queue wait + solve) of a
+/// served document.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Exemplar {
+    /// Document id.
+    pub doc: String,
+    /// End-to-end seconds.
+    pub secs: f64,
+}
+
+/// Bounded never-blocking span ring + the top-K exemplar store.
+///
+/// `record` uses `try_lock`: a contended record is counted in `dropped`
+/// instead of ever stalling a worker, and a full ring overwrites its
+/// oldest tree (also counted) — O(1) memory however long the service
+/// runs. Exporters drain with a blocking lock on their own threads.
+#[derive(Debug)]
+pub struct TraceCollector {
+    cap: usize,
+    k: usize,
+    recorded: AtomicU64,
+    dropped: AtomicU64,
+    ring: Mutex<VecDeque<Span>>,
+    exemplars: Mutex<Vec<Exemplar>>,
+}
+
+impl TraceCollector {
+    /// Ring of at most `cap` span trees, keeping the `k` slowest
+    /// exemplars.
+    pub fn new(cap: usize, k: usize) -> Self {
+        let cap = cap.max(1);
+        Self {
+            cap,
+            k: k.max(1),
+            recorded: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            ring: Mutex::new(VecDeque::with_capacity(cap)),
+            exemplars: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Record one completed request tree (see type docs for the
+    /// drop/overwrite rules).
+    pub fn record(&self, span: Span) {
+        self.recorded.fetch_add(1, Ordering::Relaxed);
+        match self.ring.try_lock() {
+            Ok(mut ring) => {
+                if ring.len() == self.cap {
+                    ring.pop_front();
+                    self.dropped.fetch_add(1, Ordering::Relaxed);
+                }
+                ring.push_back(span);
+            }
+            Err(_) => {
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Offer a request latency to the top-K slowest exemplar store.
+    pub fn observe(&self, doc: &str, secs: f64) {
+        let mut ex = self.exemplars.lock().unwrap();
+        if ex.len() == self.k {
+            // full store: only a new slowest-K latency displaces one
+            let (mi, min) = ex
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.secs.total_cmp(&b.1.secs))
+                .map(|(i, e)| (i, e.secs))
+                .expect("k >= 1");
+            if secs <= min {
+                return;
+            }
+            ex.remove(mi);
+        }
+        let doc = doc.to_string();
+        ex.push(Exemplar { doc, secs });
+        ex.sort_by(|a, b| b.secs.total_cmp(&a.secs));
+    }
+
+    /// Move every buffered tree out of the ring (oldest first).
+    pub fn drain(&self) -> Vec<Span> {
+        self.ring.lock().unwrap().drain(..).collect()
+    }
+
+    /// Trees currently buffered.
+    pub fn len(&self) -> usize {
+        self.ring.lock().unwrap().len()
+    }
+
+    /// Whether the ring is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Trees ever offered to `record`.
+    pub fn recorded(&self) -> u64 {
+        self.recorded.load(Ordering::Relaxed)
+    }
+
+    /// Trees lost to overwrite or lock contention.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot of the slowest-request exemplars (slowest first).
+    pub fn exemplars(&self) -> Vec<Exemplar> {
+        self.exemplars.lock().unwrap().clone()
+    }
+}
+
+/// Fleet dispatch counters (always on): how the pool coalesces, for the
+/// `coalesce_occupancy` wall attribute and the exposition.
+#[derive(Debug, Default)]
+pub struct DispatchCounters {
+    dispatches: AtomicU64,
+    requests: AtomicU64,
+    instances: AtomicU64,
+}
+
+impl DispatchCounters {
+    /// Count one device dispatch serving `requests` coalesced requests
+    /// totalling `instances` instances.
+    pub fn record(&self, requests: u64, instances: u64) {
+        self.dispatches.fetch_add(1, Ordering::Relaxed);
+        self.requests.fetch_add(requests, Ordering::Relaxed);
+        self.instances.fetch_add(instances, Ordering::Relaxed);
+    }
+
+    /// (dispatches, requests, instances) so far.
+    pub fn snapshot(&self) -> (u64, u64, u64) {
+        (
+            self.dispatches.load(Ordering::Relaxed),
+            self.requests.load(Ordering::Relaxed),
+            self.instances.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Mean instances per device dispatch (0 before any dispatch).
+    pub fn occupancy(&self) -> f64 {
+        let d = self.dispatches.load(Ordering::Relaxed);
+        if d == 0 {
+            0.0
+        } else {
+            self.instances.load(Ordering::Relaxed) as f64 / d as f64
+        }
+    }
+}
+
+/// Observability snapshot carried inside `ServiceMetrics` (reported by
+/// `::STATS::`, `::STATS JSON::` and the exposition).
+#[derive(Debug, Clone, Default)]
+pub struct ObsMetrics {
+    /// Whether span recording is on (`[obs] enabled`).
+    pub tracing_enabled: bool,
+    /// Span trees ever recorded.
+    pub recorded: u64,
+    /// Span trees lost to ring overwrite / contention.
+    pub dropped: u64,
+    /// Span trees currently buffered.
+    pub buffered: usize,
+    /// Slowest-request exemplars, slowest first.
+    pub exemplars: Vec<Exemplar>,
+    /// Energy-ledger rows (non-empty cells only).
+    pub ledger: Vec<LedgerRow>,
+    /// Device dispatches observed.
+    pub dispatches: u64,
+    /// Requests those dispatches served.
+    pub dispatch_requests: u64,
+    /// Instances those dispatches solved.
+    pub dispatch_instances: u64,
+}
+
+impl ObsMetrics {
+    /// Whether anything is worth reporting yet.
+    pub fn any(&self) -> bool {
+        self.recorded > 0 || !self.exemplars.is_empty() || !self.ledger.is_empty()
+    }
+
+    /// Total modeled joules across the ledger.
+    pub fn total_joules(&self) -> f64 {
+        self.ledger.iter().map(|r| r.cell.joules).sum()
+    }
+
+    /// Total modeled device/CPU seconds across the ledger.
+    pub fn total_device_s(&self) -> f64 {
+        self.ledger.iter().map(|r| r.cell.device_s).sum()
+    }
+
+    /// One-line report fragment for `::STATS::` / service reports:
+    /// energy totals plus the slowest exemplars.
+    pub fn report(&self) -> String {
+        let mut out = format!(
+            "obs: traces={} dropped={} energy_j={:.3e} device_s={:.3e}",
+            self.recorded,
+            self.dropped,
+            self.total_joules(),
+            self.total_device_s(),
+        );
+        if !self.exemplars.is_empty() {
+            out.push_str(" slowest=[");
+            for (i, e) in self.exemplars.iter().enumerate() {
+                if i > 0 {
+                    out.push(' ');
+                }
+                out.push_str(&format!("{}:{:.1}ms", e.doc, e.secs * 1e3));
+            }
+            out.push(']');
+        }
+        out
+    }
+}
+
+/// The handle threaded through the serving stack: span switch + trace
+/// collector + energy ledger + dispatch counters, all cheaply cloned
+/// (`Arc`s inside). One per `Service` / `DevicePool`.
+#[derive(Debug, Clone)]
+pub struct ObsShared {
+    enabled: bool,
+    backend: Arc<str>,
+    cache_tier: &'static str,
+    replication: usize,
+    traces: Arc<TraceCollector>,
+    ledger: Arc<EnergyLedger>,
+    dispatch: Arc<DispatchCounters>,
+}
+
+impl ObsShared {
+    /// Build from `[obs]` (+ `[cobi]`/`[timing]` for the cost model and
+    /// the routing sections for the root-span route attributes).
+    pub fn from_settings(settings: &Settings) -> Self {
+        let backend: Arc<str> = crate::sched::resolved_backend(settings).into();
+        let cache_tier = if settings.portfolio.enabled && settings.portfolio.cache {
+            "warm"
+        } else {
+            "off"
+        };
+        let replication = if settings.resilience.enabled {
+            settings
+                .resilience
+                .replication
+                .clamp(1, settings.resilience.max_replication.max(1))
+        } else {
+            1
+        };
+        Self {
+            enabled: settings.obs.enabled,
+            backend,
+            cache_tier,
+            replication,
+            traces: Arc::new(TraceCollector::new(
+                settings.obs.ring_capacity,
+                settings.obs.exemplars,
+            )),
+            ledger: Arc::new(EnergyLedger::new(EnergyModel::from_settings(settings))),
+            dispatch: Arc::new(DispatchCounters::default()),
+        }
+    }
+
+    /// A default-config handle with span recording OFF — the state every
+    /// non-serving caller gets, and what `tests/alloc_audit.rs` probes.
+    pub fn disabled() -> Self {
+        Self::from_settings(&Settings::default())
+    }
+
+    /// Whether span recording is on.
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Begin a request trace: `None` (no allocation, no lock) when span
+    /// recording is off; otherwise the root span pre-loaded with the
+    /// deterministic route attributes (document id, backend route,
+    /// cache tier, replication factor).
+    pub fn start_request(&self, doc_id: &str) -> Option<Span> {
+        if !self.enabled {
+            return None;
+        }
+        Some(
+            Span::new("request")
+                .with("doc", doc_id)
+                .with("backend", self.backend.as_ref())
+                .with("cache", self.cache_tier)
+                .with("replication", self.replication),
+        )
+    }
+
+    /// Finish a request: always offers the latency to the exemplar
+    /// store; when a root span exists, stamps its wall section (queue
+    /// wait, total, fleet coalesce occupancy) and records the tree.
+    pub fn finish_request(
+        &self,
+        root: Option<Span>,
+        doc_id: &str,
+        queue_wait_s: f64,
+        total_s: f64,
+    ) {
+        self.traces.observe(doc_id, queue_wait_s + total_s);
+        if let Some(mut root) = root {
+            root.set_wall("queue_wait_us", (queue_wait_s * 1e6) as u64);
+            root.set_wall("total_us", (total_s * 1e6) as u64);
+            root.set_wall("coalesce_occupancy", self.dispatch.occupancy());
+            self.traces.record(root);
+        }
+    }
+
+    /// The trace collector (exporters drain it).
+    pub fn traces(&self) -> &Arc<TraceCollector> {
+        &self.traces
+    }
+
+    /// The fleet energy ledger.
+    pub fn ledger(&self) -> &Arc<EnergyLedger> {
+        &self.ledger
+    }
+
+    /// The per-solve cost model (span modeled-energy attributes).
+    pub fn model(&self) -> &EnergyModel {
+        self.ledger.model()
+    }
+
+    /// The resolved backend route label.
+    pub fn backend(&self) -> &str {
+        &self.backend
+    }
+
+    /// Fleet dispatch counters (device loops feed them).
+    pub fn dispatch(&self) -> &Arc<DispatchCounters> {
+        &self.dispatch
+    }
+
+    /// Metrics snapshot for `ServiceMetrics`.
+    pub fn snapshot(&self) -> ObsMetrics {
+        let (dispatches, dispatch_requests, dispatch_instances) = self.dispatch.snapshot();
+        ObsMetrics {
+            tracing_enabled: self.enabled,
+            recorded: self.traces.recorded(),
+            dropped: self.traces.dropped(),
+            buffered: self.traces.len(),
+            exemplars: self.traces.exemplars(),
+            ledger: self.ledger.rows(),
+            dispatches,
+            dispatch_requests,
+            dispatch_instances,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_is_bounded_and_counts_overwrites() {
+        let c = TraceCollector::new(4, 2);
+        for i in 0..10u64 {
+            c.record(Span::new("request").with("seed", i));
+        }
+        assert_eq!(c.len(), 4);
+        assert_eq!(c.recorded(), 10);
+        assert_eq!(c.dropped(), 6);
+        let drained = c.drain();
+        assert_eq!(drained.len(), 4);
+        // oldest overwritten: the survivors are the last four records
+        assert_eq!(drained[0].attr("seed"), Some(&AttrValue::U64(6)));
+        assert!(c.is_empty());
+        assert_eq!(c.recorded(), 10, "drain does not reset counters");
+    }
+
+    #[test]
+    fn exemplar_store_keeps_the_k_slowest() {
+        let c = TraceCollector::new(4, 3);
+        for (doc, secs) in [("a", 0.1), ("b", 0.5), ("c", 0.2), ("d", 0.4), ("e", 0.05)] {
+            c.observe(doc, secs);
+        }
+        let ex = c.exemplars();
+        let docs: Vec<&str> = ex.iter().map(|e| e.doc.as_str()).collect();
+        assert_eq!(docs, ["b", "d", "c"], "slowest first, k=3");
+    }
+
+    #[test]
+    fn disabled_handle_starts_no_spans_but_still_observes() {
+        let obs = ObsShared::disabled();
+        assert!(!obs.enabled());
+        assert!(obs.start_request("doc-1").is_none());
+        obs.finish_request(None, "doc-1", 0.001, 0.01);
+        let m = obs.snapshot();
+        assert_eq!(m.recorded, 0);
+        assert_eq!(m.exemplars.len(), 1);
+        assert!(m.any());
+        assert!(m.report().contains("slowest=[doc-1:"), "{}", m.report());
+    }
+
+    #[test]
+    fn enabled_handle_records_route_attributes() {
+        let mut settings = Settings::default();
+        settings.obs.enabled = true;
+        settings.resilience.enabled = true;
+        settings.resilience.replication = 3;
+        let obs = ObsShared::from_settings(&settings);
+        let root = obs.start_request("doc-9").expect("tracing on");
+        assert_eq!(root.attr("doc"), Some(&AttrValue::Str("doc-9".into())));
+        assert_eq!(
+            root.attr("replication"),
+            Some(&AttrValue::U64(3)),
+            "route attrs come from config"
+        );
+        obs.finish_request(Some(root), "doc-9", 0.0, 0.002);
+        let m = obs.snapshot();
+        assert_eq!(m.recorded, 1);
+        assert_eq!(m.buffered, 1);
+        assert!(m.tracing_enabled);
+    }
+
+    #[test]
+    fn dispatch_counters_compute_occupancy() {
+        let d = DispatchCounters::default();
+        assert_eq!(d.occupancy(), 0.0);
+        d.record(2, 8);
+        d.record(1, 4);
+        assert_eq!(d.snapshot(), (2, 3, 12));
+        assert!((d.occupancy() - 6.0).abs() < 1e-12);
+    }
+}

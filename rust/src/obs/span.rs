@@ -1,0 +1,233 @@
+//! Request-scoped span trees.
+//!
+//! A [`Span`] is one stage of one request (ingest, embed, decompose,
+//! quantize, solve, vote, score …) with two attribute sets:
+//!
+//! * **`attrs`** — deterministic facts: pure functions of
+//!   (configuration, document, seeds), e.g. `doc_seed`, strategy,
+//!   backend route, instance counts, and *modeled* device time/energy.
+//!   These are identical across pool shapes, worker assignment and
+//!   dispatch order, and are the only fields included in pinned output
+//!   (decision #18).
+//! * **`wall`** — measured wall-clock facts: queue wait, solve time,
+//!   fleet coalesce occupancy. Inherently nondeterministic; excluded
+//!   whenever byte-identity is asserted.
+//!
+//! Spans are plain data: building one never draws from any RNG stream,
+//! and the collector only sees completed trees, so tracing cannot
+//! perturb solver results.
+
+use super::json::escape_into;
+
+/// One attribute value (span attributes are flat key→value pairs).
+#[derive(Debug, Clone, PartialEq)]
+pub enum AttrValue {
+    /// Unsigned integer (counts, seeds, indices).
+    U64(u64),
+    /// Float (modeled seconds/joules, objectives).
+    F64(f64),
+    /// Text (document ids, strategy/backend names).
+    Str(String),
+    /// Flag (cache on/off and similar).
+    Bool(bool),
+}
+
+impl AttrValue {
+    fn write_json(&self, out: &mut String) {
+        match self {
+            AttrValue::U64(x) => out.push_str(&x.to_string()),
+            // finite by construction; Display is exact and deterministic
+            AttrValue::F64(x) => out.push_str(&format!("{x}")),
+            AttrValue::Str(s) => {
+                out.push('"');
+                escape_into(out, s);
+                out.push('"');
+            }
+            AttrValue::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+        }
+    }
+}
+
+impl From<u64> for AttrValue {
+    fn from(x: u64) -> Self {
+        AttrValue::U64(x)
+    }
+}
+impl From<usize> for AttrValue {
+    fn from(x: usize) -> Self {
+        AttrValue::U64(x as u64)
+    }
+}
+impl From<f64> for AttrValue {
+    fn from(x: f64) -> Self {
+        AttrValue::F64(x)
+    }
+}
+impl From<bool> for AttrValue {
+    fn from(x: bool) -> Self {
+        AttrValue::Bool(x)
+    }
+}
+impl From<&str> for AttrValue {
+    fn from(x: &str) -> Self {
+        AttrValue::Str(x.to_string())
+    }
+}
+impl From<String> for AttrValue {
+    fn from(x: String) -> Self {
+        AttrValue::Str(x)
+    }
+}
+
+/// One stage of one request (see module docs). Children nest in
+/// submission order, which is itself deterministic per request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    /// Stage name (`"request"`, `"solve"`, …).
+    pub stage: &'static str,
+    attrs: Vec<(&'static str, AttrValue)>,
+    wall: Vec<(&'static str, AttrValue)>,
+    /// Child stages, in creation order.
+    pub children: Vec<Span>,
+}
+
+impl Span {
+    /// Empty span for `stage`.
+    pub fn new(stage: &'static str) -> Self {
+        Self {
+            stage,
+            attrs: Vec::new(),
+            wall: Vec::new(),
+            children: Vec::new(),
+        }
+    }
+
+    /// Append a deterministic attribute (insertion order is kept).
+    pub fn set(&mut self, key: &'static str, value: impl Into<AttrValue>) {
+        self.attrs.push((key, value.into()));
+    }
+
+    /// Builder-style [`Span::set`].
+    pub fn with(mut self, key: &'static str, value: impl Into<AttrValue>) -> Self {
+        self.set(key, value);
+        self
+    }
+
+    /// Append a wall-clock attribute (excluded from pinned output).
+    pub fn set_wall(&mut self, key: &'static str, value: impl Into<AttrValue>) {
+        self.wall.push((key, value.into()));
+    }
+
+    /// Append a child stage; returns its index (for late wall updates).
+    pub fn push(&mut self, child: Span) -> usize {
+        self.children.push(child);
+        self.children.len() - 1
+    }
+
+    /// Deterministic attribute lookup (first match).
+    pub fn attr(&self, key: &str) -> Option<&AttrValue> {
+        self.attrs.iter().find(|(k, _)| *k == key).map(|(_, v)| v)
+    }
+
+    /// Render the tree as one JSON object. `include_wall = false` drops
+    /// every `wall` section recursively — the byte-identical-across-
+    /// pool-shapes form; `true` is the full JSONL export form.
+    pub fn to_json(&self, include_wall: bool) -> String {
+        let mut out = String::with_capacity(128);
+        self.write_json(&mut out, include_wall);
+        out
+    }
+
+    fn write_json(&self, out: &mut String, include_wall: bool) {
+        out.push_str("{\"stage\":\"");
+        escape_into(out, self.stage);
+        out.push_str("\",\"attrs\":{");
+        for (i, (k, v)) in self.attrs.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push('"');
+            escape_into(out, k);
+            out.push_str("\":");
+            v.write_json(out);
+        }
+        out.push('}');
+        if include_wall {
+            out.push_str(",\"wall\":{");
+            for (i, (k, v)) in self.wall.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push('"');
+                escape_into(out, k);
+                out.push_str("\":");
+                v.write_json(out);
+            }
+            out.push('}');
+        }
+        if !self.children.is_empty() {
+            out.push_str(",\"children\":[");
+            for (i, c) in self.children.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                c.write_json(out, include_wall);
+            }
+            out.push(']');
+        }
+        out.push('}');
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::json::JsonValue;
+
+    fn sample() -> Span {
+        let mut root = Span::new("request")
+            .with("doc", "bench-0")
+            .with("seed", 42u64)
+            .with("cache", false);
+        root.set_wall("queue_wait_us", 17u64);
+        let mut solve = Span::new("solve").with("n", 20usize).with("modeled_j", 0.5f64);
+        solve.set_wall("solve_us", 99u64);
+        root.push(solve);
+        root
+    }
+
+    #[test]
+    fn json_shape_and_key_order() {
+        let s = sample().to_json(true);
+        assert!(s.starts_with(r#"{"stage":"request","attrs":{"doc":"bench-0","seed":42"#));
+        assert!(s.contains(r#""wall":{"queue_wait_us":17}"#), "{s}");
+        assert!(s.contains(r#""children":[{"stage":"solve""#), "{s}");
+        let v = JsonValue::parse(&s).unwrap();
+        assert_eq!(v.get("stage").unwrap().as_str(), Some("request"));
+        let child = &v.get("children").unwrap().as_array().unwrap()[0];
+        assert_eq!(child.get("attrs").unwrap().get("n").unwrap().as_u64(), Some(20));
+    }
+
+    #[test]
+    fn pinned_form_excludes_wall_recursively() {
+        let s = sample().to_json(false);
+        assert!(!s.contains("wall"), "{s}");
+        assert!(!s.contains("queue_wait_us"), "{s}");
+        assert!(!s.contains("solve_us"), "{s}");
+        JsonValue::parse(&s).unwrap();
+    }
+
+    #[test]
+    fn attr_lookup_and_escaping() {
+        let span = Span::new("ingest").with("doc", "quo\"ted\nid");
+        assert_eq!(
+            span.attr("doc"),
+            Some(&AttrValue::Str("quo\"ted\nid".into()))
+        );
+        let parsed = JsonValue::parse(&span.to_json(false)).unwrap();
+        assert_eq!(
+            parsed.get("attrs").unwrap().get("doc").unwrap().as_str(),
+            Some("quo\"ted\nid")
+        );
+    }
+}

@@ -209,6 +209,10 @@ pub struct SolverPortfolio {
     greedy: GreedyDescent,
     exact: ExactIsingSolver,
     shared: PortfolioShared,
+    /// Fleet energy ledger + subsystem attribution; the portfolio
+    /// charges its ROUTED backend per fresh solve (`None` = no
+    /// accounting, e.g. standalone portfolios).
+    ledger: Option<(std::sync::Arc<crate::obs::EnergyLedger>, crate::obs::Subsystem)>,
     /// Seed stream for the unseeded [`IsingSolver`] entry points.
     seeds: Pcg32,
 }
@@ -262,8 +266,21 @@ impl SolverPortfolio {
             greedy: GreedyDescent::new(),
             exact: ExactIsingSolver::new(exact_max_n),
             shared: shared.unwrap_or_else(|| PortfolioShared::new(cfg)),
+            ledger: None,
             seeds: Pcg32::new(seed, 0x5EED0F),
         })
+    }
+
+    /// Attach the fleet energy ledger: every fresh (non-cache-served)
+    /// solve is charged to its routed backend under `subsystem`, at the
+    /// same committed-dispatch points as the telemetry — cache hits cost
+    /// no device time and are never charged.
+    pub fn set_ledger(
+        &mut self,
+        ledger: std::sync::Arc<crate::obs::EnergyLedger>,
+        subsystem: crate::obs::Subsystem,
+    ) {
+        self.ledger = Some((ledger, subsystem));
     }
 
     /// The shared cache/metrics this portfolio feeds.
@@ -472,8 +489,18 @@ impl SolverPortfolio {
     }
 
     /// Apply the telemetry of a fully successful dispatch to the
-    /// fleet-shared metrics.
+    /// fleet-shared metrics (and charge the energy ledger for the fresh
+    /// solves — same commit point, same no-double-count-on-retry rule).
     fn commit(&self, deltas: &[GroupTelemetry]) {
+        if let Some((ledger, sub)) = &self.ledger {
+            for d in deltas {
+                ledger.charge_sizes(
+                    d.backend.name(),
+                    *sub,
+                    d.samples.iter().map(|&(n, _, _)| n),
+                );
+            }
+        }
         let mut m = self.shared.metrics.lock().unwrap();
         for d in deltas {
             m.routes[d.backend.index()] += 1;
@@ -610,6 +637,25 @@ mod tests {
         assert_eq!(m.cache.exact_hits, 1);
         assert_eq!(m.cache.misses, 1);
         assert_eq!(m.cache.entries, 1);
+    }
+
+    #[test]
+    fn ledger_charges_fresh_solves_but_not_cache_hits() {
+        let mut p = standalone("static", "tabu", true);
+        let ledger = std::sync::Arc::new(crate::obs::EnergyLedger::new(
+            crate::obs::EnergyModel::from_settings(&Settings::default()),
+        ));
+        p.set_ledger(ledger.clone(), crate::obs::Subsystem::Pool);
+        let inst = quantized_glass(55, 12);
+        p.solve_one(&inst, 9).unwrap();
+        assert_eq!(ledger.totals().solves, 1);
+        // identical instance: exact cache hit — no device work, no charge
+        p.solve_one(&inst, 10).unwrap();
+        assert_eq!(ledger.totals().solves, 1);
+        let rows = ledger.rows();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].backend, "tabu", "charged to the ROUTED backend");
+        assert_eq!(rows[0].subsystem, "pool");
     }
 
     #[test]

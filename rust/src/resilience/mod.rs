@@ -494,12 +494,15 @@ impl SeededPoolBackend {
 ///
 /// `shared` connects the pipeline's counters to a caller-owned block
 /// (the no-pool `Service` hosts one so `::STATS::` still reports the
-/// resilience/fault counters); `None` keeps them private.
+/// resilience/fault counters); `None` keeps them private. `obs` threads
+/// the energy ledger down so replicated/retried solves are charged
+/// (attributed to the resilience subsystem by `build_solver`).
 pub(crate) fn resilient_pipeline(
     settings: &crate::config::Settings,
     cfg: &crate::config::PipelineConfig,
     rt: Option<&crate::runtime::ArtifactRuntime>,
     shared: Option<&ResilienceShared>,
+    obs: Option<(&crate::obs::ObsShared, crate::obs::Subsystem)>,
 ) -> Result<Option<crate::pipeline::EsPipeline>> {
     let wants = settings.resilience.enabled
         || (settings.resilience.fault.enabled && cfg.solver == "cobi");
@@ -507,7 +510,7 @@ pub(crate) fn resilient_pipeline(
         return Ok(None);
     }
     let solver =
-        crate::sched::pool::build_solver(&cfg.solver, settings, cfg.seed, rt, None, shared)?;
+        crate::sched::pool::build_solver(&cfg.solver, settings, cfg.seed, rt, None, shared, obs)?;
     Ok(Some(crate::pipeline::EsPipeline::new(
         cfg.clone(),
         Box::new(crate::embed::HashEmbedder::new()),

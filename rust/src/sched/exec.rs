@@ -18,6 +18,8 @@
 //! is byte-identical summaries for a fixed (config, document) regardless
 //! of pool size, coalescing, worker count, or dispatch interleaving.
 
+use std::time::Instant;
+
 use anyhow::{ensure, Context, Result};
 
 use crate::cobi::SeededGroup;
@@ -26,6 +28,7 @@ use crate::corpus::Document;
 use crate::decompose::{node_seed, DecomposePlan, Strategy};
 use crate::embed::{Embedder, HashEmbedder, Scores};
 use crate::ising::EsProblem;
+use crate::obs::{ObsShared, Span};
 use crate::pipeline::Summary;
 use crate::refine::{prepare_instances, select_best};
 use crate::text::MAX_SENTENCES;
@@ -35,6 +38,64 @@ use super::graph::SubproblemGraph;
 use super::pool::{PoolClient, PoolSolver, CLIENT_SEED_STREAM};
 use super::stream::{StreamRoute, StreamSummarizer};
 use super::{request_seed, QUANT_STREAM};
+
+/// Executor-side tracing context: the request's root span plus the obs
+/// handle whose cost model prices the modeled per-unit attributes.
+///
+/// Everything recorded through it is a pure function of (config,
+/// document): unit ids/levels/slots come from the decomposition plan,
+/// instance counts from the refinement config, and modeled energy from
+/// the `[cobi]`/`[timing]` constants — never from wall clocks, pool
+/// shape, or dispatch order. Wall-clock measurements go into span
+/// `wall` sections only (excluded from pinned output, decision #18).
+struct Trace<'a> {
+    obs: &'a ObsShared,
+    root: &'a mut Span,
+}
+
+impl Trace<'_> {
+    /// The fixed pre-solve stages (ingest → embed → decompose).
+    fn preamble(&mut self, n: usize, cfg: &PipelineConfig) {
+        self.root.push(Span::new("ingest").with("sentences", n));
+        self.root.push(Span::new("embed").with("sentences", n));
+        self.root.push(
+            Span::new("decompose")
+                .with("strategy", cfg.strategy.as_str())
+                .with("p", cfg.decompose_p)
+                .with("q", cfg.decompose_q),
+        );
+    }
+
+    /// One per-unit quantize+solve stage; returns the child index so the
+    /// caller can stamp wall attributes once the solve settles.
+    fn solve_stage(&mut self, u: &super::graph::SolveUnit, instances: usize) -> usize {
+        let cost = self
+            .obs
+            .model()
+            .per_instance(self.obs.backend(), u.window.len());
+        let k = instances as f64;
+        self.root.push(
+            Span::new("solve")
+                .with("unit", u.id)
+                .with("level", u.level)
+                .with("slot", u.slot)
+                .with("n", u.window.len())
+                .with("instances", instances)
+                .with("modeled_device_s", cost.device_s * k)
+                .with("modeled_j", cost.joules * k),
+        )
+    }
+
+    /// The scoring tail.
+    fn score(&mut self, summary: &Summary) {
+        self.root.push(
+            Span::new("score")
+                .with("objective", summary.objective)
+                .with("selected", summary.selected.len())
+                .with("solves", summary.total_solves),
+        );
+    }
+}
 
 /// Summarize `doc` to `cfg.summary_len` sentences, solving every Ising
 /// subproblem through the shared device pool, decomposed per
@@ -90,9 +151,44 @@ pub fn summarize_with_pool_using(
     client: &mut PoolClient,
     embedder: &mut dyn Embedder,
 ) -> Result<Summary> {
+    pool_exec(doc, cfg, client, embedder, None)
+}
+
+/// As [`summarize_with_pool`], recording a request-scoped span tree
+/// through `obs`. Returns the summary plus the root span — `None` when
+/// span recording is off, in which case this is exactly the untraced
+/// path (no allocation, no extra work). The span's deterministic
+/// attributes are byte-identical across pool shapes; measured wall
+/// times land in `wall` sections only.
+pub fn summarize_with_pool_traced(
+    doc: &Document,
+    cfg: &PipelineConfig,
+    client: &mut PoolClient,
+    obs: &ObsShared,
+) -> Result<(Summary, Option<Span>)> {
+    let mut embedder = HashEmbedder::new();
+    let mut root = obs.start_request(&doc.id);
+    let trace = root.as_mut().map(|r| Trace { obs, root: r });
+    let summary = pool_exec(doc, cfg, client, &mut embedder, trace)?;
+    Ok((summary, root))
+}
+
+fn pool_exec(
+    doc: &Document,
+    cfg: &PipelineConfig,
+    client: &mut PoolClient,
+    embedder: &mut dyn Embedder,
+    mut trace: Option<Trace<'_>>,
+) -> Result<Summary> {
     if cfg.strategy == Strategy::Streaming {
         // whole document replayed as one arrival chunk — byte-identical
-        // to the same sentences fed incrementally in any chunking
+        // to the same sentences fed incrementally in any chunking.
+        // Streamed requests trace at request granularity only (the
+        // frontier re-plans per arrival; per-unit spans would not be
+        // arrival-invariant).
+        if let Some(t) = trace.as_mut() {
+            t.root.set("strategy", cfg.strategy.as_str());
+        }
         let mut stream = StreamSummarizer::new(&doc.id, cfg)?;
         let mut route = StreamRoute::Pooled(client);
         stream.push_sentences(&doc.sentences, &mut route)?;
@@ -102,6 +198,9 @@ pub fn summarize_with_pool_using(
     ensure!(n >= cfg.summary_len, "document too short");
     let sentences = &doc.sentences[..n];
     let scores = embedder.scores(sentences).context("embedding failed")?;
+    if let Some(t) = trace.as_mut() {
+        t.preamble(n, cfg);
+    }
 
     let params = cfg.decompose_params();
     let refine_cfg = cfg.refine_config();
@@ -127,28 +226,42 @@ pub fn summarize_with_pool_using(
                 lambda: cfg.lambda,
                 m: u.target,
             };
-            let pend = if per_node {
+            let (instances, explicit_seed) = if per_node {
                 let ns = node_seed(cfg.seed, u.level, u.slot);
-                let instances =
-                    prepare_instances(&p, &refine_cfg, &mut Pcg32::new(ns, QUANT_STREAM));
-                total_solves += instances.len();
-                client.submit_seeded(instances, request_seed(ns))
+                (
+                    prepare_instances(&p, &refine_cfg, &mut Pcg32::new(ns, QUANT_STREAM)),
+                    Some(request_seed(ns)),
+                )
             } else {
-                let instances = prepare_instances(&p, &refine_cfg, &mut rng);
-                total_solves += instances.len();
-                client.submit(instances)
+                (prepare_instances(&p, &refine_cfg, &mut rng), None)
+            };
+            total_solves += instances.len();
+            // span children are created in submission order, which the
+            // graph fixes — never in completion order
+            let stage = trace.as_mut().map(|t| t.solve_stage(u, instances.len()));
+            let pend = match explicit_seed {
+                Some(seed) => client.submit_seeded(instances, seed),
+                None => client.submit(instances),
             }
             .with_context(|| format!("submitting unit {} of {}", u.id, doc.id))?;
-            pending.push((u.id, p, pend));
+            pending.push((u.id, p, pend, stage, Instant::now()));
         }
-        for (id, p, pend) in pending {
+        for (id, p, pend, stage, submitted) in pending {
             let solved = pend.wait()?;
-            let trace = select_best(&p, &solved);
-            graph.complete(id, trace.result.selected)?;
+            if let (Some(t), Some(k)) = (trace.as_mut(), stage) {
+                t.root.children[k]
+                    .set_wall("wait_us", submitted.elapsed().as_micros() as u64);
+            }
+            let best = select_best(&p, &solved);
+            graph.complete(id, best.result.selected)?;
         }
     }
     let result = graph.into_result()?;
-    Ok(finish(doc, sentences, &scores, cfg, result, total_solves))
+    let summary = finish(doc, sentences, &scores, cfg, result, total_solves);
+    if let Some(t) = trace.as_mut() {
+        t.score(&summary);
+    }
+    Ok(summary)
 }
 
 /// As [`summarize_with_pool`], but solving every unit inline on a
@@ -176,7 +289,37 @@ pub fn summarize_sequential_using(
     solver: &mut dyn PoolSolver,
     embedder: &mut dyn Embedder,
 ) -> Result<Summary> {
+    seq_exec(doc, cfg, solver, embedder, None)
+}
+
+/// As [`summarize_sequential`], recording a request-scoped span tree
+/// through `obs` (see [`summarize_with_pool_traced`] — same contract:
+/// `None` span when recording is off, deterministic attributes
+/// byte-identical to the pooled path's for the same (config, document)).
+pub fn summarize_sequential_traced(
+    doc: &Document,
+    cfg: &PipelineConfig,
+    solver: &mut dyn PoolSolver,
+    obs: &ObsShared,
+) -> Result<(Summary, Option<Span>)> {
+    let mut embedder = HashEmbedder::new();
+    let mut root = obs.start_request(&doc.id);
+    let trace = root.as_mut().map(|r| Trace { obs, root: r });
+    let summary = seq_exec(doc, cfg, solver, &mut embedder, trace)?;
+    Ok((summary, root))
+}
+
+fn seq_exec(
+    doc: &Document,
+    cfg: &PipelineConfig,
+    solver: &mut dyn PoolSolver,
+    embedder: &mut dyn Embedder,
+    mut trace: Option<Trace<'_>>,
+) -> Result<Summary> {
     if cfg.strategy == Strategy::Streaming {
+        if let Some(t) = trace.as_mut() {
+            t.root.set("strategy", cfg.strategy.as_str());
+        }
         let mut stream = StreamSummarizer::new(&doc.id, cfg)?;
         let mut route = StreamRoute::Inline(solver);
         stream.push_sentences(&doc.sentences, &mut route)?;
@@ -186,6 +329,9 @@ pub fn summarize_sequential_using(
     ensure!(n >= cfg.summary_len, "document too short");
     let sentences = &doc.sentences[..n];
     let scores = embedder.scores(sentences).context("embedding failed")?;
+    if let Some(t) = trace.as_mut() {
+        t.preamble(n, cfg);
+    }
 
     let params = cfg.decompose_params();
     let refine_cfg = cfg.refine_config();
@@ -220,6 +366,8 @@ pub fn summarize_sequential_using(
                 (prepare_instances(&p, &refine_cfg, &mut rng), seeds.next_u64())
             };
             total_solves += instances.len();
+            let stage = trace.as_mut().map(|t| t.solve_stage(u, instances.len()));
+            let started = Instant::now();
             let solved = solver
                 .solve_groups(&[SeededGroup {
                     instances: &instances,
@@ -227,12 +375,20 @@ pub fn summarize_sequential_using(
                 }])?
                 .pop()
                 .expect("one group in, one group out");
-            let trace = select_best(&p, &solved);
-            graph.complete(u.id, trace.result.selected)?;
+            if let (Some(t), Some(k)) = (trace.as_mut(), stage) {
+                t.root.children[k]
+                    .set_wall("solve_us", started.elapsed().as_micros() as u64);
+            }
+            let best = select_best(&p, &solved);
+            graph.complete(u.id, best.result.selected)?;
         }
     }
     let result = graph.into_result()?;
-    Ok(finish(doc, sentences, &scores, cfg, result, total_solves))
+    let summary = finish(doc, sentences, &scores, cfg, result, total_solves);
+    if let Some(t) = trace.as_mut() {
+        t.score(&summary);
+    }
+    Ok(summary)
 }
 
 /// Shared tail of both executors: score the final selection on the
@@ -353,6 +509,92 @@ mod tests {
         assert_eq!(a.selected, b.selected);
         assert_eq!(a.sentences, b.sentences);
         assert_eq!(a.objective.to_bits(), b.objective.to_bits());
+    }
+
+    #[test]
+    fn span_pinned_form_is_byte_identical_across_pool_shapes() {
+        // acceptance pin for the obs subsystem: the span tree's pinned
+        // JSON (wall sections excluded) is byte-identical between a
+        // 1-device no-coalesce pool and a 4-device coalescing pool under
+        // concurrent noise — tracing observes determinism, never breaks it
+        let set = benchmark_set("cnn_dm_20").unwrap();
+        let doc = &set.documents[1];
+
+        let trace_of = |devices: usize, coalesce: usize, linger: u64, noise_docs: usize| {
+            let mut s = settings("cobi");
+            s.obs.enabled = true;
+            s.sched.devices = devices;
+            s.sched.max_coalesce = coalesce;
+            s.sched.linger_us = linger;
+            let obs = crate::obs::ObsShared::from_settings(&s);
+            let pool = DevicePool::start(&s, None).unwrap();
+            let handle = pool.handle();
+            let noise: Vec<_> = (0..noise_docs)
+                .map(|k| {
+                    let handle = handle.clone();
+                    let d = set.documents[k + 2].clone();
+                    let cfg = s.pipeline.clone();
+                    std::thread::spawn(move || {
+                        let mut c = handle.client(crate::sched::doc_seed(cfg.seed, &d.id));
+                        summarize_with_pool(&d, &cfg, &mut c).unwrap()
+                    })
+                })
+                .collect();
+            let seed = crate::sched::doc_seed(s.pipeline.seed, &doc.id);
+            let mut client = pool.client(seed);
+            let (summary, span) =
+                summarize_with_pool_traced(doc, &s.pipeline, &mut client, &obs).unwrap();
+            for t in noise {
+                t.join().unwrap();
+            }
+            drop(client);
+            drop(handle);
+            pool.shutdown();
+            let span = span.expect("tracing enabled");
+            // the full form must carry wall measurements...
+            assert!(span.to_json(true).contains("wait_us"), "{devices} devices");
+            // ...and the pinned form none
+            (summary, span.to_json(false))
+        };
+
+        let (sum_a, pin_a) = trace_of(1, 1, 0, 0);
+        let (sum_b, pin_b) = trace_of(4, 8, 2_000, 3);
+        assert_eq!(sum_a.selected, sum_b.selected);
+        assert_eq!(pin_a, pin_b, "pinned span trees diverged across pool shapes");
+        assert!(pin_a.contains(r#""stage":"solve""#), "{pin_a}");
+        assert!(pin_a.contains("modeled_j"), "{pin_a}");
+        assert!(!pin_a.contains("wall"), "{pin_a}");
+    }
+
+    #[test]
+    fn sequential_trace_matches_pooled_trace_pinned() {
+        // the inline executor's pinned trace agrees byte for byte with
+        // the pooled one for the same (config, document)
+        let mut s = settings("cobi");
+        s.obs.enabled = true;
+        let set = benchmark_set("bench_10").unwrap();
+        let doc = &set.documents[0];
+        let mut cfg = s.pipeline.clone();
+        cfg.summary_len = set.summary_len;
+        cfg.seed = crate::sched::doc_seed(cfg.seed, &doc.id);
+        let obs = crate::obs::ObsShared::from_settings(&s);
+
+        let pool = DevicePool::start(&s, None).unwrap();
+        let mut client = pool.client(cfg.seed);
+        let (_, pooled) =
+            summarize_with_pool_traced(doc, &cfg, &mut client, &obs).unwrap();
+        drop(client);
+        pool.shutdown();
+
+        let mut dev = crate::cobi::CobiDevice::from_config(&s.cobi, 0, None).unwrap();
+        let (_, seq) = summarize_sequential_traced(doc, &cfg, &mut dev, &obs).unwrap();
+
+        assert_eq!(
+            pooled.unwrap().to_json(false),
+            seq.unwrap().to_json(false),
+            "pooled and sequential pinned traces diverged"
+        );
+        assert_eq!(obs.snapshot().recorded, 0, "executors do not self-record");
     }
 
     #[test]

@@ -41,6 +41,7 @@ use anyhow::{anyhow, bail, ensure, Result};
 use crate::cobi::{CobiDevice, SeededGroup};
 use crate::config::Settings;
 use crate::ising::Ising;
+use crate::obs::{DispatchCounters, LedgerSolver, ObsShared, Subsystem};
 use crate::portfolio::{PortfolioMetrics, PortfolioShared, SolverPortfolio};
 use crate::resilience::{FaultModel, ResilienceMetrics, ResilienceShared, ResilientSolver};
 use crate::runtime::ArtifactRuntime;
@@ -153,6 +154,14 @@ pub fn service_pooled(settings: &Settings) -> bool {
 /// with `[resilience] enabled = true` the built solver is wrapped in a
 /// [`ResilientSolver`] (replication + voting + verify-and-retry), which
 /// is calibrated at construction when `calibrate = true`.
+///
+/// Energy accounting also wires HERE: with an `obs` handle, single-
+/// backend solvers are wrapped in a [`LedgerSolver`] *underneath* the
+/// resilience layer (so replicas/retries/escalations are charged at
+/// their true multiplicity) and the portfolio is handed the ledger to
+/// charge its routed backend per fresh solve. Solves dispatched while
+/// the resilience layer is on are attributed to `Subsystem::Resilience`
+/// instead of the construction site.
 pub(crate) fn build_solver(
     backend: &str,
     settings: &Settings,
@@ -160,7 +169,15 @@ pub(crate) fn build_solver(
     rt: Option<&ArtifactRuntime>,
     shared: Option<&PortfolioShared>,
     resilience: Option<&ResilienceShared>,
+    obs: Option<(&ObsShared, Subsystem)>,
 ) -> Result<Box<dyn PoolSolver>> {
+    let subsystem = obs.map(|(_, site)| {
+        if settings.resilience.enabled {
+            Subsystem::Resilience
+        } else {
+            site
+        }
+    });
     let fault_model = || {
         settings.resilience.fault.enabled.then(|| {
             let mut fm = FaultModel::new(&settings.resilience.fault);
@@ -188,12 +205,23 @@ pub(crate) fn build_solver(
             if let Some(r) = resilience {
                 p.share_fault_counters(r.faults.clone());
             }
+            if let (Some((o, _)), Some(sub)) = (obs, subsystem) {
+                p.set_ledger(o.ledger().clone(), sub);
+            }
             Box::new(p)
         }
         other => bail!(
             "solver '{other}' cannot run on the device pool \
              (supported: cobi, tabu, sa, portfolio)"
         ),
+    };
+    // charge every non-portfolio solve here, under the resilience wrap
+    // (the portfolio charges its routed backend itself)
+    let inner: Box<dyn PoolSolver> = match (backend, obs, subsystem) {
+        ("portfolio", _, _) | (_, None, _) | (_, _, None) => inner,
+        (_, Some((o, _)), Some(sub)) => {
+            Box::new(LedgerSolver::new(inner, backend, sub, o.ledger().clone()))
+        }
     };
     if settings.resilience.enabled {
         let shared = resilience.cloned().unwrap_or_default();
@@ -416,6 +444,18 @@ impl DevicePool {
     /// Start per `settings.sched` (+ `settings.cobi` for COBI devices).
     /// `rt` is required only for the COBI-HLO backend.
     pub fn start(settings: &Settings, rt: Option<&ArtifactRuntime>) -> Result<Self> {
+        Self::start_obs(settings, rt, None)
+    }
+
+    /// [`DevicePool::start`] with an observability handle: device solvers
+    /// charge its energy ledger, and every dispatch feeds its fleet
+    /// coalescing counters. `Service` uses this; direct pool users can
+    /// stay on `start`.
+    pub fn start_obs(
+        settings: &Settings,
+        rt: Option<&ArtifactRuntime>,
+        obs: Option<&ObsShared>,
+    ) -> Result<Self> {
         let sched = &settings.sched;
         let backend = resolved_backend(settings).to_string();
         ensure!(
@@ -449,14 +489,23 @@ impl DevicePool {
                 rt,
                 portfolio.as_ref(),
                 resilience.as_ref(),
+                obs.map(|o| (o, Subsystem::Pool)),
             )?;
             let rx = rx.clone();
             let metrics = metrics.clone();
+            let dispatch = obs.map(|o| o.dispatch().clone());
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("cobi-pool-{d}"))
                     .spawn(move || {
-                        device_loop(solver.as_mut(), &rx, &metrics, max_coalesce, linger)
+                        device_loop(
+                            solver.as_mut(),
+                            &rx,
+                            &metrics,
+                            dispatch,
+                            max_coalesce,
+                            linger,
+                        )
                     })?,
             );
         }
@@ -534,6 +583,7 @@ fn device_loop(
     solver: &mut dyn PoolSolver,
     rx: &Arc<Mutex<Receiver<SolveRequest>>>,
     metrics: &Arc<Mutex<PoolMetrics>>,
+    dispatch: Option<Arc<DispatchCounters>>,
     max_coalesce: usize,
     linger: Duration,
 ) {
@@ -582,11 +632,15 @@ fn device_loop(
         drop(groups);
         let busy = t0.elapsed();
 
+        let batch_instances = batch.iter().map(|r| r.instances.len() as u64).sum::<u64>();
+        if let Some(d) = &dispatch {
+            d.record(batch.len() as u64, batch_instances);
+        }
         {
             let mut m = metrics.lock().unwrap();
             m.dispatches += 1;
             m.requests += batch.len() as u64;
-            m.instances += batch.iter().map(|r| r.instances.len() as u64).sum::<u64>();
+            m.instances += batch_instances;
             m.busy_s += busy.as_secs_f64();
             for r in &batch {
                 m.queue_wait
@@ -620,6 +674,9 @@ fn device_loop(
                         .map_err(|e| {
                             anyhow!("pool dispatch on '{}' failed: {e:#}", solver.name())
                         });
+                    if let Some(d) = &dispatch {
+                        d.record(1, req.instances.len() as u64);
+                    }
                     {
                         let mut m = metrics.lock().unwrap();
                         m.dispatches += 1;

@@ -3,19 +3,26 @@
 //! solver-portfolio telemetry (per-backend route counts, warm-start-cache
 //! hit rates, per-backend latency histograms).
 //!
-//! Latencies are kept two ways: a bounded reservoir (uniform-ish by
-//! decimation) for percentile reporting, and fixed log-spaced
+//! Latencies are kept two ways: a bounded uniform reservoir (seeded
+//! Algorithm R) for percentile reporting, and fixed log-spaced
 //! [`Histogram`]s for cheap per-stage distribution tracking under
 //! sustained load — both O(1) memory.
 
 use std::time::Duration;
 
+use anyhow::{ensure, Result};
+
 use crate::decompose::Strategy;
+use crate::obs::ObsMetrics;
 use crate::portfolio::PortfolioMetrics;
 use crate::resilience::ResilienceMetrics;
 use crate::sched::PoolMetrics;
+use crate::util::rng::Pcg32;
 
 const RESERVOIR: usize = 4096;
+/// RNG stream for the reservoirs' replacement draws — a metrics-private
+/// stream, so sampling can never perturb any solver/quantizer RNG.
+const RESERVOIR_STREAM: u64 = 0xA160_0012;
 
 /// Per-decomposition-strategy completion counters, plus streaming-session
 /// activity (sessions opened, chunks ingested, revisions served). One
@@ -155,6 +162,29 @@ impl Histogram {
             .collect()
     }
 
+    /// Sum of all observations (seconds).
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Fold another histogram with IDENTICAL bucket bounds into this one
+    /// (per-worker histograms aggregating into a fleet view). Errors —
+    /// without modifying `self` — when the bounds differ.
+    pub fn merge(&mut self, other: &Histogram) -> Result<()> {
+        ensure!(
+            self.bounds == other.bounds,
+            "histogram bounds mismatch: {:?} vs {:?}",
+            self.bounds,
+            other.bounds
+        );
+        for (c, o) in self.counts.iter_mut().zip(&other.counts) {
+            *c += o;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        Ok(())
+    }
+
     /// Compact `n`/mean/p99 fragment.
     pub fn summary(&self) -> String {
         if self.count == 0 {
@@ -192,10 +222,10 @@ pub struct ServiceMetrics {
     pub failed: u64,
     /// Requests rejected by backpressure.
     pub rejected: u64,
-    /// Seconds spent queued (reservoir sample).
-    queue_waits: Vec<f64>,
-    /// Seconds spent solving (reservoir sample).
-    solve_times: Vec<f64>,
+    /// Seconds spent queued (uniform reservoir sample).
+    queue_waits: Reservoir,
+    /// Seconds spent solving (uniform reservoir sample).
+    solve_times: Reservoir,
     /// Per-stage distributions: service-queue wait and worker solve time.
     /// (The pool-queue wait histogram lives in [`PoolMetrics`].)
     pub queue_hist: Histogram,
@@ -213,13 +243,18 @@ pub struct ServiceMetrics {
     /// counters, per-device calibrations and fault injections. `None`
     /// unless `[resilience]` (layer or fault model) is enabled.
     pub resilience: Option<ResilienceMetrics>,
+    /// Observability snapshot: trace-ring counters, slowest-request
+    /// exemplars, the fleet energy ledger and dispatch-coalescing
+    /// counters. `None` only on detached default blocks; a running
+    /// `Service` always fills it.
+    pub obs: Option<ObsMetrics>,
 }
 
 impl ServiceMetrics {
     /// Record one request's queue wait and solve time.
     pub fn record_latency(&mut self, queue_wait: Duration, solve: Duration) {
-        push_reservoir(&mut self.queue_waits, queue_wait.as_secs_f64());
-        push_reservoir(&mut self.solve_times, solve.as_secs_f64());
+        self.queue_waits.push(queue_wait.as_secs_f64());
+        self.solve_times.push(solve.as_secs_f64());
         self.queue_hist.record(queue_wait.as_secs_f64());
         self.solve_hist.record(solve.as_secs_f64());
     }
@@ -227,10 +262,10 @@ impl ServiceMetrics {
     /// Reservoir-based percentile summary.
     pub fn latency_summary(&self) -> LatencySummary {
         LatencySummary {
-            queue_p50: percentile(&self.queue_waits, 0.50),
-            queue_p99: percentile(&self.queue_waits, 0.99),
-            solve_p50: percentile(&self.solve_times, 0.50),
-            solve_p99: percentile(&self.solve_times, 0.99),
+            queue_p50: percentile(self.queue_waits.samples(), 0.50),
+            queue_p99: percentile(self.queue_waits.samples(), 0.99),
+            solve_p50: percentile(self.solve_times.samples(), 0.50),
+            solve_p99: percentile(self.solve_times.samples(), 0.99),
         }
     }
 
@@ -265,6 +300,12 @@ impl ServiceMetrics {
             out.push_str(" | ");
             out.push_str(&r.report());
         }
+        if let Some(o) = &self.obs {
+            if o.any() {
+                out.push_str(" | ");
+                out.push_str(&o.report());
+            }
+        }
         out
     }
 }
@@ -282,17 +323,49 @@ pub struct LatencySummary {
     pub solve_p99: f64,
 }
 
-fn push_reservoir(v: &mut Vec<f64>, x: f64) {
-    if v.len() < RESERVOIR {
-        v.push(x);
-    } else {
-        // cheap decimation: overwrite a pseudo-random slot derived from
-        // the value count so long runs stay representative enough
-        let idx = (v.len() as u64)
-            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
-            .wrapping_add(x.to_bits()) as usize
-            % RESERVOIR;
-        v[idx] = x;
+/// Bounded uniform sample of a latency stream: Vitter's Algorithm R
+/// with a seeded metrics-private [`Pcg32`]. After `seen` observations,
+/// every observation is retained with probability `RESERVOIR / seen`
+/// exactly (the previous decimation scheme keyed replacement slots to
+/// the value bits, which biased long runs toward early samples). The
+/// uniform index draw maps 64 random bits onto `[0, seen)` by widening
+/// multiply — bias is at most 2⁻⁶⁴ per draw.
+#[derive(Debug, Clone)]
+struct Reservoir {
+    samples: Vec<f64>,
+    seen: u64,
+    rng: Pcg32,
+}
+
+impl Default for Reservoir {
+    fn default() -> Self {
+        Self {
+            samples: Vec::new(),
+            seen: 0,
+            rng: Pcg32::new(0x5EED_0B5, RESERVOIR_STREAM),
+        }
+    }
+}
+
+impl Reservoir {
+    fn push(&mut self, x: f64) {
+        self.seen += 1;
+        if self.samples.len() < RESERVOIR {
+            self.samples.push(x);
+        } else {
+            let j = ((self.rng.next_u64() as u128 * self.seen as u128) >> 64) as usize;
+            if j < RESERVOIR {
+                self.samples[j] = x;
+            }
+        }
+    }
+
+    fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
+    fn len(&self) -> usize {
+        self.samples.len()
     }
 }
 
@@ -333,6 +406,37 @@ mod tests {
         assert!(m.queue_waits.len() <= RESERVOIR);
         assert!(m.solve_times.len() <= RESERVOIR);
         assert_eq!(m.queue_hist.count(), 10_000);
+    }
+
+    #[test]
+    fn reservoir_sampling_is_uniform_over_the_stream() {
+        // feed a monotone stream much longer than the reservoir: a
+        // uniform sample has mean/median near the stream midpoint and
+        // every quarter of the stream proportionally represented (the
+        // retired decimation scheme failed all three)
+        let n = 100_000u64;
+        let mut r = Reservoir::default();
+        for i in 0..n {
+            r.push(i as f64);
+        }
+        assert_eq!(r.len(), RESERVOIR);
+        let mean = r.samples().iter().sum::<f64>() / RESERVOIR as f64;
+        // sd of the sample mean ≈ (n/√12)/√4096 ≈ 451; 2000 ≈ 4.4σ
+        assert!((mean - 50_000.0).abs() < 2_000.0, "mean={mean}");
+        let mut s = r.samples().to_vec();
+        s.sort_by(|a, b| a.total_cmp(b));
+        let median = s[RESERVOIR / 2];
+        assert!((median - 50_000.0).abs() < 4_000.0, "median={median}");
+        // the first stream quarter holds ≈ RESERVOIR/4 samples
+        // (binomial sd ≈ 28; 200 ≈ 7σ)
+        let early = s.iter().filter(|&&x| x < 25_000.0).count() as f64;
+        assert!((early - 1_024.0).abs() < 200.0, "early={early}");
+        // seeded: a second identical stream samples identically
+        let mut r2 = Reservoir::default();
+        for i in 0..n {
+            r2.push(i as f64);
+        }
+        assert_eq!(r.samples(), r2.samples());
     }
 
     #[test]
@@ -412,5 +516,97 @@ mod tests {
         h.record(5.0);
         assert!(h.quantile_bound(0.99).is_infinite());
         assert_eq!(h.buckets()[2].1, 1);
+    }
+
+    #[test]
+    fn histogram_bucket_edges_are_inclusive_above() {
+        // `secs <= bound` places an exact-edge observation in the bucket
+        // it bounds, and the next representable value in the one after
+        let mut h = Histogram::new(vec![1e-3, 1e-2, 1e-1]);
+        h.record(1e-3); // exactly the first edge
+        h.record(f64::from_bits(1e-3f64.to_bits() + 1)); // just above
+        h.record(1e-1); // exactly the last edge
+        let buckets = h.buckets();
+        assert_eq!(buckets[0], (1e-3, 1));
+        assert_eq!(buckets[1], (1e-2, 1));
+        assert_eq!(buckets[2], (1e-1, 1));
+        assert_eq!(buckets[3], (f64::INFINITY, 0));
+        // zero and negative-ish underflow both land in the first bucket
+        h.record(0.0);
+        assert_eq!(h.buckets()[0].1, 2);
+    }
+
+    #[test]
+    fn histogram_merge_sums_counts_and_moments() {
+        let mut a = Histogram::latency();
+        let mut b = Histogram::latency();
+        for _ in 0..5 {
+            a.record(0.5e-3);
+        }
+        for _ in 0..3 {
+            b.record(0.5);
+        }
+        b.record(100.0); // overflow
+        a.merge(&b).unwrap();
+        assert_eq!(a.count(), 9);
+        assert!((a.sum() - (5.0 * 0.5e-3 + 3.0 * 0.5 + 100.0)).abs() < 1e-12);
+        let buckets = a.buckets();
+        assert_eq!(buckets[2].1, 5, "<=1ms bucket");
+        assert_eq!(buckets[5].1, 3, "<=1s bucket");
+        assert_eq!(buckets[7].1, 1, "overflow bucket");
+        // b is untouched
+        assert_eq!(b.count(), 4);
+    }
+
+    #[test]
+    fn histogram_merge_rejects_mismatched_bounds() {
+        let mut a = Histogram::new(vec![1e-3, 1e-2]);
+        let b = Histogram::new(vec![1e-3, 2e-2]);
+        assert!(a.merge(&b).is_err());
+        assert_eq!(a.count(), 0, "failed merge must not modify the target");
+    }
+
+    #[test]
+    fn histogram_quantiles_estimate_from_buckets() {
+        let mut h = Histogram::latency();
+        for _ in 0..50 {
+            h.record(5e-5); // <= 1e-4
+        }
+        for _ in 0..45 {
+            h.record(5e-3); // <= 1e-2
+        }
+        for _ in 0..5 {
+            h.record(5.0); // <= 10
+        }
+        assert_eq!(h.quantile_bound(0.0), 1e-4, "q=0 is the first bucket");
+        assert_eq!(h.quantile_bound(0.50), 1e-4);
+        assert_eq!(h.quantile_bound(0.51), 1e-2);
+        assert_eq!(h.quantile_bound(0.95), 1e-2);
+        assert_eq!(h.quantile_bound(0.96), 10.0);
+        assert_eq!(h.quantile_bound(1.0), 10.0);
+        // quantile bounds are monotone in q
+        let qs = [0.0, 0.1, 0.5, 0.9, 0.99, 1.0];
+        for w in qs.windows(2) {
+            assert!(h.quantile_bound(w[0]) <= h.quantile_bound(w[1]));
+        }
+    }
+
+    #[test]
+    fn obs_snapshot_surfaces_in_the_report() {
+        let mut m = ServiceMetrics::default();
+        assert!(!m.report().contains("obs:"), "absent block stays quiet");
+        m.obs = Some(ObsMetrics::default());
+        assert!(!m.report().contains("obs:"), "empty block stays quiet");
+        m.obs = Some(ObsMetrics {
+            recorded: 2,
+            exemplars: vec![crate::obs::Exemplar {
+                doc: "doc-a".into(),
+                secs: 0.25,
+            }],
+            ..Default::default()
+        });
+        let r = m.report();
+        assert!(r.contains("obs: traces=2"), "{r}");
+        assert!(r.contains("slowest=[doc-a:250.0ms]"), "{r}");
     }
 }

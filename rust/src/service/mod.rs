@@ -37,6 +37,7 @@ use anyhow::{bail, Result};
 
 use crate::config::Settings;
 use crate::corpus::Document;
+use crate::obs::ObsShared;
 use crate::pipeline::Summary;
 use crate::resilience::ResilienceShared;
 use crate::runtime::ArtifactRuntime;
@@ -182,6 +183,9 @@ pub struct Service {
     /// resilience layer or the fault model is enabled without a pool,
     /// so `::STATS::` reports the counters either way.
     resilience: Option<ResilienceShared>,
+    /// Observability: span collector + energy ledger + dispatch counters
+    /// shared with the pool, workers and stream sessions.
+    obs: ObsShared,
     /// Retained for late construction of stream-session solvers.
     settings: Settings,
 }
@@ -200,9 +204,10 @@ impl Service {
         let inflight = Arc::new(AtomicUsize::new(0));
         let stop = Arc::new(AtomicBool::new(false));
         let (tx, rx) = sync_channel::<Job>(settings.service.queue_depth);
+        let obs = ObsShared::from_settings(settings);
 
         let pool = if sched::service_pooled(settings) {
-            Some(DevicePool::start(settings, rt)?)
+            Some(DevicePool::start_obs(settings, rt, Some(&obs))?)
         } else {
             None
         };
@@ -225,6 +230,7 @@ impl Service {
             route,
             rt,
             resilience.as_ref(),
+            &obs,
         )?;
         Ok(Self {
             tx,
@@ -236,6 +242,7 @@ impl Service {
             queue_depth: settings.service.queue_depth,
             pool,
             resilience,
+            obs,
             settings: settings.clone(),
         })
     }
@@ -270,6 +277,7 @@ impl Service {
                     None,
                     None,
                     self.resilience.as_ref(),
+                    Some((&self.obs, crate::obs::Subsystem::Stream)),
                 )
                 .map_err(|e| {
                     anyhow::anyhow!(
@@ -347,7 +355,14 @@ impl Service {
         } else if let Some(r) = &self.resilience {
             m.resilience = Some(r.snapshot());
         }
+        m.obs = Some(self.obs.snapshot());
         m
+    }
+
+    /// The service's observability handle (trace collector + energy
+    /// ledger) — the `serve` loop drains JSONL exports through it.
+    pub fn obs(&self) -> &ObsShared {
+        &self.obs
     }
 
     /// True when Ising solves route through the shared device pool.
@@ -623,6 +638,48 @@ mod tests {
         let set = benchmark_set("bench_10").unwrap();
         let t = svc.submit(set.documents[1].clone()).unwrap();
         assert_eq!(t.wait().unwrap().selected.len(), 3);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn obs_traces_and_ledger_surface_in_service_metrics() {
+        let mut settings = test_settings();
+        settings.obs.enabled = true;
+        let svc = Service::start(&settings).unwrap();
+        assert!(svc.is_pooled());
+        let set = benchmark_set("bench_10").unwrap();
+        let tickets: Vec<Ticket> = set.documents[..4]
+            .iter()
+            .map(|d| svc.submit(d.clone()).unwrap())
+            .collect();
+        for t in tickets {
+            t.wait().unwrap();
+        }
+        let m = svc.metrics();
+        let o = m.obs.expect("obs snapshot");
+        assert!(o.tracing_enabled);
+        assert_eq!(o.recorded, 4, "one span tree per served request");
+        assert!(!o.exemplars.is_empty(), "slowest-request exemplars kept");
+        // the tabu pool route charges every fresh instance to the ledger
+        assert!(o.total_joules() > 0.0, "ledger uncharged");
+        assert!(
+            o.ledger
+                .iter()
+                .all(|r| r.backend == "tabu" && r.subsystem == "pool"),
+            "{:?}",
+            o.ledger
+        );
+        let charged: u64 = o.ledger.iter().map(|r| r.cell.solves).sum();
+        assert_eq!(charged, 4 * settings.pipeline.iterations as u64);
+        assert!(o.dispatches >= 1, "device dispatches counted");
+        assert_eq!(o.dispatch_instances, charged);
+        // buffered trees are drainable (the serve loop's JSONL export)
+        let drained = svc.obs().traces().drain();
+        assert_eq!(drained.len() as u64 + o.dropped, 4);
+        assert!(drained
+            .iter()
+            .all(|s| s.stage == "request" && !s.children.is_empty()));
+        assert!(m.report().contains("obs:"), "{}", m.report());
         svc.shutdown();
     }
 

@@ -12,6 +12,10 @@
 //! metrics report (counts, latency percentiles, per-strategy totals and —
 //! when the shared device pool is running — batch occupancy / coalescing
 //! / utilization): the server replies `OK 1` followed by one report line.
+//! `::STATS JSON::` is its machine-readable variant (`OK 1` + one JSON
+//! line, schema in docs/OBSERVABILITY.md), and `::METRICS::` serves the
+//! Prometheus-style text exposition — counters, latency histograms and
+//! the fleet energy-ledger series — as `OK <n>` + n exposition lines.
 //!
 //! A first line of exactly `::STREAM::` opens a `SUMMARIZE_STREAM`
 //! session: the client sends document text in chunks, each terminated by
@@ -38,6 +42,10 @@ use super::Service;
 pub const EOF_MARKER: &str = "::EOF::";
 /// First-line marker requesting the metrics report.
 pub const STATS_MARKER: &str = "::STATS::";
+/// First-line marker requesting the machine-readable (JSON) stats.
+pub const STATS_JSON_MARKER: &str = "::STATS JSON::";
+/// First-line marker requesting the Prometheus-style exposition.
+pub const METRICS_MARKER: &str = "::METRICS::";
 /// First-line marker opening a `SUMMARIZE_STREAM` session.
 pub const STREAM_MARKER: &str = "::STREAM::";
 /// Ends one stream chunk and requests a summary revision.
@@ -115,6 +123,19 @@ fn handle_connection(service: &Service, stream: TcpStream, id: u64) -> Result<()
             let mut out = stream;
             writeln!(out, "OK 1")?;
             writeln!(out, "{}", service.metrics().report())?;
+            return Ok(());
+        }
+        if first && line.trim_end() == STATS_JSON_MARKER {
+            let mut out = stream;
+            writeln!(out, "OK 1")?;
+            writeln!(out, "{}", crate::obs::export::stats_json(&service.metrics()))?;
+            return Ok(());
+        }
+        if first && line.trim_end() == METRICS_MARKER {
+            let mut out = stream;
+            let body = crate::obs::export::exposition(&service.metrics());
+            writeln!(out, "OK {}", body.lines().count())?;
+            out.write_all(body.as_bytes())?;
             return Ok(());
         }
         if first && line.trim_end() == STREAM_MARKER {
@@ -237,6 +258,46 @@ pub fn stats_remote(addr: std::net::SocketAddr) -> Result<String> {
     let mut report = String::new();
     reader.read_line(&mut report)?;
     Ok(report.trim_end().to_string())
+}
+
+/// Fetch the machine-readable stats (a `::STATS JSON::` request): one
+/// JSON object, parseable with [`crate::obs::json::JsonValue::parse`].
+pub fn stats_json_remote(addr: std::net::SocketAddr) -> Result<String> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.write_all(format!("{STATS_JSON_MARKER}\n").as_bytes())?;
+    let mut reader = BufReader::new(stream);
+    let mut header = String::new();
+    reader.read_line(&mut header)?;
+    anyhow::ensure!(
+        header.trim_end() == "OK 1",
+        "unexpected stats-json header: {header:?}"
+    );
+    let mut body = String::new();
+    reader.read_line(&mut body)?;
+    Ok(body.trim_end().to_string())
+}
+
+/// Fetch the Prometheus-style exposition (a `::METRICS::` request):
+/// the newline-joined exposition lines, trailing newline included.
+pub fn metrics_remote(addr: std::net::SocketAddr) -> Result<String> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.write_all(format!("{METRICS_MARKER}\n").as_bytes())?;
+    let mut reader = BufReader::new(stream);
+    let mut header = String::new();
+    reader.read_line(&mut header)?;
+    let n: usize = header
+        .trim_end()
+        .strip_prefix("OK ")
+        .with_context(|| format!("unexpected metrics header: {header:?}"))?
+        .parse()
+        .context("bad metrics header count")?;
+    let mut body = String::with_capacity(n * 48);
+    for _ in 0..n {
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        body.push_str(&line);
+    }
+    Ok(body)
 }
 
 /// Read one framed reply: `REV <n>` / `OK <n>` followed by n sentence
@@ -365,6 +426,42 @@ mod tests {
         let report = stats_remote(server.addr).unwrap();
         assert!(report.contains("completed=1"), "{report}");
         assert!(report.contains("occupancy"), "{report}");
+        server.stop();
+    }
+
+    #[test]
+    fn tcp_metrics_exposition_and_stats_json_round_trip() {
+        let mut settings = Settings::default();
+        settings.service.workers = 1;
+        settings.pipeline.solver = "tabu".into();
+        settings.pipeline.iterations = 2;
+        settings.obs.enabled = true;
+        let svc = Arc::new(Service::start(&settings).unwrap());
+        let server = TcpServer::start(svc.clone(), 0).unwrap();
+        let set = benchmark_set("cnn_dm_20").unwrap();
+        summarize_remote(server.addr, &set.documents[0].text()).unwrap();
+
+        // exposition: request counters + the energy-ledger series
+        let exposition = metrics_remote(server.addr).unwrap();
+        assert!(
+            exposition.contains("cobi_es_requests_total{state=\"completed\"} 1"),
+            "{exposition}"
+        );
+        assert!(
+            exposition.contains("cobi_es_energy_joules_total{backend=\"tabu\""),
+            "{exposition}"
+        );
+        assert!(exposition.contains("cobi_es_solve_seconds_bucket"), "{exposition}");
+
+        // stats json: parses, and its counters round-trip the report's
+        let body = stats_json_remote(server.addr).unwrap();
+        let v = crate::obs::json::JsonValue::parse(&body).unwrap();
+        let req = v.get("requests").unwrap();
+        assert_eq!(req.get("completed").unwrap().as_u64(), Some(1));
+        assert_eq!(req.get("submitted").unwrap().as_u64(), Some(1));
+        let obs = v.get("obs").unwrap();
+        assert_eq!(obs.get("tracing").unwrap().as_bool(), Some(true));
+        assert!(obs.get("energy_j").unwrap().as_f64().unwrap() > 0.0);
         server.stop();
     }
 

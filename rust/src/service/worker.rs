@@ -17,12 +17,13 @@
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, SyncSender};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::config::Settings;
 use crate::corpus::Document;
+use crate::obs::{ObsShared, Span};
 use crate::pipeline::{EsPipeline, Summary};
 use crate::resilience::ResilienceShared;
 use crate::runtime::ArtifactRuntime;
@@ -61,6 +62,7 @@ pub fn spawn_workers(
     route: SolveRoute,
     rt: Option<&ArtifactRuntime>,
     resilience: Option<&ResilienceShared>,
+    obs: &ObsShared,
 ) -> Result<Vec<std::thread::JoinHandle<()>>> {
     let shared_rx = Arc::new(Mutex::new(rx));
     let mut handles = Vec::new();
@@ -76,19 +78,30 @@ pub fn spawn_workers(
         let max_batch = settings.service.max_batch.max(1);
         let base_cfg = settings.pipeline.clone();
 
-        // per-worker solve function
-        let mut solve: Box<dyn FnMut(&Document) -> Result<Summary> + Send> =
+        // per-worker solve function: takes the request's queue wait so
+        // the finished trace carries end-to-end latency, not just solve
+        let mut solve: Box<dyn FnMut(&Document, Duration) -> Result<Summary> + Send> =
             match &pool_handle {
                 Some(handle) => {
                     let handle = handle.clone();
-                    Box::new(move |doc: &Document| {
+                    let obs = obs.clone();
+                    Box::new(move |doc: &Document, queue_wait: Duration| {
                         // seeds keyed to the DOCUMENT: any worker produces
                         // the same bytes for the same (config, doc)
                         let seed = sched::doc_seed(base_cfg.seed, &doc.id);
                         let mut cfg = base_cfg.clone();
                         cfg.seed = seed;
                         let mut client = handle.client(seed);
-                        sched::summarize_with_pool(doc, &cfg, &mut client)
+                        let t0 = Instant::now();
+                        let (summary, root) =
+                            sched::summarize_with_pool_traced(doc, &cfg, &mut client, &obs)?;
+                        obs.finish_request(
+                            root,
+                            &doc.id,
+                            queue_wait.as_secs_f64(),
+                            t0.elapsed().as_secs_f64(),
+                        );
+                        Ok(summary)
                     })
                 }
                 None => {
@@ -103,12 +116,43 @@ pub fn spawn_workers(
                     let mut cfg = base_cfg.clone();
                     cfg.seed = cfg.seed.wrapping_add(w as u64 * 0x9E37);
                     let mut pipeline = match crate::resilience::resilient_pipeline(
-                        settings, &cfg, rt, resilience,
+                        settings,
+                        &cfg,
+                        rt,
+                        resilience,
+                        Some((obs, crate::obs::Subsystem::Pipeline)),
                     )? {
                         Some(p) => p,
                         None => EsPipeline::from_config(&cfg, &settings.cobi, rt)?,
                     };
-                    Box::new(move |doc: &Document| pipeline.summarize(doc))
+                    let obs = obs.clone();
+                    let strategy = cfg.strategy;
+                    Box::new(move |doc: &Document, queue_wait: Duration| {
+                        // the local pipeline is opaque to per-unit spans:
+                        // trace at request granularity (route + score)
+                        let mut root = obs.start_request(&doc.id);
+                        if let Some(r) = root.as_mut() {
+                            r.set("route", "local");
+                            r.set("strategy", strategy.as_str());
+                        }
+                        let t0 = Instant::now();
+                        let summary = pipeline.summarize(doc)?;
+                        if let Some(r) = root.as_mut() {
+                            r.push(
+                                Span::new("score")
+                                    .with("objective", summary.objective)
+                                    .with("selected", summary.selected.len())
+                                    .with("solves", summary.total_solves),
+                            );
+                        }
+                        obs.finish_request(
+                            root,
+                            &doc.id,
+                            queue_wait.as_secs_f64(),
+                            t0.elapsed().as_secs_f64(),
+                        );
+                        Ok(summary)
+                    })
                 }
             };
 
@@ -133,7 +177,7 @@ pub fn spawn_workers(
 }
 
 fn worker_loop(
-    solve: &mut dyn FnMut(&Document) -> Result<Summary>,
+    solve: &mut dyn FnMut(&Document, Duration) -> Result<Summary>,
     rx: &Arc<Mutex<Receiver<Job>>>,
     metrics: &Arc<Mutex<ServiceMetrics>>,
     inflight: &Arc<AtomicUsize>,
@@ -167,7 +211,7 @@ fn worker_loop(
             }
             let queue_wait = job.enqueued.elapsed();
             let t0 = Instant::now();
-            let result = solve(&job.doc);
+            let result = solve(&job.doc, queue_wait);
             let solve_time = t0.elapsed();
             {
                 let mut m = metrics.lock().unwrap();

@@ -14,6 +14,12 @@
 //! takes the minimum delta over several repeats (background noise only
 //! ever adds). This file holds exactly one #[test] so no sibling test
 //! thread allocates concurrently.
+//!
+//! The same test also pins the ISSUE 6 observability contract: with
+//! tracing compiled in but DISABLED (the `[obs]` default), consulting
+//! the obs handle on the warmed path allocates nothing —
+//! `ObsShared::start_request` bails before any allocation, so the
+//! measured count stays EQUAL to the untraced run.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -98,4 +104,38 @@ fn steady_state_refine_iterations_do_not_allocate() {
              (per-iteration work must reuse scratch buffers)"
         );
     }
+
+    // Tracing compiled in but disabled: the obs handle is constructed
+    // OUTSIDE the measured region (its Arcs allocate once), then the
+    // disabled fast path is probed directly...
+    let obs = cobi_es::obs::ObsShared::disabled();
+    let (probe, _) = allocations_during(|| {
+        for _ in 0..256 {
+            assert!(obs.start_request("alloc-audit").is_none());
+        }
+    });
+    assert_eq!(probe, 0, "disabled start_request must not allocate");
+
+    // ...and woven into the warmed refine loop, where the allocation
+    // count must stay EQUAL to the untraced runs above (delta still 0).
+    let mut solver = TabuSolver::seeded(9);
+    let mut rng = Pcg32::seeded(11);
+    refine(&p, &cfg_short, &mut solver, &mut rng).unwrap();
+    let mut min_delta = u64::MAX;
+    for _ in 0..5 {
+        let (short, _) = allocations_during(|| {
+            assert!(obs.start_request("alloc-audit").is_none());
+            refine(&p, &cfg_short, &mut solver, &mut rng).unwrap()
+        });
+        let (long, _) = allocations_during(|| {
+            assert!(obs.start_request("alloc-audit").is_none());
+            refine(&p, &cfg_long, &mut solver, &mut rng).unwrap()
+        });
+        min_delta = min_delta.min(long.saturating_sub(short));
+    }
+    assert_eq!(
+        min_delta, 0,
+        "disabled tracing perturbed the zero-alloc refine path \
+         ({min_delta} extra allocations)"
+    );
 }

@@ -1,0 +1,151 @@
+//! Integration tests for the observability subsystem (ISSUE 6): the
+//! trace-export + exposition path kept alive end to end.
+//!
+//! `serve_binary_trace_smoke` is env-gated (COBI_ES_OBS_SMOKE=1, set by
+//! CI) and drives the REAL `cobi-es` binary: `serve --port 0
+//! --trace-out …`, one summarize over TCP, a `::METRICS::` scrape, and
+//! a poll of the JSONL file until a span tree parses. Unset, the
+//! in-process test covers the same exporters without a child process so
+//! the path stays alive for plain `cargo test`.
+
+use std::io::BufRead;
+use std::sync::Arc;
+
+use cobi_es::config::Settings;
+use cobi_es::corpus::benchmark_set;
+use cobi_es::obs::json::JsonValue;
+use cobi_es::service::tcp::{metrics_remote, summarize_remote, TcpServer};
+use cobi_es::service::Service;
+
+/// A fresh path under the system temp dir (removed by the caller).
+fn temp_trace_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!(
+        "cobi-es-obs-smoke-{tag}-{}.jsonl",
+        std::process::id()
+    ))
+}
+
+/// Every line of `path` must parse as a span tree rooted at "request".
+fn assert_jsonl_parses(path: &std::path::Path) -> usize {
+    let text = std::fs::read_to_string(path).unwrap();
+    let mut n = 0;
+    for line in text.lines() {
+        let v = JsonValue::parse(line).unwrap_or_else(|e| panic!("bad JSONL line {line:?}: {e}"));
+        assert_eq!(v.get("stage").and_then(|s| s.as_str()), Some("request"));
+        n += 1;
+    }
+    n
+}
+
+#[test]
+fn in_process_trace_export_and_exposition() {
+    let mut s = Settings::default();
+    s.service.workers = 1;
+    s.pipeline.solver = "tabu".into();
+    s.pipeline.iterations = 2;
+    s.obs.enabled = true;
+    let svc = Arc::new(Service::start(&s).unwrap());
+    let server = TcpServer::start(svc.clone(), 0).unwrap();
+
+    let set = benchmark_set("cnn_dm_20").unwrap();
+    summarize_remote(server.addr, &set.documents[0].text()).unwrap();
+
+    // the exposition carries the energy-ledger series
+    let exposition = metrics_remote(server.addr).unwrap();
+    assert!(exposition.contains("cobi_es_energy_joules_total"), "{exposition}");
+    assert!(exposition.contains("cobi_es_traces_total{state=\"recorded\"} 1"), "{exposition}");
+
+    // the drained trees export as parseable JSONL (what --trace-out does)
+    let path = temp_trace_path("inproc");
+    let _ = std::fs::remove_file(&path);
+    let spans = svc.obs().traces().drain();
+    assert!(!spans.is_empty(), "one request must record one tree");
+    cobi_es::obs::export::append_jsonl(&path, &spans).unwrap();
+    assert_eq!(assert_jsonl_parses(&path), spans.len());
+    std::fs::remove_file(&path).unwrap();
+
+    server.stop();
+}
+
+/// Kills the child even when an assertion panics mid-test.
+struct KillOnDrop(std::process::Child);
+
+impl Drop for KillOnDrop {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+#[test]
+fn serve_binary_trace_smoke() {
+    // env-gated (CI sets COBI_ES_OBS_SMOKE=1): exercise the shipped
+    // binary's serve loop — flag parsing, the periodic trace flush and
+    // the TCP exporters — not just the library surface
+    if std::env::var("COBI_ES_OBS_SMOKE").is_err() {
+        return;
+    }
+    let path = temp_trace_path("binary");
+    let _ = std::fs::remove_file(&path);
+
+    let child = std::process::Command::new(env!("CARGO_BIN_EXE_cobi-es"))
+        .args([
+            "serve",
+            "--port",
+            "0",
+            "--trace-out",
+            path.to_str().unwrap(),
+            "--solver",
+            "tabu",
+            "--iterations",
+            "2",
+            "--workers",
+            "1",
+        ])
+        .stdout(std::process::Stdio::piped())
+        .spawn()
+        .expect("spawning cobi-es serve");
+    let mut child = KillOnDrop(child);
+
+    // the serve banner ends with "listening on <addr> — …"
+    let stdout = child.0.stdout.take().expect("piped stdout");
+    let mut reader = std::io::BufReader::new(stdout);
+    let addr: std::net::SocketAddr = loop {
+        let mut line = String::new();
+        let n = reader.read_line(&mut line).expect("reading serve stdout");
+        assert!(n > 0, "serve exited before printing its listen address");
+        if let Some(rest) = line.strip_prefix("listening on ") {
+            break rest
+                .split_whitespace()
+                .next()
+                .expect("address after 'listening on'")
+                .parse()
+                .expect("parseable listen address");
+        }
+    };
+
+    let set = benchmark_set("cnn_dm_20").unwrap();
+    let summary = summarize_remote(addr, &set.documents[0].text()).unwrap();
+    assert_eq!(summary.len(), 6);
+
+    // exposition over the wire carries the energy ledger
+    let exposition = metrics_remote(addr).unwrap();
+    assert!(exposition.contains("cobi_es_energy_joules_total"), "{exposition}");
+    assert!(exposition.contains("cobi_es_traces_total{state=\"recorded\"}"), "{exposition}");
+
+    // the serve loop flushes traces every 500ms — poll until the JSONL
+    // file holds a parseable span tree
+    let mut parsed = 0;
+    for _ in 0..40 {
+        std::thread::sleep(std::time::Duration::from_millis(250));
+        if path.exists() {
+            let text = std::fs::read_to_string(&path).unwrap();
+            if text.lines().any(|l| !l.trim().is_empty()) {
+                parsed = assert_jsonl_parses(&path);
+                break;
+            }
+        }
+    }
+    assert!(parsed >= 1, "no trace trees flushed to {} within 10s", path.display());
+    std::fs::remove_file(&path).unwrap();
+}
