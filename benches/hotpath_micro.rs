@@ -15,6 +15,7 @@ use cobi_es::ising::{formulate, EsProblem, Formulation, Ising, QuantIsing};
 use cobi_es::quant::{quantize, quantize_into, Precision, Rounding};
 use cobi_es::refine::{refine, refine_batched, RefineConfig};
 use cobi_es::solvers::oscillator::{anneal, OscillatorConfig, OscillatorSolver};
+use cobi_es::solvers::snowball::{SnowballConfig, SnowballSolver};
 use cobi_es::solvers::tabu::TabuSolver;
 use cobi_es::solvers::{brute, exact, IsingSolver, QuantSolve};
 use cobi_es::util::bench::{black_box, Bencher};
@@ -104,6 +105,39 @@ fn main() {
         black_box(tabu_i64.solve_quant_into(&qint64, &mut spins_out));
     });
 
+    // snowball — sharded parallel-spin MCMC: f64 vs integer kernel on
+    // the same instance (bit-identical outputs), then 1 vs 8 worker
+    // threads on the same logical schedule (results identical too, so
+    // the thread ratio is pure wall-clock scaling)
+    let mut snow_f = SnowballSolver::seeded(5);
+    b.bench("snowball/solve n=64 int14 (f64 kernel)", || {
+        black_box(snow_f.solve_reference_f64(&quantized64));
+    });
+    let mut snow_i = SnowballSolver::seeded(5);
+    b.bench("snowball/solve n=64 int14 (int kernel)", || {
+        black_box(snow_i.solve_quant_into(&qint64, &mut spins_out));
+    });
+    let mut snow_t1 = SnowballSolver::new(
+        5,
+        SnowballConfig {
+            threads: 1,
+            ..Default::default()
+        },
+    );
+    b.bench("snowball/solve n=64 int14 (1 thread)", || {
+        black_box(snow_t1.solve(&quantized64));
+    });
+    let mut snow_t8 = SnowballSolver::new(
+        5,
+        SnowballConfig {
+            threads: 8,
+            ..Default::default()
+        },
+    );
+    b.bench("snowball/solve n=64 int14 (8 threads)", || {
+        black_box(snow_t8.solve(&quantized64));
+    });
+
     // one full refinement run (quantize → solve → repair → score,
     // 4 iterations): the batched f32 path vs the integer fast path
     let refine_cfg = RefineConfig {
@@ -174,6 +208,15 @@ fn main() {
         ratio(tabu20_f, tabu20_i),
         ratio(tabu64_f, tabu64_i),
         ratio(refine_f, refine_i),
+    );
+    let snow_f64 = median_s(&b, "snowball/solve n=64 int14 (f64 kernel)");
+    let snow_int = median_s(&b, "snowball/solve n=64 int14 (int kernel)");
+    let snow_1t = median_s(&b, "snowball/solve n=64 int14 (1 thread)");
+    let snow_8t = median_s(&b, "snowball/solve n=64 int14 (8 threads)");
+    println!(
+        "snowball n=64: int-vs-f64 {:.2}x | 8-vs-1 threads {:.2}x (same bytes out)",
+        ratio(snow_f64, snow_int),
+        ratio(snow_1t, snow_8t),
     );
     let json = format!(
         r#"{{

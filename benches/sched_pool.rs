@@ -14,8 +14,9 @@
 //!
 //! Prints a human summary plus a JSON record; set COBI_BENCH_RECORD=1 to
 //! (over)write the committed baselines `BENCH_sched.json` (pooled vs
-//! sequential) and `BENCH_decompose.json` (window vs tree level
-//! parallelism) with fresh numbers (see those files for the schemas).
+//! sequential), `BENCH_decompose.json` (window vs tree level
+//! parallelism), and `BENCH_snowball.json` (snowball worker-thread
+//! scaling) with fresh numbers (see those files for the schemas).
 //!
 //! ## Decompose strategy matrix (the window-vs-tree cases)
 //!
@@ -128,6 +129,63 @@ fn bench_decompose_strategies() -> String {
     )
 }
 
+/// Snowball worker-thread matrix on the pooled service: the SAME
+/// `xsum_100` workload with `[solvers.snowball] threads = 1` vs `8`.
+/// Logical asynchrony makes the outputs byte-identical across thread
+/// counts, so the docs/s ratio is pure wall-clock scaling; returns the
+/// JSON fragment for `BENCH_snowball.json`.
+fn bench_snowball_threads() -> String {
+    const SET: &str = "xsum_100";
+    const SNOW_ROUNDS: usize = 1; // 20 x 100-sentence docs per thread count
+    let docs = SNOW_ROUNDS * 20;
+    let mut fragments = Vec::new();
+    let mut walls = Vec::new();
+    for threads in [1usize, 8] {
+        let mut s = base_settings();
+        s.pipeline.solver = "snowball".into();
+        s.sched.devices = DEVICES;
+        s.solvers.snowball.threads = threads;
+        let (wall, m) = run_workload_on(&s, SET, SNOW_ROUNDS);
+        let rate = docs as f64 / wall;
+        println!(
+            "snowball threads={threads}: {docs} x 100-sentence docs in {wall:.2}s = {rate:.1} docs/s"
+        );
+        println!("  {}", m.report());
+        walls.push(wall);
+        fragments.push(format!(
+            r#"    "t{threads}": {{
+      "wall_s": {wall:.4},
+      "docs_per_s": {rate:.2},
+      "batch_occupancy": {occ:.3},
+      "utilization": {util:.3}
+    }}"#,
+            occ = m.pool.batch_occupancy(),
+            util = m.pool.utilization(),
+        ));
+    }
+    let speedup = walls[0] / walls[1];
+    println!("snowball 8-vs-1 thread speedup {speedup:.2}x (same bytes out)");
+    format!(
+        r#"{{
+  "bench": "snowball_threads",
+  "status": "recorded",
+  "workload": {{
+    "set": "{SET}",
+    "documents": {docs},
+    "solver": "snowball",
+    "iterations": {ITERATIONS},
+    "workers": {WORKERS},
+    "devices": {DEVICES}
+  }},
+  "threads": {{
+{fragments}
+  }},
+  "speedup_8v1": {speedup:.3}
+}}"#,
+        fragments = fragments.join(",\n"),
+    )
+}
+
 fn main() {
     let docs = ROUNDS * 20;
 
@@ -202,5 +260,14 @@ fn main() {
         std::fs::write("BENCH_decompose.json", format!("{decompose_json}\n"))
             .expect("write baseline");
         println!("recorded baseline to BENCH_decompose.json");
+    }
+
+    println!("\n-- snowball worker-thread matrix (1 vs 8) --");
+    let snowball_json = bench_snowball_threads();
+    println!("\n{snowball_json}");
+    if std::env::var("COBI_BENCH_RECORD").is_ok() {
+        std::fs::write("BENCH_snowball.json", format!("{snowball_json}\n"))
+            .expect("write baseline");
+        println!("recorded baseline to BENCH_snowball.json");
     }
 }

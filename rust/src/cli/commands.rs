@@ -241,7 +241,7 @@ pub fn cmd_solve(args: &Args) -> Result<()> {
     let mut base = EsPipeline::from_config(&settings.pipeline, &settings.cobi, None)?;
     let problem = base.problem_for(doc)?;
     let bounds = exact_bounds(&problem);
-    for solver in ["cobi", "tabu", "sa", "brute", "exact", "random"] {
+    for solver in ["cobi", "tabu", "sa", "snowball", "brute", "exact", "random"] {
         let mut cfg = settings.pipeline.clone();
         cfg.solver = solver.to_string();
         let mut p = EsPipeline::from_config(&cfg, &settings.cobi, None)?;
@@ -273,7 +273,7 @@ fn apply_pool_flags(settings: &mut Settings, args: &Args) -> Result<()> {
         // reject typos loudly: an unknown backend would otherwise just
         // silently route solves to worker-private solvers
         if b != "auto" && !crate::sched::pool_supports(b) {
-            bail!("--pool-backend expects auto|cobi|tabu|sa|portfolio, got '{b}'");
+            bail!("--pool-backend expects auto|cobi|tabu|sa|snowball|portfolio, got '{b}'");
         }
         settings.sched.backend = b.to_string();
     }

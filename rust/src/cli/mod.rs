@@ -104,7 +104,8 @@ USAGE:
 COMMANDS:
   summarize    Summarize a text file or a benchmark document
                --input <file> | --benchmark <set> [--doc N]
-               [--solver cobi|tabu|sa|brute|exact|random] [--iterations N]
+               [--solver cobi|tabu|sa|snowball|brute|exact|random]
+               [--iterations N]
                [--summary-len M] [--precision fp|4bit..8bit|int14]
                [--rounding deterministic|stoch5050|stochastic]
                [--strategy window|tree|stream] [--hlo]
@@ -135,7 +136,7 @@ COMMANDS:
                final 'OK <m>' summary)
                device pool: [--pool-devices N] [--pool-coalesce N]
                [--pool-linger-us N]
-               [--pool-backend auto|cobi|tabu|sa|portfolio]
+               [--pool-backend auto|cobi|tabu|sa|snowball|portfolio]
                [--no-pool] (fall back to worker-private solvers)
                portfolio: [--portfolio] (adaptive solver routing)
                [--portfolio-policy static|size-tiered|bandit]

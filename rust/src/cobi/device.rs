@@ -22,7 +22,8 @@ pub const ANNEAL_BATCH: usize = 8;
 
 /// RNG stream id for device phase/noise draws (shared by the device-owned
 /// rng and the per-request seeded paths so both derive identically).
-const DEVICE_STREAM: u64 = 0xC0B1;
+/// `pub(crate)` for the stream-id audit in `util::rng`.
+pub(crate) const DEVICE_STREAM: u64 = 0xC0B1;
 
 /// Solve backend.
 pub enum CobiBackend {

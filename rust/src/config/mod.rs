@@ -81,7 +81,7 @@ pub struct PipelineConfig {
     /// Final summary length M.
     pub summary_len: usize,
     /// Solver for quantized instances: "cobi", "tabu", "brute", "exact",
-    /// "random", "sa".
+    /// "random", "sa", "snowball".
     pub solver: String,
     /// Master seed for all pipeline randomness.
     pub seed: u64,
@@ -199,7 +199,7 @@ pub struct SchedConfig {
     /// Bound on queued solve requests (submitters block when full).
     pub queue_depth: usize,
     /// Pool solver backend: "auto" (= pipeline.solver), "cobi", "tabu",
-    /// "sa".
+    /// "sa", "snowball", "portfolio".
     pub backend: String,
 }
 
@@ -388,6 +388,73 @@ impl Default for ObsConfig {
     }
 }
 
+/// Snowball solver tuning (`[solvers.snowball]`): the sharded
+/// parallel-spin MCMC backend (`solvers::snowball::SnowballSolver`).
+/// Every field mirrors [`crate::solvers::snowball::SnowballConfig`];
+/// `threads` is a wall-clock knob only — results are bit-identical for
+/// every value (logical asynchrony, DESIGN.md decision #19).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SnowballSettings {
+    /// Logical parallel units the spin vector is sharded across.
+    pub shards: usize,
+    /// Barrier-to-barrier epochs per restart.
+    pub epochs: usize,
+    /// Largest n solved in uniform sweep mode; above it, focus mode.
+    pub focus_threshold: usize,
+    /// Per-spin participation probability in uniform sweep mode.
+    pub participation: f64,
+    /// Initial temperature of the geometric Metropolis cooling.
+    pub t_start: f64,
+    /// Final temperature of the geometric Metropolis cooling.
+    pub t_end: f64,
+    /// Independent restarts per solve.
+    pub restarts: usize,
+    /// Physical worker threads for shard epochs; 0 = read
+    /// `COBI_SNOWBALL_THREADS`, default 1. Never affects results.
+    pub threads: usize,
+}
+
+impl Default for SnowballSettings {
+    fn default() -> Self {
+        let d = crate::solvers::snowball::SnowballConfig::default();
+        Self {
+            shards: d.shards,
+            epochs: d.epochs,
+            focus_threshold: d.focus_threshold,
+            participation: d.participation,
+            t_start: d.t_start,
+            t_end: d.t_end,
+            restarts: d.restarts,
+            threads: d.threads,
+        }
+    }
+}
+
+impl SnowballSettings {
+    /// The solver-side parameter struct these settings configure.
+    pub fn solver_config(&self) -> crate::solvers::snowball::SnowballConfig {
+        crate::solvers::snowball::SnowballConfig {
+            shards: self.shards,
+            epochs: self.epochs,
+            focus_threshold: self.focus_threshold,
+            participation: self.participation,
+            t_start: self.t_start,
+            t_end: self.t_end,
+            restarts: self.restarts,
+            threads: self.threads,
+        }
+    }
+}
+
+/// Per-backend solver tuning (`[solvers.*]` sections). Only backends with
+/// meaningful knobs beyond their seed live here; the classic backends
+/// (tabu, sa, greedy, exact) keep their compiled-in defaults.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SolversConfig {
+    /// Snowball sharded parallel-spin solver (`[solvers.snowball]`).
+    pub snowball: SnowballSettings,
+}
+
 /// Root settings object.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Settings {
@@ -403,6 +470,8 @@ pub struct Settings {
     pub sched: SchedConfig,
     /// Solver portfolio + warm-start cache parameters.
     pub portfolio: PortfolioConfig,
+    /// Per-backend solver tuning (`[solvers.*]`).
+    pub solvers: SolversConfig,
     /// Hardware fault model + resilience-layer parameters.
     pub resilience: ResilienceConfig,
     /// Observability (span tracing) parameters.
@@ -542,6 +611,23 @@ impl Settings {
             get_f64,
             "portfolio.latency_weight"
         );
+
+        set!(self.solvers.snowball.shards, get_i64, "solvers.snowball.shards");
+        set!(self.solvers.snowball.epochs, get_i64, "solvers.snowball.epochs");
+        set!(
+            self.solvers.snowball.focus_threshold,
+            get_i64,
+            "solvers.snowball.focus_threshold"
+        );
+        set!(
+            self.solvers.snowball.participation,
+            get_f64,
+            "solvers.snowball.participation"
+        );
+        set!(self.solvers.snowball.t_start, get_f64, "solvers.snowball.t_start");
+        set!(self.solvers.snowball.t_end, get_f64, "solvers.snowball.t_end");
+        set!(self.solvers.snowball.restarts, get_i64, "solvers.snowball.restarts");
+        set!(self.solvers.snowball.threads, get_i64, "solvers.snowball.threads");
 
         set!(self.resilience.enabled, get_bool, "resilience.enabled");
         set!(self.resilience.replication, get_i64, "resilience.replication");
@@ -726,6 +812,46 @@ latency_weight = 2.5
         let mut s = Settings::default();
         s.apply(&doc).unwrap();
         assert_eq!(s.pipeline.strategy, Strategy::Tree);
+    }
+
+    #[test]
+    fn snowball_defaults_and_overrides() {
+        let s = Settings::default();
+        assert_eq!(s.solvers.snowball.shards, 8);
+        assert_eq!(s.solvers.snowball.epochs, 160);
+        assert_eq!(s.solvers.snowball.focus_threshold, 24);
+        assert!((s.solvers.snowball.participation - 0.85).abs() < 1e-12);
+        assert_eq!(s.solvers.snowball.restarts, 2);
+        assert_eq!(s.solvers.snowball.threads, 0, "threads must default to env/1");
+
+        let doc = toml::Document::parse(
+            r#"
+[solvers.snowball]
+shards = 16
+epochs = 300
+focus_threshold = 32
+participation = 0.7
+t_start = 5.0
+t_end = 0.01
+restarts = 3
+threads = 4
+"#,
+        )
+        .unwrap();
+        let mut s = Settings::default();
+        s.apply(&doc).unwrap();
+        assert_eq!(s.solvers.snowball.shards, 16);
+        assert_eq!(s.solvers.snowball.epochs, 300);
+        assert_eq!(s.solvers.snowball.focus_threshold, 32);
+        assert!((s.solvers.snowball.participation - 0.7).abs() < 1e-12);
+        assert!((s.solvers.snowball.t_start - 5.0).abs() < 1e-12);
+        assert!((s.solvers.snowball.t_end - 0.01).abs() < 1e-12);
+        assert_eq!(s.solvers.snowball.restarts, 3);
+        assert_eq!(s.solvers.snowball.threads, 4);
+        // settings -> solver config round trip
+        let cfg = s.solvers.snowball.solver_config();
+        assert_eq!(cfg.shards, 16);
+        assert_eq!(cfg.threads, 4);
     }
 
     #[test]

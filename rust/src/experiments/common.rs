@@ -51,6 +51,10 @@ pub fn make_solver(name: &str, seed: u64, settings: &Settings) -> Box<dyn IsingS
     match name {
         "tabu" => Box::new(crate::solvers::tabu::TabuSolver::seeded(seed)),
         "sa" => Box::new(crate::solvers::sa::SaSolver::seeded(seed)),
+        "snowball" => Box::new(crate::solvers::snowball::SnowballSolver::new(
+            seed,
+            settings.solvers.snowball.solver_config(),
+        )),
         "cobi" => Box::new(crate::cobi::CobiDevice::native(
             settings.cobi.clone(),
             seed,

@@ -36,6 +36,14 @@ use crate::solvers::SolveResult;
 /// capping the exponent keeps `2^n` finite for any caller.
 const EXACT_MODEL_CAP: usize = 60;
 
+/// Modeled parallel width of the snowball backend's sharded sweeps (its
+/// default shard count). Sharding spreads one sweep's spin updates over
+/// this many workers, so modeled occupancy divides by it — while modeled
+/// joules do not: every shard still burns CPU, so a parallel sweep is
+/// work-conserving (same energy as a serial tabu sweep, 1/width the
+/// wall occupancy).
+const SNOWBALL_MODEL_WIDTH: f64 = 8.0;
+
 /// Which layer of the serving stack dispatched a solve.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Subsystem {
@@ -114,10 +122,13 @@ impl EnergyModel {
     /// Modeled cost of ONE solve of an `n`-spin instance on `backend`.
     ///
     /// `cobi` uses the chip model; `tabu`/`sa` (and any unrecognized
-    /// software backend) use the software sweep model; `greedy` costs
-    /// one evaluation-time descent; `exact`/`brute` model exhaustive
-    /// enumeration (`2^n` evaluations, exponent capped). Every arm adds
-    /// the CPU evaluation energy, mirroring `TimingModel`.
+    /// software backend) use the software sweep model; `snowball` uses
+    /// the sharded-sweep model (tabu-equivalent joules — parallel sweeps
+    /// are work-conserving — at `1/SNOWBALL_MODEL_WIDTH` the occupancy);
+    /// `greedy` costs one evaluation-time descent; `exact`/`brute` model
+    /// exhaustive enumeration (`2^n` evaluations, exponent capped).
+    /// Every arm adds the CPU evaluation energy, mirroring
+    /// `TimingModel`.
     pub fn per_instance(&self, backend: &str, n: usize) -> EnergyCost {
         let eval_j = self.eval_time_s * self.cpu_power_w;
         match backend {
@@ -128,6 +139,10 @@ impl EnergyModel {
             "greedy" => EnergyCost {
                 device_s: self.eval_time_s,
                 joules: self.eval_time_s * self.cpu_power_w + eval_j,
+            },
+            "snowball" => EnergyCost {
+                device_s: self.tabu_time_s / SNOWBALL_MODEL_WIDTH,
+                joules: self.tabu_time_s * self.cpu_power_w + eval_j,
             },
             "exact" | "brute" => {
                 let evals = 2f64.powi(n.min(EXACT_MODEL_CAP) as i32);
@@ -353,6 +368,18 @@ mod tests {
         // the paper's ordering: cobi ≪ tabu ≪ brute force
         assert!(cobi.joules < tabu.joules);
         assert!(tabu.joules < exact.joules);
+    }
+
+    #[test]
+    fn snowball_is_work_conserving_but_width_parallel() {
+        // sharded sweeps burn the same modeled joules as a serial tabu
+        // sweep (every shard's CPU still runs) at 1/width the occupancy
+        let m = model();
+        let tabu = m.per_instance("tabu", 20);
+        let snow = m.per_instance("snowball", 20);
+        assert!((snow.joules - tabu.joules).abs() < 1e-15);
+        assert!((snow.device_s - tabu.device_s / 8.0).abs() < 1e-15);
+        assert!(snow.device_s < tabu.device_s);
     }
 
     #[test]

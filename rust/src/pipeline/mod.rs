@@ -62,6 +62,9 @@ impl SolverBackend {
             )?)),
             "tabu" => SolverBackend::Ising(Box::new(TabuSolver::seeded(cfg.seed ^ 0x7AB))),
             "sa" => SolverBackend::Ising(Box::new(SaSolver::seeded(cfg.seed ^ 0x5A))),
+            "snowball" => SolverBackend::Ising(Box::new(
+                crate::solvers::snowball::SnowballSolver::seeded(cfg.seed ^ 0x5B07),
+            )),
             "brute" => SolverBackend::Brute,
             "exact" => SolverBackend::Exact,
             "random" => SolverBackend::Random(RandomBaseline::seeded(cfg.seed ^ 0xBA5E)),

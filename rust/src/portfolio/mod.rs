@@ -8,7 +8,9 @@
 //! where large wins hide. This module exploits both observations:
 //!
 //! * [`SolverPortfolio`] — owns one instance of every backend (the COBI
-//!   device, Tabu, SA, greedy descent, exact-for-tiny-N) behind the
+//!   device, Tabu, SA, greedy descent, exact-for-tiny-N, and the
+//!   Snowball sharded parallel-spin solver for the largest buckets)
+//!   behind the
 //!   [`IsingSolver`] trait and routes each subproblem by a
 //!   [`RoutePolicy`] (`static`, `size-tiered`, or epsilon-greedy
 //!   `bandit` over per-(backend, size-bucket) running quality/latency
@@ -63,13 +65,16 @@ use crate::service::metrics::Histogram;
 use crate::solvers::exact::ExactIsingSolver;
 use crate::solvers::greedy::GreedyDescent;
 use crate::solvers::sa::SaSolver;
+use crate::solvers::snowball::SnowballSolver;
 use crate::solvers::tabu::TabuSolver;
 use crate::solvers::{IsingSolver, SolveResult};
 use crate::util::rng::Pcg32;
 
 /// RNG stream id for the bandit's exploration draws (keyed by the request
-/// seed, so routing replays deterministically per document).
-const BANDIT_STREAM: u64 = 0xBA2D17;
+/// seed, so routing replays deterministically per document). `pub(crate)`
+/// so the RNG stream audit in `util::rng` can assert it never collides
+/// with another named stream.
+pub(crate) const BANDIT_STREAM: u64 = 0xBA2D17;
 
 /// Hard ceiling on the exact backend's exhaustive enumeration (2^n
 /// states; the config value is clamped here).
@@ -208,6 +213,7 @@ pub struct SolverPortfolio {
     sa: SaSolver,
     greedy: GreedyDescent,
     exact: ExactIsingSolver,
+    snowball: SnowballSolver,
     shared: PortfolioShared,
     /// Fleet energy ledger + subsystem attribution; the portfolio
     /// charges its ROUTED backend per fresh solve (`None` = no
@@ -233,7 +239,7 @@ impl SolverPortfolio {
         let static_backend = BackendKind::from_name(&cfg.static_backend).with_context(|| {
             format!(
                 "unknown portfolio static_backend '{}' \
-                 (expected cobi|tabu|sa|greedy|exact)",
+                 (expected cobi|tabu|sa|greedy|exact|snowball)",
                 cfg.static_backend
             )
         })?;
@@ -265,6 +271,10 @@ impl SolverPortfolio {
             sa: SaSolver::seeded(seed ^ 0x5A),
             greedy: GreedyDescent::new(),
             exact: ExactIsingSolver::new(exact_max_n),
+            snowball: SnowballSolver::new(
+                seed ^ 0x5B07,
+                settings.solvers.snowball.solver_config(),
+            ),
             shared: shared.unwrap_or_else(|| PortfolioShared::new(cfg)),
             ledger: None,
             seeds: Pcg32::new(seed, 0x5EED0F),
@@ -303,7 +313,9 @@ impl SolverPortfolio {
         match b {
             BackendKind::Cobi => self.cobi.validate(sample).is_ok(),
             BackendKind::Exact => sample.n <= self.exact_max_n,
-            BackendKind::Tabu | BackendKind::Sa | BackendKind::Greedy => true,
+            BackendKind::Tabu | BackendKind::Sa | BackendKind::Greedy | BackendKind::Snowball => {
+                true
+            }
         }
     }
 
@@ -327,6 +339,11 @@ impl SolverPortfolio {
                     BackendKind::Exact
                 } else if self.cobi.validate(sample).is_ok() {
                     BackendKind::Cobi
+                } else if size_bucket(n) == N_BUCKETS - 1 {
+                    // the overflow bucket (beyond every COBI array size):
+                    // sharded parallel sweeps win exactly where serial
+                    // single-spin scans idle multi-core hosts
+                    BackendKind::Snowball
                 } else {
                     BackendKind::Tabu
                 }
@@ -451,6 +468,16 @@ impl SolverPortfolio {
                 BackendKind::Exact => {
                     for (i, _) in &todo {
                         out[*i] = Some(self.exact.solve_checked(&g.instances[*i])?);
+                    }
+                }
+                BackendKind::Snowball => {
+                    self.snowball.reseed(g.seed);
+                    for (i, hint) in &todo {
+                        let inst = &g.instances[*i];
+                        out[*i] = Some(match hint {
+                            Some(h) => self.snowball.solve_from(inst, h),
+                            None => self.snowball.solve(inst),
+                        });
                     }
                 }
             }
@@ -710,6 +737,38 @@ mod tests {
         let inst = quantized_glass(71, 24); // > exact_max_n, <= 59 spins
         p.solve_one(&inst, 4).unwrap();
         assert_eq!(p.shared().snapshot().route_count(BackendKind::Cobi), 1);
+    }
+
+    #[test]
+    fn size_tiered_routes_the_overflow_bucket_to_snowball() {
+        // beyond every COBI array size AND past the last bandit size
+        // bound: the sharded parallel-spin backend owns this bucket
+        let mut p = standalone("size-tiered", "cobi", false);
+        let inst = quantized_glass(74, 70); // > 64 -> overflow bucket
+        let r = p.solve_one(&inst, 5).unwrap();
+        assert!((inst.energy(&r.spins) - r.energy).abs() < 1e-9);
+        let m = p.shared().snapshot();
+        assert_eq!(m.route_count(BackendKind::Snowball), 1);
+        assert_eq!(m.total_routes(), 1);
+    }
+
+    #[test]
+    fn static_snowball_portfolio_replays_the_direct_solver() {
+        // a statically-routed snowball solve is byte-identical to driving
+        // the solver directly with the same reseed — the same replay
+        // contract the tabu/sa arms carry
+        let inst = quantized_glass(75, 18);
+        let mut p = standalone("static", "snowball", false);
+        let routed = p.solve_one(&inst, 0xBEEF).unwrap();
+        let mut direct = SnowballSolver::seeded(9 ^ 0x5B07);
+        direct.reseed(0xBEEF);
+        let expect = direct.solve(&inst);
+        assert_eq!(routed.spins, expect.spins);
+        assert_eq!(routed.energy.to_bits(), expect.energy.to_bits());
+        assert_eq!(
+            p.shared().snapshot().route_count(BackendKind::Snowball),
+            1
+        );
     }
 
     #[test]

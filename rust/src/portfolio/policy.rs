@@ -7,9 +7,11 @@
 //!   byte-identical to hosting that backend directly on the pool.
 //! * `size-tiered` — route by instance size: tiny instances go to the
 //!   exhaustive exact solver (cheaper than annealing and provably
-//!   optimal), chip-sized instances to COBI, oversized ones to Tabu. The
-//!   shape the paper's own evaluation suggests (Fig. 7/8: the best solver
-//!   depends on subproblem size).
+//!   optimal), chip-sized instances to COBI, the largest bucket to the
+//!   sharded parallel-spin Snowball backend (multi-core wins exactly
+//!   where serial sweeps idle), and the rest to Tabu. The shape the
+//!   paper's own evaluation suggests (Fig. 7/8: the best solver depends
+//!   on subproblem size).
 //! * `bandit` — epsilon-greedy over per-(backend, size-bucket) running
 //!   quality/latency statistics updated online, so the fleet learns which
 //!   backend wins for which workload. Exploration draws derive from the
@@ -33,16 +35,19 @@ pub enum BackendKind {
     Greedy,
     /// Exhaustive ground-state enumeration for tiny N.
     Exact,
+    /// Snowball-style sharded parallel-spin MCMC (multi-core large-n).
+    Snowball,
 }
 
 impl BackendKind {
     /// All backends, in the canonical routing/tie-break order.
-    pub const ALL: [BackendKind; 5] = [
+    pub const ALL: [BackendKind; 6] = [
         BackendKind::Cobi,
         BackendKind::Tabu,
         BackendKind::Sa,
         BackendKind::Greedy,
         BackendKind::Exact,
+        BackendKind::Snowball,
     ];
 
     /// Number of backends (array dimension for per-backend counters).
@@ -56,6 +61,7 @@ impl BackendKind {
             BackendKind::Sa => "sa",
             BackendKind::Greedy => "greedy",
             BackendKind::Exact => "exact",
+            BackendKind::Snowball => "snowball",
         }
     }
 
@@ -67,6 +73,7 @@ impl BackendKind {
             BackendKind::Sa => 2,
             BackendKind::Greedy => 3,
             BackendKind::Exact => 4,
+            BackendKind::Snowball => 5,
         }
     }
 

@@ -64,7 +64,8 @@ const RETRY_SALT: u64 = 0x1000_0000;
 /// Salt offsetting escalation-fallback seeds away from everything else.
 const ESCALATE_SALT: u64 = 0x2000_0000;
 /// RNG stream id for the unseeded [`IsingSolver`] adapter's seed draws.
-const ADAPTER_SEED_STREAM: u64 = 0x2E51_1E57;
+/// `pub(crate)` for the stream-id audit in `util::rng`.
+pub(crate) const ADAPTER_SEED_STREAM: u64 = 0x2E51_1E57;
 
 /// Derive the seed of replica / retry `k` from a request seed.
 /// `replica_seed(s, 0) == s`, so replication 1 dispatches the exact

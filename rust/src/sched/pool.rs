@@ -47,6 +47,7 @@ use crate::resilience::{FaultModel, ResilienceMetrics, ResilienceShared, Resilie
 use crate::runtime::ArtifactRuntime;
 use crate::service::metrics::Histogram;
 use crate::solvers::sa::SaSolver;
+use crate::solvers::snowball::SnowballSolver;
 use crate::solvers::tabu::TabuSolver;
 use crate::solvers::{IsingSolver, SolveResult};
 use crate::util::rng::Pcg32;
@@ -116,9 +117,25 @@ impl PoolSolver for SaSolver {
     }
 }
 
+impl PoolSolver for SnowballSolver {
+    fn name(&self) -> &'static str {
+        "snowball"
+    }
+
+    fn solve_groups(&mut self, groups: &[SeededGroup<'_>]) -> Result<Vec<Vec<SolveResult>>> {
+        Ok(groups
+            .iter()
+            .map(|g| {
+                self.reseed(g.seed);
+                g.instances.iter().map(|i| self.solve(i)).collect()
+            })
+            .collect())
+    }
+}
+
 /// Solvers the pool can host (per-request determinism implemented).
 pub fn pool_supports(solver: &str) -> bool {
-    matches!(solver, "cobi" | "tabu" | "sa" | "portfolio")
+    matches!(solver, "cobi" | "tabu" | "sa" | "snowball" | "portfolio")
 }
 
 /// Resolve the configured pool backend. `[portfolio] enabled = true`
@@ -197,6 +214,10 @@ pub(crate) fn build_solver(
         }
         "tabu" => Box::new(TabuSolver::seeded(seed)),
         "sa" => Box::new(SaSolver::seeded(seed)),
+        "snowball" => Box::new(SnowballSolver::new(
+            seed,
+            settings.solvers.snowball.solver_config(),
+        )),
         "portfolio" => {
             // the portfolio attaches the fault model to its internal
             // COBI device itself (it owns the construction); only the
@@ -212,7 +233,7 @@ pub(crate) fn build_solver(
         }
         other => bail!(
             "solver '{other}' cannot run on the device pool \
-             (supported: cobi, tabu, sa, portfolio)"
+             (supported: cobi, tabu, sa, snowball, portfolio)"
         ),
     };
     // charge every non-portfolio solve here, under the resilience wrap
@@ -845,8 +866,50 @@ mod tests {
     }
 
     #[test]
+    fn pooled_snowball_is_thread_and_shape_invariant() {
+        // the determinism pin at pool level: snowball results are
+        // byte-identical across worker thread counts (1 vs 8), pool
+        // shapes (1 vs 3 devices), and under ResilientSolver
+        // replication-1 passthrough — all equal to a direct re-seeded
+        // solver replay
+        let instances: Vec<Ising> = (0..4).map(|k| quantized_glass(820 + k, 18)).collect();
+
+        let pooled = |devices: usize, threads: usize, resilient: bool| -> Vec<SolveResult> {
+            let mut s = settings("snowball", devices);
+            s.solvers.snowball.threads = threads;
+            if resilient {
+                s.resilience.enabled = true;
+                s.resilience.replication = 1;
+                s.resilience.repair = false;
+            }
+            let pool = DevicePool::start(&s, None).unwrap();
+            let mut client = pool.client(0xACE);
+            let res = client.submit(instances.clone()).unwrap().wait().unwrap();
+            drop(client);
+            pool.shutdown();
+            res
+        };
+
+        let request_seed = Pcg32::new(0xACE, CLIENT_SEED_STREAM).next_u64();
+        let mut direct = SnowballSolver::seeded(0);
+        direct.reseed(request_seed);
+        let expect: Vec<SolveResult> = instances.iter().map(|i| direct.solve(i)).collect();
+
+        for (devices, threads, resilient) in
+            [(1, 1, false), (3, 1, false), (1, 8, false), (3, 8, false), (2, 8, true)]
+        {
+            let got = pooled(devices, threads, resilient);
+            for (k, (g, e)) in got.iter().zip(&expect).enumerate() {
+                let shape = format!("devices={devices} threads={threads} resilient={resilient}");
+                assert_eq!(g.spins, e.spins, "instance {k} ({shape})");
+                assert_eq!(g.energy.to_bits(), e.energy.to_bits(), "instance {k} ({shape})");
+            }
+        }
+    }
+
+    #[test]
     fn tabu_and_sa_pools_work() {
-        for solver in ["tabu", "sa"] {
+        for solver in ["tabu", "sa", "snowball"] {
             let pool = DevicePool::start(&settings(solver, 2), None).unwrap();
             let mut client = pool.client(3);
             let res = client

@@ -22,7 +22,8 @@ use crate::util::rng::Pcg32;
 const RESERVOIR: usize = 4096;
 /// RNG stream for the reservoirs' replacement draws — a metrics-private
 /// stream, so sampling can never perturb any solver/quantizer RNG.
-const RESERVOIR_STREAM: u64 = 0xA160_0012;
+/// `pub(crate)` for the stream-id audit in `util::rng`.
+pub(crate) const RESERVOIR_STREAM: u64 = 0xA160_0012;
 
 /// Per-decomposition-strategy completion counters, plus streaming-session
 /// activity (sessions opened, chunks ingested, revisions served). One

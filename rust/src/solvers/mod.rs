@@ -1,6 +1,7 @@
 //! Solver suite: the COBI-simulating oscillator solver plus every baseline
 //! the paper evaluates against (Tabu, brute force, random, exact/Gurobi
-//! substitute) and one extension (simulated annealing).
+//! substitute) and two extensions (simulated annealing, and the
+//! Snowball-style sharded parallel-spin MCMC solver).
 
 pub mod brute;
 pub mod exact;
@@ -9,6 +10,7 @@ pub mod kernel;
 pub mod oscillator;
 pub mod random;
 pub mod sa;
+pub mod snowball;
 pub mod tabu;
 
 pub use kernel::{KernelScratch, QuantSolve, SolveScratch, SolverKernel};

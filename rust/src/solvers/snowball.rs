@@ -1,0 +1,604 @@
+//! Snowball-style sharded parallel-spin MCMC solver (PAPERS.md: dual-mode
+//! spin selection with asynchronous updates across parallel units).
+//!
+//! Every other software backend in this crate is a serial single-spin
+//! sweep, so the largest merged subproblems (tree-strategy root merges,
+//! stream frontier compressions) leave host cores idle exactly where
+//! latency matters most. Snowball shards the spin vector across logical
+//! parallel units and lets every shard propose flips concurrently against
+//! a stale snapshot of its neighbours — the Snowball chip's asynchronous
+//! update model, reproduced in software.
+//!
+//! ## Logical asynchrony (DESIGN.md decision #19)
+//!
+//! Asynchrony here is **logical, not wall-clock**. Each solve draws one
+//! schedule seed from the solver's request RNG stream; every shard then
+//! runs its own PCG stream ([`SNOWBALL_SCHEDULE_STREAM`]) derived from
+//! that seed, fixing exactly which spins the shard proposes at each
+//! logical tick. An epoch is the barrier unit: shards work from the same
+//! epoch-start snapshot (spins + local fields), apply their own accepted
+//! flips to a private view, and the barrier merges shard results in shard
+//! order. Nothing a shard computes depends on when — or on which OS
+//! thread — another shard ran, so a `T`-thread execution is bit-identical
+//! to the 1-thread sequential replay. `COBI_SNOWBALL_THREADS` (or
+//! [`SnowballConfig::threads`]) chooses physical parallelism freely
+//! without touching one output byte.
+//!
+//! ## Dual-mode selection
+//!
+//! * **Uniform sweep mode** (`n <= focus_threshold`): each shard proposes
+//!   its owned spins in ascending index order once per epoch, each spin
+//!   participating with probability [`SnowballConfig::participation`] —
+//!   the Bernoulli draw is the symmetry breaker that keeps antiparallel
+//!   shard pairs from oscillating forever on stale data.
+//! * **Focus mode** (`n > focus_threshold`): each shard draws
+//!   tournament-of-2 candidates from its schedule stream and proposes the
+//!   one with the better (lower) stale flip delta, ties to the lower spin
+//!   index — Metropolis-weighted attention toward improving moves without
+//!   a full softmax over n spins.
+//!
+//! Accepts follow the SA rule: downhill-or-flat moves are free (no RNG
+//! draw — identical draw order across coefficient domains), uphill moves
+//! go through Metropolis on the exact delta. The epoch loop is generic
+//! over [`SolverKernel`], so integer-valued instances run on `i64`
+//! accumulators bit-identical to the `f64` reference path, pinned by the
+//! equivalence test below. A final strict greedy descent (no randomness)
+//! polishes the best barrier state to a local minimum.
+
+use crate::ising::{Ising, QuantIsing};
+use crate::util::rng::{Pcg32, SplitMix64};
+
+use super::kernel::{KernelScratch, QuantSolve, SolveScratch, SolverKernel};
+use super::{IsingSolver, SolveResult};
+
+/// RNG stream of the solver's request-level randomness (restart inits and
+/// the per-run schedule seed). Distinct from every other named stream —
+/// see the audit test in `util::rng`.
+pub const SNOWBALL_STREAM: u64 = 0x5B07_BA11;
+
+/// RNG stream of the per-shard logical update schedules. Each shard's
+/// generator is `Pcg32::new(mix(schedule_seed, shard), STREAM)`, so shard
+/// schedules are independent of thread count and dispatch interleaving.
+pub const SNOWBALL_SCHEDULE_STREAM: u64 = 0x5B07_5CED;
+
+/// Environment variable selecting how many OS threads execute shard
+/// epochs (default 1). Purely a wall-clock knob: results are bit-identical
+/// for every value. [`SnowballConfig::threads`] takes precedence when
+/// non-zero.
+pub const SNOWBALL_THREADS_ENV: &str = "COBI_SNOWBALL_THREADS";
+
+/// Snowball schedule parameters.
+#[derive(Debug, Clone)]
+pub struct SnowballConfig {
+    /// Logical parallel units the spin vector is sharded across (spin `i`
+    /// belongs to shard `i % shards`); clamped to `n` per instance.
+    pub shards: usize,
+    /// Barrier-to-barrier epochs per restart; each shard makes one
+    /// proposal per owned spin per epoch.
+    pub epochs: usize,
+    /// Instances with more than this many spins use focus mode (weighted
+    /// candidate tournaments); at or below it, uniform sweep mode.
+    pub focus_threshold: usize,
+    /// Per-spin participation probability in uniform sweep mode — the
+    /// stale-data symmetry breaker (see module docs).
+    pub participation: f64,
+    /// Initial temperature of the geometric Metropolis cooling.
+    pub t_start: f64,
+    /// Final temperature of the geometric Metropolis cooling.
+    pub t_end: f64,
+    /// Independent restarts (restart 0 honours a warm-start hint).
+    pub restarts: usize,
+    /// Physical worker threads for shard epochs; 0 means "read
+    /// [`SNOWBALL_THREADS_ENV`], default 1". Never affects results.
+    pub threads: usize,
+}
+
+impl Default for SnowballConfig {
+    fn default() -> Self {
+        Self {
+            shards: 8,
+            epochs: 160,
+            focus_threshold: 24,
+            participation: 0.85,
+            t_start: 3.0,
+            t_end: 0.05,
+            restarts: 2,
+            threads: 0,
+        }
+    }
+}
+
+impl SnowballConfig {
+    /// Resolve the physical thread count: explicit config wins, then the
+    /// [`SNOWBALL_THREADS_ENV`] environment knob, then 1 (sequential).
+    pub fn resolved_threads(&self) -> usize {
+        if self.threads > 0 {
+            return self.threads;
+        }
+        std::env::var(SNOWBALL_THREADS_ENV)
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&t| t >= 1)
+            .unwrap_or(1)
+    }
+}
+
+/// Snowball-style sharded parallel-spin solver — the portfolio backend
+/// that wins the large size buckets on multi-core hosts.
+pub struct SnowballSolver {
+    cfg: SnowballConfig,
+    rng: Pcg32,
+    scratch: SolveScratch,
+}
+
+impl SnowballSolver {
+    /// Solver with explicit parameters.
+    pub fn new(seed: u64, cfg: SnowballConfig) -> Self {
+        Self {
+            cfg,
+            rng: Pcg32::new(seed, SNOWBALL_STREAM),
+            scratch: SolveScratch::default(),
+        }
+    }
+
+    /// Solver with default parameters, seeded.
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, SnowballConfig::default())
+    }
+
+    /// Reset the RNG to a fresh stream keyed by `seed` (see
+    /// `TabuSolver::reseed`; the device pool re-seeds per request). The
+    /// scratch workspace is untouched: it carries capacity, not state.
+    pub fn reseed(&mut self, seed: u64) {
+        self.rng = Pcg32::new(seed, SNOWBALL_STREAM);
+    }
+
+    /// Solve, picking the coefficient domain: integer-valued instances
+    /// run the `i64` kernel, others the `f64` kernel — bit-identical
+    /// results wherever both apply.
+    fn solve_any(&mut self, ising: &Ising, warm: Option<&[i8]>) -> SolveResult {
+        let Self { cfg, rng, scratch } = self;
+        if scratch.quant.try_copy_from(ising) {
+            let energy = snowball_core(&scratch.quant, cfg, rng, &mut scratch.int, warm);
+            SolveResult {
+                spins: scratch.int.best.clone(),
+                energy,
+            }
+        } else {
+            let energy = snowball_core(ising, cfg, rng, &mut scratch.fp, warm);
+            SolveResult {
+                spins: scratch.fp.best.clone(),
+                energy,
+            }
+        }
+    }
+
+    /// Force the `f64` kernel — the reference entry the integer path is
+    /// pinned against (see `TabuSolver::solve_reference_f64`). Consumes
+    /// the RNG exactly like [`IsingSolver::solve`].
+    pub fn solve_reference_f64(&mut self, ising: &Ising) -> SolveResult {
+        let Self { cfg, rng, scratch } = self;
+        let energy = snowball_core(ising, cfg, rng, &mut scratch.fp, None);
+        SolveResult {
+            spins: scratch.fp.best.clone(),
+            energy,
+        }
+    }
+}
+
+/// One shard's private epoch state. Everything a shard touches lives
+/// here, so epochs for different shards can run on any threads in any
+/// order without observing each other.
+struct ShardState<A> {
+    /// Owned spin indices (`i % shards == id`), ascending.
+    owned: Vec<usize>,
+    /// Working copy: epoch-start snapshot plus this shard's own flips.
+    spins: Vec<i8>,
+    /// Local fields tracking `spins` incrementally.
+    l: Vec<A>,
+    /// This shard's logical update schedule.
+    rng: Pcg32,
+}
+
+/// Restart wrapper over [`snowball_run`]: restart 0 starts from `warm`
+/// when given (drawing no init randomness; best-so-far starts at the
+/// hint, so the result is never worse than it), later restarts from
+/// random configurations; best kept on strict `<` (earlier restart wins
+/// exact ties). Returns the best energy; best spins land in `ks.best`.
+pub(crate) fn snowball_core<K>(
+    k: &K,
+    cfg: &SnowballConfig,
+    rng: &mut Pcg32,
+    ks: &mut KernelScratch<K::Acc>,
+    warm: Option<&[i8]>,
+) -> f64
+where
+    K: SolverKernel + Sync,
+    K::Acc: Send + Sync,
+{
+    let n = k.n();
+    debug_assert!(warm.map_or(true, |h| h.len() == n), "warm-start hint length mismatch");
+    ks.prepare(n);
+    let mut overall: Option<K::Acc> = None;
+    for r in 0..cfg.restarts.max(1) {
+        match warm {
+            Some(h) if r == 0 => ks.spins.copy_from_slice(h),
+            _ => {
+                for x in ks.spins.iter_mut() {
+                    *x = if rng.bernoulli(0.5) { 1 } else { -1 };
+                }
+            }
+        }
+        // the logical schedule for this run: one seed fixes every shard's
+        // proposal sequence, independent of thread count
+        let schedule_seed = rng.next_u64();
+        let e = snowball_run(k, cfg, schedule_seed, ks);
+        if overall.map_or(true, |b| e < b) {
+            overall = Some(e);
+            ks.best.copy_from_slice(&ks.run_best);
+        }
+    }
+    K::to_f64(overall.expect("restarts >= 1"))
+}
+
+/// One snowball run from the configuration in `ks.spins`, driven entirely
+/// by `schedule_seed`. Best spins of the run land in `ks.run_best`.
+fn snowball_run<K>(
+    k: &K,
+    cfg: &SnowballConfig,
+    schedule_seed: u64,
+    ks: &mut KernelScratch<K::Acc>,
+) -> K::Acc
+where
+    K: SolverKernel + Sync,
+    K::Acc: Send + Sync,
+{
+    let n = k.n();
+    let shards = cfg.shards.min(n).max(1);
+    let uniform = n <= cfg.focus_threshold;
+    let threads = cfg.resolved_threads().min(shards).max(1);
+
+    let mut e = k.energy_acc(&ks.spins);
+    let mut best_e = e;
+    ks.run_best.copy_from_slice(&ks.spins);
+
+    let mut states: Vec<ShardState<K::Acc>> = (0..shards)
+        .map(|id| ShardState {
+            owned: (id..n).step_by(shards).collect(),
+            spins: Vec::with_capacity(n),
+            l: Vec::with_capacity(n),
+            rng: Pcg32::new(
+                SplitMix64::new(schedule_seed ^ id as u64).next_u64(),
+                SNOWBALL_SCHEDULE_STREAM,
+            ),
+        })
+        .collect();
+
+    let epochs = cfg.epochs.max(1);
+    let cool = (cfg.t_end / cfg.t_start).powf(1.0 / epochs as f64);
+    let mut t = cfg.t_start;
+    for _ in 0..epochs {
+        // barrier snapshot: every shard works from the same view
+        k.local_fields_into(&ks.spins, &mut ks.l);
+        let snap_spins: &[i8] = &ks.spins;
+        let snap_l: &[K::Acc] = &ks.l;
+        if threads <= 1 {
+            for st in states.iter_mut() {
+                shard_epoch(k, snap_spins, snap_l, st, t, uniform, cfg.participation);
+            }
+        } else {
+            let chunk = (shards + threads - 1) / threads;
+            std::thread::scope(|scope| {
+                for block in states.chunks_mut(chunk) {
+                    scope.spawn(move || {
+                        for st in block {
+                            shard_epoch(
+                                k,
+                                snap_spins,
+                                snap_l,
+                                st,
+                                t,
+                                uniform,
+                                cfg.participation,
+                            );
+                        }
+                    });
+                }
+            });
+        }
+        // deterministic merge in shard order: shards own disjoint spins,
+        // so the merged state is the same for every thread count
+        for st in &states {
+            for &i in &st.owned {
+                ks.spins[i] = st.spins[i];
+            }
+        }
+        e = k.energy_acc(&ks.spins);
+        if K::lt_margin(e, best_e) {
+            best_e = e;
+            ks.run_best.copy_from_slice(&ks.spins);
+        }
+        t *= cool;
+    }
+
+    // polish: strict greedy descent from the best barrier state — no
+    // randomness, lowest index wins exact delta ties (the solver-wide
+    // tie-break rule)
+    ks.spins.copy_from_slice(&ks.run_best);
+    k.local_fields_into(&ks.spins, &mut ks.l);
+    loop {
+        let mut chosen: Option<(usize, K::Acc)> = None;
+        for i in 0..n {
+            let delta = K::flip_delta(&ks.spins, &ks.l, i);
+            if K::improves(delta) && chosen.map_or(true, |(_, d)| delta < d) {
+                chosen = Some((i, delta));
+            }
+        }
+        match chosen {
+            Some((i, delta)) => {
+                k.apply_flip_acc(&mut ks.spins, &mut ks.l, i);
+                best_e += delta;
+            }
+            None => break,
+        }
+    }
+    ks.run_best.copy_from_slice(&ks.spins);
+    best_e
+}
+
+/// One shard's epoch: copy the barrier snapshot into the shard's private
+/// view, then propose/accept flips of owned spins per the shard's
+/// schedule stream. Pure in (kernel, snapshot, shard state, temperature),
+/// which is what makes thread count irrelevant to results.
+fn shard_epoch<K: SolverKernel>(
+    k: &K,
+    snap_spins: &[i8],
+    snap_l: &[K::Acc],
+    st: &mut ShardState<K::Acc>,
+    t: f64,
+    uniform: bool,
+    participation: f64,
+) {
+    let ShardState { owned, spins, l, rng } = st;
+    spins.clear();
+    spins.extend_from_slice(snap_spins);
+    l.clear();
+    l.extend_from_slice(snap_l);
+
+    if uniform {
+        for &i in owned.iter() {
+            // participation draw first (symmetry breaker), then the
+            // SA-style accept — draw order is domain-independent
+            if rng.f64() >= participation {
+                continue;
+            }
+            let delta = K::flip_delta(spins, l, i);
+            if K::non_increasing(delta) || rng.f64() < (-K::to_f64(delta) / t).exp() {
+                k.apply_flip_acc(spins, l, i);
+            }
+        }
+    } else {
+        for _ in 0..owned.len() {
+            // tournament-of-2 focus: propose the candidate with the
+            // better stale delta, exact ties to the lower spin index
+            let a = owned[rng.below(owned.len() as u32) as usize];
+            let b = owned[rng.below(owned.len() as u32) as usize];
+            let da = K::flip_delta(spins, l, a);
+            let db = K::flip_delta(spins, l, b);
+            let i = if db < da {
+                b
+            } else if da < db {
+                a
+            } else {
+                a.min(b)
+            };
+            let delta = K::flip_delta(spins, l, i);
+            if K::non_increasing(delta) || rng.f64() < (-K::to_f64(delta) / t).exp() {
+                k.apply_flip_acc(spins, l, i);
+            }
+        }
+    }
+}
+
+impl IsingSolver for SnowballSolver {
+    fn name(&self) -> &'static str {
+        "snowball"
+    }
+
+    fn solve(&mut self, ising: &Ising) -> SolveResult {
+        self.solve_any(ising, None)
+    }
+
+    fn solve_from(&mut self, ising: &Ising, init: &[i8]) -> SolveResult {
+        debug_assert_eq!(init.len(), ising.n, "warm-start hint length mismatch");
+        // first restart from the hint, remaining restarts cold; strict
+        // `<` keeps the warm result on exact ties
+        self.solve_any(ising, Some(init))
+    }
+
+    fn quant_kernel(&mut self) -> Option<&mut dyn QuantSolve> {
+        Some(self)
+    }
+}
+
+impl QuantSolve for SnowballSolver {
+    fn solve_quant_into(&mut self, q: &QuantIsing, out: &mut Vec<i8>) -> f64 {
+        let Self { cfg, rng, scratch } = self;
+        let energy = snowball_core(q, cfg, rng, &mut scratch.int, None);
+        out.clear();
+        out.extend_from_slice(&scratch.int.best);
+        energy
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cobi::testutil::quantized_glass;
+    use crate::solvers::exact::ising_ground_exhaustive;
+
+    fn random_ising(seed: u64, n: usize) -> Ising {
+        let mut rng = Pcg32::seeded(seed);
+        let mut ising = Ising::new(n);
+        for i in 0..n {
+            ising.h[i] = rng.range_f32(-1.5, 1.5);
+            for j in (i + 1)..n {
+                ising.set_pair(i, j, rng.range_f32(-1.0, 1.0));
+            }
+        }
+        ising
+    }
+
+    fn with_threads(threads: usize) -> SnowballConfig {
+        SnowballConfig {
+            threads,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ising = random_ising(10, 16);
+        let a = SnowballSolver::seeded(5).solve(&ising);
+        let b = SnowballSolver::seeded(5).solve(&ising);
+        assert_eq!(a.spins, b.spins);
+        assert_eq!(a.energy.to_bits(), b.energy.to_bits());
+    }
+
+    #[test]
+    fn reported_energy_matches_spins() {
+        let ising = random_ising(7, 24);
+        let r = SnowballSolver::seeded(2).solve(&ising);
+        assert!((ising.energy(&r.spins) - r.energy).abs() < 1e-6);
+        assert!(r.spins.iter().all(|&v| v == 1 || v == -1));
+    }
+
+    #[test]
+    fn descent_polish_leaves_a_local_minimum() {
+        let ising = random_ising(13, 20);
+        let r = SnowballSolver::seeded(4).solve(&ising);
+        for i in 0..20 {
+            let mut s = r.spins.clone();
+            s[i] = -s[i];
+            assert!(ising.energy(&s) >= r.energy - 1e-9, "flip {i} improves");
+        }
+    }
+
+    #[test]
+    fn near_ground_on_small_glasses() {
+        // parallel MCMC + descent polish should land at (or vanishingly
+        // near) the exhaustive ground state on 12-spin glasses
+        for seed in 0..4 {
+            let ising = random_ising(seed, 12);
+            let (ge, _, _) = ising_ground_exhaustive(&ising);
+            let r = SnowballSolver::seeded(seed + 40).solve(&ising);
+            assert!(
+                r.energy <= ge + 1e-6 + 0.05 * ge.abs(),
+                "seed {seed}: snowball {} vs ground {ge}",
+                r.energy
+            );
+        }
+    }
+
+    #[test]
+    fn thread_count_is_invisible_in_results() {
+        // the tentpole pin: T-thread execution is bit-identical to the
+        // 1-thread sequential replay, in both selection modes
+        for n in [12usize, 40] {
+            let ising = random_ising(60 + n as u64, n);
+            let a = SnowballSolver::new(9, with_threads(1)).solve(&ising);
+            let b = SnowballSolver::new(9, with_threads(8)).solve(&ising);
+            assert_eq!(a.spins, b.spins, "n {n}");
+            assert_eq!(a.energy.to_bits(), b.energy.to_bits(), "n {n}");
+            let c = SnowballSolver::new(9, with_threads(3)).solve(&ising);
+            assert_eq!(a.spins, c.spins, "n {n} (threads=3)");
+        }
+    }
+
+    #[test]
+    fn integer_kernel_is_bit_identical_to_f64_on_quantized_instances() {
+        // acceptance pin (snowball): identical spins, bitwise-equal
+        // energy — the free-accept branch and the focus tournament decide
+        // identically in both domains, so draw order matches exactly
+        for seed in 0..6 {
+            for n in [5, 12, 20, 33] {
+                let inst = quantized_glass(4000 + seed, n);
+                let a = SnowballSolver::seeded(seed).solve_reference_f64(&inst);
+                let b = SnowballSolver::seeded(seed).solve(&inst);
+                assert_eq!(a.spins, b.spins, "seed {seed} n {n}");
+                assert_eq!(a.energy.to_bits(), b.energy.to_bits(), "seed {seed} n {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn warm_start_never_loses_the_hint() {
+        // unique ground state via fields only; a warm start AT the ground
+        // state must come back unchanged (strict best-so-far keeps it)
+        let mut ising = Ising::new(3);
+        ising.h = vec![1.0, -1.0, 1.0];
+        let ground = vec![-1i8, 1, -1];
+        let r = SnowballSolver::seeded(3).solve_from(&ising, &ground);
+        assert_eq!(r.spins, ground);
+        assert!((r.energy + 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn warm_start_matches_core_replay() {
+        let inst = quantized_glass(77, 14);
+        let hint: Vec<i8> = (0..14).map(|i| if i % 3 == 0 { 1 } else { -1 }).collect();
+        let mut a = SnowballSolver::seeded(4);
+        let ra = {
+            let SnowballSolver { cfg, rng, scratch } = &mut a;
+            let e = snowball_core(&inst, cfg, rng, &mut scratch.fp, Some(&hint));
+            (scratch.fp.best.clone(), e)
+        };
+        let rb = SnowballSolver::seeded(4).solve_from(&inst, &hint);
+        // solve_from auto-selects the integer kernel on this quantized
+        // instance; bit-identity makes it equal to the f64 core replay
+        assert_eq!(ra.0, rb.spins);
+        assert_eq!(ra.1.to_bits(), rb.energy.to_bits());
+    }
+
+    #[test]
+    fn solve_quant_into_reuses_the_output_buffer() {
+        let inst = quantized_glass(88, 12);
+        let mut q = QuantIsing::default();
+        assert!(q.try_copy_from(&inst));
+        let mut out = Vec::new();
+        let mut solver = SnowballSolver::seeded(6);
+        let e1 = solver.solve_quant_into(&q, &mut out);
+        assert_eq!(out.len(), 12);
+        assert_eq!(q.energy(&out) as f64, e1);
+        let r = SnowballSolver::seeded(6).solve(&inst);
+        assert_eq!(r.spins, out);
+        assert_eq!(r.energy.to_bits(), e1.to_bits());
+    }
+
+    #[test]
+    fn focus_mode_engages_above_the_threshold() {
+        // n = 40 > focus_threshold = 24: focus mode must still produce a
+        // valid, deterministic configuration that beats pure chance
+        let ising = random_ising(21, 40);
+        let r = SnowballSolver::seeded(11).solve(&ising);
+        assert_eq!(r.spins.len(), 40);
+        assert!((ising.energy(&r.spins) - r.energy).abs() < 1e-6);
+        // descent polish guarantees local minimality even in focus mode
+        for i in 0..40 {
+            let mut s = r.spins.clone();
+            s[i] = -s[i];
+            assert!(ising.energy(&s) >= r.energy - 1e-9, "flip {i} improves");
+        }
+    }
+
+    #[test]
+    fn reseed_replays_the_request_stream() {
+        let ising = random_ising(31, 18);
+        let mut solver = SnowballSolver::seeded(1);
+        let a = solver.solve(&ising);
+        solver.reseed(1);
+        let b = solver.solve(&ising);
+        assert_eq!(a.spins, b.spins);
+        assert_eq!(a.energy.to_bits(), b.energy.to_bits());
+    }
+}

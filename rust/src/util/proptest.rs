@@ -4,6 +4,20 @@
 //! [`Pcg32`]; on failure it reports the case index and seed so the exact
 //! input can be regenerated. Coordinator invariants (routing, batching,
 //! formulation, quantization) use this via `check(..)`.
+//!
+//! Two refinements over the bare loop:
+//!
+//! * **Replay** — every failure message embeds a ready-to-paste
+//!   [`replay`] / [`replay_sized`] call that re-runs exactly the failing
+//!   case (same derived RNG), so a CI failure reproduces locally without
+//!   re-running the whole sweep.
+//! * **Shrinking** — [`check_sized`] ramps an explicit size parameter
+//!   across cases and, on failure, re-runs the SAME case seed at every
+//!   smaller size, reporting the minimal size that still fails. RNG-drawn
+//!   inputs have no structure to shrink generically, so the size channel
+//!   is the shrink axis: properties route their "how big" decisions
+//!   (sentence counts, spin counts, selection widths) through it and get
+//!   minimal counterexamples for free.
 
 use super::rng::Pcg32;
 
@@ -19,16 +33,86 @@ where
     F: FnMut(&mut Pcg32) -> Result<(), String>,
 {
     for case in 0..cases {
-        let case_seed = seed
-            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
-            .wrapping_add(case as u64);
-        let mut rng = Pcg32::new(case_seed, case as u64 + 1);
+        let mut rng = case_rng(seed, case);
         if let Err(msg) = prop(&mut rng) {
             panic!(
                 "property '{name}' failed at case {case}/{cases} \
-                 (case_seed={case_seed:#x}): {msg}"
+                 (case_seed={seed:#x}; replay with \
+                 proptest::replay(\"{name}\", {seed:#x}, {case}, prop)): {msg}"
             );
         }
+    }
+}
+
+/// The deterministic per-case RNG `check`/`check_sized` hand to case
+/// `case` of a `seed`-keyed property (the replay entry points rebuild
+/// exactly this stream).
+fn case_rng(seed: u64, case: u32) -> Pcg32 {
+    let case_seed = seed
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(case as u64);
+    Pcg32::new(case_seed, case as u64 + 1)
+}
+
+/// Re-run ONE case of a [`check`] property (the failure message names the
+/// arguments). Panics with the property's message if it still fails,
+/// passes silently if the property was since fixed.
+pub fn replay<F>(name: &str, seed: u64, case: u32, mut prop: F)
+where
+    F: FnMut(&mut Pcg32) -> Result<(), String>,
+{
+    let mut rng = case_rng(seed, case);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("property '{name}' replay of case {case} (seed={seed:#x}) failed: {msg}");
+    }
+}
+
+/// [`check`] with an explicit size channel and shrinking (see module
+/// docs): case `k` of `cases` runs at `size = 1 + k * max_size / cases`
+/// (a deterministic ramp from small to `max_size`), and a failure is
+/// re-run at every smaller size — same case seed — to report the
+/// minimal failing size alongside the original one.
+pub fn check_sized<F>(name: &str, seed: u64, cases: u32, max_size: usize, mut prop: F)
+where
+    F: FnMut(&mut Pcg32, usize) -> Result<(), String>,
+{
+    assert!(max_size >= 1, "max_size must be at least 1");
+    for case in 0..cases {
+        let size = 1 + (case as usize * max_size) / cases.max(1) as usize;
+        let size = size.min(max_size);
+        let mut rng = case_rng(seed, case);
+        if let Err(msg) = prop(&mut rng, size) {
+            // shrink: walk every smaller size under the same case seed
+            // and keep the smallest one that still fails
+            let (mut min_size, mut min_msg) = (size, msg);
+            for s in (1..size).rev() {
+                let mut rng = case_rng(seed, case);
+                if let Err(m) = prop(&mut rng, s) {
+                    min_size = s;
+                    min_msg = m;
+                }
+            }
+            panic!(
+                "property '{name}' failed at case {case}/{cases} size {size} \
+                 (minimal failing size {min_size}; replay with \
+                 proptest::replay_sized(\"{name}\", {seed:#x}, {case}, {min_size}, prop)): \
+                 {min_msg}"
+            );
+        }
+    }
+}
+
+/// Re-run ONE case of a [`check_sized`] property at an explicit size (the
+/// failure message names the arguments, already shrunk to minimal).
+pub fn replay_sized<F>(name: &str, seed: u64, case: u32, size: usize, mut prop: F)
+where
+    F: FnMut(&mut Pcg32, usize) -> Result<(), String>,
+{
+    let mut rng = case_rng(seed, case);
+    if let Err(msg) = prop(&mut rng, size) {
+        panic!(
+            "property '{name}' replay of case {case} size {size} (seed={seed:#x}) failed: {msg}"
+        );
     }
 }
 
@@ -67,6 +151,75 @@ mod tests {
     #[should_panic(expected = "property 'always-false' failed")]
     fn failing_property_panics_with_context() {
         check("always-false", 2, 8, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn replay_reproduces_the_exact_case_stream() {
+        // draw one value per case via check, then replay a middle case
+        // and get the identical draw
+        let mut draws: Vec<u32> = Vec::new();
+        check("collect-for-replay", 7, 8, |rng| {
+            draws.push(rng.next_u32());
+            Ok(())
+        });
+        let mut replayed = None;
+        replay("collect-for-replay", 7, 5, |rng| {
+            replayed = Some(rng.next_u32());
+            Ok(())
+        });
+        assert_eq!(replayed, Some(draws[5]));
+    }
+
+    #[test]
+    #[should_panic(expected = "replay of case 0")]
+    fn replay_panics_on_a_still_failing_case() {
+        replay("still-broken", 1, 0, |_| Err("still broken".into()));
+    }
+
+    #[test]
+    fn sized_cases_ramp_up_to_max_size() {
+        let mut sizes: Vec<usize> = Vec::new();
+        check_sized("ramp", 4, 16, 40, |_, size| {
+            sizes.push(size);
+            Ok(())
+        });
+        assert_eq!(sizes.len(), 16);
+        assert_eq!(sizes[0], 1, "the ramp starts minimal");
+        assert!(sizes.windows(2).all(|w| w[0] <= w[1]), "ramp is monotone");
+        assert!(*sizes.last().unwrap() <= 40);
+        assert!(sizes.iter().all(|&s| (1..=40).contains(&s)));
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal failing size 7")]
+    fn shrinking_reports_the_minimal_failing_size() {
+        // fails for size >= 7: the first failing case runs at some larger
+        // ramped size, and shrinking must walk it down to exactly 7
+        check_sized("shrinks-to-seven", 5, 32, 64, |_, size| {
+            if size >= 7 {
+                Err(format!("too big: {size}"))
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn replay_sized_reruns_one_size() {
+        let mut seen = None;
+        replay_sized("one-size", 9, 3, 17, |rng, size| {
+            seen = Some((rng.next_u32(), size));
+            Ok(())
+        });
+        let (draw, size) = seen.unwrap();
+        assert_eq!(size, 17);
+        // same case seed as check_sized case 3 of seed 9
+        let mut expect = None;
+        replay("one-size", 9, 3, |rng| {
+            expect = Some(rng.next_u32());
+            Ok(())
+        });
+        assert_eq!(Some(draw), expect);
     }
 
     #[test]

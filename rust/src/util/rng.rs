@@ -252,4 +252,57 @@ mod tests {
         sorted.sort_unstable();
         assert_eq!(sorted, (0..50).collect::<Vec<_>>());
     }
+
+    /// Crate-wide stream-id audit: every RNG stream that derives draws
+    /// from request/solver seeds must be pairwise distinct, or two
+    /// subsystems seeded with the same request seed would replay each
+    /// other's sequences (e.g. a solver consuming the quantizer's
+    /// rounding draws). Covers the named constants plus the inline
+    /// stream literals of the seeded solvers and the `Pcg32::seeded`
+    /// default. Deliberately OUT of scope: the pipeline's quantization
+    /// call sites reuse `QUANT_STREAM`'s value by design (the scheduler
+    /// must replay the inline pipeline's draws), and the synthetic
+    /// corpus generator's stream lives in the document domain, never
+    /// mixing with request seeds.
+    ///
+    /// `Pcg32::new` folds the stream into the increment as
+    /// `(stream << 1) | 1`, so bit 63 is discarded — the audit compares
+    /// the *effective* 63-bit increments, not the raw constants.
+    #[test]
+    fn rng_stream_ids_are_pairwise_distinct() {
+        let streams: &[(&str, u64)] = &[
+            ("client-seed (sched::pool)", crate::sched::pool::CLIENT_SEED_STREAM),
+            ("quantize (sched)", crate::sched::QUANT_STREAM),
+            ("bandit (portfolio)", crate::portfolio::BANDIT_STREAM),
+            (
+                "latency reservoir (service::metrics)",
+                crate::service::metrics::RESERVOIR_STREAM,
+            ),
+            ("adapter-seed (resilience)", crate::resilience::ADAPTER_SEED_STREAM),
+            ("fault (resilience::fault)", crate::resilience::fault::FAULT_STREAM),
+            ("device noise (cobi::device)", crate::cobi::device::DEVICE_STREAM),
+            ("snowball spins", crate::solvers::snowball::SNOWBALL_STREAM),
+            (
+                "snowball schedule",
+                crate::solvers::snowball::SNOWBALL_SCHEDULE_STREAM,
+            ),
+            ("tabu (inline, solvers::tabu)", 0x7AB0),
+            ("sa (inline, solvers::sa)", 0x5A5A),
+            ("oscillator (inline, solvers::oscillator)", 0x05C1),
+            ("random (inline, solvers::random)", 0xBA5E),
+            ("portfolio seeds (inline, portfolio)", 0x5EED0F),
+            ("Pcg32::seeded default", 0xDA3E_39CB_94B9_5BDB),
+        ];
+        const EFFECTIVE: u64 = u64::MAX >> 1;
+        for (i, (a_name, a)) in streams.iter().enumerate() {
+            for (b_name, b) in &streams[i + 1..] {
+                assert_ne!(
+                    a & EFFECTIVE,
+                    b & EFFECTIVE,
+                    "stream collision: '{a_name}' and '{b_name}' share increment {:#x}",
+                    a & EFFECTIVE
+                );
+            }
+        }
+    }
 }

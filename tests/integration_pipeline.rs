@@ -23,7 +23,7 @@ fn pipeline(solver: &str, iterations: usize, seed: u64) -> EsPipeline {
 fn all_solvers_produce_valid_summaries() {
     let set = benchmark_set("cnn_dm_20").unwrap();
     let doc = &set.documents[0];
-    for solver in ["cobi", "tabu", "sa", "brute", "exact", "random"] {
+    for solver in ["cobi", "tabu", "sa", "snowball", "brute", "exact", "random"] {
         let mut p = pipeline(solver, 3, 1);
         let s = p.summarize(doc).unwrap();
         assert_eq!(s.selected.len(), 6, "{solver}");

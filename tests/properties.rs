@@ -1,0 +1,176 @@
+//! Property tests over the repo's structural invariants, driven by the
+//! in-tree mini driver (`util::proptest`) — sized cases with shrinking,
+//! so failures report a minimal counterexample plus a replay call.
+//!
+//! Three invariant families (ISSUE 7):
+//!
+//! * integer/f64 energy agreement: `QuantIsing`'s i64 energy equals
+//!   `Ising`'s f64 energy EXACTLY on integer-valued instances;
+//! * decomposition coverage: every strategy's full reduction touches
+//!   every active sentence (covered by a window or surviving verbatim),
+//!   strictly shrinks per level, terminates, and ends in one final
+//!   M-selection unit over the whole remaining list — no idle tail;
+//! * repair: `repair_selection` always returns exactly M valid, unique,
+//!   ascending indices, whatever the solver handed it.
+
+use cobi_es::decompose::{DecomposePlan, DecomposeParams, Strategy};
+use cobi_es::ising::{EsProblem, Ising, QuantIsing};
+use cobi_es::prop_assert;
+use cobi_es::refine::repair_selection;
+use cobi_es::util::proptest::{check_sized, DEFAULT_CASES};
+use cobi_es::util::rng::Pcg32;
+
+/// Random integer-valued Ising (coefficients in [-7, 7], the quantized
+/// shape every pool instance has).
+fn integer_ising(rng: &mut Pcg32, n: usize) -> Ising {
+    let mut ising = Ising::new(n);
+    for i in 0..n {
+        ising.h[i] = rng.below(15) as f32 - 7.0;
+        for j in (i + 1)..n {
+            ising.set_pair(i, j, rng.below(15) as f32 - 7.0);
+        }
+    }
+    ising
+}
+
+fn random_spins(rng: &mut Pcg32, n: usize) -> Vec<i8> {
+    (0..n).map(|_| if rng.bernoulli(0.5) { 1 } else { -1 }).collect()
+}
+
+#[test]
+fn quant_ising_energy_agrees_exactly_with_f64() {
+    check_sized("quant-energy-agreement", 0x1A, DEFAULT_CASES, 48, |rng, n| {
+        let ising = integer_ising(rng, n);
+        let mut q = QuantIsing::default();
+        prop_assert!(q.try_copy_from(&ising), "integer instance must quantize (n={n})");
+        for _ in 0..4 {
+            let spins = random_spins(rng, n);
+            let fp = ising.energy(&spins);
+            let int = q.energy(&spins) as f64;
+            prop_assert!(
+                fp.to_bits() == int.to_bits(),
+                "energies disagree on n={n}: f64 {fp} vs i64 {int}"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Drive one full reduction under `plan`, checking every level's carving
+/// invariants; selections keep each window's first `target` sentences
+/// (which sentences win is the solver's business, not the plan's).
+fn simulate_reduction(plan: &DecomposePlan, n: usize) -> Result<(), String> {
+    let m = plan.params().m;
+    let mut active: Vec<usize> = (0..n).collect();
+    // every non-final level removes at least one sentence, so a reduction
+    // of N sentences finishes within N+1 levels
+    for level in 0..=n {
+        let units = plan.carve(&active, level);
+        prop_assert!(!units.is_empty(), "no units for {} active at level {level}", active.len());
+        if units[0].is_final {
+            // termination: ONE final unit selecting M from the WHOLE
+            // remaining list — every survivor is offered, no idle tail
+            prop_assert!(units.len() == 1, "final level has {} units", units.len());
+            prop_assert!(units[0].target == m, "final target {} != M {m}", units[0].target);
+            prop_assert!(
+                units[0].window == active,
+                "final unit covers {} of {} survivors",
+                units[0].window.len(),
+                active.len()
+            );
+            return Ok(());
+        }
+        // every window is a set of distinct active sentences, and every
+        // target is satisfiable
+        let active_set: std::collections::BTreeSet<usize> = active.iter().copied().collect();
+        let mut covered = std::collections::BTreeSet::new();
+        for u in &units {
+            prop_assert!(
+                u.target <= u.window.len(),
+                "target {} exceeds window {}",
+                u.target,
+                u.window.len()
+            );
+            for &i in &u.window {
+                prop_assert!(active_set.contains(&i), "window holds non-active sentence {i}");
+                prop_assert!(covered.insert(i), "sentence {i} carved into two windows");
+            }
+        }
+        // next level: selected sentences of covered windows + every
+        // uncovered survivor, in document order — nothing is dropped
+        let mut selected = std::collections::BTreeSet::new();
+        for u in &units {
+            selected.extend(u.window.iter().take(u.target).copied());
+        }
+        let next: Vec<usize> = active
+            .iter()
+            .copied()
+            .filter(|i| !covered.contains(i) || selected.contains(i))
+            .collect();
+        prop_assert!(
+            next.len() < active.len(),
+            "level {level} did not shrink ({} -> {})",
+            active.len(),
+            next.len()
+        );
+        active = next;
+    }
+    Err(format!("reduction did not terminate in {} levels", n + 1))
+}
+
+#[test]
+fn every_strategy_covers_every_sentence_and_terminates() {
+    check_sized("decompose-coverage", 0xDC, DEFAULT_CASES, 240, |rng, size| {
+        // random valid params: P >= 2, 1 <= Q < P, 1 <= M <= Q
+        let p = 2 + rng.below(24) as usize;
+        let q = 1 + rng.below(p as u32 - 1) as usize;
+        let m = 1 + rng.below(q as u32) as usize;
+        let params = DecomposeParams { p, q, m };
+        params.validate().map_err(|e| e.to_string())?;
+        let n = m + size; // documents always hold at least M sentences
+        for strategy in [Strategy::Window, Strategy::Tree, Strategy::Streaming] {
+            let plan = DecomposePlan::new(strategy, &params).map_err(|e| e.to_string())?;
+            simulate_reduction(&plan, n)
+                .map_err(|e| format!("{strategy} P={p} Q={q} M={m} N={n}: {e}"))?;
+        }
+        Ok(())
+    });
+}
+
+/// Random extractive-summarization problem with n sentences, target m.
+fn random_problem(rng: &mut Pcg32, n: usize, m: usize) -> EsProblem {
+    let mu: Vec<f32> = (0..n).map(|_| rng.range_f32(0.1, 0.95)).collect();
+    let mut beta = vec![0.0f32; n * n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let b = rng.range_f32(0.1, 0.9);
+            beta[i * n + j] = b;
+            beta[j * n + i] = b;
+        }
+    }
+    EsProblem { mu, beta, lambda: 0.6, m }
+}
+
+#[test]
+fn repair_always_returns_exactly_m_valid_selections() {
+    check_sized("repair-k-of-n", 0x3E, DEFAULT_CASES, 40, |rng, size| {
+        let n = 1 + size;
+        let m = 1 + rng.below(n as u32) as usize;
+        let p = random_problem(rng, n, m);
+        // a solver's raw selection can be any subset: empty, too small,
+        // too large, or already perfect
+        let selected: Vec<usize> = (0..n).filter(|_| rng.bernoulli(0.4)).collect();
+        let repaired = repair_selection(&p, selected);
+        prop_assert!(
+            repaired.len() == m,
+            "repair returned {} of m={m} (n={n})",
+            repaired.len()
+        );
+        prop_assert!(repaired.iter().all(|&i| i < n), "index out of range (n={n})");
+        prop_assert!(
+            repaired.windows(2).all(|w| w[0] < w[1]),
+            "selections not strictly ascending: {repaired:?}"
+        );
+        Ok(())
+    });
+}

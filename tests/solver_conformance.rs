@@ -1,0 +1,230 @@
+//! Cross-solver conformance suite: one parameterized harness runs every
+//! Ising backend — tabu, simulated annealing, greedy descent, the exact
+//! enumeration facade, the native COBI device, and the Snowball sharded
+//! solver — through the SAME contract checks (ISSUE 7):
+//!
+//! * stable names (the routing layer keys on them);
+//! * the batching contract: `solve_batch` is byte-identical to solving
+//!   the instances one at a time on a fresh same-seeded solver;
+//! * warm starts: a supplied ground state comes back unchanged from
+//!   every hint-capable backend;
+//! * the tie-break rule: exactly tied flips resolve to the lowest index;
+//! * domain equivalence: the integer kernels are bit-identical to the
+//!   `f64` reference kernels on quantized instances;
+//! * the exact facade returns the certified exhaustive ground state;
+//! * reported energies match the instance's own energy function.
+//!
+//! These checks are what make the portfolio's routing decisions invisible
+//! in the output bytes: any backend that passes can be substituted for
+//! any other under a static policy without changing which spins tie-break
+//! where.
+
+use cobi_es::cobi::CobiDevice;
+use cobi_es::config::CobiConfig;
+use cobi_es::ising::{Ising, QuantIsing};
+use cobi_es::solvers::exact::{ising_ground_exhaustive, ExactIsingSolver};
+use cobi_es::solvers::greedy::GreedyDescent;
+use cobi_es::solvers::sa::SaSolver;
+use cobi_es::solvers::snowball::SnowballSolver;
+use cobi_es::solvers::tabu::{TabuConfig, TabuSolver};
+use cobi_es::solvers::{IsingSolver, QuantSolve};
+use cobi_es::util::rng::Pcg32;
+
+/// Random integer-valued spin glass (coefficients in [-7, 7]) — the
+/// shape every quantized pool instance has, built through the public
+/// API only (the crate's internal `testutil` is not exported).
+fn quantized_glass(seed: u64, n: usize) -> Ising {
+    let mut rng = Pcg32::seeded(seed);
+    let mut ising = Ising::new(n);
+    for i in 0..n {
+        ising.h[i] = rng.below(15) as f32 - 7.0;
+        for j in (i + 1)..n {
+            ising.set_pair(i, j, rng.below(15) as f32 - 7.0);
+        }
+    }
+    ising
+}
+
+/// One row of the conformance table: how to build the backend, plus the
+/// capabilities the harness may exercise on it.
+struct Backend {
+    /// The stable routing name the built solver must report.
+    name: &'static str,
+    /// Whether `solve_from` is expected to preserve a supplied ground
+    /// state (the COBI device ignores hints — its anneal starts from
+    /// device phase noise).
+    ground_hint: bool,
+    /// Largest instance the backend accepts (the exact facade caps
+    /// enumeration; the COBI array has 59 usable spins).
+    max_n: usize,
+    /// Build a fresh solver from a seed (seed-free backends ignore it).
+    make: fn(u64) -> Box<dyn IsingSolver>,
+}
+
+fn backends() -> Vec<Backend> {
+    vec![
+        Backend {
+            name: "tabu",
+            ground_hint: true,
+            max_n: usize::MAX,
+            make: |s| Box::new(TabuSolver::seeded(s)),
+        },
+        Backend {
+            name: "sa",
+            ground_hint: true,
+            max_n: usize::MAX,
+            make: |s| Box::new(SaSolver::seeded(s)),
+        },
+        Backend {
+            name: "greedy",
+            ground_hint: true,
+            max_n: usize::MAX,
+            make: |_| Box::new(GreedyDescent::new()),
+        },
+        Backend {
+            name: "exact",
+            ground_hint: true,
+            max_n: 20,
+            make: |_| Box::new(ExactIsingSolver::new(20)),
+        },
+        Backend {
+            name: "cobi",
+            ground_hint: false,
+            max_n: 59,
+            make: |s| Box::new(CobiDevice::native(CobiConfig::default(), s)),
+        },
+        Backend {
+            name: "snowball",
+            ground_hint: true,
+            max_n: usize::MAX,
+            make: |s| Box::new(SnowballSolver::seeded(s)),
+        },
+    ]
+}
+
+#[test]
+fn backend_names_are_stable() {
+    for b in backends() {
+        assert_eq!((b.make)(1).name(), b.name, "routing keys on these names");
+    }
+}
+
+#[test]
+fn batch_equals_sequential_for_every_backend() {
+    let instances: Vec<Ising> = (0..3).map(|k| quantized_glass(100 + k, 12)).collect();
+    let refs: Vec<&Ising> = instances.iter().collect();
+    for b in backends() {
+        assert!(12 <= b.max_n);
+        let batched = (b.make)(7).solve_batch(&refs);
+        let mut seq = (b.make)(7);
+        assert_eq!(batched.len(), instances.len(), "{}: one result per instance", b.name);
+        for (i, inst) in instances.iter().enumerate() {
+            let one = seq.solve(inst);
+            assert_eq!(batched[i].spins, one.spins, "{} instance {i}", b.name);
+            assert_eq!(
+                batched[i].energy.to_bits(),
+                one.energy.to_bits(),
+                "{} instance {i}: batched energy drifted",
+                b.name
+            );
+        }
+    }
+}
+
+#[test]
+fn ground_state_hints_survive_every_hint_capable_backend() {
+    // unique ground state: h = [1, -1, 1], no couplings -> [-1, 1, -1]
+    // at energy -3; nothing beats it strictly and ties keep the earlier
+    // (warm) result, so the hint must come back unchanged
+    let mut ising = Ising::new(3);
+    ising.h = vec![1.0, -1.0, 1.0];
+    let ground = vec![-1i8, 1, -1];
+    for b in backends().into_iter().filter(|b| b.ground_hint) {
+        let r = (b.make)(3).solve_from(&ising, &ground);
+        assert_eq!(r.spins, ground, "{} lost a supplied ground state", b.name);
+        assert!((r.energy + 3.0).abs() < 1e-9, "{}: energy {}", b.name, r.energy);
+    }
+}
+
+#[test]
+fn tied_flips_resolve_to_the_lowest_index() {
+    // 2-spin ferromagnet probed from (+1, -1): flipping either spin
+    // gains exactly the same energy, so the documented rule (lowest
+    // index wins) lands in (-1, -1) — never (+1, +1). Exercised on the
+    // two scan-based backends whose every move is an argmin over flips.
+    let mut ising = Ising::new(2);
+    ising.set_pair(0, 1, -1.0);
+    let g = GreedyDescent::new().solve_from(&ising, &[1, -1]);
+    assert_eq!(g.spins, vec![-1, -1], "greedy broke the tie upward");
+    let mut tabu = TabuSolver::new(
+        1,
+        TabuConfig {
+            restarts: 1,
+            ..Default::default()
+        },
+    );
+    let t = tabu.solve_from(&ising, &[1, -1]);
+    assert_eq!(t.spins, vec![-1, -1], "tabu broke the tie upward");
+}
+
+/// Pin one backend's integer kernel to its `f64` reference kernel on a
+/// quantized instance: same seed, same instance, bit-identical spins and
+/// energy. (Concrete types: `solve_reference_f64` is an inherent method,
+/// not part of the object-safe trait.)
+macro_rules! pin_quant_equivalence {
+    ($name:literal, $make:expr, $inst:expr) => {{
+        let inst: &Ising = $inst;
+        let mut q = QuantIsing::default();
+        assert!(q.try_copy_from(inst), "glass must be integer-valued");
+        let reference = $make.solve_reference_f64(inst);
+        let mut spins = Vec::new();
+        let energy = $make.solve_quant_into(&q, &mut spins);
+        assert_eq!(reference.spins, spins, "{}: integer kernel diverged", $name);
+        assert_eq!(
+            reference.energy.to_bits(),
+            energy.to_bits(),
+            "{}: integer energy diverged",
+            $name
+        );
+    }};
+}
+
+#[test]
+fn integer_kernels_match_the_f64_reference_bit_for_bit() {
+    // n=18 keeps snowball in uniform-sweep mode; n=30 crosses its focus
+    // threshold so both selection modes are pinned
+    for inst in [quantized_glass(42, 18), quantized_glass(43, 30)] {
+        pin_quant_equivalence!("tabu", TabuSolver::seeded(9), &inst);
+        pin_quant_equivalence!("sa", SaSolver::seeded(9), &inst);
+        pin_quant_equivalence!("greedy", GreedyDescent::new(), &inst);
+        pin_quant_equivalence!("snowball", SnowballSolver::seeded(9), &inst);
+    }
+}
+
+#[test]
+fn exact_backend_returns_the_certified_ground_state() {
+    for (seed, n) in [(50u64, 8usize), (51, 10), (52, 12)] {
+        let inst = quantized_glass(seed, n);
+        let r = ExactIsingSolver::new(20).solve(&inst);
+        let (ground_energy, ground_spins, _) = ising_ground_exhaustive(&inst);
+        assert_eq!(r.spins, ground_spins, "n={n}");
+        assert_eq!(r.energy.to_bits(), ground_energy.to_bits(), "n={n}");
+    }
+}
+
+#[test]
+fn reported_energy_matches_the_instance_energy() {
+    let inst = quantized_glass(17, 12);
+    for b in backends() {
+        let r = (b.make)(5).solve(&inst);
+        assert_eq!(r.spins.len(), inst.n, "{}", b.name);
+        assert!(r.spins.iter().all(|&s| s == 1 || s == -1), "{}", b.name);
+        assert!(
+            (inst.energy(&r.spins) - r.energy).abs() < 1e-6,
+            "{} reported {} but the instance scores {}",
+            b.name,
+            r.energy,
+            inst.energy(&r.spins)
+        );
+    }
+}
