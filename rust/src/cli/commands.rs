@@ -295,6 +295,28 @@ fn apply_pool_flags(settings: &mut Settings, args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Apply the `serve` overload-safety flags onto `[service]` and
+/// `[sched].breaker` (see USAGE).
+fn apply_service_flags(settings: &mut Settings, args: &Args) -> Result<()> {
+    let s = &mut settings.service;
+    s.default_deadline_ms =
+        args.get_usize("default-deadline-ms", s.default_deadline_ms as usize)? as u64;
+    s.idle_timeout_ms = args.get_usize("idle-timeout-ms", s.idle_timeout_ms as usize)? as u64;
+    s.shed_watermark_ms =
+        args.get_usize("shed-watermark-ms", s.shed_watermark_ms as usize)? as u64;
+    s.drain_deadline_ms =
+        args.get_usize("drain-deadline-ms", s.drain_deadline_ms as usize)? as u64;
+    s.max_doc_bytes = args.get_usize("max-doc-bytes", s.max_doc_bytes)?;
+    let b = &mut settings.sched.breaker;
+    if args.get_bool("breaker") {
+        b.enabled = true;
+    }
+    b.window = args.get_usize("breaker-window", b.window)?;
+    b.trip_failures = args.get_usize("breaker-trip-failures", b.trip_failures as usize)? as u32;
+    b.cooldown_ms = args.get_usize("breaker-cooldown-ms", b.cooldown_ms as usize)? as u64;
+    Ok(())
+}
+
 /// `serve`: run the edge service (demo or TCP mode).
 pub fn cmd_serve(args: &Args) -> Result<()> {
     let mut settings = load_settings(args)?;
@@ -302,6 +324,7 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     apply_pool_flags(&mut settings, args)?;
     apply_resilience_flags(&mut settings, args)?;
     apply_obs_flags(&mut settings, args);
+    apply_service_flags(&mut settings, args)?;
     settings.service.workers = args.get_usize("workers", settings.service.workers)?;
     let requests = args.get_usize("requests", 20)?;
 
@@ -368,6 +391,31 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
             },
         );
     }
+    // overload-safety status (only what's switched on)
+    {
+        let s = &settings.service;
+        let mut knobs = Vec::new();
+        if s.default_deadline_ms > 0 {
+            knobs.push(format!("default deadline {}ms", s.default_deadline_ms));
+        }
+        if s.shed_watermark_ms > 0 {
+            knobs.push(format!("shed watermark {}ms (batch first)", s.shed_watermark_ms));
+        }
+        if s.max_doc_bytes > 0 {
+            knobs.push(format!("doc cap {} bytes", s.max_doc_bytes));
+        }
+        if settings.sched.breaker.enabled {
+            knobs.push(format!(
+                "breaker on (window {}, trip {}, cooldown {}ms)",
+                settings.sched.breaker.window,
+                settings.sched.breaker.trip_failures,
+                settings.sched.breaker.cooldown_ms,
+            ));
+        }
+        if !knobs.is_empty() {
+            println!("overload safety: {}", knobs.join(" | "));
+        }
+    }
     if settings.obs.enabled {
         println!(
             "observability: tracing on (ring {}, exemplars {}){}",
@@ -402,6 +450,36 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
             // half-second trace flushes keep the JSONL near-live; the
             // one-line report stays on its old 5s cadence
             std::thread::sleep(std::time::Duration::from_millis(500));
+            if server.drain_requested() {
+                // a ::DRAIN:: admin frame arrived: accepts already
+                // stopped; finish in-flight work, flush exporters, exit
+                println!("drain requested — finishing in-flight work");
+                let limit = std::time::Duration::from_millis(
+                    settings.service.drain_deadline_ms.max(1),
+                );
+                let stats = svc.drain(limit);
+                println!(
+                    "drained: {} finished, {} aborted ({:.2}s)",
+                    stats.clean,
+                    stats.aborted,
+                    stats.waited.as_secs_f64()
+                );
+                if let Some(path) = &trace_out {
+                    let spans = svc.obs().traces().drain();
+                    if let Err(e) = crate::obs::export::append_jsonl(path, &spans) {
+                        eprintln!("trace export failed: {e}");
+                    }
+                }
+                println!("{}", svc.metrics().report());
+                server.stop();
+                // connection threads may still hold clones briefly; a
+                // full shutdown (worker + pool join) only when we're the
+                // last owner, else process exit reaps the threads
+                if let Ok(svc) = std::sync::Arc::try_unwrap(svc) {
+                    svc.shutdown();
+                }
+                return Ok(());
+            }
             if let Some(path) = &trace_out {
                 let spans = svc.obs().traces().drain();
                 if let Err(e) = crate::obs::export::append_jsonl(path, &spans) {

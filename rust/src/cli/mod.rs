@@ -32,6 +32,7 @@ const BOOLEAN_FLAGS: &[&str] = &[
     "calibrate",
     "no-repair",
     "obs",
+    "breaker",
 ];
 
 impl Args {
@@ -148,6 +149,18 @@ COMMANDS:
                observability: [--obs] (request-scoped tracing)
                [--trace-out <file.jsonl>] (JSONL span dump; implies
                --obs)
+               overload safety: [--default-deadline-ms N] (0 = none)
+               [--idle-timeout-ms N] (per-connection read timeout;
+               0 = none) [--shed-watermark-ms N] (two-tier admission
+               control; '::BATCH::'-tagged requests shed first with
+               'ERR RETRY <ms>' hints) [--drain-deadline-ms N]
+               [--max-doc-bytes N] [--breaker] (per-device circuit
+               breaker: verify-failure window trips a quarantine,
+               calibration probes readmit) [--breaker-window N]
+               [--breaker-trip-failures N] [--breaker-cooldown-ms N]
+               admin: a '::DRAIN::' line stops accepts and drains
+               in-flight work before exit; '::DEADLINE <ms>::' before
+               the document sets a per-request deadline
   doctor       Check artifacts, PJRT runtime and device calibration
   help         Show this message
 
@@ -195,6 +208,16 @@ mod tests {
         assert!(a.get_bool("portfolio"));
         assert!(a.get_bool("no-warm-cache"));
         assert_eq!(a.get("portfolio-policy"), Some("bandit"));
+    }
+
+    #[test]
+    fn breaker_and_overload_flags_parse() {
+        let a = parse("serve --breaker --shed-watermark-ms 200 --default-deadline-ms 500");
+        assert!(a.get_bool("breaker"));
+        assert_eq!(a.get_usize("shed-watermark-ms", 0).unwrap(), 200);
+        assert_eq!(a.get_usize("default-deadline-ms", 0).unwrap(), 500);
+        // also valid as the last argument
+        assert!(parse("serve --breaker").get_bool("breaker"));
     }
 
     #[test]

@@ -169,6 +169,26 @@ pub struct ServiceConfig {
     pub max_batch: usize,
     /// Batch linger: how long the batcher waits to fill a batch.
     pub linger_us: u64,
+    /// Default per-request deadline in milliseconds applied to requests
+    /// that carry none of their own (0 = no default deadline). Clients
+    /// override per request with the `::DEADLINE <ms>::` header.
+    pub default_deadline_ms: u64,
+    /// TCP read/idle timeout in milliseconds for connections and
+    /// `::STREAM::` sessions (0 = never time out). A stalled client is
+    /// answered with `ERR idle timeout` and disconnected.
+    pub idle_timeout_ms: u64,
+    /// Estimated-queue-wait watermark in milliseconds above which
+    /// batch-tier requests are shed with `ERR RETRY <after_ms>`
+    /// (0 = shedding off; interactive requests shed only at
+    /// [`overload::INTERACTIVE_SHED_FACTOR`](crate::service::overload)
+    /// times this watermark).
+    pub shed_watermark_ms: u64,
+    /// Graceful-drain budget in milliseconds: how long `shutdown`/drain
+    /// waits for in-flight requests before failing the stragglers.
+    pub drain_deadline_ms: u64,
+    /// Largest accepted document in bytes on the TCP endpoint
+    /// (0 = unlimited). Oversized uploads get a clean `ERR` reply.
+    pub max_doc_bytes: usize,
 }
 
 impl Default for ServiceConfig {
@@ -178,6 +198,48 @@ impl Default for ServiceConfig {
             queue_depth: 256,
             max_batch: 8,
             linger_us: 200,
+            default_deadline_ms: 0,
+            idle_timeout_ms: 30_000,
+            shed_watermark_ms: 0,
+            drain_deadline_ms: 5_000,
+            max_doc_bytes: 1 << 20,
+        }
+    }
+}
+
+/// Per-device circuit-breaker parameters (`sched::breaker`): a rolling
+/// failure window per pool device, fed by dispatch errors and the
+/// resilience layer's verification rejections. Tripping quarantines the
+/// device out of the drain loop; the `resilience::Calibrator` is the
+/// half-open probe that readmits (or, after `max_trips`, retires) it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BreakerConfig {
+    /// Enable the per-device circuit breaker (default off: the pool's
+    /// drain loop is byte-identical to every pre-breaker release).
+    pub enabled: bool,
+    /// Rolling window length in dispatch/verify samples per device.
+    pub window: usize,
+    /// Failure samples within the window that trip the breaker.
+    pub trip_failures: u32,
+    /// Quarantine time in milliseconds before the half-open probe runs.
+    pub cooldown_ms: u64,
+    /// Trips after which a device is permanently retired (the last
+    /// healthy device is never retired — it keeps probing instead).
+    pub max_trips: u32,
+    /// Minimum calibration success rate the half-open probe must measure
+    /// to readmit a quarantined device.
+    pub probe_target: f64,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            window: 16,
+            trip_failures: 8,
+            cooldown_ms: 200,
+            max_trips: 3,
+            probe_target: 0.5,
         }
     }
 }
@@ -201,6 +263,8 @@ pub struct SchedConfig {
     /// Pool solver backend: "auto" (= pipeline.solver), "cobi", "tabu",
     /// "sa", "snowball", "portfolio".
     pub backend: String,
+    /// Per-device circuit breaker (the `breaker_*` keys).
+    pub breaker: BreakerConfig,
 }
 
 impl Default for SchedConfig {
@@ -212,6 +276,7 @@ impl Default for SchedConfig {
             linger_us: 200,
             queue_depth: 1024,
             backend: "auto".into(),
+            breaker: BreakerConfig::default(),
         }
     }
 }
@@ -581,6 +646,19 @@ impl Settings {
         if let Some(v) = doc.get_i64("service.linger_us") {
             self.service.linger_us = v as u64;
         }
+        if let Some(v) = doc.get_i64("service.default_deadline_ms") {
+            self.service.default_deadline_ms = v as u64;
+        }
+        if let Some(v) = doc.get_i64("service.idle_timeout_ms") {
+            self.service.idle_timeout_ms = v as u64;
+        }
+        if let Some(v) = doc.get_i64("service.shed_watermark_ms") {
+            self.service.shed_watermark_ms = v as u64;
+        }
+        if let Some(v) = doc.get_i64("service.drain_deadline_ms") {
+            self.service.drain_deadline_ms = v as u64;
+        }
+        set!(self.service.max_doc_bytes, get_i64, "service.max_doc_bytes");
 
         set!(self.sched.enabled, get_bool, "sched.enabled");
         set!(self.sched.devices, get_i64, "sched.devices");
@@ -590,6 +668,22 @@ impl Settings {
         }
         set!(self.sched.queue_depth, get_i64, "sched.queue_depth");
         set!(self.sched.backend, get_str, "sched.backend");
+        set!(self.sched.breaker.enabled, get_bool, "sched.breaker_enabled");
+        set!(self.sched.breaker.window, get_i64, "sched.breaker_window");
+        if let Some(v) = doc.get_i64("sched.breaker_trip_failures") {
+            self.sched.breaker.trip_failures = v as u32;
+        }
+        if let Some(v) = doc.get_i64("sched.breaker_cooldown_ms") {
+            self.sched.breaker.cooldown_ms = v as u64;
+        }
+        if let Some(v) = doc.get_i64("sched.breaker_max_trips") {
+            self.sched.breaker.max_trips = v as u32;
+        }
+        set!(
+            self.sched.breaker.probe_target,
+            get_f64,
+            "sched.breaker_probe_target"
+        );
 
         set!(self.portfolio.enabled, get_bool, "portfolio.enabled");
         set!(self.portfolio.policy, get_str, "portfolio.policy");
@@ -752,6 +846,70 @@ backend = "tabu"
         assert_eq!(s.sched.linger_us, 500);
         assert_eq!(s.sched.queue_depth, 64);
         assert_eq!(s.sched.backend, "tabu");
+    }
+
+    #[test]
+    fn service_overload_defaults_and_overrides() {
+        // overload machinery must default OFF (deadlines, shedding) so
+        // the defaults-off serving path stays byte-identical; the idle
+        // timeout defaults to the historical hard-coded 30 s
+        let s = Settings::default();
+        assert_eq!(s.service.default_deadline_ms, 0, "deadlines default off");
+        assert_eq!(s.service.idle_timeout_ms, 30_000);
+        assert_eq!(s.service.shed_watermark_ms, 0, "shedding defaults off");
+        assert_eq!(s.service.drain_deadline_ms, 5_000);
+        assert_eq!(s.service.max_doc_bytes, 1 << 20);
+
+        let doc = toml::Document::parse(
+            r#"
+[service]
+default_deadline_ms = 250
+idle_timeout_ms = 1500
+shed_watermark_ms = 40
+drain_deadline_ms = 900
+max_doc_bytes = 65536
+"#,
+        )
+        .unwrap();
+        let mut s = Settings::default();
+        s.apply(&doc).unwrap();
+        assert_eq!(s.service.default_deadline_ms, 250);
+        assert_eq!(s.service.idle_timeout_ms, 1500);
+        assert_eq!(s.service.shed_watermark_ms, 40);
+        assert_eq!(s.service.drain_deadline_ms, 900);
+        assert_eq!(s.service.max_doc_bytes, 65536);
+    }
+
+    #[test]
+    fn breaker_defaults_and_overrides() {
+        let s = Settings::default();
+        assert!(!s.sched.breaker.enabled, "breaker must default off");
+        assert_eq!(s.sched.breaker.window, 16);
+        assert_eq!(s.sched.breaker.trip_failures, 8);
+        assert_eq!(s.sched.breaker.cooldown_ms, 200);
+        assert_eq!(s.sched.breaker.max_trips, 3);
+        assert!((s.sched.breaker.probe_target - 0.5).abs() < 1e-12);
+
+        let doc = toml::Document::parse(
+            r#"
+[sched]
+breaker_enabled = true
+breaker_window = 32
+breaker_trip_failures = 4
+breaker_cooldown_ms = 50
+breaker_max_trips = 2
+breaker_probe_target = 0.75
+"#,
+        )
+        .unwrap();
+        let mut s = Settings::default();
+        s.apply(&doc).unwrap();
+        assert!(s.sched.breaker.enabled);
+        assert_eq!(s.sched.breaker.window, 32);
+        assert_eq!(s.sched.breaker.trip_failures, 4);
+        assert_eq!(s.sched.breaker.cooldown_ms, 50);
+        assert_eq!(s.sched.breaker.max_trips, 2);
+        assert!((s.sched.breaker.probe_target - 0.75).abs() < 1e-12);
     }
 
     #[test]

@@ -82,6 +82,7 @@ pub fn run(scale: Scale, settings: &Settings) -> Result<Vec<Report>> {
                 None,
                 Some(&shared),
                 None,
+                None,
             )?;
             let mut total = 0.0f64;
             for (bp, doc) in problems.iter().zip(set.documents.iter()) {

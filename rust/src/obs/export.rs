@@ -115,6 +115,53 @@ pub fn exposition(m: &ServiceMetrics) -> String {
         }
     }
 
+    if m.pool.expired > 0 {
+        out.push_str("# TYPE cobi_es_pool_expired_total counter\n");
+        push_counter(&mut out, "pool_expired_total", "", m.pool.expired);
+    }
+
+    if m.overload.any() {
+        out.push_str("# TYPE cobi_es_overload_events_total counter\n");
+        for (event, v) in [
+            ("deadline_exceeded", m.overload.deadline_exceeded),
+            ("shed_batch", m.overload.shed_batch),
+            ("shed_interactive", m.overload.shed_interactive),
+            ("worker_panics", m.overload.worker_panics),
+            ("drains", m.overload.drains),
+            ("drain_aborted", m.overload.drain_aborted),
+        ] {
+            push_counter(
+                &mut out,
+                "overload_events_total",
+                &format!("{{event=\"{event}\"}}"),
+                v,
+            );
+        }
+    }
+
+    if let Some(b) = &m.breaker {
+        if b.any() {
+            out.push_str("# TYPE cobi_es_breaker_open_devices gauge\n");
+            out.push_str(&format!("cobi_es_breaker_open_devices {}\n", b.open));
+            out.push_str("# TYPE cobi_es_breaker_retired_devices gauge\n");
+            out.push_str(&format!("cobi_es_breaker_retired_devices {}\n", b.retired));
+            out.push_str("# TYPE cobi_es_breaker_events_total counter\n");
+            for (event, v) in [
+                ("trips", b.trips),
+                ("probes", b.probes),
+                ("readmissions", b.readmissions),
+                ("retirements", b.retirements),
+            ] {
+                push_counter(
+                    &mut out,
+                    "breaker_events_total",
+                    &format!("{{event=\"{event}\"}}"),
+                    v,
+                );
+            }
+        }
+    }
+
     if let Some(o) = &m.obs {
         out.push_str("# TYPE cobi_es_traces_total counter\n");
         push_counter(&mut out, "traces_total", "{state=\"recorded\"}", o.recorded);
@@ -184,7 +231,8 @@ fn braced(labels: &str) -> String {
 /// sections `null` when absent):
 /// `{"requests": {...}, "latency": {...}, "strategies": {...},
 ///   "pool": {...}|null, "portfolio": {...}|null,
-///   "resilience": {...}|null, "obs": {...}|null}`.
+///   "resilience": {...}|null, "overload": {...}|null,
+///   "breaker": {...}|null, "obs": {...}|null}`.
 pub fn stats_json(m: &ServiceMetrics) -> String {
     let mut out = String::with_capacity(1024);
     out.push('{');
@@ -255,6 +303,31 @@ pub fn stats_json(m: &ServiceMetrics) -> String {
         ));
     } else {
         out.push_str(",\"resilience\":null");
+    }
+
+    if m.overload.any() {
+        out.push_str(&format!(
+            ",\"overload\":{{\"deadline_exceeded\":{},\"shed_batch\":{},\"shed_interactive\":{},\"worker_panics\":{},\"drains\":{},\"drain_aborted\":{},\"expired\":{}}}",
+            m.overload.deadline_exceeded,
+            m.overload.shed_batch,
+            m.overload.shed_interactive,
+            m.overload.worker_panics,
+            m.overload.drains,
+            m.overload.drain_aborted,
+            m.pool.expired
+        ));
+    } else {
+        out.push_str(",\"overload\":null");
+    }
+
+    match &m.breaker {
+        Some(b) if b.any() => {
+            out.push_str(&format!(
+                ",\"breaker\":{{\"devices\":{},\"open\":{},\"retired\":{},\"trips\":{},\"probes\":{},\"readmissions\":{},\"retirements\":{}}}",
+                b.devices, b.open, b.retired, b.trips, b.probes, b.readmissions, b.retirements
+            ));
+        }
+        _ => out.push_str(",\"breaker\":null"),
     }
 
     match &m.obs {
@@ -415,6 +488,48 @@ mod tests {
         let ex = obs.get("exemplars").unwrap().as_array().unwrap();
         assert_eq!(ex[0].get("doc").unwrap().as_str(), Some("doc-1"));
         assert!(obs.get("energy_j").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn overload_and_breaker_series_appear_only_when_active() {
+        let mut m = snapshot_with_obs();
+        // quiet: no overload/breaker lines, json sections null
+        let text = exposition(&m);
+        assert!(!text.contains("cobi_es_overload_events_total"), "{text}");
+        assert!(!text.contains("cobi_es_breaker_"), "{text}");
+        let v = JsonValue::parse(&stats_json(&m)).unwrap();
+        assert_eq!(v.get("overload"), Some(&JsonValue::Null));
+        assert_eq!(v.get("breaker"), Some(&JsonValue::Null));
+
+        m.overload.shed_batch = 2;
+        m.overload.deadline_exceeded = 1;
+        m.pool.expired = 3;
+        m.breaker = Some(crate::sched::BreakerMetrics {
+            devices: 4,
+            open: 1,
+            trips: 2,
+            probes: 5,
+            readmissions: 1,
+            ..Default::default()
+        });
+        let text = exposition(&m);
+        assert!(
+            text.contains("cobi_es_overload_events_total{event=\"shed_batch\"} 2"),
+            "{text}"
+        );
+        assert!(text.contains("cobi_es_pool_expired_total 3"), "{text}");
+        assert!(text.contains("cobi_es_breaker_open_devices 1"), "{text}");
+        assert!(
+            text.contains("cobi_es_breaker_events_total{event=\"trips\"} 2"),
+            "{text}"
+        );
+        let v = JsonValue::parse(&stats_json(&m)).unwrap();
+        let o = v.get("overload").unwrap();
+        assert_eq!(o.get("shed_batch").unwrap().as_u64(), Some(2));
+        assert_eq!(o.get("expired").unwrap().as_u64(), Some(3));
+        let b = v.get("breaker").unwrap();
+        assert_eq!(b.get("devices").unwrap().as_u64(), Some(4));
+        assert_eq!(b.get("probes").unwrap().as_u64(), Some(5));
     }
 
     #[test]

@@ -40,6 +40,7 @@ pub mod fault;
 pub use calibrate::{Calibration, Calibrator};
 pub use fault::{FaultCounters, FaultDraw, FaultModel, FaultStats};
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use anyhow::{ensure, Result};
@@ -198,6 +199,9 @@ pub struct ResilientSolver {
     cfg: ResilienceConfig,
     replication: usize,
     shared: ResilienceShared,
+    /// Optional per-device verify-failure feed (the pool's circuit
+    /// breaker drains it after every dispatch; see `sched::breaker`).
+    verify_obs: Option<Arc<AtomicU64>>,
 }
 
 impl ResilientSolver {
@@ -214,7 +218,17 @@ impl ResilientSolver {
             replication: cfg.replication.clamp(1, cfg.max_replication.max(1)),
             cfg: cfg.clone(),
             shared,
+            verify_obs: None,
         }
+    }
+
+    /// Install a per-device verify-failure observer: every replica the
+    /// software verification rejects also bumps this counter, giving the
+    /// pool's circuit breaker a per-device health feed (the fleet
+    /// counters in [`ResilienceShared`] aggregate across devices and
+    /// cannot attribute failures).
+    pub fn set_verify_observer(&mut self, obs: Arc<AtomicU64>) {
+        self.verify_obs = Some(obs);
     }
 
     /// The wrapped solver (calibration probes go through here).
@@ -402,6 +416,11 @@ impl ResilientSolver {
     }
 
     fn commit(&self, delta: Delta) {
+        if delta.verify_failures > 0 {
+            if let Some(o) = &self.verify_obs {
+                o.fetch_add(delta.verify_failures, Ordering::Relaxed);
+            }
+        }
         let mut m = self.shared.metrics.lock().unwrap();
         m.requests += delta.requests;
         m.replica_solves += delta.replica_solves;
@@ -511,7 +530,16 @@ pub(crate) fn resilient_pipeline(
         return Ok(None);
     }
     let solver =
-        crate::sched::pool::build_solver(&cfg.solver, settings, cfg.seed, rt, None, shared, obs)?;
+        crate::sched::pool::build_solver(
+            &cfg.solver,
+            settings,
+            cfg.seed,
+            rt,
+            None,
+            shared,
+            obs,
+            None,
+        )?;
     Ok(Some(crate::pipeline::EsPipeline::new(
         cfg.clone(),
         Box::new(crate::embed::HashEmbedder::new()),

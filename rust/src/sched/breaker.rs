@@ -1,0 +1,491 @@
+//! Per-device circuit breakers for the solver pool.
+//!
+//! Each pool device gets a rolling window of dispatch outcomes: a
+//! dispatch error or a verify failure (reported by the `resilience`
+//! wrapper's energy re-check) counts as a failure sample, a clean
+//! dispatch as a success. When failures inside the window reach
+//! `trip_failures` the breaker **opens** and the device thread stops
+//! pulling work — the healthy devices absorb its share of the shared
+//! request channel. After `cooldown_ms` the breaker goes **half-open**
+//! and the device must pass a probe before readmission; per DESIGN.md
+//! decision #21 the probe is the existing [`Calibrator`] from the
+//! resilience subsystem (same deterministic ground-truth instances as
+//! startup calibration), judged against `probe_target` success rate.
+//! A device that trips more than `max_trips` times is **retired** for
+//! the life of the pool — unless it is the last non-retired device, in
+//! which case it keeps cycling open → probe forever (a limping fleet
+//! beats a dead one).
+//!
+//! The fleet is pure bookkeeping: it never touches request payloads or
+//! RNG streams, so enabling it cannot change any admitted summary.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::time::{Duration, Instant};
+
+use crate::config::BreakerConfig;
+use crate::resilience::Calibrator;
+use crate::sched::pool::PoolSolver;
+
+/// Breaker state for one device.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum State {
+    /// Healthy: admitted to the drain loop.
+    Closed,
+    /// Tripped: quarantined, waiting out the cooldown.
+    Open,
+    /// Cooldown elapsed: next step is a calibration probe.
+    HalfOpen,
+    /// Permanently removed from the fleet (`trips > max_trips`).
+    Retired,
+}
+
+/// What the owning device thread should do next.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Action {
+    /// Pull and serve requests normally.
+    Admit,
+    /// Quarantined: sleep for the returned duration, then ask again.
+    Cooldown(Duration),
+    /// Run the half-open calibration probe and report via
+    /// [`BreakerFleet::probe_result`].
+    Probe,
+    /// Permanently retired: exit the drain loop.
+    Retired,
+}
+
+#[derive(Debug)]
+struct DeviceState {
+    /// Rolling outcome window; `true` = failure sample.
+    window: VecDeque<bool>,
+    state: State,
+    opened_at: Option<Instant>,
+    trips: u32,
+}
+
+impl DeviceState {
+    fn new() -> Self {
+        Self {
+            window: VecDeque::new(),
+            state: State::Closed,
+            opened_at: None,
+            trips: 0,
+        }
+    }
+
+    fn failures(&self) -> u32 {
+        self.window.iter().filter(|&&f| f).count() as u32
+    }
+
+    fn push(&mut self, failure: bool, window: usize) {
+        self.window.push_back(failure);
+        while self.window.len() > window.max(1) {
+            self.window.pop_front();
+        }
+    }
+}
+
+/// Point-in-time fleet summary, merged into `ServiceMetrics` and the
+/// `::METRICS::` exposition.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BreakerMetrics {
+    /// Devices tracked by the fleet.
+    pub devices: usize,
+    /// Devices currently open or half-open (quarantined).
+    pub open: usize,
+    /// Devices permanently retired.
+    pub retired: usize,
+    /// Lifetime breaker trips.
+    pub trips: u64,
+    /// Half-open calibration probes run.
+    pub probes: u64,
+    /// Probes that readmitted their device.
+    pub readmissions: u64,
+    /// Devices retired over the fleet lifetime.
+    pub retirements: u64,
+}
+
+impl BreakerMetrics {
+    /// Did the breaker ever act? (Gates report output so a quiet fleet
+    /// stays byte-identical to a breaker-less build.)
+    pub fn any(&self) -> bool {
+        self.trips > 0 || self.probes > 0 || self.open > 0 || self.retired > 0
+    }
+
+    /// Human-readable fragment for the service report.
+    pub fn report(&self) -> String {
+        format!(
+            "breaker: {}/{} open, {} retired, {} trips, {} probes, {} readmissions",
+            self.open, self.devices, self.retired, self.trips, self.probes, self.readmissions
+        )
+    }
+}
+
+/// Shared per-fleet breaker bookkeeping (one per [`DevicePool`]).
+///
+/// [`DevicePool`]: crate::sched::pool::DevicePool
+#[derive(Debug)]
+pub struct BreakerFleet {
+    cfg: BreakerConfig,
+    devices: Mutex<Vec<DeviceState>>,
+    trips: AtomicU64,
+    probes: AtomicU64,
+    readmissions: AtomicU64,
+    retirements: AtomicU64,
+}
+
+impl BreakerFleet {
+    /// Fleet of `devices` breakers under `cfg`.
+    pub fn new(cfg: BreakerConfig, devices: usize) -> Self {
+        Self {
+            cfg,
+            devices: Mutex::new((0..devices).map(|_| DeviceState::new()).collect()),
+            trips: AtomicU64::new(0),
+            probes: AtomicU64::new(0),
+            readmissions: AtomicU64::new(0),
+            retirements: AtomicU64::new(0),
+        }
+    }
+
+    /// Is the breaker feature on at all?
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Vec<DeviceState>> {
+        self.devices.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Record one dispatch outcome for `device`. `ok` is whether the
+    /// dispatch itself succeeded; `verify_failures` is how many replica
+    /// verifications the resilience wrapper rejected during it (each
+    /// counts as its own failure sample — a lying device fails fast).
+    pub fn record_dispatch(&self, device: usize, ok: bool, verify_failures: u64) {
+        if !self.cfg.enabled {
+            return;
+        }
+        let mut fleet = self.lock();
+        let Some(dev) = fleet.get_mut(device) else {
+            return;
+        };
+        if dev.state != State::Closed {
+            return; // samples only count while admitted
+        }
+        for _ in 0..verify_failures {
+            dev.push(true, self.cfg.window);
+        }
+        dev.push(!ok || verify_failures > 0, self.cfg.window);
+        if dev.failures() >= self.cfg.trip_failures.max(1) {
+            self.trip(&mut fleet, device);
+        }
+    }
+
+    /// Trip `device`: open (or retire, past `max_trips`) and clear its
+    /// window. Caller holds the fleet lock.
+    fn trip(&self, fleet: &mut [DeviceState], device: usize) {
+        self.trips.fetch_add(1, Ordering::Relaxed);
+        let last_standing = Self::is_last_standing(fleet, device);
+        let dev = &mut fleet[device];
+        dev.trips += 1;
+        dev.window.clear();
+        if dev.trips > self.cfg.max_trips && !last_standing {
+            dev.state = State::Retired;
+            dev.opened_at = None;
+            self.retirements.fetch_add(1, Ordering::Relaxed);
+        } else {
+            dev.state = State::Open;
+            dev.opened_at = Some(Instant::now());
+        }
+    }
+
+    /// Would retiring `device` leave the pool with no admissible device?
+    fn is_last_standing(fleet: &[DeviceState], device: usize) -> bool {
+        !fleet
+            .iter()
+            .enumerate()
+            .any(|(i, d)| i != device && d.state != State::Retired)
+    }
+
+    /// What should `device`'s thread do right now?
+    pub fn action(&self, device: usize) -> Action {
+        if !self.cfg.enabled {
+            return Action::Admit;
+        }
+        let mut fleet = self.lock();
+        let Some(dev) = fleet.get_mut(device) else {
+            return Action::Admit;
+        };
+        match dev.state {
+            State::Closed => Action::Admit,
+            State::Retired => Action::Retired,
+            State::HalfOpen => Action::Probe,
+            State::Open => {
+                let cooldown = Duration::from_millis(self.cfg.cooldown_ms);
+                let since = dev.opened_at.map(|t| t.elapsed()).unwrap_or(cooldown);
+                if since >= cooldown {
+                    dev.state = State::HalfOpen;
+                    Action::Probe
+                } else {
+                    Action::Cooldown(cooldown - since)
+                }
+            }
+        }
+    }
+
+    /// Report the half-open probe outcome: readmit on health, re-trip
+    /// (possibly into retirement) otherwise.
+    pub fn probe_result(&self, device: usize, healthy: bool) {
+        self.probes.fetch_add(1, Ordering::Relaxed);
+        let mut fleet = self.lock();
+        if fleet.get(device).is_none() {
+            return;
+        }
+        if healthy {
+            let dev = &mut fleet[device];
+            dev.state = State::Closed;
+            dev.opened_at = None;
+            dev.window.clear();
+            self.readmissions.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.trip(&mut fleet, device);
+        }
+    }
+
+    /// Current state of one device (for tests and reports).
+    pub fn state(&self, device: usize) -> Option<State> {
+        self.lock().get(device).map(|d| d.state)
+    }
+
+    /// Point-in-time fleet metrics.
+    pub fn snapshot(&self) -> BreakerMetrics {
+        let fleet = self.lock();
+        BreakerMetrics {
+            devices: fleet.len(),
+            open: fleet
+                .iter()
+                .filter(|d| matches!(d.state, State::Open | State::HalfOpen))
+                .count(),
+            retired: fleet.iter().filter(|d| d.state == State::Retired).count(),
+            trips: self.trips.load(Ordering::Relaxed),
+            probes: self.probes.load(Ordering::Relaxed),
+            readmissions: self.readmissions.load(Ordering::Relaxed),
+            retirements: self.retirements.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// One device thread's handle into the fleet: records outcomes (folding
+/// in the verify-failure feed from the resilience wrapper) and runs the
+/// half-open probe.
+pub struct DeviceBreakerHandle {
+    /// Device index inside the pool.
+    pub device: usize,
+    /// Shared fleet bookkeeping.
+    pub fleet: Arc<BreakerFleet>,
+    /// The half-open prober (startup calibrator reused; decision #21).
+    pub probe: Calibrator,
+    /// Verify-failure counter the resilience wrapper increments; drained
+    /// (swap-to-zero) once per dispatch.
+    pub verify_failures: Arc<AtomicU64>,
+}
+
+impl DeviceBreakerHandle {
+    /// Record one dispatch outcome, draining the verify-failure feed.
+    pub fn record(&self, ok: bool) {
+        let vf = self.verify_failures.swap(0, Ordering::Relaxed);
+        self.fleet.record_dispatch(self.device, ok, vf);
+    }
+
+    /// Run the half-open calibration probe against this device's solver
+    /// and report the verdict. Returns the resulting device state.
+    pub fn run_probe(&self, solver: &mut dyn PoolSolver) -> Option<State> {
+        let healthy = match self.probe.calibrate(solver) {
+            Ok(cal) => cal.success_rate >= self.fleet.cfg.probe_target,
+            Err(_) => false, // a probe that errors is an unhealthy device
+        };
+        self.fleet.probe_result(self.device, healthy);
+        self.fleet.state(self.device)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> BreakerConfig {
+        BreakerConfig {
+            enabled: true,
+            window: 8,
+            trip_failures: 3,
+            cooldown_ms: 0, // elapse immediately: state tests need no sleeps
+            max_trips: 2,
+            probe_target: 0.5,
+        }
+    }
+
+    #[test]
+    fn disabled_fleet_is_inert() {
+        let fleet = BreakerFleet::new(BreakerConfig::default(), 2);
+        assert!(!fleet.enabled());
+        for _ in 0..64 {
+            fleet.record_dispatch(0, false, 9);
+        }
+        assert_eq!(fleet.action(0), Action::Admit);
+        assert!(!fleet.snapshot().any());
+    }
+
+    #[test]
+    fn failures_inside_window_trip_the_breaker() {
+        let fleet = BreakerFleet::new(cfg(), 2);
+        fleet.record_dispatch(0, false, 0);
+        fleet.record_dispatch(0, false, 0);
+        assert_eq!(fleet.state(0), Some(State::Closed));
+        fleet.record_dispatch(0, false, 0);
+        assert_eq!(fleet.state(0), Some(State::Open));
+        let m = fleet.snapshot();
+        assert_eq!((m.trips, m.open), (1, 1));
+        // the other device is untouched
+        assert_eq!(fleet.action(1), Action::Admit);
+    }
+
+    #[test]
+    fn successes_age_failures_out_of_the_window() {
+        let fleet = BreakerFleet::new(cfg(), 1);
+        // alternate: never 3 failures inside an 8-wide window? 2 fails,
+        // then 8 successes push them out, then 2 more fails — no trip.
+        fleet.record_dispatch(0, false, 0);
+        fleet.record_dispatch(0, false, 0);
+        for _ in 0..8 {
+            fleet.record_dispatch(0, true, 0);
+        }
+        fleet.record_dispatch(0, false, 0);
+        fleet.record_dispatch(0, false, 0);
+        assert_eq!(fleet.state(0), Some(State::Closed));
+    }
+
+    #[test]
+    fn verify_failures_count_as_failure_samples() {
+        let fleet = BreakerFleet::new(cfg(), 2);
+        // one dispatch that verified-and-rejected 3 replicas trips alone
+        fleet.record_dispatch(0, true, 3);
+        assert_eq!(fleet.state(0), Some(State::Open));
+    }
+
+    #[test]
+    fn cooldown_then_probe_then_readmission() {
+        let fleet = BreakerFleet::new(cfg(), 2);
+        fleet.record_dispatch(0, false, 3);
+        assert_eq!(fleet.state(0), Some(State::Open));
+        // cooldown_ms = 0: first ask already half-opens into a probe
+        assert_eq!(fleet.action(0), Action::Probe);
+        assert_eq!(fleet.state(0), Some(State::HalfOpen));
+        fleet.probe_result(0, true);
+        assert_eq!(fleet.state(0), Some(State::Closed));
+        assert_eq!(fleet.action(0), Action::Admit);
+        let m = fleet.snapshot();
+        assert_eq!((m.probes, m.readmissions, m.open), (1, 1, 0));
+        // the window was cleared: old failures don't haunt the readmit
+        fleet.record_dispatch(0, false, 0);
+        fleet.record_dispatch(0, false, 0);
+        assert_eq!(fleet.state(0), Some(State::Closed));
+    }
+
+    #[test]
+    fn cooldown_holds_the_device_out() {
+        let mut c = cfg();
+        c.cooldown_ms = 60_000;
+        let fleet = BreakerFleet::new(c, 2);
+        fleet.record_dispatch(0, false, 3);
+        match fleet.action(0) {
+            Action::Cooldown(left) => assert!(left <= Duration::from_millis(60_000)),
+            other => panic!("expected cooldown, got {other:?}"),
+        }
+        assert_eq!(fleet.state(0), Some(State::Open));
+    }
+
+    #[test]
+    fn repeated_trips_retire_the_device() {
+        let fleet = BreakerFleet::new(cfg(), 2); // max_trips = 2
+        for round in 0..3 {
+            fleet.record_dispatch(0, false, 3); // trip
+            if round < 2 {
+                assert_eq!(fleet.action(0), Action::Probe);
+                fleet.probe_result(0, true); // readmit, try again
+            }
+        }
+        assert_eq!(fleet.state(0), Some(State::Retired));
+        assert_eq!(fleet.action(0), Action::Retired);
+        let m = fleet.snapshot();
+        assert_eq!((m.trips, m.retirements, m.retired), (3, 1, 1));
+        assert!(m.any());
+    }
+
+    #[test]
+    fn failed_probe_retrips_and_can_retire() {
+        let fleet = BreakerFleet::new(cfg(), 2);
+        fleet.record_dispatch(0, false, 3); // trip 1
+        assert_eq!(fleet.action(0), Action::Probe);
+        fleet.probe_result(0, false); // trip 2
+        assert_eq!(fleet.state(0), Some(State::Open));
+        assert_eq!(fleet.action(0), Action::Probe);
+        fleet.probe_result(0, false); // trip 3 > max_trips: retired
+        assert_eq!(fleet.state(0), Some(State::Retired));
+    }
+
+    #[test]
+    fn last_standing_device_is_never_retired() {
+        let fleet = BreakerFleet::new(cfg(), 2);
+        // retire device 1 first
+        for _ in 0..3 {
+            fleet.record_dispatch(1, false, 3);
+            if fleet.state(1) == Some(State::Open) {
+                assert_eq!(fleet.action(1), Action::Probe);
+                fleet.probe_result(1, false);
+            }
+        }
+        assert_eq!(fleet.state(1), Some(State::Retired));
+        // device 0 now trips far past max_trips but must keep probing
+        for _ in 0..6 {
+            fleet.record_dispatch(0, false, 3);
+            assert_eq!(fleet.action(0), Action::Probe);
+            fleet.probe_result(0, false);
+        }
+        assert_ne!(fleet.state(0), Some(State::Retired));
+        assert_eq!(fleet.snapshot().retired, 1);
+        // and a healthy probe still readmits it
+        assert_eq!(fleet.action(0), Action::Probe);
+        fleet.probe_result(0, true);
+        assert_eq!(fleet.state(0), Some(State::Closed));
+    }
+
+    #[test]
+    fn quarantined_devices_ignore_late_samples() {
+        let fleet = BreakerFleet::new(cfg(), 2);
+        fleet.record_dispatch(0, false, 3);
+        assert_eq!(fleet.state(0), Some(State::Open));
+        let trips_before = fleet.snapshot().trips;
+        // an in-flight dispatch finishing after the trip must not re-trip
+        fleet.record_dispatch(0, false, 5);
+        assert_eq!(fleet.snapshot().trips, trips_before);
+    }
+
+    #[test]
+    fn handle_drains_the_verify_feed() {
+        let fleet = Arc::new(BreakerFleet::new(cfg(), 1));
+        let handle = DeviceBreakerHandle {
+            device: 0,
+            fleet: fleet.clone(),
+            probe: Calibrator {
+                probes: 1,
+                target: 0.9,
+                max_replication: 2,
+            },
+            verify_failures: Arc::new(AtomicU64::new(0)),
+        };
+        handle.verify_failures.store(3, Ordering::Relaxed);
+        handle.record(true);
+        assert_eq!(handle.verify_failures.load(Ordering::Relaxed), 0);
+        assert_eq!(fleet.state(0), Some(State::Open));
+    }
+}

@@ -214,6 +214,15 @@ fn pool_exec(
         SubproblemGraph::with_plan(n, DecomposePlan::new(cfg.strategy, &params)?)?;
     let mut total_solves = 0usize;
     while !graph.is_done() {
+        // deadline seam: a request whose budget died between DAG levels
+        // stops here instead of submitting another round of solves (the
+        // pool re-checks per dispatch, but this catches deep documents
+        // whose remaining levels would all be wasted)
+        if let Some(d) = client.deadline() {
+            if d.expired() {
+                return Err(d.exceeded().into());
+            }
+        }
         let units = graph.take_ready();
         ensure!(!units.is_empty(), "scheduler stalled: no ready units");
         // submit the whole level before waiting on anything

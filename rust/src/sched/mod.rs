@@ -33,11 +33,13 @@
 //! docs/ARCHITECTURE.md for the request walkthrough and the
 //! thread/channel ownership diagram.
 
+pub mod breaker;
 pub mod exec;
 pub mod graph;
 pub mod pool;
 pub mod stream;
 
+pub use breaker::{BreakerFleet, BreakerMetrics};
 pub use exec::{
     summarize_sequential, summarize_sequential_traced, summarize_sequential_using,
     summarize_with_pool, summarize_with_pool_traced, summarize_with_pool_using,

@@ -32,8 +32,9 @@
 //! the scratch: scratch carries capacity, not state, so per-request
 //! determinism is unaffected (pinned by the test below).
 
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, PoisonError};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, ensure, Result};
@@ -43,9 +44,13 @@ use crate::config::Settings;
 use crate::ising::Ising;
 use crate::obs::{DispatchCounters, LedgerSolver, ObsShared, Subsystem};
 use crate::portfolio::{PortfolioMetrics, PortfolioShared, SolverPortfolio};
-use crate::resilience::{FaultModel, ResilienceMetrics, ResilienceShared, ResilientSolver};
+use crate::resilience::{
+    Calibrator, FaultModel, ResilienceMetrics, ResilienceShared, ResilientSolver,
+};
 use crate::runtime::ArtifactRuntime;
+use crate::sched::breaker::{Action, BreakerFleet, BreakerMetrics, DeviceBreakerHandle};
 use crate::service::metrics::Histogram;
+use crate::service::overload::Deadline;
 use crate::solvers::sa::SaSolver;
 use crate::solvers::snowball::SnowballSolver;
 use crate::solvers::tabu::TabuSolver;
@@ -179,6 +184,7 @@ pub fn service_pooled(settings: &Settings) -> bool {
 /// charge its routed backend per fresh solve. Solves dispatched while
 /// the resilience layer is on are attributed to `Subsystem::Resilience`
 /// instead of the construction site.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn build_solver(
     backend: &str,
     settings: &Settings,
@@ -187,6 +193,7 @@ pub(crate) fn build_solver(
     shared: Option<&PortfolioShared>,
     resilience: Option<&ResilienceShared>,
     obs: Option<(&ObsShared, Subsystem)>,
+    verify_obs: Option<&Arc<AtomicU64>>,
 ) -> Result<Box<dyn PoolSolver>> {
     let subsystem = obs.map(|(_, site)| {
         if settings.resilience.enabled {
@@ -247,6 +254,9 @@ pub(crate) fn build_solver(
     if settings.resilience.enabled {
         let shared = resilience.cloned().unwrap_or_default();
         let mut rs = ResilientSolver::new(inner, &settings.resilience, shared);
+        if let Some(v) = verify_obs {
+            rs.set_verify_observer(v.clone());
+        }
         if settings.resilience.calibrate {
             rs.calibrate()?;
         }
@@ -260,6 +270,9 @@ struct SolveRequest {
     instances: Vec<Ising>,
     seed: u64,
     enqueued: Instant,
+    /// Request deadline, if the submitting client carries one; devices
+    /// drop expired requests before dispatch (typed error reply).
+    deadline: Option<Deadline>,
     respond: SyncSender<Result<Vec<SolveResult>>>,
 }
 
@@ -278,6 +291,9 @@ pub struct PoolMetrics {
     pub busy_s: f64,
     /// Wall-clock covered by this snapshot, seconds (0 until snapshotted).
     pub elapsed_s: f64,
+    /// Requests dropped before dispatch because their deadline expired
+    /// while queued (each got a typed `DeadlineExceeded` reply).
+    pub expired: u64,
     /// Per-request pool queue wait histogram.
     pub queue_wait: Histogram,
 }
@@ -291,6 +307,7 @@ impl PoolMetrics {
             instances: 0,
             busy_s: 0.0,
             elapsed_s: 0.0,
+            expired: 0,
             queue_wait: Histogram::latency(),
         }
     }
@@ -326,7 +343,7 @@ impl PoolMetrics {
 
     /// One-line pool counter summary.
     pub fn report(&self) -> String {
-        format!(
+        let mut out = format!(
             "pool: devices={} dispatches={} requests={} instances={} | \
              occupancy={:.2} coalesce={:.2} util={:.0}% | pool-wait {}",
             self.devices,
@@ -337,7 +354,11 @@ impl PoolMetrics {
             self.coalescing(),
             self.utilization() * 100.0,
             self.queue_wait.summary(),
-        )
+        );
+        if self.expired > 0 {
+            out.push_str(&format!(" | expired={}", self.expired));
+        }
+        out
     }
 }
 
@@ -362,6 +383,7 @@ impl PoolHandle {
         PoolClient {
             tx: self.tx.clone(),
             seeds: Pcg32::new(seed, CLIENT_SEED_STREAM),
+            deadline: None,
         }
     }
 }
@@ -374,6 +396,9 @@ impl PoolHandle {
 pub struct PoolClient {
     tx: SyncSender<SolveRequest>,
     seeds: Pcg32,
+    /// Deadline stamped onto every request this client submits (the
+    /// worker sets it from the job before executing the document's DAG).
+    deadline: Option<Deadline>,
 }
 
 /// In-flight solve; `wait` blocks for the device's answer.
@@ -391,6 +416,17 @@ impl PendingSolve {
 }
 
 impl PoolClient {
+    /// Attach (or clear) the deadline stamped onto subsequent submits.
+    pub fn set_deadline(&mut self, deadline: Option<Deadline>) {
+        self.deadline = deadline;
+    }
+
+    /// The client's current deadline (the pooled executor checks it
+    /// between pipeline stages).
+    pub fn deadline(&self) -> Option<Deadline> {
+        self.deadline
+    }
+
     /// Submit one request (all instances solved under one request seed
     /// drawn from the client's per-document stream). Blocks only when the
     /// pool queue is full (bounded backpressure); the solve itself
@@ -414,6 +450,7 @@ impl PoolClient {
             instances,
             seed,
             enqueued: Instant::now(),
+            deadline: self.deadline,
             respond: rtx,
         };
         self.tx
@@ -459,6 +496,12 @@ pub struct DevicePool {
     /// Fleet-shared resilience state (counters + fault injections);
     /// present when the resilience layer or the fault model is enabled.
     resilience: Option<ResilienceShared>,
+    /// Per-device circuit breakers (`[sched] breaker_enabled = true`).
+    breaker: Option<Arc<BreakerFleet>>,
+    /// Raised at shutdown so quarantined device threads — which sit in
+    /// cooldown/probe cycles instead of the queue's disconnect path —
+    /// still exit promptly.
+    quit: Arc<AtomicBool>,
 }
 
 impl DevicePool {
@@ -497,12 +540,20 @@ impl DevicePool {
         // retry counters + fault injections), shared the same way
         let resilience = (settings.resilience.enabled || settings.resilience.fault.enabled)
             .then(ResilienceShared::new);
+        // one breaker fleet; each device gets a handle with its own
+        // verify-failure feed and a calibrator as the half-open probe
+        let breaker = sched
+            .breaker
+            .enabled
+            .then(|| Arc::new(BreakerFleet::new(sched.breaker.clone(), devices)));
+        let quit = Arc::new(AtomicBool::new(false));
 
         let mut threads = Vec::with_capacity(devices);
         for d in 0..devices {
             // construction seed decorrelates devices that are NOT
             // re-seeded per request (none today — kept for safety)
             let seed = settings.pipeline.seed ^ 0xD00D ^ ((d as u64) << 32);
+            let verify_obs = breaker.as_ref().map(|_| Arc::new(AtomicU64::new(0)));
             let mut solver = build_solver(
                 &backend,
                 settings,
@@ -511,10 +562,18 @@ impl DevicePool {
                 portfolio.as_ref(),
                 resilience.as_ref(),
                 obs.map(|o| (o, Subsystem::Pool)),
+                verify_obs.as_ref(),
             )?;
+            let handle = breaker.as_ref().map(|fleet| DeviceBreakerHandle {
+                device: d,
+                fleet: fleet.clone(),
+                probe: Calibrator::from_config(&settings.resilience),
+                verify_failures: verify_obs.unwrap_or_default(),
+            });
             let rx = rx.clone();
             let metrics = metrics.clone();
             let dispatch = obs.map(|o| o.dispatch().clone());
+            let quit = quit.clone();
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("cobi-pool-{d}"))
@@ -524,6 +583,8 @@ impl DevicePool {
                             &rx,
                             &metrics,
                             dispatch,
+                            handle,
+                            &quit,
                             max_coalesce,
                             linger,
                         )
@@ -538,6 +599,8 @@ impl DevicePool {
             backend,
             portfolio,
             resilience,
+            breaker,
+            quit,
         })
     }
 
@@ -552,6 +615,18 @@ impl DevicePool {
     /// resilience layer or the fault model is enabled.
     pub fn resilience_metrics(&self) -> Option<ResilienceMetrics> {
         self.resilience.as_ref().map(|r| r.snapshot())
+    }
+
+    /// Circuit-breaker fleet snapshot (trips/probes/readmissions and the
+    /// current open/retired device counts) — `None` unless
+    /// `[sched] breaker_enabled = true`.
+    pub fn breaker_metrics(&self) -> Option<BreakerMetrics> {
+        self.breaker.as_ref().map(|b| b.snapshot())
+    }
+
+    /// The breaker fleet itself (tests drive/inspect state through it).
+    pub fn breaker(&self) -> Option<&Arc<BreakerFleet>> {
+        self.breaker.as_ref()
     }
 
     /// A cloneable submission handle.
@@ -586,6 +661,7 @@ impl DevicePool {
     }
 
     fn shutdown_inner(&mut self) {
+        self.quit.store(true, Ordering::SeqCst);
         self.tx.take(); // close our side of the queue
         for t in self.threads.drain(..) {
             let _ = t.join();
@@ -599,12 +675,24 @@ impl Drop for DevicePool {
     }
 }
 
-/// One device thread: pull → linger/coalesce → seeded dispatch → respond.
+/// Poison-tolerant lock: a sibling device/worker that panicked while
+/// holding the mutex must not cascade its failure to the whole fleet —
+/// the protected values (an mpsc receiver, plain counters) stay valid
+/// across an unwound panic, so recovering the guard is sound.
+fn lock_recover<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// One device thread: breaker gate → pull → linger/coalesce → seeded
+/// dispatch → respond.
+#[allow(clippy::too_many_arguments)]
 fn device_loop(
     solver: &mut dyn PoolSolver,
     rx: &Arc<Mutex<Receiver<SolveRequest>>>,
     metrics: &Arc<Mutex<PoolMetrics>>,
     dispatch: Option<Arc<DispatchCounters>>,
+    breaker: Option<DeviceBreakerHandle>,
+    quit: &Arc<AtomicBool>,
     max_coalesce: usize,
     linger: Duration,
 ) {
@@ -614,7 +702,31 @@ fn device_loop(
         // guard is a statement temporary, so the lock is dropped between
         // polls and is never held while lingering below.
         loop {
-            let polled = rx.lock().unwrap().recv_timeout(IDLE_POLL);
+            // breaker gate: a quarantined device pulls no work — healthy
+            // siblings absorb its share of the shared queue. The quit
+            // flag covers shutdown, since a quarantined thread never
+            // reaches the queue's disconnect signal below.
+            if let Some(b) = &breaker {
+                match b.fleet.action(b.device) {
+                    Action::Admit => {}
+                    Action::Cooldown(left) => {
+                        if quit.load(Ordering::SeqCst) {
+                            return;
+                        }
+                        std::thread::sleep(left.min(IDLE_POLL));
+                        continue;
+                    }
+                    Action::Probe => {
+                        if quit.load(Ordering::SeqCst) {
+                            return;
+                        }
+                        b.run_probe(solver);
+                        continue;
+                    }
+                    Action::Retired => return,
+                }
+            }
+            let polled = lock_recover(rx).recv_timeout(IDLE_POLL);
             match polled {
                 Ok(r) => {
                     batch.push(r);
@@ -628,7 +740,7 @@ fn device_loop(
         while batch.len() < max_coalesce {
             // bind first: a match-scrutinee temporary would keep the
             // guard alive through the sleep arm, serializing siblings
-            let polled = rx.lock().unwrap().try_recv();
+            let polled = lock_recover(rx).try_recv();
             match polled {
                 Ok(r) => batch.push(r),
                 Err(TryRecvError::Empty) => {
@@ -641,6 +753,23 @@ fn device_loop(
             }
         }
 
+        // drop requests whose deadline expired while queued: a typed
+        // reply instead of device time the client no longer wants
+        if batch.iter().any(|r| r.deadline.is_some_and(|d| d.expired())) {
+            let (dead, live): (Vec<_>, Vec<_>) = batch
+                .into_iter()
+                .partition(|r| r.deadline.is_some_and(|d| d.expired()));
+            lock_recover(metrics).expired += dead.len() as u64;
+            for r in dead {
+                let d = r.deadline.expect("partitioned on an expired deadline");
+                let _ = r.respond.try_send(Err(d.exceeded().into()));
+            }
+            batch = live;
+            if batch.is_empty() {
+                continue;
+            }
+        }
+
         let t0 = Instant::now();
         let groups: Vec<SeededGroup<'_>> = batch
             .iter()
@@ -649,7 +778,12 @@ fn device_loop(
                 seed: r.seed,
             })
             .collect();
-        let solved = solver.solve_groups(&groups);
+        // contain a panicking dispatch: the job fails, the device (and
+        // its siblings, via the poison-tolerant locks) keeps serving
+        let solved = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            solver.solve_groups(&groups)
+        }))
+        .unwrap_or_else(|_| Err(anyhow!("device solver panicked during dispatch")));
         drop(groups);
         let busy = t0.elapsed();
 
@@ -658,7 +792,7 @@ fn device_loop(
             d.record(batch.len() as u64, batch_instances);
         }
         {
-            let mut m = metrics.lock().unwrap();
+            let mut m = lock_recover(metrics);
             m.dispatches += 1;
             m.requests += batch.len() as u64;
             m.instances += batch_instances;
@@ -671,6 +805,11 @@ fn device_loop(
 
         match solved {
             Ok(per_group) => {
+                // one clean dispatch = one success sample (plus whatever
+                // verify failures the resilience wrapper fed the handle)
+                if let Some(b) = &breaker {
+                    b.record(true);
+                }
                 for (req, res) in batch.into_iter().zip(per_group) {
                     let _ = req.respond.try_send(Ok(res));
                 }
@@ -699,14 +838,22 @@ fn device_loop(
                         d.record(1, req.instances.len() as u64);
                     }
                     {
-                        let mut m = metrics.lock().unwrap();
+                        let mut m = lock_recover(metrics);
                         m.dispatches += 1;
                         m.busy_s += tr.elapsed().as_secs_f64();
+                    }
+                    // per-retry attribution: only the offending request's
+                    // failure lands in this device's breaker window
+                    if let Some(b) = &breaker {
+                        b.record(res.is_ok());
                     }
                     let _ = req.respond.try_send(res);
                 }
             }
             Err(e) => {
+                if let Some(b) = &breaker {
+                    b.record(false);
+                }
                 let msg = format!("pool dispatch on '{}' failed: {e:#}", solver.name());
                 for req in batch {
                     let _ = req.respond.try_send(Err(anyhow!("{msg}")));
@@ -982,6 +1129,148 @@ mod tests {
         let plain = DevicePool::start(&settings("tabu", 1), None).unwrap();
         assert!(plain.resilience_metrics().is_none());
         plain.shutdown();
+    }
+
+    #[test]
+    fn expired_requests_are_dropped_before_dispatch() {
+        let pool = DevicePool::start(&settings("tabu", 1), None).unwrap();
+        let mut client = pool.client(0xDEAD);
+        client.set_deadline(Some(crate::service::overload::Deadline::from_ms(0)));
+        let err = client
+            .submit(vec![quantized_glass(1, 10)])
+            .unwrap()
+            .wait()
+            .unwrap_err();
+        assert!(
+            err.downcast_ref::<crate::service::overload::DeadlineExceeded>()
+                .is_some(),
+            "expected a typed DeadlineExceeded, got: {err:#}"
+        );
+        // clearing the deadline restores normal service on the same client
+        client.set_deadline(None);
+        let res = client
+            .submit(vec![quantized_glass(1, 10)])
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(res.len(), 1);
+        drop(client);
+        let m = pool.metrics();
+        assert_eq!(m.expired, 1);
+        assert!(m.report().contains("expired=1"));
+        pool.shutdown();
+    }
+
+    #[test]
+    fn quiet_breaker_pool_serves_identically_and_reports_empty() {
+        let mut s = settings("tabu", 2);
+        s.sched.breaker.enabled = true;
+        let pool = DevicePool::start(&s, None).unwrap();
+        let instances: Vec<Ising> = (0..3).map(|k| quantized_glass(500 + k, 12)).collect();
+        let mut client = pool.client(0xFACE);
+        let with_breaker = client.submit(instances.clone()).unwrap().wait().unwrap();
+        drop(client);
+        let m = pool.breaker_metrics().expect("breaker metrics");
+        assert_eq!(m.devices, 2);
+        assert!(!m.any(), "healthy traffic must never trip: {m:?}");
+        pool.shutdown();
+
+        // determinism: the breaker is pure bookkeeping — byte-identical
+        // results to a breaker-less pool
+        let plain = DevicePool::start(&settings("tabu", 2), None).unwrap();
+        assert!(plain.breaker_metrics().is_none());
+        let mut client = plain.client(0xFACE);
+        let without = client.submit(instances).unwrap().wait().unwrap();
+        drop(client);
+        plain.shutdown();
+        for (a, b) in with_breaker.iter().zip(&without) {
+            assert_eq!(a.spins, b.spins);
+            assert_eq!(a.energy.to_bits(), b.energy.to_bits());
+        }
+    }
+
+    #[test]
+    fn dispatch_errors_trip_quarantine_probe_and_readmit() {
+        // cobi backend, resilience OFF: an unprogrammable instance makes
+        // every dispatch fail, feeding the breaker failure samples. The
+        // half-open probe runs the calibrator's small valid instances,
+        // which the device solves fine — so it readmits after cooldown.
+        let mut s = settings("cobi", 2);
+        s.sched.breaker.enabled = true;
+        s.sched.breaker.window = 4;
+        s.sched.breaker.trip_failures = 2;
+        s.sched.breaker.cooldown_ms = 10;
+        s.sched.breaker.max_trips = 100; // exercise readmission, not retirement
+        s.resilience.calibration_probes = 2; // fast half-open probes
+        let pool = DevicePool::start(&s, None).unwrap();
+        let handle = pool.handle();
+
+        let mut bad = Ising::new(10);
+        bad.h[0] = 0.5; // fractional: fails device validation every time
+        let mut client = handle.client(9);
+        for _ in 0..6 {
+            let r = client.submit(vec![bad.clone()]).unwrap().wait();
+            assert!(r.is_err());
+        }
+        let deadline = Instant::now() + Duration::from_secs(20);
+        while pool.breaker_metrics().unwrap().trips == 0 {
+            assert!(Instant::now() < deadline, "breaker never tripped");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // after cooldown the calibrator probe readmits the device(s)
+        while pool.breaker_metrics().unwrap().readmissions == 0 {
+            assert!(Instant::now() < deadline, "probe never readmitted");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // the pool still serves healthy traffic end to end
+        let res = client
+            .submit(vec![quantized_glass(700, 10)])
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(res.len(), 1);
+        drop(client);
+        drop(handle);
+        let m = pool.breaker_metrics().unwrap();
+        assert!(m.trips >= 1);
+        assert!(m.probes >= 1);
+        assert!(m.readmissions >= 1);
+        assert!(m.any());
+        assert!(m.report().contains("trips"));
+        pool.shutdown(); // must not hang with breakers installed
+    }
+
+    #[test]
+    fn fully_quarantined_pool_shuts_down_cleanly() {
+        // both devices quarantined under a long cooldown: shutdown must
+        // still join them via the quit flag (they never see the queue
+        // disconnect)
+        let mut s = settings("cobi", 2);
+        s.sched.breaker.enabled = true;
+        s.sched.breaker.window = 2;
+        s.sched.breaker.trip_failures = 1;
+        s.sched.breaker.cooldown_ms = 60_000;
+        let pool = DevicePool::start(&s, None).unwrap();
+        let handle = pool.handle();
+        let mut bad = Ising::new(8);
+        bad.h[0] = 0.5;
+        let mut client = handle.client(1);
+        // trip both devices (each failure trips whichever device served
+        // it). Don't wait on the replies: once both devices quarantine,
+        // queued requests would block a waiter for the whole cooldown —
+        // abandoning the pendings also exercises the graceful
+        // failed-reply path (dropped receiver, device try_send ignored).
+        let deadline = Instant::now() + Duration::from_secs(20);
+        let mut pendings = Vec::new();
+        while pool.breaker_metrics().unwrap().open < 2 {
+            assert!(Instant::now() < deadline, "devices never quarantined");
+            pendings.push(client.submit(vec![bad.clone()]).unwrap());
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        drop(pendings);
+        drop(client);
+        drop(handle);
+        pool.shutdown(); // must return promptly despite the 60s cooldown
     }
 
     #[test]

@@ -16,7 +16,7 @@ use crate::decompose::Strategy;
 use crate::obs::ObsMetrics;
 use crate::portfolio::PortfolioMetrics;
 use crate::resilience::ResilienceMetrics;
-use crate::sched::PoolMetrics;
+use crate::sched::{BreakerMetrics, PoolMetrics};
 use crate::util::rng::Pcg32;
 
 const RESERVOIR: usize = 4096;
@@ -73,6 +73,58 @@ impl StrategyMetrics {
             ));
         }
         out
+    }
+}
+
+/// Overload-safety counters: deadline expiries, admission-control sheds,
+/// contained worker panics and graceful-drain accounting. The block is
+/// always present (not an `Option`) but all-zero under the defaults-off
+/// config, and every report fragment is gated on [`any`], so a quiet
+/// service's output stays byte-identical to a pre-overload build.
+///
+/// [`any`]: OverloadMetrics::any
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct OverloadMetrics {
+    /// Requests failed because their deadline expired before (or while
+    /// queued for) solving.
+    pub deadline_exceeded: u64,
+    /// Batch-tier requests shed by admission control (`ERR RETRY`).
+    pub shed_batch: u64,
+    /// Interactive-tier requests shed (hard watermark, or a full queue
+    /// while shedding is enabled).
+    pub shed_interactive: u64,
+    /// Worker solve calls that panicked — contained: the request failed,
+    /// the worker kept serving.
+    pub worker_panics: u64,
+    /// Graceful drains begun (`::DRAIN::` frame or shutdown).
+    pub drains: u64,
+    /// In-flight requests still unfinished when a drain deadline expired.
+    pub drain_aborted: u64,
+}
+
+impl OverloadMetrics {
+    /// Did any overload machinery fire?
+    pub fn any(&self) -> bool {
+        self.deadline_exceeded > 0
+            || self.shed_batch > 0
+            || self.shed_interactive > 0
+            || self.worker_panics > 0
+            || self.drains > 0
+            || self.drain_aborted > 0
+    }
+
+    /// One-line report fragment.
+    pub fn report(&self) -> String {
+        format!(
+            "overload: deadline_exceeded={} shed_batch={} shed_interactive={} \
+             worker_panics={} drains={} drain_aborted={}",
+            self.deadline_exceeded,
+            self.shed_batch,
+            self.shed_interactive,
+            self.worker_panics,
+            self.drains,
+            self.drain_aborted,
+        )
     }
 }
 
@@ -249,6 +301,11 @@ pub struct ServiceMetrics {
     /// counters. `None` only on detached default blocks; a running
     /// `Service` always fills it.
     pub obs: Option<ObsMetrics>,
+    /// Overload-safety counters (all-zero under the defaults-off config).
+    pub overload: OverloadMetrics,
+    /// Circuit-breaker fleet snapshot. `None` unless
+    /// `[sched] breaker_enabled = true`.
+    pub breaker: Option<BreakerMetrics>,
 }
 
 impl ServiceMetrics {
@@ -305,6 +362,16 @@ impl ServiceMetrics {
             if o.any() {
                 out.push_str(" | ");
                 out.push_str(&o.report());
+            }
+        }
+        if self.overload.any() {
+            out.push_str(" | ");
+            out.push_str(&self.overload.report());
+        }
+        if let Some(b) = &self.breaker {
+            if b.any() {
+                out.push_str(" | ");
+                out.push_str(&b.report());
             }
         }
         out
@@ -509,6 +576,36 @@ mod tests {
         assert!(report.contains("resilience: requests=4 replicas=12"), "{report}");
         assert!(report.contains("disagree=2"), "{report}");
         assert!(report.contains("faults solves=3 stuck=5"), "{report}");
+    }
+
+    #[test]
+    fn overload_and_breaker_blocks_stay_quiet_until_they_fire() {
+        let mut m = ServiceMetrics::default();
+        assert!(!m.overload.any());
+        assert!(!m.report().contains("overload:"), "quiet block must not print");
+        assert!(!m.report().contains("breaker:"), "absent block must not print");
+        m.overload.shed_batch = 3;
+        m.overload.drains = 1;
+        let r = m.report();
+        assert!(r.contains("overload:"), "{r}");
+        assert!(r.contains("shed_batch=3"), "{r}");
+        // a breaker snapshot with no activity also stays quiet
+        m.breaker = Some(BreakerMetrics {
+            devices: 2,
+            ..Default::default()
+        });
+        assert!(!m.report().contains("breaker:"), "{}", m.report());
+        m.breaker = Some(BreakerMetrics {
+            devices: 2,
+            open: 1,
+            trips: 4,
+            probes: 2,
+            readmissions: 1,
+            ..Default::default()
+        });
+        let r = m.report();
+        assert!(r.contains("breaker: 1/2 open"), "{r}");
+        assert!(r.contains("4 trips"), "{r}");
     }
 
     #[test]

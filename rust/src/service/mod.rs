@@ -25,13 +25,14 @@
 //! §Portfolio, and docs/ARCHITECTURE.md for the request walkthrough.
 
 pub mod metrics;
+pub mod overload;
 pub mod tcp;
 pub mod worker;
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
@@ -44,13 +45,37 @@ use crate::runtime::ArtifactRuntime;
 use crate::sched::pool::PoolSolver;
 use crate::sched::{self, DevicePool, PoolClient, StreamRoute, StreamSummarizer};
 
-pub use metrics::{ServiceMetrics, StrategyMetrics};
+pub use metrics::{OverloadMetrics, ServiceMetrics, StrategyMetrics};
+pub use overload::{AdmissionController, Deadline, DeadlineExceeded, Shed, Tier};
 use worker::{spawn_workers, Job, SolveRoute};
 
 /// Rejected-due-to-backpressure error marker.
 #[derive(Debug, thiserror::Error)]
 #[error("service queue full (backpressure): retry later")]
 pub struct Overloaded;
+
+/// Per-request submission options: the admission tier (batch sheds
+/// first under pressure — DESIGN.md decision #20) and an optional
+/// end-to-end deadline. `Default` is an interactive request with the
+/// configured `[service] default_deadline_ms` (none when 0).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SubmitOptions {
+    /// Admission tier; batch is shed before interactive under overload.
+    pub tier: Tier,
+    /// Explicit deadline; `None` applies the configured default.
+    pub deadline: Option<Deadline>,
+}
+
+/// Outcome of a graceful drain (see [`Service::drain`]).
+#[derive(Debug, Clone, Copy)]
+pub struct DrainStats {
+    /// In-flight requests that finished inside the drain window.
+    pub clean: usize,
+    /// Requests still in flight when the window closed.
+    pub aborted: usize,
+    /// Time spent waiting for the queue to empty.
+    pub waited: Duration,
+}
 
 /// Client-side handle for one submitted request.
 pub struct Ticket {
@@ -186,6 +211,11 @@ pub struct Service {
     /// Observability: span collector + energy ledger + dispatch counters
     /// shared with the pool, workers and stream sessions.
     obs: ObsShared,
+    /// Admission controller: load-shedding by tier when the estimated
+    /// queue wait exceeds `[service] shed_watermark_ms` (inert at 0).
+    admission: Arc<AdmissionController>,
+    /// Set once a drain begins; submissions are rejected from then on.
+    draining: Arc<AtomicBool>,
     /// Retained for late construction of stream-session solvers.
     settings: Settings,
 }
@@ -221,6 +251,12 @@ impl Service {
             None => SolveRoute::Local,
         };
 
+        // the retry-after jitter stream is seeded from the pipeline seed,
+        // so shed hints are reproducible run-to-run like everything else
+        let admission = Arc::new(AdmissionController::from_config(
+            &settings.service,
+            settings.pipeline.seed,
+        ));
         let workers = spawn_workers(
             settings,
             rx,
@@ -231,6 +267,7 @@ impl Service {
             rt,
             resilience.as_ref(),
             &obs,
+            admission.clone(),
         )?;
         Ok(Self {
             tx,
@@ -243,6 +280,8 @@ impl Service {
             pool,
             resilience,
             obs,
+            admission,
+            draining: Arc::new(AtomicBool::new(false)),
             settings: settings.clone(),
         })
     }
@@ -278,6 +317,7 @@ impl Service {
                     None,
                     self.resilience.as_ref(),
                     Some((&self.obs, crate::obs::Subsystem::Stream)),
+                    None,
                 )
                 .map_err(|e| {
                     anyhow::anyhow!(
@@ -304,9 +344,37 @@ impl Service {
         })
     }
 
-    /// Submit a document; non-blocking. Errors with [`Overloaded`] when
-    /// the queue is full (backpressure) instead of buffering unboundedly.
+    /// Submit a document with default options (interactive tier, the
+    /// configured default deadline); non-blocking. Errors with
+    /// [`Overloaded`] when the queue is full (backpressure) instead of
+    /// buffering unboundedly.
     pub fn submit(&self, doc: Document) -> Result<Ticket> {
+        self.submit_with(doc, SubmitOptions::default())
+    }
+
+    /// Submit a document with an explicit tier and deadline; non-blocking.
+    ///
+    /// Rejection order under pressure (DESIGN.md decision #20): a
+    /// draining service rejects everything; the admission controller
+    /// sheds batch traffic at the configured watermark and interactive
+    /// traffic only at 4x the watermark (typed [`Shed`] carrying a
+    /// seeded retry-after hint); a full queue is the hard cap — it sheds
+    /// whatever arrives, reported as [`Shed`] when admission control is
+    /// on and [`Overloaded`] otherwise.
+    pub fn submit_with(&self, doc: Document, opts: SubmitOptions) -> Result<Ticket> {
+        if self.draining.load(Ordering::SeqCst) {
+            self.metrics.lock().unwrap().rejected += 1;
+            bail!("service draining: not accepting new requests");
+        }
+        let workers = self.settings.service.workers.max(1);
+        if let Err(shed) = self.admission.admit(opts.tier, self.inflight(), workers) {
+            self.count_shed(opts.tier);
+            return Err(shed.into());
+        }
+        let deadline = opts.deadline.or_else(|| {
+            let ms = self.settings.service.default_deadline_ms;
+            (ms > 0).then(|| Deadline::from_ms(ms))
+        });
         let id = self.next_id.fetch_add(1, Ordering::Relaxed) as u64;
         let (otx, orx) = sync_channel(1);
         let job = Job {
@@ -314,6 +382,8 @@ impl Service {
             doc,
             respond: otx,
             enqueued: Instant::now(),
+            tier: opts.tier,
+            deadline,
         };
         match self.tx.try_send(job) {
             Ok(()) => {
@@ -326,10 +396,25 @@ impl Service {
                 })
             }
             Err(TrySendError::Full(_)) => {
-                self.metrics.lock().unwrap().rejected += 1;
-                Err(Overloaded.into())
+                if self.admission.enabled() {
+                    self.count_shed(opts.tier);
+                    Err(self.admission.shed(opts.tier).into())
+                } else {
+                    self.metrics.lock().unwrap().rejected += 1;
+                    Err(Overloaded.into())
+                }
             }
             Err(TrySendError::Disconnected(_)) => bail!("service stopped"),
+        }
+    }
+
+    /// Count one shed rejection against the tier's overload counter.
+    fn count_shed(&self, tier: Tier) {
+        let mut m = self.metrics.lock().unwrap();
+        m.rejected += 1;
+        match tier {
+            Tier::Batch => m.overload.shed_batch += 1,
+            Tier::Interactive => m.overload.shed_interactive += 1,
         }
     }
 
@@ -343,6 +428,49 @@ impl Service {
         self.queue_depth
     }
 
+    /// True once a drain has begun — submissions are rejected.
+    pub fn draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+
+    /// Configured per-connection idle/read timeout (`None` when 0).
+    pub fn idle_timeout(&self) -> Option<Duration> {
+        let ms = self.settings.service.idle_timeout_ms;
+        (ms > 0).then(|| Duration::from_millis(ms))
+    }
+
+    /// Configured inbound document size cap (`None` when 0).
+    pub fn max_doc_bytes(&self) -> Option<usize> {
+        let b = self.settings.service.max_doc_bytes;
+        (b > 0).then_some(b)
+    }
+
+    /// Graceful drain: stop admitting new requests, then wait up to
+    /// `limit` for the in-flight ones to finish. Every request accepted
+    /// before the drain either completes normally or (past the window)
+    /// is failed fast by the stopping workers — its reply channel is
+    /// answered either way, so no client hangs on a lost response.
+    pub fn drain(&self, limit: Duration) -> DrainStats {
+        let start = Instant::now();
+        let first = !self.draining.swap(true, Ordering::SeqCst);
+        if first {
+            self.metrics.lock().unwrap().overload.drains += 1;
+        }
+        let initial = self.inflight();
+        while self.inflight() > 0 && start.elapsed() < limit {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let aborted = self.inflight();
+        if aborted > 0 {
+            self.metrics.lock().unwrap().overload.drain_aborted += aborted as u64;
+        }
+        DrainStats {
+            clean: initial.saturating_sub(aborted),
+            aborted,
+            waited: start.elapsed(),
+        }
+    }
+
     /// Metrics snapshot, including the device-pool counters (and, when
     /// enabled, the solver portfolio's route/cache telemetry and the
     /// resilience layer's replication/vote/retry/fault counters).
@@ -352,6 +480,7 @@ impl Service {
             m.pool = pool.metrics();
             m.portfolio = pool.portfolio_metrics();
             m.resilience = pool.resilience_metrics();
+            m.breaker = pool.breaker_metrics();
         } else if let Some(r) = &self.resilience {
             m.resilience = Some(r.snapshot());
         }
@@ -370,8 +499,13 @@ impl Service {
         self.pool.is_some()
     }
 
-    /// Graceful shutdown: stop accepting, drain workers, then the pool.
+    /// Graceful shutdown: drain in-flight work under the configured
+    /// `[service] drain_deadline_ms` window, then stop the workers and
+    /// the pool. Requests that outlive the window are failed fast by the
+    /// stopping workers — answered, not dropped.
     pub fn shutdown(self) {
+        let limit = Duration::from_millis(self.settings.service.drain_deadline_ms.max(1));
+        let _ = self.drain(limit);
         self.stop.store(true, Ordering::SeqCst);
         drop(self.tx); // closes the queue; workers exit after draining
         for w in self.workers {
@@ -691,6 +825,102 @@ mod tests {
         assert!(t.wait().is_err());
         let m = svc.metrics();
         assert_eq!(m.failed, 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn admission_sheds_batch_before_interactive() {
+        let mut settings = test_settings();
+        settings.service.workers = 1;
+        settings.service.shed_watermark_ms = 150;
+        let svc = Service::start(&settings).unwrap();
+        let set = benchmark_set("bench_10").unwrap();
+        // warm the wait estimator and pin a synthetic backlog so the
+        // admit decision is deterministic (no races against real solves):
+        // estimated wait = 5 inflight x 100ms / 1 worker = 500ms, which
+        // is past the 150ms batch watermark but inside the 600ms
+        // interactive limit (4x)
+        svc.admission.observe_solve(Duration::from_millis(100));
+        svc.inflight.fetch_add(4, Ordering::Relaxed);
+        let batch = SubmitOptions {
+            tier: Tier::Batch,
+            ..Default::default()
+        };
+        let err = svc.submit_with(set.documents[0].clone(), batch).unwrap_err();
+        let shed = err.downcast_ref::<Shed>().expect("typed Shed error");
+        assert_eq!(shed.tier, Tier::Batch);
+        assert!(
+            shed.retry_after_ms >= 150 && shed.retry_after_ms < 300,
+            "retry hint {} outside [watermark, 2*watermark)",
+            shed.retry_after_ms
+        );
+        // the same instant, an interactive request still gets in
+        let t = svc
+            .submit_with(set.documents[1].clone(), SubmitOptions::default())
+            .unwrap();
+        assert_eq!(t.wait().unwrap().selected.len(), 3);
+        let m = svc.metrics();
+        assert_eq!(m.rejected, 1);
+        assert_eq!(m.overload.shed_batch, 1);
+        assert_eq!(m.overload.shed_interactive, 0);
+        assert!(m.report().contains("shed_batch=1"), "{}", m.report());
+        svc.inflight.fetch_sub(4, Ordering::Relaxed);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn expired_deadlines_get_typed_replies_and_counters() {
+        let svc = Service::start(&test_settings()).unwrap();
+        let set = benchmark_set("bench_10").unwrap();
+        let opts = SubmitOptions {
+            deadline: Some(Deadline::from_ms(0)),
+            ..Default::default()
+        };
+        let t = svc.submit_with(set.documents[0].clone(), opts).unwrap();
+        let err = t.wait().unwrap_err();
+        assert!(
+            err.downcast_ref::<DeadlineExceeded>().is_some(),
+            "want DeadlineExceeded, got: {err}"
+        );
+        let m = svc.metrics();
+        assert_eq!(m.overload.deadline_exceeded, 1);
+        assert_eq!(m.failed, 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn default_deadline_from_config_is_generous_enough_to_serve() {
+        let mut settings = test_settings();
+        settings.service.default_deadline_ms = 60_000;
+        let svc = Service::start(&settings).unwrap();
+        let set = benchmark_set("bench_10").unwrap();
+        let t = svc.submit(set.documents[0].clone()).unwrap();
+        assert_eq!(t.wait().unwrap().selected.len(), 3);
+        assert_eq!(svc.metrics().overload.deadline_exceeded, 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn drain_finishes_inflight_and_rejects_new_work() {
+        let svc = Service::start(&test_settings()).unwrap();
+        let set = benchmark_set("bench_10").unwrap();
+        let tickets: Vec<Ticket> = set.documents[..4]
+            .iter()
+            .map(|d| svc.submit(d.clone()).unwrap())
+            .collect();
+        let stats = svc.drain(Duration::from_secs(30));
+        assert_eq!(stats.aborted, 0, "in-flight work must finish in-window");
+        assert!(svc.draining());
+        let err = svc.submit(set.documents[5].clone()).unwrap_err();
+        assert!(err.to_string().contains("draining"), "{err}");
+        // zero lost responses: every accepted request answers
+        for t in tickets {
+            assert_eq!(t.wait().unwrap().selected.len(), 3);
+        }
+        let m = svc.metrics();
+        assert_eq!(m.completed, 4);
+        assert_eq!(m.overload.drains, 1);
+        assert_eq!(m.overload.drain_aborted, 0);
         svc.shutdown();
     }
 }

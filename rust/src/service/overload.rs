@@ -1,0 +1,286 @@
+//! Overload-safety primitives for the serving layer: request deadlines,
+//! the two-tier admission controller, and typed shed/deadline errors.
+//!
+//! Everything here defaults OFF: with `[service] default_deadline_ms = 0`
+//! and `shed_watermark_ms = 0` no request carries a deadline and no
+//! request is ever shed, so the defaults-off serving path is
+//! byte-identical to every pre-overload release (the determinism pin in
+//! `tests/chaos_service.rs` holds the system to it).
+//!
+//! Policy (DESIGN.md decision #20): **batch sheds first**. When the
+//! estimated queue wait crosses the watermark, batch/backfill-tier
+//! requests are rejected with a `RETRY <after_ms>` hint; interactive
+//! requests keep flowing until [`INTERACTIVE_SHED_FACTOR`] times the
+//! watermark, and the bounded job queue itself is the final hard cap for
+//! both tiers. Retry hints carry seeded jitter drawn from a dedicated
+//! RNG stream so a thundering herd of shed clients decorrelates — and a
+//! test can still replay the exact hint sequence.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::config::ServiceConfig;
+use crate::util::rng::Pcg32;
+
+/// RNG stream id for the seeded retry-after jitter (audited for
+/// uniqueness by `util::rng::rng_stream_ids_are_pairwise_distinct`).
+pub(crate) const RETRY_JITTER_STREAM: u64 = 0x4E77_12A1;
+
+/// Interactive requests are shed only when the estimated queue wait
+/// exceeds `INTERACTIVE_SHED_FACTOR *` the configured watermark — the
+/// "shed batch first, interactive last" policy knob.
+pub const INTERACTIVE_SHED_FACTOR: u64 = 4;
+
+/// Request priority tier for admission control. Interactive is the
+/// default and the last to be shed; batch/backfill traffic (tagged with
+/// the TCP `::BATCH::` header) sheds first under pressure.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Tier {
+    /// Latency-sensitive foreground traffic (default).
+    #[default]
+    Interactive,
+    /// Backfill / bulk traffic: first to shed under pressure.
+    Batch,
+}
+
+impl Tier {
+    /// Stable lowercase label (metrics, span attributes, errors).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Tier::Interactive => "interactive",
+            Tier::Batch => "batch",
+        }
+    }
+}
+
+impl fmt::Display for Tier {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// An absolute per-request deadline plus the budget it was derived from
+/// (kept so the typed error can report what the client asked for).
+#[derive(Clone, Copy, Debug)]
+pub struct Deadline {
+    at: Instant,
+    budget_ms: u64,
+}
+
+impl Deadline {
+    /// Deadline `budget_ms` milliseconds from now. A zero budget is
+    /// already expired — useful for "reject unless immediate" probes.
+    pub fn from_ms(budget_ms: u64) -> Self {
+        Self {
+            at: Instant::now() + Duration::from_millis(budget_ms),
+            budget_ms,
+        }
+    }
+
+    /// The originally requested budget in milliseconds.
+    pub fn budget_ms(&self) -> u64 {
+        self.budget_ms
+    }
+
+    /// Has the deadline passed?
+    pub fn expired(&self) -> bool {
+        Instant::now() >= self.at
+    }
+
+    /// The typed error a stage returns instead of working past the
+    /// deadline.
+    pub fn exceeded(&self) -> DeadlineExceeded {
+        DeadlineExceeded {
+            budget_ms: self.budget_ms,
+        }
+    }
+}
+
+/// Typed error for a request whose deadline passed before (or during)
+/// solving. Workers check before the solve, the pooled executor before
+/// every pipeline stage, and pool devices before dispatch — so a dead
+/// request never burns device time.
+#[derive(Debug, thiserror::Error)]
+#[error("deadline exceeded (budget {budget_ms} ms)")]
+pub struct DeadlineExceeded {
+    /// The request's deadline budget in milliseconds.
+    pub budget_ms: u64,
+}
+
+/// Typed error for a request rejected by admission control (or the hard
+/// queue cap while shedding is enabled). The TCP layer renders it as
+/// `ERR RETRY <after_ms>`.
+#[derive(Debug, thiserror::Error)]
+#[error("overloaded ({tier}): retry after {retry_after_ms} ms")]
+pub struct Shed {
+    /// Tier of the rejected request.
+    pub tier: Tier,
+    /// Client backoff hint in milliseconds (watermark base + seeded
+    /// jitter).
+    pub retry_after_ms: u64,
+}
+
+/// Watermark-based two-tier admission controller.
+///
+/// Queue wait is estimated with Little's law over live counters:
+/// `inflight * ema(solve time) / workers`. The estimate feeds from the
+/// workers' measured solve times (EMA, α = 1/8), so it needs one
+/// completed request to warm up — a cold service admits everything,
+/// which is the safe direction.
+pub struct AdmissionController {
+    watermark_ms: u64,
+    ema_solve_us: AtomicU64,
+    jitter: Mutex<Pcg32>,
+}
+
+impl AdmissionController {
+    /// Controller from `[service]` settings; `seed` keys the jitter
+    /// stream (the pipeline master seed, so hint sequences replay).
+    pub fn from_config(cfg: &ServiceConfig, seed: u64) -> Self {
+        Self {
+            watermark_ms: cfg.shed_watermark_ms,
+            ema_solve_us: AtomicU64::new(0),
+            jitter: Mutex::new(Pcg32::new(seed, RETRY_JITTER_STREAM)),
+        }
+    }
+
+    /// Is shedding configured at all (watermark > 0)?
+    pub fn enabled(&self) -> bool {
+        self.watermark_ms > 0
+    }
+
+    /// Feed one measured solve time into the wait estimator.
+    pub fn observe_solve(&self, took: Duration) {
+        let us = took.as_micros().min(u128::from(u64::MAX)) as u64;
+        // racy EMA is fine: this is an advisory load signal, not a metric
+        let prev = self.ema_solve_us.load(Ordering::Relaxed);
+        let next = if prev == 0 { us } else { (prev * 7 + us) / 8 };
+        self.ema_solve_us.store(next, Ordering::Relaxed);
+    }
+
+    /// Estimated queue wait in milliseconds for a request arriving now.
+    pub fn estimated_wait_ms(&self, inflight: usize, workers: usize) -> u64 {
+        let ema_us = self.ema_solve_us.load(Ordering::Relaxed);
+        (inflight as u64).saturating_mul(ema_us) / (workers.max(1) as u64) / 1_000
+    }
+
+    /// Admit or shed one request. Batch tier sheds past the watermark;
+    /// interactive holds out to [`INTERACTIVE_SHED_FACTOR`]× it.
+    pub fn admit(&self, tier: Tier, inflight: usize, workers: usize) -> Result<(), Shed> {
+        if !self.enabled() {
+            return Ok(());
+        }
+        let est = self.estimated_wait_ms(inflight, workers);
+        let limit = match tier {
+            Tier::Batch => self.watermark_ms,
+            Tier::Interactive => self.watermark_ms.saturating_mul(INTERACTIVE_SHED_FACTOR),
+        };
+        if est > limit {
+            Err(self.shed(tier))
+        } else {
+            Ok(())
+        }
+    }
+
+    /// Build the typed shed error with the next backoff hint.
+    pub fn shed(&self, tier: Tier) -> Shed {
+        Shed {
+            tier,
+            retry_after_ms: self.retry_after_ms(),
+        }
+    }
+
+    /// Next backoff hint: watermark base (min 25 ms) plus one seeded
+    /// jitter draw in `[0, base)` — deterministic sequence per service.
+    pub fn retry_after_ms(&self) -> u64 {
+        let base = self.watermark_ms.max(25);
+        let mut rng = self
+            .jitter
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        base + rng.next_u64() % base
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn controller(watermark_ms: u64) -> AdmissionController {
+        let cfg = ServiceConfig {
+            shed_watermark_ms: watermark_ms,
+            ..Default::default()
+        };
+        AdmissionController::from_config(&cfg, 0xC0B1)
+    }
+
+    #[test]
+    fn zero_budget_deadline_is_immediately_expired() {
+        let d = Deadline::from_ms(0);
+        assert!(d.expired());
+        assert_eq!(d.exceeded().budget_ms, 0);
+        // a generous budget is not expired at birth
+        assert!(!Deadline::from_ms(60_000).expired());
+    }
+
+    #[test]
+    fn disabled_controller_admits_everything() {
+        let c = controller(0);
+        assert!(!c.enabled());
+        c.observe_solve(Duration::from_millis(500));
+        assert!(c.admit(Tier::Batch, 10_000, 1).is_ok());
+        assert!(c.admit(Tier::Interactive, 10_000, 1).is_ok());
+    }
+
+    #[test]
+    fn cold_controller_admits_until_the_estimator_warms() {
+        // no observed solves yet -> estimate 0 -> admit both tiers
+        let c = controller(10);
+        assert!(c.admit(Tier::Batch, 64, 1).is_ok());
+        assert!(c.admit(Tier::Interactive, 64, 1).is_ok());
+    }
+
+    #[test]
+    fn batch_sheds_first_interactive_last() {
+        let c = controller(10);
+        c.observe_solve(Duration::from_millis(20));
+        // est = 1 * 20ms / 1 = 20ms: past the batch watermark (10),
+        // under the interactive limit (40)
+        let shed = c.admit(Tier::Batch, 1, 1).unwrap_err();
+        assert_eq!(shed.tier, Tier::Batch);
+        assert!(shed.retry_after_ms >= 25);
+        assert!(c.admit(Tier::Interactive, 1, 1).is_ok());
+        // est = 3 * 20ms = 60ms: past both limits
+        assert!(c.admit(Tier::Interactive, 3, 1).is_err());
+        // more workers divide the estimate back under the limits
+        assert!(c.admit(Tier::Batch, 1, 4).is_ok());
+    }
+
+    #[test]
+    fn retry_hints_are_seeded_and_bounded() {
+        let a = controller(40);
+        let b = controller(40);
+        let hints: Vec<u64> = (0..16).map(|_| a.retry_after_ms()).collect();
+        let replay: Vec<u64> = (0..16).map(|_| b.retry_after_ms()).collect();
+        assert_eq!(hints, replay, "hint sequence must replay from the seed");
+        assert!(hints.iter().all(|&h| (40..80).contains(&h)), "{hints:?}");
+        assert!(
+            hints.windows(2).any(|w| w[0] != w[1]),
+            "jitter must actually vary: {hints:?}"
+        );
+    }
+
+    #[test]
+    fn error_displays_are_protocol_stable() {
+        let d = DeadlineExceeded { budget_ms: 250 };
+        assert_eq!(d.to_string(), "deadline exceeded (budget 250 ms)");
+        let s = Shed {
+            tier: Tier::Batch,
+            retry_after_ms: 60,
+        };
+        assert_eq!(s.to_string(), "overloaded (batch): retry after 60 ms");
+        assert_eq!(Tier::default(), Tier::Interactive);
+    }
+}

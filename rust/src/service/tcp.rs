@@ -36,7 +36,8 @@ use anyhow::{Context, Result};
 
 use crate::corpus::Document;
 
-use super::Service;
+use super::overload::{Deadline, Shed, Tier};
+use super::{Service, SubmitOptions};
 
 /// Terminates a document (and closes a stream session).
 pub const EOF_MARKER: &str = "::EOF::";
@@ -50,12 +51,22 @@ pub const METRICS_MARKER: &str = "::METRICS::";
 pub const STREAM_MARKER: &str = "::STREAM::";
 /// Ends one stream chunk and requests a summary revision.
 pub const CHUNK_MARKER: &str = "::CHUNK::";
+/// Header-line prefix carrying the request deadline: `::DEADLINE <ms>::`
+/// before the document text.
+pub const DEADLINE_PREFIX: &str = "::DEADLINE ";
+/// Header line tagging the request batch-tier (first to shed under
+/// pressure); sent before the document text.
+pub const BATCH_MARKER: &str = "::BATCH::";
+/// Admin frame requesting a graceful drain: the server stops accepting
+/// new connections and the serve loop finishes in-flight work.
+pub const DRAIN_MARKER: &str = "::DRAIN::";
 
 /// A running TCP endpoint over a Service.
 pub struct TcpServer {
     /// Bound listen address.
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
+    drain: Arc<AtomicBool>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -67,16 +78,19 @@ impl TcpServer {
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
+        let drain = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
+        let drain2 = drain.clone();
         let accept_thread = std::thread::Builder::new()
             .name("cobi-tcp-accept".into())
             .spawn(move || {
                 let mut conn_id = 0u64;
-                while !stop2.load(Ordering::SeqCst) {
+                while !stop2.load(Ordering::SeqCst) && !drain2.load(Ordering::SeqCst) {
                     match listener.accept() {
                         Ok((stream, _)) => {
                             conn_id += 1;
                             let svc = service.clone();
+                            let drain = drain2.clone();
                             let id = conn_id;
                             // one thread per connection: edge workloads are
                             // low-concurrency; the Service queue is the
@@ -84,7 +98,7 @@ impl TcpServer {
                             let _ = std::thread::Builder::new()
                                 .name(format!("cobi-tcp-conn-{id}"))
                                 .spawn(move || {
-                                    let _ = handle_connection(&svc, stream, id);
+                                    let _ = handle_connection(&svc, stream, id, &drain);
                                 });
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -97,8 +111,16 @@ impl TcpServer {
         Ok(Self {
             addr,
             stop,
+            drain,
             accept_thread: Some(accept_thread),
         })
+    }
+
+    /// True once a `::DRAIN::` admin frame arrived (or
+    /// [`TcpServer::shutdown`] ran): the accept loop has stopped taking
+    /// new connections and the serve loop should drain the service.
+    pub fn drain_requested(&self) -> bool {
+        self.drain.load(Ordering::SeqCst)
     }
 
     /// Stop accepting and join the accept thread.
@@ -108,17 +130,50 @@ impl TcpServer {
             let _ = t.join();
         }
     }
+
+    /// Graceful shutdown: stop accepting new connections (like a
+    /// `::DRAIN::` frame) and join the accept thread. The caller then
+    /// drains the [`Service`] itself so in-flight requests finish.
+    pub fn shutdown(self) {
+        self.drain.store(true, Ordering::SeqCst);
+        self.stop();
+    }
 }
 
-fn handle_connection(service: &Service, stream: TcpStream, id: u64) -> Result<()> {
-    stream.set_read_timeout(Some(std::time::Duration::from_secs(30)))?;
+/// Is this read error the connection idle-timeout firing?
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
+}
+
+fn handle_connection(
+    service: &Service,
+    stream: TcpStream,
+    id: u64,
+    drain: &Arc<AtomicBool>,
+) -> Result<()> {
+    stream.set_read_timeout(service.idle_timeout())?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut text = String::new();
     let mut line = String::new();
     let mut first = true;
+    let mut opts = SubmitOptions::default();
+    let cap = service.max_doc_bytes();
     loop {
         line.clear();
-        let n = reader.read_line(&mut line)?;
+        let n = match reader.read_line(&mut line) {
+            Ok(n) => n,
+            Err(e) if is_timeout(&e) => {
+                // slow-loris / stalled writer: answer and hang up rather
+                // than pinning a connection thread forever
+                let mut out = stream;
+                let _ = writeln!(out, "ERR idle timeout");
+                return Ok(());
+            }
+            Err(e) => return Err(e.into()),
+        };
         if first && line.trim_end() == STATS_MARKER {
             let mut out = stream;
             writeln!(out, "OK 1")?;
@@ -141,16 +196,62 @@ fn handle_connection(service: &Service, stream: TcpStream, id: u64) -> Result<()
         if first && line.trim_end() == STREAM_MARKER {
             return handle_stream_session(service, reader, stream, id);
         }
+        if first && line.trim_end() == DRAIN_MARKER {
+            // admin frame: stop accepting; the serve loop notices the
+            // flag (`drain_requested`) and drains the service
+            drain.store(true, Ordering::SeqCst);
+            let mut out = stream;
+            writeln!(out, "OK 0")?;
+            return Ok(());
+        }
         first = false;
-        if n == 0 || line.trim_end() == EOF_MARKER {
+        let trimmed = line.trim_end();
+        if n == 0 || trimmed == EOF_MARKER {
             break;
+        }
+        // header lines before the document body
+        if let Some(rest) = trimmed.strip_prefix(DEADLINE_PREFIX) {
+            match rest.strip_suffix("::").map(str::trim).map(str::parse::<u64>) {
+                Some(Ok(ms)) => {
+                    opts.deadline = Some(Deadline::from_ms(ms));
+                    continue;
+                }
+                _ => {
+                    let mut out = stream;
+                    writeln!(out, "ERR bad deadline header: {trimmed}")?;
+                    return Ok(());
+                }
+            }
+        }
+        if trimmed == BATCH_MARKER {
+            opts.tier = Tier::Batch;
+            continue;
+        }
+        if trimmed.starts_with("::") && trimmed.ends_with("::") && trimmed.len() > 4 {
+            // any other ::marker:: here is a protocol error (::CHUNK::
+            // without ::STREAM::, mid-document ::STATS::, typos): answer
+            // cleanly instead of summarizing the marker as text
+            let mut out = stream;
+            writeln!(out, "ERR unknown marker: {trimmed}")?;
+            return Ok(());
+        }
+        if let Some(cap) = cap {
+            if text.len() + line.len() > cap {
+                let mut out = stream;
+                writeln!(out, "ERR document too large (over {cap} bytes)")?;
+                return Ok(());
+            }
         }
         text.push_str(&line);
     }
     let mut out = stream;
+    if text.trim().is_empty() {
+        writeln!(out, "ERR empty document")?;
+        return Ok(());
+    }
     let doc = Document::from_text(&format!("tcp-{id}"), &text);
     let reply = service
-        .submit(doc)
+        .submit_with(doc, opts)
         .and_then(|ticket| ticket.wait());
     match reply {
         Ok(summary) => {
@@ -160,7 +261,12 @@ fn handle_connection(service: &Service, stream: TcpStream, id: u64) -> Result<()
             }
         }
         Err(e) => {
-            writeln!(out, "ERR {e}")?;
+            if let Some(shed) = e.downcast_ref::<Shed>() {
+                // machine-parseable backoff hint (seeded jitter)
+                writeln!(out, "ERR RETRY {}", shed.retry_after_ms)?;
+            } else {
+                writeln!(out, "ERR {e}")?;
+            }
         }
     }
     Ok(())
@@ -185,7 +291,16 @@ fn handle_stream_session(
     let mut line = String::new();
     loop {
         line.clear();
-        let n = reader.read_line(&mut line)?;
+        let n = match reader.read_line(&mut line) {
+            Ok(n) => n,
+            Err(e) if is_timeout(&e) => {
+                // a stalled feed ends the session; dropping it settles
+                // the counters as failed (see ServiceStream::drop)
+                let _ = writeln!(out, "ERR idle timeout");
+                return Ok(());
+            }
+            Err(e) => return Err(e.into()),
+        };
         let trimmed = line.trim_end();
         if n == 0 || trimmed == EOF_MARKER {
             // trailing text before ::EOF:: counts as a last chunk
@@ -526,6 +641,90 @@ mod tests {
         line.clear();
         reader.read_line(&mut line).unwrap();
         assert!(line.starts_with("ERR"), "{line}");
+        server.stop();
+    }
+
+    /// Write `payload` raw, read back the first reply line.
+    fn raw_request(addr: std::net::SocketAddr, payload: &str) -> String {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.write_all(payload.as_bytes()).unwrap();
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        line.trim_end().to_string()
+    }
+
+    #[test]
+    fn tcp_overload_frames_round_trip() {
+        let mut settings = Settings::default();
+        settings.service.workers = 1;
+        settings.pipeline.solver = "tabu".into();
+        settings.pipeline.iterations = 1;
+        let svc = Arc::new(Service::start(&settings).unwrap());
+        let server = TcpServer::start(svc.clone(), 0).unwrap();
+        let set = benchmark_set("cnn_dm_20").unwrap();
+        let text = set.documents[0].text();
+
+        // generous deadline + batch tag: still serves normally
+        let line = raw_request(
+            server.addr,
+            &format!("::DEADLINE 60000::\n{BATCH_MARKER}\n{text}\n{EOF_MARKER}\n"),
+        );
+        assert_eq!(line, "OK 6", "{line}");
+
+        // already-expired deadline: typed, clean error
+        let line = raw_request(
+            server.addr,
+            &format!("::DEADLINE 0::\n{text}\n{EOF_MARKER}\n"),
+        );
+        assert!(line.starts_with("ERR deadline exceeded"), "{line}");
+
+        // malformed deadline header
+        let line = raw_request(server.addr, "::DEADLINE soon::\n");
+        assert!(line.contains("bad deadline header"), "{line}");
+
+        // a chunk marker with no prior ::STREAM:: is a protocol error
+        let line = raw_request(server.addr, &format!("some text\n{CHUNK_MARKER}\n"));
+        assert!(line.contains("unknown marker"), "{line}");
+
+        // empty document: clean error without burning a solve
+        let line = raw_request(server.addr, &format!("{EOF_MARKER}\n"));
+        assert!(line.contains("empty document"), "{line}");
+
+        let m = svc.metrics();
+        assert_eq!(m.completed, 1);
+        assert_eq!(m.overload.deadline_exceeded, 1);
+        server.stop();
+    }
+
+    #[test]
+    fn tcp_document_size_cap_rejects_oversized_docs() {
+        let mut settings = Settings::default();
+        settings.service.workers = 1;
+        settings.service.max_doc_bytes = 256;
+        settings.pipeline.solver = "tabu".into();
+        settings.pipeline.iterations = 1;
+        let svc = Arc::new(Service::start(&settings).unwrap());
+        let server = TcpServer::start(svc.clone(), 0).unwrap();
+        let big = "A sentence of filler text for the size cap. ".repeat(40);
+        let line = raw_request(server.addr, &format!("{big}\n{EOF_MARKER}\n"));
+        assert!(line.contains("document too large"), "{line}");
+        assert_eq!(svc.metrics().submitted, 0, "capped doc must not submit");
+        server.stop();
+    }
+
+    #[test]
+    fn tcp_drain_frame_stops_accepts() {
+        let mut settings = Settings::default();
+        settings.service.workers = 1;
+        settings.pipeline.solver = "tabu".into();
+        settings.pipeline.iterations = 1;
+        let svc = Arc::new(Service::start(&settings).unwrap());
+        let server = TcpServer::start(svc.clone(), 0).unwrap();
+        assert!(!server.drain_requested());
+        let line = raw_request(server.addr, &format!("{DRAIN_MARKER}\n"));
+        assert_eq!(line, "OK 0");
+        assert!(server.drain_requested());
         server.stop();
     }
 

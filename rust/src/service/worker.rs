@@ -14,9 +14,10 @@
 //! A single shared receiver behind a mutex gives natural work-stealing
 //! load balance without a router thread.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, SyncSender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, PoisonError};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
@@ -30,6 +31,7 @@ use crate::runtime::ArtifactRuntime;
 use crate::sched::{self, PoolHandle};
 
 use super::metrics::ServiceMetrics;
+use super::overload::{AdmissionController, Deadline, DeadlineExceeded, Tier};
 
 /// One queued request.
 pub struct Job {
@@ -41,6 +43,11 @@ pub struct Job {
     pub respond: SyncSender<Result<Summary>>,
     /// Submission time (queue-wait accounting).
     pub enqueued: Instant,
+    /// Admission tier the request was accepted under.
+    pub tier: Tier,
+    /// End-to-end deadline; checked before dequeue-to-solve and again at
+    /// every pool dispatch level, so expired work never burns device time.
+    pub deadline: Option<Deadline>,
 }
 
 /// How workers perform Ising solves.
@@ -63,6 +70,7 @@ pub fn spawn_workers(
     rt: Option<&ArtifactRuntime>,
     resilience: Option<&ResilienceShared>,
     obs: &ObsShared,
+    admission: Arc<AdmissionController>,
 ) -> Result<Vec<std::thread::JoinHandle<()>>> {
     let shared_rx = Arc::new(Mutex::new(rx));
     let mut handles = Vec::new();
@@ -79,22 +87,35 @@ pub fn spawn_workers(
         let base_cfg = settings.pipeline.clone();
 
         // per-worker solve function: takes the request's queue wait so
-        // the finished trace carries end-to-end latency, not just solve
-        let mut solve: Box<dyn FnMut(&Document, Duration) -> Result<Summary> + Send> =
-            match &pool_handle {
-                Some(handle) => {
-                    let handle = handle.clone();
-                    let obs = obs.clone();
-                    Box::new(move |doc: &Document, queue_wait: Duration| {
+        // the finished trace carries end-to-end latency, not just solve,
+        // plus the deadline/tier the job was admitted under
+        let mut solve: SolveFn = match &pool_handle {
+            Some(handle) => {
+                let handle = handle.clone();
+                let obs = obs.clone();
+                Box::new(
+                    move |doc: &Document,
+                          queue_wait: Duration,
+                          deadline: Option<Deadline>,
+                          tier: Tier| {
                         // seeds keyed to the DOCUMENT: any worker produces
                         // the same bytes for the same (config, doc)
                         let seed = sched::doc_seed(base_cfg.seed, &doc.id);
                         let mut cfg = base_cfg.clone();
                         cfg.seed = seed;
                         let mut client = handle.client(seed);
+                        // the executor re-checks this before every DAG
+                        // level, so deep documents stop mid-flight too
+                        client.set_deadline(deadline);
                         let t0 = Instant::now();
-                        let (summary, root) =
+                        let (summary, mut root) =
                             sched::summarize_with_pool_traced(doc, &cfg, &mut client, &obs)?;
+                        if let Some(r) = root.as_mut() {
+                            r.set("tier", tier.as_str());
+                            if let Some(d) = deadline {
+                                r.set("deadline_ms", d.budget_ms());
+                            }
+                        }
                         obs.finish_request(
                             root,
                             &doc.id,
@@ -102,38 +123,53 @@ pub fn spawn_workers(
                             t0.elapsed().as_secs_f64(),
                         );
                         Ok(summary)
-                    })
-                }
-                None => {
-                    // per-worker pipeline: derived seed keeps workers
-                    // decorrelated but the fleet reproducible. Pipelines
-                    // are built HERE (caller's stack), so the borrowed
-                    // artifact runtime never crosses into the threads —
-                    // executables are Arc-owned by construction time.
-                    // The resilience layer / fault model applies to the
-                    // local route exactly like the pooled one
-                    // (`resilient_pipeline` is the shared decision).
-                    let mut cfg = base_cfg.clone();
-                    cfg.seed = cfg.seed.wrapping_add(w as u64 * 0x9E37);
-                    let mut pipeline = match crate::resilience::resilient_pipeline(
-                        settings,
-                        &cfg,
-                        rt,
-                        resilience,
-                        Some((obs, crate::obs::Subsystem::Pipeline)),
-                    )? {
-                        Some(p) => p,
-                        None => EsPipeline::from_config(&cfg, &settings.cobi, rt)?,
-                    };
-                    let obs = obs.clone();
-                    let strategy = cfg.strategy;
-                    Box::new(move |doc: &Document, queue_wait: Duration| {
+                    },
+                )
+            }
+            None => {
+                // per-worker pipeline: derived seed keeps workers
+                // decorrelated but the fleet reproducible. Pipelines
+                // are built HERE (caller's stack), so the borrowed
+                // artifact runtime never crosses into the threads —
+                // executables are Arc-owned by construction time.
+                // The resilience layer / fault model applies to the
+                // local route exactly like the pooled one
+                // (`resilient_pipeline` is the shared decision).
+                let mut cfg = base_cfg.clone();
+                cfg.seed = cfg.seed.wrapping_add(w as u64 * 0x9E37);
+                let mut pipeline = match crate::resilience::resilient_pipeline(
+                    settings,
+                    &cfg,
+                    rt,
+                    resilience,
+                    Some((obs, crate::obs::Subsystem::Pipeline)),
+                )? {
+                    Some(p) => p,
+                    None => EsPipeline::from_config(&cfg, &settings.cobi, rt)?,
+                };
+                let obs = obs.clone();
+                let strategy = cfg.strategy;
+                Box::new(
+                    move |doc: &Document,
+                          queue_wait: Duration,
+                          deadline: Option<Deadline>,
+                          tier: Tier| {
                         // the local pipeline is opaque to per-unit spans:
-                        // trace at request granularity (route + score)
+                        // trace at request granularity (route + score).
+                        // Deadlines are enforced at the queue boundary
+                        // (worker_loop pre-checks before solving) — the
+                        // monolithic pipeline has no dispatch seams to
+                        // re-check at, so check once more here.
+                        if let Some(d) = deadline {
+                            if d.expired() {
+                                return Err(d.exceeded().into());
+                            }
+                        }
                         let mut root = obs.start_request(&doc.id);
                         if let Some(r) = root.as_mut() {
                             r.set("route", "local");
                             r.set("strategy", strategy.as_str());
+                            r.set("tier", tier.as_str());
                         }
                         let t0 = Instant::now();
                         let summary = pipeline.summarize(doc)?;
@@ -152,11 +188,13 @@ pub fn spawn_workers(
                             t0.elapsed().as_secs_f64(),
                         );
                         Ok(summary)
-                    })
-                }
-            };
+                    },
+                )
+            }
+        };
 
         let strategy = settings.pipeline.strategy;
+        let admission = admission.clone();
         handles.push(
             std::thread::Builder::new()
                 .name(format!("cobi-worker-{w}"))
@@ -167,6 +205,7 @@ pub fn spawn_workers(
                         &metrics,
                         &inflight,
                         &stop,
+                        &admission,
                         max_batch,
                         strategy,
                     )
@@ -176,20 +215,30 @@ pub fn spawn_workers(
     Ok(handles)
 }
 
+/// Per-worker solve function: (document, queue wait, deadline, tier).
+type SolveFn =
+    Box<dyn FnMut(&Document, Duration, Option<Deadline>, Tier) -> Result<Summary> + Send>;
+
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
-    solve: &mut dyn FnMut(&Document, Duration) -> Result<Summary>,
+    solve: &mut dyn FnMut(&Document, Duration, Option<Deadline>, Tier) -> Result<Summary>,
     rx: &Arc<Mutex<Receiver<Job>>>,
     metrics: &Arc<Mutex<ServiceMetrics>>,
     inflight: &Arc<AtomicUsize>,
     stop: &Arc<AtomicBool>,
+    admission: &AdmissionController,
     max_batch: usize,
     strategy: crate::decompose::Strategy,
 ) {
     loop {
-        // pull a batch: one blocking recv, then drain up to max_batch-1
+        // pull a batch: one blocking recv, then drain up to max_batch-1.
+        // The shared receiver outlives any single worker: a sibling that
+        // panicked while holding the lock poisons the mutex, but the
+        // channel itself is intact, so recover the guard instead of
+        // cascading the panic through the whole pool.
         let mut batch = Vec::with_capacity(max_batch);
         {
-            let guard = rx.lock().unwrap();
+            let guard = rx.lock().unwrap_or_else(PoisonError::into_inner);
             match guard.recv() {
                 Ok(job) => batch.push(job),
                 Err(_) => return, // queue closed: drain complete
@@ -209,23 +258,202 @@ fn worker_loop(
                 inflight.fetch_sub(1, Ordering::Relaxed);
                 continue;
             }
+            if let Some(d) = job.deadline {
+                if d.expired() {
+                    // the budget died in the queue: answer with the typed
+                    // error without charging a latency sample (it would
+                    // skew the solve histogram with zero-work entries)
+                    let mut m = metrics.lock().unwrap();
+                    m.failed += 1;
+                    m.overload.deadline_exceeded += 1;
+                    drop(m);
+                    inflight.fetch_sub(1, Ordering::Relaxed);
+                    let _ = job.respond.try_send(Err(d.exceeded().into()));
+                    continue;
+                }
+            }
             let queue_wait = job.enqueued.elapsed();
             let t0 = Instant::now();
-            let result = solve(&job.doc, queue_wait);
+            // contain solver panics to the request: the worker answers
+            // with an error and lives on to serve the next job, instead
+            // of taking its thread (and a share of fleet capacity) down
+            let result = catch_unwind(AssertUnwindSafe(|| {
+                solve(&job.doc, queue_wait, job.deadline, job.tier)
+            }))
+            .unwrap_or_else(|_| {
+                metrics
+                    .lock()
+                    .unwrap_or_else(PoisonError::into_inner)
+                    .overload
+                    .worker_panics += 1;
+                Err(anyhow::anyhow!("worker panicked during solve"))
+            });
             let solve_time = t0.elapsed();
             {
-                let mut m = metrics.lock().unwrap();
+                let mut m = metrics.lock().unwrap_or_else(PoisonError::into_inner);
                 match &result {
                     Ok(_) => {
                         m.completed += 1;
                         m.strategies.record(strategy);
                     }
-                    Err(_) => m.failed += 1,
+                    Err(e) => {
+                        m.failed += 1;
+                        if e.downcast_ref::<DeadlineExceeded>().is_some() {
+                            // expired mid-solve (pool dispatch seam)
+                            m.overload.deadline_exceeded += 1;
+                        }
+                    }
                 }
                 m.record_latency(queue_wait, solve_time);
+            }
+            if result.is_ok() {
+                // feed the admission controller's wait estimator with
+                // real solve times (failures are often fast-fail and
+                // would bias the estimate low)
+                admission.observe_solve(solve_time);
             }
             inflight.fetch_sub(1, Ordering::Relaxed);
             let _ = job.respond.try_send(result);
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServiceConfig;
+    use std::sync::mpsc::sync_channel;
+
+    struct Harness {
+        tx: SyncSender<Job>,
+        rx: Arc<Mutex<Receiver<Job>>>,
+        metrics: Arc<Mutex<ServiceMetrics>>,
+        inflight: Arc<AtomicUsize>,
+        stop: Arc<AtomicBool>,
+        admission: Arc<AdmissionController>,
+    }
+
+    fn harness() -> Harness {
+        let (tx, rx) = sync_channel::<Job>(8);
+        Harness {
+            tx,
+            rx: Arc::new(Mutex::new(rx)),
+            metrics: Arc::new(Mutex::new(ServiceMetrics::default())),
+            inflight: Arc::new(AtomicUsize::new(0)),
+            stop: Arc::new(AtomicBool::new(false)),
+            admission: Arc::new(AdmissionController::from_config(
+                &ServiceConfig::default(),
+                7,
+            )),
+        }
+    }
+
+    impl Harness {
+        /// Run `worker_loop` on a thread with the given solve function.
+        fn spawn(
+            &self,
+            mut solve: impl FnMut(&Document, Duration, Option<Deadline>, Tier) -> Result<Summary>
+                + Send
+                + 'static,
+        ) -> std::thread::JoinHandle<()> {
+            let rx = self.rx.clone();
+            let metrics = self.metrics.clone();
+            let inflight = self.inflight.clone();
+            let stop = self.stop.clone();
+            let admission = self.admission.clone();
+            std::thread::spawn(move || {
+                worker_loop(
+                    &mut solve,
+                    &rx,
+                    &metrics,
+                    &inflight,
+                    &stop,
+                    &admission,
+                    1,
+                    crate::decompose::Strategy::Window,
+                )
+            })
+        }
+
+        /// Enqueue a job; returns its reply receiver.
+        fn send(&self, id: &str, deadline: Option<Deadline>) -> Receiver<Result<Summary>> {
+            let (otx, orx) = sync_channel(1);
+            self.inflight.fetch_add(1, Ordering::Relaxed);
+            self.tx
+                .send(Job {
+                    id: 1,
+                    doc: Document::from_text(id, "Some text here. More text follows."),
+                    respond: otx,
+                    enqueued: Instant::now(),
+                    tier: Tier::Interactive,
+                    deadline,
+                })
+                .unwrap();
+            orx
+        }
+    }
+
+    #[test]
+    fn a_panicking_solve_is_contained_to_its_request() {
+        let h = harness();
+        let worker = h.spawn(|doc, _, _, _| {
+            if doc.id == "boom" {
+                panic!("solver exploded");
+            }
+            Err(anyhow::anyhow!("benign failure"))
+        });
+        let boom = h.send("boom", None);
+        let fine = h.send("fine", None);
+        let e = boom.recv().unwrap().unwrap_err();
+        assert!(e.to_string().contains("panicked"), "{e}");
+        // the SAME worker answers the next job: the panic didn't kill it
+        let e = fine.recv().unwrap().unwrap_err();
+        assert!(e.to_string().contains("benign"), "{e}");
+        let m = h.metrics.lock().unwrap();
+        assert_eq!(m.overload.worker_panics, 1);
+        assert_eq!(m.failed, 2);
+        assert_eq!(h.inflight.load(Ordering::Relaxed), 0);
+        drop(m);
+        drop(h.tx);
+        worker.join().unwrap();
+    }
+
+    #[test]
+    fn a_poisoned_shared_receiver_keeps_serving() {
+        let h = harness();
+        // poison the receiver mutex the way a crashed sibling would
+        let rx = h.rx.clone();
+        let _ = std::thread::spawn(move || {
+            let _guard = rx.lock().unwrap();
+            panic!("die while holding the queue lock");
+        })
+        .join();
+        assert!(h.rx.is_poisoned(), "setup: mutex must be poisoned");
+        let worker = h.spawn(|_, _, _, _| Err(anyhow::anyhow!("served")));
+        let reply = h.send("doc", None);
+        let e = reply.recv().unwrap().unwrap_err();
+        assert!(e.to_string().contains("served"), "{e}");
+        drop(h.tx);
+        worker.join().unwrap();
+    }
+
+    #[test]
+    fn queue_expired_deadlines_never_reach_the_solver() {
+        let h = harness();
+        let worker = h.spawn(|_, _, _, _| panic!("solver must not run"));
+        let reply = h.send("late", Some(Deadline::from_ms(0)));
+        let e = reply.recv().unwrap().unwrap_err();
+        let d = e
+            .downcast_ref::<DeadlineExceeded>()
+            .expect("typed DeadlineExceeded");
+        assert_eq!(d.budget_ms, 0);
+        let m = h.metrics.lock().unwrap();
+        assert_eq!(m.overload.deadline_exceeded, 1);
+        assert_eq!(m.failed, 1);
+        // no latency sample for zero-work replies
+        assert_eq!(m.queue_hist.count(), 0);
+        drop(m);
+        drop(h.tx);
+        worker.join().unwrap();
     }
 }

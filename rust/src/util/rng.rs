@@ -281,6 +281,10 @@ mod tests {
             ("adapter-seed (resilience)", crate::resilience::ADAPTER_SEED_STREAM),
             ("fault (resilience::fault)", crate::resilience::fault::FAULT_STREAM),
             ("device noise (cobi::device)", crate::cobi::device::DEVICE_STREAM),
+            (
+                "retry-after jitter (service::overload)",
+                crate::service::overload::RETRY_JITTER_STREAM,
+            ),
             ("snowball spins", crate::solvers::snowball::SNOWBALL_STREAM),
             (
                 "snowball schedule",

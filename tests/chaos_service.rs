@@ -1,0 +1,578 @@
+//! Service-level chaos harness (ISSUE 8): protocol fuzzing, slow-loris
+//! reaping, mid-request disconnects, deadline storms, breaker
+//! quarantine storms and graceful drain.
+//!
+//! The contract under test: the service answers or sheds EVERY request
+//! (no hung connections, no lost replies), hostile traffic never wedges
+//! a worker or leaks an in-flight counter, and every admitted request
+//! that survives produces bytes identical to a quiet run — chaos may
+//! reject work, it may never change an answer.
+//!
+//! `service_chaos_storm_drains_clean_and_replays_identically` is
+//! env-gated (COBI_ES_CHAOS=1, set by CI) at full scale; unset, a
+//! scaled-down pass keeps the storm path alive for plain `cargo test`.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use cobi_es::config::Settings;
+use cobi_es::corpus::benchmark_set;
+use cobi_es::pipeline::Summary;
+use cobi_es::prop_assert;
+use cobi_es::sched::breaker::State;
+use cobi_es::sched::{doc_seed, summarize_with_pool, DevicePool};
+use cobi_es::service::tcp::{
+    summarize_remote, TcpServer, BATCH_MARKER, CHUNK_MARKER, DRAIN_MARKER, EOF_MARKER,
+    STREAM_MARKER,
+};
+use cobi_es::service::{Deadline, DeadlineExceeded, Service, SubmitOptions};
+use cobi_es::util::proptest;
+
+/// Fast tabu-backed settings shared by the chaos scenarios.
+fn chaos_settings() -> Settings {
+    let mut s = Settings::default();
+    s.service.workers = 2;
+    s.service.queue_depth = 16;
+    s.pipeline.solver = "tabu".into();
+    s.pipeline.iterations = 2;
+    s.pipeline.summary_len = 3;
+    s
+}
+
+fn serve(settings: &Settings) -> (Arc<Service>, TcpServer) {
+    let svc = Arc::new(Service::start(settings).unwrap());
+    let server = TcpServer::start(svc.clone(), 0).unwrap();
+    (svc, server)
+}
+
+/// Shut a shared service down once its connection handlers let go.
+fn shutdown_arc(svc: Arc<Service>) {
+    let mut svc = Some(svc);
+    for _ in 0..500 {
+        match Arc::try_unwrap(svc.take().unwrap()) {
+            Ok(owned) => {
+                owned.shutdown();
+                return;
+            }
+            Err(shared) => {
+                svc = Some(shared);
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+    }
+    panic!("service handlers never released their references");
+}
+
+/// Write `payload` raw, half-close, and read the first reply line.
+/// Empty string = the server closed without replying (also clean).
+/// Panics if the server neither replies nor closes within 10s — a
+/// wedged connection is exactly what the chaos suite must catch.
+fn fuzz_request(addr: std::net::SocketAddr, payload: &[u8]) -> String {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    stream.write_all(payload).unwrap();
+    stream.shutdown(std::net::Shutdown::Write).unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    match reader.read_line(&mut line) {
+        Ok(_) => line.trim_end().to_string(),
+        Err(e) => panic!("server wedged on fuzz payload (no reply, no close): {e}"),
+    }
+}
+
+/// Poll until `pred(metrics)` holds (10s bound) — chaos outcomes land
+/// on handler threads, so counters settle asynchronously.
+fn wait_for(svc: &Service, what: &str, pred: impl Fn(&cobi_es::service::ServiceMetrics) -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        if pred(&svc.metrics()) {
+            return;
+        }
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+#[test]
+fn protocol_fuzz_always_answers_cleanly() {
+    let mut settings = chaos_settings();
+    settings.service.workers = 1;
+    settings.pipeline.iterations = 1;
+    settings.service.max_doc_bytes = 2048;
+    let (svc, server) = serve(&settings);
+    let addr = server.addr;
+
+    // printable junk so the payload survives read_line's UTF-8 check
+    // (raw binary gets its own test below)
+    fn junk(rng: &mut cobi_es::util::rng::Pcg32, len: usize) -> String {
+        (0..len)
+            .map(|_| (0x20 + rng.below(0x5e) as u8) as char)
+            .collect()
+    }
+
+    proptest::check("tcp-protocol-fuzz", 0xC8A05, 24, |rng| {
+        let payload = match rng.below(8) {
+            0 => format!("{}\n{}\n{EOF_MARKER}\n", junk(rng, 40), junk(rng, 40)),
+            1 => format!("::DEADLINE {}::\n", junk(rng, 6)),
+            2 => format!("::{}::\n", junk(rng, 8)),
+            3 => format!("{}\n{CHUNK_MARKER}\n", junk(rng, 20)),
+            4 => format!("{EOF_MARKER}\n"),
+            5 => format!("{}\n{EOF_MARKER}\n", junk(rng, 3000)),
+            6 => format!("{STREAM_MARKER}\n{}\n", junk(rng, 30)),
+            _ => format!("::DEADLINE 0::\n{}\n{EOF_MARKER}\n", junk(rng, 30)),
+        };
+        let reply = fuzz_request(addr, payload.as_bytes());
+        prop_assert!(
+            reply.is_empty()
+                || reply.starts_with("OK")
+                || reply.starts_with("ERR")
+                || reply.starts_with("REV"),
+            "unframed reply to {payload:?}: {reply:?}"
+        );
+        Ok(())
+    });
+
+    // the server survived the sweep: a well-formed request still serves
+    let set = benchmark_set("bench_10").unwrap();
+    let summary = summarize_remote(addr, &set.documents[0].text()).unwrap();
+    assert_eq!(summary.len(), 3);
+    wait_for(&svc, "counters to settle", |m| {
+        m.submitted == m.completed + m.failed
+    });
+    server.stop();
+    shutdown_arc(svc);
+}
+
+#[test]
+fn binary_garbage_closes_cleanly() {
+    let (svc, server) = serve(&chaos_settings());
+    // invalid UTF-8 fails read_line; the handler must drop the
+    // connection, not hang or take a worker down
+    let reply = fuzz_request(server.addr, &[0xff, 0xfe, 0x80, 0x00, 0xC3, 0x28, b'\n']);
+    assert!(reply.is_empty() || reply.starts_with("ERR"), "{reply:?}");
+    let set = benchmark_set("bench_10").unwrap();
+    let summary = summarize_remote(server.addr, &set.documents[1].text()).unwrap();
+    assert_eq!(summary.len(), 3);
+    server.stop();
+    shutdown_arc(svc);
+}
+
+#[test]
+fn garbage_after_eof_is_ignored() {
+    let (svc, server) = serve(&chaos_settings());
+    let set = benchmark_set("bench_10").unwrap();
+    let text = set.documents[2].text();
+    let payload = format!("{text}\n{EOF_MARKER}\ntrailing garbage ::STATS:: more junk\n");
+    let mut stream = TcpStream::connect(server.addr).unwrap();
+    stream.write_all(payload.as_bytes()).unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(line.trim_end(), "OK 3", "bytes after ::EOF:: must not corrupt the reply");
+    server.stop();
+    shutdown_arc(svc);
+}
+
+#[test]
+fn slow_loris_is_reaped_by_the_idle_timeout() {
+    let mut settings = chaos_settings();
+    settings.service.idle_timeout_ms = 120;
+    let (svc, server) = serve(&settings);
+
+    // a batch connection that stalls mid-line is answered and dropped
+    let mut stream = TcpStream::connect(server.addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    stream.write_all(b"a partial line that never ends").unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(line.trim_end(), "ERR idle timeout");
+
+    // a stream session that stalls is reaped too, and the abandoned
+    // session settles as failed (submitted = completed + failed holds)
+    let mut stream = TcpStream::connect(server.addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    stream
+        .write_all(format!("{STREAM_MARKER}\n").as_bytes())
+        .unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(line.trim_end(), "ERR idle timeout");
+    wait_for(&svc, "the reaped session to settle as failed", |m| {
+        m.failed >= 1 && m.submitted == m.completed + m.failed
+    });
+
+    // reaping stalled peers never degrades live ones
+    let set = benchmark_set("bench_10").unwrap();
+    let summary = summarize_remote(server.addr, &set.documents[3].text()).unwrap();
+    assert_eq!(summary.len(), 3);
+    server.stop();
+    shutdown_arc(svc);
+}
+
+#[test]
+fn mid_request_disconnects_leave_no_hung_state() {
+    let (svc, server) = serve(&chaos_settings());
+    let set = benchmark_set("bench_10").unwrap();
+
+    // batch: the client vanishes after half a document — the half-close
+    // terminates the read, the reply write fails silently
+    let mut stream = TcpStream::connect(server.addr).unwrap();
+    stream
+        .write_all(format!("{}\n", set.documents[4].text()).as_bytes())
+        .unwrap();
+    drop(stream);
+
+    // stream: the session is abandoned mid-chunk — Drop settles it
+    let mut stream = TcpStream::connect(server.addr).unwrap();
+    stream
+        .write_all(format!("{STREAM_MARKER}\nOne lonely sentence.\n").as_bytes())
+        .unwrap();
+    drop(stream);
+
+    wait_for(&svc, "disconnected requests to settle", |m| {
+        m.submitted >= 2 && m.submitted == m.completed + m.failed
+    });
+    assert_eq!(svc.inflight(), 0, "disconnects must not leak in-flight slots");
+
+    let summary = summarize_remote(server.addr, &set.documents[5].text()).unwrap();
+    assert_eq!(summary.len(), 3);
+    server.stop();
+    shutdown_arc(svc);
+}
+
+#[test]
+fn abandoned_tickets_are_not_failures() {
+    // a caller that drops its Ticket before the reply lands: the worker's
+    // send fails silently, the work still counts as completed, and the
+    // breaker records nothing (an abandoned reply is not a device fault)
+    let mut settings = chaos_settings();
+    settings.sched.breaker.enabled = true;
+    let svc = Service::start(&settings).unwrap();
+    let set = benchmark_set("bench_10").unwrap();
+    for d in &set.documents[..4] {
+        drop(svc.submit(d.clone()).unwrap());
+    }
+    wait_for(&svc, "abandoned jobs to finish", |m| m.completed == 4);
+    let m = svc.metrics();
+    assert_eq!(m.failed, 0);
+    let b = m.breaker.expect("breaker metrics with the fleet enabled");
+    assert!(!b.any(), "abandonment fed the breaker: {b:?}");
+    svc.shutdown();
+}
+
+#[test]
+fn deadline_storm_sheds_cleanly_without_burning_solves() {
+    let svc = Service::start(&chaos_settings()).unwrap();
+    let set = benchmark_set("bench_10").unwrap();
+    let opts = SubmitOptions {
+        deadline: Some(Deadline::from_ms(0)),
+        ..Default::default()
+    };
+    let tickets: Vec<_> = set.documents[..6]
+        .iter()
+        .map(|d| svc.submit_with(d.clone(), opts).unwrap())
+        .collect();
+    for t in tickets {
+        let err = t.wait().unwrap_err();
+        assert!(
+            err.downcast_ref::<DeadlineExceeded>().is_some(),
+            "want a typed DeadlineExceeded, got: {err}"
+        );
+    }
+    let m = svc.metrics();
+    assert_eq!(m.overload.deadline_exceeded, 6);
+    assert_eq!(m.completed, 0);
+    // the storm over, normal traffic resumes immediately
+    let t = svc.submit(set.documents[6].clone()).unwrap();
+    assert_eq!(t.wait().unwrap().selected.len(), 3);
+    svc.shutdown();
+}
+
+#[test]
+fn tcp_drain_loses_no_inflight_responses() {
+    let mut settings = chaos_settings();
+    settings.pipeline.iterations = 4; // keep work in flight across the drain
+    let (svc, server) = serve(&settings);
+    let set = benchmark_set("cnn_dm_20").unwrap();
+
+    // three requests in flight on open connections, replies unread
+    let mut conns = Vec::new();
+    for d in &set.documents[..3] {
+        let mut stream = TcpStream::connect(server.addr).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(30)))
+            .unwrap();
+        stream
+            .write_all(format!("{}\n{EOF_MARKER}\n", d.text()).as_bytes())
+            .unwrap();
+        conns.push(stream);
+    }
+    wait_for(&svc, "the in-flight requests to be admitted", |m| m.submitted >= 3);
+
+    // the admin drain frame stops accepts...
+    let reply = fuzz_request(server.addr, format!("{DRAIN_MARKER}\n").as_bytes());
+    assert_eq!(reply, "OK 0");
+    assert!(server.drain_requested());
+
+    // ...and every admitted request still gets its answer
+    let stats = svc.drain(Duration::from_secs(30));
+    assert_eq!(stats.aborted, 0, "drain lost {} in-flight requests", stats.aborted);
+    for stream in conns {
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line.trim_end(), "OK 3", "an admitted request lost its reply");
+    }
+    let m = svc.metrics();
+    assert_eq!(m.completed, 3);
+    assert_eq!(m.overload.drains, 1);
+    assert_eq!(m.overload.drain_aborted, 0);
+
+    server.stop();
+    shutdown_arc(svc);
+}
+
+/// Pooled, document-level summary (the resilience suite's idiom).
+fn pooled_summary(s: &Settings, pool: &DevicePool, doc_idx: usize) -> Summary {
+    let set = benchmark_set("bench_10").unwrap();
+    let doc = &set.documents[doc_idx];
+    let mut cfg = s.pipeline.clone();
+    cfg.summary_len = set.summary_len;
+    cfg.seed = doc_seed(cfg.seed, &doc.id);
+    let mut client = pool.client(cfg.seed);
+    summarize_with_pool(doc, &cfg, &mut client).unwrap()
+}
+
+fn assert_same_summary(a: &Summary, b: &Summary, ctx: &str) {
+    assert_eq!(a.selected, b.selected, "{ctx}");
+    assert_eq!(a.sentences, b.sentences, "{ctx}");
+    assert_eq!(a.objective.to_bits(), b.objective.to_bits(), "{ctx}");
+}
+
+#[test]
+fn quiet_overload_features_keep_summaries_byte_identical() {
+    // acceptance pin: every overload feature armed but never firing is
+    // byte-identical to the defaults-off path, across pool shapes
+    let base = chaos_settings();
+    let mut one_dev = base.clone();
+    one_dev.sched.devices = 1;
+    one_dev.sched.max_coalesce = 1;
+    one_dev.sched.linger_us = 0;
+    let mut armed = base.clone();
+    armed.sched.devices = 4;
+    armed.sched.max_coalesce = 8;
+    armed.sched.breaker.enabled = true;
+    armed.service.default_deadline_ms = 60_000;
+    armed.service.shed_watermark_ms = 60_000;
+    armed.service.idle_timeout_ms = 50;
+    armed.service.max_doc_bytes = 1 << 16;
+
+    let docs = [0usize, 3, 7];
+    let run = |s: &Settings| -> Vec<Summary> {
+        let svc = Service::start(s).unwrap();
+        let set = benchmark_set("bench_10").unwrap();
+        let out: Vec<Summary> = docs
+            .iter()
+            .map(|&i| svc.submit(set.documents[i].clone()).unwrap().wait().unwrap())
+            .collect();
+        let m = svc.metrics();
+        assert_eq!(m.completed, docs.len() as u64);
+        assert!(!m.overload.any(), "quiet features fired: {:?}", m.overload);
+        svc.shutdown();
+        out
+    };
+
+    let reference = run(&one_dev);
+    for (name, s) in [("defaults-4dev", &base), ("armed-4dev", &armed)] {
+        for (got, want) in run(s).iter().zip(&reference) {
+            assert_same_summary(got, want, name);
+        }
+    }
+}
+
+#[test]
+fn breaker_quarantine_storm_never_changes_a_summary() {
+    // a device cycling through trip -> cooldown -> probe -> readmit ->
+    // retire while documents stream past: the survivors' bytes must
+    // match a breaker-less pool exactly (seeds are per-request, never
+    // per-device), and the quarantine telemetry must add up
+    let docs = [0usize, 1, 2, 3, 4];
+    let mut plain = chaos_settings();
+    plain.sched.devices = 2;
+    let pool = DevicePool::start(&plain, None).unwrap();
+    let reference: Vec<Summary> = docs.iter().map(|&i| pooled_summary(&plain, &pool, i)).collect();
+    pool.shutdown();
+
+    let mut stormy = plain.clone();
+    stormy.sched.breaker.enabled = true;
+    stormy.sched.breaker.window = 8;
+    stormy.sched.breaker.trip_failures = 3;
+    stormy.sched.breaker.cooldown_ms = 20;
+    stormy.sched.breaker.max_trips = 3;
+    stormy.resilience.calibration_probes = 2; // fast half-open probes
+    let pool = DevicePool::start(&stormy, None).unwrap();
+    let fleet = pool.breaker().expect("breaker fleet").clone();
+
+    let mut survived = Vec::new();
+    survived.push(pooled_summary(&stormy, &pool, docs[0]));
+    // storm: 3 failure samples at once (a dispatch error plus two verify
+    // rejections) trip device 0 into quarantine mid-traffic
+    fleet.record_dispatch(0, false, 2);
+    survived.push(pooled_summary(&stormy, &pool, docs[1]));
+    survived.push(pooled_summary(&stormy, &pool, docs[2]));
+    // after the cooldown the device thread self-probes with the real
+    // calibrator; a healthy solver earns readmission
+    let deadline = Instant::now() + Duration::from_secs(20);
+    while fleet.snapshot().readmissions == 0 {
+        assert!(Instant::now() < deadline, "the half-open probe never readmitted");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    survived.push(pooled_summary(&stormy, &pool, docs[3]));
+    // escalate: repeated failed probes push the device past max_trips
+    // into retirement (device 1 is standing, so retirement is allowed)
+    while fleet.state(0) != Some(State::Retired) {
+        assert!(Instant::now() < deadline, "failed probes never retired the device");
+        fleet.probe_result(0, false);
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    survived.push(pooled_summary(&stormy, &pool, docs[4]));
+
+    for (i, (got, want)) in survived.iter().zip(&reference).enumerate() {
+        assert_same_summary(got, want, &format!("doc {} under quarantine storm", docs[i]));
+    }
+    let m = fleet.snapshot();
+    assert!(m.trips >= 2, "{m:?}");
+    assert!(m.probes >= 1, "{m:?}");
+    assert!(m.readmissions >= 1, "{m:?}");
+    assert_eq!(m.retired, 1, "{m:?}");
+    assert_eq!(m.retirements, 1, "{m:?}");
+    assert!(m.any());
+    pool.shutdown(); // must not hang with a retired device
+}
+
+#[test]
+fn service_chaos_storm_drains_clean_and_replays_identically() {
+    // env-gated scale (CI sets COBI_ES_CHAOS=1): full storm in the
+    // chaos slice, a one-wave smoke for plain `cargo test`
+    let full = std::env::var("COBI_ES_CHAOS").is_ok();
+    let waves = if full { 3 } else { 1 };
+    let tcp_docs = if full { 4 } else { 2 };
+
+    let mut settings = chaos_settings();
+    settings.service.workers = if full { 3 } else { 2 };
+    settings.service.queue_depth = 64;
+    settings.service.default_deadline_ms = 30_000;
+    settings.service.shed_watermark_ms = 60_000; // armed, quiet
+    settings.service.idle_timeout_ms = 150;
+    settings.sched.breaker.enabled = true;
+    settings.resilience.enabled = true;
+    settings.resilience.replication = 2;
+    settings.resilience.fault.enabled = true;
+    settings.resilience.fault.stuck_rate = 0.1;
+    let (svc, server) = serve(&settings);
+    let addr = server.addr;
+    let set = benchmark_set("cnn_dm_20").unwrap();
+    let bench = benchmark_set("bench_10").unwrap();
+
+    // per-document summaries from in-process submissions, collected
+    // across waves: chaos alongside must never change admitted bytes
+    let mut per_wave: Vec<Vec<Summary>> = Vec::new();
+    for _wave in 0..waves {
+        let mut threads = Vec::new();
+        for d in set.documents[..tcp_docs].iter() {
+            let text = d.text();
+            threads.push(std::thread::spawn(move || {
+                let summary = summarize_remote(addr, &text).unwrap();
+                assert_eq!(summary.len(), 3);
+            }));
+        }
+        // hostile traffic interleaved with the valid load
+        threads.push(std::thread::spawn(move || {
+            let r = fuzz_request(addr, b"::BOGUS MARKER::\n");
+            assert!(r.starts_with("ERR"), "{r}");
+        }));
+        threads.push(std::thread::spawn(move || {
+            let payload = format!("::DEADLINE 0::\nsome text\n{EOF_MARKER}\n");
+            let r = fuzz_request(addr, payload.as_bytes());
+            assert!(r.starts_with("ERR deadline exceeded"), "{r}");
+        }));
+        threads.push(std::thread::spawn(move || {
+            // slow-loris: partial write, then vanish without reading
+            let mut s = TcpStream::connect(addr).unwrap();
+            let _ = s.write_all(b"a stalled partial line");
+            drop(s);
+        }));
+        {
+            let text = set.documents[0].text();
+            threads.push(std::thread::spawn(move || {
+                let payload = format!("{BATCH_MARKER}\n{text}\n{EOF_MARKER}\n");
+                let mut s = TcpStream::connect(addr).unwrap();
+                s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+                s.write_all(payload.as_bytes()).unwrap();
+                let mut reader = BufReader::new(s);
+                let mut line = String::new();
+                reader.read_line(&mut line).unwrap();
+                assert_eq!(line.trim_end(), "OK 3", "batch-tier request under quiet watermark");
+            }));
+        }
+        let wave: Vec<Summary> = bench.documents[..2]
+            .iter()
+            .map(|d| svc.submit(d.clone()).unwrap().wait().unwrap())
+            .collect();
+        per_wave.push(wave);
+        for t in threads {
+            t.join().unwrap();
+        }
+    }
+    for wave in &per_wave[1..] {
+        for (got, want) in wave.iter().zip(&per_wave[0]) {
+            assert_same_summary(got, want, "admitted bytes drifted across storm waves");
+        }
+    }
+
+    // the storm settles: every request answered, nothing leaked
+    wait_for(&svc, "the storm to settle", |m| {
+        m.submitted == m.completed + m.failed
+    });
+    assert_eq!(svc.inflight(), 0);
+    let m = svc.metrics();
+    assert_eq!(m.overload.worker_panics, 0, "a worker died in the storm");
+    let b = m.breaker.expect("breaker armed");
+    assert_eq!(b.devices, settings.sched.devices.max(1));
+
+    // graceful exit: drain via the admin frame, zero lost responses
+    let reply = fuzz_request(addr, format!("{DRAIN_MARKER}\n").as_bytes());
+    assert_eq!(reply, "OK 0");
+    let stats = svc.drain(Duration::from_secs(30));
+    assert_eq!(stats.aborted, 0);
+    server.stop();
+    shutdown_arc(svc);
+
+    // quiet replay: the identical sequential workload on two fresh
+    // services is byte-identical, faults and breaker included
+    let replay = |s: &Settings| -> Vec<Vec<String>> {
+        let (svc, server) = serve(s);
+        let out: Vec<Vec<String>> = set.documents[..tcp_docs]
+            .iter()
+            .map(|d| summarize_remote(server.addr, &d.text()).unwrap())
+            .collect();
+        server.stop();
+        shutdown_arc(svc);
+        out
+    };
+    assert_eq!(
+        replay(&settings),
+        replay(&settings),
+        "quiet replay of the storm workload diverged"
+    );
+}
