@@ -11,6 +11,7 @@ use crate::ising::exact_bounds;
 use crate::pipeline::EsPipeline;
 use crate::runtime::ArtifactRuntime;
 use crate::service::Service;
+use crate::workload::KOfNProblem;
 
 use super::Args;
 
@@ -254,6 +255,70 @@ pub fn cmd_solve(args: &Args) -> Result<()> {
             t0.elapsed().as_secs_f64() * 1e3,
             s.total_solves
         );
+    }
+    Ok(())
+}
+
+/// `select`: run one k-of-n workload request through the inline platform
+/// path and print the selected candidates.
+pub fn cmd_select(args: &Args) -> Result<()> {
+    let mut settings = load_settings(args)?;
+    apply_pipeline_flags(&mut settings, args)?;
+    let workload = args
+        .get("workload")
+        .map(String::from)
+        .unwrap_or_else(|| settings.workload.default.clone());
+    if workload == "es" {
+        bail!("workload 'es' is the summarize command — use `cobi-es summarize`");
+    }
+    settings.workload.retrieval_k = args.get_usize("k", settings.workload.retrieval_k)?;
+    let (id, lines): (String, Vec<String>) = if let Some(path) = args.get("input") {
+        // line-framed like a ::WORKLOAD:: request body: retrieval reads
+        // query + passages, dispersion reads one spec line
+        let text = std::fs::read_to_string(path)?;
+        (
+            path.to_string(),
+            text.lines()
+                .map(str::trim)
+                .filter(|l| !l.is_empty())
+                .map(String::from)
+                .collect(),
+        )
+    } else if workload == "dispersion" {
+        let n = args.get_usize("n", settings.workload.dispersion_n)?;
+        let k = args.get_usize("k", settings.workload.dispersion_k)?;
+        let seed = args.get_usize("seed", 0)? as u64;
+        (
+            format!("dispersion-cli-{seed}"),
+            vec![format!("n={n} k={k} seed={seed}")],
+        )
+    } else {
+        // no input: serve one pinned corpus request
+        let reqs = crate::corpus::workload_requests(&workload)?;
+        let idx = args.get_usize("request", 0)?;
+        let r = reqs.get(idx).context("--request out of range")?;
+        (r.id.clone(), r.lines.clone())
+    };
+    let problem = crate::workload::problem_from_request(&workload, &id, &lines, &settings.workload)?;
+    let t0 = std::time::Instant::now();
+    let summary = crate::workload::select_inline(problem.as_ref(), &settings, None)?;
+    let wall = t0.elapsed();
+    println!(
+        "workload: {workload} | request: {id} | solver: {} | k={} of n={}",
+        settings.pipeline.solver,
+        problem.k(),
+        problem.candidates().len(),
+    );
+    println!("selected: {:?}", summary.selected);
+    println!(
+        "objective: {:.4} | solves: {} | wall time: {:.1} ms",
+        summary.objective,
+        summary.total_solves,
+        wall.as_secs_f64() * 1e3
+    );
+    println!("\n--- selection ---");
+    for (i, s) in summary.sentences.iter().enumerate() {
+        println!("{:>2}. {s}", summary.selected[i]);
     }
     Ok(())
 }
@@ -569,6 +634,7 @@ pub fn dispatch(args: &Args) -> Result<()> {
         Some("experiment") => cmd_experiment(args),
         Some("gen-corpus") => cmd_gen_corpus(args),
         Some("solve") => cmd_solve(args),
+        Some("select") => cmd_select(args),
         Some("serve") => cmd_serve(args),
         Some("doctor") => cmd_doctor(args),
         Some("help") | None => {

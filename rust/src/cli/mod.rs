@@ -115,13 +115,22 @@ COMMANDS:
                [--fault-drift F] [--fault-seed N]
   experiment   Regenerate a paper figure/table
                <fig1|fig2|fig3|fig5|fig6|fig7|fig8|table1|supp-optima|
-                fault-sweep|energy-report|all>
+                fault-sweep|energy-report|workloads|all>
                [--full] [--out <file.md>] [--csv]
   gen-corpus   Write a benchmark set as text files
                --set <name> --out <dir>
   solve        Solve one benchmark document's Ising instance and print
                the normalized objective per solver
                [--benchmark <set>] [--doc N] [--iterations N]
+  select       Run one k-of-n workload request (the non-ES platform
+               path) and print the selected candidates
+               --workload retrieval|dispersion
+               retrieval: [--input <file>] (first line = query, rest =
+               candidate passages) | [--request N] (pinned corpus)
+               [--k N]
+               dispersion: [--n N] [--k N] [--seed N] (generated
+               instance; defaults from [workload] config)
+               [--solver cobi|tabu|sa|snowball] [--iterations N]
   serve        Start the edge summarization service
                demo mode: [--requests N] [--workers N] [--solver ...]
                [--strategy window|tree|stream]
@@ -134,7 +143,12 @@ COMMANDS:
                a '::STREAM::' first line opens a SUMMARIZE_STREAM
                session: chunks ended by '::CHUNK::' each return a
                'REV <m>' summary revision, '::EOF::' closes with the
-               final 'OK <m>' summary)
+               final 'OK <m>' summary;
+               a '::WORKLOAD <name>::' header line routes the request
+               to a registered k-of-n workload — the body is one
+               candidate per line (retrieval: query first; dispersion:
+               one 'n=.. k=.. seed=..' spec line) and 'OK <k>' lists
+               the selected candidates)
                device pool: [--pool-devices N] [--pool-coalesce N]
                [--pool-linger-us N]
                [--pool-backend auto|cobi|tabu|sa|snowball|portfolio]

@@ -520,6 +520,36 @@ pub struct SolversConfig {
     pub snowball: SnowballSettings,
 }
 
+/// k-of-n workload platform parameters (`[workload]`): which registered
+/// workload untagged requests resolve to, and the generated-instance
+/// defaults for requests that do not spell their own shape (see
+/// `crate::workload`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadConfig {
+    /// Workload served by default (TCP requests without a
+    /// `::WORKLOAD <name>::` header, CLI without `--workload`).
+    /// Must name a registered workload; "es" preserves every legacy path.
+    pub default: String,
+    /// Context budget k for `::WORKLOAD retrieval::` requests that give a
+    /// query + passages without a k of their own.
+    pub retrieval_k: usize,
+    /// Site count n for dispersion requests without an `n=` token.
+    pub dispersion_n: usize,
+    /// Selection cardinality k for dispersion requests without a `k=`.
+    pub dispersion_k: usize,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        Self {
+            default: "es".into(),
+            retrieval_k: 4,
+            dispersion_n: 16,
+            dispersion_k: 4,
+        }
+    }
+}
+
 /// Root settings object.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Settings {
@@ -541,6 +571,8 @@ pub struct Settings {
     pub resilience: ResilienceConfig,
     /// Observability (span tracing) parameters.
     pub obs: ObsConfig,
+    /// k-of-n workload platform parameters (`[workload]`).
+    pub workload: WorkloadConfig,
     /// Directory containing AOT artifacts (manifest.txt etc.).
     pub artifacts_dir: String,
 }
@@ -770,6 +802,11 @@ impl Settings {
         set!(self.obs.ring_capacity, get_i64, "obs.ring_capacity");
         set!(self.obs.exemplars, get_i64, "obs.exemplars");
         set!(self.obs.trace_out, get_str, "obs.trace_out");
+
+        set!(self.workload.default, get_str, "workload.default");
+        set!(self.workload.retrieval_k, get_i64, "workload.retrieval_k");
+        set!(self.workload.dispersion_n, get_i64, "workload.dispersion_n");
+        set!(self.workload.dispersion_k, get_i64, "workload.dispersion_k");
         Ok(())
     }
 }
@@ -1091,6 +1128,32 @@ trace_out = "/tmp/trace.jsonl"
         assert_eq!(s.obs.ring_capacity, 64);
         assert_eq!(s.obs.exemplars, 4);
         assert_eq!(s.obs.trace_out, "/tmp/trace.jsonl");
+    }
+
+    #[test]
+    fn workload_defaults_and_overrides() {
+        let s = Settings::default();
+        assert_eq!(s.workload.default, "es", "legacy paths must stay ES");
+        assert_eq!(s.workload.retrieval_k, 4);
+        assert_eq!(s.workload.dispersion_n, 16);
+        assert_eq!(s.workload.dispersion_k, 4);
+
+        let doc = toml::Document::parse(
+            r#"
+[workload]
+default = "retrieval"
+retrieval_k = 6
+dispersion_n = 24
+dispersion_k = 5
+"#,
+        )
+        .unwrap();
+        let mut s = Settings::default();
+        s.apply(&doc).unwrap();
+        assert_eq!(s.workload.default, "retrieval");
+        assert_eq!(s.workload.retrieval_k, 6);
+        assert_eq!(s.workload.dispersion_n, 24);
+        assert_eq!(s.workload.dispersion_k, 5);
     }
 
     #[test]

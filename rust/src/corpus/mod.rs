@@ -13,9 +13,11 @@
 
 pub mod benchmark;
 pub mod synthetic;
+pub mod workloads;
 
 pub use benchmark::{benchmark_set, BenchmarkSet};
 pub use synthetic::{Generator, GeneratorConfig, StreamingFeed};
+pub use workloads::{workload_requests, WorkloadRequest};
 
 /// A document: ordered sentences plus a construction-time reference
 /// summary (indices of the generator's designated key-fact sentences),

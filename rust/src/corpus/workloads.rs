@@ -1,0 +1,132 @@
+//! Pinned request corpora for the non-ES k-of-n workloads.
+//!
+//! Each corpus is a frozen list of [`WorkloadRequest`]s — an id plus the
+//! body lines exactly as a `::WORKLOAD <name>::` client would send them —
+//! so golden fixtures, conformance suites and experiments all iterate
+//! byte-identical inputs:
+//!
+//! | workload     | requests | shape                                  |
+//! |--------------|----------|----------------------------------------|
+//! | `retrieval`  | 12       | 1 query line + 12 candidate passages   |
+//! | `dispersion` | 8        | 1 spec line (`n=.. k=.. seed=..`)      |
+//!
+//! Retrieval passages come from the same synthetic news generator as the
+//! benchmark sets (a fresh seed stream, so they never alias a benchmark
+//! document); dispersion rows span the calibrator's instance-size range.
+
+use anyhow::{bail, Result};
+
+use super::synthetic::{Generator, GeneratorConfig};
+
+/// One pinned workload request: body lines as a TCP client sends them
+/// (see [`crate::service::tcp::WORKLOAD_PREFIX`]).
+#[derive(Debug, Clone)]
+pub struct WorkloadRequest {
+    /// Stable request id (per-request seeds key off it).
+    pub id: String,
+    /// Body lines: candidates, preceded by the query (retrieval) or a
+    /// single instance spec (dispersion).
+    pub lines: Vec<String>,
+}
+
+/// Deterministic seed per corpus — a distinct stream constant from the
+/// benchmark sets', so workload corpora never alias benchmark documents.
+fn corpus_seed(name: &str) -> u64 {
+    crate::text::tokenize::fnv1a(name.as_bytes()) ^ 0xC0B1_E5E5_0000_0002
+}
+
+/// The pinned diverse-retrieval corpus: 12 requests, each one query line
+/// followed by 12 candidate passages.
+pub fn retrieval_requests() -> Vec<WorkloadRequest> {
+    let cfg = GeneratorConfig {
+        topics_per_doc: 3,
+        coherence: 0.55,
+        key_facts: 3,
+    };
+    let mut g = Generator::new(corpus_seed("retrieval_12"), cfg);
+    g.documents("retrieval", 12, 13)
+        .into_iter()
+        .map(|d| WorkloadRequest {
+            id: d.id,
+            lines: d.sentences,
+        })
+        .collect()
+}
+
+/// The pinned facility-dispersion table: 8 instance specs spanning the
+/// calibrator's problem-size range.
+pub fn dispersion_requests() -> Vec<WorkloadRequest> {
+    const ROWS: &[(usize, usize, u64)] = &[
+        (8, 2, 1),
+        (10, 3, 2),
+        (12, 3, 3),
+        (14, 4, 4),
+        (16, 4, 5),
+        (20, 5, 6),
+        (24, 6, 7),
+        (32, 8, 8),
+    ];
+    ROWS.iter()
+        .map(|&(n, k, seed)| WorkloadRequest {
+            id: format!("dispersion-{n:02}-{k:02}"),
+            lines: vec![format!("n={n} k={k} seed={seed}")],
+        })
+        .collect()
+}
+
+/// The pinned request corpus for a registered non-ES workload. (ES runs
+/// the benchmark sets through the legacy pipeline instead — see
+/// [`super::benchmark_set`].)
+pub fn workload_requests(workload: &str) -> Result<Vec<WorkloadRequest>> {
+    match workload {
+        "retrieval" => Ok(retrieval_requests()),
+        "dispersion" => Ok(dispersion_requests()),
+        _ => bail!("no pinned request corpus for workload '{workload}' (try retrieval, dispersion)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn retrieval_corpus_shape_and_reproducibility() {
+        let a = retrieval_requests();
+        assert_eq!(a.len(), 12);
+        for r in &a {
+            assert_eq!(r.lines.len(), 13, "{}: query + 12 passages", r.id);
+        }
+        let b = retrieval_requests();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.lines, y.lines);
+        }
+    }
+
+    #[test]
+    fn retrieval_corpus_does_not_alias_benchmark_documents() {
+        let set = super::super::benchmark_set("bench_10").unwrap();
+        let reqs = retrieval_requests();
+        assert_ne!(set.documents[0].sentences[0], reqs[0].lines[0]);
+    }
+
+    #[test]
+    fn dispersion_table_parses_into_problems() {
+        use crate::workload::dispersion::{DispersionProblem, DispersionSpec};
+        use crate::workload::KOfNProblem;
+        let reqs = dispersion_requests();
+        assert_eq!(reqs.len(), 8);
+        let cfg = crate::config::WorkloadConfig::default();
+        for r in &reqs {
+            let spec = DispersionSpec::parse(&r.lines[0], &cfg).unwrap();
+            let p = DispersionProblem::generate(&r.id, spec.seed, spec.n, spec.k).unwrap();
+            assert!(p.k() >= 2 && p.k() < p.candidates().len(), "{}", r.id);
+        }
+    }
+
+    #[test]
+    fn unknown_workload_corpus_is_error() {
+        assert!(workload_requests("es").is_err());
+        assert!(workload_requests("nope").is_err());
+    }
+}

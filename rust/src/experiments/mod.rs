@@ -16,6 +16,7 @@ pub mod fig6;
 pub mod fig78;
 pub mod supp;
 pub mod table1;
+pub mod workloads;
 
 use anyhow::{bail, Result};
 
@@ -132,6 +133,7 @@ pub const ALL_EXPERIMENTS: &[&str] = &[
     "supp-optima",
     "fault-sweep",
     "energy-report",
+    "workloads",
 ];
 
 /// Run one experiment by id.
@@ -147,6 +149,7 @@ pub fn run(id: &str, scale: Scale, settings: &Settings) -> Result<Vec<Report>> {
         "supp-optima" => supp::run(scale, settings),
         "fault-sweep" => fault_sweep::run(scale, settings),
         "energy-report" => energy_report::run(scale, settings),
+        "workloads" => workloads::run(scale, settings),
         other => bail!("unknown experiment '{other}' (try one of {ALL_EXPERIMENTS:?})"),
     }
 }

@@ -1,0 +1,115 @@
+//! Workload quality table — normalized objective by Ising backend for
+//! the non-ES k-of-n workloads (diverse retrieval, facility dispersion).
+//!
+//! Each pinned corpus request lowers to its generic k-of-n QUBO, exact
+//! Eq. 13 bounds normalize the backend objectives onto [0, 1], and one
+//! table per workload reports the mean/min normalized objective and
+//! feasibility per backend — the cross-workload analogue of the ES
+//! backend comparisons.
+
+use anyhow::Result;
+
+use crate::config::Settings;
+use crate::corpus::workload_requests;
+use crate::ising::{exact_bounds, EsProblem, Formulation};
+use crate::quant::{Precision, Rounding};
+use crate::refine::{refine, RefineConfig};
+use crate::util::stats::mean;
+use crate::workload::problem_from_request;
+
+use super::common::{exp_rng, make_solver};
+use super::{Report, Scale};
+
+/// Backends compared, portfolio order.
+const BACKENDS: &[&str] = &["cobi", "tabu", "sa", "snowball"];
+
+/// Regenerate the per-workload backend-quality tables at `scale`.
+pub fn run(scale: Scale, settings: &Settings) -> Result<Vec<Report>> {
+    let runs = scale.runs(match scale {
+        Scale::Quick => 2,
+        Scale::Full => 5,
+    });
+    let iterations = match scale {
+        Scale::Quick => 4,
+        Scale::Full => 20,
+    };
+    let mut reports = Vec::new();
+    for workload in ["retrieval", "dispersion"] {
+        let reqs = workload_requests(workload)?;
+        let take = scale.docs(reqs.len());
+        // lower each pinned request once; the expensive exact bounds run
+        // once per instance, shared across backends and runs
+        let mut problems = Vec::new();
+        for r in reqs.iter().take(take) {
+            let p = problem_from_request(workload, &r.id, &r.lines, &settings.workload)?;
+            let scores = p.scores()?;
+            let es = EsProblem {
+                mu: scores.mu,
+                beta: scores.beta,
+                lambda: p.lambda().unwrap_or(settings.pipeline.lambda),
+                m: p.k(),
+            };
+            let bounds = exact_bounds(&es);
+            problems.push((es, bounds));
+        }
+        let mut report = Report::new(
+            format!("Workload quality — {workload} (normalized objective by backend)"),
+            &["backend", "mean norm objective", "min norm objective", "feasible"],
+        );
+        report.note(format!(
+            "{take} pinned requests x {runs} runs x {iterations} refinement iterations; \
+             objectives normalized by exact Eq. 13 bounds"
+        ));
+        for &backend in BACKENDS {
+            let mut norms = Vec::new();
+            let mut feasible = true;
+            for (d, (es, bounds)) in problems.iter().enumerate() {
+                for run_idx in 0..runs {
+                    let cfg = RefineConfig {
+                        formulation: Formulation::Improved,
+                        precision: Precision::CobiInt,
+                        rounding: Rounding::Stochastic,
+                        iterations,
+                    };
+                    let mut rng = exp_rng(&format!("workloads-{workload}-{backend}"), run_idx, d);
+                    let mut solver =
+                        make_solver(backend, (run_idx * 1000 + d * 17 + 3) as u64, settings);
+                    let selected = refine(es, &cfg, solver.as_mut(), &mut rng)?.result.selected;
+                    feasible &= selected.len() == es.m;
+                    norms.push(bounds.normalize(es.objective(&selected)));
+                }
+            }
+            let min = norms.iter().copied().fold(f64::INFINITY, f64::min);
+            report.row(vec![
+                backend.to_string(),
+                format!("{:.4}", mean(&norms)),
+                format!("{min:.4}"),
+                feasible.to_string(),
+            ]);
+        }
+        reports.push(report);
+    }
+    Ok(reports)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_run_covers_both_workloads_and_all_backends() {
+        let settings = Settings::default();
+        let reports = run(Scale::Quick, &settings).unwrap();
+        assert_eq!(reports.len(), 2);
+        assert!(reports[0].title.contains("retrieval"), "{}", reports[0].title);
+        assert!(reports[1].title.contains("dispersion"), "{}", reports[1].title);
+        for r in &reports {
+            assert_eq!(r.rows.len(), BACKENDS.len(), "{}", r.title);
+            for row in &r.rows {
+                let m: f64 = row[1].parse().unwrap();
+                assert!((0.0..=1.0 + 1e-9).contains(&m), "{}: {row:?}", r.title);
+                assert_eq!(row[3], "true", "{}: infeasible selection", r.title);
+            }
+        }
+    }
+}

@@ -30,3 +30,4 @@ pub mod service;
 pub mod solvers;
 pub mod text;
 pub mod util;
+pub mod workload;

@@ -58,16 +58,25 @@ pub enum Subsystem {
     Resilience,
     /// The experiment harness.
     Experiment,
+    /// Inline solves of the diverse-retrieval workload (pooled retrieval
+    /// solves are still charged to [`Subsystem::Pool`] — the pool is a
+    /// shared device; the workload axis rides on the solve tag instead).
+    Retrieval,
+    /// Inline solves of the facility-dispersion workload (same pooled
+    /// caveat as [`Subsystem::Retrieval`]).
+    Dispersion,
 }
 
 impl Subsystem {
     /// All subsystems, in ledger-row order.
-    pub const ALL: [Subsystem; 5] = [
+    pub const ALL: [Subsystem; 7] = [
         Subsystem::Pipeline,
         Subsystem::Pool,
         Subsystem::Stream,
         Subsystem::Resilience,
         Subsystem::Experiment,
+        Subsystem::Retrieval,
+        Subsystem::Dispersion,
     ];
 
     /// Stable lowercase label (exposition + JSON).
@@ -78,6 +87,8 @@ impl Subsystem {
             Subsystem::Stream => "stream",
             Subsystem::Resilience => "resilience",
             Subsystem::Experiment => "experiment",
+            Subsystem::Retrieval => "retrieval",
+            Subsystem::Dispersion => "dispersion",
         }
     }
 }
@@ -333,6 +344,24 @@ impl PoolSolver for LedgerSolver {
 
     fn solve_groups(&mut self, groups: &[SeededGroup<'_>]) -> Result<Vec<Vec<SolveResult>>> {
         let out = self.inner.solve_groups(groups)?;
+        self.ledger.charge_sizes(
+            &self.backend,
+            self.subsystem,
+            groups
+                .iter()
+                .flat_map(|g| g.instances.iter().map(|inst| inst.n)),
+        );
+        Ok(out)
+    }
+
+    fn solve_groups_tagged(
+        &mut self,
+        tags: &[u64],
+        groups: &[SeededGroup<'_>],
+    ) -> Result<Vec<Vec<SolveResult>>> {
+        // forward the workload tags (cache scoping below us) and charge
+        // at the same once-per-served-dispatch point as the untagged path
+        let out = self.inner.solve_groups_tagged(tags, groups)?;
         self.ledger.charge_sizes(
             &self.backend,
             self.subsystem,

@@ -93,9 +93,12 @@ impl CacheStats {
 }
 
 struct Entry {
-    // both keys are stored so eviction can clean the indices in O(1)
+    // keys are stored so eviction can clean the indices in O(1)
     exact_key: u64,
     fine_key: u64,
+    /// Workload tag the entry was inserted under (0 = legacy/ES). Near
+    /// tiers are scoped by it; the exact tier deliberately is not.
+    tag: u64,
     ising: Ising,
     spins: Vec<i8>,
     energy: f64,
@@ -107,10 +110,11 @@ struct Inner {
     entries: HashMap<u64, Entry>,
     /// exact_key -> entry ids (collision chain; equality-verified).
     by_exact: HashMap<u64, Vec<u64>>,
-    /// fine near key (n + h sign classes) -> most recent entry id.
+    /// fine near key (workload tag + n + h sign classes) -> most recent
+    /// entry id.
     by_fine: HashMap<u64, u64>,
-    /// n -> most recent entry id.
-    by_size: HashMap<usize, u64>,
+    /// (workload tag, n) -> most recent entry id.
+    by_size: HashMap<(u64, usize), u64>,
     /// Insertion order for FIFO eviction.
     order: VecDeque<u64>,
     next_id: u64,
@@ -166,10 +170,15 @@ pub fn exact_key(ising: &Ising) -> u64 {
     hash
 }
 
-/// Fine near key: n plus the sign class (-, 0, +) of every local field.
-/// Streams like [`exact_key`] — no byte buffer.
-fn fine_key(ising: &Ising) -> u64 {
-    let mut hash = fnv_u64(FNV_OFFSET, ising.n as u64);
+/// Fine near key: the workload tag, then n, then the sign class
+/// (-, 0, +) of every local field. The tag is mixed FIRST so two
+/// workloads whose instances share (n, sign pattern) — common, since
+/// every improved-formulation k-of-n instance has an all-negative h —
+/// can never serve each other warm hints. Streams like [`exact_key`] —
+/// no byte buffer.
+fn fine_key(tag: u64, ising: &Ising) -> u64 {
+    let mut hash = fnv_u64(FNV_OFFSET, tag);
+    hash = fnv_u64(hash, ising.n as u64);
     for &v in &ising.h {
         let class: u64 = if v > 0.0 {
             1
@@ -192,8 +201,20 @@ impl WarmStartCache {
         }
     }
 
-    /// Probe the cache for `ising` (see module docs for the tier order).
+    /// Probe the cache for `ising` under the legacy/ES namespace
+    /// (workload tag 0) — see [`lookup_tagged`](WarmStartCache::lookup_tagged).
     pub fn lookup(&self, ising: &Ising) -> CacheOutcome {
+        self.lookup_tagged(0, ising)
+    }
+
+    /// Probe the cache for `ising` under workload namespace `tag` (see
+    /// module docs for the tier order). The exact tier is deliberately
+    /// tag-blind: an identical quantized instance has an identical ground
+    /// truth regardless of which workload produced it, so serving it
+    /// across workloads is correct and free. The near tiers are scoped by
+    /// `tag`: a warm hint is only a prior, and a prior from a different
+    /// workload's energy landscape is cross-contamination, not reuse.
+    pub fn lookup_tagged(&self, tag: u64, ising: &Ising) -> CacheOutcome {
         let mut guard = self.inner.lock().unwrap();
         // reborrow once so field borrows are precise (stats counters are
         // bumped while sibling indices are still borrowed)
@@ -214,14 +235,14 @@ impl WarmStartCache {
             }
         }
         for id in [
-            inner.by_fine.get(&fine_key(ising)).copied(),
-            inner.by_size.get(&ising.n).copied(),
+            inner.by_fine.get(&fine_key(tag, ising)).copied(),
+            inner.by_size.get(&(tag, ising.n)).copied(),
         ]
         .into_iter()
         .flatten()
         {
             let e = &inner.entries[&id];
-            if e.ising.n == ising.n {
+            if e.tag == tag && e.ising.n == ising.n {
                 let spins = e.spins.clone();
                 inner.stats.warm_hits += 1;
                 return CacheOutcome::Warm(spins);
@@ -231,14 +252,21 @@ impl WarmStartCache {
         CacheOutcome::Miss
     }
 
-    /// Record a solved instance. Re-inserting an identical instance keeps
-    /// the lower-energy solution; otherwise the oldest entry is evicted
-    /// once the capacity bound is reached.
+    /// Record a solved instance under the legacy/ES namespace (workload
+    /// tag 0) — see [`insert_tagged`](WarmStartCache::insert_tagged).
     pub fn insert(&self, ising: &Ising, result: &SolveResult) {
+        self.insert_tagged(0, ising, result);
+    }
+
+    /// Record a solved instance under workload namespace `tag`.
+    /// Re-inserting an identical instance keeps the lower-energy solution
+    /// (and adopts `tag` for its near-tier scope); otherwise the oldest
+    /// entry is evicted once the capacity bound is reached.
+    pub fn insert_tagged(&self, tag: u64, ising: &Ising, result: &SolveResult) {
         let mut guard = self.inner.lock().unwrap();
         let inner = &mut *guard;
         let ek = exact_key(ising);
-        let fk = fine_key(ising);
+        let fk = fine_key(tag, ising);
         let existing = inner
             .by_exact
             .get(&ek)
@@ -249,9 +277,13 @@ impl WarmStartCache {
                 e.spins = result.spins.clone();
                 e.energy = result.energy;
             }
-            // refresh recency of the near indices
+            // adopt the inserting workload's namespace and refresh the
+            // recency of its near indices (the stale-tag indices still
+            // point at a valid same-tag entry or get overwritten later)
+            e.tag = tag;
+            e.fine_key = fk;
             inner.by_fine.insert(fk, id);
-            inner.by_size.insert(ising.n, id);
+            inner.by_size.insert((tag, ising.n), id);
             return;
         }
         while inner.entries.len() >= self.capacity {
@@ -270,8 +302,8 @@ impl WarmStartCache {
                 if inner.by_fine.get(&e.fine_key) == Some(&old) {
                     inner.by_fine.remove(&e.fine_key);
                 }
-                if inner.by_size.get(&e.ising.n) == Some(&old) {
-                    inner.by_size.remove(&e.ising.n);
+                if inner.by_size.get(&(e.tag, e.ising.n)) == Some(&old) {
+                    inner.by_size.remove(&(e.tag, e.ising.n));
                 }
                 inner.stats.evictions += 1;
             }
@@ -283,6 +315,7 @@ impl WarmStartCache {
             Entry {
                 exact_key: ek,
                 fine_key: fk,
+                tag,
                 ising: ising.clone(),
                 spins: result.spins.clone(),
                 energy: result.energy,
@@ -290,7 +323,7 @@ impl WarmStartCache {
         );
         inner.by_exact.entry(ek).or_default().push(id);
         inner.by_fine.insert(fk, id);
-        inner.by_size.insert(ising.n, id);
+        inner.by_size.insert((tag, ising.n), id);
         inner.order.push_back(id);
         inner.stats.inserts += 1;
     }
@@ -453,6 +486,54 @@ mod tests {
         assert!(matches!(cache.lookup(&c), CacheOutcome::Exact(_)));
         // a now only warm-hits via the survivors' near keys
         assert!(!matches!(cache.lookup(&a), CacheOutcome::Exact(_)));
+    }
+
+    #[test]
+    fn near_tiers_are_scoped_per_workload_tag() {
+        // the cross-workload poisoning regression: two workloads with
+        // identical instance sizes (and identical all-negative h sign
+        // patterns, the improved formulation's shape) must never serve
+        // each other warm hints — only the equality-verified exact tier
+        // may cross tags
+        const ES: u64 = 0;
+        const RETRIEVAL: u64 = 0x1234_5678_9ABC_DEF0;
+        let cache = WarmStartCache::new(16);
+        let a = glass(30, 12);
+        let b = glass(31, 12); // same n, different coefficients
+        cache.insert_tagged(RETRIEVAL, &a, &solved(vec![-1; 12], -4.0));
+
+        // same tag, same n: warm hint served
+        assert!(matches!(cache.lookup_tagged(RETRIEVAL, &b), CacheOutcome::Warm(_)));
+        // other tag, same n: MISS — no cross-workload hint
+        assert!(matches!(cache.lookup_tagged(ES, &b), CacheOutcome::Miss));
+
+        // identical instance: exact tier serves across tags (same
+        // quantized Hamiltonian ⇒ same ground truth, tag-independent)
+        assert!(matches!(cache.lookup_tagged(ES, &a), CacheOutcome::Exact(_)));
+
+        // and the reverse direction: an ES entry never warms retrieval
+        let c = glass(32, 14);
+        let d = glass(33, 14);
+        cache.insert(&c, &solved(vec![1; 14], -2.0)); // legacy insert = tag 0
+        assert!(matches!(cache.lookup(&d), CacheOutcome::Warm(_)));
+        assert!(matches!(cache.lookup_tagged(RETRIEVAL, &d), CacheOutcome::Miss));
+    }
+
+    #[test]
+    fn tag_scoped_eviction_cleans_the_right_indices() {
+        const TAG: u64 = 77;
+        let cache = WarmStartCache::new(2);
+        let a = glass(40, 8);
+        let b = glass(41, 8);
+        let c = glass(42, 8);
+        cache.insert_tagged(TAG, &a, &solved(vec![1; 8], 0.0));
+        cache.insert_tagged(TAG, &b, &solved(vec![1; 8], 0.0));
+        cache.insert_tagged(TAG, &c, &solved(vec![1; 8], 0.0)); // evicts a
+        let s = cache.stats();
+        assert_eq!((s.entries, s.evictions), (2, 1));
+        // survivors still serve their own tag, and only their own tag
+        assert!(matches!(cache.lookup_tagged(TAG, &a), CacheOutcome::Warm(_)));
+        assert!(matches!(cache.lookup_tagged(0, &a), CacheOutcome::Miss));
     }
 
     #[test]

@@ -383,9 +383,13 @@ impl SolverPortfolio {
     /// inside the failed dispatch. (Cache inserts stay eager: re-inserting
     /// an identical instance is an in-place update, and a retried group
     /// then exact-hits its own earlier results — same bytes, less work.)
+    /// `tag` is the workload tag (0 = legacy/ES): it scopes the cache's
+    /// near tiers so a warm hint never crosses workloads (the exact tier
+    /// is tag-blind by design — see `cache::WarmStartCache`).
     fn solve_group_inner(
         &mut self,
         g: &SeededGroup<'_>,
+        tag: u64,
     ) -> Result<(Vec<SolveResult>, GroupTelemetry)> {
         ensure!(!g.instances.is_empty(), "empty solve group");
         let backend = self.choose(&g.instances[0], g.seed);
@@ -396,7 +400,7 @@ impl SolverPortfolio {
         let mut todo: Vec<(usize, Option<Vec<i8>>)> = Vec::with_capacity(count);
         if self.cache_enabled {
             for (i, inst) in g.instances.iter().enumerate() {
-                match self.shared.cache.lookup(inst) {
+                match self.shared.cache.lookup_tagged(tag, inst) {
                     CacheOutcome::Exact(r) => out[i] = Some(r),
                     CacheOutcome::Warm(init) => todo.push((i, Some(init))),
                     CacheOutcome::Miss => todo.push((i, None)),
@@ -487,7 +491,7 @@ impl SolverPortfolio {
         if self.cache_enabled {
             for (i, _) in &todo {
                 if let Some(r) = &out[*i] {
-                    self.shared.cache.insert(&g.instances[*i], r);
+                    self.shared.cache.insert_tagged(tag, &g.instances[*i], r);
                 }
             }
         }
@@ -543,10 +547,13 @@ impl SolverPortfolio {
     /// Solve a single instance under an explicit request seed — the
     /// seeded, `Result`-carrying counterpart of [`IsingSolver::solve`].
     pub fn solve_one(&mut self, ising: &Ising, seed: u64) -> Result<SolveResult> {
-        let (mut res, telemetry) = self.solve_group_inner(&SeededGroup {
-            instances: std::slice::from_ref(ising),
-            seed,
-        })?;
+        let (mut res, telemetry) = self.solve_group_inner(
+            &SeededGroup {
+                instances: std::slice::from_ref(ising),
+                seed,
+            },
+            0,
+        )?;
         self.commit(std::slice::from_ref(&telemetry));
         Ok(res.pop().expect("one instance in, one result out"))
     }
@@ -569,10 +576,25 @@ impl PoolSolver for SolverPortfolio {
     }
 
     fn solve_groups(&mut self, groups: &[SeededGroup<'_>]) -> Result<Vec<Vec<SolveResult>>> {
+        let tags = vec![0; groups.len()];
+        self.solve_groups_tagged(&tags, groups)
+    }
+
+    fn solve_groups_tagged(
+        &mut self,
+        tags: &[u64],
+        groups: &[SeededGroup<'_>],
+    ) -> Result<Vec<Vec<SolveResult>>> {
+        ensure!(
+            tags.len() == groups.len(),
+            "tag/group count mismatch: {} vs {}",
+            tags.len(),
+            groups.len()
+        );
         let mut out = Vec::with_capacity(groups.len());
         let mut deltas = Vec::with_capacity(groups.len());
-        for g in groups {
-            let (results, telemetry) = self.solve_group_inner(g)?;
+        for (g, &tag) in groups.iter().zip(tags) {
+            let (results, telemetry) = self.solve_group_inner(g, tag)?;
             out.push(results);
             deltas.push(telemetry);
         }

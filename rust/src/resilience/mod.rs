@@ -283,10 +283,13 @@ impl ResilientSolver {
     /// docs). `predispatched` carries this group's `replication` replica
     /// results when the caller already dispatched them (the fused path
     /// of [`PoolSolver::solve_groups`]); `None` dispatches here, with
-    /// fresh-seed retries on failure.
+    /// fresh-seed retries on failure. `tag` is the request's workload
+    /// tag, forwarded on every inner dispatch (replicas and retries of
+    /// one request stay inside its workload's cache scope).
     fn solve_group(
         &mut self,
         g: &SeededGroup<'_>,
+        tag: u64,
         predispatched: Option<&[Vec<SolveResult>]>,
         delta: &mut Delta,
     ) -> Result<Vec<SolveResult>> {
@@ -315,7 +318,7 @@ impl ResilientSolver {
                             seed: replica_seed(g.seed, (attempt * r + k) as u64),
                         })
                         .collect();
-                    match self.inner.solve_groups(&groups) {
+                    match self.inner.solve_groups_tagged(&vec![tag; groups.len()], &groups) {
                         Ok(v) => {
                             delta.replica_solves += (r * count) as u64;
                             got = Some(v);
@@ -359,10 +362,13 @@ impl ResilientSolver {
                         replica_seed(g.seed, RETRY_SALT ^ ((i as u64) << 8) ^ attempt as u64);
                     let retried = self
                         .inner
-                        .solve_groups(&[SeededGroup {
-                            instances: std::slice::from_ref(inst),
-                            seed,
-                        }])
+                        .solve_groups_tagged(
+                            &[tag],
+                            &[SeededGroup {
+                                instances: std::slice::from_ref(inst),
+                                seed,
+                            }],
+                        )
                         .ok()
                         .and_then(|mut v| v.pop())
                         .and_then(|mut v| v.pop());
@@ -438,6 +444,21 @@ impl PoolSolver for ResilientSolver {
     }
 
     fn solve_groups(&mut self, groups: &[SeededGroup<'_>]) -> Result<Vec<Vec<SolveResult>>> {
+        let tags = vec![0; groups.len()];
+        self.solve_groups_tagged(&tags, groups)
+    }
+
+    fn solve_groups_tagged(
+        &mut self,
+        tags: &[u64],
+        groups: &[SeededGroup<'_>],
+    ) -> Result<Vec<Vec<SolveResult>>> {
+        ensure!(
+            tags.len() == groups.len(),
+            "tag/group count mismatch: {} vs {}",
+            tags.len(),
+            groups.len()
+        );
         let mut delta = Delta::default();
         let r = self.replication;
         // ONE fused dispatch covering every coalesced group's replicas:
@@ -447,7 +468,8 @@ impl PoolSolver for ResilientSolver {
         // failure, each group falls back to its own dispatch-with-
         // retries (attempt 0 replays the identical replica seeds, so
         // per-request determinism is unaffected — same discipline as
-        // the pool's own coalesced-failure retry).
+        // the pool's own coalesced-failure retry). Each group's workload
+        // tag is repeated across its r replicas.
         let fused: Vec<SeededGroup<'_>> = groups
             .iter()
             .flat_map(|g| {
@@ -457,7 +479,8 @@ impl PoolSolver for ResilientSolver {
                 })
             })
             .collect();
-        let fused_result = match self.inner.solve_groups(&fused) {
+        let fused_tags: Vec<u64> = tags.iter().flat_map(|&t| (0..r).map(move |_| t)).collect();
+        let fused_result = match self.inner.solve_groups_tagged(&fused_tags, &fused) {
             Ok(v) => Some(v),
             Err(_) => {
                 delta.retries += 1;
@@ -465,9 +488,9 @@ impl PoolSolver for ResilientSolver {
             }
         };
         let mut out = Vec::with_capacity(groups.len());
-        for (gi, g) in groups.iter().enumerate() {
+        for (gi, (g, &tag)) in groups.iter().zip(tags).enumerate() {
             let pre = fused_result.as_ref().map(|v| &v[gi * r..(gi + 1) * r]);
-            match self.solve_group(g, pre, &mut delta) {
+            match self.solve_group(g, tag, pre, &mut delta) {
                 Ok(res) => out.push(res),
                 Err(e) => {
                     self.commit(delta);

@@ -167,9 +167,23 @@ pub fn summarize_with_pool_traced(
     obs: &ObsShared,
 ) -> Result<(Summary, Option<Span>)> {
     let mut embedder = HashEmbedder::new();
+    summarize_with_pool_traced_using(doc, cfg, client, obs, &mut embedder)
+}
+
+/// As [`summarize_with_pool_traced`], with a caller-provided embedder
+/// (ignored for `Strategy::Streaming` — see
+/// [`summarize_with_pool_using`]). The workload layer routes non-ES
+/// selections through this with precomputed scores.
+pub fn summarize_with_pool_traced_using(
+    doc: &Document,
+    cfg: &PipelineConfig,
+    client: &mut PoolClient,
+    obs: &ObsShared,
+    embedder: &mut dyn Embedder,
+) -> Result<(Summary, Option<Span>)> {
     let mut root = obs.start_request(&doc.id);
     let trace = root.as_mut().map(|r| Trace { obs, root: r });
-    let summary = pool_exec(doc, cfg, client, &mut embedder, trace)?;
+    let summary = pool_exec(doc, cfg, client, embedder, trace)?;
     Ok((summary, root))
 }
 
@@ -312,9 +326,22 @@ pub fn summarize_sequential_traced(
     obs: &ObsShared,
 ) -> Result<(Summary, Option<Span>)> {
     let mut embedder = HashEmbedder::new();
+    summarize_sequential_traced_using(doc, cfg, solver, obs, &mut embedder)
+}
+
+/// As [`summarize_sequential_traced`], with a caller-provided embedder
+/// (ignored for `Strategy::Streaming` — see
+/// [`summarize_with_pool_using`]).
+pub fn summarize_sequential_traced_using(
+    doc: &Document,
+    cfg: &PipelineConfig,
+    solver: &mut dyn PoolSolver,
+    obs: &ObsShared,
+    embedder: &mut dyn Embedder,
+) -> Result<(Summary, Option<Span>)> {
     let mut root = obs.start_request(&doc.id);
     let trace = root.as_mut().map(|r| Trace { obs, root: r });
-    let summary = seq_exec(doc, cfg, solver, &mut embedder, trace)?;
+    let summary = seq_exec(doc, cfg, solver, embedder, trace)?;
     Ok((summary, root))
 }
 

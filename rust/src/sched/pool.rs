@@ -78,6 +78,24 @@ pub trait PoolSolver: Send {
     /// function of (instances, group seed, solver config) — independent
     /// of co-batched groups and of any earlier requests.
     fn solve_groups(&mut self, groups: &[SeededGroup<'_>]) -> Result<Vec<Vec<SolveResult>>>;
+
+    /// As [`solve_groups`](PoolSolver::solve_groups), with one workload
+    /// tag per group (`tags.len() == groups.len()`). Tags never change
+    /// *what* a group answers — results stay a pure function of
+    /// (instances, seed, config) — they only scope cross-request reuse:
+    /// the portfolio keys its warm-start near tiers by tag so workloads
+    /// sharing an instance size cannot poison each other's hints (tag 0
+    /// is the legacy/ES namespace). Solvers with no reuse state ignore
+    /// tags, which is what this default does.
+    fn solve_groups_tagged(
+        &mut self,
+        tags: &[u64],
+        groups: &[SeededGroup<'_>],
+    ) -> Result<Vec<Vec<SolveResult>>> {
+        debug_assert_eq!(tags.len(), groups.len());
+        let _ = tags;
+        self.solve_groups(groups)
+    }
 }
 
 impl PoolSolver for CobiDevice {
@@ -269,6 +287,9 @@ pub(crate) fn build_solver(
 struct SolveRequest {
     instances: Vec<Ising>,
     seed: u64,
+    /// Workload tag stamped by the submitting client (0 = legacy/ES);
+    /// scopes warm-start reuse, never the answer itself.
+    tag: u64,
     enqueued: Instant,
     /// Request deadline, if the submitting client carries one; devices
     /// drop expired requests before dispatch (typed error reply).
@@ -384,6 +405,7 @@ impl PoolHandle {
             tx: self.tx.clone(),
             seeds: Pcg32::new(seed, CLIENT_SEED_STREAM),
             deadline: None,
+            workload_tag: 0,
         }
     }
 }
@@ -399,6 +421,9 @@ pub struct PoolClient {
     /// Deadline stamped onto every request this client submits (the
     /// worker sets it from the job before executing the document's DAG).
     deadline: Option<Deadline>,
+    /// Workload tag stamped onto every request (0 = legacy/ES). Set by
+    /// the workload layer via [`set_workload_tag`](PoolClient::set_workload_tag).
+    workload_tag: u64,
 }
 
 /// In-flight solve; `wait` blocks for the device's answer.
@@ -427,6 +452,14 @@ impl PoolClient {
         self.deadline
     }
 
+    /// Set the workload tag stamped onto subsequent submits (0 = the
+    /// legacy/ES namespace, the default). Tags scope warm-start reuse on
+    /// the devices per workload ([`crate::workload::workload_tag`]); they
+    /// never change what a request answers.
+    pub fn set_workload_tag(&mut self, tag: u64) {
+        self.workload_tag = tag;
+    }
+
     /// Submit one request (all instances solved under one request seed
     /// drawn from the client's per-document stream). Blocks only when the
     /// pool queue is full (bounded backpressure); the solve itself
@@ -449,6 +482,7 @@ impl PoolClient {
         let req = SolveRequest {
             instances,
             seed,
+            tag: self.workload_tag,
             enqueued: Instant::now(),
             deadline: self.deadline,
             respond: rtx,
@@ -778,10 +812,11 @@ fn device_loop(
                 seed: r.seed,
             })
             .collect();
+        let tags: Vec<u64> = batch.iter().map(|r| r.tag).collect();
         // contain a panicking dispatch: the job fails, the device (and
         // its siblings, via the poison-tolerant locks) keeps serving
         let solved = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            solver.solve_groups(&groups)
+            solver.solve_groups_tagged(&tags, &groups)
         }))
         .unwrap_or_else(|_| Err(anyhow!("device solver panicked during dispatch")));
         drop(groups);
@@ -826,10 +861,13 @@ fn device_loop(
                 for req in batch {
                     let tr = Instant::now();
                     let res = solver
-                        .solve_groups(&[SeededGroup {
-                            instances: &req.instances,
-                            seed: req.seed,
-                        }])
+                        .solve_groups_tagged(
+                            &[req.tag],
+                            &[SeededGroup {
+                                instances: &req.instances,
+                                seed: req.seed,
+                            }],
+                        )
                         .map(|mut v| v.remove(0))
                         .map_err(|e| {
                             anyhow!("pool dispatch on '{}' failed: {e:#}", solver.name())

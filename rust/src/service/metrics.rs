@@ -76,6 +76,50 @@ impl StrategyMetrics {
     }
 }
 
+/// Per-workload completion counters for the k-of-n selection platform.
+/// The ES counter absorbs legacy untagged submits (empty workload), and
+/// the report fragment is gated on [`any_non_es`], so an ES-only
+/// service's report stays byte-identical to a pre-platform build.
+///
+/// [`any_non_es`]: WorkloadMetrics::any_non_es
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WorkloadMetrics {
+    /// Completed extractive-summarization requests (including legacy
+    /// untagged submits).
+    pub es: u64,
+    /// Completed diverse-retrieval requests.
+    pub retrieval: u64,
+    /// Completed facility-dispersion requests.
+    pub dispersion: u64,
+}
+
+impl WorkloadMetrics {
+    /// Count one completed request under `workload` (`""` counts as ES;
+    /// names outside the registry are ignored — the service validates
+    /// workloads at admission, so none can complete).
+    pub fn record(&mut self, workload: &str) {
+        match workload {
+            "" | "es" => self.es += 1,
+            "retrieval" => self.retrieval += 1,
+            "dispersion" => self.dispersion += 1,
+            _ => {}
+        }
+    }
+
+    /// Did any non-ES workload complete? Gates the report fragment.
+    pub fn any_non_es(&self) -> bool {
+        self.retrieval > 0 || self.dispersion > 0
+    }
+
+    /// One-line report fragment.
+    pub fn report(&self) -> String {
+        format!(
+            "workload es={} retrieval={} dispersion={}",
+            self.es, self.retrieval, self.dispersion
+        )
+    }
+}
+
 /// Overload-safety counters: deadline expiries, admission-control sheds,
 /// contained worker panics and graceful-drain accounting. The block is
 /// always present (not an `Option`) but all-zero under the defaults-off
@@ -286,6 +330,9 @@ pub struct ServiceMetrics {
     pub solve_hist: Histogram,
     /// Per-strategy completions + streaming-session activity.
     pub strategies: StrategyMetrics,
+    /// Per-workload completions (quiet in the report until a non-ES
+    /// workload completes).
+    pub workloads: WorkloadMetrics,
     /// Device-pool snapshot (zero-valued when the pool is disabled).
     pub pool: PoolMetrics,
     /// Solver-portfolio snapshot: per-backend route counts, cache
@@ -345,6 +392,10 @@ impl ServiceMetrics {
         if self.strategies.total() > 0 || self.strategies.stream_sessions > 0 {
             out.push_str(" | ");
             out.push_str(&self.strategies.report());
+        }
+        if self.workloads.any_non_es() {
+            out.push_str(" | ");
+            out.push_str(&self.workloads.report());
         }
         if self.pool.devices > 0 {
             out.push_str(" | ");
@@ -554,6 +605,22 @@ mod tests {
         m.strategies.stream_revisions = 5;
         let r = m.report();
         assert!(r.contains("sessions=2 chunks=7 revisions=5"), "{r}");
+    }
+
+    #[test]
+    fn workload_counters_stay_quiet_until_a_non_es_workload_completes() {
+        let mut m = ServiceMetrics::default();
+        m.workloads.record("");
+        m.workloads.record("es");
+        assert_eq!(m.workloads.es, 2, "empty tag counts as ES");
+        assert!(!m.workloads.any_non_es());
+        assert!(!m.report().contains("workload"), "ES-only report stays quiet");
+        m.workloads.record("retrieval");
+        m.workloads.record("dispersion");
+        m.workloads.record("dispersion");
+        m.workloads.record("not-registered");
+        let r = m.report();
+        assert!(r.contains("workload es=2 retrieval=1 dispersion=2"), "{r}");
     }
 
     #[test]

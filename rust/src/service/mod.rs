@@ -45,7 +45,7 @@ use crate::runtime::ArtifactRuntime;
 use crate::sched::pool::PoolSolver;
 use crate::sched::{self, DevicePool, PoolClient, StreamRoute, StreamSummarizer};
 
-pub use metrics::{OverloadMetrics, ServiceMetrics, StrategyMetrics};
+pub use metrics::{OverloadMetrics, ServiceMetrics, StrategyMetrics, WorkloadMetrics};
 pub use overload::{AdmissionController, Deadline, DeadlineExceeded, Shed, Tier};
 use worker::{spawn_workers, Job, SolveRoute};
 
@@ -64,6 +64,11 @@ pub struct SubmitOptions {
     pub tier: Tier,
     /// Explicit deadline; `None` applies the configured default.
     pub deadline: Option<Deadline>,
+    /// Registered workload name (`crate::workload::WORKLOADS`). The empty
+    /// default means ES — the legacy text path, byte-identical to every
+    /// pre-platform release. Non-ES requests carry their body in the
+    /// document's sentences (see `crate::workload::problem_from_request`).
+    pub workload: &'static str,
 }
 
 /// Outcome of a graceful drain (see [`Service::drain`]).
@@ -384,6 +389,7 @@ impl Service {
             enqueued: Instant::now(),
             tier: opts.tier,
             deadline,
+            workload: opts.workload,
         };
         match self.tx.try_send(job) {
             Ok(()) => {

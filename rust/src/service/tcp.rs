@@ -17,6 +17,11 @@
 //! Prometheus-style text exposition — counters, latency histograms and
 //! the fleet energy-ledger series — as `OK <n>` + n exposition lines.
 //!
+//! A header line of `::WORKLOAD <name>::` before the body routes the
+//! request to a registered k-of-n workload instead of ES summarization
+//! (see [`WORKLOAD_PREFIX`]): the body becomes one candidate per line
+//! and the reply lists the selected candidates.
+//!
 //! A first line of exactly `::STREAM::` opens a `SUMMARIZE_STREAM`
 //! session: the client sends document text in chunks, each terminated by
 //! a `::CHUNK::` line; after every chunk the server replies with a
@@ -60,6 +65,13 @@ pub const BATCH_MARKER: &str = "::BATCH::";
 /// Admin frame requesting a graceful drain: the server stops accepting
 /// new connections and the serve loop finishes in-flight work.
 pub const DRAIN_MARKER: &str = "::DRAIN::";
+/// Header-line prefix routing the request to a registered k-of-n
+/// workload: `::WORKLOAD <name>::` before the body. The body is then one
+/// candidate per line (for `retrieval` the first line is the query; for
+/// `dispersion` the single body line is an instance spec such as
+/// `n=16 k=4 seed=7`), and the `OK <k>` reply lists the selected
+/// candidates. Without this header the request is an ES summarize.
+pub const WORKLOAD_PREFIX: &str = "::WORKLOAD ";
 
 /// A running TCP endpoint over a Service.
 pub struct TcpServer {
@@ -227,6 +239,23 @@ fn handle_connection(
             opts.tier = Tier::Batch;
             continue;
         }
+        if let Some(rest) = trimmed.strip_prefix(WORKLOAD_PREFIX) {
+            match rest
+                .strip_suffix("::")
+                .map(str::trim)
+                .and_then(crate::workload::resolve)
+            {
+                Some(name) => {
+                    opts.workload = name;
+                    continue;
+                }
+                None => {
+                    let mut out = stream;
+                    writeln!(out, "ERR unknown workload: {trimmed}")?;
+                    return Ok(());
+                }
+            }
+        }
         if trimmed.starts_with("::") && trimmed.ends_with("::") && trimmed.len() > 4 {
             // any other ::marker:: here is a protocol error (::CHUNK::
             // without ::STREAM::, mid-document ::STATS::, typos): answer
@@ -249,7 +278,23 @@ fn handle_connection(
         writeln!(out, "ERR empty document")?;
         return Ok(());
     }
-    let doc = Document::from_text(&format!("tcp-{id}"), &text);
+    let doc = if opts.workload.is_empty() {
+        Document::from_text(&format!("tcp-{id}"), &text)
+    } else {
+        // workload requests are line-framed, not sentence-split: each
+        // non-empty body line is one candidate (or header line) exactly
+        // as sent, so selections echo client lines byte-for-byte
+        Document {
+            id: format!("tcp-{id}"),
+            sentences: text
+                .lines()
+                .map(str::trim)
+                .filter(|l| !l.is_empty())
+                .map(String::from)
+                .collect(),
+            reference: Vec::new(),
+        }
+    };
     let reply = service
         .submit_with(doc, opts)
         .and_then(|ticket| ticket.wait());
@@ -485,6 +530,28 @@ pub fn summarize_remote(addr: std::net::SocketAddr, text: &str) -> Result<Vec<St
     }
 }
 
+/// Blocking client for a `::WORKLOAD <name>::` request: sends the header
+/// plus one body line per entry (for `retrieval`: the query first, then
+/// the candidate passages; for `dispersion`: one instance-spec line);
+/// returns the selected candidate lines from the `OK <k>` reply.
+pub fn select_remote(
+    addr: std::net::SocketAddr,
+    workload: &str,
+    lines: &[&str],
+) -> Result<Vec<String>> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.write_all(format!("{WORKLOAD_PREFIX}{workload}::\n").as_bytes())?;
+    for l in lines {
+        stream.write_all(l.as_bytes())?;
+        stream.write_all(b"\n")?;
+    }
+    stream.write_all(format!("{EOF_MARKER}\n").as_bytes())?;
+    let mut reader = BufReader::new(stream);
+    let (tag, out) = read_reply(&mut reader)?;
+    anyhow::ensure!(tag == "OK", "expected an OK reply, got {tag}");
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -694,6 +761,63 @@ mod tests {
         let m = svc.metrics();
         assert_eq!(m.completed, 1);
         assert_eq!(m.overload.deadline_exceeded, 1);
+        server.stop();
+    }
+
+    #[test]
+    fn tcp_workload_request_selects_candidate_lines() {
+        let mut settings = Settings::default();
+        settings.service.workers = 1;
+        settings.pipeline.solver = "tabu".into();
+        settings.pipeline.iterations = 2;
+        let svc = Arc::new(Service::start(&settings).unwrap());
+        let server = TcpServer::start(svc.clone(), 0).unwrap();
+
+        let lines = [
+            "ising machines for combinatorial optimization",
+            "the cmos ising chip anneals coupled spins",
+            "a recipe for sourdough bread with rye flour",
+            "quantum annealers embed qubo problems",
+            "league standings after the weekend fixtures",
+            "simulated annealing is a classical baseline",
+            "gardening tips for late-summer tomatoes",
+        ];
+        let selected = select_remote(server.addr, "retrieval", &lines).unwrap();
+        assert_eq!(selected.len(), settings.workload.retrieval_k);
+        for s in &selected {
+            assert!(
+                lines[1..].contains(&s.as_str()),
+                "selected line not a candidate passage: {s}"
+            );
+        }
+        // a second identical request selects identically (seeded end to end)
+        let again = select_remote(server.addr, "retrieval", &lines).unwrap();
+        assert_eq!(selected, again);
+
+        // dispersion: one spec line in, k site lines out
+        let sites = select_remote(server.addr, "dispersion", &["n=12 k=3 seed=9"]).unwrap();
+        assert_eq!(sites.len(), 3);
+
+        // workload completions surface in the stats report
+        let report = stats_remote(server.addr).unwrap();
+        assert!(report.contains("workload es=0 retrieval=2 dispersion=1"), "{report}");
+        server.stop();
+    }
+
+    #[test]
+    fn tcp_unknown_workload_is_a_clean_error() {
+        let mut settings = Settings::default();
+        settings.service.workers = 1;
+        settings.pipeline.solver = "tabu".into();
+        settings.pipeline.iterations = 1;
+        let svc = Arc::new(Service::start(&settings).unwrap());
+        let server = TcpServer::start(svc.clone(), 0).unwrap();
+        let line = raw_request(server.addr, "::WORKLOAD nope::\n");
+        assert!(line.contains("unknown workload"), "{line}");
+        // a retrieval request with no passages fails without crashing
+        let err = select_remote(server.addr, "retrieval", &["query only"]).unwrap_err();
+        assert!(err.to_string().contains("server error"), "{err}");
+        assert_eq!(svc.metrics().completed, 0);
         server.stop();
     }
 

@@ -48,6 +48,8 @@ pub struct Job {
     /// End-to-end deadline; checked before dequeue-to-solve and again at
     /// every pool dispatch level, so expired work never burns device time.
     pub deadline: Option<Deadline>,
+    /// Registered workload name; empty = ES (the legacy text path).
+    pub workload: &'static str,
 }
 
 /// How workers perform Ising solves.
@@ -93,11 +95,49 @@ pub fn spawn_workers(
             Some(handle) => {
                 let handle = handle.clone();
                 let obs = obs.clone();
+                let workload_cfg = settings.workload.clone();
                 Box::new(
                     move |doc: &Document,
                           queue_wait: Duration,
                           deadline: Option<Deadline>,
-                          tier: Tier| {
+                          tier: Tier,
+                          workload: &'static str| {
+                        if !workload.is_empty() && workload != "es" {
+                            // non-ES workload: the body lines travel in
+                            // doc.sentences; build the problem and route
+                            // it through the platform seam (salted seed,
+                            // tagged pool client). Deadlines are checked
+                            // at the queue boundary; re-check here since
+                            // this path sets no client deadline.
+                            if let Some(d) = deadline {
+                                if d.expired() {
+                                    return Err(d.exceeded().into());
+                                }
+                            }
+                            let problem = crate::workload::problem_from_request(
+                                workload,
+                                &doc.id,
+                                &doc.sentences,
+                                &workload_cfg,
+                            )?;
+                            let t0 = Instant::now();
+                            let (summary, mut root) = crate::workload::select_with_pool_obs(
+                                problem.as_ref(),
+                                &base_cfg,
+                                &handle,
+                                Some(&obs),
+                            )?;
+                            if let Some(r) = root.as_mut() {
+                                r.set("tier", tier.as_str());
+                            }
+                            obs.finish_request(
+                                root,
+                                &doc.id,
+                                queue_wait.as_secs_f64(),
+                                t0.elapsed().as_secs_f64(),
+                            );
+                            return Ok(summary);
+                        }
                         // seeds keyed to the DOCUMENT: any worker produces
                         // the same bytes for the same (config, doc)
                         let seed = sched::doc_seed(base_cfg.seed, &doc.id);
@@ -149,11 +189,13 @@ pub fn spawn_workers(
                 };
                 let obs = obs.clone();
                 let strategy = cfg.strategy;
+                let local_settings = settings.clone();
                 Box::new(
                     move |doc: &Document,
                           queue_wait: Duration,
                           deadline: Option<Deadline>,
-                          tier: Tier| {
+                          tier: Tier,
+                          workload: &'static str| {
                         // the local pipeline is opaque to per-unit spans:
                         // trace at request granularity (route + score).
                         // Deadlines are enforced at the queue boundary
@@ -164,6 +206,38 @@ pub fn spawn_workers(
                             if d.expired() {
                                 return Err(d.exceeded().into());
                             }
+                        }
+                        if !workload.is_empty() && workload != "es" {
+                            // non-ES on the local route: a fresh inline
+                            // solver per request (the worker's pipeline
+                            // is an ES text pipeline); solves are charged
+                            // to the workload's ledger subsystem. The HLO
+                            // artifact runtime cannot cross into worker
+                            // threads, so workload requests run the
+                            // native backends here.
+                            let problem = crate::workload::problem_from_request(
+                                workload,
+                                &doc.id,
+                                &doc.sentences,
+                                &local_settings.workload,
+                            )?;
+                            let t0 = Instant::now();
+                            let (summary, mut root) = crate::workload::select_inline_obs(
+                                problem.as_ref(),
+                                &local_settings,
+                                None,
+                                Some(&obs),
+                            )?;
+                            if let Some(r) = root.as_mut() {
+                                r.set("tier", tier.as_str());
+                            }
+                            obs.finish_request(
+                                root,
+                                &doc.id,
+                                queue_wait.as_secs_f64(),
+                                t0.elapsed().as_secs_f64(),
+                            );
+                            return Ok(summary);
                         }
                         let mut root = obs.start_request(&doc.id);
                         if let Some(r) = root.as_mut() {
@@ -215,13 +289,15 @@ pub fn spawn_workers(
     Ok(handles)
 }
 
-/// Per-worker solve function: (document, queue wait, deadline, tier).
-type SolveFn =
-    Box<dyn FnMut(&Document, Duration, Option<Deadline>, Tier) -> Result<Summary> + Send>;
+/// Per-worker solve function: (document, queue wait, deadline, tier,
+/// workload name — empty for ES).
+type SolveFn = Box<
+    dyn FnMut(&Document, Duration, Option<Deadline>, Tier, &'static str) -> Result<Summary> + Send,
+>;
 
 #[allow(clippy::too_many_arguments)]
 fn worker_loop(
-    solve: &mut dyn FnMut(&Document, Duration, Option<Deadline>, Tier) -> Result<Summary>,
+    solve: &mut dyn FnMut(&Document, Duration, Option<Deadline>, Tier, &'static str) -> Result<Summary>,
     rx: &Arc<Mutex<Receiver<Job>>>,
     metrics: &Arc<Mutex<ServiceMetrics>>,
     inflight: &Arc<AtomicUsize>,
@@ -278,7 +354,7 @@ fn worker_loop(
             // with an error and lives on to serve the next job, instead
             // of taking its thread (and a share of fleet capacity) down
             let result = catch_unwind(AssertUnwindSafe(|| {
-                solve(&job.doc, queue_wait, job.deadline, job.tier)
+                solve(&job.doc, queue_wait, job.deadline, job.tier, job.workload)
             }))
             .unwrap_or_else(|_| {
                 metrics
@@ -295,6 +371,7 @@ fn worker_loop(
                     Ok(_) => {
                         m.completed += 1;
                         m.strategies.record(strategy);
+                        m.workloads.record(job.workload);
                     }
                     Err(e) => {
                         m.failed += 1;
@@ -352,7 +429,7 @@ mod tests {
         /// Run `worker_loop` on a thread with the given solve function.
         fn spawn(
             &self,
-            mut solve: impl FnMut(&Document, Duration, Option<Deadline>, Tier) -> Result<Summary>
+            mut solve: impl FnMut(&Document, Duration, Option<Deadline>, Tier, &'static str) -> Result<Summary>
                 + Send
                 + 'static,
         ) -> std::thread::JoinHandle<()> {
@@ -387,6 +464,7 @@ mod tests {
                     enqueued: Instant::now(),
                     tier: Tier::Interactive,
                     deadline,
+                    workload: "",
                 })
                 .unwrap();
             orx
@@ -396,7 +474,7 @@ mod tests {
     #[test]
     fn a_panicking_solve_is_contained_to_its_request() {
         let h = harness();
-        let worker = h.spawn(|doc, _, _, _| {
+        let worker = h.spawn(|doc, _, _, _, _| {
             if doc.id == "boom" {
                 panic!("solver exploded");
             }
@@ -429,7 +507,7 @@ mod tests {
         })
         .join();
         assert!(h.rx.is_poisoned(), "setup: mutex must be poisoned");
-        let worker = h.spawn(|_, _, _, _| Err(anyhow::anyhow!("served")));
+        let worker = h.spawn(|_, _, _, _, _| Err(anyhow::anyhow!("served")));
         let reply = h.send("doc", None);
         let e = reply.recv().unwrap().unwrap_err();
         assert!(e.to_string().contains("served"), "{e}");
@@ -440,7 +518,7 @@ mod tests {
     #[test]
     fn queue_expired_deadlines_never_reach_the_solver() {
         let h = harness();
-        let worker = h.spawn(|_, _, _, _| panic!("solver must not run"));
+        let worker = h.spawn(|_, _, _, _, _| panic!("solver must not run"));
         let reply = h.send("late", Some(Deadline::from_ms(0)));
         let e = reply.recv().unwrap().unwrap_err();
         let d = e

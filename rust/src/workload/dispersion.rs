@@ -1,0 +1,191 @@
+//! Facility-dispersion / feature-selection workload: pure max-dispersion
+//! k-of-n, promoting the resilience calibrator's probe generator
+//! ([`facility_dispersion`]) to a first-class served workload.
+//!
+//! Value is per-site quality, cost is pairwise closeness (1 − distance),
+//! so a selection maximizes quality while spreading the chosen sites —
+//! the feature-selection reading is identical with "site" = feature,
+//! "closeness" = feature correlation. The cost matrix is already fully
+//! weighted, so the lowering pins λ = 1.0 ([`KOfNProblem::lambda`])
+//! instead of inheriting the ES trade-off knob.
+//!
+//! Instances are generated, not ingested: a problem is fully determined
+//! by (id, seed, n, k), which is what makes byte-identical golden
+//! fixtures and cross-shape conformance possible for this workload.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::config::WorkloadConfig;
+use crate::embed::Scores;
+use crate::ising::kofn::{facility_dispersion, KofnProblem};
+use crate::text::MAX_SENTENCES;
+use crate::util::rng::Pcg32;
+
+use super::KOfNProblem;
+
+/// RNG stream id for dispersion instance generation (decorrelates the
+/// generator from the quantization/client streams sharing a seed).
+const DISPERSION_STREAM: u64 = 0xD155;
+
+/// A generated dispersion instance plus its identity.
+pub struct DispersionProblem {
+    id: String,
+    inner: KofnProblem,
+}
+
+impl DispersionProblem {
+    /// Generate the instance determined by `(seed, n, k)`. `n` is capped
+    /// by the executors' candidate clamp; `k` must satisfy `1 <= k < n`.
+    pub fn generate(id: &str, seed: u64, n: usize, k: usize) -> Result<Self> {
+        ensure!(
+            (2..=MAX_SENTENCES).contains(&n),
+            "dispersion needs 2..={MAX_SENTENCES} sites, got n={n}"
+        );
+        ensure!((1..n).contains(&k), "dispersion asked for k={k} of n={n}");
+        let mut rng = Pcg32::new(seed, DISPERSION_STREAM);
+        Ok(Self {
+            id: id.to_string(),
+            inner: facility_dispersion(&mut rng, n, k),
+        })
+    }
+
+    /// The underlying generic instance (experiments score against its
+    /// exact bounds).
+    pub fn instance(&self) -> &KofnProblem {
+        &self.inner
+    }
+}
+
+impl KOfNProblem for DispersionProblem {
+    fn workload(&self) -> &'static str {
+        "dispersion"
+    }
+
+    fn id(&self) -> &str {
+        &self.id
+    }
+
+    fn candidates(&self) -> Vec<String> {
+        self.inner
+            .value
+            .iter()
+            .enumerate()
+            .map(|(i, v)| format!("site {i:02} value {v:.4}"))
+            .collect()
+    }
+
+    fn k(&self) -> usize {
+        self.inner.k
+    }
+
+    fn lambda(&self) -> Option<f32> {
+        // cost already carries its full weight (KofnProblem::as_es)
+        Some(1.0)
+    }
+
+    fn scores(&self) -> Result<Scores> {
+        Ok(Scores {
+            mu: self.inner.value.clone(),
+            beta: self.inner.cost.clone(),
+        })
+    }
+}
+
+/// Parsed `::WORKLOAD dispersion::` request spec: one line of
+/// `key=value` tokens (`n=`, `k=`, `seed=`), each optional, falling back
+/// to the `[workload]` config defaults and seed 0.
+pub struct DispersionSpec {
+    /// Site count.
+    pub n: usize,
+    /// Selection cardinality.
+    pub k: usize,
+    /// Instance generation seed.
+    pub seed: u64,
+}
+
+impl DispersionSpec {
+    /// Parse a spec line like `n=16 k=4 seed=7`. Unknown tokens are
+    /// errors (typos must not silently become defaults).
+    pub fn parse(line: &str, cfg: &WorkloadConfig) -> Result<Self> {
+        let mut spec = Self {
+            n: cfg.dispersion_n,
+            k: cfg.dispersion_k,
+            seed: 0,
+        };
+        for tok in line.split_whitespace() {
+            if let Some(v) = tok.strip_prefix("n=") {
+                spec.n = v.parse()?;
+            } else if let Some(v) = tok.strip_prefix("k=") {
+                spec.k = v.parse()?;
+            } else if let Some(v) = tok.strip_prefix("seed=") {
+                spec.seed = v.parse()?;
+            } else {
+                bail!("unknown dispersion spec token '{tok}' (expected n=/k=/seed=)");
+            }
+        }
+        Ok(spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Settings;
+    use crate::workload::select_inline;
+
+    #[test]
+    fn generation_is_a_pure_function_of_seed_n_k() {
+        let a = DispersionProblem::generate("d", 42, 16, 4).unwrap();
+        let b = DispersionProblem::generate("d", 42, 16, 4).unwrap();
+        let c = DispersionProblem::generate("d", 43, 16, 4).unwrap();
+        assert_eq!(a.scores().unwrap().mu, b.scores().unwrap().mu);
+        assert_eq!(a.scores().unwrap().beta, b.scores().unwrap().beta);
+        assert_eq!(a.candidates(), b.candidates());
+        assert_ne!(a.scores().unwrap().mu, c.scores().unwrap().mu);
+    }
+
+    #[test]
+    fn scores_satisfy_the_contract() {
+        let p = DispersionProblem::generate("d", 7, 12, 3).unwrap();
+        let s = p.scores().unwrap();
+        assert_eq!(s.n(), 12);
+        for i in 0..12 {
+            assert_eq!(s.beta[i * 12 + i], 0.0, "zero diagonal");
+            for j in 0..12 {
+                assert_eq!(s.beta[i * 12 + j], s.beta[j * 12 + i], "symmetry");
+            }
+        }
+    }
+
+    #[test]
+    fn spec_parses_and_rejects() {
+        let cfg = WorkloadConfig::default();
+        let s = DispersionSpec::parse("n=10 k=3 seed=5", &cfg).unwrap();
+        assert_eq!((s.n, s.k, s.seed), (10, 3, 5));
+        let d = DispersionSpec::parse("", &cfg).unwrap();
+        assert_eq!((d.n, d.k, d.seed), (cfg.dispersion_n, cfg.dispersion_k, 0));
+        assert!(DispersionSpec::parse("m=9", &cfg).is_err());
+        assert!(DispersionSpec::parse("n=ten", &cfg).is_err());
+    }
+
+    #[test]
+    fn validation_rejects_bad_shapes() {
+        assert!(DispersionProblem::generate("d", 1, 1, 1).is_err());
+        assert!(DispersionProblem::generate("d", 1, 8, 0).is_err());
+        assert!(DispersionProblem::generate("d", 1, 8, 8).is_err());
+    }
+
+    #[test]
+    fn end_to_end_selection_is_feasible_and_deterministic() {
+        let mut s = Settings::default();
+        s.pipeline.solver = "tabu".into();
+        s.pipeline.iterations = 3;
+        let p = DispersionProblem::generate("d-e2e", 11, 16, 4).unwrap();
+        let a = select_inline(&p, &s, None).unwrap();
+        let b = select_inline(&p, &s, None).unwrap();
+        assert_eq!(a.selected.len(), 4);
+        assert!(a.selected.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(a.selected, b.selected);
+        assert_eq!(a.objective.to_bits(), b.objective.to_bits());
+    }
+}

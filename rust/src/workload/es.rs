@@ -1,0 +1,117 @@
+//! Extractive summarization as a [`KOfNProblem`] — the original workload
+//! restated on the platform seam: candidates are sentences, relevance is
+//! mu (cosine to the document mean), redundancy is beta (pairwise
+//! cosine), k is the summary length.
+//!
+//! Workload salt/tag are 0 ([`super::workload_salt`]), so an
+//! [`EsWorkload`] lowered through [`super::select_inline`] /
+//! [`super::select_with_pool`] reproduces the legacy
+//! `summarize_sequential` / `summarize_with_pool` output byte for byte —
+//! the pin that makes the platform a refactor, not a fork.
+
+use anyhow::Result;
+
+use crate::corpus::Document;
+use crate::embed::{Embedder, HashEmbedder, Scores};
+use crate::text::MAX_SENTENCES;
+
+use super::KOfNProblem;
+
+/// A document + summary length, viewed as a k-of-n selection.
+pub struct EsWorkload {
+    doc: Document,
+    k: usize,
+}
+
+impl EsWorkload {
+    /// Wrap `doc`, selecting `k` sentences. Documents longer than the
+    /// tokenizer's `MAX_SENTENCES` are truncated, exactly like the
+    /// executors' clamp — so the lowering sees the same candidate set.
+    pub fn new(mut doc: Document, k: usize) -> Self {
+        doc.sentences.truncate(MAX_SENTENCES);
+        Self { doc, k }
+    }
+
+    /// The wrapped document.
+    pub fn document(&self) -> &Document {
+        &self.doc
+    }
+}
+
+impl KOfNProblem for EsWorkload {
+    fn workload(&self) -> &'static str {
+        "es"
+    }
+
+    fn id(&self) -> &str {
+        &self.doc.id
+    }
+
+    fn candidates(&self) -> Vec<String> {
+        self.doc.sentences.clone()
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn scores(&self) -> Result<Scores> {
+        HashEmbedder::new().scores(&self.doc.sentences)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Settings;
+    use crate::corpus::benchmark_set;
+    use crate::sched::{doc_seed, summarize_sequential};
+    use crate::workload::select_inline;
+
+    #[test]
+    fn platform_es_path_matches_legacy_pipeline_bytewise() {
+        // the refactor pin: EsWorkload through the generic platform seam
+        // (salt 0, FixedScores embedder, TaggedSolver tag 0) reproduces
+        // the legacy sequential executor byte for byte
+        let mut s = Settings::default();
+        s.pipeline.solver = "tabu".into();
+        s.pipeline.iterations = 3;
+        let set = benchmark_set("bench_10").unwrap();
+        for doc in set.documents.iter().take(4) {
+            let mut cfg = s.pipeline.clone();
+            cfg.summary_len = set.summary_len;
+            cfg.seed = doc_seed(cfg.seed, &doc.id);
+            let mut solver = crate::solvers::tabu::TabuSolver::seeded(0);
+            let legacy = summarize_sequential(doc, &cfg, &mut solver).unwrap();
+
+            let p = EsWorkload::new(doc.clone(), set.summary_len);
+            let platform = select_inline(&p, &s, None).unwrap();
+
+            assert_eq!(platform.selected, legacy.selected, "{}", doc.id);
+            assert_eq!(platform.sentences, legacy.sentences, "{}", doc.id);
+            assert_eq!(
+                platform.objective.to_bits(),
+                legacy.objective.to_bits(),
+                "{}",
+                doc.id
+            );
+            assert_eq!(platform.total_solves, legacy.total_solves);
+        }
+    }
+
+    #[test]
+    fn overlong_documents_are_clamped_like_the_executors() {
+        let mut doc = Document {
+            id: "long".into(),
+            sentences: vec!["a sentence here".to_string(); MAX_SENTENCES + 7],
+            reference: Vec::new(),
+        };
+        doc.sentences
+            .iter_mut()
+            .enumerate()
+            .for_each(|(i, s)| s.push_str(&format!(" number {i}")));
+        let p = EsWorkload::new(doc, 3);
+        assert_eq!(p.candidates().len(), MAX_SENTENCES);
+        assert_eq!(p.scores().unwrap().n(), MAX_SENTENCES);
+    }
+}

@@ -1,0 +1,496 @@
+//! The k-of-n selection platform: the generic seam the paper's §I claim
+//! ("can be applied to any problem formulation that requires k of n
+//! variables to be chosen") turns into API.
+//!
+//! A [`KOfNProblem`] is anything that yields a candidate set, a relevance
+//! vector and a pairwise redundancy matrix, and asks for exactly k
+//! candidates back. Extractive summarization is one instance
+//! ([`es::EsWorkload`]); this module ships two non-text ones end to end
+//! through the same pool/portfolio/resilience/obs stack:
+//!
+//!   * [`retrieval::RetrievalProblem`] — diverse-retrieval selection:
+//!     pick the k passages most relevant to a query and least redundant
+//!     with each other (RAG context assembly);
+//!   * [`dispersion::DispersionProblem`] — facility dispersion / feature
+//!     selection: pure max-dispersion k-of-n, promoting the calibrator's
+//!     probe generator ([`crate::ising::kofn::facility_dispersion`]) to a
+//!     real workload.
+//!
+//! Every workload lowers to the SAME execution plan the ES pipeline
+//! runs — scores → decomposition DAG → quantize → solve → repair →
+//! score — so the executors, the pool, the portfolio and the resilience
+//! layer are reused verbatim and the determinism contract extends
+//! unchanged: (workload, seed) ⇒ byte-identical selections across pool
+//! shapes, strategies, and the inline path.
+//!
+//! Seed/tag derivation (DESIGN.md decision #22): each workload owns a
+//! salt — 0 for `"es"`, `fnv1a(name)` otherwise — folded into the
+//! per-problem seed ([`problem_seed`]) and used as the warm-start cache
+//! namespace tag ([`workload_tag`]). The zero ES salt makes the legacy
+//! untagged byte-pins (golden fixtures, cache hit counts) hold verbatim.
+
+pub mod dispersion;
+pub mod es;
+pub mod retrieval;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::config::{PipelineConfig, Settings, WorkloadConfig};
+use crate::corpus::Document;
+use crate::decompose::Strategy;
+use crate::embed::{Embedder, Scores};
+use crate::obs::{ObsShared, Span, Subsystem};
+use crate::pipeline::Summary;
+use crate::runtime::ArtifactRuntime;
+use crate::sched::pool::{build_solver, PoolSolver};
+use crate::sched::{
+    doc_seed, resolved_backend, summarize_sequential_traced_using, summarize_sequential_using,
+    summarize_with_pool_traced_using, summarize_with_pool_using, PoolHandle,
+};
+use crate::text::tokenize::fnv1a;
+use crate::text::MAX_SENTENCES;
+
+/// Every registered workload name, in registration order. Stable: these
+/// strings are metrics keys, ledger subsystem labels, golden-fixture
+/// names, and the `::WORKLOAD <name>::` protocol vocabulary.
+pub const WORKLOADS: [&str; 3] = ["es", "retrieval", "dispersion"];
+
+/// Resolve a request-supplied workload name to its registered static
+/// name (`None` if unregistered).
+pub fn resolve(name: &str) -> Option<&'static str> {
+    WORKLOADS.iter().find(|w| **w == name).copied()
+}
+
+/// Per-workload seed salt: 0 for `"es"` (so every legacy seed, fixture
+/// and cache pin is preserved bit for bit), `fnv1a(name)` otherwise.
+pub fn workload_salt(name: &str) -> u64 {
+    if name == "es" {
+        0
+    } else {
+        fnv1a(name.as_bytes())
+    }
+}
+
+/// The warm-start cache namespace tag for a workload — identical to
+/// [`workload_salt`], so tag 0 is simultaneously "legacy untagged" and
+/// "es", which is exactly the aliasing the compatibility story needs.
+pub fn workload_tag(name: &str) -> u64 {
+    workload_salt(name)
+}
+
+/// Per-problem master seed: [`doc_seed`] over the workload-salted base,
+/// mirroring `decompose::node_seed` semantics — the derivation is a pure
+/// function of (base seed, workload, problem id), never of submission
+/// order or pool shape. For `"es"` this reduces to the legacy
+/// `doc_seed(base, id)`.
+pub fn problem_seed(base: u64, workload: &str, id: &str) -> u64 {
+    doc_seed(base ^ workload_salt(workload), id)
+}
+
+/// Ledger subsystem a workload's inline/local solves are charged to
+/// (pooled solves stay on `Subsystem::Pool`: the pool is shared and its
+/// devices cannot know per-request attribution cheaply).
+pub fn subsystem_for(workload: &str) -> Subsystem {
+    match workload {
+        "retrieval" => Subsystem::Retrieval,
+        "dispersion" => Subsystem::Dispersion,
+        _ => Subsystem::Pipeline,
+    }
+}
+
+/// A k-of-n selection problem: candidates, relevance, pairwise
+/// redundancy, cardinality. Object-safe so the service can route
+/// factory-built problems without generics.
+pub trait KOfNProblem: Send {
+    /// Registered workload name (one of [`WORKLOADS`]); metrics/ledger key.
+    fn workload(&self) -> &'static str;
+    /// Problem id — the seed-derivation key, like a document id.
+    fn id(&self) -> &str;
+    /// Candidate labels, one per item (what a selection returns).
+    fn candidates(&self) -> Vec<String>;
+    /// Selection cardinality k.
+    fn k(&self) -> usize;
+    /// Redundancy weight override; `None` inherits `[pipeline] lambda`.
+    /// Workloads whose redundancy matrix is already fully weighted (e.g.
+    /// dispersion's distance-derived cost) return `Some(1.0)`.
+    fn lambda(&self) -> Option<f32> {
+        None
+    }
+    /// Relevance vector + pairwise redundancy matrix over the candidates
+    /// (row-major n*n, symmetric, zero diagonal — the [`Scores`] contract).
+    fn scores(&self) -> Result<Scores>;
+}
+
+/// A [`KOfNProblem`] lowered to the executors' vocabulary: a synthetic
+/// [`Document`] whose "sentences" are the candidates, a per-problem
+/// [`PipelineConfig`] (seed salted by workload, `summary_len` = k), the
+/// precomputed scores, and the workload's cache tag.
+pub struct Lowered {
+    /// Candidates as a document (id = problem id).
+    pub doc: Document,
+    /// Per-problem config: seeded via [`problem_seed`], `summary_len` = k.
+    pub cfg: PipelineConfig,
+    /// The problem's relevance/redundancy scores (fed to the executors
+    /// through [`FixedScores`] so no text embedding runs).
+    pub scores: Scores,
+    /// Warm-start cache namespace ([`workload_tag`]).
+    pub tag: u64,
+}
+
+/// Lower `problem` onto `base` (usually `settings.pipeline`): derive the
+/// salted per-problem seed, override cardinality/λ, and build the
+/// candidate document. `Strategy::Streaming` is coerced to `Window` for
+/// non-ES workloads — the streaming path embeds text incrementally and
+/// cannot accept precomputed scores.
+pub fn lower(problem: &dyn KOfNProblem, base: &PipelineConfig) -> Result<Lowered> {
+    let candidates = problem.candidates();
+    let n = candidates.len();
+    ensure!(n > 0, "workload '{}' produced no candidates", problem.workload());
+    ensure!(
+        n <= MAX_SENTENCES,
+        "workload '{}' produced {n} candidates (max {MAX_SENTENCES})",
+        problem.workload()
+    );
+    let k = problem.k();
+    ensure!(
+        (1..=n).contains(&k),
+        "workload '{}' asked for k={k} of n={n}",
+        problem.workload()
+    );
+    let scores = problem.scores()?;
+    ensure!(
+        scores.n() == n,
+        "workload '{}' scores cover {} of {n} candidates",
+        problem.workload(),
+        scores.n()
+    );
+    let mut cfg = base.clone();
+    cfg.summary_len = k;
+    if let Some(l) = problem.lambda() {
+        cfg.lambda = l;
+    }
+    if cfg.strategy == Strategy::Streaming && problem.workload() != "es" {
+        cfg.strategy = Strategy::Window;
+    }
+    cfg.seed = problem_seed(base.seed, problem.workload(), problem.id());
+    Ok(Lowered {
+        doc: Document {
+            id: problem.id().to_string(),
+            sentences: candidates,
+            reference: Vec::new(),
+        },
+        cfg,
+        scores,
+        tag: workload_tag(problem.workload()),
+    })
+}
+
+/// An [`Embedder`] that returns one precomputed [`Scores`] — how lowered
+/// workloads feed relevance/redundancy into the text executors without
+/// any text embedding. Rejects a sentence count that does not match the
+/// stored scores (a lowering bug, not a runtime condition).
+pub struct FixedScores {
+    scores: Scores,
+}
+
+impl FixedScores {
+    /// Wrap precomputed scores.
+    pub fn new(scores: Scores) -> Self {
+        Self { scores }
+    }
+}
+
+impl Embedder for FixedScores {
+    fn name(&self) -> &'static str {
+        "fixed"
+    }
+
+    fn scores(&mut self, sentences: &[String]) -> Result<Scores> {
+        ensure!(
+            sentences.len() == self.scores.n(),
+            "fixed scores cover {} candidates, executor asked for {}",
+            self.scores.n(),
+            sentences.len()
+        );
+        Ok(self.scores.clone())
+    }
+}
+
+/// A [`PoolSolver`] adaptor that stamps one workload tag onto every
+/// group — the inline path's equivalent of
+/// [`PoolClient::set_workload_tag`](crate::sched::PoolClient::set_workload_tag):
+/// the sequential executor calls `solve_groups`, and this forwards them
+/// as `solve_groups_tagged` so a portfolio-backed inline solver scopes
+/// its warm-start tiers exactly like the pooled devices do.
+pub struct TaggedSolver<'a> {
+    inner: &'a mut dyn PoolSolver,
+    tag: u64,
+}
+
+impl<'a> TaggedSolver<'a> {
+    /// Wrap `inner`, stamping `tag` on every dispatch.
+    pub fn new(inner: &'a mut dyn PoolSolver, tag: u64) -> Self {
+        Self { inner, tag }
+    }
+}
+
+impl PoolSolver for TaggedSolver<'_> {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn solve_groups(
+        &mut self,
+        groups: &[crate::cobi::SeededGroup<'_>],
+    ) -> Result<Vec<Vec<crate::solvers::SolveResult>>> {
+        let tags = vec![self.tag; groups.len()];
+        self.inner.solve_groups_tagged(&tags, groups)
+    }
+}
+
+/// Solve `problem` inline on a freshly built solver (no pool): the
+/// sequential comparator every pooled path must match byte for byte.
+/// The solver is built exactly like a pool device's
+/// (`resolved_backend`), so portfolio/resilience settings apply here too.
+pub fn select_inline(
+    problem: &dyn KOfNProblem,
+    settings: &Settings,
+    rt: Option<&ArtifactRuntime>,
+) -> Result<Summary> {
+    let (summary, _) = select_inline_obs(problem, settings, rt, None)?;
+    Ok(summary)
+}
+
+/// [`select_inline`] with optional observability: inline solves are
+/// charged to the workload's ledger subsystem ([`subsystem_for`]) and a
+/// request span is recorded when `obs` has spans enabled. Non-ES spans
+/// carry a `workload` attribute (ES spans stay byte-identical to the
+/// legacy pipeline's).
+pub fn select_inline_obs(
+    problem: &dyn KOfNProblem,
+    settings: &Settings,
+    rt: Option<&ArtifactRuntime>,
+    obs: Option<&ObsShared>,
+) -> Result<(Summary, Option<Span>)> {
+    let lowered = lower(problem, &settings.pipeline)?;
+    let backend = resolved_backend(settings);
+    let mut solver = build_solver(
+        backend,
+        settings,
+        settings.pipeline.seed ^ 0xD00D,
+        rt,
+        None,
+        None,
+        obs.map(|o| (o, subsystem_for(problem.workload()))),
+        None,
+    )?;
+    let mut tagged = TaggedSolver::new(solver.as_mut(), lowered.tag);
+    let mut embedder = FixedScores::new(lowered.scores);
+    match obs {
+        Some(o) => {
+            let (summary, span) = summarize_sequential_traced_using(
+                &lowered.doc,
+                &lowered.cfg,
+                &mut tagged,
+                o,
+                &mut embedder,
+            )?;
+            Ok((summary, brand_span(span, problem.workload())))
+        }
+        None => {
+            let summary =
+                summarize_sequential_using(&lowered.doc, &lowered.cfg, &mut tagged, &mut embedder)?;
+            Ok((summary, None))
+        }
+    }
+}
+
+/// Solve `problem` through a shared [`DevicePool`](crate::sched::DevicePool):
+/// the client is keyed by the salted per-problem seed and stamps the
+/// workload's cache tag on every request. Byte-identical to
+/// [`select_inline`] for any pool shape (pinned by
+/// `tests/workload_conformance.rs`).
+pub fn select_with_pool(
+    problem: &dyn KOfNProblem,
+    base: &PipelineConfig,
+    handle: &PoolHandle,
+) -> Result<Summary> {
+    let (summary, _) = select_with_pool_obs(problem, base, handle, None)?;
+    Ok(summary)
+}
+
+/// [`select_with_pool`] with an optional span recorder (see
+/// [`select_inline_obs`] for the span contract).
+pub fn select_with_pool_obs(
+    problem: &dyn KOfNProblem,
+    base: &PipelineConfig,
+    handle: &PoolHandle,
+    obs: Option<&ObsShared>,
+) -> Result<(Summary, Option<Span>)> {
+    let lowered = lower(problem, base)?;
+    let mut client = handle.client(lowered.cfg.seed);
+    client.set_workload_tag(lowered.tag);
+    let mut embedder = FixedScores::new(lowered.scores);
+    match obs {
+        Some(o) => {
+            let (summary, span) = summarize_with_pool_traced_using(
+                &lowered.doc,
+                &lowered.cfg,
+                &mut client,
+                o,
+                &mut embedder,
+            )?;
+            Ok((summary, brand_span(span, problem.workload())))
+        }
+        None => {
+            let summary =
+                summarize_with_pool_using(&lowered.doc, &lowered.cfg, &mut client, &mut embedder)?;
+            Ok((summary, None))
+        }
+    }
+}
+
+/// Stamp the workload name on a recorded root span — non-ES only, so the
+/// ES span JSON stays byte-identical to the pre-platform output.
+fn brand_span(mut span: Option<Span>, workload: &'static str) -> Option<Span> {
+    if workload != "es" {
+        if let Some(s) = span.as_mut() {
+            s.set("workload", workload);
+        }
+    }
+    span
+}
+
+/// Build a problem from a service request: `workload` is the
+/// `::WORKLOAD <name>::` header value, `id` the request's document id,
+/// `lines` the non-empty request body lines. Body shapes:
+///
+///   * `retrieval` — first line is the query, the rest are candidate
+///     passages; k comes from `[workload] retrieval_k`;
+///   * `dispersion` — one spec line `n=<sites> k=<pick> seed=<u64>`
+///     (missing fields fall back to `[workload] dispersion_n` /
+///     `dispersion_k` / seed 0);
+///   * `es` is NOT built here: ES requests keep the legacy text path.
+pub fn problem_from_request(
+    workload: &str,
+    id: &str,
+    lines: &[String],
+    cfg: &WorkloadConfig,
+) -> Result<Box<dyn KOfNProblem>> {
+    match resolve(workload) {
+        Some("retrieval") => {
+            ensure!(
+                lines.len() >= 2,
+                "retrieval request needs a query line plus at least one passage"
+            );
+            let query = lines[0].clone();
+            let passages = lines[1..].to_vec();
+            let k = cfg.retrieval_k.min(passages.len()).max(1);
+            Ok(Box::new(retrieval::RetrievalProblem::new(
+                id, &query, passages, k,
+            )?))
+        }
+        Some("dispersion") => {
+            ensure!(!lines.is_empty(), "dispersion request needs a spec line");
+            let spec = dispersion::DispersionSpec::parse(&lines[0], cfg)?;
+            Ok(Box::new(dispersion::DispersionProblem::generate(
+                id, spec.seed, spec.n, spec.k,
+            )?))
+        }
+        Some(other) => bail!("workload '{other}' has no request factory"),
+        None => bail!(
+            "unknown workload '{workload}' (registered: {})",
+            WORKLOADS.join(", ")
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn es_salt_is_zero_and_aliases_legacy_seeds() {
+        assert_eq!(workload_salt("es"), 0);
+        assert_eq!(workload_tag("es"), 0);
+        assert_eq!(problem_seed(0xC0B1, "es", "doc-3"), doc_seed(0xC0B1, "doc-3"));
+    }
+
+    #[test]
+    fn non_es_salts_are_distinct_and_stable() {
+        let r = workload_salt("retrieval");
+        let d = workload_salt("dispersion");
+        assert_ne!(r, 0);
+        assert_ne!(d, 0);
+        assert_ne!(r, d);
+        assert_eq!(r, workload_salt("retrieval"), "salt must be a pure function");
+        assert_ne!(
+            problem_seed(7, "retrieval", "p"),
+            problem_seed(7, "dispersion", "p"),
+            "same id under different workloads must not collide"
+        );
+    }
+
+    #[test]
+    fn registry_resolves_and_rejects() {
+        for w in WORKLOADS {
+            assert_eq!(resolve(w), Some(w));
+        }
+        assert_eq!(resolve("tsp"), None);
+        assert_eq!(WORKLOADS[0], "es", "ES stays the default/first workload");
+    }
+
+    #[test]
+    fn lower_salts_seed_and_overrides_cardinality() {
+        let p = dispersion::DispersionProblem::generate("d-1", 9, 12, 4).unwrap();
+        let base = PipelineConfig::default();
+        let l = lower(&p, &base).unwrap();
+        assert_eq!(l.cfg.summary_len, 4);
+        assert_eq!(l.cfg.lambda, 1.0, "dispersion cost is fully weighted");
+        assert_eq!(l.cfg.seed, problem_seed(base.seed, "dispersion", "d-1"));
+        assert_eq!(l.doc.sentences.len(), 12);
+        assert_eq!(l.tag, workload_tag("dispersion"));
+    }
+
+    #[test]
+    fn lower_coerces_streaming_to_window_for_non_es() {
+        let p = dispersion::DispersionProblem::generate("d-2", 1, 10, 3).unwrap();
+        let base = PipelineConfig {
+            strategy: Strategy::Streaming,
+            ..PipelineConfig::default()
+        };
+        let l = lower(&p, &base).unwrap();
+        assert_eq!(l.cfg.strategy, Strategy::Window);
+    }
+
+    #[test]
+    fn fixed_scores_rejects_length_mismatch() {
+        let s = Scores {
+            mu: vec![0.5; 3],
+            beta: vec![0.0; 9],
+        };
+        let mut f = FixedScores::new(s);
+        assert!(f.scores(&["a".into()]).is_err());
+        assert!(f.scores(&["a".into(), "b".into(), "c".into()]).is_ok());
+    }
+
+    #[test]
+    fn request_factory_builds_and_rejects() {
+        let cfg = WorkloadConfig::default();
+        let lines: Vec<String> = ["what is an ising machine", "p one", "p two", "p three"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let p = problem_from_request("retrieval", "req-1", &lines, &cfg).unwrap();
+        assert_eq!(p.workload(), "retrieval");
+        assert_eq!(p.candidates().len(), 3);
+
+        let spec = vec!["n=10 k=3 seed=5".to_string()];
+        let p = problem_from_request("dispersion", "req-2", &spec, &cfg).unwrap();
+        assert_eq!(p.workload(), "dispersion");
+        assert_eq!(p.k(), 3);
+
+        assert!(problem_from_request("tsp", "req-3", &lines, &cfg).is_err());
+        assert!(problem_from_request("es", "req-4", &lines, &cfg).is_err());
+    }
+}

@@ -1,0 +1,172 @@
+//! Diverse-retrieval selection: pick the k passages most relevant to a
+//! query and least redundant with each other — RAG context assembly as a
+//! k-of-n problem.
+//!
+//! Relevance is query-biased: `mu_i = cos(e_query, e_passage_i)`, so the
+//! query tilts the linear field h of the lowered Ising instance, and the
+//! improved formulation's median shift
+//! ([`kofn_bias`](crate::ising::kofn_bias)) rebalances that biased h
+//! against the couplings exactly as it does for ES — the paper's Eq. 12
+//! rule applied to a problem it never saw. Redundancy is the passage
+//! pairwise cosine matrix, zero diagonal, symmetric — the [`Scores`]
+//! contract — so selected passages repel near-duplicates.
+//!
+//! λ is inherited from `[pipeline] lambda`: the relevance/diversity
+//! trade-off is a serving knob, same as ES.
+
+use anyhow::{ensure, Result};
+
+use crate::embed::hash_embed::EMBED_DIM;
+use crate::embed::similarity::{dot, norm};
+use crate::embed::{HashEmbedder, Scores};
+use crate::text::MAX_SENTENCES;
+
+use super::KOfNProblem;
+
+/// One diverse-retrieval request: a query, candidate passages, and the
+/// context budget k.
+pub struct RetrievalProblem {
+    id: String,
+    query: String,
+    passages: Vec<String>,
+    k: usize,
+}
+
+impl RetrievalProblem {
+    /// Validate and build. `k` must satisfy `1 <= k <= passages.len()`;
+    /// the candidate count is bounded by the executors' sentence clamp.
+    pub fn new(id: &str, query: &str, passages: Vec<String>, k: usize) -> Result<Self> {
+        ensure!(!query.trim().is_empty(), "retrieval query is empty");
+        ensure!(!passages.is_empty(), "retrieval has no candidate passages");
+        ensure!(
+            passages.len() <= MAX_SENTENCES,
+            "retrieval has {} passages (max {MAX_SENTENCES})",
+            passages.len()
+        );
+        ensure!(
+            (1..=passages.len()).contains(&k),
+            "retrieval asked for k={k} of {} passages",
+            passages.len()
+        );
+        Ok(Self {
+            id: id.to_string(),
+            query: query.to_string(),
+            passages,
+            k,
+        })
+    }
+
+    /// The query string.
+    pub fn query(&self) -> &str {
+        &self.query
+    }
+}
+
+impl KOfNProblem for RetrievalProblem {
+    fn workload(&self) -> &'static str {
+        "retrieval"
+    }
+
+    fn id(&self) -> &str {
+        &self.id
+    }
+
+    fn candidates(&self) -> Vec<String> {
+        self.passages.clone()
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn scores(&self) -> Result<Scores> {
+        let e = HashEmbedder::new();
+        let unit = |s: &str| -> Vec<f32> {
+            let mut v = e.embed_sentence(s);
+            let nn = norm(&v).max(1e-12);
+            for x in v.iter_mut() {
+                *x /= nn;
+            }
+            v
+        };
+        let q = unit(&self.query);
+        let rows: Vec<Vec<f32>> = self.passages.iter().map(|p| unit(p)).collect();
+        let n = rows.len();
+        debug_assert!(rows.iter().all(|r| r.len() == EMBED_DIM));
+        let mu: Vec<f32> = rows.iter().map(|r| dot(r, &q)).collect();
+        let mut beta = vec![0.0f32; n * n];
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let b = dot(&rows[i], &rows[j]);
+                beta[i * n + j] = b;
+                beta[j * n + i] = b;
+            }
+        }
+        Ok(Scores { mu, beta })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Settings;
+    use crate::workload::select_inline;
+
+    fn passages(n: usize) -> Vec<String> {
+        (0..n)
+            .map(|i| format!("passage {i} covers oscillator phase dynamics topic {}", i % 3))
+            .collect()
+    }
+
+    #[test]
+    fn scores_are_deterministic_and_well_formed() {
+        let p = RetrievalProblem::new("r-1", "oscillator phase", passages(8), 3).unwrap();
+        let a = p.scores().unwrap();
+        let b = p.scores().unwrap();
+        assert_eq!(a.mu, b.mu);
+        assert_eq!(a.beta, b.beta);
+        assert_eq!(a.n(), 8);
+        for i in 0..8 {
+            assert_eq!(a.beta[i * 8 + i], 0.0, "diagonal must stay zero");
+            for j in 0..8 {
+                assert_eq!(a.beta[i * 8 + j], a.beta[j * 8 + i], "symmetry ({i},{j})");
+            }
+        }
+        for &m in &a.mu {
+            assert!(m.abs() <= 1.0 + 1e-5, "cosine out of range: {m}");
+        }
+    }
+
+    #[test]
+    fn query_changes_relevance_not_redundancy() {
+        let pa = RetrievalProblem::new("r-2", "phase dynamics", passages(6), 2).unwrap();
+        let pb = RetrievalProblem::new("r-2", "completely different words", passages(6), 2).unwrap();
+        let sa = pa.scores().unwrap();
+        let sb = pb.scores().unwrap();
+        assert_ne!(sa.mu, sb.mu, "query must bias relevance");
+        assert_eq!(sa.beta, sb.beta, "redundancy is query-independent");
+    }
+
+    #[test]
+    fn validation_rejects_bad_requests() {
+        assert!(RetrievalProblem::new("x", "  ", passages(4), 2).is_err());
+        assert!(RetrievalProblem::new("x", "q", Vec::new(), 1).is_err());
+        assert!(RetrievalProblem::new("x", "q", passages(4), 0).is_err());
+        assert!(RetrievalProblem::new("x", "q", passages(4), 5).is_err());
+    }
+
+    #[test]
+    fn end_to_end_selection_is_feasible_and_deterministic() {
+        let mut s = Settings::default();
+        s.pipeline.solver = "tabu".into();
+        s.pipeline.iterations = 3;
+        let p = RetrievalProblem::new("r-e2e", "ising machine hardware", passages(14), 4).unwrap();
+        let a = select_inline(&p, &s, None).unwrap();
+        let b = select_inline(&p, &s, None).unwrap();
+        assert_eq!(a.selected.len(), 4);
+        assert!(a.selected.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(a.selected, b.selected);
+        assert_eq!(a.objective.to_bits(), b.objective.to_bits());
+        assert_eq!(a.sentences.len(), 4, "selected passages come back verbatim");
+    }
+}

@@ -1,0 +1,144 @@
+//! Golden selection fixtures (ISSUE 9): byte-for-byte regression pins
+//! for every registered workload.
+//!
+//! Each fixture under `tests/fixtures/` holds one line per pinned
+//! request — `<id> selected=[..] objective=<6dp>` — computed with the
+//! deterministic tabu backend. The test recomputes the block and diffs
+//! it against the committed file byte for byte, so ANY drift in seeds,
+//! lowering, decomposition, or solver order fails loudly.
+//!
+//! Lifecycle:
+//!
+//! * `COBI_ES_BLESS=1 cargo test --test golden_fixtures` recomputes
+//!   every fixture and overwrites the files (commit the diff);
+//! * a fixture whose first line is `UNBLESSED` has never been blessed
+//!   on a real toolchain — the test then computes the block twice and
+//!   asserts self-consistency instead of file equality;
+//! * otherwise the recomputed block must match the file exactly.
+
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+use cobi_es::config::Settings;
+use cobi_es::corpus::{benchmark_set, workload_requests};
+use cobi_es::workload::es::EsWorkload;
+use cobi_es::workload::{problem_from_request, select_inline, KOfNProblem};
+
+/// Sentinel first line marking a fixture that still needs blessing on a
+/// machine with a Rust toolchain (`COBI_ES_BLESS=1`).
+const UNBLESSED: &str = "UNBLESSED";
+
+/// Fixture settings: deterministic tabu backend, low iteration count.
+/// Changing these regenerates different goldens — bless after editing.
+fn golden_settings() -> Settings {
+    let mut s = Settings::default();
+    s.pipeline.solver = "tabu".into();
+    s.pipeline.iterations = 3;
+    s.sched.backend = "tabu".into();
+    s
+}
+
+fn fixture_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures")
+        .join(name)
+}
+
+/// One fixture line: stable id, selected indices, 6dp objective.
+fn line(id: &str, sum: &cobi_es::pipeline::Summary) -> String {
+    format!("{id} selected={:?} objective={:.6}", sum.selected, sum.objective)
+}
+
+/// Recompute the full fixture block for one workload.
+fn compute(workload: &str) -> String {
+    let s = golden_settings();
+    let mut out = String::new();
+    match workload {
+        "es" => {
+            let set = benchmark_set("bench_10").unwrap();
+            let k = set.summary_len;
+            for doc in set.documents {
+                let id = doc.id.clone();
+                let p = EsWorkload::new(doc, k);
+                let sum = select_inline(&p, &s, None).unwrap();
+                writeln!(out, "{}", line(&id, &sum)).unwrap();
+            }
+        }
+        _ => {
+            for r in workload_requests(workload).unwrap() {
+                let p = problem_from_request(workload, &r.id, &r.lines, &s.workload).unwrap();
+                let sum = select_inline(p.as_ref(), &s, None).unwrap();
+                writeln!(out, "{}", line(p.id(), &sum)).unwrap();
+            }
+        }
+    }
+    out
+}
+
+/// Diff the recomputed block for `workload` against `fixture`, honoring
+/// the bless/UNBLESSED lifecycle described in the module docs.
+fn check(workload: &str, fixture: &str) {
+    let path = fixture_path(fixture);
+    let got = compute(workload);
+    assert!(!got.is_empty(), "{workload}: empty fixture block");
+    if std::env::var("COBI_ES_BLESS").is_ok() {
+        std::fs::write(&path, &got)
+            .unwrap_or_else(|e| panic!("blessing {}: {e}", path.display()));
+        return;
+    }
+    let want = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading {}: {e} (run with COBI_ES_BLESS=1)", path.display()));
+    if want.lines().next() == Some(UNBLESSED) {
+        // never blessed on a real toolchain: pin self-consistency so the
+        // selection path is at least deterministic within this build
+        let again = compute(workload);
+        assert_eq!(got, again, "{workload}: recomputation is not deterministic");
+        eprintln!(
+            "note: {} is unblessed — run COBI_ES_BLESS=1 cargo test --test golden_fixtures \
+             and commit the result",
+            path.display()
+        );
+        return;
+    }
+    assert_eq!(
+        got,
+        want,
+        "{workload}: selections drifted from {} — if intentional, rebless with COBI_ES_BLESS=1",
+        path.display()
+    );
+}
+
+#[test]
+fn golden_es_bench_10() {
+    check("es", "golden_es_bench_10.txt");
+}
+
+#[test]
+fn golden_retrieval() {
+    check("retrieval", "golden_retrieval.txt");
+}
+
+#[test]
+fn golden_dispersion() {
+    check("dispersion", "golden_dispersion.txt");
+}
+
+#[test]
+fn fixture_lines_are_well_formed_when_blessed() {
+    // cheap schema check on committed fixtures (skipped while unblessed):
+    // every line is `<id> selected=[..] objective=<float>`
+    for fixture in ["golden_es_bench_10.txt", "golden_retrieval.txt", "golden_dispersion.txt"] {
+        let path = fixture_path(fixture);
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()));
+        if text.lines().next() == Some(UNBLESSED) {
+            continue;
+        }
+        for l in text.lines() {
+            let ok = l.contains(" selected=[") && l.contains("] objective=");
+            assert!(ok, "{fixture}: malformed line: {l}");
+            let obj = l.rsplit("objective=").next().unwrap();
+            assert!(obj.parse::<f64>().is_ok(), "{fixture}: bad objective in: {l}");
+        }
+    }
+}

@@ -12,9 +12,17 @@
 //!   M-selection unit over the whole remaining list — no idle tail;
 //! * repair: `repair_selection` always returns exactly M valid, unique,
 //!   ascending indices, whatever the solver handed it.
+//!
+//! Plus the k-of-n platform invariants (ISSUE 9):
+//!
+//! * any random (n, k, relevance, redundancy) instance lowers to the
+//!   Eq. 10 QUBO penalty structure exactly;
+//! * repaired k-of-n selections are exactly-k, unique and ascending;
+//! * the Eq. 12 `kofn_bias` is invariant under candidate relabeling.
 
 use cobi_es::decompose::{DecomposePlan, DecomposeParams, Strategy};
-use cobi_es::ising::{EsProblem, Ising, QuantIsing};
+use cobi_es::ising::kofn::KofnProblem;
+use cobi_es::ising::{kofn_bias, EsProblem, Ising, QuantIsing};
 use cobi_es::prop_assert;
 use cobi_es::refine::repair_selection;
 use cobi_es::util::proptest::{check_sized, DEFAULT_CASES};
@@ -170,6 +178,107 @@ fn repair_always_returns_exactly_m_valid_selections() {
         prop_assert!(
             repaired.windows(2).all(|w| w[0] < w[1]),
             "selections not strictly ascending: {repaired:?}"
+        );
+        Ok(())
+    });
+}
+
+/// Random k-of-n instance: relevance values + symmetric redundancy
+/// costs with a zero diagonal (the shape every platform workload emits).
+fn random_kofn(rng: &mut Pcg32, n: usize, k: usize) -> KofnProblem {
+    let value: Vec<f32> = (0..n).map(|_| rng.range_f32(0.1, 0.95)).collect();
+    let mut cost = vec![0.0f32; n * n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let c = rng.range_f32(0.05, 0.9);
+            cost[i * n + j] = c;
+            cost[j * n + i] = c;
+        }
+    }
+    KofnProblem { value, cost, k }
+}
+
+#[test]
+fn kofn_qubo_has_the_eq10_penalty_structure() {
+    check_sized("kofn-qubo-structure", 0x4F, DEFAULT_CASES, 24, |rng, size| {
+        let n = 2 + size;
+        let k = 1 + rng.below(n as u32 - 1) as usize;
+        let p = random_kofn(rng, n, k);
+        let gamma = p.gamma();
+        let bias = rng.range_f32(-1.0, 1.0);
+        let q = p.qubo(bias);
+        for i in 0..n {
+            let want = -(p.value[i] + bias) - 2.0 * gamma * k as f32 + gamma;
+            prop_assert!(
+                (q.linear[i] - want).abs() <= 1e-4,
+                "linear[{i}] = {} != {want} (n={n} k={k})",
+                q.linear[i]
+            );
+            prop_assert!(
+                q.quad[i * n + i] == 0.0,
+                "diagonal quad[{i},{i}] must stay zero"
+            );
+            for j in 0..n {
+                if j != i {
+                    let want = p.cost[i * n + j] + gamma;
+                    prop_assert!(
+                        (q.quad[i * n + j] - want).abs() <= 1e-4,
+                        "quad[{i},{j}] = {} != {want} (n={n} k={k})",
+                        q.quad[i * n + j]
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn kofn_repair_returns_exactly_k_unique_ascending() {
+    check_sized("kofn-repair", 0x5B, DEFAULT_CASES, 32, |rng, size| {
+        let n = 2 + size;
+        let k = 1 + rng.below(n as u32 - 1) as usize;
+        let p = random_kofn(rng, n, k).as_es();
+        // raw solver output can be any subset, including infeasible ones
+        let selected: Vec<usize> = (0..n).filter(|_| rng.bernoulli(0.35)).collect();
+        let repaired = repair_selection(&p, selected);
+        prop_assert!(repaired.len() == k, "repair returned {} of k={k}", repaired.len());
+        prop_assert!(repaired.iter().all(|&i| i < n), "index out of range (n={n})");
+        prop_assert!(
+            repaired.windows(2).all(|w| w[0] < w[1]),
+            "not strictly ascending/unique: {repaired:?}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn kofn_bias_is_invariant_under_candidate_relabeling() {
+    check_sized("kofn-bias-permutation", 0x6C, DEFAULT_CASES, 24, |rng, size| {
+        let n = 2 + size;
+        let k = 1 + rng.below(n as u32 - 1) as usize;
+        let p = random_kofn(rng, n, k);
+        // random permutation (seeded Fisher–Yates) relabeling the items
+        let mut perm: Vec<usize> = (0..n).collect();
+        for i in (1..n).rev() {
+            let j = rng.below(i as u32 + 1) as usize;
+            perm.swap(i, j);
+        }
+        let mut value = vec![0.0f32; n];
+        let mut cost = vec![0.0f32; n * n];
+        for i in 0..n {
+            value[perm[i]] = p.value[i];
+            for j in 0..n {
+                cost[perm[i] * n + perm[j]] = p.cost[i * n + j];
+            }
+        }
+        let permuted = KofnProblem { value, cost, k };
+        let (a, _) = p.qubo(0.0).to_ising();
+        let (b, _) = permuted.qubo(0.0).to_ising();
+        let (ba, bb) = (kofn_bias(&a), kofn_bias(&b));
+        prop_assert!(
+            ba.to_bits() == bb.to_bits(),
+            "bias not permutation-invariant: {ba} vs {bb} (n={n} k={k})"
         );
         Ok(())
     });
