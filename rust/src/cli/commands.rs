@@ -89,7 +89,9 @@ fn apply_resilience_flags(settings: &mut Settings, args: &Args) -> Result<()> {
 
 /// Apply the `[obs]` flags: `--obs` switches span recording on,
 /// `--trace-out PATH` selects the JSONL sink (and implies `--obs` — a
-/// sink with tracing off would silently record nothing).
+/// sink with tracing off would silently record nothing). `--record-out
+/// PATH` selects the flight-recorder JSONL sink and implies recording
+/// (same rationale; recording is otherwise `[obs] record_enabled`).
 fn apply_obs_flags(settings: &mut Settings, args: &Args) {
     if args.get_bool("obs") {
         settings.obs.enabled = true;
@@ -97,6 +99,10 @@ fn apply_obs_flags(settings: &mut Settings, args: &Args) {
     if let Some(path) = args.get("trace-out") {
         settings.obs.trace_out = path.to_string();
         settings.obs.enabled = true;
+    }
+    if let Some(path) = args.get("record-out") {
+        settings.obs.record_out = path.to_string();
+        settings.obs.record_enabled = true;
     }
 }
 
@@ -493,8 +499,21 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
             },
         );
     }
+    if settings.obs.record_enabled {
+        println!(
+            "flight recorder: on (ring {}{})",
+            settings.obs.record_capacity,
+            if settings.obs.record_out.is_empty() {
+                String::new()
+            } else {
+                format!(", record-out {}", settings.obs.record_out)
+            },
+        );
+    }
     let trace_out = (!settings.obs.trace_out.is_empty())
         .then(|| std::path::PathBuf::from(&settings.obs.trace_out));
+    let record_out = (!settings.obs.record_out.is_empty())
+        .then(|| std::path::PathBuf::from(&settings.obs.record_out));
 
     // --port: run the TCP endpoint until killed
     if let Some(port) = args.get("port") {
@@ -535,6 +554,12 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
                         eprintln!("trace export failed: {e}");
                     }
                 }
+                if let Some(path) = &record_out {
+                    let lines = svc.obs().recorder().drain_lines();
+                    if let Err(e) = append_record_lines(path, &lines) {
+                        eprintln!("record export failed: {e}");
+                    }
+                }
                 println!("{}", svc.metrics().report());
                 server.stop();
                 // connection threads may still hold clones briefly; a
@@ -549,6 +574,12 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
                 let spans = svc.obs().traces().drain();
                 if let Err(e) = crate::obs::export::append_jsonl(path, &spans) {
                     eprintln!("trace export failed: {e}");
+                }
+            }
+            if let Some(path) = &record_out {
+                let lines = svc.obs().recorder().drain_lines();
+                if let Err(e) = append_record_lines(path, &lines) {
+                    eprintln!("record export failed: {e}");
                 }
             }
             ticks += 1;
@@ -587,7 +618,81 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         crate::obs::export::append_jsonl(path, &spans)?;
         println!("wrote {} trace trees to {}", spans.len(), path.display());
     }
+    if let Some(path) = &record_out {
+        let lines = svc.obs().recorder().drain_lines();
+        append_record_lines(path, &lines)?;
+        println!("wrote {} flight records to {}", lines.len(), path.display());
+    }
     svc.shutdown();
+    Ok(())
+}
+
+/// Append flight-recorder JSONL lines to `path` (created on first
+/// flush); a no-op on an empty batch so idle flush ticks don't touch
+/// the file.
+fn append_record_lines(path: &Path, lines: &[String]) -> Result<()> {
+    if lines.is_empty() {
+        return Ok(());
+    }
+    use std::io::Write;
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+        .with_context(|| format!("opening record sink {}", path.display()))?;
+    for l in lines {
+        writeln!(f, "{l}")?;
+    }
+    Ok(())
+}
+
+/// `replay`: re-execute recorded requests from a flight-recorder JSONL
+/// file through the current binary and byte-diff the outputs; on
+/// divergence, prints the first divergent DAG node and the
+/// config-fingerprint diff, and the command exits nonzero.
+pub fn cmd_replay(args: &Args) -> Result<()> {
+    let mut settings = load_settings(args)?;
+    apply_pipeline_flags(&mut settings, args)?;
+    apply_resilience_flags(&mut settings, args)?;
+    let path = args
+        .positional
+        .get(1)
+        .context("replay expects a records file: cobi-es replay <file.jsonl>")?;
+    let records = crate::obs::replay::load_records(path)?;
+    if records.is_empty() {
+        bail!("no records in {path}");
+    }
+    let selected: Vec<_> = match args.get("id") {
+        Some(_) => {
+            let id = args.get_usize("id", 0)? as u64;
+            let rec = records
+                .iter()
+                .find(|r| r.id == id)
+                .with_context(|| format!("no record with id {id} in {path}"))?;
+            vec![rec.clone()]
+        }
+        // --all is the default: replaying everything is the audit mode
+        None => records,
+    };
+    let total = selected.len();
+    let mut diverged = 0usize;
+    for rec in &selected {
+        let report = crate::obs::replay_record(rec, &settings)?;
+        println!("{}", report.verdict_line());
+        if !report.identical {
+            diverged += 1;
+            for d in &report.config_diff {
+                println!(
+                    "  config diff: {} recorded={} current={}",
+                    d.key, d.recorded, d.current
+                );
+            }
+        }
+    }
+    println!("replayed {total}: {} identical, {diverged} diverged", total - diverged);
+    if diverged > 0 {
+        bail!("{diverged}/{total} replays diverged");
+    }
     Ok(())
 }
 
@@ -636,6 +741,7 @@ pub fn dispatch(args: &Args) -> Result<()> {
         Some("solve") => cmd_solve(args),
         Some("select") => cmd_select(args),
         Some("serve") => cmd_serve(args),
+        Some("replay") => cmd_replay(args),
         Some("doctor") => cmd_doctor(args),
         Some("help") | None => {
             print!("{}", super::USAGE);

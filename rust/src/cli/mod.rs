@@ -33,6 +33,7 @@ const BOOLEAN_FLAGS: &[&str] = &[
     "no-repair",
     "obs",
     "breaker",
+    "all",
 ];
 
 impl Args {
@@ -115,7 +116,7 @@ COMMANDS:
                [--fault-drift F] [--fault-seed N]
   experiment   Regenerate a paper figure/table
                <fig1|fig2|fig3|fig5|fig6|fig7|fig8|table1|supp-optima|
-                fault-sweep|energy-report|workloads|all>
+                fault-sweep|energy-report|workloads|replay-audit|all>
                [--full] [--out <file.md>] [--csv]
   gen-corpus   Write a benchmark set as text files
                --set <name> --out <dir>
@@ -162,7 +163,9 @@ COMMANDS:
                [--fault-drift F] [--fault-seed N]
                observability: [--obs] (request-scoped tracing)
                [--trace-out <file.jsonl>] (JSONL span dump; implies
-               --obs)
+               --obs) [--record-out <file.jsonl>] (flight-recorder
+               provenance dump, one record per request; implies
+               recording — see 'replay')
                overload safety: [--default-deadline-ms N] (0 = none)
                [--idle-timeout-ms N] (per-connection read timeout;
                0 = none) [--shed-watermark-ms N] (two-tier admission
@@ -174,7 +177,16 @@ COMMANDS:
                [--breaker-trip-failures N] [--breaker-cooldown-ms N]
                admin: a '::DRAIN::' line stops accepts and drains
                in-flight work before exit; '::DEADLINE <ms>::' before
-               the document sets a per-request deadline
+               the document sets a per-request deadline; a
+               '::REPLAY <id>::' line re-executes flight-recorder ring
+               entry <id> and returns 'OK 1' + one verdict line
+  replay       Re-execute recorded requests from a flight-recorder
+               JSONL file (serve --record-out) through the current
+               binary and byte-diff the outputs; on divergence, names
+               the first divergent DAG node (level/slot/seed, recorded
+               vs replayed energy) and the config-fingerprint diff
+               <file.jsonl> [--id N] [--all] (default: --all)
+               exits nonzero when any replay diverges
   doctor       Check artifacts, PJRT runtime and device calibration
   help         Show this message
 
@@ -232,6 +244,17 @@ mod tests {
         assert_eq!(a.get_usize("default-deadline-ms", 0).unwrap(), 500);
         // also valid as the last argument
         assert!(parse("serve --breaker").get_bool("breaker"));
+    }
+
+    #[test]
+    fn replay_flags_parse() {
+        let a = parse("replay records.jsonl --all");
+        assert_eq!(a.positional, vec!["replay", "records.jsonl"]);
+        assert!(a.get_bool("all"));
+        let a = parse("replay records.jsonl --id 3");
+        assert_eq!(a.get_usize("id", 0).unwrap(), 3);
+        let a = parse("serve --record-out flight.jsonl --port 0");
+        assert_eq!(a.get("record-out"), Some("flight.jsonl"));
     }
 
     #[test]

@@ -440,6 +440,16 @@ pub struct ObsConfig {
     pub exemplars: usize,
     /// JSONL trace-dump path ("" = no dump). CLI: `--trace-out`.
     pub trace_out: String,
+    /// Record per-request provenance (flight recorder: seeds, hashes,
+    /// per-node solve taps) for deterministic replay (default off: the
+    /// serving hot path allocates nothing for recording until this is
+    /// set, pinned by `tests/alloc_audit.rs`). `serve --record-out
+    /// <path>` also enables it.
+    pub record_enabled: bool,
+    /// Bound on buffered request records (oldest overwritten past it).
+    pub record_capacity: usize,
+    /// JSONL record-dump path ("" = no dump). CLI: `--record-out`.
+    pub record_out: String,
 }
 
 impl Default for ObsConfig {
@@ -449,6 +459,9 @@ impl Default for ObsConfig {
             ring_capacity: 256,
             exemplars: 8,
             trace_out: String::new(),
+            record_enabled: false,
+            record_capacity: 256,
+            record_out: String::new(),
         }
     }
 }
@@ -802,6 +815,9 @@ impl Settings {
         set!(self.obs.ring_capacity, get_i64, "obs.ring_capacity");
         set!(self.obs.exemplars, get_i64, "obs.exemplars");
         set!(self.obs.trace_out, get_str, "obs.trace_out");
+        set!(self.obs.record_enabled, get_bool, "obs.record_enabled");
+        set!(self.obs.record_capacity, get_i64, "obs.record_capacity");
+        set!(self.obs.record_out, get_str, "obs.record_out");
 
         set!(self.workload.default, get_str, "workload.default");
         set!(self.workload.retrieval_k, get_i64, "workload.retrieval_k");
@@ -1111,6 +1127,9 @@ fault_seed = 1234
         assert_eq!(s.obs.ring_capacity, 256);
         assert_eq!(s.obs.exemplars, 8);
         assert!(s.obs.trace_out.is_empty());
+        assert!(!s.obs.record_enabled, "flight recorder must default off");
+        assert_eq!(s.obs.record_capacity, 256);
+        assert!(s.obs.record_out.is_empty());
 
         let doc = toml::Document::parse(
             r#"
@@ -1119,6 +1138,9 @@ enabled = true
 ring_capacity = 64
 exemplars = 4
 trace_out = "/tmp/trace.jsonl"
+record_enabled = true
+record_capacity = 32
+record_out = "/tmp/records.jsonl"
 "#,
         )
         .unwrap();
@@ -1128,6 +1150,9 @@ trace_out = "/tmp/trace.jsonl"
         assert_eq!(s.obs.ring_capacity, 64);
         assert_eq!(s.obs.exemplars, 4);
         assert_eq!(s.obs.trace_out, "/tmp/trace.jsonl");
+        assert!(s.obs.record_enabled);
+        assert_eq!(s.obs.record_capacity, 32);
+        assert_eq!(s.obs.record_out, "/tmp/records.jsonl");
     }
 
     #[test]

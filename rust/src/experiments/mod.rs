@@ -14,6 +14,7 @@ pub mod fig23;
 pub mod fig5;
 pub mod fig6;
 pub mod fig78;
+pub mod replay_audit;
 pub mod supp;
 pub mod table1;
 pub mod workloads;
@@ -134,6 +135,7 @@ pub const ALL_EXPERIMENTS: &[&str] = &[
     "fault-sweep",
     "energy-report",
     "workloads",
+    "replay-audit",
 ];
 
 /// Run one experiment by id.
@@ -150,6 +152,7 @@ pub fn run(id: &str, scale: Scale, settings: &Settings) -> Result<Vec<Report>> {
         "fault-sweep" => fault_sweep::run(scale, settings),
         "energy-report" => energy_report::run(scale, settings),
         "workloads" => workloads::run(scale, settings),
+        "replay-audit" => replay_audit::run(scale, settings),
         other => bail!("unknown experiment '{other}' (try one of {ALL_EXPERIMENTS:?})"),
     }
 }

@@ -1,0 +1,162 @@
+//! Replay-audit — flight-recorder divergence triage under injected
+//! faults (`experiment replay-audit`, ISSUE 10 acceptance table).
+//!
+//! Two passes over bench_10 through an in-process recording
+//! [`Service`](crate::service::Service):
+//!
+//! 1. **control** — record on a clean fleet, replay against the same
+//!    clean config: every replay must come back byte-identical (the
+//!    determinism contract, audited end to end through the recorder);
+//! 2. **fault audit** — record on a fleet whose COBI devices carry a 5%
+//!    stuck-oscillator model, replay against the CLEAN config: each
+//!    divergent record is triaged to the first DAG node the fault
+//!    flipped, and the table reports the divergence count plus the
+//!    named (level, slot) nodes.
+
+use anyhow::Result;
+
+use crate::config::Settings;
+use crate::obs::recorder::hex;
+use crate::obs::{replay_record, RequestRecord};
+use crate::service::Service;
+
+use super::{Report, Scale};
+
+/// Recording fleet settings: COBI devices, recorder on, optional
+/// stuck-oscillator injection.
+fn fleet_settings(base: &Settings, iterations: usize, stuck: f32) -> Settings {
+    let mut s = base.clone();
+    s.service.workers = 1;
+    s.pipeline.solver = "cobi".into();
+    s.pipeline.iterations = iterations;
+    s.obs.record_enabled = true;
+    s.obs.record_capacity = 64;
+    if stuck > 0.0 {
+        s.resilience.fault.enabled = true;
+        s.resilience.fault.stuck_rate = stuck;
+    }
+    s
+}
+
+/// Serve `docs` bench_10 documents through a recording service
+/// (sequential submits keep ring ids aligned with document order) and
+/// return the ring contents.
+fn record_fleet(settings: &Settings, docs: usize) -> Result<Vec<RequestRecord>> {
+    let svc = Service::start(settings)?;
+    let set = crate::corpus::benchmark_set("bench_10")?;
+    for doc in set.documents.iter().take(docs) {
+        svc.submit(doc.clone())?.wait()?;
+    }
+    let recs = svc.obs().recorder().snapshot();
+    svc.shutdown();
+    Ok(recs)
+}
+
+/// Regenerate the replay-audit table at `scale`.
+pub fn run(scale: Scale, settings: &Settings) -> Result<Vec<Report>> {
+    let docs = scale.docs(10);
+    let iterations = match scale {
+        Scale::Quick => 2,
+        Scale::Full => settings.pipeline.iterations.max(10),
+    };
+    let clean = fleet_settings(settings, iterations, 0.0);
+    let faulty = fleet_settings(settings, iterations, 0.05);
+
+    let mut report = Report::new(
+        "Replay audit — record/replay byte-identity and fault triage (bench_10)",
+        &[
+            "fleet",
+            "records",
+            "identical",
+            "diverged",
+            "first divergent node",
+            "config diff",
+        ],
+    );
+    report.note(format!(
+        "{docs} documents x {iterations} refinement iterations; both fleets replayed \
+         against the CLEAN config — control divergences must be 0, fault-fleet \
+         divergences are triaged to the first DAG node (level,slot) the stuck \
+         oscillators flipped (docs/OBSERVABILITY.md §Flight recorder)"
+    ));
+
+    for (fleet, record_settings, stuck) in
+        [("clean (control)", &clean, 0.0f32), ("5% stuck oscillators", &faulty, 0.05)]
+    {
+        let recs = record_fleet(record_settings, docs)?;
+        let mut identical = 0usize;
+        let mut diverged = 0usize;
+        let mut first_node = String::from("—");
+        let mut config_diff = String::from("—");
+        for rec in &recs {
+            // replay against the clean environment: this is the triage
+            // posture — "does this recording reproduce on a good fleet?"
+            let r = replay_record(rec, &clean)?;
+            if r.identical {
+                identical += 1;
+            } else {
+                diverged += 1;
+                if let (true, Some(d)) = (first_node == "—", &r.first_divergence) {
+                    first_node = format!(
+                        "doc {} node ({},{}) seed {} energy {:.3}->{:.3}",
+                        rec.doc_id,
+                        d.level,
+                        d.slot,
+                        hex(d.node_seed),
+                        d.recorded_energy,
+                        d.replayed_energy,
+                    );
+                }
+                if config_diff == "—" && !r.config_diff.is_empty() {
+                    config_diff = r
+                        .config_diff
+                        .iter()
+                        .map(|c| format!("{}: {}->{}", c.key, c.recorded, c.current))
+                        .collect::<Vec<_>>()
+                        .join("; ");
+                }
+            }
+        }
+        if stuck == 0.0 && diverged > 0 {
+            anyhow::bail!("control fleet diverged {diverged}/{docs} — determinism broken");
+        }
+        report.row(vec![
+            fleet.to_string(),
+            recs.len().to_string(),
+            identical.to_string(),
+            diverged.to_string(),
+            first_node,
+            config_diff,
+        ]);
+    }
+    Ok(vec![report])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn replay_audit_quick_reports_clean_control_and_triaged_faults() {
+        let reports = run(Scale::Quick, &Settings::default()).unwrap();
+        assert_eq!(reports.len(), 1);
+        let r = &reports[0];
+        assert_eq!(r.rows.len(), 2);
+        // control row: all identical, no divergence, placeholder cells
+        assert_eq!(r.rows[0][2], r.rows[0][1], "control must be N/N identical");
+        assert_eq!(r.rows[0][3], "0");
+        assert_eq!(r.rows[0][4], "—");
+        // fault row: counts add up; any divergence names a node and the
+        // fault_enabled knob
+        let total: usize = r.rows[1][1].parse().unwrap();
+        let identical: usize = r.rows[1][2].parse().unwrap();
+        let diverged: usize = r.rows[1][3].parse().unwrap();
+        assert_eq!(identical + diverged, total);
+        if diverged > 0 {
+            assert!(r.rows[1][4].contains("node ("), "{}", r.rows[1][4]);
+            assert!(r.rows[1][5].contains("fault_enabled"), "{}", r.rows[1][5]);
+        }
+        let md = r.to_markdown();
+        assert!(md.contains("Replay audit"), "{md}");
+    }
+}

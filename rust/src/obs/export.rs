@@ -53,6 +53,20 @@ pub fn exposition(m: &ServiceMetrics) -> String {
         );
     }
 
+    out.push_str("# TYPE cobi_es_workload_requests_total counter\n");
+    for (workload, v) in [
+        ("es", m.workloads.es),
+        ("retrieval", m.workloads.retrieval),
+        ("dispersion", m.workloads.dispersion),
+    ] {
+        push_counter(
+            &mut out,
+            "workload_requests_total",
+            &format!("{{workload=\"{workload}\"}}"),
+            v,
+        );
+    }
+
     histogram_lines(&mut out, "queue_wait_seconds", "", &m.queue_hist);
     histogram_lines(&mut out, "solve_seconds", "", &m.solve_hist);
 
@@ -169,15 +183,42 @@ pub fn exposition(m: &ServiceMetrics) -> String {
         out.push_str("# TYPE cobi_es_dispatch_instances_total counter\n");
         push_counter(&mut out, "dispatch_instances_total", "", o.dispatch_instances);
 
+        // data-loss counters, one series per silent drop path: spans
+        // lost to trace-ring contention/overwrite, exemplars displaced
+        // from the top-K store, flight records overwritten in the
+        // bounded recorder ring
+        out.push_str("# TYPE cobi_es_obs_dropped_total counter\n");
+        for (kind, v) in [
+            ("trace_ring", o.dropped),
+            ("exemplar_evict", o.exemplar_evictions),
+            ("recorder_ring", o.recorder_overwritten),
+        ] {
+            push_counter(
+                &mut out,
+                "obs_dropped_total",
+                &format!("{{kind=\"{kind}\"}}"),
+                v,
+            );
+        }
+
+        if o.recorder_enabled {
+            out.push_str("# TYPE cobi_es_recorder_records_total counter\n");
+            push_counter(&mut out, "recorder_records_total", "", o.recorder_recorded);
+            out.push_str("# TYPE cobi_es_recorder_buffered gauge\n");
+            out.push_str(&format!("cobi_es_recorder_buffered {}\n", o.recorder_buffered));
+        }
+
         // the fleet energy ledger: joules, device-seconds and solve
         // counts per (backend, subsystem, size bucket)
         out.push_str("# TYPE cobi_es_energy_joules_total counter\n");
         out.push_str("# TYPE cobi_es_device_seconds_total counter\n");
         out.push_str("# TYPE cobi_es_ledger_solves_total counter\n");
         for row in &o.ledger {
+            // backend names are config-supplied free text; the other
+            // labels are enum-derived and never need escaping
             let labels = format!(
                 "{{backend=\"{}\",subsystem=\"{}\",bucket=\"{}\"}}",
-                row.backend,
+                label_escape(&row.backend),
                 row.subsystem,
                 bucket_label(row.bucket)
             );
@@ -216,6 +257,23 @@ fn histogram_lines(out: &mut String, name: &str, labels: &str, h: &Histogram) {
         h.count(),
         labels2 = braced(labels)
     ));
+}
+
+/// Escape a Prometheus label VALUE per the text-format rules: `\` as
+/// `\\`, `"` as `\"`, newline as `\n`. Applied to free-text label
+/// values (backend names come from config) so a hostile or typo'd
+/// string cannot break the exposition framing.
+fn label_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
 }
 
 fn braced(labels: &str) -> String {
@@ -449,6 +507,79 @@ mod tests {
         assert!(text.contains("cobi_es_solve_seconds_bucket{le=\"+Inf\"} 1"), "{text}");
         assert!(text.contains("cobi_es_solve_seconds_count 1"), "{text}");
         // every line is either a comment or "name{labels} value"
+        for line in text.lines() {
+            assert!(
+                line.starts_with("# TYPE cobi_es_") || line.starts_with("cobi_es_"),
+                "{line}"
+            );
+        }
+    }
+
+    #[test]
+    fn exposition_exports_workload_and_obs_loss_counters() {
+        let mut m = snapshot_with_obs();
+        m.workloads.record("es");
+        m.workloads.record("retrieval");
+        m.workloads.record("retrieval");
+        m.workloads.record("dispersion");
+        {
+            let o = m.obs.as_mut().unwrap();
+            o.dropped = 2;
+            o.exemplar_evictions = 5;
+            o.recorder_overwritten = 7;
+            o.recorder_enabled = true;
+            o.recorder_recorded = 9;
+            o.recorder_buffered = 4;
+        }
+        let text = exposition(&m);
+        assert!(
+            text.contains("cobi_es_workload_requests_total{workload=\"es\"} 1"),
+            "{text}"
+        );
+        assert!(
+            text.contains("cobi_es_workload_requests_total{workload=\"retrieval\"} 2"),
+            "{text}"
+        );
+        assert!(
+            text.contains("cobi_es_workload_requests_total{workload=\"dispersion\"} 1"),
+            "{text}"
+        );
+        assert!(
+            text.contains("cobi_es_obs_dropped_total{kind=\"trace_ring\"} 2"),
+            "{text}"
+        );
+        assert!(
+            text.contains("cobi_es_obs_dropped_total{kind=\"exemplar_evict\"} 5"),
+            "{text}"
+        );
+        assert!(
+            text.contains("cobi_es_obs_dropped_total{kind=\"recorder_ring\"} 7"),
+            "{text}"
+        );
+        assert!(text.contains("cobi_es_recorder_records_total 9"), "{text}");
+        assert!(text.contains("cobi_es_recorder_buffered 4"), "{text}");
+
+        // the workload series is present (zeroed) even on a fresh fleet,
+        // so dashboards don't need existence checks
+        let quiet = exposition(&ServiceMetrics::default());
+        assert!(
+            quiet.contains("cobi_es_workload_requests_total{workload=\"es\"} 0"),
+            "{quiet}"
+        );
+        // recorder gauges stay absent while the recorder is off
+        assert!(!quiet.contains("cobi_es_recorder_records_total"), "{quiet}");
+    }
+
+    #[test]
+    fn label_escape_neutralizes_quotes_and_newlines() {
+        assert_eq!(label_escape("tabu"), "tabu");
+        assert_eq!(label_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        let mut m = snapshot_with_obs();
+        for row in &mut m.obs.as_mut().unwrap().ledger {
+            row.backend = "ta\"bu".into();
+        }
+        let text = exposition(&m);
+        assert!(text.contains("backend=\"ta\\\"bu\""), "{text}");
         for line in text.lines() {
             assert!(
                 line.starts_with("# TYPE cobi_es_") || line.starts_with("cobi_es_"),

@@ -310,6 +310,53 @@ mod tests {
     }
 
     #[test]
+    fn escape_round_trips_adversarial_strings() {
+        // property: for ANY string — control chars, quotes, backslashes,
+        // multi-byte UTF-8, embedded escape-lookalikes — escape_into
+        // emits a JSON string the parser reads back verbatim, both bare
+        // and as an object member (the recorder's JSONL shape)
+        use crate::prop_assert;
+        crate::util::proptest::check("json_escape_round_trip", 0x1509, 256, |rng| {
+            let len = rng.below(24) as usize;
+            let mut raw = String::new();
+            for _ in 0..len {
+                let c = match rng.below(6) {
+                    // the hostile range: C0 controls incl. NUL
+                    0 => char::from_u32(rng.below(0x20)).unwrap(),
+                    1 => '"',
+                    2 => '\\',
+                    3 => ['\u{7f}', 'é', '→', '𝄞', '\u{202e}'][rng.below(5) as usize],
+                    // escape-lookalikes that must pass through verbatim
+                    4 => ['u', 'n', '0'][rng.below(3) as usize],
+                    _ => char::from_u32(0x20 + rng.below(0x5f)).unwrap(),
+                };
+                raw.push(c);
+            }
+            let mut enc = String::from('"');
+            escape_into(&mut enc, &raw);
+            enc.push('"');
+            let v = JsonValue::parse(&enc)
+                .map_err(|e| format!("escaped form failed to parse: {e} ({enc:?})"))?;
+            prop_assert!(
+                v.as_str() == Some(raw.as_str()),
+                "round trip mutated {raw:?} -> {:?}",
+                v.as_str()
+            );
+            // and embedded as a member value, framing survives
+            let mut obj = String::from("{\"doc\":\"");
+            escape_into(&mut obj, &raw);
+            obj.push_str("\"}");
+            let v = JsonValue::parse(&obj)
+                .map_err(|e| format!("object form failed to parse: {e} ({obj:?})"))?;
+            prop_assert!(
+                v.get("doc").and_then(JsonValue::as_str) == Some(raw.as_str()),
+                "object round trip mutated {raw:?}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
     fn object_preserves_member_order() {
         let v = JsonValue::parse(r#"{"z": 1, "a": 2}"#).unwrap();
         let JsonValue::Obj(members) = v else { panic!() };

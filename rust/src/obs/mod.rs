@@ -30,12 +30,16 @@
 pub mod export;
 pub mod json;
 pub mod ledger;
+pub mod recorder;
+pub mod replay;
 pub mod span;
 
 pub use ledger::{
     bucket_label, EnergyCost, EnergyLedger, EnergyModel, LedgerCell, LedgerRow, LedgerSolver,
     Subsystem,
 };
+pub use recorder::{FlightRecorder, NodeRecord, RequestRecord};
+pub use replay::{replay_record, replay_records, ReplayReport};
 pub use span::{AttrValue, Span};
 
 use std::collections::VecDeque;
@@ -66,6 +70,7 @@ pub struct TraceCollector {
     k: usize,
     recorded: AtomicU64,
     dropped: AtomicU64,
+    evictions: AtomicU64,
     ring: Mutex<VecDeque<Span>>,
     exemplars: Mutex<Vec<Exemplar>>,
 }
@@ -80,6 +85,7 @@ impl TraceCollector {
             k: k.max(1),
             recorded: AtomicU64::new(0),
             dropped: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
             ring: Mutex::new(VecDeque::with_capacity(cap)),
             exemplars: Mutex::new(Vec::new()),
         }
@@ -118,6 +124,7 @@ impl TraceCollector {
                 return;
             }
             ex.remove(mi);
+            self.evictions.fetch_add(1, Ordering::Relaxed);
         }
         let doc = doc.to_string();
         ex.push(Exemplar { doc, secs });
@@ -147,6 +154,13 @@ impl TraceCollector {
     /// Trees lost to overwrite or lock contention.
     pub fn dropped(&self) -> u64 {
         self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Exemplars displaced from the top-K store by slower requests —
+    /// the loss counter that distinguishes "was never slow" from
+    /// "was displaced" in the exposition.
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
     }
 
     /// Snapshot of the slowest-request exemplars (slowest first).
@@ -207,6 +221,17 @@ pub struct ObsMetrics {
     pub buffered: usize,
     /// Slowest-request exemplars, slowest first.
     pub exemplars: Vec<Exemplar>,
+    /// Exemplars displaced from the top-K store.
+    pub exemplar_evictions: u64,
+    /// Whether the flight recorder is on (`[obs] record_enabled` /
+    /// `record_out`).
+    pub recorder_enabled: bool,
+    /// Request records ever committed to the flight recorder.
+    pub recorder_recorded: u64,
+    /// Request records lost to recorder-ring overwrite.
+    pub recorder_overwritten: u64,
+    /// Request records currently buffered in the recorder ring.
+    pub recorder_buffered: usize,
     /// Energy-ledger rows (non-empty cells only).
     pub ledger: Vec<LedgerRow>,
     /// Device dispatches observed.
@@ -269,6 +294,7 @@ pub struct ObsShared {
     traces: Arc<TraceCollector>,
     ledger: Arc<EnergyLedger>,
     dispatch: Arc<DispatchCounters>,
+    recorder: Arc<FlightRecorder>,
 }
 
 impl ObsShared {
@@ -300,6 +326,7 @@ impl ObsShared {
             )),
             ledger: Arc::new(EnergyLedger::new(EnergyModel::from_settings(settings))),
             dispatch: Arc::new(DispatchCounters::default()),
+            recorder: Arc::new(FlightRecorder::from_settings(settings)),
         }
     }
 
@@ -375,6 +402,13 @@ impl ObsShared {
         &self.dispatch
     }
 
+    /// The per-request flight recorder (`[obs] record_*`): disabled by
+    /// default, in which case the serving path never consults it beyond
+    /// one branch (pinned zero-alloc by `tests/alloc_audit.rs`).
+    pub fn recorder(&self) -> &Arc<FlightRecorder> {
+        &self.recorder
+    }
+
     /// Metrics snapshot for `ServiceMetrics`.
     pub fn snapshot(&self) -> ObsMetrics {
         let (dispatches, dispatch_requests, dispatch_instances) = self.dispatch.snapshot();
@@ -384,10 +418,15 @@ impl ObsShared {
             dropped: self.traces.dropped(),
             buffered: self.traces.len(),
             exemplars: self.traces.exemplars(),
+            exemplar_evictions: self.traces.evictions(),
             ledger: self.ledger.rows(),
             dispatches,
             dispatch_requests,
             dispatch_instances,
+            recorder_enabled: self.recorder.enabled(),
+            recorder_recorded: self.recorder.recorded(),
+            recorder_overwritten: self.recorder.overwritten(),
+            recorder_buffered: self.recorder.buffered(),
         }
     }
 }
@@ -422,6 +461,24 @@ mod tests {
         let ex = c.exemplars();
         let docs: Vec<&str> = ex.iter().map(|e| e.doc.as_str()).collect();
         assert_eq!(docs, ["b", "d", "c"], "slowest first, k=3");
+        assert_eq!(c.evictions(), 1, "only 'a' was displaced ('e' never entered)");
+    }
+
+    #[test]
+    fn snapshot_carries_recorder_counters() {
+        let obs = ObsShared::disabled();
+        let m = obs.snapshot();
+        assert!(!m.recorder_enabled, "recorder defaults off");
+        assert_eq!(m.recorder_recorded, 0);
+        assert_eq!(m.recorder_overwritten, 0);
+        assert_eq!(m.recorder_buffered, 0);
+        assert_eq!(m.exemplar_evictions, 0);
+
+        let mut s = Settings::default();
+        s.obs.record_enabled = true;
+        let obs = ObsShared::from_settings(&s);
+        assert!(obs.recorder().enabled());
+        assert!(obs.snapshot().recorder_enabled);
     }
 
     #[test]

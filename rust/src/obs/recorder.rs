@@ -1,0 +1,692 @@
+//! Flight recorder: per-request provenance capture for deterministic
+//! replay (ISSUE 10).
+//!
+//! Spans (PR 6) show *where time went*; the recorder captures *what was
+//! computed from which inputs*: one [`RequestRecord`] per served request
+//! holding the request seed, the document content (and its hash), the
+//! workload/strategy/route/tier, a fingerprint of the resolved config,
+//! the fault-model provenance, per-DAG-node solve taps
+//! ([`NodeRecord`]: level, slot, node seed, spin-vector hash, energy
+//! bits) and the final selection + summary hash + objective bits.
+//! Because the whole pipeline is a pure function of (config, document,
+//! seed), a record is a reproducible local test case: the replay engine
+//! ([`super::replay`]) re-executes it through the current binary and
+//! byte-diffs the outputs.
+//!
+//! Determinism: records carry NO wall-clock data, so the JSONL emitted
+//! for a request is byte-identical across pool shapes, coalescing and
+//! worker counts — exactly like the pinned span form (decision #18).
+//! With `[obs] record_enabled = false` (the default) the serving hot
+//! path never consults the ring and allocates nothing
+//! (`tests/alloc_audit.rs`). u64 seeds/hashes and f64 bit patterns are
+//! emitted as `"0x…"` hex strings: the JSON reader surfaces numbers as
+//! `f64`, which cannot hold them exactly.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::Settings;
+use crate::pipeline::Summary;
+use crate::solvers::SolveResult;
+
+use super::json::{escape_into, JsonValue};
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01B3;
+
+#[inline]
+fn fnv_byte(h: u64, b: u8) -> u64 {
+    (h ^ b as u64).wrapping_mul(FNV_PRIME)
+}
+
+#[inline]
+fn fnv_bytes(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h = fnv_byte(h, b);
+    }
+    h
+}
+
+/// FNV-1a over the spin vectors of one request's solved instances, in
+/// submission order (a `0x7C` separator folds in after each instance so
+/// instance boundaries cannot alias). This is the per-node tap the
+/// executors record: two solves agree on this hash iff every replica's
+/// spin vector is byte-identical.
+pub fn spin_hash(solved: &[SolveResult]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for r in solved {
+        for &s in &r.spins {
+            h = fnv_byte(h, s as u8);
+        }
+        h = fnv_byte(h, b'|');
+    }
+    h
+}
+
+/// FNV-1a over a final selection: each selected index (little-endian
+/// u64) then each summary sentence (with a `\n` separator). Two
+/// summaries agree on this hash iff they are byte-identical.
+pub fn summary_hash(selected: &[usize], sentences: &[String]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &i in selected {
+        h = fnv_bytes(h, &(i as u64).to_le_bytes());
+    }
+    for s in sentences {
+        h = fnv_bytes(h, s.as_bytes());
+        h = fnv_byte(h, b'\n');
+    }
+    h
+}
+
+/// FNV-1a over a document's sentences (with a `\n` separator): the
+/// content hash recorded per request, so replay can verify it is
+/// re-executing the same input bytes.
+pub fn content_hash(sentences: &[String]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for s in sentences {
+        h = fnv_bytes(h, s.as_bytes());
+        h = fnv_byte(h, b'\n');
+    }
+    h
+}
+
+/// Canonical `0x`-prefixed 16-digit hex encoding for recorded u64s
+/// (seeds, hashes, f64 bit patterns).
+pub fn hex(v: u64) -> String {
+    format!("{v:#018x}")
+}
+
+/// Parse a [`hex`]-encoded u64 back (plain decimal accepted too, for
+/// hand-written records).
+pub fn parse_hex(s: &str) -> Result<u64> {
+    if let Some(h) = s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+        u64::from_str_radix(h, 16).with_context(|| format!("bad hex u64 '{s}'"))
+    } else {
+        s.parse().with_context(|| format!("bad u64 '{s}'"))
+    }
+}
+
+/// The resolved-config provenance stamped on every record: canonical
+/// `(key, value)` pairs over the resolved `[pipeline]` config, the
+/// resolved backend route, and the fault-model seed/rates, plus the
+/// FNV fingerprint over all of them. Every value round-trips through
+/// its `FromStr`, so replay can reconstruct the recorded
+/// [`PipelineConfig`](crate::config::PipelineConfig) exactly.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetProvenance {
+    /// Canonical `(key, value)` pairs (see [`provenance_fields`]).
+    pub fields: Vec<(String, String)>,
+    /// [`fingerprint`] over `fields`.
+    pub fingerprint: u64,
+    /// Resolved backend route (`sched::resolved_backend`).
+    pub backend: String,
+}
+
+impl FleetProvenance {
+    /// Capture the provenance of `settings` as served right now.
+    pub fn from_settings(settings: &Settings) -> Self {
+        let fields = provenance_fields(settings);
+        let fp = fingerprint(&fields);
+        Self {
+            fields,
+            fingerprint: fp,
+            backend: crate::sched::resolved_backend(settings).to_string(),
+        }
+    }
+}
+
+/// The canonical provenance pairs for `settings`: every resolved
+/// `[pipeline]` field (values in their `FromStr`-compatible `Display`
+/// form, the seed in hex), the resolved backend, and the fault-model
+/// switch/seed/rates. Key order is fixed — the [`fingerprint`] depends
+/// on it.
+pub fn provenance_fields(settings: &Settings) -> Vec<(String, String)> {
+    let p = &settings.pipeline;
+    let f = &settings.resilience.fault;
+    let pair = |k: &str, v: String| (k.to_string(), v);
+    vec![
+        pair("lambda", p.lambda.to_string()),
+        pair("improved_formulation", p.improved_formulation.to_string()),
+        pair("precision", p.precision.to_string()),
+        pair("rounding", p.rounding.to_string()),
+        pair("iterations", p.iterations.to_string()),
+        pair("decompose_p", p.decompose_p.to_string()),
+        pair("decompose_q", p.decompose_q.to_string()),
+        pair("strategy", p.strategy.to_string()),
+        pair("summary_len", p.summary_len.to_string()),
+        pair("solver", p.solver.clone()),
+        pair("seed", hex(p.seed)),
+        pair("backend", crate::sched::resolved_backend(settings).to_string()),
+        pair("fault_enabled", f.enabled.to_string()),
+        pair("fault_seed", hex(f.seed)),
+        pair("fault_stuck_rate", f.stuck_rate.to_string()),
+        pair("fault_drift_rate", f.drift_rate.to_string()),
+        pair("fault_drift_amp", f.drift_amp.to_string()),
+        pair("fault_dac_mismatch", f.dac_mismatch.to_string()),
+        pair("fault_burst_rate", f.burst_rate.to_string()),
+        pair("fault_burst_amp", f.burst_amp.to_string()),
+    ]
+}
+
+/// FNV-1a over `key=value\n` for each pair, in order: the config
+/// fingerprint recorded per request and diffed by replay triage.
+pub fn fingerprint(fields: &[(String, String)]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for (k, v) in fields {
+        h = fnv_bytes(h, k.as_bytes());
+        h = fnv_byte(h, b'=');
+        h = fnv_bytes(h, v.as_bytes());
+        h = fnv_byte(h, b'\n');
+    }
+    h
+}
+
+/// One solve-DAG node's tap: where it sits in the decomposition plan,
+/// the seed it solved under (0 for window-plan nodes, whose seeds come
+/// from the per-document request stream), the FNV hash of every solved
+/// spin vector, and the selected-best objective's f64 bits.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NodeRecord {
+    /// Decomposition level (0 = leaves).
+    pub level: usize,
+    /// Slot within the level.
+    pub slot: usize,
+    /// Per-node seed (`decompose::node_seed`); 0 under the window plan.
+    pub node_seed: u64,
+    /// [`spin_hash`] over the node's solved instances.
+    pub spin_hash: u64,
+    /// `f64::to_bits` of the node's selected-best objective.
+    pub energy_bits: u64,
+}
+
+/// One request's full provenance: everything needed to re-execute it
+/// byte-for-byte through the current binary and to triage a divergence
+/// down to the first differing DAG node.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestRecord {
+    /// Ring-assigned sequence number (1-based; the `::REPLAY <id>::` key).
+    pub id: u64,
+    /// Document / problem id.
+    pub doc_id: String,
+    /// [`content_hash`] over `sentences`.
+    pub doc_hash: u64,
+    /// The seed the request actually solved under (for ES: the
+    /// doc-derived config seed; for non-ES: the workload-salted
+    /// problem seed).
+    pub seed: u64,
+    /// Workload tag (`es` | `retrieval` | `dispersion`).
+    pub workload: String,
+    /// Decomposition strategy the request ran.
+    pub strategy: String,
+    /// Backend route decision: `pooled` or `local`.
+    pub route: String,
+    /// Admission tier (`interactive` | `batch`).
+    pub tier: String,
+    /// Deadline budget in ms (0 = none).
+    pub deadline_ms: u64,
+    /// Resolved backend route label.
+    pub backend: String,
+    /// Config fingerprint ([`fingerprint`] over `config`).
+    pub config_fp: u64,
+    /// Canonical provenance pairs ([`provenance_fields`]).
+    pub config: Vec<(String, String)>,
+    /// Per-DAG-node taps, in submission order (empty for local-route
+    /// and streamed requests, which solve through opaque paths).
+    pub nodes: Vec<NodeRecord>,
+    /// Final selected indices.
+    pub selected: Vec<usize>,
+    /// [`summary_hash`] over the final selection.
+    pub summary_hash: u64,
+    /// `f64::to_bits` of the final objective.
+    pub objective_bits: u64,
+    /// The request's input lines (document sentences / workload body) —
+    /// what replay re-executes.
+    pub sentences: Vec<String>,
+}
+
+impl RequestRecord {
+    /// Stamp the final selection onto the record.
+    pub fn finish(&mut self, summary: &Summary) {
+        self.selected = summary.selected.clone();
+        self.summary_hash = summary_hash(&summary.selected, &summary.sentences);
+        self.objective_bits = summary.objective.to_bits();
+    }
+
+    /// Serialize as one JSONL line (no trailing newline). Byte-stable:
+    /// a pure function of the record's fields, never of wall clocks.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::with_capacity(512);
+        out.push_str("{\"id\":");
+        out.push_str(&self.id.to_string());
+        push_str_field(&mut out, "doc", &self.doc_id);
+        push_hex_field(&mut out, "doc_hash", self.doc_hash);
+        push_hex_field(&mut out, "seed", self.seed);
+        push_str_field(&mut out, "workload", &self.workload);
+        push_str_field(&mut out, "strategy", &self.strategy);
+        push_str_field(&mut out, "route", &self.route);
+        push_str_field(&mut out, "tier", &self.tier);
+        out.push_str(",\"deadline_ms\":");
+        out.push_str(&self.deadline_ms.to_string());
+        push_str_field(&mut out, "backend", &self.backend);
+        push_hex_field(&mut out, "config_fp", self.config_fp);
+        out.push_str(",\"config\":{");
+        for (i, (k, v)) in self.config.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push('"');
+            escape_into(&mut out, k);
+            out.push_str("\":\"");
+            escape_into(&mut out, v);
+            out.push('"');
+        }
+        out.push_str("},\"nodes\":[");
+        for (i, n) in self.nodes.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"level\":{},\"slot\":{},\"seed\":\"{}\",\"spins\":\"{}\",\"energy\":\"{}\"}}",
+                n.level,
+                n.slot,
+                hex(n.node_seed),
+                hex(n.spin_hash),
+                hex(n.energy_bits)
+            ));
+        }
+        out.push_str("],\"selected\":[");
+        for (i, s) in self.selected.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&s.to_string());
+        }
+        out.push(']');
+        push_hex_field(&mut out, "summary_hash", self.summary_hash);
+        push_hex_field(&mut out, "objective", self.objective_bits);
+        out.push_str(",\"sentences\":[");
+        for (i, s) in self.sentences.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push('"');
+            escape_into(&mut out, s);
+            out.push('"');
+        }
+        out.push_str("]}");
+        out
+    }
+
+    /// Parse one JSONL line written by [`RequestRecord::to_jsonl`].
+    pub fn parse(line: &str) -> Result<Self> {
+        let v = JsonValue::parse(line).context("parsing record JSONL")?;
+        Self::from_json(&v)
+    }
+
+    /// Build from a parsed JSON record.
+    pub fn from_json(v: &JsonValue) -> Result<Self> {
+        let config = match v.get("config") {
+            Some(JsonValue::Obj(members)) => members
+                .iter()
+                .map(|(k, val)| {
+                    val.as_str()
+                        .map(|s| (k.clone(), s.to_string()))
+                        .ok_or_else(|| anyhow!("config value for '{k}' is not a string"))
+                })
+                .collect::<Result<Vec<_>>>()?,
+            _ => bail!("record has no config object"),
+        };
+        let nodes = req_array(v, "nodes")?
+            .iter()
+            .map(|n| {
+                Ok(NodeRecord {
+                    level: req_u64(n, "level")? as usize,
+                    slot: req_u64(n, "slot")? as usize,
+                    node_seed: req_hex(n, "seed")?,
+                    spin_hash: req_hex(n, "spins")?,
+                    energy_bits: req_hex(n, "energy")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let selected = req_array(v, "selected")?
+            .iter()
+            .map(|s| {
+                s.as_u64()
+                    .map(|u| u as usize)
+                    .ok_or_else(|| anyhow!("non-integer selected index"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let sentences = req_array(v, "sentences")?
+            .iter()
+            .map(|s| {
+                s.as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| anyhow!("non-string sentence"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self {
+            id: req_u64(v, "id")?,
+            doc_id: req_str(v, "doc")?,
+            doc_hash: req_hex(v, "doc_hash")?,
+            seed: req_hex(v, "seed")?,
+            workload: req_str(v, "workload")?,
+            strategy: req_str(v, "strategy")?,
+            route: req_str(v, "route")?,
+            tier: req_str(v, "tier")?,
+            deadline_ms: req_u64(v, "deadline_ms")?,
+            backend: req_str(v, "backend")?,
+            config_fp: req_hex(v, "config_fp")?,
+            config,
+            nodes,
+            selected,
+            summary_hash: req_hex(v, "summary_hash")?,
+            objective_bits: req_hex(v, "objective")?,
+            sentences,
+        })
+    }
+}
+
+fn push_str_field(out: &mut String, key: &str, v: &str) {
+    out.push_str(",\"");
+    out.push_str(key);
+    out.push_str("\":\"");
+    escape_into(out, v);
+    out.push('"');
+}
+
+fn push_hex_field(out: &mut String, key: &str, v: u64) {
+    out.push_str(",\"");
+    out.push_str(key);
+    out.push_str("\":\"");
+    out.push_str(&hex(v));
+    out.push('"');
+}
+
+fn req_str(v: &JsonValue, key: &str) -> Result<String> {
+    v.get(key)
+        .and_then(|x| x.as_str())
+        .map(str::to_string)
+        .ok_or_else(|| anyhow!("record missing string field '{key}'"))
+}
+
+fn req_u64(v: &JsonValue, key: &str) -> Result<u64> {
+    v.get(key)
+        .and_then(|x| x.as_u64())
+        .ok_or_else(|| anyhow!("record missing integer field '{key}'"))
+}
+
+fn req_hex(v: &JsonValue, key: &str) -> Result<u64> {
+    parse_hex(
+        v.get(key)
+            .and_then(|x| x.as_str())
+            .ok_or_else(|| anyhow!("record missing hex field '{key}'"))?,
+    )
+}
+
+fn req_array<'a>(v: &'a JsonValue, key: &str) -> Result<&'a [JsonValue]> {
+    v.get(key)
+        .and_then(|x| x.as_array())
+        .ok_or_else(|| anyhow!("record missing array field '{key}'"))
+}
+
+/// The per-service flight recorder: a bounded ring of [`RequestRecord`]s
+/// (oldest overwritten past `[obs] record_capacity`) plus, when
+/// `[obs] record_out` is set, a pending-JSONL queue the serve loop
+/// drains to disk. Default OFF: [`FlightRecorder::enabled`] is the only
+/// thing the hot path consults, and a disabled recorder allocates
+/// nothing per request (`tests/alloc_audit.rs`).
+#[derive(Debug)]
+pub struct FlightRecorder {
+    enabled: bool,
+    keep_lines: bool,
+    cap: usize,
+    next_id: AtomicU64,
+    recorded: AtomicU64,
+    overwritten: AtomicU64,
+    ring: Mutex<VecDeque<RequestRecord>>,
+    lines: Mutex<Vec<String>>,
+    provenance: FleetProvenance,
+}
+
+impl FlightRecorder {
+    /// Build from `[obs]` (`record_enabled`, `record_capacity`,
+    /// `record_out` — a non-empty `record_out` implies enabled) and
+    /// capture the fleet provenance of `settings`.
+    pub fn from_settings(settings: &Settings) -> Self {
+        let cap = settings.obs.record_capacity.max(1);
+        Self {
+            enabled: settings.obs.record_enabled || !settings.obs.record_out.is_empty(),
+            keep_lines: !settings.obs.record_out.is_empty(),
+            cap,
+            next_id: AtomicU64::new(0),
+            recorded: AtomicU64::new(0),
+            overwritten: AtomicU64::new(0),
+            ring: Mutex::new(VecDeque::with_capacity(cap.min(64))),
+            lines: Mutex::new(Vec::new()),
+            provenance: FleetProvenance::from_settings(settings),
+        }
+    }
+
+    /// Whether recording is on — the hot path's only recorder probe.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// The fleet provenance stamped on every record.
+    pub fn provenance(&self) -> &FleetProvenance {
+        &self.provenance
+    }
+
+    /// Start a record for one request: provenance pre-stamped, taps and
+    /// selection left for the worker to fill
+    /// ([`RequestRecord::finish`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn begin(
+        &self,
+        doc_id: &str,
+        sentences: &[String],
+        seed: u64,
+        workload: &str,
+        strategy: &str,
+        route: &str,
+        tier: &str,
+        deadline_ms: u64,
+    ) -> RequestRecord {
+        RequestRecord {
+            id: 0,
+            doc_id: doc_id.to_string(),
+            doc_hash: content_hash(sentences),
+            seed,
+            workload: workload.to_string(),
+            strategy: strategy.to_string(),
+            route: route.to_string(),
+            tier: tier.to_string(),
+            deadline_ms,
+            backend: self.provenance.backend.clone(),
+            config_fp: self.provenance.fingerprint,
+            config: self.provenance.fields.clone(),
+            nodes: Vec::new(),
+            selected: Vec::new(),
+            summary_hash: 0,
+            objective_bits: 0,
+            sentences: sentences.to_vec(),
+        }
+    }
+
+    /// Commit one finished record: assigns its ring id (1-based,
+    /// monotonic), queues its JSONL line when a dump path is
+    /// configured, and pushes it into the bounded ring (oldest
+    /// overwritten, counted). Returns the assigned id.
+    pub fn record(&self, mut rec: RequestRecord) -> u64 {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
+        rec.id = id;
+        self.recorded.fetch_add(1, Ordering::Relaxed);
+        if self.keep_lines {
+            let line = rec.to_jsonl();
+            self.lines.lock().unwrap().push(line);
+        }
+        let mut ring = self.ring.lock().unwrap();
+        if ring.len() == self.cap {
+            ring.pop_front();
+            self.overwritten.fetch_add(1, Ordering::Relaxed);
+        }
+        ring.push_back(rec);
+        id
+    }
+
+    /// The buffered record with ring id `id`, if it has not been
+    /// overwritten.
+    pub fn get(&self, id: u64) -> Option<RequestRecord> {
+        self.ring
+            .lock()
+            .unwrap()
+            .iter()
+            .find(|r| r.id == id)
+            .cloned()
+    }
+
+    /// Clone every buffered record, oldest first (the ring is NOT
+    /// drained: `::REPLAY::` stays serviceable).
+    pub fn snapshot(&self) -> Vec<RequestRecord> {
+        self.ring.lock().unwrap().iter().cloned().collect()
+    }
+
+    /// Move the pending JSONL lines out (the serve loop appends them to
+    /// `[obs] record_out`). Empty unless a dump path is configured.
+    pub fn drain_lines(&self) -> Vec<String> {
+        std::mem::take(&mut *self.lines.lock().unwrap())
+    }
+
+    /// Records ever committed.
+    pub fn recorded(&self) -> u64 {
+        self.recorded.load(Ordering::Relaxed)
+    }
+
+    /// Records lost to ring overwrite.
+    pub fn overwritten(&self) -> u64 {
+        self.overwritten.load(Ordering::Relaxed)
+    }
+
+    /// Records currently buffered.
+    pub fn buffered(&self) -> usize {
+        self.ring.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_record() -> RequestRecord {
+        let mut s = Settings::default();
+        s.obs.record_enabled = true;
+        let rec = FlightRecorder::from_settings(&s);
+        let mut r = rec.begin(
+            "doc \"odd\"\nid",
+            &["first sentence".into(), "with \\ and \t control \u{1}".into()],
+            0xDEAD_BEEF_0000_0001,
+            "es",
+            "window",
+            "pooled",
+            "interactive",
+            250,
+        );
+        r.nodes.push(NodeRecord {
+            level: 2,
+            slot: 3,
+            node_seed: 0x1234,
+            spin_hash: 0xFFFF_FFFF_FFFF_FFFF,
+            energy_bits: (-12.5f64).to_bits(),
+        });
+        r.selected = vec![0, 1];
+        r.summary_hash = 0x9999;
+        r.objective_bits = 1.25f64.to_bits();
+        r
+    }
+
+    #[test]
+    fn jsonl_round_trips_adversarial_strings_and_full_u64s() {
+        let mut r = sample_record();
+        r.id = 7;
+        let line = r.to_jsonl();
+        assert!(!line.contains('\n'), "JSONL must be one line: {line}");
+        let back = RequestRecord::parse(&line).unwrap();
+        assert_eq!(back, r);
+        // u64s that f64 cannot hold exactly survive the hex encoding
+        assert_eq!(back.nodes[0].spin_hash, u64::MAX);
+        assert_eq!(f64::from_bits(back.nodes[0].energy_bits), -12.5);
+    }
+
+    #[test]
+    fn ring_is_bounded_and_counts_overwrites() {
+        let mut s = Settings::default();
+        s.obs.record_enabled = true;
+        s.obs.record_capacity = 3;
+        let rec = FlightRecorder::from_settings(&s);
+        assert!(rec.enabled());
+        for _ in 0..5 {
+            rec.record(sample_record());
+        }
+        assert_eq!(rec.buffered(), 3);
+        assert_eq!(rec.recorded(), 5);
+        assert_eq!(rec.overwritten(), 2);
+        // ids are monotonic and the survivors are the newest
+        assert!(rec.get(1).is_none(), "oldest overwritten");
+        assert!(rec.get(2).is_none());
+        assert_eq!(rec.get(5).unwrap().id, 5);
+        let snap = rec.snapshot();
+        assert_eq!(snap.len(), 3, "snapshot does not drain");
+        assert_eq!(snap[0].id, 3);
+        assert_eq!(rec.buffered(), 3);
+    }
+
+    #[test]
+    fn disabled_by_default_and_record_out_implies_enabled() {
+        let rec = FlightRecorder::from_settings(&Settings::default());
+        assert!(!rec.enabled());
+        let mut s = Settings::default();
+        s.obs.record_out = "/tmp/records.jsonl".into();
+        let rec = FlightRecorder::from_settings(&s);
+        assert!(rec.enabled(), "a dump path implies recording");
+        rec.record(sample_record());
+        let lines = rec.drain_lines();
+        assert_eq!(lines.len(), 1);
+        assert!(rec.drain_lines().is_empty(), "lines drain once");
+        assert_eq!(rec.buffered(), 1, "draining lines keeps the ring");
+    }
+
+    #[test]
+    fn fingerprint_tracks_config_changes() {
+        let clean = FleetProvenance::from_settings(&Settings::default());
+        let mut s = Settings::default();
+        s.resilience.fault.enabled = true;
+        s.resilience.fault.stuck_rate = 0.05;
+        let faulty = FleetProvenance::from_settings(&s);
+        assert_ne!(clean.fingerprint, faulty.fingerprint);
+        let differing: Vec<&str> = clean
+            .fields
+            .iter()
+            .zip(&faulty.fields)
+            .filter(|(a, b)| a.1 != b.1)
+            .map(|(a, _)| a.0.as_str())
+            .collect();
+        assert_eq!(differing, ["fault_enabled", "fault_stuck_rate"]);
+        // same settings → same fingerprint (pure function)
+        assert_eq!(
+            clean.fingerprint,
+            FleetProvenance::from_settings(&Settings::default()).fingerprint
+        );
+    }
+
+    #[test]
+    fn record_jsonl_is_free_of_wall_clock_fields() {
+        let line = sample_record().to_jsonl();
+        for banned in ["wall", "_us\"", "_ms\":\"", "secs", "elapsed"] {
+            assert!(!line.contains(banned), "wall-ish field '{banned}' in {line}");
+        }
+    }
+}

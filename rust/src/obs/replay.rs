@@ -1,0 +1,550 @@
+//! Deterministic replay + divergence triage for flight-recorder
+//! records (ISSUE 10, the second half of the tentpole).
+//!
+//! A [`RequestRecord`](super::recorder::RequestRecord) carries
+//! everything the pipeline is a pure function of — the input lines, the
+//! request seed, and the full resolved config in `FromStr`-round-trip
+//! form — so [`replay_record`] can reconstruct the exact recorded
+//! `PipelineConfig` ([`pipeline_from_fields`]), re-execute the request
+//! through the *current* binary on an inline solver (byte-identical to
+//! any pool shape by the determinism contract), and byte-diff the
+//! outputs. On a mismatch, triage walks the recorded vs. replayed
+//! per-node taps and names the FIRST divergent DAG node — level, slot,
+//! node seed, recorded vs. replayed energy — plus a config diff against
+//! the currently-served provenance, so "summary changed" becomes
+//! "window (2,3) under seed 0x… flipped, and `fault_stuck_rate`
+//! differs".
+//!
+//! The environment is deliberately NOT reconstructed from the record:
+//! replay runs under the current `[resilience]` fault model (and the
+//! current binary). Replaying a faulty recording against clean settings
+//! is exactly how a fleet anomaly is triaged down to the subproblem the
+//! fault flipped; the config diff says which knobs differ.
+
+use std::fmt;
+use std::str::FromStr;
+
+use anyhow::{Context, Result};
+
+use crate::config::{PipelineConfig, Settings};
+use crate::corpus::Document;
+use crate::sched::pool::build_solver;
+use crate::sched::{resolved_backend, summarize_sequential_recorded};
+use crate::text::tokenize::fnv1a;
+use crate::workload::{problem_from_request, select_inline, workload_salt};
+
+use super::recorder::{
+    hex, parse_hex, provenance_fields, summary_hash, NodeRecord, RequestRecord,
+};
+
+/// Reconstruct a [`PipelineConfig`] from recorded provenance pairs
+/// (see [`provenance_fields`]): every pipeline key is parsed back
+/// through its `FromStr`; non-pipeline keys (`backend`, `fault_*`) are
+/// ignored. Unrecognized or unparsable values error — a record from a
+/// future binary should fail loudly, not replay under silently-wrong
+/// settings. `base` fills any key the record omits.
+pub fn pipeline_from_fields(
+    fields: &[(String, String)],
+    base: &PipelineConfig,
+) -> Result<PipelineConfig> {
+    let mut cfg = base.clone();
+    for (k, v) in fields {
+        let ctx = || format!("recorded config {k}='{v}'");
+        match k.as_str() {
+            "lambda" => cfg.lambda = v.parse().with_context(ctx)?,
+            "improved_formulation" => {
+                cfg.improved_formulation = v.parse().with_context(ctx)?
+            }
+            "precision" => {
+                cfg.precision = crate::quant::Precision::from_str(v).with_context(ctx)?
+            }
+            "rounding" => {
+                cfg.rounding = crate::quant::Rounding::from_str(v).with_context(ctx)?
+            }
+            "iterations" => cfg.iterations = v.parse().with_context(ctx)?,
+            "decompose_p" => cfg.decompose_p = v.parse().with_context(ctx)?,
+            "decompose_q" => cfg.decompose_q = v.parse().with_context(ctx)?,
+            "strategy" => {
+                cfg.strategy = crate::decompose::Strategy::from_str(v).with_context(ctx)?
+            }
+            "summary_len" => cfg.summary_len = v.parse().with_context(ctx)?,
+            "solver" => cfg.solver = v.clone(),
+            "seed" => cfg.seed = parse_hex(v).with_context(ctx)?,
+            // environment provenance, not pipeline config
+            "backend" | "fault_enabled" | "fault_seed" | "fault_stuck_rate"
+            | "fault_drift_rate" | "fault_drift_amp" | "fault_dac_mismatch"
+            | "fault_burst_rate" | "fault_burst_amp" => {}
+            other => anyhow::bail!("record carries unknown config key '{other}'"),
+        }
+    }
+    Ok(cfg)
+}
+
+/// One config key whose recorded value differs from the currently
+/// served provenance.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConfigDelta {
+    /// Provenance key (see [`provenance_fields`]).
+    pub key: String,
+    /// Value at record time.
+    pub recorded: String,
+    /// Value served now (`"<absent>"` if the key no longer exists).
+    pub current: String,
+}
+
+/// Recorded vs. current provenance, keyed off the record's pairs — the
+/// triage answer to "which knob differs?".
+pub fn diff_config(record: &[(String, String)], settings: &Settings) -> Vec<ConfigDelta> {
+    let current = provenance_fields(settings);
+    record
+        .iter()
+        .filter_map(|(k, rv)| {
+            let cv = current
+                .iter()
+                .find(|(ck, _)| ck == k)
+                .map(|(_, v)| v.clone())
+                .unwrap_or_else(|| "<absent>".to_string());
+            (cv != *rv).then(|| ConfigDelta {
+                key: k.clone(),
+                recorded: rv.clone(),
+                current: cv,
+            })
+        })
+        .collect()
+}
+
+/// The first solve-DAG node where a replay left the recorded
+/// trajectory.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Divergence {
+    /// Submission-order index into the node tap list.
+    pub index: usize,
+    /// Decomposition level of the divergent node.
+    pub level: usize,
+    /// Slot within the level.
+    pub slot: usize,
+    /// The node's seed (0 under the window plan).
+    pub node_seed: u64,
+    /// Recorded selected-best energy (NaN if the recorded list ended
+    /// before this node).
+    pub recorded_energy: f64,
+    /// Replayed selected-best energy (NaN if the replayed list ended
+    /// before this node).
+    pub replayed_energy: f64,
+    /// Whether the spin-vector hashes differ (energies can agree while
+    /// spins flip between equal-objective solutions).
+    pub spin_hash_differs: bool,
+}
+
+/// Walk recorded vs. replayed taps in submission order and return the
+/// first index where they disagree (or where one list ends early);
+/// `None` when they match node for node.
+pub fn first_divergence(recorded: &[NodeRecord], replayed: &[NodeRecord]) -> Option<Divergence> {
+    let n = recorded.len().min(replayed.len());
+    for i in 0..n {
+        let (a, b) = (&recorded[i], &replayed[i]);
+        if a != b {
+            return Some(Divergence {
+                index: i,
+                level: a.level,
+                slot: a.slot,
+                node_seed: a.node_seed,
+                recorded_energy: f64::from_bits(a.energy_bits),
+                replayed_energy: f64::from_bits(b.energy_bits),
+                spin_hash_differs: a.spin_hash != b.spin_hash,
+            });
+        }
+    }
+    if recorded.len() != replayed.len() {
+        let side = recorded.get(n).or_else(|| replayed.get(n)).expect("longer side");
+        return Some(Divergence {
+            index: n,
+            level: side.level,
+            slot: side.slot,
+            node_seed: side.node_seed,
+            recorded_energy: recorded
+                .get(n)
+                .map_or(f64::NAN, |r| f64::from_bits(r.energy_bits)),
+            replayed_energy: replayed
+                .get(n)
+                .map_or(f64::NAN, |r| f64::from_bits(r.energy_bits)),
+            spin_hash_differs: true,
+        });
+    }
+    None
+}
+
+/// The result of re-executing one record through the current binary.
+#[derive(Debug, Clone)]
+pub struct ReplayReport {
+    /// The record's ring id.
+    pub id: u64,
+    /// Document / problem id.
+    pub doc_id: String,
+    /// Workload tag.
+    pub workload: String,
+    /// Byte-identity verdict: selection, summary hash and objective
+    /// bits all match the recording.
+    pub identical: bool,
+    /// Recorded final-summary hash.
+    pub recorded_summary_hash: u64,
+    /// Replayed final-summary hash.
+    pub replayed_summary_hash: u64,
+    /// Recorded objective f64 bits.
+    pub recorded_objective_bits: u64,
+    /// Replayed objective f64 bits.
+    pub replayed_objective_bits: u64,
+    /// Recorded per-node tap count.
+    pub recorded_nodes: usize,
+    /// Replayed per-node tap count (0 for routes that tap no nodes).
+    pub replayed_nodes: usize,
+    /// First divergent DAG node (only meaningful when the record
+    /// carried node taps; summary-only records triage at summary level).
+    pub first_divergence: Option<Divergence>,
+    /// Config keys that differ between record time and now.
+    pub config_diff: Vec<ConfigDelta>,
+}
+
+impl ReplayReport {
+    /// Human/one-line rendering: the `cobi-es replay` and `::REPLAY::`
+    /// output format.
+    pub fn verdict_line(&self) -> String {
+        let mut out = format!(
+            "REPLAY id={} doc={} workload={} verdict={}",
+            self.id,
+            self.doc_id,
+            self.workload,
+            if self.identical { "identical" } else { "DIVERGED" }
+        );
+        if !self.identical {
+            out.push_str(&format!(
+                " summary_hash {}->{} objective {}->{}",
+                hex(self.recorded_summary_hash),
+                hex(self.replayed_summary_hash),
+                f64::from_bits(self.recorded_objective_bits),
+                f64::from_bits(self.replayed_objective_bits),
+            ));
+        }
+        match &self.first_divergence {
+            Some(d) => out.push_str(&format!(
+                " first_node=({},{}) seed={} recorded_energy={} replayed_energy={}{}",
+                d.level,
+                d.slot,
+                hex(d.node_seed),
+                d.recorded_energy,
+                d.replayed_energy,
+                if d.spin_hash_differs { " spins_flipped" } else { "" }
+            )),
+            None if !self.identical && self.recorded_nodes > 0 => {
+                out.push_str(" first_node=none (taps agree; selection tail diverged)")
+            }
+            None => {}
+        }
+        out.push_str(&format!(" config_diff={}", self.config_diff.len()));
+        for d in &self.config_diff {
+            out.push_str(&format!(" {}:{}->{}", d.key, d.recorded, d.current));
+        }
+        out
+    }
+}
+
+impl fmt::Display for ReplayReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.verdict_line())
+    }
+}
+
+/// Re-execute one record through the current binary (inline solver,
+/// recorded pipeline config, recorded request seed, CURRENT
+/// fault/resilience environment) and byte-diff against the recording.
+pub fn replay_record(rec: &RequestRecord, settings: &Settings) -> Result<ReplayReport> {
+    let config_diff = diff_config(&rec.config, settings);
+    let mut replayed_nodes = Vec::new();
+    let summary = if rec.workload == "es" {
+        let mut cfg = pipeline_from_fields(&rec.config, &settings.pipeline)?;
+        // the record stores the ACTUAL request seed (doc-derived, and
+        // worker-salted on the local route); the config pair holds the
+        // base fleet seed
+        cfg.seed = rec.seed;
+        let doc = Document {
+            id: rec.doc_id.clone(),
+            sentences: rec.sentences.clone(),
+            reference: Vec::new(),
+        };
+        let mut s = settings.clone();
+        s.pipeline = cfg.clone();
+        let mut solver = build_solver(
+            resolved_backend(&s),
+            &s,
+            // construction seed: the seeded solve path never reads the
+            // device-global RNG (pinned), any value works
+            cfg.seed ^ 0xD00D,
+            None,
+            None,
+            None,
+            None,
+            None,
+        )
+        .with_context(|| format!("building replay solver for record {}", rec.id))?;
+        summarize_sequential_recorded(&doc, &cfg, solver.as_mut(), &mut replayed_nodes)
+            .with_context(|| format!("replaying record {} ({})", rec.id, rec.doc_id))?
+    } else {
+        let mut s = settings.clone();
+        s.pipeline = pipeline_from_fields(&rec.config, &settings.pipeline)?;
+        // lower() derives problem_seed(base, workload, id) = base ^
+        // salt ^ fnv1a(id); invert it so the lowered config solves
+        // under exactly the recorded request seed
+        s.pipeline.seed = rec.seed ^ workload_salt(&rec.workload) ^ fnv1a(rec.doc_id.as_bytes());
+        let problem =
+            problem_from_request(&rec.workload, &rec.doc_id, &rec.sentences, &s.workload)?;
+        select_inline(problem.as_ref(), &s, None)
+            .with_context(|| format!("replaying record {} ({})", rec.id, rec.doc_id))?
+    };
+    let replayed_summary_hash = summary_hash(&summary.selected, &summary.sentences);
+    let replayed_objective_bits = summary.objective.to_bits();
+    let identical = summary.selected == rec.selected
+        && replayed_summary_hash == rec.summary_hash
+        && replayed_objective_bits == rec.objective_bits;
+    // node triage only when the record carried taps: local-route and
+    // streamed requests record at summary granularity
+    let first = if rec.nodes.is_empty() {
+        None
+    } else {
+        first_divergence(&rec.nodes, &replayed_nodes)
+    };
+    Ok(ReplayReport {
+        id: rec.id,
+        doc_id: rec.doc_id.clone(),
+        workload: rec.workload.clone(),
+        identical,
+        recorded_summary_hash: rec.summary_hash,
+        replayed_summary_hash,
+        recorded_objective_bits: rec.objective_bits,
+        replayed_objective_bits,
+        recorded_nodes: rec.nodes.len(),
+        replayed_nodes: replayed_nodes.len(),
+        first_divergence: first,
+        config_diff,
+    })
+}
+
+/// Replay every record in order; any single failure aborts with the
+/// failing record's id in context.
+pub fn replay_records(recs: &[RequestRecord], settings: &Settings) -> Result<Vec<ReplayReport>> {
+    recs.iter().map(|r| replay_record(r, settings)).collect()
+}
+
+/// Load a `--record-out` JSONL dump: one [`RequestRecord`] per
+/// non-empty line.
+pub fn load_records(path: &str) -> Result<Vec<RequestRecord>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading record file {path}"))?;
+    text.lines()
+        .enumerate()
+        .filter(|(_, l)| !l.trim().is_empty())
+        .map(|(i, l)| {
+            RequestRecord::parse(l).with_context(|| format!("{path}:{}", i + 1))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::recorder::{content_hash, FlightRecorder};
+    use crate::sched::doc_seed;
+    use crate::workload::problem_seed;
+
+    fn test_settings() -> Settings {
+        let mut s = Settings::default();
+        s.pipeline.solver = "tabu".into();
+        s.pipeline.iterations = 2;
+        s.pipeline.summary_len = 3;
+        s
+    }
+
+    /// Record one ES document exactly the way the service worker does:
+    /// doc-derived seed, provenance-stamped config, per-node taps from
+    /// the recording executor.
+    fn record_es(s: &Settings, doc: &Document) -> RequestRecord {
+        let mut rs = s.clone();
+        rs.obs.record_enabled = true;
+        let recorder = FlightRecorder::from_settings(&rs);
+        let mut cfg = s.pipeline.clone();
+        cfg.seed = doc_seed(cfg.seed, &doc.id);
+        let mut rec = recorder.begin(
+            &doc.id,
+            &doc.sentences,
+            cfg.seed,
+            "es",
+            cfg.strategy.as_str(),
+            "pooled",
+            "interactive",
+            0,
+        );
+        let mut solver = build_solver(
+            resolved_backend(s),
+            s,
+            cfg.seed ^ 0xD00D,
+            None,
+            None,
+            None,
+            None,
+            None,
+        )
+        .unwrap();
+        let summary =
+            summarize_sequential_recorded(doc, &cfg, solver.as_mut(), &mut rec.nodes).unwrap();
+        rec.finish(&summary);
+        let id = recorder.record(rec);
+        recorder.get(id).unwrap()
+    }
+
+    fn sample_doc() -> Document {
+        crate::corpus::Generator::with_seed(41).document("replay-doc", 12)
+    }
+
+    #[test]
+    fn clean_es_record_replays_byte_identical() {
+        let s = test_settings();
+        let doc = sample_doc();
+        let rec = record_es(&s, &doc);
+        assert!(!rec.nodes.is_empty());
+        assert_eq!(rec.doc_hash, content_hash(&doc.sentences));
+        let report = replay_record(&rec, &s).unwrap();
+        assert!(report.identical, "{}", report.verdict_line());
+        assert!(report.first_divergence.is_none());
+        assert!(report.config_diff.is_empty());
+        assert_eq!(report.recorded_nodes, report.replayed_nodes);
+        assert!(report.verdict_line().contains("verdict=identical"));
+        // round-tripping through JSONL changes nothing
+        let report2 =
+            replay_record(&RequestRecord::parse(&rec.to_jsonl()).unwrap(), &s).unwrap();
+        assert!(report2.identical);
+    }
+
+    #[test]
+    fn replay_uses_recorded_config_not_current() {
+        // serve a record under iterations=2, then replay in a session
+        // whose defaults drifted: replay must still be identical (it
+        // reconstructs the recorded PipelineConfig), and the config
+        // diff must name the drifted keys
+        let s = test_settings();
+        let rec = record_es(&s, &sample_doc());
+        let mut drifted = test_settings();
+        drifted.pipeline.iterations = 7;
+        drifted.pipeline.lambda = 0.9;
+        let report = replay_record(&rec, &drifted).unwrap();
+        assert!(report.identical, "{}", report.verdict_line());
+        let keys: Vec<&str> = report.config_diff.iter().map(|d| d.key.as_str()).collect();
+        assert_eq!(keys, ["lambda", "iterations"]);
+        assert!(report.verdict_line().contains("iterations:2->7"));
+    }
+
+    #[test]
+    fn tampered_node_is_named_as_first_divergence() {
+        let s = test_settings();
+        let mut rec = record_es(&s, &sample_doc());
+        assert!(rec.nodes.len() >= 2, "need at least two taps");
+        let victim = 1;
+        rec.nodes[victim].spin_hash ^= 0xFF;
+        rec.nodes[victim].energy_bits = (-999.0f64).to_bits();
+        let report = replay_record(&rec, &s).unwrap();
+        let d = report.first_divergence.expect("divergence detected");
+        assert_eq!(d.index, victim);
+        assert_eq!(d.level, rec.nodes[victim].level);
+        assert_eq!(d.slot, rec.nodes[victim].slot);
+        assert!(d.spin_hash_differs);
+        assert_eq!(d.recorded_energy, -999.0);
+        assert!(d.replayed_energy.is_finite());
+        let line = report.verdict_line();
+        assert!(
+            line.contains(&format!("first_node=({},{})", d.level, d.slot)),
+            "{line}"
+        );
+        // the summary itself still matched — only the tap was tampered
+        assert!(report.identical);
+    }
+
+    #[test]
+    fn truncated_node_list_diverges_at_the_cut() {
+        let s = test_settings();
+        let mut rec = record_es(&s, &sample_doc());
+        let cut = rec.nodes.len() - 1;
+        rec.nodes.truncate(cut);
+        let report = replay_record(&rec, &s).unwrap();
+        let d = report.first_divergence.expect("length mismatch detected");
+        assert_eq!(d.index, cut);
+        assert!(d.recorded_energy.is_nan());
+        assert!(d.replayed_energy.is_finite());
+    }
+
+    #[test]
+    fn non_es_record_replays_through_the_workload_factory() {
+        let s = test_settings();
+        let lines = vec!["n=10 k=3 seed=5".to_string()];
+        let id = "disp-replay";
+        let seed = problem_seed(s.pipeline.seed, "dispersion", id);
+        let mut rs = s.clone();
+        rs.obs.record_enabled = true;
+        let recorder = FlightRecorder::from_settings(&rs);
+        let mut rec = recorder.begin(
+            id,
+            &lines,
+            seed,
+            "dispersion",
+            s.pipeline.strategy.as_str(),
+            "local",
+            "batch",
+            0,
+        );
+        let problem = problem_from_request("dispersion", id, &lines, &s.workload).unwrap();
+        let summary = select_inline(problem.as_ref(), &s, None).unwrap();
+        rec.finish(&summary);
+        recorder.record(rec.clone());
+
+        let report = replay_record(&rec, &s).unwrap();
+        assert!(report.identical, "{}", report.verdict_line());
+        assert_eq!(report.recorded_nodes, 0, "non-ES records tap no nodes");
+        assert!(report.first_divergence.is_none());
+
+        // a different recorded selection is flagged at summary level
+        let mut bad = rec.clone();
+        bad.summary_hash ^= 1;
+        let report = replay_record(&bad, &s).unwrap();
+        assert!(!report.identical);
+        assert!(report.verdict_line().contains("verdict=DIVERGED"));
+    }
+
+    #[test]
+    fn pipeline_from_fields_round_trips_provenance() {
+        let mut s = Settings::default();
+        s.pipeline.lambda = 0.85;
+        s.pipeline.iterations = 4;
+        s.pipeline.strategy = crate::decompose::Strategy::Tree;
+        s.pipeline.solver = "sa".into();
+        s.pipeline.seed = 0xFFFF_FFFF_FFFF_FFF7;
+        let fields = provenance_fields(&s);
+        let cfg = pipeline_from_fields(&fields, &Settings::default().pipeline).unwrap();
+        assert_eq!(cfg, s.pipeline);
+        // unknown keys fail loudly
+        let bogus = vec![("no_such_key".to_string(), "1".to_string())];
+        assert!(pipeline_from_fields(&bogus, &s.pipeline).is_err());
+    }
+
+    #[test]
+    fn load_records_round_trips_a_dump() {
+        let s = test_settings();
+        let rec = record_es(&s, &sample_doc());
+        let dir = std::env::temp_dir().join(format!("cobi-es-replay-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("records.jsonl");
+        std::fs::write(&path, format!("{}\n\n{}\n", rec.to_jsonl(), rec.to_jsonl())).unwrap();
+        let loaded = load_records(path.to_str().unwrap()).unwrap();
+        assert_eq!(loaded.len(), 2, "blank lines skipped");
+        assert_eq!(loaded[0], rec);
+        let reports = replay_records(&loaded, &s).unwrap();
+        assert!(reports.iter().all(|r| r.identical));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

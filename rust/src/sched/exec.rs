@@ -28,6 +28,7 @@ use crate::corpus::Document;
 use crate::decompose::{node_seed, DecomposePlan, Strategy};
 use crate::embed::{Embedder, HashEmbedder, Scores};
 use crate::ising::EsProblem;
+use crate::obs::recorder::{spin_hash, NodeRecord};
 use crate::obs::{ObsShared, Span};
 use crate::pipeline::Summary;
 use crate::refine::{prepare_instances, select_best};
@@ -151,7 +152,7 @@ pub fn summarize_with_pool_using(
     client: &mut PoolClient,
     embedder: &mut dyn Embedder,
 ) -> Result<Summary> {
-    pool_exec(doc, cfg, client, embedder, None)
+    pool_exec(doc, cfg, client, embedder, None, None)
 }
 
 /// As [`summarize_with_pool`], recording a request-scoped span tree
@@ -183,7 +184,28 @@ pub fn summarize_with_pool_traced_using(
 ) -> Result<(Summary, Option<Span>)> {
     let mut root = obs.start_request(&doc.id);
     let trace = root.as_mut().map(|r| Trace { obs, root: r });
-    let summary = pool_exec(doc, cfg, client, embedder, trace)?;
+    let summary = pool_exec(doc, cfg, client, embedder, trace, None)?;
+    Ok((summary, root))
+}
+
+/// As [`summarize_with_pool_traced`], additionally pushing one
+/// [`NodeRecord`] per solve-DAG node (level, slot, node seed,
+/// spin-vector hash, selected-best energy bits) into `rec`, in
+/// submission order — the flight recorder's per-node tap. Nodes are the
+/// same pure function of (config, document) as the summary, so the
+/// recorded taps are byte-identical across pool shapes. Streamed
+/// documents record no nodes (the frontier re-plans per arrival).
+pub fn summarize_with_pool_recorded(
+    doc: &Document,
+    cfg: &PipelineConfig,
+    client: &mut PoolClient,
+    obs: &ObsShared,
+    rec: &mut Vec<NodeRecord>,
+) -> Result<(Summary, Option<Span>)> {
+    let mut embedder = HashEmbedder::new();
+    let mut root = obs.start_request(&doc.id);
+    let trace = root.as_mut().map(|r| Trace { obs, root: r });
+    let summary = pool_exec(doc, cfg, client, &mut embedder, trace, Some(rec))?;
     Ok((summary, root))
 }
 
@@ -193,6 +215,7 @@ fn pool_exec(
     client: &mut PoolClient,
     embedder: &mut dyn Embedder,
     mut trace: Option<Trace<'_>>,
+    mut rec: Option<&mut Vec<NodeRecord>>,
 ) -> Result<Summary> {
     if cfg.strategy == Strategy::Streaming {
         // whole document replayed as one arrival chunk — byte-identical
@@ -249,14 +272,18 @@ fn pool_exec(
                 lambda: cfg.lambda,
                 m: u.target,
             };
-            let (instances, explicit_seed) = if per_node {
+            // node seed 0 under the window plan: its draws come from the
+            // per-document streams above, in submission order, so the
+            // recorded taps still match the sequential path byte for byte
+            let (instances, explicit_seed, ns) = if per_node {
                 let ns = node_seed(cfg.seed, u.level, u.slot);
                 (
                     prepare_instances(&p, &refine_cfg, &mut Pcg32::new(ns, QUANT_STREAM)),
                     Some(request_seed(ns)),
+                    ns,
                 )
             } else {
-                (prepare_instances(&p, &refine_cfg, &mut rng), None)
+                (prepare_instances(&p, &refine_cfg, &mut rng), None, 0)
             };
             total_solves += instances.len();
             // span children are created in submission order, which the
@@ -267,15 +294,24 @@ fn pool_exec(
                 None => client.submit(instances),
             }
             .with_context(|| format!("submitting unit {} of {}", u.id, doc.id))?;
-            pending.push((u.id, p, pend, stage, Instant::now()));
+            pending.push((u.id, u.level, u.slot, ns, p, pend, stage, Instant::now()));
         }
-        for (id, p, pend, stage, submitted) in pending {
+        for (id, level, slot, ns, p, pend, stage, submitted) in pending {
             let solved = pend.wait()?;
             if let (Some(t), Some(k)) = (trace.as_mut(), stage) {
                 t.root.children[k]
                     .set_wall("wait_us", submitted.elapsed().as_micros() as u64);
             }
             let best = select_best(&p, &solved);
+            if let Some(r) = rec.as_deref_mut() {
+                r.push(NodeRecord {
+                    level,
+                    slot,
+                    node_seed: ns,
+                    spin_hash: spin_hash(&solved),
+                    energy_bits: best.result.objective.to_bits(),
+                });
+            }
             graph.complete(id, best.result.selected)?;
         }
     }
@@ -312,7 +348,7 @@ pub fn summarize_sequential_using(
     solver: &mut dyn PoolSolver,
     embedder: &mut dyn Embedder,
 ) -> Result<Summary> {
-    seq_exec(doc, cfg, solver, embedder, None)
+    seq_exec(doc, cfg, solver, embedder, None, None)
 }
 
 /// As [`summarize_sequential`], recording a request-scoped span tree
@@ -341,8 +377,24 @@ pub fn summarize_sequential_traced_using(
 ) -> Result<(Summary, Option<Span>)> {
     let mut root = obs.start_request(&doc.id);
     let trace = root.as_mut().map(|r| Trace { obs, root: r });
-    let summary = seq_exec(doc, cfg, solver, embedder, trace)?;
+    let summary = seq_exec(doc, cfg, solver, embedder, trace, None)?;
     Ok((summary, root))
+}
+
+/// As [`summarize_sequential`], additionally pushing one [`NodeRecord`]
+/// per solve-DAG node into `rec`, in unit-id (submission) order — the
+/// exact taps [`summarize_with_pool_recorded`] records for the same
+/// (config, document), which is what lets the replay engine re-execute
+/// a pooled recording on an inline solver and byte-compare node by
+/// node. Streamed documents record no nodes.
+pub fn summarize_sequential_recorded(
+    doc: &Document,
+    cfg: &PipelineConfig,
+    solver: &mut dyn PoolSolver,
+    rec: &mut Vec<NodeRecord>,
+) -> Result<Summary> {
+    let mut embedder = HashEmbedder::new();
+    seq_exec(doc, cfg, solver, &mut embedder, None, Some(rec))
 }
 
 fn seq_exec(
@@ -351,6 +403,7 @@ fn seq_exec(
     solver: &mut dyn PoolSolver,
     embedder: &mut dyn Embedder,
     mut trace: Option<Trace<'_>>,
+    mut rec: Option<&mut Vec<NodeRecord>>,
 ) -> Result<Summary> {
     if cfg.strategy == Strategy::Streaming {
         if let Some(t) = trace.as_mut() {
@@ -392,14 +445,15 @@ fn seq_exec(
                 lambda: cfg.lambda,
                 m: u.target,
             };
-            let (instances, seed) = if per_node {
+            let (instances, seed, ns) = if per_node {
                 let ns = node_seed(cfg.seed, u.level, u.slot);
                 (
                     prepare_instances(&p, &refine_cfg, &mut Pcg32::new(ns, QUANT_STREAM)),
                     request_seed(ns),
+                    ns,
                 )
             } else {
-                (prepare_instances(&p, &refine_cfg, &mut rng), seeds.next_u64())
+                (prepare_instances(&p, &refine_cfg, &mut rng), seeds.next_u64(), 0)
             };
             total_solves += instances.len();
             let stage = trace.as_mut().map(|t| t.solve_stage(u, instances.len()));
@@ -416,6 +470,15 @@ fn seq_exec(
                     .set_wall("solve_us", started.elapsed().as_micros() as u64);
             }
             let best = select_best(&p, &solved);
+            if let Some(r) = rec.as_deref_mut() {
+                r.push(NodeRecord {
+                    level: u.level,
+                    slot: u.slot,
+                    node_seed: ns,
+                    spin_hash: spin_hash(&solved),
+                    energy_bits: best.result.objective.to_bits(),
+                });
+            }
             graph.complete(u.id, best.result.selected)?;
         }
     }
@@ -782,5 +845,51 @@ mod tests {
             assert_eq!(pooled.stages, sequential.stages);
         }
         pool.shutdown();
+    }
+
+    #[test]
+    fn recorded_node_taps_match_between_pooled_and_sequential() {
+        // the flight-recorder taps are part of the determinism contract:
+        // per-node (level, slot, seed, spin hash, energy bits) agree
+        // byte for byte between the pooled and inline executors, under
+        // both the window plan (node seed 0) and the tree plan
+        for strategy in [Strategy::Window, Strategy::Tree] {
+            let mut s = settings("cobi");
+            s.pipeline.strategy = strategy;
+            s.obs.enabled = false;
+            let set = benchmark_set("bench_10").unwrap();
+            let doc = &set.documents[0];
+            let mut cfg = s.pipeline.clone();
+            cfg.summary_len = set.summary_len;
+            cfg.seed = crate::sched::doc_seed(cfg.seed, &doc.id);
+            let obs = crate::obs::ObsShared::disabled();
+
+            let pool = DevicePool::start(&s, None).unwrap();
+            let mut client = pool.client(cfg.seed);
+            let mut pooled_nodes = Vec::new();
+            let (pooled, span) =
+                summarize_with_pool_recorded(doc, &cfg, &mut client, &obs, &mut pooled_nodes)
+                    .unwrap();
+            assert!(span.is_none(), "obs disabled");
+            drop(client);
+            pool.shutdown();
+
+            let mut dev = crate::cobi::CobiDevice::from_config(&s.cobi, 0, None).unwrap();
+            let mut seq_nodes = Vec::new();
+            let sequential =
+                summarize_sequential_recorded(doc, &cfg, &mut dev, &mut seq_nodes).unwrap();
+
+            assert_eq!(pooled.selected, sequential.selected, "{strategy:?}");
+            assert!(!pooled_nodes.is_empty(), "{strategy:?}");
+            assert_eq!(pooled_nodes, seq_nodes, "{strategy:?} taps diverged");
+            if strategy == Strategy::Window {
+                assert!(pooled_nodes.iter().all(|n| n.node_seed == 0));
+            } else {
+                assert!(pooled_nodes.iter().any(|n| n.node_seed != 0));
+            }
+            assert!(pooled_nodes.iter().all(|n| {
+                f64::from_bits(n.energy_bits).is_finite()
+            }));
+        }
     }
 }

@@ -41,9 +41,10 @@ pub mod stream;
 
 pub use breaker::{BreakerFleet, BreakerMetrics};
 pub use exec::{
-    summarize_sequential, summarize_sequential_traced, summarize_sequential_traced_using,
-    summarize_sequential_using, summarize_with_pool, summarize_with_pool_traced,
-    summarize_with_pool_traced_using, summarize_with_pool_using,
+    summarize_sequential, summarize_sequential_recorded, summarize_sequential_traced,
+    summarize_sequential_traced_using, summarize_sequential_using, summarize_with_pool,
+    summarize_with_pool_recorded, summarize_with_pool_traced, summarize_with_pool_traced_using,
+    summarize_with_pool_using,
 };
 pub use graph::{SolveUnit, SubproblemGraph};
 pub use pool::{

@@ -500,6 +500,25 @@ impl Service {
         &self.obs
     }
 
+    /// Re-execute flight-recorder ring entry `id` through the current
+    /// configuration and byte-diff it against the recording (the
+    /// `::REPLAY <id>::` admin frame). Errors when recording is off or
+    /// the id is unknown/overwritten.
+    pub fn replay(&self, id: u64) -> Result<crate::obs::ReplayReport> {
+        let recorder = self.obs.recorder();
+        if !recorder.enabled() {
+            bail!("flight recorder disabled ([obs] record_enabled / --record-out)");
+        }
+        let rec = recorder.get(id).ok_or_else(|| {
+            anyhow::anyhow!(
+                "no record {id} in the ring ({} buffered, {} overwritten)",
+                recorder.buffered(),
+                recorder.overwritten()
+            )
+        })?;
+        crate::obs::replay_record(&rec, &self.settings)
+    }
+
     /// True when Ising solves route through the shared device pool.
     pub fn is_pooled(&self) -> bool {
         self.pool.is_some()
@@ -820,6 +839,51 @@ mod tests {
             .iter()
             .all(|s| s.stage == "request" && !s.children.is_empty()));
         assert!(m.report().contains("obs:"), "{}", m.report());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn served_requests_are_recorded_and_replayable_in_process() {
+        // tier-1 (ungated) variant of the CI replay smoke: serve a
+        // burst with the flight recorder on, then replay every ring
+        // entry through Service::replay — all byte-identical
+        let mut settings = test_settings();
+        settings.obs.record_enabled = true;
+        let svc = Service::start(&settings).unwrap();
+        let set = benchmark_set("bench_10").unwrap();
+        let tickets: Vec<Ticket> = set.documents[..4]
+            .iter()
+            .map(|d| svc.submit(d.clone()).unwrap())
+            .collect();
+        for t in tickets {
+            t.wait().unwrap();
+        }
+        let o = svc.metrics().obs.expect("obs snapshot");
+        assert!(o.recorder_enabled);
+        assert_eq!(o.recorder_recorded, 4);
+        assert_eq!(o.recorder_buffered, 4);
+        assert_eq!(o.recorder_overwritten, 0);
+        for rec in svc.obs().recorder().snapshot() {
+            assert!(!rec.nodes.is_empty(), "pooled ES requests tap nodes");
+            let report = svc.replay(rec.id).unwrap();
+            assert!(report.identical, "{}", report.verdict_line());
+            assert!(report.config_diff.is_empty());
+        }
+        assert!(svc.replay(999).is_err(), "unknown id errors");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn recorder_off_by_default_and_replay_refuses() {
+        let svc = Service::start(&test_settings()).unwrap();
+        let set = benchmark_set("bench_10").unwrap();
+        let t = svc.submit(set.documents[0].clone()).unwrap();
+        t.wait().unwrap();
+        let o = svc.metrics().obs.expect("obs snapshot");
+        assert!(!o.recorder_enabled);
+        assert_eq!(o.recorder_recorded, 0);
+        let err = svc.replay(1).unwrap_err();
+        assert!(err.to_string().contains("disabled"), "{err}");
         svc.shutdown();
     }
 

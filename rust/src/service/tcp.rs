@@ -65,6 +65,13 @@ pub const BATCH_MARKER: &str = "::BATCH::";
 /// Admin frame requesting a graceful drain: the server stops accepting
 /// new connections and the serve loop finishes in-flight work.
 pub const DRAIN_MARKER: &str = "::DRAIN::";
+/// Admin-frame prefix replaying a recorded request: `::REPLAY <id>::` as
+/// the first line re-executes flight-recorder ring entry `id` through
+/// the current binary and byte-diffs the outputs. The reply is `OK 1`
+/// plus one verdict line (`identical` or the first divergent DAG node +
+/// config-fingerprint diff — see docs/OBSERVABILITY.md), or `ERR` when
+/// the recorder is off / the id fell out of the ring.
+pub const REPLAY_PREFIX: &str = "::REPLAY ";
 /// Header-line prefix routing the request to a registered k-of-n
 /// workload: `::WORKLOAD <name>::` before the body. The body is then one
 /// candidate per line (for `retrieval` the first line is the query; for
@@ -207,6 +214,22 @@ fn handle_connection(
         }
         if first && line.trim_end() == STREAM_MARKER {
             return handle_stream_session(service, reader, stream, id);
+        }
+        if first {
+            if let Some(rest) = line.trim_end().strip_prefix(REPLAY_PREFIX) {
+                let mut out = stream;
+                match rest.strip_suffix("::").map(str::trim).map(str::parse::<u64>) {
+                    Some(Ok(rec_id)) => match service.replay(rec_id) {
+                        Ok(report) => {
+                            writeln!(out, "OK 1")?;
+                            writeln!(out, "{}", report.verdict_line())?;
+                        }
+                        Err(e) => writeln!(out, "ERR {e}")?,
+                    },
+                    _ => writeln!(out, "ERR bad replay frame: {}", line.trim_end())?,
+                }
+                return Ok(());
+            }
         }
         if first && line.trim_end() == DRAIN_MARKER {
             // admin frame: stop accepting; the serve loop notices the
@@ -458,6 +481,26 @@ pub fn metrics_remote(addr: std::net::SocketAddr) -> Result<String> {
         body.push_str(&line);
     }
     Ok(body)
+}
+
+/// Replay flight-recorder ring entry `id` on the server (a
+/// `::REPLAY <id>::` admin frame): returns the one-line verdict
+/// (`verdict=identical` or `verdict=DIVERGED` plus triage detail — see
+/// [`crate::obs::ReplayReport::verdict_line`]).
+pub fn replay_remote(addr: std::net::SocketAddr, id: u64) -> Result<String> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.write_all(format!("{REPLAY_PREFIX}{id}::\n").as_bytes())?;
+    let mut reader = BufReader::new(stream);
+    let mut header = String::new();
+    reader.read_line(&mut header)?;
+    anyhow::ensure!(
+        header.trim_end() == "OK 1",
+        "replay error: {}",
+        header.trim_end()
+    );
+    let mut verdict = String::new();
+    reader.read_line(&mut verdict)?;
+    Ok(verdict.trim_end().to_string())
 }
 
 /// Read one framed reply: `REV <n>` / `OK <n>` followed by n sentence
@@ -849,6 +892,46 @@ mod tests {
         let line = raw_request(server.addr, &format!("{DRAIN_MARKER}\n"));
         assert_eq!(line, "OK 0");
         assert!(server.drain_requested());
+        server.stop();
+    }
+
+    #[test]
+    fn tcp_replay_frame_round_trips_a_recorded_request() {
+        let mut settings = Settings::default();
+        settings.service.workers = 1;
+        settings.pipeline.solver = "tabu".into();
+        settings.pipeline.iterations = 2;
+        settings.pipeline.summary_len = 3;
+        settings.obs.record_enabled = true;
+        let svc = Arc::new(Service::start(&settings).unwrap());
+        let server = TcpServer::start(svc.clone(), 0).unwrap();
+
+        // replaying before anything was recorded names the empty ring
+        let err = replay_remote(server.addr, 1).unwrap_err();
+        assert!(err.to_string().contains("no record 1"), "{err}");
+
+        let set = benchmark_set("bench_10").unwrap();
+        summarize_remote(server.addr, &set.documents[0].text()).unwrap();
+        let verdict = replay_remote(server.addr, 1).unwrap();
+        assert!(verdict.contains("verdict=identical"), "{verdict}");
+        assert!(verdict.contains("id=1"), "{verdict}");
+
+        // malformed frames answer cleanly
+        let line = raw_request(server.addr, "::REPLAY soon::\n");
+        assert!(line.contains("bad replay frame"), "{line}");
+        server.stop();
+    }
+
+    #[test]
+    fn tcp_replay_frame_errors_when_recorder_disabled() {
+        let mut settings = Settings::default();
+        settings.service.workers = 1;
+        settings.pipeline.solver = "tabu".into();
+        settings.pipeline.iterations = 1;
+        let svc = Arc::new(Service::start(&settings).unwrap());
+        let server = TcpServer::start(svc.clone(), 0).unwrap();
+        let err = replay_remote(server.addr, 1).unwrap_err();
+        assert!(err.to_string().contains("disabled"), "{err}");
         server.stop();
     }
 

@@ -130,6 +130,25 @@ pub fn spawn_workers(
                             if let Some(r) = root.as_mut() {
                                 r.set("tier", tier.as_str());
                             }
+                            let recorder = obs.recorder();
+                            if recorder.enabled() {
+                                let mut rec = recorder.begin(
+                                    &doc.id,
+                                    &doc.sentences,
+                                    crate::workload::problem_seed(
+                                        base_cfg.seed,
+                                        workload,
+                                        &doc.id,
+                                    ),
+                                    workload,
+                                    effective_strategy(base_cfg.strategy).as_str(),
+                                    "pooled",
+                                    tier.as_str(),
+                                    deadline.map(|d| d.budget_ms()).unwrap_or(0),
+                                );
+                                rec.finish(&summary);
+                                recorder.record(rec);
+                            }
                             obs.finish_request(
                                 root,
                                 &doc.id,
@@ -148,8 +167,34 @@ pub fn spawn_workers(
                         // level, so deep documents stop mid-flight too
                         client.set_deadline(deadline);
                         let t0 = Instant::now();
-                        let (summary, mut root) =
-                            sched::summarize_with_pool_traced(doc, &cfg, &mut client, &obs)?;
+                        let recorder = obs.recorder();
+                        let (summary, mut root) = if recorder.enabled() {
+                            // recording path: identical execution plus the
+                            // per-node taps (enabled-off requests take the
+                            // branch below and allocate nothing extra)
+                            let mut rec = recorder.begin(
+                                &doc.id,
+                                &doc.sentences,
+                                seed,
+                                "es",
+                                cfg.strategy.as_str(),
+                                "pooled",
+                                tier.as_str(),
+                                deadline.map(|d| d.budget_ms()).unwrap_or(0),
+                            );
+                            let out = sched::summarize_with_pool_recorded(
+                                doc,
+                                &cfg,
+                                &mut client,
+                                &obs,
+                                &mut rec.nodes,
+                            )?;
+                            rec.finish(&out.0);
+                            recorder.record(rec);
+                            out
+                        } else {
+                            sched::summarize_with_pool_traced(doc, &cfg, &mut client, &obs)?
+                        };
                         if let Some(r) = root.as_mut() {
                             r.set("tier", tier.as_str());
                             if let Some(d) = deadline {
@@ -189,6 +234,9 @@ pub fn spawn_workers(
                 };
                 let obs = obs.clone();
                 let strategy = cfg.strategy;
+                // the seed the worker's pipeline ACTUALLY solves under
+                // (worker-salted) — what a replay must reproduce
+                let local_seed = cfg.seed;
                 let local_settings = settings.clone();
                 Box::new(
                     move |doc: &Document,
@@ -231,6 +279,25 @@ pub fn spawn_workers(
                             if let Some(r) = root.as_mut() {
                                 r.set("tier", tier.as_str());
                             }
+                            let recorder = obs.recorder();
+                            if recorder.enabled() {
+                                let mut rec = recorder.begin(
+                                    &doc.id,
+                                    &doc.sentences,
+                                    crate::workload::problem_seed(
+                                        local_settings.pipeline.seed,
+                                        workload,
+                                        &doc.id,
+                                    ),
+                                    workload,
+                                    effective_strategy(strategy).as_str(),
+                                    "local",
+                                    tier.as_str(),
+                                    deadline.map(|d| d.budget_ms()).unwrap_or(0),
+                                );
+                                rec.finish(&summary);
+                                recorder.record(rec);
+                            }
                             obs.finish_request(
                                 root,
                                 &doc.id,
@@ -254,6 +321,24 @@ pub fn spawn_workers(
                                     .with("selected", summary.selected.len())
                                     .with("solves", summary.total_solves),
                             );
+                        }
+                        let recorder = obs.recorder();
+                        if recorder.enabled() {
+                            // the monolithic pipeline exposes no per-node
+                            // taps: local-route records triage at summary
+                            // granularity (nodes stay empty)
+                            let mut rec = recorder.begin(
+                                &doc.id,
+                                &doc.sentences,
+                                local_seed,
+                                "es",
+                                strategy.as_str(),
+                                "local",
+                                tier.as_str(),
+                                deadline.map(|d| d.budget_ms()).unwrap_or(0),
+                            );
+                            rec.finish(&summary);
+                            recorder.record(rec);
                         }
                         obs.finish_request(
                             root,
@@ -287,6 +372,19 @@ pub fn spawn_workers(
         );
     }
     Ok(handles)
+}
+
+/// The strategy a non-ES request actually runs: `workload::lower`
+/// coerces `Streaming` to `Window` (the streaming path embeds text
+/// incrementally and cannot accept precomputed scores), so flight
+/// records must carry the effective value or replay would re-coerce
+/// a lie.
+fn effective_strategy(s: crate::decompose::Strategy) -> crate::decompose::Strategy {
+    if s == crate::decompose::Strategy::Streaming {
+        crate::decompose::Strategy::Window
+    } else {
+        s
+    }
 }
 
 /// Per-worker solve function: (document, queue wait, deadline, tier,

@@ -109,9 +109,13 @@ fn steady_state_refine_iterations_do_not_allocate() {
     // OUTSIDE the measured region (its Arcs allocate once), then the
     // disabled fast path is probed directly...
     let obs = cobi_es::obs::ObsShared::disabled();
+    // the ISSUE 10 flight recorder rides the same handle and the same
+    // contract: off by default, and consulting it costs nothing
+    assert!(!obs.recorder().enabled(), "recorder must default off");
     let (probe, _) = allocations_during(|| {
         for _ in 0..256 {
             assert!(obs.start_request("alloc-audit").is_none());
+            assert!(!obs.recorder().enabled());
         }
     });
     assert_eq!(probe, 0, "disabled start_request must not allocate");

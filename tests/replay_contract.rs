@@ -1,0 +1,232 @@
+//! Flight-recorder contract tests (ISSUE 10): record → replay is
+//! byte-identical on clean fleets regardless of pool shape, and a
+//! fault injected at record time is triaged to the exact divergent
+//! DAG node when the recording is replayed against a clean config.
+//!
+//! `serve_binary_replay_smoke` is env-gated (COBI_ES_REPLAY_SMOKE=1,
+//! set by CI): it drives the REAL `cobi-es` binary — `serve
+//! --record-out …`, a TCP summarize burst, a `::REPLAY 1::` admin
+//! frame, then `cobi-es replay <file>` over the flushed JSONL — and
+//! requires a zero-divergence exit. The ungated tests cover the same
+//! path in-process for plain `cargo test`.
+
+use cobi_es::config::Settings;
+use cobi_es::corpus::benchmark_set;
+use cobi_es::obs::replay::first_divergence;
+use cobi_es::obs::{replay_record, RequestRecord};
+use cobi_es::service::Service;
+
+/// Quiet-defaults recording settings: fast tabu solves, recorder on.
+fn recording_settings(devices: usize) -> Settings {
+    let mut s = Settings::default();
+    s.service.workers = 1;
+    s.sched.devices = devices;
+    s.pipeline.solver = "tabu".into();
+    s.pipeline.iterations = 2;
+    s.pipeline.summary_len = 3;
+    s.obs.record_enabled = true;
+    s
+}
+
+/// Serve the first `n` bench_10 documents through a recording service
+/// (submitted sequentially so ring ids are stable) and return the ring.
+fn record_bench10(settings: &Settings, n: usize) -> Vec<RequestRecord> {
+    let svc = Service::start(settings).unwrap();
+    let set = benchmark_set("bench_10").unwrap();
+    for doc in set.documents.iter().take(n) {
+        svc.submit(doc.clone()).unwrap().wait().unwrap();
+    }
+    let recs = svc.obs().recorder().snapshot();
+    svc.shutdown();
+    recs
+}
+
+#[test]
+fn bench10_records_replay_identical_across_pool_shapes() {
+    // the determinism contract, extended to provenance: the SAME ten
+    // documents recorded under a 1-device and a 4-device pool produce
+    // byte-identical JSONL, and every record replays 10/10 identical
+    let s1 = recording_settings(1);
+    let s4 = recording_settings(4);
+    let recs1 = record_bench10(&s1, 10);
+    let recs4 = record_bench10(&s4, 10);
+    assert_eq!(recs1.len(), 10);
+    assert_eq!(recs4.len(), 10);
+    for (a, b) in recs1.iter().zip(&recs4) {
+        assert_eq!(a.to_jsonl(), b.to_jsonl(), "pool shape leaked into {}", a.doc_id);
+    }
+    let mut identical = 0;
+    for rec in &recs1 {
+        assert!(!rec.nodes.is_empty(), "pooled ES records carry node taps");
+        let report = replay_record(rec, &s1).unwrap();
+        assert!(report.identical, "{}", report.verdict_line());
+        assert!(report.first_divergence.is_none());
+        assert!(report.config_diff.is_empty());
+        identical += 1;
+    }
+    assert_eq!(identical, 10, "replay-audit headline: 10/10 byte-identical");
+}
+
+#[test]
+fn recorded_fault_is_triaged_to_the_exact_divergent_node() {
+    // record one document on a fleet with stuck oscillators injected
+    // into the COBI device, then replay the recording against a CLEAN
+    // config: triage must name the first DAG node the fault flipped —
+    // computed independently here by diffing against a clean recording
+    // of the same document (which, by the determinism contract, is
+    // exactly what the replay re-executes)
+    let mut faulty = recording_settings(1);
+    faulty.pipeline.solver = "cobi".into();
+    faulty.resilience.fault.enabled = true;
+    faulty.resilience.fault.stuck_rate = 1.0;
+    let mut clean = recording_settings(1);
+    clean.pipeline.solver = "cobi".into();
+
+    let faulty_recs = record_bench10(&faulty, 1);
+    let clean_recs = record_bench10(&clean, 1);
+    let (faulty_rec, clean_rec) = (&faulty_recs[0], &clean_recs[0]);
+    assert_eq!(faulty_rec.doc_id, clean_rec.doc_id);
+    assert_eq!(faulty_rec.seed, clean_rec.seed, "seeding is fault-independent");
+    let expected = first_divergence(&faulty_rec.nodes, &clean_rec.nodes)
+        .expect("a fully stuck device must perturb some node");
+
+    let report = replay_record(faulty_rec, &clean).unwrap();
+    let d = report
+        .first_divergence
+        .as_ref()
+        .expect("triage must name a divergent node");
+    assert_eq!(d.index, expected.index, "{}", report.verdict_line());
+    assert_eq!((d.level, d.slot), (expected.level, expected.slot));
+    assert_eq!(d.node_seed, expected.node_seed);
+    assert!(d.recorded_energy.is_finite());
+    assert!(d.replayed_energy.is_finite());
+    let line = report.verdict_line();
+    assert!(
+        line.contains(&format!("first_node=({},{})", expected.level, expected.slot)),
+        "{line}"
+    );
+    // the config diff names the knob that separates the two fleets
+    assert!(
+        report.config_diff.iter().any(|c| c.key == "fault_enabled"),
+        "{line}"
+    );
+
+    // control: the same faulty recording replayed under the SAME faulty
+    // environment is identical again — divergence is environmental, not
+    // nondeterminism
+    let report = replay_record(faulty_rec, &faulty).unwrap();
+    assert!(report.identical, "{}", report.verdict_line());
+    assert!(report.first_divergence.is_none());
+}
+
+#[test]
+fn recorder_ring_is_bounded_and_counts_overwrites() {
+    let mut s = recording_settings(1);
+    s.obs.record_capacity = 3;
+    let recs = record_bench10(&s, 5);
+    assert_eq!(recs.len(), 3, "ring holds at most record_capacity entries");
+    let ids: Vec<u64> = recs.iter().map(|r| r.id).collect();
+    assert_eq!(ids, [3, 4, 5], "oldest records evicted first");
+}
+
+/// Kills the child even when an assertion panics mid-test.
+struct KillOnDrop(std::process::Child);
+
+impl Drop for KillOnDrop {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+#[test]
+fn serve_binary_replay_smoke() {
+    // env-gated (CI sets COBI_ES_REPLAY_SMOKE=1): the shipped binary's
+    // record → flush → replay loop, end to end
+    if std::env::var("COBI_ES_REPLAY_SMOKE").is_err() {
+        return;
+    }
+    use cobi_es::service::tcp::{replay_remote, summarize_remote};
+
+    let path = std::env::temp_dir().join(format!(
+        "cobi-es-replay-smoke-{}.jsonl",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&path);
+
+    let child = std::process::Command::new(env!("CARGO_BIN_EXE_cobi-es"))
+        .args([
+            "serve",
+            "--port",
+            "0",
+            "--record-out",
+            path.to_str().unwrap(),
+            "--solver",
+            "tabu",
+            "--iterations",
+            "2",
+            "--workers",
+            "1",
+        ])
+        .stdout(std::process::Stdio::piped())
+        .spawn()
+        .expect("spawning cobi-es serve");
+    let mut child = KillOnDrop(child);
+
+    let stdout = child.0.stdout.take().expect("piped stdout");
+    let mut reader = std::io::BufReader::new(stdout);
+    let addr: std::net::SocketAddr = loop {
+        use std::io::BufRead;
+        let mut line = String::new();
+        let n = reader.read_line(&mut line).expect("reading serve stdout");
+        assert!(n > 0, "serve exited before printing its listen address");
+        if let Some(rest) = line.strip_prefix("listening on ") {
+            break rest
+                .split_whitespace()
+                .next()
+                .expect("address after 'listening on'")
+                .parse()
+                .expect("parseable listen address");
+        }
+    };
+
+    let set = benchmark_set("bench_10").unwrap();
+    for doc in set.documents.iter().take(3) {
+        summarize_remote(addr, &doc.text()).unwrap();
+    }
+    // the live ring answers admin replays while the serve loop runs
+    let verdict = replay_remote(addr, 1).unwrap();
+    assert!(verdict.contains("verdict=identical"), "{verdict}");
+
+    // the serve loop flushes records every 500ms — wait for all three
+    let mut lines = 0;
+    for _ in 0..40 {
+        std::thread::sleep(std::time::Duration::from_millis(250));
+        if path.exists() {
+            lines = std::fs::read_to_string(&path)
+                .unwrap()
+                .lines()
+                .filter(|l| !l.trim().is_empty())
+                .count();
+            if lines >= 3 {
+                break;
+            }
+        }
+    }
+    assert_eq!(lines, 3, "records not flushed to {} within 10s", path.display());
+    drop(child);
+
+    // the replay subcommand exits 0 only when every replay is identical
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_cobi-es"))
+        .args(["replay", path.to_str().unwrap(), "--all"])
+        .output()
+        .expect("running cobi-es replay");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        out.status.success(),
+        "replay diverged:\n{stdout}\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(stdout.contains("replayed 3: 3 identical, 0 diverged"), "{stdout}");
+    std::fs::remove_file(&path).unwrap();
+}
